@@ -1,0 +1,33 @@
+//! Whole-network inference through the bulk-synchronous scheduler:
+//! AlexNet's convolutional stack (CPU scale) with the paper's routing —
+//! strided conv1 on the vendor path, deeper layers on fbfft — plus a
+//! side-by-side against the all-vendor configuration.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example cnn_inference
+//! ```
+
+use fbfft_repro::coordinator::{NetworkScheduler, Pass, Strategy};
+use fbfft_repro::reports::cnn::plans;
+use fbfft_repro::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::open("artifacts")?;
+    for (strategy, label) in [(Strategy::Fbfft, "fbfft (conv1 vendor)"),
+                              (Strategy::Vendor, "all-vendor")] {
+        let mut sched = NetworkScheduler::new(&rt, plans("alexnet",
+                                                         strategy));
+        sched.check_artifacts(&[Pass::Fprop])?;
+        sched.warm(&[Pass::Fprop])?; // compile outside the timed region
+        let t = sched.fprop()?;
+        println!("AlexNet fprop, {label}:");
+        for (layer, d) in &t.per_layer {
+            println!("  {:24} {:>8.3} ms", layer,
+                     d.as_secs_f64() * 1e3);
+        }
+        println!("  {:24} {:>8.3} ms\n", "TOTAL",
+                 t.total().as_secs_f64() * 1e3);
+    }
+    println!("cnn_inference OK");
+    Ok(())
+}

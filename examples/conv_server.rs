@@ -1,0 +1,73 @@
+//! Serving example: a convolution service behind the dynamic batcher.
+//!
+//! A Poisson request trace (mixed request sizes) is replayed against a
+//! `ConvService` that owns the PJRT runtime on a worker thread; the
+//! batcher flushes on capacity or deadline, amortizing each executable
+//! launch over several requests — the 'large batches' economics the
+//! paper's regime is about, applied at serving time.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example conv_server [requests]
+//! ```
+
+use std::time::{Duration, Instant};
+
+use fbfft_repro::conv::ConvProblem;
+use fbfft_repro::coordinator::batcher::BatcherConfig;
+use fbfft_repro::coordinator::service::{Completion, ConvService,
+                                        ServeRequest};
+use fbfft_repro::metrics::Histogram;
+use fbfft_repro::trace;
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300);
+    let p = ConvProblem::square(2, 4, 4, 16, 3);
+    let svc = ConvService::start(
+        "artifacts".into(),
+        "conv.quickstart.fbfft.fprop".into(),
+        p,
+        BatcherConfig { capacity: p.s, max_wait: Duration::from_millis(2) },
+    )?;
+    println!("replaying {n} requests at ~400 req/s...");
+    let reqs = trace::request_trace(n, 400.0, 0x5E);
+    let (tx, rx) = std::sync::mpsc::channel::<Completion>();
+    let t0 = Instant::now();
+    for r in &reqs {
+        std::thread::sleep(
+            Duration::from_secs_f64(r.arrival_s)
+                .saturating_sub(t0.elapsed()));
+        svc.submit(ServeRequest { id: r.id, images: r.images.min(p.s),
+                                  reply: tx.clone() });
+    }
+    drop(tx);
+    let mut hist = Histogram::new();
+    let mut batch_factor = 0usize;
+    let mut done = 0usize;
+    while done < reqs.len() {
+        let Ok(c) = rx.recv_timeout(Duration::from_secs(10)) else { break };
+        hist.record(c.latency.as_secs_f64());
+        batch_factor += c.batch_images;
+        done += 1;
+    }
+    let wall = t0.elapsed();
+    let report = svc.shutdown();
+    println!("completed {done}/{} requests ({} images) in {:.2}s",
+             reqs.len(), report.images, wall.as_secs_f64());
+    println!("launches: {} ({} full flushes, {} deadline flushes), \
+              mean batch factor {:.2}",
+             report.launches, report.flushes_full, report.flushes_timeout,
+             batch_factor as f64 / done.max(1) as f64);
+    println!("throughput: {:.0} images/s",
+             report.images as f64 / wall.as_secs_f64());
+    println!("latency ms: p50 {:.2}  p95 {:.2}  p99 {:.2}  max {:.2}",
+             hist.percentile(50.0) * 1e3, hist.percentile(95.0) * 1e3,
+             hist.percentile(99.0) * 1e3, hist.max() * 1e3);
+    println!("service busy {:.1}% of wall clock",
+             report.busy.as_secs_f64() / wall.as_secs_f64() * 100.0);
+    anyhow::ensure!(done == reqs.len(), "dropped requests");
+    println!("conv_server OK");
+    Ok(())
+}

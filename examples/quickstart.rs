@@ -1,0 +1,53 @@
+//! Quickstart: load one AOT-compiled fbfft convolution, run it through
+//! the PJRT runtime, and verify the numerics against the in-tree
+//! time-domain engine.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use fbfft_repro::conv::{direct, ConvProblem};
+use fbfft_repro::runtime::{HostTensor, Runtime};
+use fbfft_repro::util::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. open the artifacts directory (PJRT CPU client + manifest)
+    let rt = Runtime::open("artifacts")?;
+    println!("manifest: {} artifacts", rt.manifest().entries.len());
+
+    // 2. the quickstart problem: S=2, f=f'=4, 16x16 input, 3x3 kernel
+    let p = ConvProblem::square(2, 4, 4, 16, 3);
+    let mut rng = Rng::new(1);
+    let x = rng.normal_vec(p.input_len());
+    let w = rng.normal_vec(p.weight_len());
+
+    // 3. run the Pallas fbfft pipeline (FFT -> CGEMM -> IFFT, with the
+    //    paper's implicit padding and fused transposes) via PJRT
+    let t0 = std::time::Instant::now();
+    let (y, shape) = rt.execute_1f32(
+        "conv.quickstart.fbfft.fprop",
+        &[HostTensor::f32(x.clone(), &[p.s, p.f, p.h, p.w]),
+          HostTensor::f32(w.clone(), &[p.fo, p.f, p.kh, p.kw])])?;
+    println!("fbfft fprop: output {shape:?} in {:?} (incl. compile)",
+             t0.elapsed());
+
+    // 4. verify against the host time-domain oracle
+    let want = direct::fprop(&p, &x, &w);
+    let err = y.iter().zip(&want)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    println!("max |fbfft - direct| = {err:.2e}");
+    assert!(err < 1e-3, "numerics mismatch");
+
+    // 5. warm executions are what the serving path sees
+    let t1 = std::time::Instant::now();
+    for _ in 0..10 {
+        rt.execute_1f32(
+            "conv.quickstart.fbfft.fprop",
+            &[HostTensor::f32(x.clone(), &[p.s, p.f, p.h, p.w]),
+              HostTensor::f32(w.clone(), &[p.fo, p.f, p.kh, p.kw])])?;
+    }
+    println!("warm: {:.3} ms/exec", t1.elapsed().as_secs_f64() * 100.0);
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""Build-time Python for the fbfft reproduction (Layers 1+2).
+
+Never imported at runtime: `make artifacts` lowers everything under
+compile/ to HLO text in artifacts/, and the Rust coordinator is
+self-contained from there.
+"""

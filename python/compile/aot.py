@@ -1,0 +1,338 @@
+"""AOT lowering: every computation the Rust coordinator executes.
+
+Run once at build time (``make artifacts``)::
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Emits, per manifest entry, an HLO **text** module (NOT a serialized
+HloModuleProto: jax ≥ 0.5 emits 64-bit instruction ids that the crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids — see
+/opt/xla-example/README.md) plus ``manifest.json`` describing shapes,
+dtypes and workload metadata, and raw little-endian f32 ``.bin`` tensors
+for the e2e CNN's initial parameters.
+
+The artifact set covers every experiment in DESIGN.md §5:
+
+* ``conv.*``   — (spec × strategy × pass) modules for Tables 3/4/5, the
+  Figure-1–6 measured sweep subset and the §5.4 comparison grid, at the
+  documented CPU scale (specs.scale);
+* ``fft1d.*`` / ``fft2d.*`` — Figure-7/8 transform subjects;
+* ``train.*``  — the e2e CNN train step and its initial parameters.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, specs
+from .kernels import conv_fft
+from .specs import ConvSpec
+
+DTYPES = {jnp.float32.dtype: "f32", jnp.int32.dtype: "s32"}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (the interchange format).
+
+    ``print_large_constants=True`` is load-bearing: the default printer
+    elides big literals as ``constant({...})``, which xla_extension
+    0.5.1's text parser silently turns into *zeros* — the DFT basis
+    matrices the fbfft kernels close over would vanish.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    opts = xc._xla.HloPrintOptions.short_parsable()
+    opts.print_large_constants = True
+    return comp.as_hlo_module().to_string(opts)
+
+
+@dataclasses.dataclass
+class Entry:
+    """One manifest entry; mirrors rust/src/runtime/manifest.rs."""
+
+    name: str
+    kind: str                      # conv | fft1d | fft2d | train_step | tensor
+    hlo: str | None
+    inputs: list[dict]
+    outputs: list[dict]
+    meta: dict
+
+
+def _sds(*shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _io(structs) -> list[dict]:
+    out = []
+    for s in structs:
+        out.append({"shape": list(s.shape), "dtype": DTYPES[s.dtype]})
+    return out
+
+
+class Builder:
+    """Accumulates lowered artifacts + manifest entries under --out."""
+
+    def __init__(self, out_dir: str, only: str | None = None):
+        self.out = out_dir
+        self.only = only
+        self.entries: list[Entry] = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def want(self, name: str) -> bool:
+        return self.only is None or self.only in name
+
+    def lower(self, name: str, kind: str, fn: Callable,
+              args: Sequence[jax.ShapeDtypeStruct], meta: dict):
+        if not self.want(name):
+            return
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out, fname), "w") as f:
+            f.write(text)
+        out_shapes = lowered.out_info
+        flat, _ = jax.tree.flatten(out_shapes)
+        self.entries.append(Entry(
+            name=name, kind=kind, hlo=fname,
+            inputs=_io(args),
+            outputs=[{"shape": [int(d) for d in o.shape],
+                      "dtype": DTYPES[jnp.dtype(o.dtype)]} for o in flat],
+            meta=meta))
+        print(f"  {fname}: {len(text)} chars, {len(flat)} outputs")
+
+    def tensor(self, name: str, arr: np.ndarray, meta: dict):
+        """Raw little-endian tensor artifact (initial parameters etc.)."""
+        if not self.want(name):
+            return
+        arr = np.ascontiguousarray(arr, dtype="<f4")
+        fname = f"{name}.bin"
+        arr.tofile(os.path.join(self.out, fname))
+        self.entries.append(Entry(
+            name=name, kind="tensor", hlo=fname,
+            inputs=[], outputs=[{"shape": list(arr.shape), "dtype": "f32"}],
+            meta=meta))
+        print(f"  {fname}: {arr.size * 4} bytes")
+
+    def finish(self):
+        man = {
+            "version": 1,
+            "entries": [dataclasses.asdict(e) for e in self.entries],
+        }
+        with open(os.path.join(self.out, "manifest.json"), "w") as f:
+            json.dump(man, f, indent=1)
+        print(f"manifest: {len(self.entries)} entries")
+
+
+# ---------------------------------------------------------------------------
+# Convolution artifacts
+# ---------------------------------------------------------------------------
+
+PASSES = ("fprop", "bprop", "accgrad")
+
+
+def conv_entry(b: Builder, spec: ConvSpec, strategy: str, pas: str,
+               origin: str, paper_spec: ConvSpec | None = None):
+    """Lower one (spec, strategy, pass) conv module."""
+    name = f"conv.{spec.name}.{strategy}.{pas}".replace("/", "_")
+    meta = {
+        "origin": origin, "strategy": strategy, "pass": pas,
+        "spec": spec.to_json(),
+        "paper_spec": (paper_spec or spec).to_json(),
+        "n_fft": (None if strategy in ("vendor", "direct", "im2col")
+                  else conv_fft.min_fft_size(spec.h, spec.w)),
+        "reductions": spec.reductions,
+    }
+    x = _sds(spec.s, spec.f, spec.h, spec.w)
+    wei = _sds(spec.fo, spec.f, spec.kh, spec.kw)
+    go = _sds(spec.s, spec.fo, spec.yh, spec.yw)
+    if pas == "fprop":
+        b.lower(name, "conv",
+                lambda xx, ww: model.fprop(spec, strategy, xx, ww),
+                (x, wei), meta)
+    elif pas == "bprop":
+        b.lower(name, "conv",
+                lambda gg, ww: model.bprop(spec, strategy, gg, ww),
+                (go, wei), meta)
+    else:
+        b.lower(name, "conv",
+                lambda gg, xx: model.accgrad(spec, strategy, gg, xx),
+                (go, x), meta)
+
+
+def build_table4(b: Builder):
+    """Table 4/5: L1–L5 at documented scale × 3 strategies × 3 passes."""
+    print("== table4 ==")
+    for paper in specs.TABLE4_LAYERS:
+        sp = specs.scale(paper, planes=8, batch=8)
+        for strat in ("vendor", "vendor_fft", "fbfft"):
+            for pas in PASSES:
+                conv_entry(b, sp, strat, pas, "table4", paper)
+
+
+def build_table3(b: Builder):
+    """Table 3: AlexNet + OverFeat-fast layers at scale. Three kernels as
+    in the paper: vendor (cuDNN analogue), fbfft, direct (ccn2 analogue —
+    cuda-convnet2's direct time-domain approach). Strided conv1 is
+    vendor-only, as in the paper's runs."""
+    print("== table3 ==")
+    for net in (specs.alexnet_layers(), specs.overfeat_fast_layers()):
+        for paper in net:
+            sp = specs.scale(paper, planes=8, batch=4)
+            strats = (("vendor",) if sp.stride != 1
+                      else ("vendor", "fbfft", "direct"))
+            for strat in strats:
+                for pas in PASSES:
+                    conv_entry(b, sp, strat, pas, "table3", paper)
+
+
+def build_sweep(b: Builder):
+    """Figures 1–6 measured subset: k × y grid at fixed S=f=f'=16; the
+    full 8,232-point plane is filled by the Rust cost model anchored on
+    these measurements (DESIGN.md §3)."""
+    print("== sweep ==")
+    for k in (3, 5, 9, 13):
+        for y in (4, 8, 16, 32):
+            n = y + k - 1
+            paper = ConvSpec(f"swp.k{k}.y{y}", 16, 16, 16, n, n, k, k)
+            for strat in ("vendor", "fbfft"):
+                conv_entry(b, paper, strat, "fprop", "sweep")
+
+
+def build_sec54(b: Builder):
+    """§5.4: fbfft-conv vs vendor-fft-conv, 3×3 kernels. All three passes
+    for the small sizes, fprop for the large ones."""
+    print("== sec54 ==")
+    for x in (13, 16, 27, 32, 57, 64):
+        paper = ConvSpec(f"s54.x{x}", 16, 16, 16, x, x, 3, 3)
+        passes = PASSES if x <= 32 else ("fprop",)
+        for strat in ("vendor_fft", "fbfft"):
+            for pas in passes:
+                conv_entry(b, paper, strat, pas, "sec54")
+
+
+def build_quickstart(b: Builder):
+    print("== quickstart ==")
+    sp = ConvSpec("quickstart", 2, 4, 4, 16, 16, 3, 3)
+    for strat in ("vendor", "fbfft"):
+        conv_entry(b, sp, strat, "fprop", "quickstart")
+
+
+def build_tiling(b: Builder):
+    """§6: tiled vs untiled fbfft conv on a large-input / small-kernel
+    layer (the regime the decomposition targets)."""
+    print("== tiling ==")
+    paper = ConvSpec("tile.x57", 8, 16, 16, 57, 57, 3, 3)
+    conv_entry(b, paper, "fbfft", "fprop", "tiling")
+    name = "conv.tile.x57.fbfft_tiled.fprop"
+    x = _sds(paper.s, paper.f, paper.h, paper.w)
+    wei = _sds(paper.fo, paper.f, paper.kh, paper.kw)
+    for d in (4, 8, 16):
+        b.lower(f"{name}.d{d}", "conv",
+                lambda xx, ww, dd=d: model.fprop(paper, "fbfft_tiled",
+                                                 xx, ww, tile=dd),
+                (x, wei),
+                {"origin": "tiling", "strategy": "fbfft_tiled",
+                 "pass": "fprop", "tile": d, "spec": paper.to_json(),
+                 "paper_spec": paper.to_json(), "n_fft": None,
+                 "reductions": paper.reductions})
+
+
+# ---------------------------------------------------------------------------
+# Transform artifacts (Figures 7–8)
+# ---------------------------------------------------------------------------
+
+
+def build_fft(b: Builder):
+    print("== fft ==")
+    for n in (8, 32, 64, 128, 256):
+        batch = 4096
+        x = _sds(batch, n)
+        for which, fn in (("fbfft", model.fft1d_fbfft),
+                          ("vendor", model.fft1d_vendor)):
+            b.lower(f"fft1d.n{n}.b{batch}.{which}", "fft1d",
+                    lambda xx, nn=n, f=fn: f(xx, nn), (x,),
+                    {"n": n, "batch": batch, "which": which, "dim": 1})
+    for n in (8, 16, 32, 64):
+        batch = 256
+        x = _sds(batch, n, n)
+        for which, fn in (("fbfft", model.fft2d_fbfft),
+                          ("vendor", model.fft2d_vendor)):
+            b.lower(f"fft2d.n{n}.b{batch}.{which}", "fft2d",
+                    lambda xx, nn=n, f=fn: f(xx, nn), (x,),
+                    {"n": n, "batch": batch, "which": which, "dim": 2})
+
+
+# ---------------------------------------------------------------------------
+# Train-step artifacts (e2e example)
+# ---------------------------------------------------------------------------
+
+PARAM_ORDER = ("conv1", "conv2", "dense_w", "dense_b")
+
+
+def build_train(b: Builder):
+    print("== train ==")
+    cfg = model.TrainConfig()
+    params = model.cnn_init(cfg, jax.random.PRNGKey(0xFB))
+
+    def step_flat(c1, c2, dw, db, x, y):
+        p = {"conv1": c1, "conv2": c2, "dense_w": dw, "dense_b": db}
+        new, loss = model.train_step(cfg, p, x, y)
+        return tuple(new[k] for k in PARAM_ORDER) + (loss,)
+
+    args = tuple(_sds(*params[k].shape) for k in PARAM_ORDER) + (
+        _sds(cfg.s, cfg.c, cfg.hw, cfg.hw),
+        _sds(cfg.s, dtype=jnp.int32),
+    )
+    b.lower("train.step", "train_step", step_flat, args,
+            {"config": cfg.to_json(), "param_order": list(PARAM_ORDER)})
+
+    def logits_flat(c1, c2, dw, db, x):
+        p = {"conv1": c1, "conv2": c2, "dense_w": dw, "dense_b": db}
+        return (model.cnn_apply(cfg, p, x),)
+
+    b.lower("train.logits", "train_step", logits_flat, args[:-1],
+            {"config": cfg.to_json(), "param_order": list(PARAM_ORDER)})
+
+    for k in PARAM_ORDER:
+        b.tensor(f"train.init.{k}", np.asarray(params[k]),
+                 {"param": k, "config": cfg.to_json()})
+
+
+BUILDERS = {
+    "quickstart": build_quickstart,
+    "table4": build_table4,
+    "table3": build_table3,
+    "sweep": build_sweep,
+    "sec54": build_sec54,
+    "tiling": build_tiling,
+    "fft": build_fft,
+    "train": build_train,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on artifact names")
+    ap.add_argument("--groups", default=",".join(BUILDERS),
+                    help="comma list of artifact groups")
+    ns = ap.parse_args()
+    b = Builder(ns.out, ns.only)
+    for g in ns.groups.split(","):
+        BUILDERS[g.strip()](b)
+    b.finish()
+
+
+if __name__ == "__main__":
+    main()

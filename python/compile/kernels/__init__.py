@@ -1,0 +1,13 @@
+"""Layer-1 Pallas kernels for the fbfft reproduction.
+
+Modules:
+  dft         — DFT basis construction (shared constants)
+  fbfft       — forward batched 1-D/2-D R2C transforms
+  fbifft      — inverse C2R transforms with fused clipping
+  pointwise   — per-frequency-bin CGEMM stage (all three passes)
+  conv_fft    — the composed frequency-domain convolution pipeline
+  conv_direct — time-domain direct convolution kernel
+  conv_im2col — matrix-unrolling convolution kernel (cuDNN-style)
+  tiling      — §6 tiled decomposition of large inputs
+  ref         — pure-jnp oracles (also the two 'vendor' strategies)
+"""

@@ -1,0 +1,69 @@
+"""Time-domain direct convolution as a Pallas kernel (Layer 1).
+
+The straightforward O(S·f·f'·k²·y²) computation the paper's Figures 1–6
+use as the mental baseline: for small kernels and small problem sizes the
+time domain wins, and the crossover against the frequency-domain pipeline
+is exactly what the sweep benches chart. Built from scratch per the
+reproduction rule — the baseline is part of the system.
+
+Schedule: one grid step per minibatch sample; the sample's full input
+block ``(f, h, w)`` and the whole weight tensor are VMEM-resident, and the
+k·k taps are unrolled statically — each tap is a rank-1 update
+``out[j,·,·] += w[j,i,u,v] · x[i,·+u,·+v]`` expressed as an einsum over
+planes so the tap loop carries MXU contractions, not scalar code.
+
+``bprop``/``accGrad`` for the direct strategy are algebraic reuses of this
+same kernel (transposed-conv and batch-as-reduction identities); see
+``compile.model``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["conv_direct_fprop"]
+
+
+def _direct_kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int):
+    """Valid cross-correlation of one sample, taps statically unrolled."""
+    x = x_ref[...]                     # (1, f, h, w)
+    wei = w_ref[...]                   # (f', f, kh, kw)
+    h, w = x.shape[2], x.shape[3]
+    yh, yw = h - kh + 1, w - kw + 1
+    acc = jnp.zeros((1, wei.shape[0], yh, yw), dtype=jnp.float32)
+    for u in range(kh):
+        for v in range(kw):
+            # window of every input plane under tap (u, v)
+            win = x[:, :, u:u + yh, v:v + yw]          # (1, f, yh, yw)
+            tap = wei[:, :, u, v]                      # (f', f)
+            acc = acc + jnp.einsum("bfhw,jf->bjhw", win, tap)
+    o_ref[...] = acc
+
+
+@jax.jit
+def conv_direct_fprop(x: jax.Array, wei: jax.Array) -> jax.Array:
+    """Direct valid cross-correlation ``y[s,j] = Σ_i x[s,i] ⋆ w[j,i]``.
+
+    ``x``: ``(S, f, h, w)``; ``wei``: ``(f', f, kh, kw)`` →
+    ``(S, f', h-kh+1, w-kw+1)``. Grid over S.
+    """
+    s, f, h, w = x.shape
+    fo, f2, kh, kw = wei.shape
+    assert f == f2, f"plane mismatch: {f} vs {f2}"
+    yh, yw = h - kh + 1, w - kw + 1
+    kern = functools.partial(_direct_kernel, kh=kh, kw=kw)
+    return pl.pallas_call(
+        kern,
+        grid=(s,),
+        in_specs=[
+            pl.BlockSpec((1, f, h, w), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((fo, f, kh, kw), lambda i: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, fo, yh, yw), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, fo, yh, yw), jnp.float32),
+        interpret=True,
+    )(x, wei)

@@ -1,0 +1,113 @@
+"""fbfft frequency-domain convolution — the paper's full pipeline (L1+L2).
+
+Composes the three Pallas stages exactly as the paper's Table 1 does,
+minus the two transpose passes that fbfft's fused layouts eliminate:
+
+    FFT2D (fused transpose) → per-bin CGEMM → IFFT2D (fused clip)
+
+All three passes of convolutional-layer training are provided (paper §2):
+``fprop`` (valid cross-correlation), ``bprop`` (full convolution of the
+output gradient), ``accgrad`` (kernel-gradient correlation with the
+minibatch as the reduction dimension).
+
+The Fourier basis size ``n_fft`` must satisfy ``n_fft >= h`` (the largest
+operand — input and bprop output are both h×w; fbfft interpolates to the
+next power of two, paper §5.4/§6). Staged variants return per-stage
+results so the Table-5 breakdown bench can time each step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import dft
+from .fbfft import fbfft2d
+from .fbifft import fbifft2d
+from . import pointwise
+
+__all__ = [
+    "conv_fprop", "conv_bprop", "conv_accgrad",
+    "fft_stage", "ifft_stage", "min_fft_size",
+]
+
+
+def min_fft_size(h: int, w: int) -> int:
+    """Smallest fbfft-legal (power-of-two, square) basis covering an
+    h×w signal: circular convolution at this size equals the linear one on
+    every index the pipeline ever clips out."""
+    return dft.next_pow2(max(h, w))
+
+
+def fft_stage(x: jax.Array, n_fft: int):
+    """Forward transform of a 4-D BDHW tensor ``(rows, cols, h, w)`` into
+    frequency-major planes ``(nf, n, rows, cols)``.
+
+    This is one 'FFT2D' box of Table 1; the fused transpose inside
+    ``fbfft2d`` makes its output directly consumable by the CGEMM stage.
+    """
+    r, c, h, w = x.shape
+    re, im = fbfft2d(x.reshape(r * c, h, w), n_fft)
+    nf = n_fft // 2 + 1
+    return (re.reshape(nf, n_fft, r, c), im.reshape(nf, n_fft, r, c))
+
+
+def ifft_stage(planes, n_fft: int, clip: tuple[int, int]):
+    """Inverse transform of frequency planes ``(nf, n, rows, cols)`` back
+    to a clipped BDHW tensor ``(rows, cols, clip_h, clip_w)`` — the
+    'IFFT2D' box of Table 1 with the final clipping fused in."""
+    re, im = planes
+    nf, n, r, c = re.shape
+    out = fbifft2d(re.reshape(nf, n, r * c), im.reshape(nf, n, r * c),
+                   n_fft, clip)
+    return out.reshape(r, c, clip[0], clip[1])
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def conv_fprop(x: jax.Array, wei: jax.Array, n_fft: int) -> jax.Array:
+    """Forward pass: ``y[s,j] = Σ_i x[s,i] ⋆ w[j,i]`` (valid correlation).
+
+    ``x``: ``(S, f, h, w)``; ``wei``: ``(f', f, kh, kw)``. Returns
+    ``(S, f', h-kh+1, w-kw+1)``. ``n_fft >= max(h, w)``, power of two.
+    """
+    s, f, h, w = x.shape
+    fo, f2, kh, kw = wei.shape
+    assert f == f2, f"plane mismatch: input f={f}, weight f={f2}"
+    xf = fft_stage(x, n_fft)
+    wf = fft_stage(wei, n_fft)
+    of = pointwise.cgemm_fprop(xf, wf)
+    return ifft_stage(of, n_fft, (h - kh + 1, w - kw + 1))
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3, 4))
+def conv_bprop(go: jax.Array, wei: jax.Array, n_fft: int,
+               h: int, w: int) -> jax.Array:
+    """Backward-by-data: ``gx[s,i] = Σ_j go[s,j] * w[j,i]`` (full conv).
+
+    ``go``: ``(S, f', y_h, y_w)``; ``wei``: ``(f', f, kh, kw)``. Returns
+    ``(S, f, h, w)`` where ``h = y_h + kh - 1``. Circular wrap-around is
+    harmless because ``n_fft >= h`` and we clip to the leading h×w window.
+    """
+    gof = fft_stage(go, n_fft)
+    wf = fft_stage(wei, n_fft)
+    gxf = pointwise.cgemm_bprop(gof, wf)
+    return ifft_stage(gxf, n_fft, (h, w))
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3, 4))
+def conv_accgrad(go: jax.Array, x: jax.Array, n_fft: int,
+                 kh: int, kw: int) -> jax.Array:
+    """Weight gradient: ``gw[j,i] = Σ_s go[s,j] ⋆ x[s,i]`` clipped to the
+    kernel window.
+
+    ``go``: ``(S, f', y_h, y_w)``; ``x``: ``(S, f, h, w)``. Returns
+    ``(f', f, kh, kw)``. A large 'kernel' (the h×w input) is essentially
+    free in the Fourier domain — the property behind the paper's
+    observation that all three passes cost roughly the same (§4.1).
+    """
+    gof = fft_stage(go, n_fft)
+    xf = fft_stage(x, n_fft)
+    gwf = pointwise.cgemm_accgrad(gof, xf)
+    return ifft_stage(gwf, n_fft, (kh, kw))

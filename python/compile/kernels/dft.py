@@ -1,0 +1,211 @@
+"""DFT basis construction shared by the fbfft Pallas kernels.
+
+The paper's fbfft computes warp-level butterflies with register shuffles;
+the TPU adaptation (DESIGN.md §2) replaces the shuffle network with dense
+DFT-matrix contractions on the MXU. All complex arithmetic is carried as
+split (real, imag) float32 planes so every contraction is a real matmul,
+which is what the systolic array natively executes.
+
+Implicit zero-copy padding (paper §5.1 "clipping") falls out of the matrix
+formulation: to transform an input of logical length ``n_in`` on a Fourier
+basis of size ``n_fft`` we simply *slice the DFT matrix to its first
+``n_in`` rows* — the remaining rows would only ever multiply zeros, so the
+padding is never materialized and costs zero FLOPs and zero bytes.
+
+All matrices are built eagerly with numpy at trace time and closed over by
+the kernels; XLA constant-folds them into the lowered module.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+__all__ = [
+    "rfft_basis",
+    "cfft_basis",
+    "irfft_basis_w",
+    "irfft_basis_h",
+    "twiddle",
+    "hermitian_weights",
+    "digit_reverse_perm",
+    "factor_fourstep",
+    "next_pow2",
+]
+
+
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (fbfft supports power-of-two sizes only,
+    paper §6: 'fbfft only supports square convolutions whose size is a
+    power of 2')."""
+    if n < 1:
+        raise ValueError(f"next_pow2 requires n >= 1, got {n}")
+    return 1 << (n - 1).bit_length()
+
+
+@functools.lru_cache(maxsize=None)
+def rfft_basis(n_in: int, n_fft: int) -> tuple[np.ndarray, np.ndarray]:
+    """Real-to-complex forward DFT basis, implicitly zero-padded.
+
+    Returns ``(C, S)`` with shape ``(n_in, n_fft // 2 + 1)`` such that for a
+    real row-vector ``x`` of length ``n_in``::
+
+        X_re = x @ C            X_im = x @ S
+
+    equals ``rfft(pad(x, n_fft))``. Hermitian symmetry means only
+    ``n_fft//2 + 1`` output bins are computed — the paper's 'half the
+    computation' optimization (§5.3), realized here as matrix width.
+    """
+    if n_in > n_fft:
+        raise ValueError(f"n_in={n_in} exceeds basis size n_fft={n_fft}")
+    nf = n_fft // 2 + 1
+    j = np.arange(n_in)[:, None]
+    k = np.arange(nf)[None, :]
+    ang = -2.0 * np.pi * j * k / n_fft
+    return (
+        np.cos(ang).astype(np.float32),
+        np.sin(ang).astype(np.float32),
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def cfft_basis(n_in: int, n_fft: int) -> tuple[np.ndarray, np.ndarray]:
+    """Complex-to-complex forward DFT basis ``(C, S)``, shape
+    ``(n_in, n_fft)``, implicitly zero-padded like :func:`rfft_basis`.
+
+    For complex input ``x = xr + i·xi`` (row vector)::
+
+        X_re = xr @ C - xi @ S        X_im = xr @ S + xi @ C
+    """
+    if n_in > n_fft:
+        raise ValueError(f"n_in={n_in} exceeds basis size n_fft={n_fft}")
+    j = np.arange(n_in)[:, None]
+    k = np.arange(n_fft)[None, :]
+    ang = -2.0 * np.pi * j * k / n_fft
+    return (
+        np.cos(ang).astype(np.float32),
+        np.sin(ang).astype(np.float32),
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def hermitian_weights(n_fft: int) -> np.ndarray:
+    """Per-bin multiplicity for reconstructing a real signal from its
+    half-spectrum: 1.0 for the self-conjugate DC and Nyquist bins, 2.0 for
+    every bin whose mirror image is folded away."""
+    nf = n_fft // 2 + 1
+    w = np.full(nf, 2.0, dtype=np.float32)
+    w[0] = 1.0
+    if n_fft % 2 == 0:
+        w[-1] = 1.0
+    return w
+
+
+@functools.lru_cache(maxsize=None)
+def irfft_basis_w(n_fft: int) -> tuple[np.ndarray, np.ndarray]:
+    """Inverse basis along the halved (width) axis.
+
+    Returns ``(EC, ES)`` of shape ``(n_fft//2 + 1, n_fft)`` embedding the
+    Hermitian fold weights, such that for a half-spectrum row ``Fr + i·Fi``
+    the *complex* partial inverse along this axis is::
+
+        G_re = Fr @ EC - Fi @ ES      G_im = Fr @ ES + Fi @ EC
+
+    (exponent sign +, weights folded in; the final 1/n² scale lives in
+    :func:`irfft_basis_h`).
+    """
+    nf = n_fft // 2 + 1
+    k = np.arange(nf)[:, None]
+    t = np.arange(n_fft)[None, :]
+    ang = 2.0 * np.pi * k * t / n_fft
+    m = hermitian_weights(n_fft)[:, None]
+    return (
+        (m * np.cos(ang)).astype(np.float32),
+        (m * np.sin(ang)).astype(np.float32),
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def irfft_basis_h(n_fft: int) -> tuple[np.ndarray, np.ndarray]:
+    """Inverse basis along the full (height) axis, carrying the 1/n² scale
+    of the 2-D inverse transform. Shape ``(n_fft, n_fft)``.
+
+    Only the real part of the final inverse is ever needed (the output of a
+    real convolution is real), so consumers compute just
+    ``X_re = G_re @ HC - G_im @ HS`` — the imaginary half of the last stage
+    is elided entirely, mirroring the paper's Hermitian-symmetry saving.
+    """
+    k = np.arange(n_fft)[:, None]
+    t = np.arange(n_fft)[None, :]
+    ang = 2.0 * np.pi * k * t / n_fft
+    scale = 1.0 / (n_fft * n_fft)
+    return (
+        (scale * np.cos(ang)).astype(np.float32),
+        (scale * np.sin(ang)).astype(np.float32),
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def irfft_basis_1d(n_fft: int) -> tuple[np.ndarray, np.ndarray]:
+    """1-D C2R inverse basis ``(EC, ES)`` of shape ``(n_fft//2+1, n_fft)``
+    with fold weights and the 1/n scale, producing the real part only::
+
+        x = F_re @ EC - F_im @ ES
+    """
+    nf = n_fft // 2 + 1
+    k = np.arange(nf)[:, None]
+    t = np.arange(n_fft)[None, :]
+    ang = 2.0 * np.pi * k * t / n_fft
+    m = hermitian_weights(n_fft)[:, None] / n_fft
+    return (
+        (m * np.cos(ang)).astype(np.float32),
+        (m * np.sin(ang)).astype(np.float32),
+    )
+
+
+def factor_fourstep(n: int) -> tuple[int, int]:
+    """Pick the balanced factorization n = n1·n2 used by the four-step
+    decomposition (n1 is the column-DFT size, n2 the row-DFT size); both
+    stay <= 32 for every supported n <= 1024, matching the paper's use of a
+    32-wide building block ('With size 32 as our building block', §5.3)."""
+    if n & (n - 1) != 0 or n < 4:
+        raise ValueError(f"four-step factorization requires a power of two >= 4, got {n}")
+    lg = n.bit_length() - 1
+    l1 = lg // 2
+    return 1 << l1, 1 << (lg - l1)
+
+
+@functools.lru_cache(maxsize=None)
+def twiddle(n1: int, n2: int) -> tuple[np.ndarray, np.ndarray]:
+    """Four-step twiddle factors ``W_n^{k1·j2}``, shape ``(n1, n2)``,
+    split (cos, sin) with the forward (negative) exponent sign.
+
+    The paper distributes these across warp registers and re-balances them
+    with register-to-register copies (§5.2); here they are a constant plane
+    multiplied on the VPU between the two MXU stages.
+    """
+    n = n1 * n2
+    k1 = np.arange(n1)[:, None]
+    j2 = np.arange(n2)[None, :]
+    ang = -2.0 * np.pi * k1 * j2 / n
+    return np.cos(ang).astype(np.float32), np.sin(ang).astype(np.float32)
+
+
+@functools.lru_cache(maxsize=None)
+def digit_reverse_perm(n1: int, n2: int) -> np.ndarray:
+    """Output permutation of the four-step transform.
+
+    The two-stage decomposition produces coefficients indexed ``[k1, k2]``
+    whereas the natural order is ``k = k2·n1 + k1``; flattening ``[k1, k2]``
+    row-major yields index ``k1·n2 + k2``, so the gather below restores
+    natural order. This is the generalization of the radix-2 bit reversal
+    the paper implements in SMEM (§5.3) — folded here into a static gather
+    that the output BlockSpec absorbs.
+    """
+    n = n1 * n2
+    perm = np.empty(n, dtype=np.int32)
+    for k2 in range(n2):
+        for k1 in range(n1):
+            perm[k2 * n1 + k1] = k1 * n2 + k2
+    return perm

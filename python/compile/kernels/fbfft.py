@@ -1,0 +1,274 @@
+"""fbfft forward transforms as Pallas kernels (Layer 1).
+
+Batched 1-D and 2-D real-to-complex FFTs specialized for the deep-learning
+regime the paper targets: transform sizes 8–256, batch counts in the
+thousands-to-millions. Three of the paper's key ideas survive the GPU→TPU
+translation intact (DESIGN.md §2):
+
+* **implicit zero-copy padding** — inputs shorter than the Fourier basis
+  are never padded in memory; the DFT matrices are sliced to the logical
+  input length instead (see ``kernels.dft``);
+* **fused transpose** — the 2-D kernel writes its output directly in the
+  frequency-transposed ``(nf, n, batch)`` layout the downstream CGEMM
+  stage consumes, eliding the separate transposition pass the cuFFT
+  pipeline pays for (paper Table 5 'TRANS.' columns);
+* **Hermitian symmetry** — only ``n//2 + 1`` bins are produced along the
+  halved axis.
+
+Each transform batch-panel is resident in a single VMEM tile for its whole
+lifetime: load once from HBM, two MXU contractions (+ optional twiddle
+stage), store once. ``interpret=True`` everywhere — the CPU PJRT client
+cannot execute Mosaic custom calls; real-TPU performance is estimated
+analytically (EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import dft
+
+__all__ = ["fbfft1d", "fbfft1d_fourstep", "fbfft2d", "DEFAULT_PANEL"]
+
+# Rows of a batch panel processed by one grid step. 128 matches the MXU
+# lane width; smaller batches are padded up by the wrappers below.
+DEFAULT_PANEL = 128
+
+
+def _eff_panel(b: int, panel: int) -> int:
+    """Shrink the panel for small batches so padding waste stays bounded
+    (a batch of 4 should not be padded to 128 rows)."""
+    return min(panel, dft.next_pow2(max(8, b)))
+
+
+def _pad_batch(x: jax.Array, panel: int) -> tuple[jax.Array, int]:
+    """Pad the leading (batch) dim up to a multiple of ``panel``."""
+    b = x.shape[0]
+    rem = (-b) % panel
+    if rem:
+        x = jnp.pad(x, [(0, rem)] + [(0, 0)] * (x.ndim - 1))
+    return x, b
+
+
+# ---------------------------------------------------------------------------
+# 1-D R2C, dense MXU-DFT path (the default for n <= 256)
+# ---------------------------------------------------------------------------
+
+
+def _fbfft1d_kernel(x_ref, c_ref, s_ref, re_ref, im_ref):
+    """One batch panel: (panel, n_in) @ (n_in, nf) on the MXU, twice."""
+    x = x_ref[...]
+    re_ref[...] = jnp.dot(x, c_ref[...], preferred_element_type=jnp.float32)
+    im_ref[...] = jnp.dot(x, s_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def fbfft1d(x: jax.Array, n_fft: int, panel: int = DEFAULT_PANEL):
+    """Batched 1-D R2C FFT of a real array ``x`` of shape ``(B, n_in)`` on a
+    Fourier basis of size ``n_fft >= n_in`` (implicit zero padding).
+
+    Returns ``(re, im)``, each ``(B, n_fft//2 + 1)`` float32 — equal to
+    ``jnp.fft.rfft(x, n_fft)`` split into planes.
+    """
+    b_logical, n_in = x.shape
+    if n_in > n_fft:
+        raise ValueError(f"input length {n_in} exceeds fft size {n_fft}")
+    nf = n_fft // 2 + 1
+    c, s = dft.rfft_basis(n_in, n_fft)
+    panel = _eff_panel(b_logical, panel)
+    x, _ = _pad_batch(x, panel)
+    b = x.shape[0]
+    grid = (b // panel,)
+    re, im = pl.pallas_call(
+        _fbfft1d_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((panel, n_in), lambda i: (i, 0)),
+            pl.BlockSpec((n_in, nf), lambda i: (0, 0)),
+            pl.BlockSpec((n_in, nf), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((panel, nf), lambda i: (i, 0)),
+            pl.BlockSpec((panel, nf), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nf), jnp.float32),
+            jax.ShapeDtypeStruct((b, nf), jnp.float32),
+        ],
+        interpret=True,
+    )(x, jnp.asarray(c), jnp.asarray(s))
+    return re[:b_logical], im[:b_logical]
+
+
+# ---------------------------------------------------------------------------
+# 1-D R2C, four-step Cooley–Tukey path (n = n1·n2, the paper's §5.3 regime)
+# ---------------------------------------------------------------------------
+
+
+def _fourstep_kernel(x_ref, c1_ref, s1_ref, tc_ref, ts_ref, c2_ref, s2_ref,
+                     perm_ref, re_ref, im_ref, *, n1: int, n2: int, nf: int):
+    """Four-step FFT of one batch panel, fully VMEM-resident.
+
+    Stage 1: column DFTs of the (n1, n2) reshape — an MXU contraction over
+    j1.  Stage 2: twiddle plane on the VPU.  Stage 3: row DFTs — a second
+    MXU contraction over j2.  Stage 4: digit-reversal gather restoring
+    natural bin order (the paper's cross-register bit reversal, §5.3,
+    becomes a static permutation folded into the store).
+    """
+    n = n1 * n2
+    x = x_ref[...]                      # (panel, n_in), real
+    panel = x.shape[0]
+    # zero-extend logical input to n inside VMEM (free relative to HBM);
+    # shorter inputs arrive already truncated by the BlockSpec.
+    if x.shape[1] < n:
+        x = jnp.pad(x, ((0, 0), (0, n - x.shape[1])))
+    # j = j1*n2 + j2  →  reshape to (panel, n1[j1], n2[j2])
+    a = x.reshape(panel, n1, n2)
+    # Stage 1: Y[k1, j2] = Σ_j1 a[j1, j2]·W_{n1}^{j1·k1}   (real input)
+    yr = jnp.einsum("bjt,jk->bkt", a, c1_ref[...])
+    yi = jnp.einsum("bjt,jk->bkt", a, s1_ref[...])
+    # Stage 2: twiddle by W_n^{k1·j2}
+    tc = tc_ref[...][None, :, :]
+    ts = ts_ref[...][None, :, :]
+    zr = yr * tc - yi * ts
+    zi = yr * ts + yi * tc
+    # Stage 3: X[k1, k2] = Σ_j2 Z[k1, j2]·W_{n2}^{j2·k2}
+    xr = jnp.einsum("bkt,tm->bkm", zr, c2_ref[...]) - jnp.einsum(
+        "bkt,tm->bkm", zi, s2_ref[...])
+    xi = jnp.einsum("bkt,tm->bkm", zr, s2_ref[...]) + jnp.einsum(
+        "bkt,tm->bkm", zi, c2_ref[...])
+    # Stage 4: natural order k = k2·n1 + k1 via static gather, keep the
+    # Hermitian half only.
+    perm = perm_ref[...]
+    xr = xr.reshape(panel, n)[:, perm]
+    xi = xi.reshape(panel, n)[:, perm]
+    re_ref[...] = xr[:, :nf]
+    im_ref[...] = xi[:, :nf]
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def fbfft1d_fourstep(x: jax.Array, n_fft: int, panel: int = DEFAULT_PANEL):
+    """Batched 1-D R2C FFT via the four-step n = n1·n2 decomposition.
+
+    Numerically identical to :func:`fbfft1d`; exists to reproduce the
+    paper's Cooley–Tukey register decomposition in TPU form and to let the
+    benches compare the dense-DFT and factorized schedules.
+    """
+    b_logical, n_in = x.shape
+    if n_in > n_fft:
+        raise ValueError(f"input length {n_in} exceeds fft size {n_fft}")
+    n1, n2 = dft.factor_fourstep(n_fft)
+    nf = n_fft // 2 + 1
+    c1, s1 = dft.cfft_basis(n1, n1)
+    tc, ts = dft.twiddle(n1, n2)
+    c2, s2 = dft.cfft_basis(n2, n2)
+    perm = dft.digit_reverse_perm(n1, n2)
+    panel = _eff_panel(b_logical, panel)
+    x, _ = _pad_batch(x, panel)
+    b = x.shape[0]
+    kern = functools.partial(_fourstep_kernel, n1=n1, n2=n2, nf=nf)
+    re, im = pl.pallas_call(
+        kern,
+        grid=(b // panel,),
+        in_specs=[
+            pl.BlockSpec((panel, n_in), lambda i: (i, 0)),
+            pl.BlockSpec((n1, n1), lambda i: (0, 0)),
+            pl.BlockSpec((n1, n1), lambda i: (0, 0)),
+            pl.BlockSpec((n1, n2), lambda i: (0, 0)),
+            pl.BlockSpec((n1, n2), lambda i: (0, 0)),
+            pl.BlockSpec((n2, n2), lambda i: (0, 0)),
+            pl.BlockSpec((n2, n2), lambda i: (0, 0)),
+            pl.BlockSpec((n_fft,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((panel, nf), lambda i: (i, 0)),
+            pl.BlockSpec((panel, nf), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nf), jnp.float32),
+            jax.ShapeDtypeStruct((b, nf), jnp.float32),
+        ],
+        interpret=True,
+    )(x, jnp.asarray(c1), jnp.asarray(s1), jnp.asarray(tc), jnp.asarray(ts),
+      jnp.asarray(c2), jnp.asarray(s2), jnp.asarray(perm))
+    return re[:b_logical], im[:b_logical]
+
+
+# ---------------------------------------------------------------------------
+# 2-D R2C with fused transpose (the convolution building block)
+# ---------------------------------------------------------------------------
+
+
+def _fbfft2d_kernel(x_ref, cw_ref, sw_ref, ch_ref, sh_ref, re_ref, im_ref):
+    """2-D R2C FFT of one batch panel, output frequency-transposed.
+
+    Row–column decomposition, both passes MXU contractions on the same
+    VMEM-resident panel:
+
+      1. width axis (R2C, halved):  G[b, h, kw] = Σ_w x[b, h, w]·W^{w·kw}
+      2. height axis (C2C, full),  *written transposed*:
+         FT[kw, kh, b] = Σ_h G[b, h, kw]·W^{h·kh}
+
+    The output tile is ``(nf, n, panel)`` — the 'HWBD' layout of the
+    paper's Table 1, produced directly instead of via a Cgeam transpose
+    pass. The einsum output ordering performs the in-VMEM transpose, the
+    analogue of the paper's in-SMEM warp transpose (§5.2).
+    """
+    x = x_ref[...]                      # (panel, h_in, w_in)
+    gr = jnp.einsum("bhw,wk->bhk", x, cw_ref[...])
+    gi = jnp.einsum("bhw,wk->bhk", x, sw_ref[...])
+    ch, sh = ch_ref[...], sh_ref[...]
+    # contraction over h; output axes ordered (kw, kh, b) = fused transpose
+    re_ref[...] = (jnp.einsum("bhk,hm->kmb", gr, ch)
+                   - jnp.einsum("bhk,hm->kmb", gi, sh))
+    im_ref[...] = (jnp.einsum("bhk,hm->kmb", gr, sh)
+                   + jnp.einsum("bhk,hm->kmb", gi, ch))
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def fbfft2d(x: jax.Array, n_fft: int, panel: int = DEFAULT_PANEL):
+    """Batched 2-D R2C FFT with fused frequency transpose.
+
+    ``x``: real ``(B, h_in, w_in)`` with ``h_in, w_in <= n_fft``; the basis
+    is square ``n_fft × n_fft`` (fbfft supports square power-of-two
+    transforms, paper §6).
+
+    Returns ``(re, im)`` of shape ``(n_fft//2 + 1, n_fft, B)``:
+    ``out[kw, kh, b] == jnp.fft.rfft2(pad(x[b]))[kh, kw]`` — note the
+    transposed (kw, kh) frequency layout *and* batch-innermost ordering,
+    ready for the per-bin CGEMM stage with zero intermediate transposes.
+    """
+    b_logical, h_in, w_in = x.shape
+    if h_in > n_fft or w_in > n_fft:
+        raise ValueError(f"input {h_in}x{w_in} exceeds fft size {n_fft}")
+    nf = n_fft // 2 + 1
+    cw, sw = dft.rfft_basis(w_in, n_fft)
+    ch, sh = dft.cfft_basis(h_in, n_fft)
+    panel = _eff_panel(b_logical, panel)
+    x, _ = _pad_batch(x, panel)
+    b = x.shape[0]
+    re, im = pl.pallas_call(
+        _fbfft2d_kernel,
+        grid=(b // panel,),
+        in_specs=[
+            pl.BlockSpec((panel, h_in, w_in), lambda i: (i, 0, 0)),
+            pl.BlockSpec((w_in, nf), lambda i: (0, 0)),
+            pl.BlockSpec((w_in, nf), lambda i: (0, 0)),
+            pl.BlockSpec((h_in, n_fft), lambda i: (0, 0)),
+            pl.BlockSpec((h_in, n_fft), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((nf, n_fft, panel), lambda i: (0, 0, i)),
+            pl.BlockSpec((nf, n_fft, panel), lambda i: (0, 0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nf, n_fft, b), jnp.float32),
+            jax.ShapeDtypeStruct((nf, n_fft, b), jnp.float32),
+        ],
+        interpret=True,
+    )(x, jnp.asarray(cw), jnp.asarray(sw), jnp.asarray(ch), jnp.asarray(sh))
+    return re[:, :, :b_logical], im[:, :, :b_logical]

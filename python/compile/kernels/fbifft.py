@@ -1,0 +1,153 @@
+"""fbfft inverse transforms (C2R) as Pallas kernels (Layer 1).
+
+Inverse counterparts of ``kernels.fbfft``. Two fbfft ideas matter here:
+
+* the input arrives in the frequency-transposed ``(nf, n, batch)`` layout
+  the CGEMM stage emits, so no pre-transposition pass is needed;
+* **fused clipping** — the convolution pipeline only ever needs a
+  ``(clip_h, clip_w)`` corner of the full ``n × n`` inverse (valid-conv
+  output, gradInput, or kernel-gradient window, paper §3.1), so the kernel
+  computes the inverse and stores just that window. The clipped store is
+  the inverse-side analogue of implicit zero padding: bytes for the
+  discarded region never touch HBM.
+
+Only the real part of the final stage is computed (the imaginary part of
+a real signal's inverse is identically zero) — half the last-stage FLOPs,
+the paper's Hermitian-symmetry saving applied to the IFFT.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import dft
+from .fbfft import DEFAULT_PANEL
+
+__all__ = ["fbifft1d", "fbifft2d"]
+
+
+def _fbifft1d_kernel(re_ref, im_ref, ec_ref, es_ref, out_ref):
+    """One panel: real part of the inverse, a pair of MXU contractions."""
+    out_ref[...] = (
+        jnp.dot(re_ref[...], ec_ref[...], preferred_element_type=jnp.float32)
+        - jnp.dot(im_ref[...], es_ref[...], preferred_element_type=jnp.float32)
+    )
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3, 4))
+def fbifft1d(re: jax.Array, im: jax.Array, n_fft: int,
+             clip: int | None = None, panel: int = DEFAULT_PANEL):
+    """Batched 1-D C2R inverse FFT.
+
+    ``re, im``: ``(B, n_fft//2 + 1)`` half-spectrum planes. Returns the
+    real inverse ``(B, clip)`` (``clip`` defaults to ``n_fft``) — equal to
+    ``jnp.fft.irfft(re + i·im, n_fft)[:, :clip]``.
+    """
+    clip = n_fft if clip is None else clip
+    if clip > n_fft:
+        raise ValueError(f"clip={clip} exceeds n_fft={n_fft}")
+    b_logical, nf = re.shape
+    if nf != n_fft // 2 + 1:
+        raise ValueError(f"spectrum width {nf} != n_fft//2+1 = {n_fft // 2 + 1}")
+    ec, es = dft.irfft_basis_1d(n_fft)
+    # fused clip: slice the basis columns instead of the result
+    ec, es = ec[:, :clip], es[:, :clip]
+    panel = min(panel, dft.next_pow2(max(8, b_logical)))
+    rem = (-b_logical) % panel
+    if rem:
+        re = jnp.pad(re, ((0, rem), (0, 0)))
+        im = jnp.pad(im, ((0, rem), (0, 0)))
+    b = re.shape[0]
+    out = pl.pallas_call(
+        _fbifft1d_kernel,
+        grid=(b // panel,),
+        in_specs=[
+            pl.BlockSpec((panel, nf), lambda i: (i, 0)),
+            pl.BlockSpec((panel, nf), lambda i: (i, 0)),
+            pl.BlockSpec((nf, clip), lambda i: (0, 0)),
+            pl.BlockSpec((nf, clip), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((panel, clip), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, clip), jnp.float32),
+        interpret=True,
+    )(re, im, jnp.asarray(ec), jnp.asarray(es))
+    return out[:b_logical]
+
+
+def _fbifft2d_kernel(re_ref, im_ref, ecw_ref, esw_ref, ech_ref, esh_ref,
+                     out_ref):
+    """2-D C2R inverse of one panel from the transposed layout.
+
+    Input tile ``(nf, n, panel)`` holds ``FT[kw, kh, b] = F[kh, kw]``.
+
+      1. width axis first (it is the halved one): fold Hermitian weights,
+         complex result  G[b, kh, w] = Σ_kw FT[kw, kh, b]·E[kw, w]
+      2. height axis, real part only, directly in (b, h, w) order with the
+         clip window applied by basis slicing before the kernel.
+
+    Both stages are MXU contractions; the layout change back from
+    frequency-transposed to batch-major happens inside the einsums — the
+    second fused transpose of the pipeline.
+    """
+    fr = re_ref[...]                    # (nf, n, panel)
+    fi = im_ref[...]
+    ecw, esw = ecw_ref[...], esw_ref[...]
+    gr = (jnp.einsum("knb,kw->bnw", fr, ecw)
+          - jnp.einsum("knb,kw->bnw", fi, esw))
+    gi = (jnp.einsum("knb,kw->bnw", fr, esw)
+          + jnp.einsum("knb,kw->bnw", fi, ecw))
+    ech, esh = ech_ref[...], esh_ref[...]
+    # real part only: Re{(gr + i·gi)·(ech + i·esh)} contracted over kh (=n)
+    out_ref[...] = (jnp.einsum("bnw,nh->bhw", gr, ech)
+                    - jnp.einsum("bnw,nh->bhw", gi, esh))
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3, 4))
+def fbifft2d(re: jax.Array, im: jax.Array, n_fft: int,
+             clip: tuple[int, int] | None = None,
+             panel: int = DEFAULT_PANEL):
+    """Batched 2-D C2R inverse FFT from the frequency-transposed layout.
+
+    ``re, im``: ``(n_fft//2 + 1, n_fft, B)`` planes as produced by
+    :func:`kernels.fbfft.fbfft2d` / the CGEMM stage. Returns real
+    ``(B, clip_h, clip_w)`` equal to
+    ``jnp.fft.irfft2(F, (n_fft, n_fft))[:, :clip_h, :clip_w]`` where
+    ``F[b, kh, kw] = re[kw, kh, b] + i·im[kw, kh, b]``.
+    """
+    ch, cw = (n_fft, n_fft) if clip is None else clip
+    if ch > n_fft or cw > n_fft:
+        raise ValueError(f"clip {ch}x{cw} exceeds n_fft={n_fft}")
+    nf, n, b_logical = re.shape
+    if nf != n_fft // 2 + 1 or n != n_fft:
+        raise ValueError(f"spectrum {re.shape} inconsistent with n_fft={n_fft}")
+    ecw, esw = dft.irfft_basis_w(n_fft)       # (nf, n) with fold weights
+    ech, esh = dft.irfft_basis_h(n_fft)       # (n, n) with 1/n² scale
+    ecw, esw = ecw[:, :cw], esw[:, :cw]       # fused clip, width
+    ech, esh = ech[:, :ch], esh[:, :ch]       # fused clip, height
+    panel = min(panel, dft.next_pow2(max(8, b_logical)))
+    rem = (-b_logical) % panel
+    if rem:
+        re = jnp.pad(re, ((0, 0), (0, 0), (0, rem)))
+        im = jnp.pad(im, ((0, 0), (0, 0), (0, rem)))
+    b = re.shape[2]
+    out = pl.pallas_call(
+        _fbifft2d_kernel,
+        grid=(b // panel,),
+        in_specs=[
+            pl.BlockSpec((nf, n_fft, panel), lambda i: (0, 0, i)),
+            pl.BlockSpec((nf, n_fft, panel), lambda i: (0, 0, i)),
+            pl.BlockSpec((nf, cw), lambda i: (0, 0)),
+            pl.BlockSpec((nf, cw), lambda i: (0, 0)),
+            pl.BlockSpec((n_fft, ch), lambda i: (0, 0)),
+            pl.BlockSpec((n_fft, ch), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((panel, ch, cw), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, ch, cw), jnp.float32),
+        interpret=True,
+    )(re, im, jnp.asarray(ecw), jnp.asarray(esw), jnp.asarray(ech),
+      jnp.asarray(esh))
+    return out[:b_logical]

@@ -1,0 +1,130 @@
+"""Frequency-domain pointwise CGEMM stage as a Pallas kernel (Layer 1).
+
+This is the paper's Cgemm step (Table 1): after both operands are in the
+frequency domain, each of the ``(n/2+1)·n`` bins carries an independent
+small complex matrix product whose contraction dimension depends on the
+pass (paper §2):
+
+=========  =========================  ==================  ===========
+pass       product                    reduction           conjugation
+=========  =========================  ==================  ===========
+fprop      Out[s,j] = Σ_i X[s,i]·W̄[j,i]   input planes f      weight
+bprop      Gx[s,i]  = Σ_j Go[s,j]·W[j,i]   output planes f'    none
+accGrad    Gw[j,i]  = Σ_s Ḡo[s,j]·X[s,i]   minibatch S         gradOutput
+=========  =========================  ==================  ===========
+
+The operands arrive in the frequency-major ``(nf, n, rows, cols)`` layout
+produced by ``fbfft2d``'s fused transpose, so the bins are already the
+leading (grid) dimension — the cuFFT pipeline's two Cgeam transposes
+simply do not exist here. Complex products are expanded into four real
+einsum contractions per output plane; each maps to an MXU matmul batched
+over the ``n`` bins resident in the block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["cgemm_fprop", "cgemm_bprop", "cgemm_accgrad"]
+
+
+def _fprop_kernel(xr_ref, xi_ref, wr_ref, wi_ref, or_ref, oi_ref):
+    """Out = X · conj(W)ᵀ over the plane dim, batched over bins."""
+    xr, xi = xr_ref[...], xi_ref[...]          # (1, n, S, f)
+    wr, wi = wr_ref[...], wi_ref[...]          # (1, n, f', f)
+    or_ref[...] = (jnp.einsum("qnsf,qnjf->qnsj", xr, wr)
+                   + jnp.einsum("qnsf,qnjf->qnsj", xi, wi))
+    oi_ref[...] = (jnp.einsum("qnsf,qnjf->qnsj", xi, wr)
+                   - jnp.einsum("qnsf,qnjf->qnsj", xr, wi))
+
+
+def _bprop_kernel(gr_ref, gi_ref, wr_ref, wi_ref, or_ref, oi_ref):
+    """Gx = Go · W (no conjugation), batched over bins."""
+    gr, gi = gr_ref[...], gi_ref[...]          # (1, n, S, f')
+    wr, wi = wr_ref[...], wi_ref[...]          # (1, n, f', f)
+    or_ref[...] = (jnp.einsum("qnsj,qnjf->qnsf", gr, wr)
+                   - jnp.einsum("qnsj,qnjf->qnsf", gi, wi))
+    oi_ref[...] = (jnp.einsum("qnsj,qnjf->qnsf", gr, wi)
+                   + jnp.einsum("qnsj,qnjf->qnsf", gi, wr))
+
+
+def _accgrad_kernel(gr_ref, gi_ref, xr_ref, xi_ref, or_ref, oi_ref):
+    """Gw = conj(Go)ᵀ · X over the minibatch dim, batched over bins."""
+    gr, gi = gr_ref[...], gi_ref[...]          # (1, n, S, f')
+    xr, xi = xr_ref[...], xi_ref[...]          # (1, n, S, f)
+    or_ref[...] = (jnp.einsum("qnsj,qnsf->qnjf", gr, xr)
+                   + jnp.einsum("qnsj,qnsf->qnjf", gi, xi))
+    oi_ref[...] = (jnp.einsum("qnsj,qnsf->qnjf", gr, xi)
+                   - jnp.einsum("qnsj,qnsf->qnjf", gi, xr))
+
+
+def _binwise(kernel, a_planes, b_planes, out_rows: int, out_cols: int):
+    """Launch ``kernel`` on a grid over the ``nf`` frequency rows.
+
+    ``a_planes``/``b_planes`` are (re, im) pairs shaped
+    ``(nf, n, rows, cols)``; one grid step owns one frequency row — a
+    block of ``n`` bins — so block sizes stay MXU-friendly while the grid
+    provides the bin-level parallelism of the paper's batched Cgemm.
+    """
+    ar, ai = a_planes
+    br, bi = b_planes
+    nf, n = ar.shape[0], ar.shape[1]
+    a_rows, a_cols = ar.shape[2], ar.shape[3]
+    b_rows, b_cols = br.shape[2], br.shape[3]
+    re, im = pl.pallas_call(
+        kernel,
+        grid=(nf,),
+        in_specs=[
+            pl.BlockSpec((1, n, a_rows, a_cols), lambda q: (q, 0, 0, 0)),
+            pl.BlockSpec((1, n, a_rows, a_cols), lambda q: (q, 0, 0, 0)),
+            pl.BlockSpec((1, n, b_rows, b_cols), lambda q: (q, 0, 0, 0)),
+            pl.BlockSpec((1, n, b_rows, b_cols), lambda q: (q, 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, n, out_rows, out_cols), lambda q: (q, 0, 0, 0)),
+            pl.BlockSpec((1, n, out_rows, out_cols), lambda q: (q, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nf, n, out_rows, out_cols), jnp.float32),
+            jax.ShapeDtypeStruct((nf, n, out_rows, out_cols), jnp.float32),
+        ],
+        interpret=True,
+    )(ar, ai, br, bi)
+    return re, im
+
+
+@jax.jit
+def cgemm_fprop(xf, wf):
+    """Per-bin ``Out[s,j] = Σ_i X[s,i]·conj(W[j,i])``.
+
+    ``xf``: (re, im) of shape ``(nf, n, S, f)``; ``wf``: (re, im) of shape
+    ``(nf, n, f', f)``. Returns (re, im) of shape ``(nf, n, S, f')``.
+    """
+    s, fo = xf[0].shape[2], wf[0].shape[2]
+    return _binwise(_fprop_kernel, xf, wf, s, fo)
+
+
+@jax.jit
+def cgemm_bprop(gof, wf):
+    """Per-bin ``Gx[s,i] = Σ_j Go[s,j]·W[j,i]``.
+
+    ``gof``: planes ``(nf, n, S, f')``; ``wf``: planes ``(nf, n, f', f)``.
+    Returns planes ``(nf, n, S, f)``.
+    """
+    s, f = gof[0].shape[2], wf[0].shape[3]
+    return _binwise(_bprop_kernel, gof, wf, s, f)
+
+
+@jax.jit
+def cgemm_accgrad(gof, xf):
+    """Per-bin ``Gw[j,i] = Σ_s conj(Go[s,j])·X[s,i]``.
+
+    ``gof``: planes ``(nf, n, S, f')``; ``xf``: planes ``(nf, n, S, f)``.
+    Returns planes ``(nf, n, f', f)``.
+    """
+    fo, f = gof[0].shape[3], xf[0].shape[3]
+    return _binwise(_accgrad_kernel, gof, xf, fo, f)

@@ -1,0 +1,152 @@
+"""Pure-jnp correctness oracles for every Layer-1 kernel.
+
+Two independent families:
+
+* ``lax.conv_general_dilated``-based time-domain convolutions — the
+  'vendor black box' analogue of cuDNN (DESIGN.md §3) and the ground
+  truth for all three training passes;
+* ``jnp.fft``-based frequency-domain convolutions — the 'vendor FFT'
+  analogue of cuFFT, validating the conv-theorem plumbing (conjugation
+  sides, clip windows) separately from the Pallas transform kernels.
+
+Everything here is also *used at Layer 2* as the two vendor strategies the
+paper benchmarks against, so these oracles are production code paths, not
+test-only helpers.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = [
+    "rfft1d_ref", "irfft1d_ref", "rfft2d_ref_transposed",
+    "conv_fprop_ref", "conv_bprop_ref", "conv_accgrad_ref",
+    "conv_fprop_fft_ref", "conv_bprop_fft_ref", "conv_accgrad_fft_ref",
+]
+
+
+# ---------------------------------------------------------------------------
+# FFT oracles
+# ---------------------------------------------------------------------------
+
+
+def rfft1d_ref(x: jax.Array, n_fft: int):
+    """(re, im) planes of ``rfft`` with zero padding to ``n_fft``."""
+    f = jnp.fft.rfft(x, n=n_fft, axis=-1)
+    return jnp.real(f).astype(jnp.float32), jnp.imag(f).astype(jnp.float32)
+
+
+def irfft1d_ref(re: jax.Array, im: jax.Array, n_fft: int, clip: int):
+    """Real inverse of half-spectrum planes, clipped."""
+    x = jnp.fft.irfft(re + 1j * im, n=n_fft, axis=-1)
+    return x[..., :clip].astype(jnp.float32)
+
+
+def rfft2d_ref_transposed(x: jax.Array, n_fft: int):
+    """(re, im) planes in fbfft's transposed layout ``(nf, n, B)`` for a
+    batch ``(B, h, w)`` — the oracle for ``fbfft2d``'s fused transpose."""
+    f = jnp.fft.rfft2(x, s=(n_fft, n_fft), axes=(-2, -1))   # (B, n, nf)
+    ft = jnp.transpose(f, (2, 1, 0))                         # (nf, kh, B)
+    return (jnp.real(ft).astype(jnp.float32),
+            jnp.imag(ft).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Time-domain convolution oracles (the cuDNN-analogue vendor path)
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def conv_fprop_ref(x: jax.Array, wei: jax.Array) -> jax.Array:
+    """Valid cross-correlation ``y[s,j] = Σ_i x[s,i] ⋆ w[j,i]``.
+
+    XLA's ``conv_general_dilated`` already cross-correlates (no kernel
+    flip), matching Torch forward-pass semantics (paper fn. 1).
+    """
+    return lax.conv_general_dilated(
+        x, wei,
+        window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def conv_bprop_ref(go: jax.Array, wei: jax.Array, h: int, w: int) -> jax.Array:
+    """Full convolution ``gx[s,i] = Σ_j go[s,j] * w[j,i]``: transposed-conv
+    identity — pad the gradient by k-1 and cross-correlate with the
+    *flipped* kernel (XLA correlates, so the flip realizes convolution)
+    with in/out planes swapped."""
+    kh, kw = wei.shape[-2], wei.shape[-1]
+    del h, w  # implied: y_h + kh - 1, y_w + kw - 1
+    return lax.conv_general_dilated(
+        go, jnp.flip(jnp.transpose(wei, (1, 0, 2, 3)), (-2, -1)),
+        window_strides=(1, 1),
+        padding=((kh - 1, kh - 1), (kw - 1, kw - 1)),
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def conv_accgrad_ref(go: jax.Array, x: jax.Array, kh: int, kw: int) -> jax.Array:
+    """Weight gradient ``gw[j,i] = Σ_s go[s,j] ⋆ x[s,i]`` via the
+    batch-as-reduction trick: correlate x (planes as batch) against go
+    (batch as planes), then swap back."""
+    # x: (S, f, h, w) -> (f, S, h, w); go: (S, f', yh, yw) -> (f', S, yh, yw)
+    xt = jnp.transpose(x, (1, 0, 2, 3))
+    got = jnp.transpose(go, (1, 0, 2, 3))
+    # valid correlation of xt with got as the kernel -> (f, f', kh, kw)
+    gw = lax.conv_general_dilated(
+        xt, got,
+        window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    del kh, kw  # implied by shapes
+    return jnp.transpose(gw, (1, 0, 2, 3))
+
+
+# ---------------------------------------------------------------------------
+# jnp.fft convolution oracles (the cuFFT-analogue vendor path)
+# ---------------------------------------------------------------------------
+
+
+def _freq(x: jax.Array, n: int) -> jax.Array:
+    return jnp.fft.rfft2(x, s=(n, n), axes=(-2, -1))
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def conv_fprop_fft_ref(x: jax.Array, wei: jax.Array, n_fft: int) -> jax.Array:
+    """fprop by the convolution theorem: ``IFFT(X ∘ conj(W))`` reduced over
+    input planes, clipped to the valid window. Arbitrary ``n_fft >= h`` —
+    this is the path on which the autotuner's 2^a3^b5^c7^d basis search
+    operates (paper §3.4)."""
+    s, f, h, w = x.shape
+    fo, _, kh, kw = wei.shape
+    xf = _freq(x, n_fft)                       # (S, f, n, nf)
+    wf = _freq(wei, n_fft)                     # (f', f, n, nf)
+    of = jnp.einsum("sfnk,jfnk->sjnk", xf, jnp.conj(wf))
+    y = jnp.fft.irfft2(of, s=(n_fft, n_fft), axes=(-2, -1))
+    return y[:, :, : h - kh + 1, : w - kw + 1].astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3, 4))
+def conv_bprop_fft_ref(go: jax.Array, wei: jax.Array, n_fft: int,
+                       h: int, w: int) -> jax.Array:
+    """bprop by the convolution theorem: plain product, no conjugation."""
+    gof = _freq(go, n_fft)
+    wf = _freq(wei, n_fft)
+    gxf = jnp.einsum("sjnk,jfnk->sfnk", gof, wf)
+    gx = jnp.fft.irfft2(gxf, s=(n_fft, n_fft), axes=(-2, -1))
+    return gx[:, :, :h, :w].astype(jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3, 4))
+def conv_accgrad_fft_ref(go: jax.Array, x: jax.Array, n_fft: int,
+                         kh: int, kw: int) -> jax.Array:
+    """accGrad by the convolution theorem: conjugate the output gradient,
+    reduce over the minibatch."""
+    gof = _freq(go, n_fft)
+    xf = _freq(x, n_fft)
+    gwf = jnp.einsum("sjnk,sfnk->jfnk", jnp.conj(gof), xf)
+    gw = jnp.fft.irfft2(gwf, s=(n_fft, n_fft), axes=(-2, -1))
+    return gw[:, :, :kh, :kw].astype(jnp.float32)

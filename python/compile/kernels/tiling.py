@@ -1,0 +1,115 @@
+"""§6 tiling: decompose a large convolution into many small fbfft ones.
+
+fbfft provides its largest gains over the vendor FFT at transform sizes
+8–64 (paper §5.4), and those sizes depend on the *kernel*, not the input:
+when k ≪ h the input can be cut into tiles of size ``d + k - 1`` with
+``d ≈ k``, dropping the FFT cost from O(n·log n) to O(n·log w) per the
+paper's derivation, while every per-tile transform lands in fbfft's sweet
+spot.
+
+Three decompositions, exactly the paper's:
+
+* **fprop** — overlap-save: output tile ``y[a:a+d] = x[a:a+d+k-1] ⋆ c``;
+  tiles read overlapping input windows and write disjoint outputs.
+* **bprop** — overlap-add: full convolution is linear in the gradient, so
+  each gradient tile scatters its ``d+k-1``-wide contribution additively.
+* **accGrad** — the paper's §6 identity: the big correlation against the
+  (n-w+1)-sized gradient 'kernel' splits into a sum of tile-local
+  correlations, one term per tile (plus the remainder tile).
+
+Every per-tile convolution goes through the ordinary fbfft pipeline
+(`conv_fft`) on the small basis ``next_pow2(d + k - 1)``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import dft
+from . import conv_fft
+
+__all__ = ["conv_fprop_tiled", "conv_bprop_tiled", "conv_accgrad_tiled",
+           "tile_fft_size"]
+
+
+def tile_fft_size(d: int, kh: int, kw: int) -> int:
+    """Fourier basis for a tile: covers the (d+k-1)-sized input window."""
+    return dft.next_pow2(max(d + kh - 1, d + kw - 1))
+
+
+def _tile_ranges(total: int, d: int):
+    """(offset, size) pairs covering ``range(total)`` in steps of ``d``;
+    the last tile may be short (the paper's remainder term)."""
+    out = []
+    a = 0
+    while a < total:
+        out.append((a, min(d, total - a)))
+        a += d
+    return out
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def conv_fprop_tiled(x: jax.Array, wei: jax.Array, d: int) -> jax.Array:
+    """Tiled forward pass (overlap-save), tile output size ``d``.
+
+    Equivalent to :func:`conv_fft.conv_fprop` on the full plane; each tile
+    runs the fbfft pipeline at basis ``tile_fft_size`` instead of
+    ``next_pow2(h)``.
+    """
+    s, f, h, w = x.shape
+    fo, _, kh, kw = wei.shape
+    yh, yw = h - kh + 1, w - kw + 1
+    n_t = tile_fft_size(d, kh, kw)
+    y = jnp.zeros((s, fo, yh, yw), dtype=jnp.float32)
+    for (ah, dh) in _tile_ranges(yh, d):
+        for (aw, dw) in _tile_ranges(yw, d):
+            xt = x[:, :, ah:ah + dh + kh - 1, aw:aw + dw + kw - 1]
+            yt = conv_fft.conv_fprop(xt, wei, n_t)
+            y = y.at[:, :, ah:ah + dh, aw:aw + dw].set(yt)
+    return y
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3, 4))
+def conv_bprop_tiled(go: jax.Array, wei: jax.Array, d: int,
+                     h: int, w: int) -> jax.Array:
+    """Tiled backward-by-data (overlap-add).
+
+    Each gradient tile of size ``d`` contributes a ``d+k-1`` window to the
+    input gradient; contributions overlap by ``k-1`` and are summed.
+    """
+    s, fo, yh, yw = go.shape
+    _, f, kh, kw = wei.shape
+    n_t = tile_fft_size(d, kh, kw)
+    gx = jnp.zeros((s, f, h, w), dtype=jnp.float32)
+    for (ah, dh) in _tile_ranges(yh, d):
+        for (aw, dw) in _tile_ranges(yw, d):
+            got = go[:, :, ah:ah + dh, aw:aw + dw]
+            gxt = conv_fft.conv_bprop(got, wei, n_t,
+                                      dh + kh - 1, dw + kw - 1)
+            gx = gx.at[:, :, ah:ah + dh + kh - 1,
+                       aw:aw + dw + kw - 1].add(gxt)
+    return gx
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3, 4))
+def conv_accgrad_tiled(go: jax.Array, x: jax.Array, d: int,
+                       kh: int, kw: int) -> jax.Array:
+    """Tiled weight gradient — the paper's §6 sum of tile correlations:
+
+        ∂L/∂c = Σ_t  x[t·d : (t+1)·d + k - 1] ⋆ z[t·d : (t+1)·d]
+
+    (2-D over both spatial axes, remainder tiles included).
+    """
+    s, fo, yh, yw = go.shape
+    n_t = tile_fft_size(d, kh, kw)
+    gw = None
+    for (ah, dh) in _tile_ranges(yh, d):
+        for (aw, dw) in _tile_ranges(yw, d):
+            got = go[:, :, ah:ah + dh, aw:aw + dw]
+            xt = x[:, :, ah:ah + dh + kh - 1, aw:aw + dw + kw - 1]
+            gwt = conv_fft.conv_accgrad(got, xt, n_t, kh, kw)
+            gw = gwt if gw is None else gw + gwt
+    return gw

@@ -1,0 +1,246 @@
+"""Layer 2 — the JAX compute graphs lowered to HLO for the coordinator.
+
+Everything the Rust runtime executes is defined here as a pure jax
+function over concrete shapes:
+
+* the six convolution strategies × three training passes, dispatching to
+  the Layer-1 Pallas kernels (`fbfft`, `fbfft_tiled`, `direct`, `im2col`)
+  or to the two vendor black boxes (`vendor` = XLA's native conv, the
+  cuDNN analogue; `vendor_fft` = jnp.fft, the cuFFT analogue);
+* standalone batched FFT transforms for the Figure-7/8 benches;
+* a small trainable CNN (fbfft convolutions wired through ``custom_vjp``
+  so *all three* paper passes run on the Pallas pipeline) with an SGD
+  train step for the end-to-end example.
+
+Python runs once at build time (`make artifacts`); the lowered HLO text is
+the only thing that crosses to the request path.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv_direct, conv_fft, conv_im2col, dft, fbfft, ref, tiling
+from .specs import ConvSpec
+
+__all__ = [
+    "STRATEGIES", "fprop", "bprop", "accgrad",
+    "fft1d_fbfft", "fft1d_vendor", "fft2d_fbfft", "fft2d_vendor",
+    "fbfft_conv", "cnn_init", "cnn_apply", "cnn_loss", "train_step",
+    "TrainConfig",
+]
+
+STRATEGIES = ("vendor", "vendor_fft", "fbfft", "fbfft_tiled", "direct",
+              "im2col")
+
+
+# ---------------------------------------------------------------------------
+# Strategy dispatch — three passes
+# ---------------------------------------------------------------------------
+
+
+def _n_fft_for(spec: ConvSpec, n_fft: int | None) -> int:
+    """fbfft interpolates to the next power of two covering the largest
+    operand (paper §5.4); an explicit n_fft (from the autotuner) wins."""
+    return n_fft if n_fft is not None else conv_fft.min_fft_size(spec.h, spec.w)
+
+
+def fprop(spec: ConvSpec, strategy: str, x: jax.Array, wei: jax.Array,
+          n_fft: int | None = None, tile: int | None = None) -> jax.Array:
+    """Forward pass ``y[s,j] = Σ_i x[s,i] ⋆ w[j,i]`` under ``strategy``."""
+    if spec.stride != 1 and strategy != "vendor":
+        raise ValueError(
+            f"{spec.name}: strided convolution is vendor-only (paper §2)")
+    if strategy == "vendor":
+        if spec.stride == 1:
+            return ref.conv_fprop_ref(x, wei)
+        return jax.lax.conv_general_dilated(
+            x, wei, window_strides=(spec.stride, spec.stride),
+            padding="VALID", dimension_numbers=("NCHW", "OIHW", "NCHW"))
+    if strategy == "vendor_fft":
+        return ref.conv_fprop_fft_ref(x, wei, _n_fft_for(spec, n_fft))
+    if strategy == "fbfft":
+        return conv_fft.conv_fprop(x, wei, _n_fft_for(spec, n_fft))
+    if strategy == "fbfft_tiled":
+        return tiling.conv_fprop_tiled(x, wei, tile or max(spec.kh, spec.kw))
+    if strategy == "direct":
+        return conv_direct.conv_direct_fprop(x, wei)
+    if strategy == "im2col":
+        return conv_im2col.conv_im2col_fprop(x, wei)
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+def bprop(spec: ConvSpec, strategy: str, go: jax.Array, wei: jax.Array,
+          n_fft: int | None = None, tile: int | None = None) -> jax.Array:
+    """Gradient w.r.t. the input (full convolution of go with w)."""
+    if strategy == "vendor":
+        return ref.conv_bprop_ref(go, wei, spec.h, spec.w)
+    if strategy == "vendor_fft":
+        return ref.conv_bprop_fft_ref(go, wei, _n_fft_for(spec, n_fft),
+                                      spec.h, spec.w)
+    if strategy == "fbfft":
+        return conv_fft.conv_bprop(go, wei, _n_fft_for(spec, n_fft),
+                                   spec.h, spec.w)
+    if strategy == "fbfft_tiled":
+        return tiling.conv_bprop_tiled(go, wei,
+                                       tile or max(spec.kh, spec.kw),
+                                       spec.h, spec.w)
+    if strategy in ("direct", "im2col"):
+        # transposed-conv identity: pad the gradient by k-1, correlate with
+        # the flipped kernel, planes swapped — reuses the fprop kernel.
+        kh, kw = spec.kh, spec.kw
+        gop = jnp.pad(go, ((0, 0), (0, 0), (kh - 1, kh - 1),
+                           (kw - 1, kw - 1)))
+        wt = jnp.flip(jnp.transpose(wei, (1, 0, 2, 3)), (-2, -1))
+        fn = (conv_direct.conv_direct_fprop if strategy == "direct"
+              else conv_im2col.conv_im2col_fprop)
+        return fn(gop, wt)
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+def accgrad(spec: ConvSpec, strategy: str, go: jax.Array, x: jax.Array,
+            n_fft: int | None = None, tile: int | None = None) -> jax.Array:
+    """Gradient w.r.t. the weights (minibatch is the reduction dim)."""
+    if strategy == "vendor":
+        return ref.conv_accgrad_ref(go, x, spec.kh, spec.kw)
+    if strategy == "vendor_fft":
+        return ref.conv_accgrad_fft_ref(go, x, _n_fft_for(spec, n_fft),
+                                        spec.kh, spec.kw)
+    if strategy == "fbfft":
+        return conv_fft.conv_accgrad(go, x, _n_fft_for(spec, n_fft),
+                                     spec.kh, spec.kw)
+    if strategy == "fbfft_tiled":
+        return tiling.conv_accgrad_tiled(go, x,
+                                         tile or max(spec.kh, spec.kw),
+                                         spec.kh, spec.kw)
+    if strategy in ("direct", "im2col"):
+        # batch-as-reduction identity on the fprop kernel
+        xt = jnp.transpose(x, (1, 0, 2, 3))
+        got = jnp.transpose(go, (1, 0, 2, 3))
+        fn = (conv_direct.conv_direct_fprop if strategy == "direct"
+              else conv_im2col.conv_im2col_fprop)
+        return jnp.transpose(fn(xt, got), (1, 0, 2, 3))
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+# ---------------------------------------------------------------------------
+# Standalone transforms (Figures 7–8 subjects)
+# ---------------------------------------------------------------------------
+
+
+def fft1d_fbfft(x: jax.Array, n_fft: int):
+    """Batched 1-D fbfft (Pallas). Figure-7 subject."""
+    return fbfft.fbfft1d(x, n_fft)
+
+
+def fft1d_vendor(x: jax.Array, n_fft: int):
+    """Batched 1-D vendor FFT (XLA's native Rfft — the cuFFT analogue)."""
+    return ref.rfft1d_ref(x, n_fft)
+
+
+def fft2d_fbfft(x: jax.Array, n_fft: int):
+    """Batched 2-D fbfft with fused transpose. Figure-8 subject."""
+    return fbfft.fbfft2d(x, n_fft)
+
+
+def fft2d_vendor(x: jax.Array, n_fft: int):
+    """Batched 2-D vendor FFT *plus* the explicit transposition the cuFFT
+    pipeline needs before its CGEMM (paper Table 1) — the honest
+    like-for-like comparison for Figure 8."""
+    return ref.rfft2d_ref_transposed(x, n_fft)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end CNN: fbfft convolutions with custom VJP (all three passes on
+# the Pallas pipeline), SGD train step
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def fbfft_conv(x: jax.Array, wei: jax.Array, n_fft: int) -> jax.Array:
+    """Differentiable fbfft convolution layer: forward = conv_fprop,
+    backward = (conv_bprop, conv_accgrad) — the exact three-kernel split
+    of paper §2 instead of XLA's autodiff of the forward graph."""
+    return conv_fft.conv_fprop(x, wei, n_fft)
+
+
+def _fbfft_conv_fwd(x, wei, n_fft):
+    return conv_fft.conv_fprop(x, wei, n_fft), (x, wei)
+
+
+def _fbfft_conv_bwd(n_fft, res, go):
+    x, wei = res
+    h, w = x.shape[2], x.shape[3]
+    kh, kw = wei.shape[2], wei.shape[3]
+    return (conv_fft.conv_bprop(go, wei, n_fft, h, w),
+            conv_fft.conv_accgrad(go, x, n_fft, kh, kw))
+
+
+fbfft_conv.defvjp(_fbfft_conv_fwd, _fbfft_conv_bwd)
+
+
+class TrainConfig:
+    """Static architecture of the e2e demo CNN (examples/train_cnn.rs).
+
+    input (S, c, hw, hw) → conv1(c→p1, k) → relu → conv2(p1→p2, k) → relu
+    → global average pool → dense(p2→classes) → softmax CE. Both convs run
+    the full fbfft pipeline in fwd *and* bwd via ``fbfft_conv``.
+    """
+
+    def __init__(self, s=16, c=1, hw=16, k=3, p1=8, p2=16, classes=4,
+                 lr=0.05):
+        self.s, self.c, self.hw, self.k = s, c, hw, k
+        self.p1, self.p2, self.classes, self.lr = p1, p2, classes, lr
+        self.h1 = hw - k + 1           # after conv1
+        self.h2 = self.h1 - k + 1      # after conv2
+        self.n1 = dft.next_pow2(hw)
+        self.n2 = dft.next_pow2(self.h1)
+
+    def to_json(self) -> dict:
+        return {k: getattr(self, k) for k in
+                ("s", "c", "hw", "k", "p1", "p2", "classes", "lr")}
+
+
+def cnn_init(cfg: TrainConfig, key: jax.Array) -> dict[str, jax.Array]:
+    """He-initialized parameter pytree (a flat dict, stable order)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    fan1 = cfg.c * cfg.k * cfg.k
+    fan2 = cfg.p1 * cfg.k * cfg.k
+    return {
+        "conv1": jax.random.normal(k1, (cfg.p1, cfg.c, cfg.k, cfg.k),
+                                   jnp.float32) * (2.0 / fan1) ** 0.5,
+        "conv2": jax.random.normal(k2, (cfg.p2, cfg.p1, cfg.k, cfg.k),
+                                   jnp.float32) * (2.0 / fan2) ** 0.5,
+        "dense_w": jax.random.normal(k3, (cfg.p2, cfg.classes),
+                                     jnp.float32) * (1.0 / cfg.p2) ** 0.5,
+        "dense_b": jnp.zeros((cfg.classes,), jnp.float32),
+    }
+
+
+def cnn_apply(cfg: TrainConfig, params: dict, x: jax.Array) -> jax.Array:
+    """Logits for a batch ``(S, c, hw, hw)``."""
+    h = jax.nn.relu(fbfft_conv(x, params["conv1"], cfg.n1))
+    h = jax.nn.relu(fbfft_conv(h, params["conv2"], cfg.n2))
+    h = jnp.mean(h, axis=(2, 3))                     # global average pool
+    return h @ params["dense_w"] + params["dense_b"]
+
+
+def cnn_loss(cfg: TrainConfig, params: dict, x: jax.Array,
+             y: jax.Array) -> jax.Array:
+    """Mean softmax cross-entropy; labels are int32 class ids."""
+    logits = cnn_apply(cfg, params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def train_step(cfg: TrainConfig, params: dict, x: jax.Array, y: jax.Array):
+    """One SGD step; returns (new_params, loss). Lowered as a single HLO
+    module and iterated from Rust — Python never sees the training loop."""
+    loss, grads = jax.value_and_grad(
+        lambda p: cnn_loss(cfg, p, x, y))(params)
+    new = {k: params[k] - cfg.lr * grads[k] for k in params}
+    return new, loss

@@ -1,0 +1,177 @@
+"""Problem-shape vocabulary shared by Layer 2 and the AOT manifest.
+
+Single source of truth for every workload the evaluation uses:
+
+* ``ConvSpec`` — the paper's 5-D problem domain {S, f, f', n, k} extended
+  to rectangular shapes;
+* Table 4's representative layers L1–L5 (exact paper parameters);
+* Table 2's 8,232-configuration sweep grid (Figures 1–6);
+* AlexNet / OverFeat-fast convolutional layer tables (Table 3), using the
+  2014 convnet-benchmarks shapes the paper's Torch harness ran;
+* the §5.4 fbfft-vs-cuFFT convolution comparison grid;
+* ``scale()`` — plane/batch reduction used when executing the big CNN
+  shapes on the CPU-PJRT testbed (documented substitution, DESIGN.md §3).
+
+The Rust side (rust/src/trace/) re-derives the same tables natively; the
+AOT manifest carries serialized specs so the two can cross-check.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+__all__ = [
+    "ConvSpec", "TABLE4_LAYERS", "alexnet_layers", "overfeat_fast_layers",
+    "table2_grid", "sec54_grid", "scale",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvSpec:
+    """One convolutional-layer problem (paper §2 notation).
+
+    ``h, w`` are the *padded* input sizes (paper fn. 3 folds p into the
+    operand); valid-only outputs are ``yh × yw``. ``stride > 1`` marks
+    layers the FFT path does not serve (paper §2: strided FFT out of
+    scope) — the scheduler routes those to the vendor strategy.
+    """
+
+    name: str
+    s: int        # minibatch S
+    f: int        # input planes
+    fo: int       # output planes f'
+    h: int        # (padded) input height
+    w: int        # (padded) input width
+    kh: int       # kernel height
+    kw: int       # kernel width
+    stride: int = 1
+
+    def __post_init__(self):
+        if self.kh > self.h or self.kw > self.w:
+            raise ValueError(f"{self.name}: kernel exceeds input")
+        if min(self.s, self.f, self.fo, self.stride) < 1:
+            raise ValueError(f"{self.name}: non-positive dimension")
+
+    @property
+    def yh(self) -> int:
+        return (self.h - self.kh) // self.stride + 1
+
+    @property
+    def yw(self) -> int:
+        return (self.w - self.kw) // self.stride + 1
+
+    @property
+    def problem_size(self) -> int:
+        """The y-axis of Figures 1–6: S·f·f'."""
+        return self.s * self.f * self.fo
+
+    @property
+    def reductions(self) -> int:
+        """Time-domain multiply-adds of one fprop — the numerator of the
+        paper's TRED/s metric (Table 4 col. 7)."""
+        return self.s * self.f * self.fo * self.kh * self.kw * self.yh * self.yw
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: dict) -> "ConvSpec":
+        return ConvSpec(**d)
+
+
+def scale(spec: ConvSpec, planes: int = 8, batch: int | None = 8) -> ConvSpec:
+    """Reduce plane counts (and optionally the minibatch) by integer
+    factors for CPU-PJRT execution, preserving the spatial shape and
+    therefore the FFT-vs-time-domain character of the layer."""
+    return dataclasses.replace(
+        spec,
+        name=f"{spec.name}@/{planes}",
+        s=min(spec.s, batch) if batch else spec.s,
+        f=max(1, spec.f // planes),
+        fo=max(1, spec.fo // planes),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Table 4 — representative layers (exact paper parameters, S = 128)
+# ---------------------------------------------------------------------------
+
+TABLE4_LAYERS: tuple[ConvSpec, ...] = (
+    # L1: f=3, f'=96, h=w=128, k=11
+    ConvSpec("T4.L1", 128, 3, 96, 128, 128, 11, 11),
+    # L2: f=64, f'=64, h=w=64, k=9
+    ConvSpec("T4.L2", 128, 64, 64, 64, 64, 9, 9),
+    # L3: f=128, f'=128, h=w=32, k=9
+    ConvSpec("T4.L3", 128, 128, 128, 32, 32, 9, 9),
+    # L4: f=128, f'=128, h=w=16, k=7
+    ConvSpec("T4.L4", 128, 128, 128, 16, 16, 7, 7),
+    # L5: f=384, f'=384, h=w=13, k=3
+    ConvSpec("T4.L5", 128, 384, 384, 13, 13, 3, 3),
+)
+
+
+# ---------------------------------------------------------------------------
+# Table 3 — whole-CNN layer tables (2014 convnet-benchmarks shapes)
+# ---------------------------------------------------------------------------
+
+
+def alexnet_layers(s: int = 128) -> tuple[ConvSpec, ...]:
+    """AlexNet (Krizhevsky 2012) convolutional layers; conv1 is strided
+    and is served by the vendor path in the paper's Table 3 runs too."""
+    return (
+        ConvSpec("alexnet.conv1", s, 3, 64, 224, 224, 11, 11, stride=4),
+        ConvSpec("alexnet.conv2", s, 64, 192, 31, 31, 5, 5),    # 27 + 2·2 pad
+        ConvSpec("alexnet.conv3", s, 192, 384, 15, 15, 3, 3),   # 13 + 2·1 pad
+        ConvSpec("alexnet.conv4", s, 384, 256, 15, 15, 3, 3),
+        ConvSpec("alexnet.conv5", s, 256, 256, 15, 15, 3, 3),
+    )
+
+
+def overfeat_fast_layers(s: int = 128) -> tuple[ConvSpec, ...]:
+    """OverFeat *fast* (Sermanet 2014) convolutional layers."""
+    return (
+        ConvSpec("overfeat.conv1", s, 3, 96, 231, 231, 11, 11, stride=4),
+        ConvSpec("overfeat.conv2", s, 96, 256, 28, 28, 5, 5),
+        ConvSpec("overfeat.conv3", s, 256, 512, 14, 14, 3, 3),  # 12 + 2·1 pad
+        ConvSpec("overfeat.conv4", s, 512, 1024, 14, 14, 3, 3),
+        ConvSpec("overfeat.conv5", s, 1024, 1024, 14, 14, 3, 3),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Table 2 — the 8,232-configuration sweep behind Figures 1–6
+# ---------------------------------------------------------------------------
+
+TABLE2_S = (1, 16, 64, 128)
+TABLE2_F = (1, 4, 16, 64, 96, 128, 256)
+TABLE2_FO = (1, 4, 16, 64, 96, 128, 256)
+TABLE2_K = (3, 5, 7, 9, 11, 13)
+TABLE2_Y = (1, 2, 4, 8, 16, 32, 64)
+
+
+def table2_grid() -> Iterator[ConvSpec]:
+    """All 4·7·7·6·7 = 8,232 configurations of Table 2. Parameterized on
+    output size y, so h = y + k - 1 (paper fn. 8)."""
+    for s in TABLE2_S:
+        for f in TABLE2_F:
+            for fo in TABLE2_FO:
+                for k in TABLE2_K:
+                    for y in TABLE2_Y:
+                        n = y + k - 1
+                        yield ConvSpec(
+                            f"sweep.S{s}.f{f}.fo{fo}.k{k}.y{y}",
+                            s, f, fo, n, n, k, k)
+
+
+# ---------------------------------------------------------------------------
+# §5.4 — fbfft-conv vs cuFFT-conv comparison grid
+# ---------------------------------------------------------------------------
+
+
+def sec54_grid() -> Iterator[ConvSpec]:
+    """3×3-kernel experiments over x = h = w ∈ {13,16,27,32,57,64} and
+    p = S = f = f' ∈ {16,32,64,128} (paper §5.4: mean speedup 1.51×)."""
+    for x in (13, 16, 27, 32, 57, 64):
+        for p in (16, 32, 64, 128):
+            yield ConvSpec(f"s54.x{x}.p{p}", p, p, p, x, x, 3, 3)

@@ -1,0 +1,32 @@
+"""Shared pytest fixtures/strategies for the Layer-1 kernel suite.
+
+Interpret-mode Pallas is CPU-numpy speed, so hypothesis profiles keep
+example counts modest and deadlines off; shapes stay in the paper's
+deep-learning regime (transforms 8–64, planes/batches small multiples).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, settings
+
+settings.register_profile(
+    "kernels",
+    max_examples=20,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+settings.load_profile("kernels")
+
+
+@pytest.fixture(scope="session")
+def rng() -> np.random.Generator:
+    return np.random.default_rng(0xFBF)
+
+
+def tolerance(n_fft: int, reduce_dim: int = 1) -> float:
+    """Absolute tolerance scaled to accumulated-roundoff growth: DFT error
+    grows ~sqrt(n·log n)·eps on unit-variance data; the reduction over
+    planes/batch adds another sqrt factor."""
+    return 2e-4 * float(np.sqrt(n_fft * max(1, reduce_dim)))

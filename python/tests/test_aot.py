@@ -1,0 +1,92 @@
+"""AOT pipeline: HLO text emission contract + manifest round trip.
+
+These guard the exact bugs the bring-up hit: elided large constants
+(``constant({...})`` parses as ZEROS in xla_extension 0.5.1) and
+manifest/shape drift between the layers.
+"""
+
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model, specs
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    b = aot.Builder(str(out))
+    aot.build_quickstart(b)
+    aot.build_train(b)
+    b.finish()
+    return out
+
+
+def test_hlo_text_never_elides_constants(built):
+    for p in built.glob("*.hlo.txt"):
+        text = p.read_text()
+        assert "constant({...})" not in text, (
+            f"{p.name}: elided constant — xla_extension 0.5.1 would load "
+            "it as zeros")
+
+
+def test_hlo_text_is_parsable_hlo(built):
+    for p in built.glob("*.hlo.txt"):
+        text = p.read_text()
+        assert text.startswith("HloModule"), p.name
+        assert "ENTRY" in text, p.name
+
+
+def test_manifest_round_trip(built):
+    man = json.loads((built / "manifest.json").read_text())
+    assert man["version"] == 1
+    names = {e["name"] for e in man["entries"]}
+    assert "conv.quickstart.fbfft.fprop" in names
+    assert "train.step" in names
+    for e in man["entries"]:
+        assert (built / e["hlo"]).exists(), e["name"]
+        for t in e["inputs"] + e["outputs"]:
+            assert t["dtype"] in ("f32", "s32")
+            assert all(isinstance(d, int) and d >= 0 for d in t["shape"])
+
+
+def test_conv_entry_shapes_match_spec(built):
+    man = json.loads((built / "manifest.json").read_text())
+    e = next(x for x in man["entries"]
+             if x["name"] == "conv.quickstart.fbfft.fprop")
+    sp = specs.ConvSpec.from_json(e["meta"]["spec"])
+    assert e["inputs"][0]["shape"] == [sp.s, sp.f, sp.h, sp.w]
+    assert e["inputs"][1]["shape"] == [sp.fo, sp.f, sp.kh, sp.kw]
+    assert e["outputs"][0]["shape"] == [sp.s, sp.fo, sp.yh, sp.yw]
+
+
+def test_train_init_tensors_match_python_init(built):
+    cfg = model.TrainConfig()
+    params = model.cnn_init(cfg, jax.random.PRNGKey(0xFB))
+    for k in aot.PARAM_ORDER:
+        data = np.fromfile(built / f"train.init.{k}.bin", "<f4")
+        np.testing.assert_allclose(
+            data, np.asarray(params[k]).ravel(), atol=0)
+
+
+def test_train_step_entry_has_param_order(built):
+    man = json.loads((built / "manifest.json").read_text())
+    e = next(x for x in man["entries"] if x["name"] == "train.step")
+    assert e["meta"]["param_order"] == list(aot.PARAM_ORDER)
+    # 4 params + x + y inputs; 4 params + loss outputs
+    assert len(e["inputs"]) == 6
+    assert len(e["outputs"]) == 5
+
+
+def test_filter_only(tmp_path):
+    b = aot.Builder(str(tmp_path), only="vendor")
+    aot.build_quickstart(b)
+    b.finish()
+    man = json.loads((tmp_path / "manifest.json").read_text())
+    assert all("vendor" in e["name"] for e in man["entries"])
+    assert len(man["entries"]) == 1

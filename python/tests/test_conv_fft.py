@@ -1,0 +1,178 @@
+"""The fbfft convolution pipeline vs time-domain ground truth, all three
+passes + adjoint identities + agreement with the vendor-FFT oracle."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv_fft, pointwise, fbfft, ref
+
+from .conftest import tolerance
+
+
+def _rand(rng, *shape):
+    return rng.standard_normal(shape, dtype=np.float32)
+
+
+def _problem(rng, s, f, fo, h, w, kh, kw):
+    x = jnp.asarray(_rand(rng, s, f, h, w))
+    wei = jnp.asarray(_rand(rng, fo, f, kh, kw))
+    go = jnp.asarray(_rand(rng, s, fo, h - kh + 1, w - kw + 1))
+    return x, wei, go
+
+
+CASES = [
+    # (S, f, f', h, w, kh, kw) — paper-flavored corners
+    (1, 1, 1, 8, 8, 3, 3),       # minimal
+    (2, 3, 4, 9, 9, 3, 3),       # odd input
+    (2, 2, 2, 13, 13, 3, 3),     # §5.4 size x=13
+    (1, 4, 2, 16, 16, 5, 5),     # exact power of two
+    (2, 1, 3, 11, 15, 5, 7),     # rectangular input + kernel
+    (1, 2, 2, 16, 16, 11, 11),   # big kernel (FFT's best case)
+    (4, 2, 2, 7, 7, 7, 7),       # kernel == input (1x1 output)
+]
+
+
+class TestConvFprop:
+    @pytest.mark.parametrize("case", CASES)
+    def test_vs_time_domain(self, rng, case):
+        s, f, fo, h, w, kh, kw = case
+        x, wei, _ = _problem(rng, *case)
+        n = conv_fft.min_fft_size(h, w)
+        got = conv_fft.conv_fprop(x, wei, n)
+        want = ref.conv_fprop_ref(x, wei)
+        assert got.shape == (s, fo, h - kh + 1, w - kw + 1)
+        np.testing.assert_allclose(got, want, atol=tolerance(n * n, f))
+
+    @given(data=st.data())
+    @settings(max_examples=15)
+    def test_random_shapes(self, data):
+        s = data.draw(st.integers(1, 3), "S")
+        f = data.draw(st.integers(1, 4), "f")
+        fo = data.draw(st.integers(1, 4), "f'")
+        kh = data.draw(st.sampled_from([3, 5]), "kh")
+        kw = data.draw(st.sampled_from([3, 5]), "kw")
+        h = data.draw(st.integers(kh, 14), "h")
+        w = data.draw(st.integers(kw, 14), "w")
+        rng = np.random.default_rng(hash((s, f, fo, h, w, kh, kw)) % 2**32)
+        x, wei, _ = _problem(rng, s, f, fo, h, w, kh, kw)
+        n = conv_fft.min_fft_size(h, w)
+        got = conv_fft.conv_fprop(x, wei, n)
+        want = ref.conv_fprop_ref(x, wei)
+        np.testing.assert_allclose(got, want, atol=tolerance(n * n, f))
+
+    def test_oversized_basis_is_equivalent(self, rng):
+        """Interpolating on a larger-than-minimal basis (the autotuner's
+        search axis) must not change the result."""
+        x, wei, _ = _problem(rng, 2, 2, 2, 9, 9, 3, 3)
+        y16 = conv_fft.conv_fprop(x, wei, 16)
+        y32 = conv_fft.conv_fprop(x, wei, 32)
+        np.testing.assert_allclose(y16, y32, atol=tolerance(32 * 32, 2))
+
+
+class TestConvBprop:
+    @pytest.mark.parametrize("case", CASES)
+    def test_vs_time_domain(self, rng, case):
+        s, f, fo, h, w, kh, kw = case
+        _, wei, go = _problem(rng, *case)
+        n = conv_fft.min_fft_size(h, w)
+        got = conv_fft.conv_bprop(go, wei, n, h, w)
+        want = ref.conv_bprop_ref(go, wei, h, w)
+        assert got.shape == (s, f, h, w)
+        np.testing.assert_allclose(got, want, atol=tolerance(n * n, fo))
+
+
+class TestConvAccGrad:
+    @pytest.mark.parametrize("case", CASES)
+    def test_vs_time_domain(self, rng, case):
+        s, f, fo, h, w, kh, kw = case
+        x, _, go = _problem(rng, *case)
+        n = conv_fft.min_fft_size(h, w)
+        got = conv_fft.conv_accgrad(go, x, n, kh, kw)
+        want = ref.conv_accgrad_ref(go, x, kh, kw)
+        assert got.shape == (fo, f, kh, kw)
+        np.testing.assert_allclose(got, want, atol=tolerance(n * n, s))
+
+
+class TestAdjointIdentities:
+    """The three passes are algebraically one trilinear form:
+    ⟨y(x,w), go⟩ = ⟨x, gx(go,w)⟩ = ⟨w, gw(go,x)⟩. Catching a conjugation
+    or clipping bug in any single pass breaks the chain."""
+
+    def test_trilinear_chain(self, rng):
+        s, f, fo, h, w, kh, kw = 2, 3, 2, 10, 10, 3, 3
+        x, wei, go = _problem(rng, s, f, fo, h, w, kh, kw)
+        n = conv_fft.min_fft_size(h, w)
+        y = conv_fft.conv_fprop(x, wei, n)
+        gx = conv_fft.conv_bprop(go, wei, n, h, w)
+        gw = conv_fft.conv_accgrad(go, x, n, kh, kw)
+        a = float(jnp.vdot(y, go))
+        b = float(jnp.vdot(x, gx))
+        c = float(jnp.vdot(wei, gw))
+        assert a == pytest.approx(b, rel=1e-3)
+        assert a == pytest.approx(c, rel=1e-3)
+
+
+class TestPointwiseStage:
+    """CGEMM stage in isolation against dense einsum on complex numbers."""
+
+    def _planes(self, rng, nf, n, r, c):
+        return (jnp.asarray(_rand(rng, nf, n, r, c)),
+                jnp.asarray(_rand(rng, nf, n, r, c)))
+
+    def test_fprop_bin_products(self, rng):
+        nf, n, s, f, fo = 5, 8, 3, 4, 2
+        xf = self._planes(rng, nf, n, s, f)
+        wf = self._planes(rng, nf, n, fo, f)
+        re, im = pointwise.cgemm_fprop(xf, wf)
+        xc = xf[0] + 1j * xf[1]
+        wc = wf[0] + 1j * wf[1]
+        want = jnp.einsum("qnsf,qnjf->qnsj", xc, jnp.conj(wc))
+        np.testing.assert_allclose(re, jnp.real(want), atol=1e-4)
+        np.testing.assert_allclose(im, jnp.imag(want), atol=1e-4)
+
+    def test_bprop_bin_products(self, rng):
+        nf, n, s, f, fo = 5, 8, 3, 4, 2
+        gf = self._planes(rng, nf, n, s, fo)
+        wf = self._planes(rng, nf, n, fo, f)
+        re, im = pointwise.cgemm_bprop(gf, wf)
+        gc = gf[0] + 1j * gf[1]
+        wc = wf[0] + 1j * wf[1]
+        want = jnp.einsum("qnsj,qnjf->qnsf", gc, wc)
+        np.testing.assert_allclose(re, jnp.real(want), atol=1e-4)
+        np.testing.assert_allclose(im, jnp.imag(want), atol=1e-4)
+
+    def test_accgrad_bin_products(self, rng):
+        nf, n, s, f, fo = 5, 8, 3, 4, 2
+        gf = self._planes(rng, nf, n, s, fo)
+        xf = self._planes(rng, nf, n, s, f)
+        re, im = pointwise.cgemm_accgrad(gf, xf)
+        gc = gf[0] + 1j * gf[1]
+        xc = xf[0] + 1j * xf[1]
+        want = jnp.einsum("qnsj,qnsf->qnjf", jnp.conj(gc), xc)
+        np.testing.assert_allclose(re, jnp.real(want), atol=1e-4)
+        np.testing.assert_allclose(im, jnp.imag(want), atol=1e-4)
+
+
+class TestVendorFftOracle:
+    """The jnp.fft strategy (cuFFT analogue) agrees with time domain on
+    non-power-of-two bases — the autotuner's 2^a3^b5^c7^d search space."""
+
+    @pytest.mark.parametrize("n_fft", [9, 12, 14, 15, 18, 20, 21])
+    def test_mixed_radix_bases(self, rng, n_fft):
+        s, f, fo, h, w, kh, kw = 1, 2, 2, 9, 9, 3, 3
+        x, wei, go = _problem(rng, s, f, fo, h, w, kh, kw)
+        np.testing.assert_allclose(
+            ref.conv_fprop_fft_ref(x, wei, n_fft),
+            ref.conv_fprop_ref(x, wei), atol=tolerance(n_fft * n_fft, f))
+        np.testing.assert_allclose(
+            ref.conv_bprop_fft_ref(go, wei, n_fft, h, w),
+            ref.conv_bprop_ref(go, wei, h, w),
+            atol=tolerance(n_fft * n_fft, fo))
+        np.testing.assert_allclose(
+            ref.conv_accgrad_fft_ref(go, x, n_fft, kh, kw),
+            ref.conv_accgrad_ref(go, x, kh, kw),
+            atol=tolerance(n_fft * n_fft, s))

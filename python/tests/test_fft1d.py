@@ -1,0 +1,159 @@
+"""fbfft 1-D forward/inverse kernels vs the jnp.fft oracle + FFT axioms."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile.kernels import dft, fbfft, fbifft, ref
+
+from .conftest import tolerance
+
+POW2 = [8, 16, 32, 64, 128, 256]
+
+
+def _rand(rng, *shape):
+    return rng.standard_normal(shape, dtype=np.float32)
+
+
+class TestFbfft1d:
+    @pytest.mark.parametrize("n_fft", POW2)
+    def test_matches_rfft_full_input(self, rng, n_fft):
+        x = jnp.asarray(_rand(rng, 6, n_fft))
+        re, im = fbfft.fbfft1d(x, n_fft)
+        rr, ri = ref.rfft1d_ref(x, n_fft)
+        np.testing.assert_allclose(re, rr, atol=tolerance(n_fft))
+        np.testing.assert_allclose(im, ri, atol=tolerance(n_fft))
+
+    @given(
+        b=st.integers(1, 9),
+        n_fft=st.sampled_from(POW2[:4]),
+        frac=st.floats(0.2, 1.0),
+    )
+    def test_implicit_padding_equals_explicit(self, b, n_fft, frac):
+        """The sliced-basis implicit pad must equal rfft of the explicitly
+        zero-padded signal — the paper's zero-copy padding contract."""
+        n_in = max(1, int(n_fft * frac))
+        rng = np.random.default_rng(b * 1000 + n_in)
+        x = jnp.asarray(_rand(rng, b, n_in))
+        re, im = fbfft.fbfft1d(x, n_fft)
+        xp = jnp.pad(x, ((0, 0), (0, n_fft - n_in)))
+        rr, ri = ref.rfft1d_ref(xp, n_fft)
+        np.testing.assert_allclose(re, rr, atol=tolerance(n_fft))
+        np.testing.assert_allclose(im, ri, atol=tolerance(n_fft))
+
+    def test_dc_bin_is_sum(self, rng):
+        x = jnp.asarray(_rand(rng, 4, 32))
+        re, im = fbfft.fbfft1d(x, 32)
+        np.testing.assert_allclose(re[:, 0], jnp.sum(x, axis=1), rtol=1e-4)
+        np.testing.assert_allclose(im[:, 0], 0.0, atol=1e-4)
+
+    def test_linearity(self, rng):
+        x = jnp.asarray(_rand(rng, 3, 24))
+        y = jnp.asarray(_rand(rng, 3, 24))
+        a, b = 0.7, -1.3
+        re1, im1 = fbfft.fbfft1d(a * x + b * y, 32)
+        rex, imx = fbfft.fbfft1d(x, 32)
+        rey, imy = fbfft.fbfft1d(y, 32)
+        np.testing.assert_allclose(re1, a * rex + b * rey, atol=tolerance(32))
+        np.testing.assert_allclose(im1, a * imx + b * imy, atol=tolerance(32))
+
+    def test_parseval(self, rng):
+        """Σ|x|² == (1/n)·Σ m_k·|X_k|² with Hermitian fold weights."""
+        n = 64
+        x = jnp.asarray(_rand(rng, 5, n))
+        re, im = fbfft.fbfft1d(x, n)
+        m = jnp.asarray(dft.hermitian_weights(n))
+        lhs = jnp.sum(x * x, axis=1)
+        rhs = jnp.sum(m * (re * re + im * im), axis=1) / n
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-4)
+
+    def test_impulse_is_flat(self):
+        x = jnp.zeros((1, 16)).at[0, 0].set(1.0)
+        re, im = fbfft.fbfft1d(x, 16)
+        np.testing.assert_allclose(re, 1.0, atol=1e-5)
+        np.testing.assert_allclose(im, 0.0, atol=1e-5)
+
+    def test_batch_not_multiple_of_panel(self, rng):
+        """Batch padding must be invisible: rows past the logical batch are
+        dropped, and each row's transform is independent."""
+        x = jnp.asarray(_rand(rng, 130, 16))
+        re, im = fbfft.fbfft1d(x, 16)
+        re1, im1 = fbfft.fbfft1d(x[129:130], 16)
+        np.testing.assert_allclose(re[129:130], re1, atol=1e-5)
+        np.testing.assert_allclose(im[129:130], im1, atol=1e-5)
+        assert re.shape == (130, 9)
+
+    def test_rejects_oversized_input(self):
+        with pytest.raises(ValueError):
+            fbfft.fbfft1d(jnp.zeros((2, 33)), 32)
+
+
+class TestFourStep:
+    @pytest.mark.parametrize("n_fft", [16, 32, 64, 128, 256])
+    def test_matches_dense_path(self, rng, n_fft):
+        """The factorized Cooley–Tukey schedule and the dense MXU-DFT are
+        the same transform."""
+        x = jnp.asarray(_rand(rng, 4, n_fft))
+        re_d, im_d = fbfft.fbfft1d(x, n_fft)
+        re_f, im_f = fbfft.fbfft1d_fourstep(x, n_fft)
+        np.testing.assert_allclose(re_f, re_d, atol=tolerance(n_fft))
+        np.testing.assert_allclose(im_f, im_d, atol=tolerance(n_fft))
+
+    @given(n_fft=st.sampled_from([16, 32, 64]), n_in_frac=st.floats(0.3, 1.0))
+    def test_implicit_padding(self, n_fft, n_in_frac):
+        n_in = max(2, int(n_fft * n_in_frac))
+        rng = np.random.default_rng(n_fft + n_in)
+        x = jnp.asarray(_rand(rng, 3, n_in))
+        re_f, im_f = fbfft.fbfft1d_fourstep(x, n_fft)
+        rr, ri = ref.rfft1d_ref(x, n_fft)
+        np.testing.assert_allclose(re_f, rr, atol=tolerance(n_fft))
+        np.testing.assert_allclose(im_f, ri, atol=tolerance(n_fft))
+
+    def test_factorization_balanced(self):
+        for n in [8, 16, 32, 64, 128, 256, 512, 1024]:
+            n1, n2 = dft.factor_fourstep(n)
+            assert n1 * n2 == n
+            assert n1 <= 32 and n2 <= 32
+
+    def test_digit_reverse_is_permutation(self):
+        for n1, n2 in [(2, 4), (4, 4), (8, 16), (16, 16)]:
+            p = dft.digit_reverse_perm(n1, n2)
+            assert sorted(p.tolist()) == list(range(n1 * n2))
+
+
+class TestFbifft1d:
+    @given(
+        n_fft=st.sampled_from(POW2[:4]),
+        b=st.integers(1, 6),
+        clip_frac=st.floats(0.2, 1.0),
+    )
+    def test_round_trip_with_clip(self, n_fft, b, clip_frac):
+        clip = max(1, int(n_fft * clip_frac))
+        rng = np.random.default_rng(n_fft * b + clip)
+        x = jnp.asarray(_rand(rng, b, n_fft))
+        re, im = fbfft.fbfft1d(x, n_fft)
+        back = fbifft.fbifft1d(re, im, n_fft, clip=clip)
+        np.testing.assert_allclose(back, x[:, :clip], atol=tolerance(n_fft))
+
+    @pytest.mark.parametrize("n_fft", POW2[:4])
+    def test_matches_irfft_oracle(self, rng, n_fft):
+        nf = n_fft // 2 + 1
+        re = jnp.asarray(_rand(rng, 4, nf))
+        im = jnp.asarray(_rand(rng, 4, nf))
+        # a physical half-spectrum has real DC/Nyquist; zero them for the
+        # comparison to be exact (irfft discards them too)
+        im = im.at[:, 0].set(0.0).at[:, -1].set(0.0)
+        got = fbifft.fbifft1d(re, im, n_fft)
+        want = ref.irfft1d_ref(re, im, n_fft, n_fft)
+        np.testing.assert_allclose(got, want, atol=tolerance(n_fft))
+
+    def test_rejects_bad_clip(self):
+        with pytest.raises(ValueError):
+            fbifft.fbifft1d(jnp.zeros((1, 9)), jnp.zeros((1, 9)), 16, clip=17)
+
+    def test_rejects_bad_spectrum_width(self):
+        with pytest.raises(ValueError):
+            fbifft.fbifft1d(jnp.zeros((1, 8)), jnp.zeros((1, 8)), 16)

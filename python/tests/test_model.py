@@ -1,0 +1,127 @@
+"""Layer-2 model: strategy agreement, custom-VJP gradients, CNN training."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model, specs
+
+from .conftest import tolerance
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+SPEC = specs.ConvSpec("t", 2, 3, 4, 12, 12, 3, 3)
+
+
+class TestStrategyAgreement:
+    """Every strategy × pass computes the same function (vendor = truth)."""
+
+    @pytest.mark.parametrize("strategy", [s for s in model.STRATEGIES
+                                          if s != "vendor"])
+    def test_fprop(self, rng, strategy):
+        x = _rand(rng, SPEC.s, SPEC.f, SPEC.h, SPEC.w)
+        w = _rand(rng, SPEC.fo, SPEC.f, SPEC.kh, SPEC.kw)
+        want = model.fprop(SPEC, "vendor", x, w)
+        got = model.fprop(SPEC, strategy, x, w)
+        np.testing.assert_allclose(got, want, atol=tolerance(256, SPEC.f))
+
+    @pytest.mark.parametrize("strategy", [s for s in model.STRATEGIES
+                                          if s != "vendor"])
+    def test_bprop(self, rng, strategy):
+        go = _rand(rng, SPEC.s, SPEC.fo, SPEC.yh, SPEC.yw)
+        w = _rand(rng, SPEC.fo, SPEC.f, SPEC.kh, SPEC.kw)
+        want = model.bprop(SPEC, "vendor", go, w)
+        got = model.bprop(SPEC, strategy, go, w)
+        np.testing.assert_allclose(got, want, atol=tolerance(256, SPEC.fo))
+
+    @pytest.mark.parametrize("strategy", [s for s in model.STRATEGIES
+                                          if s != "vendor"])
+    def test_accgrad(self, rng, strategy):
+        go = _rand(rng, SPEC.s, SPEC.fo, SPEC.yh, SPEC.yw)
+        x = _rand(rng, SPEC.s, SPEC.f, SPEC.h, SPEC.w)
+        want = model.accgrad(SPEC, "vendor", go, x)
+        got = model.accgrad(SPEC, strategy, go, x)
+        np.testing.assert_allclose(got, want, atol=tolerance(256, SPEC.s))
+
+    def test_strided_layers_are_vendor_only(self, rng):
+        strided = specs.ConvSpec("s", 1, 1, 1, 9, 9, 3, 3, stride=2)
+        x = _rand(rng, 1, 1, 9, 9)
+        w = _rand(rng, 1, 1, 3, 3)
+        y = model.fprop(strided, "vendor", x, w)
+        assert y.shape == (1, 1, 4, 4)
+        with pytest.raises(ValueError):
+            model.fprop(strided, "fbfft", x, w)
+
+
+class TestCustomVjp:
+    """fbfft_conv's hand-wired backward (the paper's bprop/accGrad
+    kernels) must equal autodiff of the vendor forward."""
+
+    def test_grads_match_autodiff(self, rng):
+        x = _rand(rng, 2, 2, 10, 10)
+        w = _rand(rng, 3, 2, 3, 3)
+
+        def loss_fbfft(x, w):
+            return jnp.sum(model.fbfft_conv(x, w, 16) ** 2)
+
+        def loss_vendor(x, w):
+            from compile.kernels import ref
+            return jnp.sum(ref.conv_fprop_ref(x, w) ** 2)
+
+        gx1, gw1 = jax.grad(loss_fbfft, argnums=(0, 1))(x, w)
+        gx2, gw2 = jax.grad(loss_vendor, argnums=(0, 1))(x, w)
+        np.testing.assert_allclose(gx1, gx2, atol=2e-2, rtol=1e-3)
+        np.testing.assert_allclose(gw1, gw2, atol=2e-2, rtol=1e-3)
+
+
+class TestCnnTraining:
+    def test_loss_decreases(self, rng):
+        cfg = model.TrainConfig(s=8, hw=16)
+        params = model.cnn_init(cfg, jax.random.PRNGKey(0))
+        step = jax.jit(lambda p, x, y: model.train_step(cfg, p, x, y))
+        losses = []
+        for i in range(30):
+            x = _rand(rng, cfg.s, cfg.c, cfg.hw, cfg.hw)
+            # learnable rule: label = quadrant of the mean-dominant corner
+            y = jnp.asarray(
+                (np.asarray(x)[:, 0, :8, :8].mean((1, 2)) >
+                 np.asarray(x)[:, 0, 8:, 8:].mean((1, 2))).astype(np.int32))
+            params, loss = step(params, x, y)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0], f"{losses[0]} -> {losses[-1]}"
+        assert all(np.isfinite(losses))
+
+    def test_logits_shape(self, rng):
+        cfg = model.TrainConfig()
+        params = model.cnn_init(cfg, jax.random.PRNGKey(1))
+        x = _rand(rng, cfg.s, cfg.c, cfg.hw, cfg.hw)
+        logits = model.cnn_apply(cfg, params, x)
+        assert logits.shape == (cfg.s, cfg.classes)
+
+
+class TestSpecs:
+    def test_table2_grid_is_8232(self):
+        assert sum(1 for _ in specs.table2_grid()) == 8232
+
+    def test_table4_layers_match_paper(self):
+        l2 = specs.TABLE4_LAYERS[1]
+        assert (l2.s, l2.f, l2.fo, l2.h, l2.kh) == (128, 64, 64, 64, 9)
+
+    def test_scale_preserves_spatial(self):
+        s = specs.scale(specs.TABLE4_LAYERS[0], planes=8, batch=8)
+        assert (s.h, s.w, s.kh) == (128, 128, 11)
+        assert s.f == 1 and s.fo == 12  # 3//8 -> 1 (floor), 96/8
+
+    def test_reductions_formula(self):
+        sp = specs.ConvSpec("x", 2, 3, 4, 9, 9, 3, 3)
+        assert sp.reductions == 2 * 3 * 4 * 9 * 49
+
+    def test_rejects_bad_spec(self):
+        with pytest.raises(ValueError):
+            specs.ConvSpec("bad", 1, 1, 1, 3, 3, 5, 5)

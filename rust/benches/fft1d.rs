@@ -1,0 +1,15 @@
+//! Bench target for Figure 7: batched 1-D FFT, fbfft vs vendor.
+//! `cargo bench --bench fft1d` (PJRT section included when artifacts exist).
+use fbfft_repro::reports::fig7_report;
+use fbfft_repro::runtime::Runtime;
+
+fn main() {
+    let rt = Runtime::open("artifacts").ok();
+    match fig7_report(rt.as_ref()) {
+        Ok(r) => println!("{r}"),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

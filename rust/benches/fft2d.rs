@@ -1,0 +1,14 @@
+//! Bench target for Figure 8: batched 2-D FFT with transposed output.
+use fbfft_repro::reports::fig8_report;
+use fbfft_repro::runtime::Runtime;
+
+fn main() {
+    let rt = Runtime::open("artifacts").ok();
+    match fig8_report(rt.as_ref()) {
+        Ok(r) => println!("{r}"),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

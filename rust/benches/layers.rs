@@ -1,0 +1,14 @@
+//! Bench target for Table 4: representative layers L1-L5.
+use fbfft_repro::reports::table4_report;
+use fbfft_repro::runtime::Runtime;
+
+fn main() {
+    let rt = Runtime::open("artifacts").ok();
+    match table4_report(rt.as_ref()) {
+        Ok(r) => println!("{r}"),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Bench target for Figures 1-6: the 8,232-configuration sweep (model
+//! plane + measured PJRT anchor subset).
+use fbfft_repro::reports::{fig16_report, sweep::fig16_measured};
+use fbfft_repro::runtime::Runtime;
+
+fn main() {
+    println!("{}", fig16_report());
+    match Runtime::open("artifacts") {
+        Ok(rt) => match fig16_measured(&rt) {
+            Ok(r) => println!("{r}"),
+            Err(e) => eprintln!("measured subset failed: {e:#}"),
+        },
+        Err(e) => eprintln!("(no artifacts: {e:#}; model plane only)"),
+    }
+}

@@ -1,0 +1,14 @@
+//! Bench target for Sec 6: tiled vs untiled decomposition, plus the
+//! autotuner demonstration (Sec 3.4).
+use fbfft_repro::reports::tables::{autotune_report, tiling_report};
+use fbfft_repro::runtime::Runtime;
+
+fn main() {
+    let rt = Runtime::open("artifacts").ok();
+    match tiling_report(rt.as_ref()) {
+        Ok(r) => println!("{r}"),
+        Err(e) => eprintln!("tiling failed: {e:#}"),
+    }
+    println!();
+    println!("Sec 3.4 autotuner:\n{}", autotune_report());
+}

@@ -1,0 +1,287 @@
+//! Direct time-domain convolution — the straightforward O(S·f·f'·k²·y²)
+//! computation, multithreaded over the pass's natural parallel dimension.
+//! This is the ccn2-analogue baseline of Table 3 and the ground-truth
+//! oracle every other engine is tested against.
+
+use std::thread;
+
+use super::problem::ConvProblem;
+
+/// Threads used by the host engines (bounded; the benches prefer stable
+/// numbers over max throughput).
+pub fn threads() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
+}
+
+/// Split `n` items into per-thread (start, len) chunks.
+fn chunks(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.min(n.max(1));
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < extra);
+        out.push((start, len));
+        start += len;
+    }
+    out
+}
+
+/// fprop: `y[s,j] = Σ_i x[s,i] ⋆ w[j,i]` (valid cross-correlation).
+/// Parallel over the minibatch.
+pub fn fprop(p: &ConvProblem, x: &[f32], wei: &[f32]) -> Vec<f32> {
+    assert_eq!(x.len(), p.input_len());
+    assert_eq!(wei.len(), p.weight_len());
+    let (yh, yw) = (p.yh(), p.yw());
+    let (f, fo, h, w, kh, kw, st) =
+        (p.f, p.fo, p.h, p.w, p.kh, p.kw, p.stride);
+    let mut out = vec![0f32; p.output_len()];
+    let sample = move |xs: &[f32], os: &mut [f32]| {
+        for j in 0..fo {
+            for i in 0..f {
+                let wp = &wei[(j * f + i) * kh * kw..][..kh * kw];
+                let xp = &xs[i * h * w..][..h * w];
+                for a in 0..yh {
+                    for b in 0..yw {
+                        let mut acc = 0f32;
+                        for u in 0..kh {
+                            let xrow = &xp[(a * st + u) * w + b * st..];
+                            let wrow = &wp[u * kw..][..kw];
+                            for (v, wv) in wrow.iter().enumerate() {
+                                acc += xrow[v] * *wv;
+                            }
+                        }
+                        os[(j * yh + a) * yw + b] += acc;
+                    }
+                }
+            }
+        }
+    };
+    let in_stride = f * h * w;
+    let out_stride = fo * yh * yw;
+    thread::scope(|scope| {
+        let mut rem: &mut [f32] = &mut out;
+        for (start, len) in chunks(p.s, threads()) {
+            let (head, tail) = rem.split_at_mut(len * out_stride);
+            rem = tail;
+            let x = &x;
+            let sample = &sample;
+            scope.spawn(move || {
+                for si in 0..len {
+                    sample(&x[(start + si) * in_stride..][..in_stride],
+                           &mut head[si * out_stride..][..out_stride]);
+                }
+            });
+        }
+    });
+    out
+}
+
+/// bprop: `gx[s,i] = Σ_j go[s,j] * w[j,i]` (full convolution).
+/// Parallel over the minibatch.
+pub fn bprop(p: &ConvProblem, go: &[f32], wei: &[f32]) -> Vec<f32> {
+    assert_eq!(p.stride, 1, "strided bprop is vendor-only (paper §2)");
+    assert_eq!(go.len(), p.output_len());
+    assert_eq!(wei.len(), p.weight_len());
+    let (yh, yw) = (p.yh(), p.yw());
+    let (f, fo, h, w, kh, kw) = (p.f, p.fo, p.h, p.w, p.kh, p.kw);
+    let mut out = vec![0f32; p.input_len()];
+    let go_stride = fo * yh * yw;
+    let gx_stride = f * h * w;
+    thread::scope(|scope| {
+        let mut rem: &mut [f32] = &mut out;
+        for (start, len) in chunks(p.s, threads()) {
+            let (head, tail) = rem.split_at_mut(len * gx_stride);
+            rem = tail;
+            let go = &go;
+            scope.spawn(move || {
+                for si in 0..len {
+                    let gos = &go[(start + si) * go_stride..][..go_stride];
+                    let gxs = &mut head[si * gx_stride..][..gx_stride];
+                    for i in 0..f {
+                        let gxp = &mut gxs[i * h * w..][..h * w];
+                        for j in 0..fo {
+                            let gop = &gos[j * yh * yw..][..yh * yw];
+                            let wp = &wei[(j * f + i) * kh * kw..][..kh * kw];
+                            // scatter: each gradient pixel spreads over k²
+                            for a in 0..yh {
+                                for b in 0..yw {
+                                    let g = gop[a * yw + b];
+                                    if g == 0.0 {
+                                        continue;
+                                    }
+                                    for u in 0..kh {
+                                        let row = &mut gxp[(a + u) * w + b..];
+                                        for (v, wv) in
+                                            wp[u * kw..][..kw].iter().enumerate()
+                                        {
+                                            row[v] += g * *wv;
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+    out
+}
+
+/// accGrad: `gw[j,i] = Σ_s go[s,j] ⋆ x[s,i]` (minibatch reduced).
+/// Parallel over output planes j.
+pub fn accgrad(p: &ConvProblem, go: &[f32], x: &[f32]) -> Vec<f32> {
+    assert_eq!(p.stride, 1, "strided accGrad is vendor-only (paper §2)");
+    assert_eq!(go.len(), p.output_len());
+    assert_eq!(x.len(), p.input_len());
+    let (yh, yw) = (p.yh(), p.yw());
+    let (f, fo, h, w, kh, kw, s) = (p.f, p.fo, p.h, p.w, p.kh, p.kw, p.s);
+    let mut out = vec![0f32; p.weight_len()];
+    let gw_stride = f * kh * kw;
+    thread::scope(|scope| {
+        let mut rem: &mut [f32] = &mut out;
+        for (start, len) in chunks(fo, threads()) {
+            let (head, tail) = rem.split_at_mut(len * gw_stride);
+            rem = tail;
+            let (go, x) = (&go, &x);
+            scope.spawn(move || {
+                for jj in 0..len {
+                    let j = start + jj;
+                    let gwj = &mut head[jj * gw_stride..][..gw_stride];
+                    for si in 0..s {
+                        let gop = &go[(si * fo + j) * yh * yw..][..yh * yw];
+                        for i in 0..f {
+                            let xp = &x[(si * f + i) * h * w..][..h * w];
+                            let gwp = &mut gwj[i * kh * kw..][..kh * kw];
+                            for u in 0..kh {
+                                for v in 0..kw {
+                                    let mut acc = 0f32;
+                                    for a in 0..yh {
+                                        let xrow = &xp[(a + u) * w + v..];
+                                        let grow = &gop[a * yw..][..yw];
+                                        for (b, g) in grow.iter().enumerate() {
+                                            acc += xrow[b] * *g;
+                                        }
+                                    }
+                                    gwp[u * kw + v] += acc;
+                                }
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// scalar reference: literal transcription of the paper's §2 formulas,
+    /// no threading, no reuse — the oracle for the oracle.
+    fn fprop_scalar(p: &ConvProblem, x: &[f32], wei: &[f32]) -> Vec<f32> {
+        let (yh, yw) = (p.yh(), p.yw());
+        let mut y = vec![0f32; p.output_len()];
+        for s in 0..p.s {
+            for j in 0..p.fo {
+                for a in 0..yh {
+                    for b in 0..yw {
+                        let mut acc = 0f32;
+                        for i in 0..p.f {
+                            for u in 0..p.kh {
+                                for v in 0..p.kw {
+                                    let xi = x[((s * p.f + i) * p.h
+                                        + (a * p.stride + u)) * p.w
+                                        + (b * p.stride + v)];
+                                    let wv = wei[((j * p.f + i) * p.kh + u)
+                                        * p.kw + v];
+                                    acc += xi * wv;
+                                }
+                            }
+                        }
+                        y[((s * p.fo + j) * yh + a) * yw + b] = acc;
+                    }
+                }
+            }
+        }
+        y
+    }
+
+    #[test]
+    fn fprop_matches_scalar_reference() {
+        let mut rng = Rng::new(1);
+        for p in [ConvProblem::square(2, 3, 4, 9, 3),
+                  ConvProblem::new(1, 2, 2, 8, 10, 3, 5),
+                  ConvProblem::square(33, 1, 1, 5, 5)] {
+            let x = rng.normal_vec(p.input_len());
+            let wei = rng.normal_vec(p.weight_len());
+            let got = fprop(&p, &x, &wei);
+            let want = fprop_scalar(&p, &x, &wei);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn strided_fprop() {
+        let mut p = ConvProblem::square(1, 1, 1, 7, 3);
+        p.stride = 2;
+        assert_eq!((p.yh(), p.yw()), (3, 3));
+        let x: Vec<f32> = (0..49).map(|i| i as f32).collect();
+        let wei = vec![0., 0., 0., 0., 1., 0., 0., 0., 0.]; // center tap
+        let y = fprop(&p, &x, &wei);
+        // center of window at (2a+1, 2b+1)
+        assert_eq!(y, vec![8., 10., 12., 22., 24., 26., 36., 38., 40.]);
+    }
+
+    #[test]
+    fn adjoint_fprop_bprop() {
+        // ⟨fprop(x,w), go⟩ == ⟨x, bprop(go,w)⟩
+        let p = ConvProblem::square(2, 3, 2, 8, 3);
+        let mut rng = Rng::new(5);
+        let x = rng.normal_vec(p.input_len());
+        let wei = rng.normal_vec(p.weight_len());
+        let go = rng.normal_vec(p.output_len());
+        let y = fprop(&p, &x, &wei);
+        let gx = bprop(&p, &go, &wei);
+        let a: f64 = y.iter().zip(&go).map(|(u, v)| (*u * *v) as f64).sum();
+        let b: f64 = x.iter().zip(&gx).map(|(u, v)| (*u * *v) as f64).sum();
+        assert!((a - b).abs() < 1e-2 * a.abs().max(1.0), "{a} vs {b}");
+    }
+
+    #[test]
+    fn adjoint_fprop_accgrad() {
+        // ⟨fprop(x,w), go⟩ == ⟨w, accgrad(go,x)⟩
+        let p = ConvProblem::square(3, 2, 2, 7, 3);
+        let mut rng = Rng::new(6);
+        let x = rng.normal_vec(p.input_len());
+        let wei = rng.normal_vec(p.weight_len());
+        let go = rng.normal_vec(p.output_len());
+        let y = fprop(&p, &x, &wei);
+        let gw = accgrad(&p, &go, &x);
+        let a: f64 = y.iter().zip(&go).map(|(u, v)| (*u * *v) as f64).sum();
+        let b: f64 = wei.iter().zip(&gw).map(|(u, v)| (*u * *v) as f64).sum();
+        assert!((a - b).abs() < 1e-2 * a.abs().max(1.0), "{a} vs {b}");
+    }
+
+    #[test]
+    fn identity_kernel_fprop() {
+        let p = ConvProblem::square(1, 2, 2, 5, 1);
+        let mut rng = Rng::new(7);
+        let x = rng.normal_vec(p.input_len());
+        // w[j,i,0,0] = δ_{ij}
+        let mut wei = vec![0f32; p.weight_len()];
+        wei[0] = 1.0;
+        wei[3] = 1.0;
+        let y = fprop(&p, &x, &wei);
+        for (g, w) in y.iter().zip(&x) {
+            assert!((g - w).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,418 @@
+//! The frequency-domain convolution pipeline of Table 1, staged exactly
+//! as the paper stages it so the Table-5 breakdown can be measured:
+//!
+//! ```text
+//!   FFT A → TRANS A → FFT B → TRANS B → CGEMM → TRANS C → IFFT C
+//! ```
+//!
+//! Two modes:
+//!
+//! * [`FftMode::Vendor`] — the cuFFT-based implementation of §3: the
+//!   operands are **explicitly copied into zero-padded buffers** (§5.1:
+//!   'one may need to allocate a duplicate, larger memory region and copy
+//!   data from non-padded tensors to padded tensors'), transformed with
+//!   the general planner, then **explicitly transposed** BDHW→HWBD for
+//!   the per-bin CGEMM and back (the Cgeam steps of Table 1).
+//! * [`FftMode::Fbfft`] — the §5 implementation: implicit zero-copy
+//!   padding inside `fbfft_host`, output *born* in the HWBD bin-major
+//!   layout (fused transpose) and clipped on the way out (fused clip), so
+//!   the three TRANS stages identically vanish.
+//!
+//! All three passes share the bin-major CGEMM with the conjugation
+//! pattern of §2 (fprop: conj W; bprop: none; accGrad: conj Go, reduce S).
+
+use std::time::{Duration, Instant};
+
+use crate::fft::fbfft_host;
+use crate::fft::fft2d::{irfft2, rfft2};
+use crate::fft::real::rfft_len;
+use crate::fft::C32;
+
+use super::problem::ConvProblem;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FftMode {
+    /// cuFFT-analogue: explicit padding, planner FFTs, explicit transposes.
+    Vendor,
+    /// fbfft: implicit padding, fused transpose + clip, power-of-two only.
+    Fbfft,
+}
+
+/// Wall-clock per Table-1 stage (Table 5's columns). Stages elided by
+/// fbfft's fused layouts report zero.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageTimings {
+    pub fft_a: Duration,
+    pub trans_a: Duration,
+    pub fft_b: Duration,
+    pub trans_b: Duration,
+    pub cgemm: Duration,
+    pub trans_c: Duration,
+    pub ifft_c: Duration,
+}
+
+impl StageTimings {
+    pub fn total(&self) -> Duration {
+        self.fft_a + self.trans_a + self.fft_b + self.trans_b + self.cgemm
+            + self.trans_c + self.ifft_c
+    }
+
+    pub fn add(&mut self, o: &StageTimings) {
+        self.fft_a += o.fft_a;
+        self.trans_a += o.trans_a;
+        self.fft_b += o.fft_b;
+        self.trans_b += o.trans_b;
+        self.cgemm += o.cgemm;
+        self.trans_c += o.trans_c;
+        self.ifft_c += o.ifft_c;
+    }
+}
+
+/// Frequency tensor in **bin-major** layout: `bins × rows`, one small
+/// matrix slab per frequency bin (`rows` = S·f etc.). `bins = nf·n`.
+struct FreqTensor {
+    data: Vec<C32>,
+    bins: usize,
+    rows: usize,
+}
+
+pub struct FftConvEngine {
+    pub mode: FftMode,
+    pub n_fft: usize,
+}
+
+impl FftConvEngine {
+    pub fn new(mode: FftMode, n_fft: usize) -> Self {
+        if mode == FftMode::Fbfft {
+            assert!(n_fft.is_power_of_two() && n_fft <= fbfft_host::MAX_N,
+                    "fbfft basis must be a power of two <= 256, got {n_fft}");
+        }
+        FftConvEngine { mode, n_fft }
+    }
+
+    /// fbfft's default basis for a problem (next pow2 covering the input).
+    pub fn fbfft_for(p: &ConvProblem) -> Self {
+        Self::new(FftMode::Fbfft, p.h.max(p.w).next_power_of_two())
+    }
+
+    fn bins(&self) -> usize {
+        rfft_len(self.n_fft) * self.n_fft
+    }
+
+    // ---- forward transforms -------------------------------------------
+
+    /// Transform `count` planes of `h_in × w_in` into bin-major frequency
+    /// layout. Vendor mode pays the explicit pad + transpose; fbfft mode
+    /// emits bin-major directly.
+    fn forward(&self, planes: &[f32], h_in: usize, w_in: usize,
+               count: usize, fft_t: &mut Duration, trans_t: &mut Duration)
+               -> FreqTensor {
+        let n = self.n_fft;
+        let nf = rfft_len(n);
+        let bins = self.bins();
+        match self.mode {
+            FftMode::Fbfft => {
+                let t0 = Instant::now();
+                let plan = fbfft_host::cached(n);
+                let mut data = vec![C32::ZERO; bins * count];
+                plan.rfft2_batch_transposed(planes, h_in, w_in, count,
+                                            &mut data);
+                *fft_t += t0.elapsed();
+                // fused transpose: TRANS stage does not exist
+                FreqTensor { data, bins, rows: count }
+            }
+            FftMode::Vendor => {
+                let t0 = Instant::now();
+                // the duplicate padded tensor cuFFT forces (§5.1)
+                let mut padded = vec![0f32; count * n * n];
+                for b in 0..count {
+                    for r in 0..h_in {
+                        let dst = (b * n + r) * n;
+                        let src = (b * h_in + r) * w_in;
+                        padded[dst..dst + w_in]
+                            .copy_from_slice(&planes[src..src + w_in]);
+                    }
+                }
+                // plane-major transforms (BDHW frequency layout)
+                let mut plane_major = vec![C32::ZERO; count * bins];
+                for b in 0..count {
+                    let f = rfft2(&padded[b * n * n..(b + 1) * n * n],
+                                  n, n, n);
+                    plane_major[b * bins..(b + 1) * bins]
+                        .copy_from_slice(&f);
+                }
+                *fft_t += t0.elapsed();
+                // explicit BDHW -> HWBD transposition (the Cgeam step)
+                let t1 = Instant::now();
+                let mut data = vec![C32::ZERO; bins * count];
+                for b in 0..count {
+                    let src = &plane_major[b * bins..(b + 1) * bins];
+                    for q in 0..bins {
+                        data[q * count + b] = src[q];
+                    }
+                }
+                *trans_t += t1.elapsed();
+                let _ = nf;
+                FreqTensor { data, bins, rows: count }
+            }
+        }
+    }
+
+    /// Inverse-transform a bin-major frequency tensor of `count` planes,
+    /// clipping each to `clip_h × clip_w`.
+    fn inverse(&self, freq: &FreqTensor, clip_h: usize, clip_w: usize,
+               trans_t: &mut Duration, ifft_t: &mut Duration) -> Vec<f32> {
+        let n = self.n_fft;
+        let nf = rfft_len(n);
+        let count = freq.rows;
+        match self.mode {
+            FftMode::Fbfft => {
+                let t0 = Instant::now();
+                let plan = fbfft_host::cached(n);
+                let mut out = vec![0f32; count * clip_h * clip_w];
+                plan.irfft2_batch_transposed(&freq.data, count, clip_h,
+                                             clip_w, &mut out);
+                *ifft_t += t0.elapsed();
+                out
+            }
+            FftMode::Vendor => {
+                // explicit HWBD -> BDHW transposition first
+                let t0 = Instant::now();
+                let mut plane_major = vec![C32::ZERO; count * freq.bins];
+                for q in 0..freq.bins {
+                    for b in 0..count {
+                        plane_major[b * freq.bins + q] =
+                            freq.data[q * count + b];
+                    }
+                }
+                *trans_t += t0.elapsed();
+                let t1 = Instant::now();
+                let mut out = vec![0f32; count * clip_h * clip_w];
+                for b in 0..count {
+                    // vendor bins are (kh, kw) row-major — exactly the
+                    // layout irfft2 consumes (rfft2 produced them)
+                    let src = &plane_major[b * freq.bins..(b + 1) * freq.bins];
+                    let img = irfft2(src, n, clip_h, clip_w);
+                    out[b * clip_h * clip_w..(b + 1) * clip_h * clip_w]
+                        .copy_from_slice(&img);
+                }
+                *ifft_t += t1.elapsed();
+                let _ = nf;
+                out
+            }
+        }
+    }
+
+    // ---- the three passes ----------------------------------------------
+
+    /// fprop: `Out_q = In_q · conj(W_q)ᵀ` per bin, clip to (yh, yw).
+    pub fn fprop(&self, p: &ConvProblem, x: &[f32], wei: &[f32])
+                 -> (Vec<f32>, StageTimings) {
+        assert_eq!(p.stride, 1, "strided FFT conv out of scope (paper §2)");
+        let mut t = StageTimings::default();
+        let xf = self.forward(x, p.h, p.w, p.s * p.f,
+                              &mut t.fft_a, &mut t.trans_a);
+        let wf = self.forward(wei, p.kh, p.kw, p.fo * p.f,
+                              &mut t.fft_b, &mut t.trans_b);
+        let t0 = Instant::now();
+        let mut of = FreqTensor {
+            data: vec![C32::ZERO; self.bins() * p.s * p.fo],
+            bins: self.bins(),
+            rows: p.s * p.fo,
+        };
+        for q in 0..self.bins() {
+            let inq = &xf.data[q * xf.rows..][..xf.rows];       // S×f
+            let wq = &wf.data[q * wf.rows..][..wf.rows];        // fo×f
+            let oq = &mut of.data[q * p.s * p.fo..][..p.s * p.fo];
+            for s in 0..p.s {
+                let xrow = &inq[s * p.f..][..p.f];
+                for j in 0..p.fo {
+                    let wrow = &wq[j * p.f..][..p.f];
+                    let mut acc = C32::ZERO;
+                    for i in 0..p.f {
+                        acc = acc.mul_add(xrow[i], wrow[i].conj());
+                    }
+                    oq[s * p.fo + j] = acc;
+                }
+            }
+        }
+        t.cgemm += t0.elapsed();
+        let out = self.inverse(&of, p.yh(), p.yw(),
+                               &mut t.trans_c, &mut t.ifft_c);
+        (out, t)
+    }
+
+    /// bprop: `Gx_q = Go_q · W_q` per bin (no conjugation), clip (h, w).
+    pub fn bprop(&self, p: &ConvProblem, go: &[f32], wei: &[f32])
+                 -> (Vec<f32>, StageTimings) {
+        assert_eq!(p.stride, 1, "strided FFT conv out of scope (paper §2)");
+        let mut t = StageTimings::default();
+        let gof = self.forward(go, p.yh(), p.yw(), p.s * p.fo,
+                               &mut t.fft_a, &mut t.trans_a);
+        let wf = self.forward(wei, p.kh, p.kw, p.fo * p.f,
+                              &mut t.fft_b, &mut t.trans_b);
+        let t0 = Instant::now();
+        let mut gxf = FreqTensor {
+            data: vec![C32::ZERO; self.bins() * p.s * p.f],
+            bins: self.bins(),
+            rows: p.s * p.f,
+        };
+        for q in 0..self.bins() {
+            let gq = &gof.data[q * gof.rows..][..gof.rows];     // S×fo
+            let wq = &wf.data[q * wf.rows..][..wf.rows];        // fo×f
+            let oq = &mut gxf.data[q * p.s * p.f..][..p.s * p.f];
+            for s in 0..p.s {
+                let grow = &gq[s * p.fo..][..p.fo];
+                let orow = &mut oq[s * p.f..][..p.f];
+                for (j, g) in grow.iter().enumerate() {
+                    let wrow = &wq[j * p.f..][..p.f];
+                    for i in 0..p.f {
+                        orow[i] = orow[i].mul_add(*g, wrow[i]);
+                    }
+                }
+            }
+        }
+        t.cgemm += t0.elapsed();
+        let out = self.inverse(&gxf, p.h, p.w, &mut t.trans_c, &mut t.ifft_c);
+        (out, t)
+    }
+
+    /// accGrad: `Gw_q = conj(Go_q)ᵀ · X_q` per bin (minibatch reduced),
+    /// clip (kh, kw).
+    pub fn accgrad(&self, p: &ConvProblem, go: &[f32], x: &[f32])
+                   -> (Vec<f32>, StageTimings) {
+        assert_eq!(p.stride, 1, "strided FFT conv out of scope (paper §2)");
+        let mut t = StageTimings::default();
+        let gof = self.forward(go, p.yh(), p.yw(), p.s * p.fo,
+                               &mut t.fft_a, &mut t.trans_a);
+        let xf = self.forward(x, p.h, p.w, p.s * p.f,
+                              &mut t.fft_b, &mut t.trans_b);
+        let t0 = Instant::now();
+        let mut gwf = FreqTensor {
+            data: vec![C32::ZERO; self.bins() * p.fo * p.f],
+            bins: self.bins(),
+            rows: p.fo * p.f,
+        };
+        for q in 0..self.bins() {
+            let gq = &gof.data[q * gof.rows..][..gof.rows];     // S×fo
+            let xq = &xf.data[q * xf.rows..][..xf.rows];        // S×f
+            let oq = &mut gwf.data[q * p.fo * p.f..][..p.fo * p.f];
+            for s in 0..p.s {
+                let grow = &gq[s * p.fo..][..p.fo];
+                let xrow = &xq[s * p.f..][..p.f];
+                for (j, g) in grow.iter().enumerate() {
+                    let gc = g.conj();
+                    let orow = &mut oq[j * p.f..][..p.f];
+                    for i in 0..p.f {
+                        orow[i] = orow[i].mul_add(gc, xrow[i]);
+                    }
+                }
+            }
+        }
+        t.cgemm += t0.elapsed();
+        let out = self.inverse(&gwf, p.kh, p.kw,
+                               &mut t.trans_c, &mut t.ifft_c);
+        (out, t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::direct;
+    use crate::util::Rng;
+
+    fn close(a: &[f32], b: &[f32], tol: f32) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() < tol, "idx {i}: {x} vs {y}");
+        }
+    }
+
+    fn problems() -> Vec<ConvProblem> {
+        vec![
+            ConvProblem::square(2, 3, 4, 9, 3),
+            ConvProblem::new(1, 2, 2, 13, 11, 5, 3),
+            ConvProblem::square(3, 1, 1, 8, 8),
+        ]
+    }
+
+    #[test]
+    fn fbfft_fprop_matches_direct() {
+        let mut rng = Rng::new(20);
+        for p in problems() {
+            let eng = FftConvEngine::fbfft_for(&p);
+            let x = rng.normal_vec(p.input_len());
+            let wei = rng.normal_vec(p.weight_len());
+            let (got, timings) = eng.fprop(&p, &x, &wei);
+            close(&got, &direct::fprop(&p, &x, &wei), 2e-3);
+            // fbfft elides every TRANS stage
+            assert_eq!(timings.trans_a, Duration::ZERO);
+            assert_eq!(timings.trans_b, Duration::ZERO);
+            assert_eq!(timings.trans_c, Duration::ZERO);
+        }
+    }
+
+    #[test]
+    fn vendor_fprop_matches_direct_pow2_and_smooth() {
+        let mut rng = Rng::new(21);
+        let p = ConvProblem::square(2, 2, 3, 9, 3);
+        for n in [16usize, 12, 10] {
+            // vendor path supports arbitrary smooth bases >= h
+            let eng = FftConvEngine::new(FftMode::Vendor, n);
+            let x = rng.normal_vec(p.input_len());
+            let wei = rng.normal_vec(p.weight_len());
+            let (got, _) = eng.fprop(&p, &x, &wei);
+            close(&got, &direct::fprop(&p, &x, &wei), 2e-3);
+        }
+    }
+
+    #[test]
+    fn both_modes_bprop_match_direct() {
+        let mut rng = Rng::new(22);
+        for p in problems() {
+            let go = rng.normal_vec(p.output_len());
+            let wei = rng.normal_vec(p.weight_len());
+            let want = direct::bprop(&p, &go, &wei);
+            let (a, _) = FftConvEngine::fbfft_for(&p).bprop(&p, &go, &wei);
+            close(&a, &want, 2e-3);
+            let n = p.h.max(p.w).next_power_of_two();
+            let (b, _) = FftConvEngine::new(FftMode::Vendor, n)
+                .bprop(&p, &go, &wei);
+            close(&b, &want, 2e-3);
+        }
+    }
+
+    #[test]
+    fn both_modes_accgrad_match_direct() {
+        let mut rng = Rng::new(23);
+        for p in problems() {
+            let go = rng.normal_vec(p.output_len());
+            let x = rng.normal_vec(p.input_len());
+            let want = direct::accgrad(&p, &go, &x);
+            let (a, _) = FftConvEngine::fbfft_for(&p).accgrad(&p, &go, &x);
+            close(&a, &want, 3e-3);
+            let n = p.h.max(p.w).next_power_of_two();
+            let (b, _) = FftConvEngine::new(FftMode::Vendor, n)
+                .accgrad(&p, &go, &x);
+            close(&b, &want, 3e-3);
+        }
+    }
+
+    #[test]
+    fn oversized_basis_equivalent() {
+        let p = ConvProblem::square(1, 2, 2, 9, 3);
+        let mut rng = Rng::new(24);
+        let x = rng.normal_vec(p.input_len());
+        let wei = rng.normal_vec(p.weight_len());
+        let (a, _) = FftConvEngine::new(FftMode::Fbfft, 16).fprop(&p, &x, &wei);
+        let (b, _) = FftConvEngine::new(FftMode::Fbfft, 32).fprop(&p, &x, &wei);
+        close(&a, &b, 2e-3);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn fbfft_rejects_non_pow2_basis() {
+        FftConvEngine::new(FftMode::Fbfft, 12);
+    }
+}

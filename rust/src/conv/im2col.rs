@@ -1,0 +1,191 @@
+//! Matrix-unrolling convolution (Chellapilla 2006) on the in-tree SGEMM —
+//! the cuDNN-analogue engine (paper §2: 'the strategy followed by many
+//! implementors'). All three passes; bprop and accGrad reuse the fprop
+//! machinery through the transposed-conv and batch-as-reduction
+//! identities, the same algebra `compile/model.py` uses at Layer 2.
+
+use super::gemm::sgemm;
+use super::problem::ConvProblem;
+
+/// Unroll one sample's input planes into the patch matrix
+/// `(yh·yw) × (f·kh·kw)`, taps fastest (i, u, v) to match the
+/// `(fo) × (f·kh·kw)` weight matrix layout.
+fn unroll(p: &ConvProblem, xs: &[f32], patches: &mut [f32]) {
+    let (yh, yw) = (p.yh(), p.yw());
+    let cols = p.f * p.kh * p.kw;
+    debug_assert_eq!(patches.len(), yh * yw * cols);
+    for a in 0..yh {
+        for b in 0..yw {
+            let row = &mut patches[(a * yw + b) * cols..][..cols];
+            let mut c = 0;
+            for i in 0..p.f {
+                let plane = &xs[i * p.h * p.w..];
+                for u in 0..p.kh {
+                    let src = &plane[(a * p.stride + u) * p.w
+                        + b * p.stride..][..p.kw];
+                    row[c..c + p.kw].copy_from_slice(src);
+                    c += p.kw;
+                }
+            }
+        }
+    }
+}
+
+/// fprop via unroll + GEMM: per sample,
+/// `out(fo × yh·yw) = W(fo × f·k²) · patchesᵀ` — computed as
+/// `patches · Wᵀ` then written transposed to keep BDHW output layout.
+pub fn fprop(p: &ConvProblem, x: &[f32], wei: &[f32]) -> Vec<f32> {
+    assert_eq!(x.len(), p.input_len());
+    assert_eq!(wei.len(), p.weight_len());
+    let (yh, yw) = (p.yh(), p.yw());
+    let cols = p.f * p.kh * p.kw;
+    let pixels = yh * yw;
+    // W transposed once: (f·k²) × fo
+    let mut wt = vec![0f32; cols * p.fo];
+    for j in 0..p.fo {
+        for c in 0..cols {
+            wt[c * p.fo + j] = wei[j * cols + c];
+        }
+    }
+    let mut out = vec![0f32; p.output_len()];
+    let mut patches = vec![0f32; pixels * cols];
+    let mut prod = vec![0f32; pixels * p.fo];
+    for s in 0..p.s {
+        unroll(p, &x[s * p.f * p.h * p.w..][..p.f * p.h * p.w],
+               &mut patches);
+        sgemm(pixels, cols, p.fo, &patches, &wt, &mut prod, false);
+        // transpose (pixels × fo) -> (fo × pixels)
+        let os = &mut out[s * p.fo * pixels..][..p.fo * pixels];
+        for px in 0..pixels {
+            for j in 0..p.fo {
+                os[j * pixels + px] = prod[px * p.fo + j];
+            }
+        }
+    }
+    out
+}
+
+/// bprop by the transposed-conv identity: pad the gradient by k-1,
+/// correlate with the flipped, plane-swapped kernel.
+pub fn bprop(p: &ConvProblem, go: &[f32], wei: &[f32]) -> Vec<f32> {
+    assert_eq!(p.stride, 1, "strided bprop is vendor-only (paper §2)");
+    let (yh, yw) = (p.yh(), p.yw());
+    let (ph, pw) = (yh + 2 * (p.kh - 1), yw + 2 * (p.kw - 1));
+    // padded gradient, planes f' as "input planes"
+    let mut gop = vec![0f32; p.s * p.fo * ph * pw];
+    for s in 0..p.s {
+        for j in 0..p.fo {
+            for a in 0..yh {
+                let dst = ((s * p.fo + j) * ph + a + p.kh - 1) * pw
+                    + (p.kw - 1);
+                let src = ((s * p.fo + j) * yh + a) * yw;
+                gop[dst..dst + yw].copy_from_slice(&go[src..src + yw]);
+            }
+        }
+    }
+    // flipped kernel with (j,i) swapped: wf[i,j,u,v] = w[j,i,kh-1-u,kw-1-v]
+    let mut wf = vec![0f32; p.weight_len()];
+    for j in 0..p.fo {
+        for i in 0..p.f {
+            for u in 0..p.kh {
+                for v in 0..p.kw {
+                    wf[((i * p.fo + j) * p.kh + u) * p.kw + v] = wei
+                        [((j * p.f + i) * p.kh + (p.kh - 1 - u)) * p.kw
+                            + (p.kw - 1 - v)];
+                }
+            }
+        }
+    }
+    let q = ConvProblem::new(p.s, p.fo, p.f, ph, pw, p.kh, p.kw);
+    fprop(&q, &gop, &wf)
+}
+
+/// accGrad by batch-as-reduction: planes of x become the batch, the
+/// gradient becomes the kernel; swap output back to (fo, f, kh, kw).
+pub fn accgrad(p: &ConvProblem, go: &[f32], x: &[f32]) -> Vec<f32> {
+    assert_eq!(p.stride, 1, "strided accGrad is vendor-only (paper §2)");
+    let (yh, yw) = (p.yh(), p.yw());
+    // xt: (f, S, h, w); got: (fo, S, yh, yw)
+    let mut xt = vec![0f32; x.len()];
+    for s in 0..p.s {
+        for i in 0..p.f {
+            let src = (s * p.f + i) * p.h * p.w;
+            let dst = (i * p.s + s) * p.h * p.w;
+            xt[dst..dst + p.h * p.w].copy_from_slice(&x[src..src + p.h * p.w]);
+        }
+    }
+    let mut got = vec![0f32; go.len()];
+    for s in 0..p.s {
+        for j in 0..p.fo {
+            let src = (s * p.fo + j) * yh * yw;
+            let dst = (j * p.s + s) * yh * yw;
+            got[dst..dst + yh * yw].copy_from_slice(&go[src..src + yh * yw]);
+        }
+    }
+    let q = ConvProblem::new(p.f, p.s, p.fo, p.h, p.w, yh, yw);
+    let g = fprop(&q, &xt, &got); // (f, fo, kh, kw)
+    let mut gw = vec![0f32; p.weight_len()];
+    for i in 0..p.f {
+        for j in 0..p.fo {
+            let src = (i * p.fo + j) * p.kh * p.kw;
+            let dst = (j * p.f + i) * p.kh * p.kw;
+            gw[dst..dst + p.kh * p.kw]
+                .copy_from_slice(&g[src..src + p.kh * p.kw]);
+        }
+    }
+    gw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::direct;
+    use crate::util::Rng;
+
+    fn close(a: &[f32], b: &[f32], tol: f32) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() < tol, "idx {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn fprop_matches_direct() {
+        let mut rng = Rng::new(10);
+        for p in [ConvProblem::square(2, 3, 4, 9, 3),
+                  ConvProblem::new(1, 2, 3, 8, 11, 5, 3),
+                  ConvProblem::square(3, 1, 1, 6, 6)] {
+            let x = rng.normal_vec(p.input_len());
+            let wei = rng.normal_vec(p.weight_len());
+            close(&fprop(&p, &x, &wei), &direct::fprop(&p, &x, &wei), 1e-3);
+        }
+    }
+
+    #[test]
+    fn strided_fprop_matches_direct() {
+        let mut p = ConvProblem::square(2, 2, 2, 9, 3);
+        p.stride = 2;
+        let mut rng = Rng::new(11);
+        let x = rng.normal_vec(p.input_len());
+        let wei = rng.normal_vec(p.weight_len());
+        close(&fprop(&p, &x, &wei), &direct::fprop(&p, &x, &wei), 1e-3);
+    }
+
+    #[test]
+    fn bprop_matches_direct() {
+        let p = ConvProblem::square(2, 3, 2, 8, 3);
+        let mut rng = Rng::new(12);
+        let go = rng.normal_vec(p.output_len());
+        let wei = rng.normal_vec(p.weight_len());
+        close(&bprop(&p, &go, &wei), &direct::bprop(&p, &go, &wei), 1e-3);
+    }
+
+    #[test]
+    fn accgrad_matches_direct() {
+        let p = ConvProblem::new(3, 2, 2, 7, 9, 3, 5);
+        let mut rng = Rng::new(13);
+        let go = rng.normal_vec(p.output_len());
+        let x = rng.normal_vec(p.input_len());
+        close(&accgrad(&p, &go, &x), &direct::accgrad(&p, &go, &x), 1e-3);
+    }
+}

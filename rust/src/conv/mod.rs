@@ -1,0 +1,27 @@
+//! Host convolution engines — every comparator the paper measures,
+//! rebuilt on the in-tree FFT substrate.
+//!
+//! Four engines share one problem vocabulary ([`ConvProblem`]) and one
+//! tensor layout (row-major BDHW `Vec<f32>`, the paper's §3.1 format):
+//!
+//! * [`direct`]  — straightforward time-domain loops (the ccn2 analogue);
+//! * [`im2col`]  — matrix unrolling + in-tree SGEMM (the cuDNN analogue);
+//! * [`fft_conv`] — the Table-1 frequency pipeline in two flavours:
+//!   `Vendor` (explicit padding, separate transposes, planner FFTs — the
+//!   cuFFT-based implementation of §3) and `Fbfft` (implicit padding,
+//!   fused transposes, `fbfft_host` — the §5 implementation), with
+//!   per-stage timing for the Table-5 breakdown;
+//! * [`tiled`]   — the §6 decomposition running `Fbfft` on small tiles.
+//!
+//! All engines implement all three training passes and cross-check
+//! against each other in `rust/tests/`.
+
+pub mod direct;
+pub mod fft_conv;
+pub mod gemm;
+pub mod im2col;
+pub mod problem;
+pub mod tiled;
+
+pub use fft_conv::{FftConvEngine, FftMode, StageTimings};
+pub use problem::ConvProblem;

@@ -1,0 +1,123 @@
+//! The 5-D (plus rectangularity) problem vocabulary of the paper.
+
+use crate::util::Json;
+
+/// One convolutional-layer problem: the paper's `{S, f, f', n, k}` domain
+/// (Table 2) generalized to rectangular inputs/kernels. `h, w` are padded
+/// input sizes; outputs are valid-only (`yh × yw`), paper §2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ConvProblem {
+    pub s: usize,
+    pub f: usize,
+    pub fo: usize,
+    pub h: usize,
+    pub w: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+}
+
+impl ConvProblem {
+    pub fn new(s: usize, f: usize, fo: usize, h: usize, w: usize,
+               kh: usize, kw: usize) -> Self {
+        let p = ConvProblem { s, f, fo, h, w, kh, kw, stride: 1 };
+        p.validate();
+        p
+    }
+
+    /// The paper's square shorthand: n = h = w, k = kh = kw.
+    pub fn square(s: usize, f: usize, fo: usize, n: usize, k: usize) -> Self {
+        Self::new(s, f, fo, n, n, k, k)
+    }
+
+    pub fn validate(&self) {
+        assert!(self.kh <= self.h && self.kw <= self.w,
+                "kernel {}x{} exceeds input {}x{}",
+                self.kh, self.kw, self.h, self.w);
+        assert!(self.s >= 1 && self.f >= 1 && self.fo >= 1
+                && self.stride >= 1);
+    }
+
+    pub fn yh(&self) -> usize {
+        (self.h - self.kh) / self.stride + 1
+    }
+
+    pub fn yw(&self) -> usize {
+        (self.w - self.kw) / self.stride + 1
+    }
+
+    /// y-axis of Figures 1–6.
+    pub fn problem_size(&self) -> usize {
+        self.s * self.f * self.fo
+    }
+
+    /// Numerator of the TRED/s metric (Table 4 col. 7): time-domain
+    /// equivalent reductions of one fprop.
+    pub fn reductions(&self) -> u64 {
+        (self.s * self.f * self.fo) as u64
+            * (self.kh * self.kw) as u64
+            * (self.yh() * self.yw()) as u64
+    }
+
+    // ----- tensor element counts (BDHW, row-major) -------------------------
+
+    pub fn input_len(&self) -> usize {
+        self.s * self.f * self.h * self.w
+    }
+
+    pub fn weight_len(&self) -> usize {
+        self.fo * self.f * self.kh * self.kw
+    }
+
+    pub fn output_len(&self) -> usize {
+        self.s * self.fo * self.yh() * self.yw()
+    }
+
+    /// Parse the `spec` object the AOT manifest carries (compile/specs.py
+    /// `ConvSpec.to_json`).
+    pub fn from_json(j: &Json) -> Option<ConvProblem> {
+        let g = |k: &str| j.get(k)?.as_usize();
+        let p = ConvProblem {
+            s: g("s")?,
+            f: g("f")?,
+            fo: g("fo")?,
+            h: g("h")?,
+            w: g("w")?,
+            kh: g("kh")?,
+            kw: g("kw")?,
+            stride: g("stride").unwrap_or(1),
+        };
+        Some(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn output_sizes_and_counts() {
+        let p = ConvProblem::square(2, 3, 4, 9, 3);
+        assert_eq!((p.yh(), p.yw()), (7, 7));
+        assert_eq!(p.input_len(), 2 * 3 * 9 * 9);
+        assert_eq!(p.weight_len(), 4 * 3 * 3 * 3);
+        assert_eq!(p.output_len(), 2 * 4 * 7 * 7);
+        assert_eq!(p.problem_size(), 24);
+        assert_eq!(p.reductions(), 24 * 9 * 49);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds input")]
+    fn rejects_kernel_larger_than_input() {
+        ConvProblem::square(1, 1, 1, 3, 5);
+    }
+
+    #[test]
+    fn from_manifest_json() {
+        let j = Json::parse(
+            r#"{"name":"x","s":2,"f":3,"fo":4,"h":9,"w":9,"kh":3,"kw":3,
+                "stride":1}"#).unwrap();
+        let p = ConvProblem::from_json(&j).unwrap();
+        assert_eq!(p, ConvProblem::square(2, 3, 4, 9, 3));
+    }
+}

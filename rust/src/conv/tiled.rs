@@ -1,0 +1,208 @@
+//! §6 tiling on the host engine: decompose a large convolution into
+//! many small fbfft convolutions so every transform lands in the 8–64
+//! sweet spot (cost O(n·log n) → O(n·log w), paper §6).
+//!
+//! Same three decompositions as `python/compile/kernels/tiling.py`:
+//! overlap-save fprop, overlap-add bprop, tile-sum accGrad.
+
+use super::fft_conv::{FftConvEngine, FftMode, StageTimings};
+use super::problem::ConvProblem;
+
+/// Fourier basis for a tile of output size `d` under a `kh × kw` kernel.
+pub fn tile_fft_size(d: usize, kh: usize, kw: usize) -> usize {
+    (d + kh.max(kw) - 1).next_power_of_two()
+}
+
+fn ranges(total: usize, d: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut a = 0;
+    while a < total {
+        out.push((a, d.min(total - a)));
+        a += d;
+    }
+    out
+}
+
+/// Gather an input window `[h0, h0+hh) × [w0, w0+ww)` of every (s, i)
+/// plane into a dense BDHW tensor.
+fn gather(p: &ConvProblem, x: &[f32], h0: usize, hh: usize, w0: usize,
+          ww: usize) -> Vec<f32> {
+    let mut out = vec![0f32; p.s * p.f * hh * ww];
+    for b in 0..p.s * p.f {
+        for r in 0..hh {
+            let src = (b * p.h + h0 + r) * p.w + w0;
+            let dst = (b * hh + r) * ww;
+            out[dst..dst + ww].copy_from_slice(&x[src..src + ww]);
+        }
+    }
+    out
+}
+
+/// Tiled fprop (overlap-save): output tiles are disjoint, input windows
+/// overlap by k-1.
+pub fn fprop(p: &ConvProblem, x: &[f32], wei: &[f32], d: usize)
+             -> (Vec<f32>, StageTimings) {
+    assert!(d >= 1);
+    let (yh, yw) = (p.yh(), p.yw());
+    let n_t = tile_fft_size(d, p.kh, p.kw);
+    let eng = FftConvEngine::new(FftMode::Fbfft, n_t);
+    let mut out = vec![0f32; p.output_len()];
+    let mut total = StageTimings::default();
+    for (ah, dh) in ranges(yh, d) {
+        for (aw, dw) in ranges(yw, d) {
+            let (th, tw) = (dh + p.kh - 1, dw + p.kw - 1);
+            let xt = gather(p, x, ah, th, aw, tw);
+            let q = ConvProblem::new(p.s, p.f, p.fo, th, tw, p.kh, p.kw);
+            let (yt, t) = eng.fprop(&q, &xt, wei);
+            total.add(&t);
+            for b in 0..p.s * p.fo {
+                for r in 0..dh {
+                    let src = (b * dh + r) * dw;
+                    let dst = (b * yh + ah + r) * yw + aw;
+                    out[dst..dst + dw].copy_from_slice(&yt[src..src + dw]);
+                }
+            }
+        }
+    }
+    (out, total)
+}
+
+/// Tiled bprop (overlap-add): each gradient tile scatters a d+k-1 window
+/// additively into the input gradient.
+pub fn bprop(p: &ConvProblem, go: &[f32], wei: &[f32], d: usize)
+             -> (Vec<f32>, StageTimings) {
+    let (yh, yw) = (p.yh(), p.yw());
+    let n_t = tile_fft_size(d, p.kh, p.kw);
+    let eng = FftConvEngine::new(FftMode::Fbfft, n_t);
+    let mut out = vec![0f32; p.input_len()];
+    let mut total = StageTimings::default();
+    for (ah, dh) in ranges(yh, d) {
+        for (aw, dw) in ranges(yw, d) {
+            // gather the gradient tile
+            let mut got = vec![0f32; p.s * p.fo * dh * dw];
+            for b in 0..p.s * p.fo {
+                for r in 0..dh {
+                    let src = (b * yh + ah + r) * yw + aw;
+                    let dst = (b * dh + r) * dw;
+                    got[dst..dst + dw].copy_from_slice(&go[src..src + dw]);
+                }
+            }
+            let (th, tw) = (dh + p.kh - 1, dw + p.kw - 1);
+            let q = ConvProblem::new(p.s, p.f, p.fo, th, tw, p.kh, p.kw);
+            let (gxt, t) = eng.bprop(&q, &got, wei);
+            total.add(&t);
+            for b in 0..p.s * p.f {
+                for r in 0..th {
+                    let src = (b * th + r) * tw;
+                    let dst = (b * p.h + ah + r) * p.w + aw;
+                    for c in 0..tw {
+                        out[dst + c] += gxt[src + c];
+                    }
+                }
+            }
+        }
+    }
+    (out, total)
+}
+
+/// Tiled accGrad: the paper's §6 sum of tile-local correlations.
+pub fn accgrad(p: &ConvProblem, go: &[f32], x: &[f32], d: usize)
+               -> (Vec<f32>, StageTimings) {
+    let (yh, yw) = (p.yh(), p.yw());
+    let n_t = tile_fft_size(d, p.kh, p.kw);
+    let eng = FftConvEngine::new(FftMode::Fbfft, n_t);
+    let mut out = vec![0f32; p.weight_len()];
+    let mut total = StageTimings::default();
+    for (ah, dh) in ranges(yh, d) {
+        for (aw, dw) in ranges(yw, d) {
+            let mut got = vec![0f32; p.s * p.fo * dh * dw];
+            for b in 0..p.s * p.fo {
+                for r in 0..dh {
+                    let src = (b * yh + ah + r) * yw + aw;
+                    let dst = (b * dh + r) * dw;
+                    got[dst..dst + dw].copy_from_slice(&go[src..src + dw]);
+                }
+            }
+            let (th, tw) = (dh + p.kh - 1, dw + p.kw - 1);
+            let xt = gather(p, x, ah, th, aw, tw);
+            let q = ConvProblem::new(p.s, p.f, p.fo, th, tw, p.kh, p.kw);
+            let (gwt, t) = eng.accgrad(&q, &got, &xt);
+            total.add(&t);
+            for (o, g) in out.iter_mut().zip(&gwt) {
+                *o += *g;
+            }
+        }
+    }
+    (out, total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::direct;
+    use crate::util::Rng;
+
+    fn close(a: &[f32], b: &[f32], tol: f32) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() < tol, "idx {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn tiled_fprop_matches_direct_all_tile_sizes() {
+        let p = ConvProblem::square(2, 2, 3, 16, 3);
+        let mut rng = Rng::new(30);
+        let x = rng.normal_vec(p.input_len());
+        let wei = rng.normal_vec(p.weight_len());
+        let want = direct::fprop(&p, &x, &wei);
+        for d in [3usize, 4, 6, 7, 14, 20] {
+            let (got, _) = fprop(&p, &x, &wei, d);
+            close(&got, &want, 2e-3);
+        }
+    }
+
+    #[test]
+    fn tiled_bprop_matches_direct() {
+        let p = ConvProblem::square(2, 2, 2, 16, 5);
+        let mut rng = Rng::new(31);
+        let go = rng.normal_vec(p.output_len());
+        let wei = rng.normal_vec(p.weight_len());
+        let want = direct::bprop(&p, &go, &wei);
+        for d in [3usize, 5, 12] {
+            let (got, _) = bprop(&p, &go, &wei, d);
+            close(&got, &want, 2e-3);
+        }
+    }
+
+    #[test]
+    fn tiled_accgrad_matches_direct() {
+        let p = ConvProblem::square(2, 2, 2, 14, 3);
+        let mut rng = Rng::new(32);
+        let go = rng.normal_vec(p.output_len());
+        let x = rng.normal_vec(p.input_len());
+        let want = direct::accgrad(&p, &go, &x);
+        for d in [4usize, 5, 12] {
+            let (got, _) = accgrad(&p, &go, &x, d);
+            close(&got, &want, 4e-3);
+        }
+    }
+
+    #[test]
+    fn tile_basis_depends_on_kernel_not_input() {
+        assert_eq!(tile_fft_size(3, 3, 3), 8);
+        assert_eq!(tile_fft_size(8, 3, 3), 16);
+        assert_eq!(tile_fft_size(8, 11, 11), 32);
+    }
+
+    #[test]
+    fn rectangular_problem_tiles() {
+        let p = ConvProblem::new(1, 2, 2, 13, 17, 3, 5);
+        let mut rng = Rng::new(33);
+        let x = rng.normal_vec(p.input_len());
+        let wei = rng.normal_vec(p.weight_len());
+        let want = direct::fprop(&p, &x, &wei);
+        let (got, _) = fprop(&p, &x, &wei, 6);
+        close(&got, &want, 2e-3);
+    }
+}

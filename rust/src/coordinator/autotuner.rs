@@ -1,0 +1,318 @@
+//! §3.4's autotuner: 'a strategy selection mechanism that runs once for
+//! each problem size and caches the fastest strategy out of a few dozen
+//! for later reuse'.
+//!
+//! The search space matches the paper's: every smooth Fourier basis size
+//! `i ∈ [n, 2^⌈log2 n⌉]` with `i = 2^a·3^b·5^c·7^d` for the vendor FFT
+//! path, the power-of-two bases for fbfft, the time-domain engines, and
+//! (optionally) §6 tile sizes. Candidates are *measured*, not modeled —
+//! the model lives in `cost::` for the full-plane extrapolation.
+//!
+//! The cache is keyed by the problem (the paper keys by problem size) and
+//! persists as JSON so tuning survives process restarts.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use crate::conv::{direct, im2col, tiled, ConvProblem, FftConvEngine, FftMode};
+use crate::fft::is_smooth;
+use crate::util::{Json, Rng};
+
+use super::strategy::{Pass, Strategy};
+
+/// One tuned decision.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Choice {
+    pub strategy: Strategy,
+    /// Fourier basis (frequency strategies only)
+    pub n_fft: Option<usize>,
+    /// measured seconds per pass at tuning time
+    pub seconds: f64,
+}
+
+/// The smooth candidate bases of §3.4: `i ∈ [n, 2^⌈log2 n⌉]`,
+/// `i = 2^a·3^b·5^c·7^d`. When n is a power of two the space collapses to
+/// that single point, exactly as the paper notes.
+pub fn candidate_bases(n: usize) -> Vec<usize> {
+    let hi = n.next_power_of_two();
+    (n..=hi).filter(|i| is_smooth(*i)).collect()
+}
+
+#[derive(Debug, Default)]
+pub struct Autotuner {
+    cache: HashMap<(ConvProblem, Pass), Choice>,
+    /// measurement repetitions per candidate
+    pub reps: usize,
+    /// include the §6 tiled candidates (fprop only)
+    pub try_tiling: bool,
+}
+
+impl Autotuner {
+    pub fn new() -> Self {
+        Autotuner { cache: HashMap::new(), reps: 3, try_tiling: true }
+    }
+
+    pub fn cached(&self, p: &ConvProblem, pass: Pass) -> Option<Choice> {
+        self.cache.get(&(*p, pass)).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.cache.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cache.is_empty()
+    }
+
+    /// Tune (or return cached) the fastest host-engine strategy for one
+    /// (problem, pass). Runs each candidate `reps` times on synthetic
+    /// data and keeps the minimum — the paper's run-once-and-cache flow.
+    pub fn tune(&mut self, p: &ConvProblem, pass: Pass) -> Choice {
+        if let Some(c) = self.cached(p, pass) {
+            return c;
+        }
+        let mut rng = Rng::new(0xA070 ^ p.problem_size() as u64);
+        let x = rng.normal_vec(p.input_len());
+        let wei = rng.normal_vec(p.weight_len());
+        let go = rng.normal_vec(p.output_len());
+
+        let mut best: Option<Choice> = None;
+        let mut consider = |c: Choice| {
+            if best.map(|b| c.seconds < b.seconds).unwrap_or(true) {
+                best = Some(c);
+            }
+        };
+
+        let time_it = |f: &mut dyn FnMut()| -> f64 {
+            let mut lo = f64::INFINITY;
+            for _ in 0..self.reps.max(1) {
+                let t0 = Instant::now();
+                f();
+                lo = lo.min(t0.elapsed().as_secs_f64());
+            }
+            lo
+        };
+
+        // time-domain candidates
+        if p.stride == 1 || matches!(pass, Pass::Fprop) {
+            let secs = time_it(&mut || {
+                match pass {
+                    Pass::Fprop => drop(direct::fprop(p, &x, &wei)),
+                    Pass::Bprop => drop(direct::bprop(p, &go, &wei)),
+                    Pass::AccGrad => drop(direct::accgrad(p, &go, &x)),
+                };
+            });
+            consider(Choice { strategy: Strategy::Direct, n_fft: None,
+                              seconds: secs });
+            let secs = time_it(&mut || {
+                match pass {
+                    Pass::Fprop => drop(im2col::fprop(p, &x, &wei)),
+                    Pass::Bprop => drop(im2col::bprop(p, &go, &wei)),
+                    Pass::AccGrad => drop(im2col::accgrad(p, &go, &x)),
+                };
+            });
+            consider(Choice { strategy: Strategy::Im2col, n_fft: None,
+                              seconds: secs });
+        }
+
+        if p.stride == 1 {
+            // vendor-FFT candidates over the smooth bases
+            for n in candidate_bases(p.h.max(p.w)) {
+                let eng = FftConvEngine::new(FftMode::Vendor, n);
+                let secs = time_it(&mut || {
+                    match pass {
+                        Pass::Fprop => drop(eng.fprop(p, &x, &wei)),
+                        Pass::Bprop => drop(eng.bprop(p, &go, &wei)),
+                        Pass::AccGrad => drop(eng.accgrad(p, &go, &x)),
+                    };
+                });
+                consider(Choice { strategy: Strategy::VendorFft,
+                                  n_fft: Some(n), seconds: secs });
+            }
+            // fbfft candidate (power-of-two basis)
+            let n = p.h.max(p.w).next_power_of_two();
+            if n <= crate::fft::fbfft_host::MAX_N {
+                let eng = FftConvEngine::new(FftMode::Fbfft, n);
+                let secs = time_it(&mut || {
+                    match pass {
+                        Pass::Fprop => drop(eng.fprop(p, &x, &wei)),
+                        Pass::Bprop => drop(eng.bprop(p, &go, &wei)),
+                        Pass::AccGrad => drop(eng.accgrad(p, &go, &x)),
+                    };
+                });
+                consider(Choice { strategy: Strategy::Fbfft,
+                                  n_fft: Some(n), seconds: secs });
+            }
+            // §6 tiled candidates, kernel-sized tiles (fprop family)
+            if self.try_tiling && p.kh.max(p.kw) * 4 < p.h.min(p.w) {
+                for d in [p.kh.max(p.kw), 2 * p.kh.max(p.kw)] {
+                    let secs = time_it(&mut || {
+                        match pass {
+                            Pass::Fprop => drop(tiled::fprop(p, &x, &wei, d)),
+                            Pass::Bprop => drop(tiled::bprop(p, &go, &wei, d)),
+                            Pass::AccGrad => drop(tiled::accgrad(p, &go, &x, d)),
+                        };
+                    });
+                    consider(Choice {
+                        strategy: Strategy::FbfftTiled(d),
+                        n_fft: Some(tiled::tile_fft_size(d, p.kh, p.kw)),
+                        seconds: secs,
+                    });
+                }
+            }
+        }
+
+        let choice = best.expect("at least one candidate must run");
+        self.cache.insert((*p, pass), choice);
+        choice
+    }
+
+    /// Total time the tuner has spent measuring (for reporting).
+    pub fn tune_many(&mut self, problems: &[ConvProblem], pass: Pass)
+                     -> Duration {
+        let t0 = Instant::now();
+        for p in problems {
+            self.tune(p, pass);
+        }
+        t0.elapsed()
+    }
+
+    // ----- persistence ----------------------------------------------------
+
+    fn key_str(p: &ConvProblem, pass: Pass) -> String {
+        format!("{}x{}x{}x{}x{}x{}x{}x{}:{}", p.s, p.f, p.fo, p.h, p.w,
+                p.kh, p.kw, p.stride, pass.tag())
+    }
+
+    fn key_parse(s: &str) -> Option<(ConvProblem, Pass)> {
+        let (dims, pass) = s.rsplit_once(':')?;
+        let v: Vec<usize> =
+            dims.split('x').map(|t| t.parse().ok()).collect::<Option<_>>()?;
+        if v.len() != 8 {
+            return None;
+        }
+        let mut p = ConvProblem::new(v[0], v[1], v[2], v[3], v[4], v[5], v[6]);
+        p.stride = v[7];
+        let pass = match pass {
+            "fprop" => Pass::Fprop,
+            "bprop" => Pass::Bprop,
+            "accgrad" => Pass::AccGrad,
+            _ => return None,
+        };
+        Some((p, pass))
+    }
+
+    pub fn save(&self, path: &Path) -> std::io::Result<()> {
+        let mut entries = Vec::new();
+        for ((p, pass), c) in &self.cache {
+            entries.push(Json::obj(vec![
+                ("key", Json::str(&Self::key_str(p, *pass))),
+                ("strategy", Json::str(&c.strategy.tag())),
+                ("n_fft", c.n_fft.map(|n| Json::num(n as f64))
+                     .unwrap_or(Json::Null)),
+                ("seconds", Json::num(c.seconds)),
+            ]));
+        }
+        std::fs::write(path, Json::obj(vec![
+            ("version", Json::num(1.0)),
+            ("entries", Json::Arr(entries)),
+        ]).to_string())
+    }
+
+    pub fn load(path: &Path) -> Option<Autotuner> {
+        let text = std::fs::read_to_string(path).ok()?;
+        let j = Json::parse(&text).ok()?;
+        let mut t = Autotuner::new();
+        for e in j.get("entries")?.as_arr()? {
+            let (p, pass) = Self::key_parse(e.get("key")?.as_str()?)?;
+            let strategy = Strategy::from_tag(e.get("strategy")?.as_str()?)?;
+            let n_fft = e.get("n_fft").and_then(Json::as_usize);
+            let seconds = e.get("seconds")?.as_f64()?;
+            t.cache.insert((p, pass),
+                           Choice { strategy, n_fft, seconds });
+        }
+        Some(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn candidate_bases_are_the_papers_space() {
+        // n = 13 → smooth sizes in [13, 16]
+        assert_eq!(candidate_bases(13), vec![14, 15, 16]);
+        // power of two collapses to a single point (paper §3.4)
+        assert_eq!(candidate_bases(16), vec![16]);
+        assert_eq!(candidate_bases(27), vec![27, 28, 30, 32]);
+        for n in candidate_bases(57) {
+            assert!(is_smooth(n) && (57..=64).contains(&n));
+        }
+    }
+
+    #[test]
+    fn tune_caches_and_is_deterministic_on_reuse() {
+        let mut t = Autotuner::new();
+        t.reps = 1;
+        t.try_tiling = false;
+        let p = ConvProblem::square(1, 2, 2, 9, 3);
+        let a = t.tune(&p, Pass::Fprop);
+        let b = t.tune(&p, Pass::Fprop); // cached — identical
+        assert_eq!(a, b);
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn strided_problems_get_time_domain_only() {
+        let mut t = Autotuner::new();
+        t.reps = 1;
+        let mut p = ConvProblem::square(1, 1, 1, 9, 3);
+        p.stride = 2;
+        let c = t.tune(&p, Pass::Fprop);
+        assert!(matches!(c.strategy, Strategy::Direct | Strategy::Im2col));
+    }
+
+    #[test]
+    fn persistence_round_trip() {
+        let mut t = Autotuner::new();
+        t.reps = 1;
+        t.try_tiling = false;
+        let p = ConvProblem::square(1, 2, 2, 9, 3);
+        let a = t.tune(&p, Pass::Fprop);
+        let tmp = std::env::temp_dir().join("fbfft_tuner_test.json");
+        t.save(&tmp).unwrap();
+        let t2 = Autotuner::load(&tmp).unwrap();
+        assert_eq!(t2.cached(&p, Pass::Fprop), Some(a));
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn tuner_never_picks_a_dominated_strategy() {
+        // The tuner's contract is picking the fastest *measured*
+        // candidate — not a specific algorithm (on this host the
+        // multithreaded im2col legitimately beats the single-threaded
+        // FFT engine at some sizes where the K40m model says otherwise;
+        // DESIGN.md §3). Assert the contract: the winner is at least as
+        // fast as the plain direct engine, measured the same way.
+        let mut t = Autotuner::new();
+        t.reps = 3;
+        t.try_tiling = false;
+        let p = ConvProblem::square(16, 32, 32, 16, 13);
+        let c = t.tune(&p, Pass::Fprop);
+        let mut rng = crate::util::Rng::new(0xA070 ^ p.problem_size() as u64);
+        let x = rng.normal_vec(p.input_len());
+        let wei = rng.normal_vec(p.weight_len());
+        let mut lo = f64::INFINITY;
+        for _ in 0..3 {
+            let t0 = std::time::Instant::now();
+            drop(direct::fprop(&p, &x, &wei));
+            lo = lo.min(t0.elapsed().as_secs_f64());
+        }
+        // generous 2x slack for scheduler noise between the two runs
+        assert!(c.seconds <= lo * 2.0,
+                "tuned {:?} at {:.3}ms is slower than direct {:.3}ms",
+                c.strategy, c.seconds * 1e3, lo * 1e3);
+    }
+}

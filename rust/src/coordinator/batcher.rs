@@ -1,0 +1,200 @@
+//! Dynamic request batching for the serving path: amortize one PJRT
+//! launch over many small requests, the same economics the paper's
+//! 'large batches, small feature planes' regime exploits.
+//!
+//! Policy: flush when the queued image count reaches the executable's
+//! batch capacity, or when the oldest queued request has waited
+//! `max_wait`. Requests never reorder *within* a flush; a request larger
+//! than the capacity is split across consecutive batches.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// One enqueued unit: `images` samples belonging to request `id`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Pending {
+    pub id: u64,
+    pub images: usize,
+    pub enqueued: Instant,
+}
+
+/// A flushed batch: (request id, image count) pairs in arrival order;
+/// total images ≤ capacity.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Batch {
+    pub parts: Vec<(u64, usize)>,
+}
+
+impl Batch {
+    pub fn images(&self) -> usize {
+        self.parts.iter().map(|(_, n)| n).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parts.is_empty()
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// images per executable launch (the artifact's S dimension)
+    pub capacity: usize,
+    /// flush the queue when the oldest request has waited this long
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { capacity: 16, max_wait: Duration::from_millis(5) }
+    }
+}
+
+#[derive(Debug)]
+pub struct Batcher {
+    cfg: BatcherConfig,
+    queue: VecDeque<Pending>,
+    /// counters for the serving report
+    pub flushes_full: usize,
+    pub flushes_timeout: usize,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        assert!(cfg.capacity >= 1);
+        Batcher { cfg, queue: VecDeque::new(), flushes_full: 0,
+                  flushes_timeout: 0 }
+    }
+
+    pub fn push(&mut self, id: u64, images: usize, now: Instant) {
+        assert!(images >= 1, "empty request");
+        self.queue.push_back(Pending { id, images, enqueued: now });
+    }
+
+    pub fn queued_images(&self) -> usize {
+        self.queue.iter().map(|p| p.images).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Earliest deadline by which a flush must happen (None if empty).
+    pub fn deadline(&self) -> Option<Instant> {
+        self.queue.front().map(|p| p.enqueued + self.cfg.max_wait)
+    }
+
+    /// Non-blocking poll: returns a batch if the policy says flush now.
+    pub fn poll(&mut self, now: Instant) -> Option<Batch> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let full = self.queued_images() >= self.cfg.capacity;
+        let expired = self
+            .deadline()
+            .map(|d| now >= d)
+            .unwrap_or(false);
+        if !full && !expired {
+            return None;
+        }
+        if full {
+            self.flushes_full += 1;
+        } else {
+            self.flushes_timeout += 1;
+        }
+        Some(self.drain())
+    }
+
+    /// Force-flush whatever is queued (shutdown path).
+    pub fn drain(&mut self) -> Batch {
+        let mut batch = Batch::default();
+        let mut room = self.cfg.capacity;
+        while room > 0 {
+            let Some(front) = self.queue.front_mut() else { break };
+            let take = front.images.min(room);
+            batch.parts.push((front.id, take));
+            room -= take;
+            if take == front.images {
+                self.queue.pop_front();
+            } else {
+                front.images -= take; // split oversized request
+            }
+        }
+        batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(cap: usize, wait_ms: u64) -> BatcherConfig {
+        BatcherConfig { capacity: cap,
+                        max_wait: Duration::from_millis(wait_ms) }
+    }
+
+    #[test]
+    fn flushes_when_full() {
+        let mut b = Batcher::new(cfg(4, 1000));
+        let t = Instant::now();
+        b.push(1, 2, t);
+        assert!(b.poll(t).is_none());
+        b.push(2, 2, t);
+        let batch = b.poll(t).expect("full flush");
+        assert_eq!(batch.parts, vec![(1, 2), (2, 2)]);
+        assert!(b.is_empty());
+        assert_eq!(b.flushes_full, 1);
+    }
+
+    #[test]
+    fn flushes_on_timeout() {
+        let mut b = Batcher::new(cfg(64, 5));
+        let t = Instant::now();
+        b.push(7, 1, t);
+        assert!(b.poll(t).is_none());
+        let later = t + Duration::from_millis(6);
+        let batch = b.poll(later).expect("timeout flush");
+        assert_eq!(batch.parts, vec![(7, 1)]);
+        assert_eq!(b.flushes_timeout, 1);
+    }
+
+    #[test]
+    fn preserves_arrival_order_and_splits_oversized() {
+        let mut b = Batcher::new(cfg(4, 1000));
+        let t = Instant::now();
+        b.push(1, 3, t);
+        b.push(2, 6, t); // larger than capacity remainder AND capacity
+        let first = b.poll(t).expect("flush");
+        assert_eq!(first.parts, vec![(1, 3), (2, 1)]);
+        // remaining 5 images of request 2
+        assert_eq!(b.queued_images(), 5);
+        let second = b.poll(t).expect("still full");
+        assert_eq!(second.parts, vec![(2, 4)]);
+        let third = b.drain();
+        assert_eq!(third.parts, vec![(2, 1)]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn batch_never_exceeds_capacity() {
+        let mut b = Batcher::new(cfg(8, 0));
+        let t = Instant::now();
+        for id in 0..10 {
+            b.push(id, 3, t);
+        }
+        while let Some(batch) = b.poll(t + Duration::from_millis(1)) {
+            assert!(batch.images() <= 8);
+            if b.is_empty() {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn deadline_tracks_oldest() {
+        let mut b = Batcher::new(cfg(100, 10));
+        let t0 = Instant::now();
+        b.push(1, 1, t0);
+        b.push(2, 1, t0 + Duration::from_millis(3));
+        assert_eq!(b.deadline(), Some(t0 + Duration::from_millis(10)));
+    }
+}

@@ -1,0 +1,114 @@
+//! §3.3's buffer policy: 'we keep one single buffered copy of each type
+//! of tensor involved … automatically expanded as required and reused as
+//! much as possible', tailored for bulk-synchronous layer execution.
+//!
+//! A [`BufferPool`] hands out role-keyed `f32` buffers. A role is e.g.
+//! `"input"`, `"weight"`, `"freq_a"` — one live buffer per role, grown
+//! monotonically to the high-water mark, never shrunk (matching the
+//! paper's behaviour and its memory-pressure trade-off discussion in §6).
+
+use std::collections::HashMap;
+
+/// Role-keyed reusable buffer arena.
+#[derive(Debug, Default)]
+pub struct BufferPool {
+    bufs: HashMap<String, Vec<f32>>,
+    /// counters for the reuse-vs-allocation report
+    pub allocations: usize,
+    pub expansions: usize,
+    pub reuses: usize,
+}
+
+impl BufferPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fetch the buffer for `role`, expanded to at least `len` elements
+    /// and zeroed over `[0, len)`. The same role always returns the same
+    /// allocation (until expansion) — callers must not hold two mutable
+    /// roles at once, which the borrow checker enforces structurally.
+    pub fn get(&mut self, role: &str, len: usize) -> &mut [f32] {
+        match self.bufs.entry(role.to_string()) {
+            std::collections::hash_map::Entry::Occupied(mut e) => {
+                let buf = e.get_mut();
+                if buf.len() < len {
+                    buf.resize(len, 0.0);
+                    self.expansions += 1;
+                } else {
+                    self.reuses += 1;
+                }
+                let buf = e.into_mut();
+                let s = &mut buf[..len];
+                s.fill(0.0);
+                s
+            }
+            std::collections::hash_map::Entry::Vacant(e) => {
+                self.allocations += 1;
+                &mut e.insert(vec![0.0; len])[..len]
+            }
+        }
+    }
+
+    /// Capacity currently held for `role` (0 if never requested).
+    pub fn capacity(&self, role: &str) -> usize {
+        self.bufs.get(role).map(Vec::len).unwrap_or(0)
+    }
+
+    /// Total f32 elements held — the memory-pressure figure the paper
+    /// trades against FFT-reuse opportunities (§6).
+    pub fn total_elems(&self) -> usize {
+        self.bufs.values().map(Vec::len).sum()
+    }
+
+    /// Number of distinct roles (the 'types of tensor involved').
+    pub fn roles(&self) -> usize {
+        self.bufs.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_role_reuses_allocation() {
+        let mut p = BufferPool::new();
+        p.get("input", 100);
+        p.get("input", 50);
+        p.get("input", 100);
+        assert_eq!(p.allocations, 1);
+        assert_eq!(p.reuses, 2);
+        assert_eq!(p.expansions, 0);
+        assert_eq!(p.capacity("input"), 100);
+    }
+
+    #[test]
+    fn grows_to_high_water_mark_and_stays() {
+        let mut p = BufferPool::new();
+        p.get("freq", 10);
+        p.get("freq", 1000);
+        p.get("freq", 10);
+        assert_eq!(p.capacity("freq"), 1000);
+        assert_eq!(p.expansions, 1);
+    }
+
+    #[test]
+    fn buffers_are_zeroed_per_request() {
+        let mut p = BufferPool::new();
+        let b = p.get("x", 4);
+        b.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        let b2 = p.get("x", 4);
+        assert_eq!(b2, &[0.0; 4]);
+    }
+
+    #[test]
+    fn roles_are_independent() {
+        let mut p = BufferPool::new();
+        p.get("a", 16);
+        p.get("b", 32);
+        assert_eq!(p.roles(), 2);
+        assert_eq!(p.total_elems(), 48);
+        assert_eq!(p.allocations, 2);
+    }
+}

@@ -1,0 +1,28 @@
+//! The coordination layer — the paper's system-level machinery, which in
+//! the original lives across the Torch integration and the CUDA
+//! buffering/streaming code (§3.3–3.4):
+//!
+//! * [`strategy`]  — the convolution-strategy vocabulary and artifact
+//!   naming shared with the AOT manifest;
+//! * [`autotuner`] — §3.4's strategy selection: explore smooth Fourier
+//!   basis sizes `2^a·3^b·5^c·7^d` and implementation choices, measure
+//!   once per problem size, cache the winner (persistable);
+//! * [`buffers`]   — §3.3's memory policy: one buffered copy per tensor
+//!   role, auto-expanded and reused across layers;
+//! * [`scheduler`] — bulk-synchronous whole-CNN execution through cached
+//!   PJRT executables (the Table-3 harness);
+//! * [`batcher`]   — dynamic request batching for the serving example;
+//! * [`service`]   — the request loop gluing batcher → runtime.
+
+pub mod autotuner;
+pub mod batcher;
+pub mod buffers;
+pub mod scheduler;
+pub mod service;
+pub mod strategy;
+
+pub use autotuner::{Autotuner, Choice};
+pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use buffers::BufferPool;
+pub use scheduler::{LayerPlan, NetworkScheduler, PassTimings};
+pub use strategy::{Pass, Strategy};

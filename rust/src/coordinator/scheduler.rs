@@ -1,0 +1,192 @@
+//! Bulk-synchronous whole-CNN execution through cached PJRT executables —
+//! the harness behind Table 3 (AlexNet / OverFeat-fast totals).
+//!
+//! A network is an ordered list of [`LayerPlan`]s. For each pass the
+//! scheduler walks the layers (forward order for fprop, reverse for the
+//! gradients, matching real training), feeds activations through the
+//! buffer pool's single-copy roles, and accumulates per-layer timings.
+//! 'This behavior is tailored for a bulk synchronous execution of layers
+//! on a GPU' (§3.3) — here, of PJRT executables on the CPU client.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::conv::ConvProblem;
+use crate::runtime::{HostTensor, Runtime};
+use crate::util::Rng;
+
+use super::strategy::{artifact_name, Pass, Strategy};
+
+/// One layer's execution plan: which artifact serves each pass.
+#[derive(Clone, Debug)]
+pub struct LayerPlan {
+    /// spec name as used in artifact names (e.g. "alexnet.conv2@_8")
+    pub spec: String,
+    pub problem: ConvProblem,
+    pub strategy: Strategy,
+}
+
+impl LayerPlan {
+    pub fn artifact(&self, pass: Pass) -> String {
+        artifact_name(&self.spec, self.strategy, pass)
+    }
+}
+
+/// Per-layer, per-pass wall-clock (the Table-3 rows).
+#[derive(Clone, Debug, Default)]
+pub struct PassTimings {
+    pub per_layer: Vec<(String, Duration)>,
+}
+
+impl PassTimings {
+    pub fn total(&self) -> Duration {
+        self.per_layer.iter().map(|(_, d)| *d).sum()
+    }
+}
+
+pub struct NetworkScheduler<'rt> {
+    rt: &'rt Runtime,
+    layers: Vec<LayerPlan>,
+    rng: Rng,
+}
+
+impl<'rt> NetworkScheduler<'rt> {
+    pub fn new(rt: &'rt Runtime, layers: Vec<LayerPlan>) -> Self {
+        NetworkScheduler { rt, layers, rng: Rng::new(0x5EED) }
+    }
+
+    pub fn layers(&self) -> &[LayerPlan] {
+        &self.layers
+    }
+
+    /// Verify every required artifact exists before running (fail fast —
+    /// a half-benchmarked network is worse than an error).
+    pub fn check_artifacts(&self, passes: &[Pass]) -> Result<()> {
+        for l in &self.layers {
+            for pass in passes {
+                let name = l.artifact(*pass);
+                if self.rt.manifest().get(&name).is_none() {
+                    bail!("missing artifact {name}; re-run `make artifacts`");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Pre-compile all executables (excluded from timed runs).
+    pub fn warm(&self, passes: &[Pass]) -> Result<()> {
+        for l in &self.layers {
+            for pass in passes {
+                self.rt.executable(&l.artifact(*pass))?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Forward pass through the whole stack. Each layer consumes the
+    /// previous layer's activation when shapes chain (they do for the
+    /// CNN tables after pooling is folded into the specs as input sizes);
+    /// otherwise a fresh synthetic activation of the right shape is drawn
+    /// — timing is what Table 3 measures, not semantics.
+    pub fn fprop(&mut self) -> Result<PassTimings> {
+        let mut t = PassTimings::default();
+        let mut carry: Option<(Vec<f32>, Vec<usize>)> = None;
+        for l in &self.layers {
+            let p = &l.problem;
+            let in_shape = vec![p.s, p.f, p.h, p.w];
+            let x = match carry.take() {
+                Some((data, shape)) if shape == in_shape => data,
+                _ => self.rng.normal_vec(p.input_len()),
+            };
+            let wei = self.rng.normal_vec(p.weight_len());
+            let t0 = Instant::now();
+            let (out, out_shape) = self.rt.execute_1f32(
+                &l.artifact(Pass::Fprop),
+                &[HostTensor::f32(x, &in_shape),
+                  HostTensor::f32(wei, &[p.fo, p.f, p.kh, p.kw])])?;
+            t.per_layer.push((l.spec.clone(), t0.elapsed()));
+            carry = Some((out, out_shape));
+        }
+        Ok(t)
+    }
+
+    /// Gradient passes, reverse layer order (bprop chains gradients;
+    /// accGrad consumes the same gradient plus a synthetic activation).
+    pub fn backward(&mut self, pass: Pass) -> Result<PassTimings> {
+        assert!(matches!(pass, Pass::Bprop | Pass::AccGrad));
+        let mut t = PassTimings::default();
+        let mut carry: Option<(Vec<f32>, Vec<usize>)> = None;
+        for l in self.layers.iter().rev() {
+            let p = &l.problem;
+            // strided vendor-only layers skip FFT gradient artifacts when
+            // absent (the paper's Table 3 runs conv1 through cuDNN too)
+            let name = l.artifact(pass);
+            if self.rt.manifest().get(&name).is_none() {
+                bail!("missing artifact {name}");
+            }
+            let go_shape = vec![p.s, p.fo, p.yh(), p.yw()];
+            let go = match carry.take() {
+                Some((d, s)) if s == go_shape => d,
+                _ => self.rng.normal_vec(p.output_len()),
+            };
+            let (second, second_shape) = match pass {
+                Pass::Bprop => (self.rng.normal_vec(p.weight_len()),
+                                vec![p.fo, p.f, p.kh, p.kw]),
+                _ => (self.rng.normal_vec(p.input_len()),
+                      vec![p.s, p.f, p.h, p.w]),
+            };
+            let t0 = Instant::now();
+            let (out, out_shape) = self.rt.execute_1f32(
+                &name,
+                &[HostTensor::f32(go, &go_shape),
+                  HostTensor::f32(second, &second_shape)])?;
+            t.per_layer.push((l.spec.clone(), t0.elapsed()));
+            if pass == Pass::Bprop {
+                // gradient w.r.t. input feeds the next (shallower) layer
+                carry = Some((out, out_shape));
+            }
+        }
+        t.per_layer.reverse();
+        Ok(t)
+    }
+
+    /// Run all three passes and return (fprop, bprop, accgrad) timings —
+    /// one Table-3 row group.
+    pub fn run_all(&mut self) -> Result<(PassTimings, PassTimings,
+                                         PassTimings)> {
+        let f = self.fprop()?;
+        let b = self.backward(Pass::Bprop)?;
+        let a = self.backward(Pass::AccGrad)?;
+        Ok((f, b, a))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layer_plan_names_match_manifest_convention() {
+        let l = LayerPlan {
+            spec: "alexnet.conv2@_8".into(),
+            problem: ConvProblem::square(4, 8, 24, 31, 5),
+            strategy: Strategy::Fbfft,
+        };
+        assert_eq!(l.artifact(Pass::Fprop),
+                   "conv.alexnet.conv2@_8.fbfft.fprop");
+        assert_eq!(l.artifact(Pass::AccGrad),
+                   "conv.alexnet.conv2@_8.fbfft.accgrad");
+    }
+
+    #[test]
+    fn pass_timings_total() {
+        let t = PassTimings {
+            per_layer: vec![
+                ("a".into(), Duration::from_millis(2)),
+                ("b".into(), Duration::from_millis(3)),
+            ],
+        };
+        assert_eq!(t.total(), Duration::from_millis(5));
+    }
+}

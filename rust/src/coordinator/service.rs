@@ -1,0 +1,200 @@
+//! The serving loop: a worker thread owns the PJRT runtime and drains a
+//! request channel through the dynamic batcher into executable launches.
+//! (tokio is unavailable offline; std threads + channels implement the
+//! same event loop — the worker parks on the channel with a timeout equal
+//! to the batcher's next deadline.)
+
+use std::path::PathBuf;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::conv::ConvProblem;
+use crate::runtime::{HostTensor, Runtime};
+use crate::util::Rng;
+
+use super::batcher::{Batcher, BatcherConfig};
+
+/// A conv inference request: `images` samples for the served layer.
+pub struct ServeRequest {
+    pub id: u64,
+    pub images: usize,
+    /// sent back on completion: (id, images, latency)
+    pub reply: Sender<Completion>,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Completion {
+    pub id: u64,
+    pub images: usize,
+    pub latency: Duration,
+    /// images in the flushed batch this request rode in (batching factor)
+    pub batch_images: usize,
+}
+
+/// Handle to a running service; drop after `shutdown` to join.
+pub struct ConvService {
+    tx: Sender<Msg>,
+    worker: Option<JoinHandle<ServiceReport>>,
+}
+
+enum Msg {
+    Req(ServeRequest, Instant),
+    Shutdown,
+}
+
+/// Aggregate statistics returned at shutdown.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServiceReport {
+    pub requests: usize,
+    pub images: usize,
+    pub launches: usize,
+    pub busy: Duration,
+    pub flushes_full: usize,
+    pub flushes_timeout: usize,
+}
+
+impl ConvService {
+    /// Serve the named fprop artifact from `artifacts_dir`. The PJRT
+    /// client is not `Send`, so the worker thread owns the whole runtime;
+    /// a handshake channel surfaces startup (compile) failures.
+    pub fn start(artifacts_dir: PathBuf, artifact: String,
+                 problem: ConvProblem, cfg: BatcherConfig)
+                 -> Result<ConvService> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let art = artifact.clone();
+        let worker = std::thread::spawn(move || {
+            let rt = match Runtime::open(&artifacts_dir)
+                .and_then(|rt| rt.executable(&art).map(|_| rt))
+            {
+                Ok(rt) => {
+                    ready_tx.send(Ok(())).ok();
+                    rt
+                }
+                Err(e) => {
+                    ready_tx.send(Err(format!("{e:#}"))).ok();
+                    return ServiceReport::default();
+                }
+            };
+            serve_loop(rt, art, problem, cfg, rx)
+        });
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("service worker died during startup"))?
+            .map_err(|e| anyhow!("service startup: {e}"))?;
+        Ok(ConvService { tx, worker: Some(worker) })
+    }
+
+    pub fn submit(&self, req: ServeRequest) {
+        self.tx
+            .send(Msg::Req(req, Instant::now()))
+            .expect("service worker gone");
+    }
+
+    /// Flush outstanding work and join the worker.
+    pub fn shutdown(mut self) -> ServiceReport {
+        self.tx.send(Msg::Shutdown).ok();
+        self.worker
+            .take()
+            .expect("double shutdown")
+            .join()
+            .expect("worker panicked")
+    }
+}
+
+fn serve_loop(rt: Runtime, artifact: String, problem: ConvProblem,
+              cfg: BatcherConfig, rx: Receiver<Msg>) -> ServiceReport {
+    let mut batcher = Batcher::new(cfg);
+    let mut pending: Vec<(u64, usize, Instant, Sender<Completion>)> =
+        Vec::new();
+    let mut report = ServiceReport::default();
+    let mut rng = Rng::new(0xC0FFEE);
+    // the layer's weights live on the service (one copy, §3.3)
+    let weights = rng.normal_vec(problem.weight_len());
+    let mut done = false;
+    while !done || !batcher.is_empty() {
+        // wait for work or the batcher's deadline
+        if !done {
+            let timeout = batcher
+                .deadline()
+                .map(|d| d.saturating_duration_since(Instant::now()))
+                .unwrap_or(Duration::from_millis(50));
+            match rx.recv_timeout(timeout) {
+                Ok(Msg::Req(r, t)) => {
+                    batcher.push(r.id, r.images, t);
+                    pending.push((r.id, r.images, t, r.reply));
+                    report.requests += 1;
+                    report.images += r.images;
+                }
+                Ok(Msg::Shutdown) => done = true,
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => done = true,
+            }
+        }
+        let flush = if done {
+            let b = batcher.drain();
+            if b.is_empty() { None } else { Some(b) }
+        } else {
+            batcher.poll(Instant::now())
+        };
+        let Some(batch) = flush else { continue };
+        // assemble the padded minibatch and launch
+        let t0 = Instant::now();
+        let imgs = batch.images();
+        let mut x = rng.normal_vec(imgs * problem.f * problem.h * problem.w);
+        x.resize(problem.input_len(), 0.0); // zero-pad to artifact batch S
+        let result = rt.execute_1f32(
+            &artifact,
+            &[HostTensor::f32(x, &[problem.s, problem.f, problem.h,
+                                   problem.w]),
+              HostTensor::f32(weights.clone(),
+                              &[problem.fo, problem.f, problem.kh,
+                                problem.kw])]);
+        let elapsed = t0.elapsed();
+        report.launches += 1;
+        report.busy += elapsed;
+        if let Err(e) = result {
+            eprintln!("serve: launch failed: {e:#}");
+            continue;
+        }
+        // complete every request that rode in this batch
+        for (id, n) in &batch.parts {
+            // a request may be split across batches; complete the part
+            if let Some(pos) = pending.iter().position(|(pid, _, _, _)|
+                                                       pid == id) {
+                let (_, total, t_in, reply) = &pending[pos];
+                let latency = t0.elapsed() + t0.duration_since(*t_in);
+                reply
+                    .send(Completion { id: *id, images: *n,
+                                       latency, batch_images: imgs })
+                    .ok();
+                if *n >= *total {
+                    pending.remove(pos);
+                } else {
+                    pending[pos].1 -= n;
+                }
+            }
+        }
+    }
+    report.flushes_full = batcher.flushes_full;
+    report.flushes_timeout = batcher.flushes_timeout;
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    // The service needs real artifacts; its end-to-end behaviour is
+    // covered by rust/tests/integration.rs and examples/conv_server.rs.
+    // Here we only pin the report arithmetic.
+    use super::*;
+
+    #[test]
+    fn report_defaults_are_zero() {
+        let r = ServiceReport::default();
+        assert_eq!(r.requests + r.images + r.launches, 0);
+        assert_eq!(r.busy, Duration::ZERO);
+    }
+}

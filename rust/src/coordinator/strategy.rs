@@ -1,0 +1,128 @@
+//! Strategy + pass vocabulary, shared with the AOT manifest's naming
+//! scheme (`conv.<spec>.<strategy>.<pass>`).
+
+use std::fmt;
+
+/// Which convolution implementation serves a layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    /// XLA's native convolution — the cuDNN-analogue vendor black box.
+    Vendor,
+    /// jnp.fft-based frequency convolution — the cuFFT-analogue.
+    VendorFft,
+    /// The Pallas fbfft pipeline (§5).
+    Fbfft,
+    /// §6 tiling over fbfft with output-tile size d.
+    FbfftTiled(usize),
+    /// In-tree direct time-domain kernel (ccn2 analogue).
+    Direct,
+    /// In-tree matrix-unrolling kernel.
+    Im2col,
+}
+
+impl Strategy {
+    /// Manifest name component.
+    pub fn tag(&self) -> String {
+        match self {
+            Strategy::Vendor => "vendor".into(),
+            Strategy::VendorFft => "vendor_fft".into(),
+            Strategy::Fbfft => "fbfft".into(),
+            Strategy::FbfftTiled(d) => format!("fbfft_tiled.fprop.d{d}"),
+            Strategy::Direct => "direct".into(),
+            Strategy::Im2col => "im2col".into(),
+        }
+    }
+
+    pub fn from_tag(tag: &str) -> Option<Strategy> {
+        Some(match tag {
+            "vendor" => Strategy::Vendor,
+            "vendor_fft" => Strategy::VendorFft,
+            "fbfft" => Strategy::Fbfft,
+            "direct" => Strategy::Direct,
+            "im2col" => Strategy::Im2col,
+            t if t.starts_with("fbfft_tiled") => {
+                let d = t.rsplit(".d").next()?.parse().ok()?;
+                Strategy::FbfftTiled(d)
+            }
+            _ => return None,
+        })
+    }
+
+    /// Frequency-domain strategies can't serve strided layers (paper §2).
+    pub fn supports_stride(&self, stride: usize) -> bool {
+        stride == 1 || matches!(self, Strategy::Vendor)
+    }
+}
+
+impl fmt::Display for Strategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.tag())
+    }
+}
+
+/// The three training passes of §2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Pass {
+    Fprop,
+    Bprop,
+    AccGrad,
+}
+
+impl Pass {
+    pub const ALL: [Pass; 3] = [Pass::Fprop, Pass::Bprop, Pass::AccGrad];
+
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Pass::Fprop => "fprop",
+            Pass::Bprop => "bprop",
+            Pass::AccGrad => "accgrad",
+        }
+    }
+}
+
+impl fmt::Display for Pass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.tag())
+    }
+}
+
+/// Manifest artifact name for (spec, strategy, pass).
+pub fn artifact_name(spec: &str, strategy: Strategy, pass: Pass) -> String {
+    match strategy {
+        Strategy::FbfftTiled(d) => {
+            // tiled artifacts exist for fprop only (see aot.py)
+            format!("conv.{spec}.fbfft_tiled.{}.d{d}", pass.tag())
+        }
+        _ => format!("conv.{spec}.{}.{}", strategy.tag(), pass.tag()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tags_round_trip() {
+        for s in [Strategy::Vendor, Strategy::VendorFft, Strategy::Fbfft,
+                  Strategy::Direct, Strategy::Im2col] {
+            assert_eq!(Strategy::from_tag(&s.tag()), Some(s));
+        }
+    }
+
+    #[test]
+    fn stride_gating() {
+        assert!(Strategy::Vendor.supports_stride(4));
+        assert!(!Strategy::Fbfft.supports_stride(4));
+        assert!(Strategy::Fbfft.supports_stride(1));
+        assert!(!Strategy::VendorFft.supports_stride(2));
+    }
+
+    #[test]
+    fn artifact_names_match_aot_convention() {
+        assert_eq!(artifact_name("swp.k3.y8", Strategy::Fbfft, Pass::Fprop),
+                   "conv.swp.k3.y8.fbfft.fprop");
+        assert_eq!(artifact_name("tile.x57", Strategy::FbfftTiled(8),
+                                 Pass::Fprop),
+                   "conv.tile.x57.fbfft_tiled.fprop.d8");
+    }
+}

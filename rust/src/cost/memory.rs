@@ -1,0 +1,164 @@
+//! Temporary-memory model — the paper's §6 accounting of frequency-domain
+//! convolution's buffer overhead:
+//!
+//! * per tensor role (input/output/weight): one frequency buffer and one
+//!   complex-transposed buffer (until the in-place transposed CGEMM
+//!   removes the latter — the paper mentions having built it; we model
+//!   both states);
+//! * the weight-tensor buffer dominates and is minibatch-independent;
+//! * cuFFT additionally needs the **explicitly padded duplicates** of all
+//!   three tensors plus plan workspace; fbfft needs none of that below
+//!   size 64 ('with fbfft padding is implicit and no temporary memory
+//!   buffer is needed until we reach size 64');
+//! * tiling shrinks scratch further by limiting concurrent tiles.
+
+use crate::conv::ConvProblem;
+
+/// Bytes of temporary memory for one frequency-domain conv layer.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MemoryFootprint {
+    /// frequency-domain buffers (re+im or complex), all three roles
+    pub freq_buffers: usize,
+    /// transposed duplicates for the CGEMM (0 with in-place transpose)
+    pub transpose_buffers: usize,
+    /// explicit zero-padded input/weight/output duplicates (vendor only)
+    pub padded_copies: usize,
+    /// FFT plan workspace (vendor only; Bluestein-style scratch)
+    pub plan_workspace: usize,
+}
+
+impl MemoryFootprint {
+    pub fn total(&self) -> usize {
+        self.freq_buffers + self.transpose_buffers + self.padded_copies
+            + self.plan_workspace
+    }
+}
+
+const C64: usize = 8; // bytes per complex f32 bin
+const F32: usize = 4;
+
+fn freq_elems(p: &ConvProblem, n: usize) -> (usize, usize, usize) {
+    let bins = (n / 2 + 1) * n;
+    (p.s * p.f * bins, p.fo * p.f * bins, p.s * p.fo * bins)
+}
+
+/// Vendor (cuFFT-style) footprint on basis `n`.
+pub fn vendor_footprint(p: &ConvProblem, n: usize,
+                        in_place_cgemm: bool) -> MemoryFootprint {
+    let (fi, fw, fo) = freq_elems(p, n);
+    MemoryFootprint {
+        freq_buffers: (fi + fw + fo) * C64,
+        transpose_buffers: if in_place_cgemm {
+            0
+        } else {
+            (fi + fw + fo) * C64
+        },
+        // padded duplicates of the real tensors, each on the n×n basis
+        padded_copies: ((p.s * p.f + p.fo * p.f + p.s * p.fo) * n * n) * F32,
+        // cufftPlan workspace ≈ one extra transform-sized buffer per
+        // batched call (three calls live at once in the pipeline)
+        plan_workspace: 3 * n * n * C64,
+    }
+}
+
+/// fbfft footprint on basis `n`: implicit padding (no duplicates), fused
+/// transposes (no transpose buffers); above size 64 the paper's
+/// implementation starts needing per-call scratch, modeled as one
+/// transform panel.
+pub fn fbfft_footprint(p: &ConvProblem, n: usize) -> MemoryFootprint {
+    let (fi, fw, fo) = freq_elems(p, n);
+    MemoryFootprint {
+        freq_buffers: (fi + fw + fo) * C64,
+        transpose_buffers: 0,
+        padded_copies: 0,
+        plan_workspace: if n >= 64 { n * n * C64 } else { 0 },
+    }
+}
+
+/// Tiled-fbfft footprint with output tile `d` and `parallel_tiles` tiles
+/// resident at once ('just the tiles which do run in parallel need their
+/// scratch space', §6).
+pub fn tiled_footprint(p: &ConvProblem, d: usize,
+                       parallel_tiles: usize) -> MemoryFootprint {
+    let n_t = (d + p.kh.max(p.kw) - 1).next_power_of_two();
+    let mut tile_p = *p;
+    tile_p.h = d + p.kh - 1;
+    tile_p.w = d + p.kw - 1;
+    let one = fbfft_footprint(&tile_p, n_t);
+    MemoryFootprint {
+        freq_buffers: one.freq_buffers * parallel_tiles,
+        transpose_buffers: 0,
+        padded_copies: 0,
+        plan_workspace: one.plan_workspace * parallel_tiles,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn l5() -> ConvProblem {
+        ConvProblem::square(128, 384, 384, 13, 3)
+    }
+
+    #[test]
+    fn weight_buffer_dominates_and_is_batch_independent() {
+        // paper §6: 'generally limited by the weight tensor which is
+        // independent of the mini-batch size'
+        let p = l5();
+        let n = 16;
+        let (fi, fw, fo) = freq_elems(&p, n);
+        assert!(fw > fi && fw > fo); // 384·384 > 128·384
+        let mut small_batch = p;
+        small_batch.s = 1;
+        let (_, fw2, _) = freq_elems(&small_batch, n);
+        assert_eq!(fw, fw2);
+    }
+
+    #[test]
+    fn fbfft_needs_no_padding_or_transpose_memory() {
+        let p = l5();
+        let v = vendor_footprint(&p, 16, false);
+        let f = fbfft_footprint(&p, 16);
+        assert_eq!(f.padded_copies, 0);
+        assert_eq!(f.transpose_buffers, 0);
+        assert!(v.padded_copies > 0 && v.transpose_buffers > 0);
+        assert!(f.total() < v.total());
+        // below 64: zero scratch beyond the frequency buffers themselves
+        assert_eq!(f.plan_workspace, 0);
+        assert!(fbfft_footprint(&p, 64).plan_workspace > 0);
+    }
+
+    #[test]
+    fn in_place_cgemm_removes_the_transpose_buffers() {
+        // the paper's 'in-place transposed batched CGEMM' improvement
+        let p = l5();
+        let with = vendor_footprint(&p, 16, false);
+        let without = vendor_footprint(&p, 16, true);
+        assert_eq!(with.total() - without.total(), with.transpose_buffers);
+    }
+
+    #[test]
+    fn tiling_bounds_scratch_by_parallelism() {
+        // big image, small kernel: tiles of d=8 with 4 resident tiles use
+        // far less scratch than the untiled 64-basis pipeline
+        let p = ConvProblem::square(32, 64, 64, 57, 3);
+        let untiled = fbfft_footprint(&p, 64);
+        let tiled = tiled_footprint(&p, 8, 4);
+        assert!(tiled.total() < untiled.total(),
+                "{} vs {}", tiled.total(), untiled.total());
+        // and it scales linearly in resident tiles
+        assert_eq!(tiled_footprint(&p, 8, 8).freq_buffers,
+                   2 * tiled.freq_buffers);
+    }
+
+    #[test]
+    fn footprints_are_megabyte_scale_at_paper_sizes() {
+        // sanity: L2 of Table 4 on a 64-basis needs hundreds of MB in
+        // vendor mode — consistent with the paper's 'memory pressure'
+        // failures (black areas of Figures 1-6)
+        let p = ConvProblem::square(128, 64, 64, 64, 9);
+        let v = vendor_footprint(&p, 64, false);
+        assert!(v.total() > 500 << 20, "{}", v.total());
+    }
+}

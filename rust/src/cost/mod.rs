@@ -1,0 +1,144 @@
+//! Analytical performance model — the substitution for the paper's K40m
+//! testbed (DESIGN.md §3).
+//!
+//! Two roles:
+//!
+//! 1. **Metric definitions** the benches share: FLOP counts for the
+//!    direct and Table-1 frequency pipelines, and the paper's TRED/s
+//!    ('trillion equivalent time-domain reductions per second', Table 4
+//!    col. 7) which compares efficiency across problem and padding sizes.
+//! 2. **The K40m model** that fills the full 8,232-configuration plane of
+//!    Figures 1–6: a roofline-plus-overhead model of the cuDNN unrolled
+//!    GEMM and the cuFFT convolution pipeline, anchored on the paper's
+//!    published hardware constants and calibrated against its Table-4
+//!    rows. The measured PJRT subset anchors the *shape*; the model
+//!    extrapolates where running 8k XLA compiles is infeasible.
+
+use crate::conv::ConvProblem;
+
+pub mod memory;
+pub mod model;
+
+pub use model::{CudnnModel, CufftConvModel, K40m};
+
+/// Multiply-add count of a direct (time-domain) fprop — one reduction is
+/// one fused multiply-add, so FLOPs = 2·reductions.
+pub fn direct_flops(p: &ConvProblem) -> f64 {
+    2.0 * p.reductions() as f64
+}
+
+/// FLOPs of one complex 1-D FFT of size n (the standard 5·n·log2 n).
+pub fn cfft_flops(n: usize) -> f64 {
+    5.0 * n as f64 * (n as f64).log2().max(1.0)
+}
+
+/// FLOPs of one 2-D R2C/C2R FFT on an n×n basis: n real rows at half the
+/// complex cost plus n/2+1 complex columns.
+pub fn rfft2_flops(n: usize) -> f64 {
+    let rows = n as f64 * 0.5 * cfft_flops(n);
+    let cols = (n as f64 / 2.0 + 1.0) * cfft_flops(n);
+    rows + cols
+}
+
+/// Per-stage FLOP/byte counts of the Table-1 pipeline for one pass.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PipelineCost {
+    pub fft_a: f64,
+    pub fft_b: f64,
+    pub cgemm: f64,
+    pub ifft_c: f64,
+    /// bytes moved by the explicit transposes (vendor mode only)
+    pub trans_bytes: f64,
+    /// number of distinct kernel launches (latency term)
+    pub launches: f64,
+}
+
+impl PipelineCost {
+    pub fn flops(&self) -> f64 {
+        self.fft_a + self.fft_b + self.cgemm + self.ifft_c
+    }
+}
+
+/// Cost of the frequency pipeline for fprop on basis `n` (bprop/accGrad
+/// are symmetric up to which operand pair is transformed — the property
+/// behind the paper's 'all three passes roughly equal', §4.1).
+pub fn pipeline_cost(p: &ConvProblem, n: usize, vendor: bool) -> PipelineCost {
+    let nf = (n / 2 + 1) as f64;
+    let bins = nf * n as f64;
+    let t_in = (p.s * p.f) as f64;
+    let t_wei = (p.fo * p.f) as f64;
+    let t_out = (p.s * p.fo) as f64;
+    PipelineCost {
+        fft_a: t_in * rfft2_flops(n),
+        fft_b: t_wei * rfft2_flops(n),
+        // complex MAC = 8 real flops, reduction over f per bin
+        cgemm: 8.0 * bins * (p.s * p.f * p.fo) as f64,
+        ifft_c: t_out * rfft2_flops(n),
+        trans_bytes: if vendor {
+            // each of the three tensors transposed once, 8 B/complex, r+w
+            16.0 * bins * (t_in + t_wei + t_out)
+        } else {
+            0.0
+        },
+        launches: if vendor { 7.0 } else { 3.0 },
+    }
+}
+
+/// The paper's TRED/s metric in units of 10¹² reductions per second.
+pub fn tred_per_sec(p: &ConvProblem, seconds: f64) -> f64 {
+    p.reductions() as f64 / seconds / 1e12
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn direct_flops_match_paper_formula() {
+        // L2 of Table 4: S=128, f=f'=64, h=w=64, k=9 → y=56
+        let p = ConvProblem::square(128, 64, 64, 64, 9);
+        let red = 128f64 * 64.0 * 64.0 * 81.0 * 56.0 * 56.0;
+        assert_eq!(direct_flops(&p), 2.0 * red);
+    }
+
+    #[test]
+    fn tred_reproduces_table4_order_of_magnitude() {
+        // paper: L2 fprop 46.44 ms → reported 7.49 TRED/s. The printed
+        // formula (S·f·f'·k²·y², §4.2) at the printed time gives 2.87 —
+        // the paper's own rows are internally inconsistent by ~2×, so we
+        // pin our implementation to the *formula* and assert the order of
+        // magnitude of the reported value.
+        let p = ConvProblem::square(128, 64, 64, 64, 9);
+        let tred = tred_per_sec(&p, 46.44e-3);
+        assert!((2.86..2.88).contains(&tred), "tred={tred}");
+        assert!(tred > 1.0 && tred < 15.0);
+    }
+
+    #[test]
+    fn fft_cost_grows_nlogn() {
+        let r = rfft2_flops(64) / rfft2_flops(32);
+        // n² log n scaling: 4·(6/5) = 4.8
+        assert!((r - 4.8).abs() < 0.1, "ratio={r}");
+    }
+
+    #[test]
+    fn pipeline_kernel_size_independence() {
+        // the frequency pipeline's cost must NOT depend on k (the paper's
+        // central asymmetry: big kernels are free in Fourier space)
+        let a = pipeline_cost(&ConvProblem::square(16, 16, 16, 32, 3), 32,
+                              false);
+        let b = pipeline_cost(&ConvProblem::square(16, 16, 16, 32, 13), 32,
+                              false);
+        assert_eq!(a.flops(), b.flops());
+    }
+
+    #[test]
+    fn vendor_pays_transposes_and_launches() {
+        let p = ConvProblem::square(16, 16, 16, 32, 5);
+        let v = pipeline_cost(&p, 32, true);
+        let f = pipeline_cost(&p, 32, false);
+        assert!(v.trans_bytes > 0.0 && f.trans_bytes == 0.0);
+        assert!(v.launches > f.launches);
+        assert_eq!(v.flops(), f.flops());
+    }
+}

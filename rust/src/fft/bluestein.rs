@@ -1,0 +1,135 @@
+//! Bluestein's chirp-z algorithm for sizes whose factorization escapes
+//! the radix set — 'the expensive Bluestein algorithm' the paper notes
+//! cuFFT falls back to (§3.2). Its cost is what makes the autotuner's
+//! smooth-size interpolation worthwhile, so the substrate must have it.
+//!
+//! `X_k = c_k · (a ⊛ b)_k` with `a_j = x_j·c_j`, `b_j = conj(c_j)` and
+//! chirp `c_j = e^{-πi j²/n}`, the circular convolution running on a
+//! power-of-two mixed-radix plan of size `m ≥ 2n-1`.
+
+use super::complex::C32;
+use super::radix::MixedRadix;
+
+pub struct Bluestein {
+    n: usize,
+    m: usize,
+    inner: MixedRadix,
+    /// chirp c_j, j < n (forward sign)
+    chirp: Vec<C32>,
+    /// FFT of the symmetric chirp kernel b, pre-transformed once
+    kernel_f: Vec<C32>,
+}
+
+impl Bluestein {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1);
+        let m = (2 * n - 1).next_power_of_two();
+        let inner = MixedRadix::new(m);
+        // j² mod 2n in integers keeps the chirp angle exact for large j
+        let chirp: Vec<C32> = (0..n)
+            .map(|j| {
+                let jj = ((j as u64 * j as u64) % (2 * n as u64)) as f64;
+                let ang = -std::f64::consts::PI * jj / n as f64;
+                C32::new(ang.cos() as f32, ang.sin() as f32)
+            })
+            .collect();
+        let mut b = vec![C32::ZERO; m];
+        b[0] = chirp[0].conj();
+        for j in 1..n {
+            b[j] = chirp[j].conj();
+            b[m - j] = chirp[j].conj();
+        }
+        let kernel_f = inner.transform(&b, false);
+        Bluestein { n, m, inner, chirp, kernel_f }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// Forward (or inverse, unnormalized) DFT of arbitrary size `n`.
+    pub fn transform(&self, input: &[C32], inverse: bool) -> Vec<C32> {
+        assert_eq!(input.len(), self.n);
+        let chirp = |j: usize| {
+            if inverse {
+                self.chirp[j].conj()
+            } else {
+                self.chirp[j]
+            }
+        };
+        let mut a = vec![C32::ZERO; self.m];
+        for j in 0..self.n {
+            a[j] = input[j] * chirp(j);
+        }
+        let mut af = self.inner.transform(&a, false);
+        for (k, v) in af.iter_mut().enumerate() {
+            let kf = if inverse {
+                self.kernel_f[k].conj()
+            } else {
+                self.kernel_f[k]
+            };
+            *v = *v * kf;
+        }
+        let conv = self.inner.transform(&af, true);
+        let scale = 1.0 / self.m as f32;
+        (0..self.n).map(|k| conv[k].scale(scale) * chirp(k)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::naive_dft;
+
+    fn rand_signal(n: usize, seed: u64) -> Vec<C32> {
+        let mut s = seed.wrapping_mul(0x2545F4914F6CDD1D) | 1;
+        let mut next = move || {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            (s as f64 / u64::MAX as f64) as f32 * 2.0 - 1.0
+        };
+        (0..n).map(|_| C32::new(next(), next())).collect()
+    }
+
+    #[test]
+    fn matches_naive_on_primes() {
+        for n in [11usize, 13, 17, 23, 31, 61, 127] {
+            let x = rand_signal(n, n as u64);
+            let bs = Bluestein::new(n);
+            let got = bs.transform(&x, false);
+            let want = naive_dft(&x, false);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((*g - *w).abs() < 2e-3,
+                        "n={n}: {g:?} vs {w:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_naive_on_smooth_sizes_too() {
+        // must be algorithm-agnostic correct, not just prime-only
+        for n in [6usize, 12, 16] {
+            let x = rand_signal(n, 5);
+            let bs = Bluestein::new(n);
+            let got = bs.transform(&x, false);
+            let want = naive_dft(&x, false);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((*g - *w).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn round_trip_prime() {
+        let n = 13;
+        let x = rand_signal(n, 3);
+        let bs = Bluestein::new(n);
+        let f = bs.transform(&x, false);
+        let back = bs.transform(&f, true);
+        for (b, orig) in back.iter().zip(&x) {
+            let b = b.scale(1.0 / n as f32);
+            assert!((b - *orig).abs() < 1e-3);
+        }
+    }
+}

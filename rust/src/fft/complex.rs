@@ -1,0 +1,188 @@
+//! Single-precision complex scalar, built from scratch (the substrate
+//! rule: no external numerics crates on the hot path).
+
+use std::ops::{Add, AddAssign, Mul, MulAssign, Neg, Sub, SubAssign};
+
+/// `f32` complex number. `#[repr(C)]` so slices of `C32` can be viewed as
+/// interleaved `[re, im]` `f32` pairs when crossing into PJRT literals.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+#[repr(C)]
+pub struct C32 {
+    pub re: f32,
+    pub im: f32,
+}
+
+impl C32 {
+    pub const ZERO: C32 = C32 { re: 0.0, im: 0.0 };
+    pub const ONE: C32 = C32 { re: 1.0, im: 0.0 };
+
+    #[inline(always)]
+    pub const fn new(re: f32, im: f32) -> Self {
+        C32 { re, im }
+    }
+
+    /// `e^{iθ}`.
+    #[inline]
+    pub fn cis(theta: f32) -> Self {
+        let (s, c) = theta.sin_cos();
+        C32 { re: c, im: s }
+    }
+
+    /// The n-th root of unity `e^{-2πi k/n}` (forward FFT sign). Computed
+    /// in f64 so twiddle tables stay accurate for large n.
+    #[inline]
+    pub fn root_of_unity(k: i64, n: usize) -> Self {
+        let ang = -2.0 * std::f64::consts::PI * (k as f64) / (n as f64);
+        C32 { re: ang.cos() as f32, im: ang.sin() as f32 }
+    }
+
+    #[inline(always)]
+    pub fn conj(self) -> Self {
+        C32 { re: self.re, im: -self.im }
+    }
+
+    #[inline(always)]
+    pub fn scale(self, s: f32) -> Self {
+        C32 { re: self.re * s, im: self.im * s }
+    }
+
+    #[inline(always)]
+    pub fn norm_sq(self) -> f32 {
+        self.re * self.re + self.im * self.im
+    }
+
+    #[inline(always)]
+    pub fn abs(self) -> f32 {
+        self.norm_sq().sqrt()
+    }
+
+    /// Fused multiply-add `self + a*b` — the butterfly workhorse.
+    #[inline(always)]
+    pub fn mul_add(self, a: C32, b: C32) -> Self {
+        C32 {
+            re: a.re.mul_add(b.re, (-a.im).mul_add(b.im, self.re)),
+            im: a.re.mul_add(b.im, a.im.mul_add(b.re, self.im)),
+        }
+    }
+
+    /// Multiply by `i` (quarter turn) without a full complex multiply.
+    #[inline(always)]
+    pub fn mul_i(self) -> Self {
+        C32 { re: -self.im, im: self.re }
+    }
+}
+
+impl Add for C32 {
+    type Output = C32;
+    #[inline(always)]
+    fn add(self, o: C32) -> C32 {
+        C32 { re: self.re + o.re, im: self.im + o.im }
+    }
+}
+
+impl Sub for C32 {
+    type Output = C32;
+    #[inline(always)]
+    fn sub(self, o: C32) -> C32 {
+        C32 { re: self.re - o.re, im: self.im - o.im }
+    }
+}
+
+impl Mul for C32 {
+    type Output = C32;
+    #[inline(always)]
+    fn mul(self, o: C32) -> C32 {
+        C32 {
+            re: self.re * o.re - self.im * o.im,
+            im: self.re * o.im + self.im * o.re,
+        }
+    }
+}
+
+impl Neg for C32 {
+    type Output = C32;
+    #[inline(always)]
+    fn neg(self) -> C32 {
+        C32 { re: -self.re, im: -self.im }
+    }
+}
+
+impl AddAssign for C32 {
+    #[inline(always)]
+    fn add_assign(&mut self, o: C32) {
+        self.re += o.re;
+        self.im += o.im;
+    }
+}
+
+impl SubAssign for C32 {
+    #[inline(always)]
+    fn sub_assign(&mut self, o: C32) {
+        self.re -= o.re;
+        self.im -= o.im;
+    }
+}
+
+impl MulAssign for C32 {
+    #[inline(always)]
+    fn mul_assign(&mut self, o: C32) {
+        *self = *self * o;
+    }
+}
+
+impl From<f32> for C32 {
+    fn from(re: f32) -> Self {
+        C32 { re, im: 0.0 }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn field_axioms_spot() {
+        let a = C32::new(1.5, -2.0);
+        let b = C32::new(-0.5, 3.0);
+        let c = C32::new(2.0, 0.25);
+        assert_eq!(a + b, b + a);
+        assert_eq!((a + b) + c, a + (b + c));
+        let lhs = a * (b + c);
+        let rhs = a * b + a * c;
+        assert!((lhs - rhs).abs() < 1e-5);
+    }
+
+    #[test]
+    fn conj_and_norm() {
+        let a = C32::new(3.0, 4.0);
+        assert_eq!(a.norm_sq(), 25.0);
+        assert_eq!((a * a.conj()).re, 25.0);
+        assert!((a * a.conj()).im.abs() < 1e-6);
+    }
+
+    #[test]
+    fn roots_of_unity_cycle() {
+        let w = C32::root_of_unity(1, 8);
+        let mut acc = C32::ONE;
+        for _ in 0..8 {
+            acc = acc * w;
+        }
+        assert!((acc - C32::ONE).abs() < 1e-5);
+    }
+
+    #[test]
+    fn mul_i_is_quarter_turn() {
+        let a = C32::new(2.0, 5.0);
+        assert_eq!(a.mul_i(), a * C32::new(0.0, 1.0));
+    }
+
+    #[test]
+    fn mul_add_matches_expanded() {
+        let a = C32::new(0.3, -1.2);
+        let b = C32::new(2.0, 0.7);
+        let acc = C32::new(-5.0, 4.0);
+        let got = acc.mul_add(a, b);
+        let want = acc + a * b;
+        assert!((got - want).abs() < 1e-5);
+    }
+}

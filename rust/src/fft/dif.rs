@@ -1,0 +1,182 @@
+//! Decimation-in-frequency / decimation-in-time pair with **bit-reversal
+//! elision** — the optimization the paper plans in §5.1/§6 and derives in
+//! the Supplement (§8.2):
+//!
+//! > "bit reversal portions can be eliminated with the FFT using
+//! >  *decimation in frequency* (DIF) and the IFFT with *decimation in
+//! >  time* (DIT)"
+//!
+//! A DIF forward transform consumes natural-order input and produces
+//! **bit-reversed** output *without* a permutation pass; a DIT inverse
+//! consumes bit-reversed input and produces natural-order output, again
+//! permutation-free. The frequency-domain stage between them (the conv
+//! pipeline's pointwise CGEMM) is order-agnostic — every bin is
+//! independent — so the two permutations cancel out of the whole
+//! pipeline and are simply never executed.
+//!
+//! This module provides the C2C core on the same cached-plan machinery
+//! as `fbfft_host`; `benches/ablation.rs` measures the saving.
+
+use super::complex::C32;
+use super::fbfft_host::FbfftPlan;
+
+impl FbfftPlan {
+    /// Forward DIF butterfly pass: natural-order input → bit-reversed
+    /// output, NO permutation. Stages run large-to-small (the mirror
+    /// image of DIT), twiddles applied on the way out of each butterfly.
+    pub fn cfft_dif_bitrev_out(&self, buf: &mut [C32], inverse: bool) {
+        let n = self.len();
+        debug_assert_eq!(buf.len(), n);
+        let log2n = n.trailing_zeros();
+        // twiddle layout in the shared LUT: stage s (DIT numbering) has
+        // half-block 2^s at offset 2^s - 1; DIF walks it backwards.
+        for s in (0..log2n).rev() {
+            let half = 1usize << s;
+            let m = half << 1;
+            let tw_off = half - 1;
+            let mut base = 0;
+            while base < n {
+                for j in 0..half {
+                    let w = self.twiddle(tw_off + j, inverse);
+                    let a = buf[base + j];
+                    let b = buf[base + j + half];
+                    buf[base + j] = a + b;
+                    buf[base + j + half] = (a - b) * w;
+                }
+                base += m;
+            }
+        }
+    }
+
+    /// Inverse DIT butterfly pass: bit-reversed input → natural-order
+    /// output, NO permutation (the bit reversal DIT normally performs up
+    /// front is exactly the order `cfft_dif_bitrev_out` left the data in).
+    /// Unnormalized, like the planner's inverse.
+    pub fn cfft_dit_bitrev_in(&self, buf: &mut [C32], inverse: bool) {
+        let n = self.len();
+        debug_assert_eq!(buf.len(), n);
+        let log2n = n.trailing_zeros();
+        for s in 0..log2n {
+            let half = 1usize << s;
+            let m = half << 1;
+            let tw_off = half - 1;
+            let mut base = 0;
+            while base < n {
+                for j in 0..half {
+                    let w = self.twiddle(tw_off + j, inverse);
+                    let a = buf[base + j];
+                    let b = buf[base + j + half] * w;
+                    buf[base + j] = a + b;
+                    buf[base + j + half] = a - b;
+                }
+                base += m;
+            }
+        }
+    }
+
+    /// The §8.2 round trip: DIF forward, pointwise work in bit-reversed
+    /// order, DIT inverse — zero permutations end to end. Returns the
+    /// normalized identity for testing/benching.
+    pub fn round_trip_no_bitrev(&self, buf: &mut [C32]) {
+        self.cfft_dif_bitrev_out(buf, false);
+        // (frequency-domain pointwise stage would run here, bit-reversed)
+        self.cfft_dit_bitrev_in(buf, true);
+        let s = 1.0 / self.len() as f32;
+        for c in buf.iter_mut() {
+            *c = c.scale(s);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::fbfft_host;
+    use crate::fft::naive_dft;
+    use crate::util::Rng;
+
+    fn rand_signal(n: usize, seed: u64) -> Vec<C32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| C32::new(rng.normal(), rng.normal())).collect()
+    }
+
+    fn bitrev_perm(n: usize) -> Vec<usize> {
+        let lg = n.trailing_zeros();
+        (0..n).map(|i| ((i as u32).reverse_bits() >> (32 - lg)) as usize)
+            .collect()
+    }
+
+    #[test]
+    fn dif_output_is_bitreversed_dft() {
+        for n in [8usize, 16, 32, 64] {
+            let x = rand_signal(n, n as u64);
+            let plan = fbfft_host::cached(n);
+            let mut buf = x.clone();
+            plan.cfft_dif_bitrev_out(&mut buf, false);
+            let want = naive_dft(&x, false);
+            let perm = bitrev_perm(n);
+            for (i, &p) in perm.iter().enumerate() {
+                assert!((buf[i] - want[p]).abs() < 1e-3 * (n as f32).sqrt(),
+                        "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn dit_consumes_bitreversed_spectrum() {
+        for n in [8usize, 16, 32] {
+            let x = rand_signal(n, 100 + n as u64);
+            let want = naive_dft(&x, false);
+            let perm = bitrev_perm(n);
+            // hand the DIT inverse a bit-reversed spectrum
+            let mut buf = vec![C32::ZERO; n];
+            for (i, &p) in perm.iter().enumerate() {
+                buf[i] = want[p];
+            }
+            let plan = fbfft_host::cached(n);
+            plan.cfft_dit_bitrev_in(&mut buf, true);
+            for (b, o) in buf.iter().zip(&x) {
+                let b = b.scale(1.0 / n as f32);
+                assert!((b - *o).abs() < 1e-3, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn round_trip_without_any_permutation() {
+        for n in [8usize, 64, 256] {
+            let x = rand_signal(n, 7 * n as u64);
+            let plan = fbfft_host::cached(n);
+            let mut buf = x.clone();
+            plan.round_trip_no_bitrev(&mut buf);
+            for (b, o) in buf.iter().zip(&x) {
+                assert!((*b - *o).abs() < 1e-3, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn pointwise_product_in_bitreversed_order_is_convolution() {
+        // the actual §8.2 claim: circular convolution works entirely in
+        // bit-reversed frequency order
+        let n = 16usize;
+        let a = rand_signal(n, 1);
+        let b = rand_signal(n, 2);
+        let plan = fbfft_host::cached(n);
+        let (mut fa, mut fb) = (a.clone(), b.clone());
+        plan.cfft_dif_bitrev_out(&mut fa, false);
+        plan.cfft_dif_bitrev_out(&mut fb, false);
+        let mut prod: Vec<C32> =
+            fa.iter().zip(&fb).map(|(x, y)| *x * *y).collect();
+        plan.cfft_dit_bitrev_in(&mut prod, true);
+        // naive circular convolution
+        for t in 0..n {
+            let mut want = C32::ZERO;
+            for j in 0..n {
+                want += a[j] * b[(n + t - j) % n];
+            }
+            let got = prod[t].scale(1.0 / n as f32);
+            assert!((got - want).abs() < 1e-2, "t={t}: {got:?} vs {want:?}");
+        }
+    }
+}

@@ -1,0 +1,459 @@
+//! `fbfft_host` — the batched small-transform specialist (paper §5).
+//!
+//! The host-side twin of the Pallas kernels, carrying the paper's four
+//! design points onto CPU so the Figure-7/8 benches can measure them
+//! directly against the vendor-analogue planner:
+//!
+//! 1. **sizes 8–256 only, powers of two** — a fixed-size stack buffer per
+//!    transform ('registers'), per-size cached twiddle + bit-reversal
+//!    tables, fully unrolled radix-2 stages;
+//! 2. **implicit zero-copy padding** (§5.1) — callers pass `n_in ≤ n`;
+//!    the load loop simply stops at `n_in`. No padded scratch tensor is
+//!    ever allocated, where the vendor path must materialize one;
+//! 3. **two real transforms packed into one complex FFT** (§5.2) —
+//!    consecutive batch rows share one butterfly pass;
+//! 4. **fused transposed output** (§5.1) — the 2-D transform stores the
+//!    frequency-transposed `(kw, kh, batch)` layout the CGEMM stage wants,
+//!    eliding the separate transposition pass entirely.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::complex::C32;
+use super::real::rfft_len;
+
+pub const MAX_N: usize = 256;
+
+/// Per-size cached state: stage twiddles + bit reversal.
+pub struct FbfftPlan {
+    n: usize,
+    log2n: u32,
+    /// bit-reversal permutation of 0..n
+    bitrev: Vec<u32>,
+    /// stage-major twiddles: for stage s (len = 2^s half-block), entries
+    /// `tw[s][j] = W_{2^{s+1}}^j`, flattened with offsets `2^s - 1`.
+    twiddles: Vec<C32>,
+    /// unpack roots `W_n^k`, k = 0..n/2
+    unpack: Vec<C32>,
+}
+
+impl FbfftPlan {
+    pub fn new(n: usize) -> Self {
+        assert!(n.is_power_of_two() && (2..=MAX_N).contains(&n),
+                "fbfft supports power-of-two sizes 2..=256, got {n}");
+        let log2n = n.trailing_zeros();
+        let mut bitrev = vec![0u32; n];
+        for (i, b) in bitrev.iter_mut().enumerate() {
+            *b = (i as u32).reverse_bits() >> (32 - log2n);
+        }
+        // twiddle LUT: total Σ 2^s for s in 0..log2n = n-1 entries
+        let mut twiddles = Vec::with_capacity(n - 1);
+        for s in 0..log2n {
+            let m = 1usize << (s + 1); // block size of this stage
+            for j in 0..(m / 2) {
+                twiddles.push(C32::root_of_unity(j as i64, m));
+            }
+        }
+        let unpack = (0..=n / 2)
+            .map(|k| C32::root_of_unity(k as i64, n))
+            .collect();
+        FbfftPlan { n, log2n, bitrev, twiddles, unpack }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// In-place complex FFT of a `self.n`-length buffer ('registers').
+    /// Iterative radix-2 DIT with the cached LUTs.
+    #[inline]
+    pub fn cfft_in_place(&self, buf: &mut [C32], inverse: bool) {
+        debug_assert_eq!(buf.len(), self.n);
+        // bit-reversal permutation
+        for i in 0..self.n {
+            let j = self.bitrev[i] as usize;
+            if i < j {
+                buf.swap(i, j);
+            }
+        }
+        let mut tw_off = 0usize;
+        for s in 0..self.log2n {
+            let half = 1usize << s;
+            let m = half << 1;
+            let tw = &self.twiddles[tw_off..tw_off + half];
+            let mut base = 0;
+            while base < self.n {
+                for j in 0..half {
+                    let w = if inverse { tw[j].conj() } else { tw[j] };
+                    let a = buf[base + j];
+                    let b = buf[base + j + half] * w;
+                    buf[base + j] = a + b;
+                    buf[base + j + half] = a - b;
+                }
+                base += m;
+            }
+            tw_off += half;
+        }
+    }
+
+    /// Batched 1-D R2C with implicit zero padding: `input` is
+    /// `batch × n_in` row-major (`n_in ≤ n`), `out` is
+    /// `batch × (n/2+1)`. Consecutive rows are packed pairwise into one
+    /// complex transform (paper §5.2).
+    pub fn rfft_batch(&self, input: &[f32], n_in: usize, batch: usize,
+                      out: &mut [C32]) {
+        assert!(n_in <= self.n, "n_in {n_in} exceeds plan size {}", self.n);
+        assert_eq!(input.len(), batch * n_in);
+        let nf = rfft_len(self.n);
+        assert_eq!(out.len(), batch * nf);
+        let mut buf = [C32::ZERO; MAX_N];
+        let n = self.n;
+        let mut b = 0;
+        while b < batch {
+            let paired = b + 1 < batch;
+            let row_a = &input[b * n_in..(b + 1) * n_in];
+            // implicit padding: only the first n_in entries are loaded
+            if paired {
+                let row_b = &input[(b + 1) * n_in..(b + 2) * n_in];
+                for j in 0..n_in {
+                    buf[j] = C32::new(row_a[j], row_b[j]);
+                }
+            } else {
+                for j in 0..n_in {
+                    buf[j] = C32::new(row_a[j], 0.0);
+                }
+            }
+            buf[n_in..n].fill(C32::ZERO);
+            self.cfft_in_place(&mut buf[..n], false);
+            // Hermitian unpack of the packed pair:
+            // A[k] = (Z[k]+conj(Z[n-k]))/2, B[k] = -i(Z[k]-conj(Z[n-k]))/2
+            let oa = &mut out[b * nf..(b + 1) * nf];
+            for k in 0..nf {
+                let zk = buf[k];
+                let zc = buf[(n - k) % n].conj();
+                oa[k] = (zk + zc).scale(0.5);
+            }
+            if paired {
+                // second write borrows out again — split at the boundary
+                let (_, rest) = out.split_at_mut((b + 1) * nf);
+                let ob = &mut rest[..nf];
+                for k in 0..nf {
+                    let zk = buf[k];
+                    let zc = buf[(n - k) % n].conj();
+                    ob[k] = ((zk - zc).scale(0.5)).mul_i().scale(-1.0);
+                }
+            }
+            b += 2;
+        }
+    }
+
+    /// Batched 1-D C2R (normalized), pairwise-packed like `rfft_batch`,
+    /// clipped to the first `clip` samples per row.
+    pub fn irfft_batch(&self, spec: &[C32], batch: usize, clip: usize,
+                       out: &mut [f32]) {
+        let nf = rfft_len(self.n);
+        assert!(clip <= self.n);
+        assert_eq!(spec.len(), batch * nf);
+        assert_eq!(out.len(), batch * clip);
+        let n = self.n;
+        let scale = 1.0 / n as f32;
+        let mut buf = [C32::ZERO; MAX_N];
+        let mut b = 0;
+        while b < batch {
+            let paired = b + 1 < batch;
+            let sa = &spec[b * nf..(b + 1) * nf];
+            // rebuild Z = A + i·B on the full circle via Hermitian ext.
+            if paired {
+                let sb = &spec[(b + 1) * nf..(b + 2) * nf];
+                for k in 0..nf {
+                    buf[k] = sa[k] + sb[k].mul_i();
+                }
+                for k in nf..n {
+                    buf[k] = sa[n - k].conj() + sb[n - k].conj().mul_i();
+                }
+            } else {
+                for k in 0..nf {
+                    buf[k] = sa[k];
+                }
+                for k in nf..n {
+                    buf[k] = sa[n - k].conj();
+                }
+            }
+            self.cfft_in_place(&mut buf[..n], true);
+            let oa = &mut out[b * clip..(b + 1) * clip];
+            for (j, o) in oa.iter_mut().enumerate() {
+                *o = buf[j].re * scale;
+            }
+            if paired {
+                let (_, rest) = out.split_at_mut((b + 1) * clip);
+                for (j, o) in rest[..clip].iter_mut().enumerate() {
+                    *o = buf[j].im * scale;
+                }
+            }
+            b += 2;
+        }
+    }
+
+    /// Batched 2-D R2C with implicit padding and **fused transposed
+    /// output**: `input` is `batch × h_in × w_in` row-major, `out` is
+    /// `(n/2+1) × n × batch` — bin `[kw][kh][b]`, the HWBD layout the
+    /// frequency CGEMM consumes with zero extra transposition passes.
+    pub fn rfft2_batch_transposed(&self, input: &[f32], h_in: usize,
+                                  w_in: usize, batch: usize,
+                                  out: &mut [C32]) {
+        let n = self.n;
+        assert!(h_in <= n && w_in <= n, "image exceeds basis");
+        assert_eq!(input.len(), batch * h_in * w_in);
+        let nf = rfft_len(n);
+        assert_eq!(out.len(), nf * n * batch);
+        // scratch: one image's row-transformed planes, (h=n)×(nf)
+        let mut rows = vec![C32::ZERO; n * nf];
+        let mut col = [C32::ZERO; MAX_N];
+        let mut buf = [C32::ZERO; MAX_N];
+        for b in 0..batch {
+            let img = &input[b * h_in * w_in..(b + 1) * h_in * w_in];
+            // pass 1: R2C along rows, packing row pairs (paper §5.2); rows
+            // h_in..n are transforms of implicit zero rows => zero.
+            rows.fill(C32::ZERO);
+            let mut r = 0;
+            while r < h_in {
+                let paired = r + 1 < h_in;
+                let ra = &img[r * w_in..(r + 1) * w_in];
+                if paired {
+                    let rb = &img[(r + 1) * w_in..(r + 2) * w_in];
+                    for j in 0..w_in {
+                        buf[j] = C32::new(ra[j], rb[j]);
+                    }
+                } else {
+                    for j in 0..w_in {
+                        buf[j] = C32::new(ra[j], 0.0);
+                    }
+                }
+                buf[w_in..n].fill(C32::ZERO);
+                self.cfft_in_place(&mut buf[..n], false);
+                for k in 0..nf {
+                    let zk = buf[k];
+                    let zc = buf[(n - k) % n].conj();
+                    rows[r * nf + k] = (zk + zc).scale(0.5);
+                    if paired {
+                        rows[(r + 1) * nf + k] =
+                            ((zk - zc).scale(0.5)).mul_i().scale(-1.0);
+                    }
+                }
+                r += 2;
+            }
+            // pass 2: full C2C along columns; store transposed [kw][kh][b]
+            for kw in 0..nf {
+                for (r, c) in col[..n].iter_mut().enumerate() {
+                    *c = rows[r * nf + kw];
+                }
+                self.cfft_in_place(&mut col[..n], false);
+                for kh in 0..n {
+                    out[(kw * n + kh) * batch + b] = col[kh];
+                }
+            }
+        }
+    }
+
+    /// Batched 2-D C2R from the transposed `(n/2+1) × n × batch` layout,
+    /// normalized, clipped to `clip_h × clip_w` per image (the fused clip
+    /// of the convolution pipeline). Output `batch × clip_h × clip_w`.
+    pub fn irfft2_batch_transposed(&self, spec: &[C32], batch: usize,
+                                   clip_h: usize, clip_w: usize,
+                                   out: &mut [f32]) {
+        let n = self.n;
+        let nf = rfft_len(n);
+        assert_eq!(spec.len(), nf * n * batch);
+        assert!(clip_h <= n && clip_w <= n);
+        assert_eq!(out.len(), batch * clip_h * clip_w);
+        let scale = 1.0 / (n * n) as f32;
+        let mut rows = vec![C32::ZERO; n * nf];
+        let mut col = [C32::ZERO; MAX_N];
+        let mut buf = [C32::ZERO; MAX_N];
+        for b in 0..batch {
+            // pass 1: inverse along kh for each kw bin (input is already
+            // kw-major: a contiguous-ish walk, no pre-transpose needed)
+            for kw in 0..nf {
+                for kh in 0..n {
+                    col[kh] = spec[(kw * n + kh) * batch + b];
+                }
+                self.cfft_in_place(&mut col[..n], true);
+                for r in 0..clip_h {
+                    rows[r * nf + kw] = col[r];
+                }
+            }
+            // pass 2: C2R along rows for the clipped rows only
+            let img = &mut out[b * clip_h * clip_w..(b + 1) * clip_h * clip_w];
+            for r in 0..clip_h {
+                for k in 0..nf {
+                    buf[k] = rows[r * nf + k];
+                }
+                for k in nf..n {
+                    buf[k] = rows[r * nf + (n - k)].conj();
+                }
+                self.cfft_in_place(&mut buf[..n], true);
+                for c in 0..clip_w {
+                    img[r * clip_w + c] = buf[c].re * scale;
+                }
+            }
+        }
+    }
+
+    /// Reference unpack root accessor (used by conv engines).
+    pub fn unpack_root(&self, k: usize) -> C32 {
+        self.unpack[k]
+    }
+
+    /// Shared twiddle LUT accessor (stage-major layout; used by the
+    /// DIF/DIT no-bit-reversal variants in `fft::dif`).
+    #[inline]
+    pub fn twiddle(&self, idx: usize, inverse: bool) -> C32 {
+        let w = self.twiddles[idx];
+        if inverse { w.conj() } else { w }
+    }
+}
+
+/// Process-wide fbfft plan cache.
+pub fn cached(n: usize) -> Arc<FbfftPlan> {
+    static CACHE: OnceLock<Mutex<HashMap<usize, Arc<FbfftPlan>>>> =
+        OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut guard = cache.lock().expect("fbfft plan cache poisoned");
+    guard.entry(n).or_insert_with(|| Arc::new(FbfftPlan::new(n))).clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::real::{irfft, rfft};
+
+    fn rand_real(len: usize, seed: u64) -> Vec<f32> {
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        (0..len)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                (s as f64 / u64::MAX as f64) as f32 * 2.0 - 1.0
+            })
+            .collect()
+    }
+
+    #[test]
+    fn rejects_unsupported_sizes() {
+        for n in [0usize, 1, 3, 12, 512] {
+            assert!(std::panic::catch_unwind(|| FbfftPlan::new(n)).is_err(),
+                    "n={n} should be rejected");
+        }
+    }
+
+    #[test]
+    fn rfft_batch_matches_planner_all_sizes() {
+        for n in [2usize, 4, 8, 16, 32, 64, 128, 256] {
+            let batch = 5; // odd: exercises the unpaired tail
+            let x = rand_real(batch * n, n as u64);
+            let plan = FbfftPlan::new(n);
+            let mut out = vec![C32::ZERO; batch * (n / 2 + 1)];
+            plan.rfft_batch(&x, n, batch, &mut out);
+            for b in 0..batch {
+                let want = rfft(&x[b * n..(b + 1) * n], n);
+                for (k, w) in want.iter().enumerate() {
+                    let g = out[b * (n / 2 + 1) + k];
+                    assert!((g - *w).abs() < 2e-3 * (n as f32).sqrt(),
+                            "n={n} b={b} k={k}: {g:?} vs {w:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn implicit_padding_matches_explicit() {
+        let (n, n_in, batch) = (32usize, 13usize, 4usize);
+        let x = rand_real(batch * n_in, 7);
+        let plan = FbfftPlan::new(n);
+        let mut got = vec![C32::ZERO; batch * (n / 2 + 1)];
+        plan.rfft_batch(&x, n_in, batch, &mut got);
+        for b in 0..batch {
+            let mut padded = x[b * n_in..(b + 1) * n_in].to_vec();
+            padded.resize(n, 0.0);
+            let want = rfft(&padded, n);
+            for (k, w) in want.iter().enumerate() {
+                assert!((got[b * (n / 2 + 1) + k] - *w).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn irfft_batch_round_trip_with_clip() {
+        let (n, batch, clip) = (64usize, 7usize, 40usize);
+        let x = rand_real(batch * n, 3);
+        let plan = FbfftPlan::new(n);
+        let nf = n / 2 + 1;
+        let mut spec = vec![C32::ZERO; batch * nf];
+        plan.rfft_batch(&x, n, batch, &mut spec);
+        let mut back = vec![0f32; batch * clip];
+        plan.irfft_batch(&spec, batch, clip, &mut back);
+        for b in 0..batch {
+            for j in 0..clip {
+                assert!((back[b * clip + j] - x[b * n + j]).abs() < 1e-3,
+                        "b={b} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn rfft2_transposed_matches_vendor_2d() {
+        use crate::fft::fft2d::rfft2;
+        let (n, h, w, batch) = (16usize, 11usize, 9usize, 3usize);
+        let x = rand_real(batch * h * w, 5);
+        let plan = FbfftPlan::new(n);
+        let nf = n / 2 + 1;
+        let mut out = vec![C32::ZERO; nf * n * batch];
+        plan.rfft2_batch_transposed(&x, h, w, batch, &mut out);
+        for b in 0..batch {
+            let want = rfft2(&x[b * h * w..(b + 1) * h * w], h, w, n);
+            for kh in 0..n {
+                for kw in 0..nf {
+                    let g = out[(kw * n + kh) * batch + b];
+                    let wv = want[kh * nf + kw];
+                    assert!((g - wv).abs() < 3e-3,
+                            "b={b} ({kh},{kw}): {g:?} vs {wv:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn irfft2_transposed_round_trip() {
+        let (n, h, w, batch) = (16usize, 12usize, 10usize, 4usize);
+        let x = rand_real(batch * h * w, 8);
+        let plan = FbfftPlan::new(n);
+        let nf = n / 2 + 1;
+        let mut spec = vec![C32::ZERO; nf * n * batch];
+        plan.rfft2_batch_transposed(&x, h, w, batch, &mut spec);
+        let mut back = vec![0f32; batch * h * w];
+        plan.irfft2_batch_transposed(&spec, batch, h, w, &mut back);
+        for (g, o) in back.iter().zip(&x) {
+            assert!((g - o).abs() < 2e-3);
+        }
+    }
+
+    #[test]
+    fn single_row_batch_works() {
+        // batch = 1 exercises the unpaired path end to end
+        let n = 32;
+        let x = rand_real(n, 9);
+        let plan = FbfftPlan::new(n);
+        let mut spec = vec![C32::ZERO; n / 2 + 1];
+        plan.rfft_batch(&x, n, 1, &mut spec);
+        let want = rfft(&x, n);
+        for (g, w) in spec.iter().zip(&want) {
+            assert!((*g - *w).abs() < 1e-3);
+        }
+        let mut back = vec![0f32; n];
+        plan.irfft_batch(&spec, 1, n, &mut back);
+        for (g, o) in back.iter().zip(&x) {
+            assert!((g - o).abs() < 1e-3);
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! 2-D real transforms by row–column decomposition on the vendor planner
+//! — including the explicit transposition passes a black-box library
+//! forces (paper Table 1 / Table 5's `TRANS.` columns). The fbfft host
+//! engine elides these; this module deliberately does not.
+
+use super::complex::C32;
+use super::plan::{cached, Direction};
+use super::real::{irfft, rfft, rfft_len};
+
+/// Forward 2-D R2C of a row-major `h_in × w_in` image zero-padded onto an
+/// `n × n` basis. Output row-major `n × (n/2+1)`: bin `[kh][kw]`.
+pub fn rfft2(img: &[f32], h_in: usize, w_in: usize, n: usize) -> Vec<C32> {
+    assert_eq!(img.len(), h_in * w_in);
+    assert!(h_in <= n && w_in <= n, "image exceeds basis");
+    let nf = rfft_len(n);
+    // vendor-style: materialize the zero-padded row before transforming
+    let mut rows = vec![C32::ZERO; n * nf];
+    let mut padded = vec![0f32; n];
+    for r in 0..h_in {
+        padded[..w_in].copy_from_slice(&img[r * w_in..(r + 1) * w_in]);
+        let f = rfft(&padded, n);
+        rows[r * nf..(r + 1) * nf].copy_from_slice(&f);
+    }
+    // rows h_in..n are transforms of zero rows — already zero.
+    // columns: full complex FFT per kw bin (explicit gather = the
+    // transpose a black-box 1-D API imposes)
+    let plan = cached(n);
+    let mut out = vec![C32::ZERO; n * nf];
+    let mut col = vec![C32::ZERO; n];
+    for kw in 0..nf {
+        for r in 0..n {
+            col[r] = rows[r * nf + kw];
+        }
+        let f = plan.transform(&col, Direction::Forward);
+        for kh in 0..n {
+            out[kh * nf + kw] = f[kh];
+        }
+    }
+    out
+}
+
+/// Inverse 2-D C2R of an `n × (n/2+1)` half-spectrum, clipped to
+/// `clip_h × clip_w` (row-major output).
+pub fn irfft2(spec: &[C32], n: usize, clip_h: usize, clip_w: usize) -> Vec<f32> {
+    let nf = rfft_len(n);
+    assert_eq!(spec.len(), n * nf);
+    assert!(clip_h <= n && clip_w <= n);
+    // columns first (inverse of the forward order), normalized by n here
+    let plan = cached(n);
+    let mut mid = vec![C32::ZERO; n * nf];
+    let mut col = vec![C32::ZERO; n];
+    for kw in 0..nf {
+        for kh in 0..n {
+            col[kh] = spec[kh * nf + kw];
+        }
+        let t = plan.inverse_normalized(&col);
+        for r in 0..n {
+            mid[r * nf + kw] = t[r];
+        }
+    }
+    // rows: C2R per row, then clip
+    let mut out = vec![0f32; clip_h * clip_w];
+    for r in 0..clip_h {
+        let row = irfft(&mid[r * nf..(r + 1) * nf], n);
+        out[r * clip_w..(r + 1) * clip_w].copy_from_slice(&row[..clip_w]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_img(h: usize, w: usize, seed: u64) -> Vec<f32> {
+        let mut s = seed.wrapping_mul(0xA24BAED4963EE407) | 1;
+        (0..h * w)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                (s as f64 / u64::MAX as f64) as f32 * 2.0 - 1.0
+            })
+            .collect()
+    }
+
+    /// naive 2-D DFT bins for cross-checking
+    fn naive_bin(img: &[f32], h: usize, w: usize, n: usize, kh: usize,
+                 kw: usize) -> C32 {
+        let mut acc_re = 0f64;
+        let mut acc_im = 0f64;
+        for r in 0..h {
+            for c in 0..w {
+                let ang = -2.0 * std::f64::consts::PI
+                    * ((kh * r) as f64 + (kw * c) as f64)
+                    / n as f64;
+                acc_re += img[r * w + c] as f64 * ang.cos();
+                acc_im += img[r * w + c] as f64 * ang.sin();
+            }
+        }
+        C32::new(acc_re as f32, acc_im as f32)
+    }
+
+    #[test]
+    fn matches_naive_2d() {
+        let (h, w, n) = (5, 6, 8);
+        let img = rand_img(h, w, 3);
+        let f = rfft2(&img, h, w, n);
+        for kh in 0..n {
+            for kw in 0..rfft_len(n) {
+                let want = naive_bin(&img, h, w, n, kh, kw);
+                let got = f[kh * rfft_len(n) + kw];
+                assert!((got - want).abs() < 1e-3,
+                        "({kh},{kw}): {got:?} vs {want:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn round_trip_with_clip() {
+        let (h, w, n) = (7, 5, 8);
+        let img = rand_img(h, w, 9);
+        let f = rfft2(&img, h, w, n);
+        let back = irfft2(&f, n, h, w);
+        for (b, o) in back.iter().zip(&img) {
+            assert!((b - o).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn works_on_non_pow2_basis() {
+        // the autotuner explores smooth non-power-of-two bases
+        let (h, w, n) = (5, 5, 12);
+        let img = rand_img(h, w, 4);
+        let f = rfft2(&img, h, w, n);
+        let back = irfft2(&f, n, h, w);
+        for (b, o) in back.iter().zip(&img) {
+            assert!((b - o).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,100 @@
+//! From-scratch FFT substrate (the paper's cuFFT/fbfft dependency pair).
+//!
+//! Two personalities, mirroring the paper's two transform providers:
+//!
+//! * the **vendor-analogue** general-purpose planner ([`plan`]): arbitrary
+//!   sizes via mixed-radix Cooley–Tukey over {2,3,5,7} ([`radix`]) with a
+//!   Bluestein fallback for other factors ([`bluestein`]), real transforms
+//!   ([`real`]) and row-column 2-D ([`fft2d`]). Like cuFFT it is a black
+//!   box: callers materialize their own zero padding and layout changes.
+//! * **[`fbfft_host`]** — the batched small-transform specialist
+//!   reproducing the paper's §5 design points on this testbed: sizes
+//!   8–256, implicit zero-copy padding, fused transposed output, batch
+//!   panel blocking, per-size cached twiddle/bit-reversal tables.
+//!
+//! Everything is `f32` (the paper is single-precision throughout);
+//! correctness tests compare against an `f64` naive DFT.
+
+pub mod bluestein;
+pub mod complex;
+pub mod dif;
+pub mod fbfft_host;
+pub mod fft2d;
+pub mod plan;
+pub mod radix;
+pub mod real;
+
+pub use complex::C32;
+pub use plan::{Direction, Plan};
+
+/// Smallest power of two `>= n`.
+pub fn next_pow2(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+/// `true` iff `n` factorizes over the radix set {2,3,5,7} the planner's
+/// Cooley–Tukey path supports (the paper's autotuner searches exactly the
+/// sizes `2^a·3^b·5^c·7^d`, §3.4).
+pub fn is_smooth(mut n: usize) -> bool {
+    if n == 0 {
+        return false;
+    }
+    for p in [2, 3, 5, 7] {
+        while n % p == 0 {
+            n /= p;
+        }
+    }
+    n == 1
+}
+
+/// Naive `O(n²)` DFT in f64 — the independent oracle used by tests and
+/// the Bluestein inner product. Forward sign convention `e^{-2πi jk/n}`.
+pub fn naive_dft(input: &[C32], inverse: bool) -> Vec<C32> {
+    let n = input.len();
+    let sign = if inverse { 2.0 } else { -2.0 };
+    let mut out = Vec::with_capacity(n);
+    for k in 0..n {
+        let (mut re, mut im) = (0f64, 0f64);
+        for (j, x) in input.iter().enumerate() {
+            let ang = sign * std::f64::consts::PI * (j as f64) * (k as f64)
+                / (n as f64);
+            let (s, c) = ang.sin_cos();
+            re += x.re as f64 * c - x.im as f64 * s;
+            im += x.re as f64 * s + x.im as f64 * c;
+        }
+        out.push(C32::new(re as f32, im as f32));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn next_pow2_basics() {
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(13), 16);
+        assert_eq!(next_pow2(16), 16);
+        assert_eq!(next_pow2(57), 64);
+    }
+
+    #[test]
+    fn smooth_sizes() {
+        for n in [1, 2, 8, 12, 14, 15, 21, 35, 105, 128, 210] {
+            assert!(is_smooth(n), "{n} should be smooth");
+        }
+        for n in [11, 13, 22, 26, 121] {
+            assert!(!is_smooth(n), "{n} should not be smooth");
+        }
+    }
+
+    #[test]
+    fn naive_dft_impulse_is_flat() {
+        let mut x = vec![C32::ZERO; 8];
+        x[0] = C32::new(1.0, 0.0);
+        for c in naive_dft(&x, false) {
+            assert!((c.re - 1.0).abs() < 1e-6 && c.im.abs() < 1e-6);
+        }
+    }
+}

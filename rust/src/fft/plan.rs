@@ -1,0 +1,132 @@
+//! The vendor-analogue FFT planner: algorithm selection + plan cache.
+//!
+//! Mirrors the cuFFT behaviour the paper reacts to (§3.2): smooth sizes
+//! (`2^a·3^b·5^c·7^d`) run mixed-radix Cooley–Tukey; anything else pays
+//! for Bluestein. Plans are cached per size like `cufftPlan` handles —
+//! including the cached plans' memory footprint being a real cost, which
+//! the paper calls out ('additional temporary memory is reserved by each
+//! cufftPlan', §6).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::bluestein::Bluestein;
+use super::complex::C32;
+use super::is_smooth;
+use super::radix::MixedRadix;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    Forward,
+    Inverse,
+}
+
+enum Algo {
+    MixedRadix(MixedRadix),
+    Bluestein(Bluestein),
+}
+
+/// A complex-to-complex plan for one size.
+pub struct Plan {
+    n: usize,
+    algo: Algo,
+}
+
+impl Plan {
+    pub fn new(n: usize) -> Self {
+        let algo = if is_smooth(n) {
+            Algo::MixedRadix(MixedRadix::new(n))
+        } else {
+            Algo::Bluestein(Bluestein::new(n))
+        };
+        Plan { n, algo }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn algorithm_name(&self) -> &'static str {
+        match self.algo {
+            Algo::MixedRadix(_) => "mixed-radix",
+            Algo::Bluestein(_) => "bluestein",
+        }
+    }
+
+    /// Unnormalized transform (inverse carries no 1/n, as in FFTW/cuFFT).
+    pub fn transform(&self, input: &[C32], dir: Direction) -> Vec<C32> {
+        let inverse = dir == Direction::Inverse;
+        match &self.algo {
+            Algo::MixedRadix(p) => p.transform(input, inverse),
+            Algo::Bluestein(p) => p.transform(input, inverse),
+        }
+    }
+
+    /// Normalized inverse (divides by n).
+    pub fn inverse_normalized(&self, input: &[C32]) -> Vec<C32> {
+        let mut out = self.transform(input, Direction::Inverse);
+        let s = 1.0 / self.n as f32;
+        for c in out.iter_mut() {
+            *c = c.scale(s);
+        }
+        out
+    }
+}
+
+/// Process-wide plan cache (the `cufftPlan` analogue).
+pub fn cached(n: usize) -> Arc<Plan> {
+    static CACHE: OnceLock<Mutex<HashMap<usize, Arc<Plan>>>> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut guard = cache.lock().expect("plan cache poisoned");
+    guard.entry(n).or_insert_with(|| Arc::new(Plan::new(n))).clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::naive_dft;
+
+    #[test]
+    fn picks_algorithms_like_cufft() {
+        assert_eq!(Plan::new(128).algorithm_name(), "mixed-radix");
+        assert_eq!(Plan::new(105).algorithm_name(), "mixed-radix");
+        assert_eq!(Plan::new(11).algorithm_name(), "bluestein");
+        assert_eq!(Plan::new(26).algorithm_name(), "bluestein");
+    }
+
+    #[test]
+    fn both_paths_agree_with_naive() {
+        for n in [12usize, 13] {
+            let x: Vec<C32> = (0..n)
+                .map(|j| C32::new(j as f32 * 0.3 - 1.0, (j as f32).cos()))
+                .collect();
+            let plan = Plan::new(n);
+            let got = plan.transform(&x, Direction::Forward);
+            let want = naive_dft(&x, false);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((*g - *w).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn cache_returns_same_plan() {
+        let a = cached(48);
+        let b = cached(48);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(a.len(), 48);
+    }
+
+    #[test]
+    fn normalized_inverse_round_trips() {
+        let n = 20;
+        let x: Vec<C32> =
+            (0..n).map(|j| C32::new((j as f32).sin(), 0.25 * j as f32)).collect();
+        let plan = Plan::new(n);
+        let f = plan.transform(&x, Direction::Forward);
+        let back = plan.inverse_normalized(&f);
+        for (b, o) in back.iter().zip(&x) {
+            assert!((*b - *o).abs() < 1e-4);
+        }
+    }
+}

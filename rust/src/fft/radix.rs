@@ -1,0 +1,265 @@
+//! Mixed-radix Cooley–Tukey complex FFT over the factor set the paper's
+//! autotuner searches (`2^a·3^b·5^c·7^d`, §3.4) — generic enough to take
+//! any prime factor, but the planner routes large primes to Bluestein,
+//! exactly as cuFFT does (paper §3.2).
+//!
+//! Recursive decimation-in-time with a shared root-of-unity table: the
+//! sub-transform of size `n/s` reads twiddles at stride `s` in the global
+//! table (`W_{n/s}^j = W_n^{j·s}`), so one table serves the whole tree.
+
+use super::complex::C32;
+
+/// Precomputed state for complex transforms of one size.
+pub struct MixedRadix {
+    n: usize,
+    factors: Vec<usize>,
+    /// `roots[j] = e^{-2πi j / n}` for the forward transform.
+    roots: Vec<C32>,
+}
+
+/// Prime factorization, smallest first (2,3,5,7 prioritized, then any).
+pub fn factorize(mut n: usize) -> Vec<usize> {
+    let mut f = Vec::new();
+    for p in [2usize, 3, 5, 7] {
+        while n % p == 0 {
+            f.push(p);
+            n /= p;
+        }
+    }
+    let mut p = 11;
+    while p * p <= n {
+        while n % p == 0 {
+            f.push(p);
+            n /= p;
+        }
+        p += 2;
+    }
+    if n > 1 {
+        f.push(n);
+    }
+    f
+}
+
+impl MixedRadix {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1, "transform size must be positive");
+        let roots = (0..n).map(|j| C32::root_of_unity(j as i64, n)).collect();
+        MixedRadix { n, factors: factorize(n), roots }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    fn root(&self, idx: usize, inverse: bool) -> C32 {
+        let w = self.roots[idx % self.n];
+        if inverse {
+            w.conj()
+        } else {
+            w
+        }
+    }
+
+    /// Out-of-place transform. `inverse` applies the `+` sign convention
+    /// but NOT the `1/n` scale (callers own normalization, like FFTW).
+    pub fn transform(&self, input: &[C32], inverse: bool) -> Vec<C32> {
+        assert_eq!(input.len(), self.n, "input length != plan size");
+        let mut out = input.to_vec();
+        if self.n.is_power_of_two() && self.n > 1 {
+            // §Perf: iterative radix-2 fast path — the recursive generic
+            // combine allocates per level and was the planner's top
+            // bottleneck (EXPERIMENTS.md §Perf, fft-planner entry)
+            self.pow2_in_place(&mut out, inverse);
+            return out;
+        }
+        // general mixed-radix path with hoisted scratch (one allocation
+        // per transform instead of one per recursion node); budget:
+        // Σ_levels n_level ≤ 2n for the combine buffers plus 2·r per
+        // level for the row temporaries
+        let scratch_len =
+            2 * self.n + 2 * self.factors.iter().sum::<usize>().max(1);
+        let mut scratch = vec![C32::ZERO; scratch_len];
+        out.fill(C32::ZERO);
+        self.rec(input, 1, &mut out, self.n, 0, inverse, &mut scratch);
+        out
+    }
+
+    /// Iterative radix-2 DIT with bit-reversal, twiddles from the shared
+    /// root table at stride n/m.
+    fn pow2_in_place(&self, buf: &mut [C32], inverse: bool) {
+        let n = self.n;
+        let log2n = n.trailing_zeros();
+        for i in 0..n {
+            let j = (i as u32).reverse_bits() >> (32 - log2n);
+            let j = j as usize;
+            if i < j {
+                buf.swap(i, j);
+            }
+        }
+        for s in 0..log2n {
+            let half = 1usize << s;
+            let m = half << 1;
+            let stride = n / m;
+            let mut base = 0;
+            while base < n {
+                for j in 0..half {
+                    let w = self.root(j * stride, inverse);
+                    let a = buf[base + j];
+                    let b = buf[base + j + half] * w;
+                    buf[base + j] = a + b;
+                    buf[base + j + half] = a - b;
+                }
+                base += m;
+            }
+        }
+    }
+
+    /// In-place convenience over `transform`.
+    pub fn transform_in_place(&self, buf: &mut [C32], inverse: bool) {
+        let out = self.transform(buf, inverse);
+        buf.copy_from_slice(&out);
+    }
+
+    /// Recursive DIT step: transform `n_cur` elements of `input` taken at
+    /// `stride`, writing contiguously into `out`. `depth` indexes the
+    /// factor list; the twiddle stride for this level is `self.n / n_cur`.
+    /// `scratch` is the transform-wide workspace: `[0, n_cur)` holds this
+    /// level's combine buffer, the tail holds the per-row temporaries and
+    /// deeper levels' space (hoisted allocation, §Perf).
+    #[allow(clippy::too_many_arguments)]
+    fn rec(&self, input: &[C32], stride: usize, out: &mut [C32],
+           n_cur: usize, depth: usize, inverse: bool,
+           scratch: &mut [C32]) {
+        if n_cur == 1 {
+            out[0] = input[0];
+            return;
+        }
+        let r = self.factors[depth];
+        let m = n_cur / r;
+        // sub-transforms: q-th takes elements q, q+r, q+2r, ... (×stride)
+        {
+            let (_, deeper) = scratch.split_at_mut(n_cur + 2 * r);
+            for q in 0..r {
+                let (head, tail) = out.split_at_mut(q * m);
+                let _ = head;
+                self.rec(&input[q * stride..], stride * r, &mut tail[..m],
+                         m, depth + 1, inverse, deeper);
+            }
+        }
+        // combine r groups with twiddles; ts converts local k to global
+        let ts = self.n / n_cur;
+        let (combine, rest) = scratch.split_at_mut(n_cur);
+        let (t, row) = rest.split_at_mut(r);
+        let row = &mut row[..r];
+        for k1 in 0..m {
+            for (q, tq) in t[..r].iter_mut().enumerate() {
+                // W_{n_cur}^{q·k1} = roots[q·k1·ts]
+                *tq = out[q * m + k1] * self.root(q * k1 * ts, inverse);
+            }
+            // small DFT of size r across the groups
+            for (q2, rv) in row.iter_mut().enumerate() {
+                let mut acc = t[0];
+                for (q, tq) in t[..r].iter().enumerate().skip(1) {
+                    // W_r^{q·q2} = roots[q·q2·(n/r)]
+                    acc = acc.mul_add(*tq,
+                                      self.root(q * q2 * (self.n / r),
+                                                inverse));
+                }
+                *rv = acc;
+            }
+            for q2 in 0..r {
+                combine[q2 * m + k1] = row[q2];
+            }
+        }
+        out[..n_cur].copy_from_slice(combine);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::naive_dft;
+
+    fn assert_close(a: &[C32], b: &[C32], tol: f32) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((*x - *y).abs() < tol,
+                    "idx {i}: {x:?} vs {y:?} (tol {tol})");
+        }
+    }
+
+    fn rand_signal(n: usize, seed: u64) -> Vec<C32> {
+        // xorshift — deterministic, no rand dep in unit tests
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        let mut next = move || {
+            s ^= s << 13;
+            s ^= s >> 7;
+            s ^= s << 17;
+            (s as f64 / u64::MAX as f64) as f32 * 2.0 - 1.0
+        };
+        (0..n).map(|_| C32::new(next(), next())).collect()
+    }
+
+    #[test]
+    fn factorize_examples() {
+        assert_eq!(factorize(1), vec![]);
+        assert_eq!(factorize(8), vec![2, 2, 2]);
+        assert_eq!(factorize(12), vec![2, 2, 3]);
+        assert_eq!(factorize(105), vec![3, 5, 7]);
+        assert_eq!(factorize(13), vec![13]);
+        assert_eq!(factorize(22), vec![2, 11]);
+    }
+
+    #[test]
+    fn matches_naive_on_smooth_sizes() {
+        for n in [1usize, 2, 3, 4, 5, 6, 7, 8, 9, 12, 16, 20, 21, 24, 35,
+                  36, 49, 64, 105, 128] {
+            let x = rand_signal(n, n as u64);
+            let plan = MixedRadix::new(n);
+            let got = plan.transform(&x, false);
+            let want = naive_dft(&x, false);
+            let tol = 1e-4 * (n as f32).sqrt().max(1.0) * 4.0;
+            assert_close(&got, &want, tol);
+        }
+    }
+
+    #[test]
+    fn matches_naive_with_odd_primes() {
+        // generic combine handles primes outside {2,3,5,7} too
+        for n in [11usize, 13, 22, 26] {
+            let x = rand_signal(n, n as u64 + 99);
+            let plan = MixedRadix::new(n);
+            assert_close(&plan.transform(&x, false), &naive_dft(&x, false),
+                         1e-3);
+        }
+    }
+
+    #[test]
+    fn round_trip() {
+        for n in [8usize, 12, 30, 64] {
+            let x = rand_signal(n, 7);
+            let plan = MixedRadix::new(n);
+            let fwd = plan.transform(&x, false);
+            let mut back = plan.transform(&fwd, true);
+            for c in back.iter_mut() {
+                *c = c.scale(1.0 / n as f32);
+            }
+            assert_close(&back, &x, 1e-4);
+        }
+    }
+
+    #[test]
+    fn linearity() {
+        let n = 24;
+        let x = rand_signal(n, 1);
+        let y = rand_signal(n, 2);
+        let plan = MixedRadix::new(n);
+        let sum: Vec<C32> = x.iter().zip(&y).map(|(a, b)| *a + *b).collect();
+        let fx = plan.transform(&x, false);
+        let fy = plan.transform(&y, false);
+        let fsum = plan.transform(&sum, false);
+        let want: Vec<C32> = fx.iter().zip(&fy).map(|(a, b)| *a + *b).collect();
+        assert_close(&fsum, &want, 1e-3);
+    }
+}

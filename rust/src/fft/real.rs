@@ -1,0 +1,170 @@
+//! Real-to-complex and complex-to-real transforms on the vendor planner.
+//!
+//! Hermitian-symmetric storage (`n/2 + 1` bins), the layout Table 1's
+//! `⌊(w+p)/2⌋+1` dimensions come from. Even sizes use the classic
+//! pack-into-half-size-complex trick; odd sizes fall back to a full
+//! complex transform (matching a vendor library's internal dispatch).
+
+use super::complex::C32;
+use super::plan::{cached, Direction};
+
+/// Number of stored bins for a real transform of size `n`.
+pub fn rfft_len(n: usize) -> usize {
+    n / 2 + 1
+}
+
+/// Forward R2C transform of `x`, zero-padded (explicitly, vendor-style)
+/// or truncated to `n`. Returns `n/2 + 1` bins.
+pub fn rfft(x: &[f32], n: usize) -> Vec<C32> {
+    assert!(n >= 1);
+    if n % 2 != 0 {
+        return rfft_via_complex(x, n);
+    }
+    let half = n / 2;
+    let plan = cached(half);
+    // pack even/odd samples into one complex signal of length n/2
+    let mut z = vec![C32::ZERO; half];
+    for j in 0..half {
+        let re = x.get(2 * j).copied().unwrap_or(0.0);
+        let im = x.get(2 * j + 1).copied().unwrap_or(0.0);
+        z[j] = C32::new(re, im);
+    }
+    let zf = plan.transform(&z, Direction::Forward);
+    // unpack: X[k] = E[k] + e^{-2πik/n}·O[k]
+    let mut out = vec![C32::ZERO; rfft_len(n)];
+    for k in 0..=half {
+        let zk = if k == half { zf[0] } else { zf[k] };
+        let zc = zf[(half - k) % half].conj();
+        let e = (zk + zc).scale(0.5);
+        let o = (zk - zc).scale(0.5).mul_i().scale(-1.0); // (zk - zc)/(2i)
+        out[k] = e + C32::root_of_unity(k as i64, n) * o;
+    }
+    out
+}
+
+fn rfft_via_complex(x: &[f32], n: usize) -> Vec<C32> {
+    let plan = cached(n);
+    let mut z = vec![C32::ZERO; n];
+    for (j, zj) in z.iter_mut().enumerate() {
+        *zj = C32::new(x.get(j).copied().unwrap_or(0.0), 0.0);
+    }
+    let f = plan.transform(&z, Direction::Forward);
+    f[..rfft_len(n)].to_vec()
+}
+
+/// Inverse C2R transform of a half-spectrum (`n/2 + 1` bins), normalized,
+/// returning `n` real samples.
+pub fn irfft(spec: &[C32], n: usize) -> Vec<f32> {
+    assert_eq!(spec.len(), rfft_len(n), "half-spectrum length mismatch");
+    if n % 2 != 0 {
+        return irfft_via_complex(spec, n);
+    }
+    let half = n / 2;
+    let plan = cached(half);
+    // repack: Z[k] = E[k] + e^{+2πik/n}·O[k] with E/O from X, X_mirror
+    let mut z = vec![C32::ZERO; half];
+    for (k, zk) in z.iter_mut().enumerate() {
+        let xk = spec[k];
+        let xm = spec[half - k].conj();
+        let e = (xk + xm).scale(0.5);
+        let o = (xk - xm).scale(0.5) * C32::root_of_unity(-(k as i64), n);
+        *zk = e + o.mul_i();
+    }
+    let zt = plan.transform(&z, Direction::Inverse);
+    let mut out = vec![0f32; n];
+    let s = 1.0 / half as f32;
+    for j in 0..half {
+        out[2 * j] = zt[j].re * s;
+        out[2 * j + 1] = zt[j].im * s;
+    }
+    out
+}
+
+fn irfft_via_complex(spec: &[C32], n: usize) -> Vec<f32> {
+    let plan = cached(n);
+    let mut full = vec![C32::ZERO; n];
+    full[..spec.len()].copy_from_slice(spec);
+    for k in spec.len()..n {
+        full[k] = spec[n - k].conj();
+    }
+    let t = plan.inverse_normalized(&full);
+    t.iter().map(|c| c.re).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::naive_dft;
+
+    fn rand_real(n: usize, seed: u64) -> Vec<f32> {
+        let mut s = seed.wrapping_mul(0xD1342543DE82EF95) | 1;
+        (0..n)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                (s as f64 / u64::MAX as f64) as f32 * 2.0 - 1.0
+            })
+            .collect()
+    }
+
+    fn rfft_naive(x: &[f32], n: usize) -> Vec<C32> {
+        let z: Vec<C32> = (0..n)
+            .map(|j| C32::new(x.get(j).copied().unwrap_or(0.0), 0.0))
+            .collect();
+        naive_dft(&z, false)[..rfft_len(n)].to_vec()
+    }
+
+    #[test]
+    fn rfft_matches_naive_even_and_odd() {
+        for n in [2usize, 4, 8, 9, 12, 15, 16, 27, 32, 64] {
+            let x = rand_real(n, n as u64);
+            let got = rfft(&x, n);
+            let want = rfft_naive(&x, n);
+            for (k, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert!((*g - *w).abs() < 1e-3,
+                        "n={n} k={k}: {g:?} vs {w:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn rfft_implicit_truncation_and_padding() {
+        let x = rand_real(10, 1);
+        // padding: transform of x at n=16 equals transform of x||zeros
+        let mut xp = x.clone();
+        xp.resize(16, 0.0);
+        let a = rfft(&x, 16);
+        let b = rfft(&xp, 16);
+        for (u, v) in a.iter().zip(&b) {
+            assert!((*u - *v).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn round_trip_even_odd() {
+        for n in [4usize, 9, 16, 27, 64] {
+            let x = rand_real(n, 77 + n as u64);
+            let back = irfft(&rfft(&x, n), n);
+            for (b, o) in back.iter().zip(&x) {
+                assert!((b - o).abs() < 1e-4, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn dc_bin_is_sum() {
+        let x = rand_real(32, 9);
+        let f = rfft(&x, 32);
+        let sum: f32 = x.iter().sum();
+        assert!((f[0].re - sum).abs() < 1e-3);
+        assert!(f[0].im.abs() < 1e-4);
+    }
+
+    #[test]
+    fn nyquist_bin_is_real() {
+        let x = rand_real(16, 11);
+        let f = rfft(&x, 16);
+        assert!(f[8].im.abs() < 1e-4);
+    }
+}

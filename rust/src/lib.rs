@@ -1,0 +1,35 @@
+//! fbfft-repro — reproduction of *"Fast Convolutional Nets With fbfft: A
+//! GPU Performance Evaluation"* (Vasilache et al., ICLR 2015) as a
+//! three-layer Rust + JAX + Pallas stack.
+//!
+//! This crate is Layer 3: the coordinator that owns the event loop,
+//! autotuning, buffer management, batching and benchmarking, plus every
+//! substrate the paper depends on, rebuilt from scratch:
+//!
+//! * [`fft`] — a from-scratch FFT library (mixed-radix Cooley–Tukey,
+//!   Bluestein, real transforms) and `fbfft_host`, the batched
+//!   small-transform specialist embodying the paper's contribution;
+//! * [`conv`] — time-domain and frequency-domain convolution engines for
+//!   all three training passes (baselines + cross-checks);
+//! * [`cost`] — the analytical performance model (FLOP counts, Table-1
+//!   stage breakdown, K40m roofline, the TRED/s metric);
+//! * [`trace`] — workload generation: Table 2's 8,232-config sweep,
+//!   Table 4's layers, AlexNet/OverFeat tables, request traces;
+//! * [`runtime`] — the PJRT bridge loading AOT-compiled HLO artifacts;
+//! * [`coordinator`] — strategy autotuner (§3.4), buffer manager (§3.3),
+//!   bulk-synchronous network scheduler, dynamic request batcher;
+//! * [`metrics`] — timers, histograms and report writers shared by the
+//!   benches.
+//!
+//! Python (Layers 1+2, under `python/`) runs only at build time; the
+//! binary is self-contained once `artifacts/` exists.
+
+pub mod conv;
+pub mod coordinator;
+pub mod cost;
+pub mod fft;
+pub mod metrics;
+pub mod reports;
+pub mod runtime;
+pub mod trace;
+pub mod util;

@@ -1,0 +1,235 @@
+//! `fbfft-repro` — CLI front end for the fbfft reproduction.
+//!
+//! Every subcommand regenerates one artifact of the paper's evaluation
+//! (DESIGN.md §5 maps them to tables/figures). Run with no arguments for
+//! usage. Clap is unavailable offline; arguments are parsed by hand.
+
+use std::process::ExitCode;
+
+use fbfft_repro::coordinator::batcher::BatcherConfig;
+use fbfft_repro::coordinator::service::{Completion, ConvService,
+                                        ServeRequest};
+use fbfft_repro::metrics::Histogram;
+use fbfft_repro::reports;
+use fbfft_repro::runtime::Runtime;
+use fbfft_repro::trace;
+
+const USAGE: &str = "\
+fbfft-repro — reproduction of 'Fast Convolutional Nets With fbfft'
+
+USAGE: fbfft-repro <COMMAND> [OPTIONS]
+
+COMMANDS (one per paper artifact):
+  sweep            Figures 1-6: 8,232-config speedup heatmaps (K40m model)
+  sweep --measure  ... plus the measured PJRT anchor subset
+  layers           Table 4: representative layers L1-L5 (model + measured)
+  breakdown        Table 5: frequency-pipeline stage breakdown
+  cnn-bench        Table 3: AlexNet + OverFeat-fast whole-CNN totals
+  fft-bench --dim <1|2>   Figures 7-8: fbfft vs vendor FFT
+  conv-compare     Sec 5.4: fbfft-conv vs vendor-FFT-conv grid
+  tiling           Sec 6: tiled vs untiled decomposition
+  autotune         Sec 3.4: strategy/basis autotuner demonstration
+  train [--steps N]        e2e: train the demo CNN via train.step
+  serve [--requests N]     serving demo: batcher + PJRT runtime
+  cost-model       print the calibrated K40m model vs paper numbers
+
+OPTIONS:
+  --artifacts <dir>   artifacts directory (default: artifacts)
+  --no-pjrt           skip PJRT-backed sections (model/host-only output)
+";
+
+struct Args {
+    cmd: String,
+    artifacts: String,
+    measure: bool,
+    no_pjrt: bool,
+    dim: usize,
+    steps: usize,
+    requests: usize,
+}
+
+fn parse_args() -> Option<Args> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first()?.clone();
+    let mut a = Args {
+        cmd,
+        artifacts: "artifacts".into(),
+        measure: false,
+        no_pjrt: false,
+        dim: 1,
+        steps: 300,
+        requests: 200,
+    };
+    let mut i = 1;
+    while i < argv.len() {
+        match argv[i].as_str() {
+            "--artifacts" => {
+                a.artifacts = argv.get(i + 1)?.clone();
+                i += 2;
+            }
+            "--measure" => {
+                a.measure = true;
+                i += 1;
+            }
+            "--no-pjrt" => {
+                a.no_pjrt = true;
+                i += 1;
+            }
+            "--dim" => {
+                a.dim = argv.get(i + 1)?.parse().ok()?;
+                i += 2;
+            }
+            "--steps" => {
+                a.steps = argv.get(i + 1)?.parse().ok()?;
+                i += 2;
+            }
+            "--requests" => {
+                a.requests = argv.get(i + 1)?.parse().ok()?;
+                i += 2;
+            }
+            other => {
+                eprintln!("unknown option {other}");
+                return None;
+            }
+        }
+    }
+    Some(a)
+}
+
+fn open_rt(a: &Args) -> Option<Runtime> {
+    if a.no_pjrt {
+        return None;
+    }
+    match Runtime::open(&a.artifacts) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("note: PJRT runtime unavailable ({e:#}); \
+                       continuing with model/host-only output");
+            None
+        }
+    }
+}
+
+fn run(a: Args) -> anyhow::Result<()> {
+    match a.cmd.as_str() {
+        "sweep" => {
+            println!("{}", reports::fig16_report());
+            if a.measure {
+                if let Some(rt) = open_rt(&a) {
+                    println!("{}", reports::sweep::fig16_measured(&rt)?);
+                }
+            }
+        }
+        "layers" => {
+            let rt = open_rt(&a);
+            println!("{}", reports::table4_report(rt.as_ref())?);
+        }
+        "breakdown" => println!("{}", reports::table5_report()),
+        "cnn-bench" => {
+            let rt = open_rt(&a)
+                .ok_or_else(|| anyhow::anyhow!("cnn-bench needs PJRT"))?;
+            println!("{}", reports::table3_report(&rt)?);
+        }
+        "fft-bench" => {
+            let rt = open_rt(&a);
+            let r = match a.dim {
+                1 => reports::fig7_report(rt.as_ref())?,
+                2 => reports::fig8_report(rt.as_ref())?,
+                d => anyhow::bail!("--dim must be 1 or 2, got {d}"),
+            };
+            println!("{r}");
+        }
+        "conv-compare" => {
+            let rt = open_rt(&a)
+                .ok_or_else(|| anyhow::anyhow!("conv-compare needs PJRT"))?;
+            println!("{}", reports::sec54_report(&rt)?);
+        }
+        "tiling" => {
+            let rt = open_rt(&a);
+            println!("{}", reports::tiling_report(rt.as_ref())?);
+        }
+        "autotune" => println!("{}", reports::tables::autotune_report()),
+        "cost-model" => {
+            println!("{}", reports::table4_report(None)?);
+        }
+        "train" => {
+            let rt = open_rt(&a)
+                .ok_or_else(|| anyhow::anyhow!("train needs PJRT"))?;
+            let (log, acc) = reports::trainer::train_and_eval(
+                &rt, a.steps, 0xE2E)?;
+            println!("{}", log.render_curve(20));
+            println!("steps: {}  loss {:.4} -> {:.4}  {:.1} steps/s  \
+                      accuracy {:.1}%",
+                     log.steps, log.first(), log.last(),
+                     log.steps_per_sec(), acc * 100.0);
+        }
+        "serve" => serve_demo(&a)?,
+        other => {
+            eprintln!("unknown command {other}\n{USAGE}");
+            anyhow::bail!("bad command");
+        }
+    }
+    Ok(())
+}
+
+fn serve_demo(a: &Args) -> anyhow::Result<()> {
+    // serve the quickstart fprop layer through the dynamic batcher
+    let p = fbfft_repro::conv::ConvProblem::square(2, 4, 4, 16, 3);
+    let svc = ConvService::start(
+        a.artifacts.clone().into(),
+        "conv.quickstart.fbfft.fprop".into(),
+        p,
+        BatcherConfig { capacity: p.s,
+                        max_wait: std::time::Duration::from_millis(2) },
+    )?;
+    let trace = trace::request_trace(a.requests, 400.0, 0x5E);
+    let (tx, rx) = std::sync::mpsc::channel::<Completion>();
+    let t0 = std::time::Instant::now();
+    for r in &trace {
+        let wait = std::time::Duration::from_secs_f64(r.arrival_s)
+            .saturating_sub(t0.elapsed());
+        std::thread::sleep(wait);
+        svc.submit(ServeRequest { id: r.id, images: r.images.min(p.s),
+                                  reply: tx.clone() });
+    }
+    drop(tx);
+    let mut hist = Histogram::new();
+    let mut done = 0usize;
+    while done < trace.len() {
+        match rx.recv_timeout(std::time::Duration::from_secs(5)) {
+            Ok(c) => {
+                hist.record(c.latency.as_secs_f64());
+                done += 1;
+            }
+            Err(_) => break,
+        }
+    }
+    let report = svc.shutdown();
+    println!("serving demo: {} requests, {} images, {} launches",
+             report.requests, report.images, report.launches);
+    println!("flushes: {} full, {} timeout", report.flushes_full,
+             report.flushes_timeout);
+    if !hist.is_empty() {
+        println!("latency ms: p50 {:.2}  p95 {:.2}  p99 {:.2}  max {:.2}",
+                 hist.percentile(50.0) * 1e3, hist.percentile(95.0) * 1e3,
+                 hist.percentile(99.0) * 1e3, hist.max() * 1e3);
+    }
+    println!("busy {:.1} ms over {:.1} ms wall",
+             report.busy.as_secs_f64() * 1e3,
+             t0.elapsed().as_secs_f64() * 1e3);
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    let Some(args) = parse_args() else {
+        eprintln!("{USAGE}");
+        return ExitCode::FAILURE;
+    };
+    match run(args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}

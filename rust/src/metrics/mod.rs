@@ -1,0 +1,263 @@
+//! Measurement + reporting substrate shared by the CLI and the benches
+//! (criterion is unavailable offline; this is the in-tree harness).
+
+use std::time::{Duration, Instant};
+
+/// Time `f`, auto-scaling iteration count until the measurement window
+/// exceeds `min_time` — the usual warmup + calibrate + measure protocol.
+pub fn bench<F: FnMut()>(mut f: F, min_time: Duration) -> BenchResult {
+    // warmup
+    f();
+    // calibrate
+    let mut iters = 1u64;
+    loop {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        let el = t0.elapsed();
+        if el >= min_time.min(Duration::from_millis(50)) || iters > 1 << 20 {
+            if el >= min_time {
+                return BenchResult::from_total(el, iters);
+            }
+            // scale up to fill the window
+            let scale = (min_time.as_secs_f64() / el.as_secs_f64().max(1e-9))
+                .ceil() as u64;
+            let final_iters = (iters * scale.max(2)).max(iters + 1);
+            let t1 = Instant::now();
+            for _ in 0..final_iters {
+                f();
+            }
+            return BenchResult::from_total(t1.elapsed(), final_iters);
+        }
+        iters *= 2;
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct BenchResult {
+    pub total: Duration,
+    pub iters: u64,
+}
+
+impl BenchResult {
+    fn from_total(total: Duration, iters: u64) -> Self {
+        BenchResult { total, iters }
+    }
+
+    pub fn per_iter(&self) -> Duration {
+        self.total / self.iters.max(1) as u32
+    }
+
+    pub fn secs_per_iter(&self) -> f64 {
+        self.total.as_secs_f64() / self.iters.max(1) as f64
+    }
+}
+
+/// Latency histogram with exact percentiles (stores samples; the serving
+/// example produces thousands, not billions).
+#[derive(Clone, Debug, Default)]
+pub struct Histogram {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, seconds: f64) {
+        self.samples.push(seconds);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples
+                .sort_by(|a, b| a.partial_cmp(b).expect("NaN latency"));
+            self.sorted = true;
+        }
+    }
+
+    /// Exact percentile (nearest-rank), `q` in [0, 100].
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        assert!(!self.samples.is_empty(), "empty histogram");
+        self.ensure_sorted();
+        let n = self.samples.len();
+        let rank = ((q / 100.0) * n as f64).ceil().max(1.0) as usize;
+        self.samples[rank.min(n) - 1]
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn max(&mut self) -> f64 {
+        self.ensure_sorted();
+        *self.samples.last().expect("empty histogram")
+    }
+}
+
+/// Fixed-width markdown-ish table writer for the bench reports.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(&widths) {
+                s.push_str(&format!(" {:<w$} |", c, w = w));
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = line(&self.headers);
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+        }
+        out
+    }
+}
+
+/// ASCII heatmap for the Figure-1–6 planes: rows = problem size buckets,
+/// cols = output size, cell = speedup bucket glyph.
+pub struct Heatmap {
+    pub col_labels: Vec<String>,
+    pub row_labels: Vec<String>,
+    /// speedup values, row-major; NaN renders as blank
+    pub cells: Vec<f64>,
+}
+
+impl Heatmap {
+    /// Glyph ramp: cuDNN-favored '·-' through fbfft-favored '#@'.
+    fn glyph(v: f64) -> char {
+        if v.is_nan() {
+            ' '
+        } else if v < 0.5 {
+            '.'
+        } else if v < 1.0 {
+            '-'
+        } else if v < 2.0 {
+            '+'
+        } else if v < 4.0 {
+            '*'
+        } else if v < 8.0 {
+            '#'
+        } else {
+            '@'
+        }
+    }
+
+    pub fn render(&self, title: &str) -> String {
+        let rl_w = self.row_labels.iter().map(|s| s.len()).max().unwrap_or(0);
+        let mut out = format!("{title}\n");
+        out.push_str(&format!(
+            "{:rl_w$}  {}\n", "", self.col_labels.join(" "), rl_w = rl_w));
+        let ncols = self.col_labels.len();
+        for (r, label) in self.row_labels.iter().enumerate() {
+            out.push_str(&format!("{label:>rl_w$}  "));
+            for c in 0..ncols {
+                let v = self.cells[r * ncols + c];
+                let w = self.col_labels[c].len();
+                out.push_str(&format!("{:^w$} ", Self::glyph(v), w = w));
+            }
+            out.push('\n');
+        }
+        out.push_str(
+            "legend: . <0.5x  - <1x  + <2x  * <4x  # <8x  @ >=8x (speedup vs baseline)\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleepless_work() {
+        // black_box inside the closure so the optimizer cannot fold the
+        // work away (which collapses calibration to the iteration cap)
+        let r = bench(|| {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(std::hint::black_box(i) * i);
+            }
+            std::hint::black_box(acc);
+        }, Duration::from_millis(20));
+        assert!(r.iters >= 1);
+        assert!(r.total > Duration::ZERO);
+        assert!(r.secs_per_iter() > 0.0);
+        // per-iteration time must be plausible for ~1k multiplies
+        assert!(r.secs_per_iter() < 1e-3, "{:?}", r.per_iter());
+    }
+
+    #[test]
+    fn histogram_percentiles_exact() {
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.percentile(50.0), 50.0);
+        assert_eq!(h.percentile(95.0), 95.0);
+        assert_eq!(h.percentile(100.0), 100.0);
+        assert_eq!(h.percentile(1.0), 1.0);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["layer", "ms"]);
+        t.row(vec!["L1".into(), "12.5".into()]);
+        t.row(vec!["L2-long-name".into(), "3.1".into()]);
+        let s = t.render();
+        assert!(s.contains("| layer        | ms   |") || s.contains("L2-long-name"));
+        assert_eq!(s.lines().count(), 4);
+    }
+
+    #[test]
+    fn heatmap_glyph_ramp_is_monotone() {
+        let gs: Vec<char> =
+            [0.1, 0.7, 1.5, 3.0, 6.0, 20.0].iter()
+            .map(|v| Heatmap::glyph(*v)).collect();
+        assert_eq!(gs, vec!['.', '-', '+', '*', '#', '@']);
+    }
+}

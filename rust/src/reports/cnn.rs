@@ -1,0 +1,104 @@
+//! Table 3: whole-CNN timings (AlexNet / OverFeat-fast), three kernels ×
+//! three passes through the network scheduler and PJRT artifacts.
+
+use anyhow::Result;
+
+use crate::coordinator::{LayerPlan, NetworkScheduler, Pass, Strategy};
+use crate::metrics::Table;
+use crate::runtime::Runtime;
+use crate::trace;
+
+/// Paper Table 3 totals (ms) for reference printing.
+const PAPER: [(&str, &str, [f64; 4]); 6] = [
+    ("alexnet", "cuFFT", [94.34, 96.69, 93.20, 284.23]),
+    ("alexnet", "cuDNN", [147.32, 167.79, 153.96, 469.07]),
+    ("alexnet", "ccn2", [99.03, 104.59, 103.29, 306.91]),
+    ("overfeat", "cuFFT", [375.65, 460.48, 397.85, 1233.98]),
+    ("overfeat", "cuDNN", [459.06, 634.26, 508.02, 1601.35]),
+    ("overfeat", "ccn2", [398.87, 634.26, 450.82, 1282.80]),
+];
+
+/// Build the layer plans for one network under one strategy. conv1 is
+/// strided, so it always runs the vendor path (exactly the paper's
+/// setup: 'The first layer uses cuDNN for the cuFFT runs').
+pub fn plans(net: &str, strategy: Strategy) -> Vec<LayerPlan> {
+    let layers = match net {
+        "alexnet" => trace::alexnet_layers(128),
+        "overfeat" => trace::overfeat_fast_layers(128),
+        other => panic!("unknown network {other}"),
+    };
+    layers
+        .into_iter()
+        .map(|(lname, paper)| {
+            let p = trace::scale(&paper, 8, 4);
+            let strat = if p.stride != 1 { Strategy::Vendor } else { strategy };
+            LayerPlan {
+                spec: format!("{net}.{lname}@_8"),
+                problem: p,
+                strategy: strat,
+            }
+        })
+        .collect()
+}
+
+/// Table 3 at CPU scale: our three kernels are vendor (cuDNN analogue),
+/// fbfft, and direct (ccn2 analogue).
+pub fn table3_report(rt: &Runtime) -> Result<String> {
+    let mut out = String::new();
+    let mut t = Table::new(&[
+        "network", "kernel", "fprop ms", "bprop ms", "accgrad ms",
+        "total ms"]);
+    for net in ["alexnet", "overfeat"] {
+        for (strategy, label) in [(Strategy::Vendor, "vendor(cuDNN)"),
+                                  (Strategy::Fbfft, "fbfft"),
+                                  (Strategy::Direct, "direct(ccn2)")] {
+            let mut sched = NetworkScheduler::new(rt, plans(net, strategy));
+            sched.check_artifacts(&Pass::ALL)?;
+            sched.warm(&Pass::ALL)?;
+            let (f, b, a) = sched.run_all()?;
+            let ms = |d: std::time::Duration| d.as_secs_f64() * 1e3;
+            t.row(vec![
+                net.to_string(),
+                label.to_string(),
+                format!("{:.2}", ms(f.total())),
+                format!("{:.2}", ms(b.total())),
+                format!("{:.2}", ms(a.total())),
+                format!("{:.2}", ms(f.total() + b.total() + a.total())),
+            ]);
+        }
+    }
+    out.push_str(
+        "Table 3: whole-CNN conv-layer totals (PJRT CPU, planes/8, S=4)\n");
+    out.push_str(&t.render());
+    out.push_str("\npaper (K40, ms):\n");
+    let mut pt = Table::new(&["network", "kernel", "fprop", "bprop",
+                              "accgrad", "total"]);
+    for (net, k, v) in PAPER {
+        pt.row(vec![net.into(), k.into(), v[0].to_string(),
+                    v[1].to_string(), v[2].to_string(), v[3].to_string()]);
+    }
+    out.push_str(&pt.render());
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plans_route_strided_conv1_to_vendor() {
+        let p = plans("alexnet", Strategy::Fbfft);
+        assert_eq!(p.len(), 5);
+        assert_eq!(p[0].strategy, Strategy::Vendor);
+        for l in &p[1..] {
+            assert_eq!(l.strategy, Strategy::Fbfft);
+        }
+    }
+
+    #[test]
+    fn plan_spec_names_match_aot_scaling_convention() {
+        let p = plans("overfeat", Strategy::Direct);
+        assert_eq!(p[1].spec, "overfeat.conv2@_8");
+        assert_eq!(p[1].problem.f, 12); // 96/8
+    }
+}

@@ -1,0 +1,16 @@
+//! Experiment report generators — one per table/figure in the paper's
+//! evaluation (the DESIGN.md §5 index). The CLI subcommands, the bench
+//! targets and EXPERIMENTS.md all run exactly these functions, so the
+//! recorded numbers are regenerable by construction.
+
+pub mod cnn;
+pub mod fftbench;
+pub mod sweep;
+pub mod tables;
+pub mod trainer;
+
+pub use cnn::table3_report;
+pub use fftbench::{fig7_report, fig8_report};
+pub use sweep::{fig16_report, sec54_report};
+pub use tables::{table4_report, table5_report, tiling_report};
+pub use trainer::{train_demo, TrainLog};

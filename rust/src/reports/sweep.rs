@@ -1,0 +1,231 @@
+//! Figures 1–6 (the 8,232-configuration sweep) and §5.4 (fbfft-conv vs
+//! vendor-FFT-conv).
+//!
+//! The full plane comes from the calibrated K40m model (`cost::model`);
+//! the measured anchor subset runs real PJRT executables when a runtime
+//! is supplied (artifacts `conv.swp.*`). Both are printed so the reader
+//! can see model and measurement side by side.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::conv::ConvProblem;
+use crate::cost::{CudnnModel, CufftConvModel};
+use crate::metrics::{Heatmap, Table};
+use crate::runtime::{HostTensor, Runtime};
+use crate::trace;
+use crate::util::Rng;
+
+/// Buckets for the y axis (problem size S·f·f') of Figures 1–6.
+const SIZE_BUCKETS: [(u64, &str); 8] = [
+    (1 << 4, "<=2^4"),
+    (1 << 8, "<=2^8"),
+    (1 << 12, "<=2^12"),
+    (1 << 16, "<=2^16"),
+    (1 << 20, "<=2^20"),
+    (1 << 22, "<=2^22"),
+    (1 << 24, "<=2^24"),
+    (u64::MAX, ">2^24"),
+];
+
+fn bucket(ps: u64) -> usize {
+    SIZE_BUCKETS.iter().position(|(hi, _)| ps <= *hi).unwrap()
+}
+
+/// Model-predicted speedup heatmaps (one per kernel size, Figures 1–6)
+/// over all 8,232 Table-2 configurations.
+pub fn fig16_report() -> String {
+    let dnn = CudnnModel::default();
+    let fft = CufftConvModel::vendor();
+    let grid = trace::table2_grid();
+    let mut out = String::new();
+    out.push_str("Figures 1-6: cuFFT-conv speedup over cuDNN (K40m model), \
+                  8232 configs\n");
+    out.push_str("rows: problem size S*f*f' | cols: output h/w\n\n");
+    for &k in &trace::TABLE2_K {
+        // average speedup per (bucket, y) cell
+        let mut acc: BTreeMap<(usize, usize), (f64, usize)> = BTreeMap::new();
+        for p in grid.iter().filter(|p| p.kh == k) {
+            let s = dnn.time(p) / fft.autotuned_time(p);
+            let key = (bucket(p.problem_size() as u64), p.yh());
+            let e = acc.entry(key).or_insert((0.0, 0));
+            e.0 += s;
+            e.1 += 1;
+        }
+        let cols: Vec<usize> = trace::TABLE2_Y.to_vec();
+        let rows: Vec<&str> =
+            SIZE_BUCKETS.iter().rev().map(|(_, l)| *l).collect();
+        let mut cells = vec![f64::NAN; rows.len() * cols.len()];
+        for ((b, y), (sum, n)) in &acc {
+            let r = SIZE_BUCKETS.len() - 1 - b;
+            let c = cols.iter().position(|v| v == y).unwrap();
+            cells[r * cols.len() + c] = sum / *n as f64;
+        }
+        let hm = Heatmap {
+            col_labels: cols.iter().map(|c| format!("{c:>3}")).collect(),
+            row_labels: rows.iter().map(|s| s.to_string()).collect(),
+            cells,
+        };
+        out.push_str(&hm.render(&format!("-- Figure (k={k}) --")));
+        out.push('\n');
+    }
+    // paper headline checks
+    let mut max3 = 0f64;
+    let mut max5 = 0f64;
+    let mut max13 = 0f64;
+    for p in &grid {
+        let s = dnn.time(p) / fft.autotuned_time(p);
+        match p.kh {
+            3 => max3 = max3.max(s),
+            5 => max5 = max5.max(s),
+            13 => max13 = max13.max(s),
+            _ => {}
+        }
+    }
+    out.push_str(&format!(
+        "headline: max speedup k=3: {max3:.2}x (paper 1.84x), \
+         k=5: {max5:.2}x (paper 5.33x), k=13: {max13:.2}x (paper 23.54x)\n"));
+    out
+}
+
+/// Measured anchor subset for Figures 1–6: the `conv.swp.*` artifacts
+/// (vendor vs fbfft fprop) through the PJRT runtime.
+pub fn fig16_measured(rt: &Runtime) -> Result<String> {
+    let mut table = Table::new(&[
+        "k", "y", "problem", "vendor ms", "fbfft ms", "speedup"]);
+    let mut rng = Rng::new(0x516);
+    for k in [3usize, 5, 9, 13] {
+        for y in [4usize, 8, 16, 32] {
+            let spec = format!("swp.k{k}.y{y}");
+            let Some(e) = rt.manifest().conv(&spec, "vendor", "fprop")
+            else { continue };
+            let p = e.problem().expect("sweep artifact has spec");
+            let mut times = Vec::new();
+            for strat in ["vendor", "fbfft"] {
+                let name = format!("conv.{spec}.{strat}.fprop");
+                let x = rng.normal_vec(p.input_len());
+                let w = rng.normal_vec(p.weight_len());
+                let args = [
+                    HostTensor::f32(x, &[p.s, p.f, p.h, p.w]),
+                    HostTensor::f32(w, &[p.fo, p.f, p.kh, p.kw]),
+                ];
+                rt.execute_1f32(&name, &args)?; // warm
+                let t0 = Instant::now();
+                let reps = 3;
+                for _ in 0..reps {
+                    rt.execute_1f32(&name, &args)?;
+                }
+                times.push(t0.elapsed().as_secs_f64() / reps as f64);
+            }
+            table.row(vec![
+                k.to_string(),
+                y.to_string(),
+                p.problem_size().to_string(),
+                format!("{:.3}", times[0] * 1e3),
+                format!("{:.3}", times[1] * 1e3),
+                format!("{:.2}x", times[0] / times[1]),
+            ]);
+        }
+    }
+    Ok(format!(
+        "Figures 1-6 measured anchor subset (PJRT CPU, S=f=f'=16):\n{}",
+        table.render()))
+}
+
+/// §5.4: fbfft-conv vs vendor-FFT-conv over x ∈ {13..64}, measured via
+/// PJRT artifacts (paper: overall mean speedup 1.51×, min 1.21×).
+pub fn sec54_report(rt: &Runtime) -> Result<String> {
+    let mut table = Table::new(&[
+        "x", "pass", "vendor_fft ms", "fbfft ms", "speedup"]);
+    let mut rng = Rng::new(0x54);
+    let mut ratios = Vec::new();
+    for x in [13usize, 16, 27, 32, 57, 64] {
+        let spec = format!("s54.x{x}");
+        let passes: &[&str] =
+            if x <= 32 { &["fprop", "bprop", "accgrad"] } else { &["fprop"] };
+        for pass in passes {
+            let Some(e) = rt.manifest().conv(&spec, "fbfft", pass)
+            else { continue };
+            let p = e.problem().expect("spec");
+            let mut times = Vec::new();
+            for strat in ["vendor_fft", "fbfft"] {
+                let name = format!("conv.{spec}.{strat}.{pass}");
+                let args = build_pass_args(&p, pass, &mut rng);
+                rt.execute_1f32(&name, &args)?; // warm
+                let t0 = Instant::now();
+                let reps = 3;
+                for _ in 0..reps {
+                    rt.execute_1f32(&name, &args)?;
+                }
+                times.push(t0.elapsed().as_secs_f64() / reps as f64);
+            }
+            let sp = times[0] / times[1];
+            ratios.push(sp);
+            table.row(vec![
+                x.to_string(),
+                pass.to_string(),
+                format!("{:.3}", times[0] * 1e3),
+                format!("{:.3}", times[1] * 1e3),
+                format!("{sp:.2}x"),
+            ]);
+        }
+    }
+    let mean = ratios.iter().sum::<f64>() / ratios.len().max(1) as f64;
+    let geo = (ratios.iter().map(|r| r.ln()).sum::<f64>()
+        / ratios.len().max(1) as f64)
+        .exp();
+    let min = ratios.iter().copied().fold(f64::INFINITY, f64::min);
+    Ok(format!(
+        "Sec 5.4: fbfft-conv vs vendor-FFT-conv (PJRT CPU, p=16 scale)\n{}\n\
+         mean speedup {mean:.2}x (paper 1.51x), geometric mean {geo:.2}x \
+         (paper 1.49x), min {min:.2}x (paper 1.21x)\n",
+        table.render()))
+}
+
+/// Build the two input tensors of a conv pass artifact.
+pub fn build_pass_args(p: &ConvProblem, pass: &str, rng: &mut Rng)
+                       -> [HostTensor; 2] {
+    let x = || (vec![p.s, p.f, p.h, p.w], p.input_len());
+    let w = || (vec![p.fo, p.f, p.kh, p.kw], p.weight_len());
+    let go = || (vec![p.s, p.fo, p.yh(), p.yw()], p.output_len());
+    let ((s1, n1), (s2, n2)) = match pass {
+        "fprop" => (x(), w()),
+        "bprop" => (go(), w()),
+        "accgrad" => (go(), x()),
+        other => panic!("unknown pass {other}"),
+    };
+    [HostTensor::f32(rng.normal_vec(n1), &s1),
+     HostTensor::f32(rng.normal_vec(n2), &s2)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_monotone_and_total() {
+        assert_eq!(bucket(1), 0);
+        assert!(bucket(300) > bucket(10));
+        assert_eq!(bucket(u64::MAX), SIZE_BUCKETS.len() - 1);
+    }
+
+    #[test]
+    fn model_report_contains_all_kernel_sizes() {
+        let r = fig16_report();
+        for k in [3, 5, 7, 9, 11, 13] {
+            assert!(r.contains(&format!("(k={k})")), "missing k={k}");
+        }
+        assert!(r.contains("headline"));
+    }
+
+    #[test]
+    fn pass_args_shapes() {
+        let p = ConvProblem::square(2, 3, 4, 9, 3);
+        let mut rng = Rng::new(1);
+        let [a, b] = build_pass_args(&p, "accgrad", &mut rng);
+        assert_eq!(a.shape(), &[2, 4, 7, 7]);
+        assert_eq!(b.shape(), &[2, 3, 9, 9]);
+    }
+}

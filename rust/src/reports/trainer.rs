@@ -1,0 +1,183 @@
+//! The end-to-end training driver: iterate the AOT-compiled `train.step`
+//! (fbfft convolutions in forward *and* backward via custom VJP) from
+//! Rust on synthetic labeled data, logging the loss curve. Python never
+//! runs — the whole training loop is PJRT executions of one module.
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{HostTensor, Runtime};
+use crate::trace::synthetic_batch;
+use crate::util::{Json, Rng};
+
+pub const PARAM_ORDER: [&str; 4] = ["conv1", "conv2", "dense_w", "dense_b"];
+
+/// Loss trajectory + throughput of one training run.
+#[derive(Clone, Debug, Default)]
+pub struct TrainLog {
+    pub losses: Vec<f32>,
+    pub steps: usize,
+    pub seconds: f64,
+}
+
+impl TrainLog {
+    pub fn first(&self) -> f32 {
+        *self.losses.first().unwrap_or(&f32::NAN)
+    }
+
+    pub fn last(&self) -> f32 {
+        *self.losses.last().unwrap_or(&f32::NAN)
+    }
+
+    pub fn steps_per_sec(&self) -> f64 {
+        self.steps as f64 / self.seconds.max(1e-9)
+    }
+
+    /// Render an ASCII loss curve (one row per log interval).
+    pub fn render_curve(&self, points: usize) -> String {
+        if self.losses.is_empty() {
+            return "(no data)".into();
+        }
+        let max = self.losses.iter().cloned().fold(f32::MIN, f32::max);
+        let stride = (self.losses.len() / points.max(1)).max(1);
+        let mut out = String::new();
+        for (i, l) in self.losses.iter().enumerate().step_by(stride) {
+            let bar = ((l / max) * 50.0).round().max(0.0) as usize;
+            out.push_str(&format!("step {i:>4}  loss {l:>8.4}  {}\n",
+                                  "#".repeat(bar)));
+        }
+        out
+    }
+}
+
+/// Train the demo CNN for `steps` SGD steps. Returns the loss log.
+pub fn train_demo(rt: &Runtime, steps: usize, seed: u64) -> Result<TrainLog> {
+    let entry = rt.manifest().require("train.step")?;
+    let cfg = entry.meta.get("config").ok_or_else(|| {
+        anyhow!("train.step missing config metadata")
+    })?;
+    let geti = |k: &str| -> Result<usize> {
+        cfg.get(k)
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("config missing {k}"))
+    };
+    let (s, c, hw, classes) =
+        (geti("s")?, geti("c")?, geti("hw")?, geti("classes")?);
+
+    // initial parameters from the AOT artifacts
+    let mut params: Vec<HostTensor> = PARAM_ORDER
+        .iter()
+        .map(|k| rt.load_tensor(&format!("train.init.{k}")))
+        .collect::<Result<_>>()?;
+
+    let mut rng = Rng::new(seed);
+    let mut log = TrainLog::default();
+    let t0 = std::time::Instant::now();
+    for _ in 0..steps {
+        let (x, y) = synthetic_batch(&mut rng, s, c, hw, classes);
+        let mut inputs = params.clone();
+        inputs.push(HostTensor::f32(x, &[s, c, hw, hw]));
+        inputs.push(HostTensor::i32(y, &[s]));
+        let mut outs = rt.execute("train.step", &inputs)?;
+        if outs.len() != PARAM_ORDER.len() + 1 {
+            return Err(anyhow!("train.step returned {} outputs", outs.len()));
+        }
+        let loss_t = outs.pop().unwrap();
+        let loss = loss_t.as_f32()?[0];
+        if !loss.is_finite() {
+            return Err(anyhow!("loss diverged to {loss} at step {}",
+                               log.steps));
+        }
+        params = outs;
+        log.losses.push(loss);
+        log.steps += 1;
+    }
+    log.seconds = t0.elapsed().as_secs_f64();
+    Ok(log)
+}
+
+/// Classification accuracy of the current parameters on fresh synthetic
+/// data, via the `train.logits` artifact.
+pub fn eval_accuracy(rt: &Runtime, params: &[HostTensor], batches: usize,
+                     seed: u64) -> Result<f64> {
+    let entry = rt.manifest().require("train.logits")?;
+    let cfg = entry.meta.get("config").unwrap();
+    let s = cfg.get("s").and_then(Json::as_usize).unwrap();
+    let c = cfg.get("c").and_then(Json::as_usize).unwrap();
+    let hw = cfg.get("hw").and_then(Json::as_usize).unwrap();
+    let classes = cfg.get("classes").and_then(Json::as_usize).unwrap();
+    let mut rng = Rng::new(seed);
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for _ in 0..batches {
+        let (x, y) = synthetic_batch(&mut rng, s, c, hw, classes);
+        let mut inputs = params.to_vec();
+        inputs.push(HostTensor::f32(x, &[s, c, hw, hw]));
+        let outs = rt.execute("train.logits", &inputs)?;
+        let logits = outs[0].as_f32()?;
+        for (b, label) in y.iter().enumerate() {
+            let row = &logits[b * classes..(b + 1) * classes];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            correct += usize::from(pred as i32 == *label);
+            total += 1;
+        }
+    }
+    Ok(correct as f64 / total as f64)
+}
+
+/// Re-run training and return the final parameters too (for eval).
+pub fn train_and_eval(rt: &Runtime, steps: usize, seed: u64)
+                      -> Result<(TrainLog, f64)> {
+    // train_demo consumes params internally; repeat with param capture
+    let entry = rt.manifest().require("train.step")?;
+    let cfg = entry.meta.get("config").unwrap();
+    let s = cfg.get("s").and_then(Json::as_usize).unwrap();
+    let c = cfg.get("c").and_then(Json::as_usize).unwrap();
+    let hw = cfg.get("hw").and_then(Json::as_usize).unwrap();
+    let classes = cfg.get("classes").and_then(Json::as_usize).unwrap();
+    let mut params: Vec<HostTensor> = PARAM_ORDER
+        .iter()
+        .map(|k| rt.load_tensor(&format!("train.init.{k}")))
+        .collect::<Result<_>>()?;
+    let mut rng = Rng::new(seed);
+    let mut log = TrainLog::default();
+    let t0 = std::time::Instant::now();
+    for _ in 0..steps {
+        let (x, y) = synthetic_batch(&mut rng, s, c, hw, classes);
+        let mut inputs = params.clone();
+        inputs.push(HostTensor::f32(x, &[s, c, hw, hw]));
+        inputs.push(HostTensor::i32(y, &[s]));
+        let mut outs = rt.execute("train.step", &inputs)?;
+        let loss = outs.pop().unwrap().as_f32()?[0];
+        params = outs;
+        log.losses.push(loss);
+        log.steps += 1;
+    }
+    log.seconds = t0.elapsed().as_secs_f64();
+    let acc = eval_accuracy(rt, &params, 8, seed + 1)?;
+    Ok((log, acc))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loss_curve_renders() {
+        let log = TrainLog {
+            losses: vec![2.0, 1.5, 1.0, 0.5],
+            steps: 4,
+            seconds: 2.0,
+        };
+        assert_eq!(log.first(), 2.0);
+        assert_eq!(log.last(), 0.5);
+        assert_eq!(log.steps_per_sec(), 2.0);
+        let curve = log.render_curve(4);
+        assert!(curve.contains("step    0"));
+        assert!(curve.contains("#"));
+    }
+}

@@ -1,0 +1,264 @@
+//! PJRT client wrapper: compile-on-demand executable cache + typed
+//! execution helpers. One `Runtime` owns the CPU client, the manifest
+//! and every compiled executable (the paper's 'one compiled executable
+//! per model variant', kept warm across requests).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{Entry, Manifest};
+
+/// A host-side tensor crossing the PJRT boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub enum HostTensor {
+    F32(Vec<f32>, Vec<usize>),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostTensor {
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor::F32(data, shape.to_vec())
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> Self {
+        assert_eq!(data.len(), shape.iter().product::<usize>());
+        HostTensor::I32(data, shape.to_vec())
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(_, s) | HostTensor::I32(_, s) => s,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(d, _) => Ok(d),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            HostTensor::F32(d, s) => {
+                let dims: Vec<i64> = s.iter().map(|d| *d as i64).collect();
+                xla::Literal::vec1(d).reshape(&dims)?
+            }
+            HostTensor::I32(d, s) => {
+                let dims: Vec<i64> = s.iter().map(|d| *d as i64).collect();
+                xla::Literal::vec1(d).reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<HostTensor> {
+        let shape = match lit.shape()? {
+            xla::Shape::Array(a) => {
+                a.dims().iter().map(|d| *d as usize).collect::<Vec<_>>()
+            }
+            other => bail!("unexpected non-array output shape {other:?}"),
+        };
+        match lit.ty()? {
+            xla::ElementType::F32 => {
+                Ok(HostTensor::F32(lit.to_vec::<f32>()?, shape))
+            }
+            xla::ElementType::S32 => {
+                Ok(HostTensor::I32(lit.to_vec::<i32>()?, shape))
+            }
+            other => bail!("unsupported output element type {other:?}"),
+        }
+    }
+}
+
+/// Compile statistics (the autotuner reports these).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RuntimeStats {
+    pub compiles: usize,
+    pub compile_time: Duration,
+    pub executions: usize,
+    pub execute_time: Duration,
+}
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    exes: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    stats: Mutex<RuntimeStats>,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (CPU PJRT client).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            exes: Mutex::new(HashMap::new()),
+            stats: Mutex::new(RuntimeStats::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        *self.stats.lock().expect("stats lock")
+    }
+
+    /// Compile (or fetch cached) the named artifact.
+    pub fn executable(&self, name: &str)
+                      -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.lock().expect("exe lock").get(name) {
+            return Ok(e.clone());
+        }
+        let entry = self.manifest.require(name)?;
+        let path = self.dir.join(&entry.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?)
+            .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        let exe = Arc::new(exe);
+        {
+            let mut st = self.stats.lock().expect("stats lock");
+            st.compiles += 1;
+            st.compile_time += t0.elapsed();
+        }
+        self.exes
+            .lock()
+            .expect("exe lock")
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile a family of artifacts (warm start for serving).
+    pub fn warm(&self, prefix: &str) -> Result<usize> {
+        let names: Vec<String> = self
+            .manifest
+            .with_prefix(prefix)
+            .filter(|e| e.file.ends_with(".hlo.txt"))
+            .map(|e| e.name.clone())
+            .collect();
+        for n in &names {
+            self.executable(n)?;
+        }
+        Ok(names.len())
+    }
+
+    /// Execute an artifact on host tensors; returns the flattened tuple
+    /// outputs. Validates shapes against the manifest before launch.
+    pub fn execute(&self, name: &str, inputs: &[HostTensor])
+                   -> Result<Vec<HostTensor>> {
+        let entry = self.manifest.require(name)?;
+        self.check_inputs(entry, inputs)?;
+        let exe = self.executable(name)?;
+        let lits = inputs
+            .iter()
+            .map(HostTensor::to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e:?}"))?;
+        {
+            let mut st = self.stats.lock().expect("stats lock");
+            st.executions += 1;
+            st.execute_time += t0.elapsed();
+        }
+        // aot.py lowers with return_tuple=True: always a tuple literal
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling result of {name}: {e:?}"))?;
+        parts.iter().map(HostTensor::from_literal).collect()
+    }
+
+    /// Execute expecting a single f32 output (the common conv case).
+    pub fn execute_1f32(&self, name: &str, inputs: &[HostTensor])
+                        -> Result<(Vec<f32>, Vec<usize>)> {
+        let mut out = self.execute(name, inputs)?;
+        if out.len() != 1 {
+            bail!("{name}: expected 1 output, got {}", out.len());
+        }
+        match out.pop().unwrap() {
+            HostTensor::F32(d, s) => Ok((d, s)),
+            _ => bail!("{name}: output is not f32"),
+        }
+    }
+
+    fn check_inputs(&self, entry: &Entry, inputs: &[HostTensor])
+                    -> Result<()> {
+        if entry.inputs.len() != inputs.len() {
+            bail!("{}: expected {} inputs, got {}", entry.name,
+                  entry.inputs.len(), inputs.len());
+        }
+        for (i, (spec, got)) in entry.inputs.iter().zip(inputs).enumerate() {
+            if spec.shape != got.shape() {
+                bail!("{} input {i}: expected shape {:?}, got {:?}",
+                      entry.name, spec.shape, got.shape());
+            }
+        }
+        Ok(())
+    }
+
+    /// Load a raw `.bin` tensor artifact (little-endian f32).
+    pub fn load_tensor(&self, name: &str) -> Result<HostTensor> {
+        let entry = self.manifest.require(name)?;
+        if entry.kind != "tensor" {
+            bail!("{name} is not a tensor artifact");
+        }
+        let path = self.dir.join(&entry.file);
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {path:?}"))?;
+        if bytes.len() % 4 != 0 {
+            bail!("{name}: byte length {} not a multiple of 4", bytes.len());
+        }
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let shape = entry.outputs[0].shape.clone();
+        if data.len() != shape.iter().product::<usize>() {
+            bail!("{name}: {} elements but shape {:?}", data.len(), shape);
+        }
+        Ok(HostTensor::F32(data, shape))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_tensor_shape_checks() {
+        let t = HostTensor::f32(vec![0.0; 6], &[2, 3]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert!(t.as_f32().is_ok());
+        let i = HostTensor::i32(vec![1, 2], &[2]);
+        assert!(i.as_f32().is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn host_tensor_rejects_shape_mismatch() {
+        HostTensor::f32(vec![0.0; 5], &[2, 3]);
+    }
+}

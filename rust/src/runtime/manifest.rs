@@ -1,0 +1,222 @@
+//! The artifact manifest: `artifacts/manifest.json` written by
+//! `python/compile/aot.py`, describing every HLO module and raw tensor
+//! the coordinator may load (shapes, dtypes, workload metadata).
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::conv::ConvProblem;
+use crate::util::Json;
+
+/// Shape + dtype of one executable input/output.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "s32"
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorSpec> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("tensor spec missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j
+            .get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("tensor spec missing dtype"))?
+            .to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// One manifest entry (HLO module or raw tensor).
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub name: String,
+    pub kind: String,
+    /// file name under the artifacts dir (.hlo.txt or .bin)
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: Json,
+}
+
+impl Entry {
+    /// The conv problem this entry serves, if it is a conv artifact.
+    pub fn problem(&self) -> Option<ConvProblem> {
+        ConvProblem::from_json(self.meta.get("spec")?)
+    }
+
+    pub fn strategy(&self) -> Option<&str> {
+        self.meta.get("strategy")?.as_str()
+    }
+
+    pub fn pass(&self) -> Option<&str> {
+        self.meta.get("pass")?.as_str()
+    }
+
+    pub fn origin(&self) -> Option<&str> {
+        self.meta.get("origin")?.as_str()
+    }
+}
+
+/// Parsed manifest with name-keyed lookup.
+#[derive(Debug, Default)]
+pub struct Manifest {
+    pub entries: Vec<Entry>,
+    by_name: BTreeMap<String, usize>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts`"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let version = j.get("version").and_then(Json::as_usize);
+        if version != Some(1) {
+            bail!("unsupported manifest version {version:?}");
+        }
+        let mut m = Manifest::default();
+        for ej in j
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing entries"))?
+        {
+            let name = ej
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("entry missing name"))?
+                .to_string();
+            let kind = ej
+                .get("kind")
+                .and_then(Json::as_str)
+                .unwrap_or("unknown")
+                .to_string();
+            let file = ej
+                .get("hlo")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("entry {name} missing file"))?
+                .to_string();
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                ej.get(key)
+                    .and_then(Json::as_arr)
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(TensorSpec::from_json)
+                    .collect()
+            };
+            let entry = Entry {
+                inputs: parse_specs("inputs")?,
+                outputs: parse_specs("outputs")?,
+                meta: ej.get("meta").cloned().unwrap_or(Json::Null),
+                name,
+                kind,
+                file,
+            };
+            m.by_name.insert(entry.name.clone(), m.entries.len());
+            m.entries.push(entry);
+        }
+        Ok(m)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Entry> {
+        self.by_name.get(name).map(|i| &self.entries[*i])
+    }
+
+    pub fn require(&self, name: &str) -> Result<&Entry> {
+        self.get(name).ok_or_else(|| {
+            anyhow!("artifact {name:?} not in manifest — re-run `make artifacts`")
+        })
+    }
+
+    /// All entries whose name starts with `prefix` (artifact families).
+    pub fn with_prefix<'a>(&'a self, prefix: &'a str)
+                           -> impl Iterator<Item = &'a Entry> {
+        self.entries.iter().filter(move |e| e.name.starts_with(prefix))
+    }
+
+    /// Find the conv artifact for (origin spec name, strategy, pass).
+    pub fn conv(&self, spec_name: &str, strategy: &str, pass: &str)
+                -> Option<&Entry> {
+        let want = format!("conv.{spec_name}.{strategy}.{pass}");
+        self.get(&want)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "entries": [
+        {"name": "conv.q.fbfft.fprop", "kind": "conv",
+         "hlo": "conv.q.fbfft.fprop.hlo.txt",
+         "inputs": [{"shape": [2,4,16,16], "dtype": "f32"},
+                     {"shape": [4,4,3,3], "dtype": "f32"}],
+         "outputs": [{"shape": [2,4,14,14], "dtype": "f32"}],
+         "meta": {"strategy": "fbfft", "pass": "fprop", "origin": "q",
+                  "spec": {"name":"q","s":2,"f":4,"fo":4,"h":16,"w":16,
+                            "kh":3,"kw":3,"stride":1}}},
+        {"name": "train.init.conv1", "kind": "tensor",
+         "hlo": "train.init.conv1.bin",
+         "inputs": [], "outputs": [{"shape": [8,1,3,3], "dtype": "f32"}],
+         "meta": {"param": "conv1"}}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_and_indexes() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let e = m.get("conv.q.fbfft.fprop").unwrap();
+        assert_eq!(e.inputs.len(), 2);
+        assert_eq!(e.inputs[0].elems(), 2 * 4 * 16 * 16);
+        assert_eq!(e.strategy(), Some("fbfft"));
+        assert_eq!(e.pass(), Some("fprop"));
+        let p = e.problem().unwrap();
+        assert_eq!((p.s, p.f, p.fo, p.h), (2, 4, 4, 16));
+    }
+
+    #[test]
+    fn conv_lookup_by_triple() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.conv("q", "fbfft", "fprop").is_some());
+        assert!(m.conv("q", "vendor", "fprop").is_none());
+    }
+
+    #[test]
+    fn prefix_family() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.with_prefix("train.").count(), 1);
+        assert_eq!(m.with_prefix("conv.").count(), 1);
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        assert!(Manifest::parse(r#"{"version":2,"entries":[]}"#).is_err());
+    }
+
+    #[test]
+    fn require_gives_actionable_error() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let err = m.require("nope").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"));
+    }
+}

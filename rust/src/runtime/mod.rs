@@ -1,0 +1,13 @@
+//! The PJRT bridge: load AOT-compiled HLO-text artifacts and execute them
+//! from the coordinator's hot path. Python never appears here — the
+//! artifacts directory is the entire interface between the layers.
+//!
+//! HLO **text** is the interchange format: jax ≥ 0.5 serializes protos
+//! with 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod client;
+pub mod manifest;
+
+pub use client::{HostTensor, Runtime, RuntimeStats};
+pub use manifest::{Entry, Manifest, TensorSpec};

@@ -1,0 +1,222 @@
+//! Workload generation: every problem set the paper evaluates, plus the
+//! request traces the serving example drives through the coordinator.
+//!
+//! Mirrors `python/compile/specs.py` (the AOT manifest carries the same
+//! specs; `runtime::manifest` cross-checks the two).
+
+use crate::conv::ConvProblem;
+use crate::util::Rng;
+
+/// Table 2's axes (Figures 1–6).
+pub const TABLE2_S: [usize; 4] = [1, 16, 64, 128];
+pub const TABLE2_F: [usize; 7] = [1, 4, 16, 64, 96, 128, 256];
+pub const TABLE2_FO: [usize; 7] = [1, 4, 16, 64, 96, 128, 256];
+pub const TABLE2_K: [usize; 6] = [3, 5, 7, 9, 11, 13];
+pub const TABLE2_Y: [usize; 7] = [1, 2, 4, 8, 16, 32, 64];
+
+/// All 8,232 configurations of Table 2 (h = y + k - 1, paper fn. 8).
+pub fn table2_grid() -> Vec<ConvProblem> {
+    let mut v = Vec::with_capacity(8232);
+    for &s in &TABLE2_S {
+        for &f in &TABLE2_F {
+            for &fo in &TABLE2_FO {
+                for &k in &TABLE2_K {
+                    for &y in &TABLE2_Y {
+                        v.push(ConvProblem::square(s, f, fo, y + k - 1, k));
+                    }
+                }
+            }
+        }
+    }
+    v
+}
+
+/// Table 4's representative layers L1–L5 (exact paper parameters).
+pub fn table4_layers() -> Vec<(&'static str, ConvProblem)> {
+    vec![
+        ("L1", ConvProblem::square(128, 3, 96, 128, 11)),
+        ("L2", ConvProblem::square(128, 64, 64, 64, 9)),
+        ("L3", ConvProblem::square(128, 128, 128, 32, 9)),
+        ("L4", ConvProblem::square(128, 128, 128, 16, 7)),
+        ("L5", ConvProblem::square(128, 384, 384, 13, 3)),
+    ]
+}
+
+/// Plane/batch reduction for CPU execution (documented substitution,
+/// DESIGN.md §3) — spatial shape preserved, so the FFT-vs-time-domain
+/// character of each layer is preserved.
+pub fn scale(p: &ConvProblem, planes: usize, batch: usize) -> ConvProblem {
+    let mut q = *p;
+    q.s = p.s.min(batch);
+    q.f = (p.f / planes).max(1);
+    q.fo = (p.fo / planes).max(1);
+    q
+}
+
+/// AlexNet convolutional layers (Krizhevsky 2012; 2014 convnet-benchmarks
+/// shapes, padded inputs). conv1 is strided → vendor-only (paper §4.2).
+pub fn alexnet_layers(s: usize) -> Vec<(&'static str, ConvProblem)> {
+    let mut c1 = ConvProblem::square(s, 3, 64, 224, 11);
+    c1.stride = 4;
+    vec![
+        ("conv1", c1),
+        ("conv2", ConvProblem::square(s, 64, 192, 31, 5)),
+        ("conv3", ConvProblem::square(s, 192, 384, 15, 3)),
+        ("conv4", ConvProblem::square(s, 384, 256, 15, 3)),
+        ("conv5", ConvProblem::square(s, 256, 256, 15, 3)),
+    ]
+}
+
+/// OverFeat *fast* convolutional layers (Sermanet 2014).
+pub fn overfeat_fast_layers(s: usize) -> Vec<(&'static str, ConvProblem)> {
+    let mut c1 = ConvProblem::square(s, 3, 96, 231, 11);
+    c1.stride = 4;
+    vec![
+        ("conv1", c1),
+        ("conv2", ConvProblem::square(s, 96, 256, 28, 5)),
+        ("conv3", ConvProblem::square(s, 256, 512, 14, 3)),
+        ("conv4", ConvProblem::square(s, 512, 1024, 14, 3)),
+        ("conv5", ConvProblem::square(s, 1024, 1024, 14, 3)),
+    ]
+}
+
+/// §5.4's comparison grid: x = h = w ∈ {13,16,27,32,57,64},
+/// p = S = f = f' ∈ {16,32,64,128}, k = 3.
+pub fn sec54_grid() -> Vec<ConvProblem> {
+    let mut v = Vec::new();
+    for x in [13usize, 16, 27, 32, 57, 64] {
+        for p in [16usize, 32, 64, 128] {
+            v.push(ConvProblem::square(p, p, p, x, 3));
+        }
+    }
+    v
+}
+
+/// One inference request for the serving example: a client asks for a
+/// forward convolution of `images` samples against the layer loaded by
+/// the server. Arrival times are Poisson.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub arrival_s: f64,
+    pub images: usize,
+}
+
+/// Poisson request trace with geometric-ish size mix (mostly single
+/// images with occasional small bursts — a serving-shaped load).
+pub fn request_trace(n: usize, rate_per_s: f64, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0f64;
+    (0..n as u64)
+        .map(|id| {
+            t += rng.exponential(1.0 / rate_per_s as f32) as f64;
+            let images = match rng.below(10) {
+                0..=5 => 1,
+                6..=7 => 2,
+                8 => 4,
+                _ => 8,
+            };
+            Request { id, arrival_s: t, images }
+        })
+        .collect()
+}
+
+/// Synthetic labeled dataset for the e2e training example: class k is a
+/// blurred directional pattern + noise; linearly separable enough that a
+/// healthy training loop visibly reduces the loss within ~100 steps.
+pub fn synthetic_batch(rng: &mut Rng, s: usize, c: usize, hw: usize,
+                       classes: usize) -> (Vec<f32>, Vec<i32>) {
+    let mut x = vec![0f32; s * c * hw * hw];
+    let mut y = vec![0i32; s];
+    for b in 0..s {
+        let class = rng.below(classes);
+        y[b] = class as i32;
+        let (fx, fy) = match class % 4 {
+            0 => (1.0, 0.0),
+            1 => (0.0, 1.0),
+            2 => (1.0, 1.0),
+            _ => (1.0, -1.0),
+        };
+        for ch in 0..c {
+            for r in 0..hw {
+                for q in 0..hw {
+                    let phase = (fx * q as f32 + fy * r as f32)
+                        * std::f32::consts::PI * 2.0 / hw as f32
+                        * (1.0 + class as f32 * 0.5);
+                    x[((b * c + ch) * hw + r) * hw + q] =
+                        phase.sin() + 0.3 * rng.normal();
+                }
+            }
+        }
+    }
+    (x, y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_has_exactly_8232_configs() {
+        let g = table2_grid();
+        assert_eq!(g.len(), 8232); // 4·7·7·6·7, the paper's count
+        // parameterized on output size: y = h - k + 1 hits the grid
+        for p in &g {
+            assert!(TABLE2_Y.contains(&p.yh()));
+            assert!(TABLE2_K.contains(&p.kh));
+        }
+    }
+
+    #[test]
+    fn table4_matches_paper_parameters() {
+        let t = table4_layers();
+        assert_eq!(t[1].1, ConvProblem::square(128, 64, 64, 64, 9));
+        assert_eq!(t[4].1.kh, 3);
+        assert_eq!(t[0].1.f, 3);
+    }
+
+    #[test]
+    fn scaling_preserves_spatial_shape() {
+        let (_, l2) = &table4_layers()[1];
+        let s = scale(l2, 8, 8);
+        assert_eq!((s.h, s.w, s.kh), (l2.h, l2.w, l2.kh));
+        assert_eq!(s.f, 8);
+        assert_eq!(s.s, 8);
+    }
+
+    #[test]
+    fn cnn_tables_have_strided_conv1_only() {
+        for layers in [alexnet_layers(128), overfeat_fast_layers(128)] {
+            assert_eq!(layers[0].1.stride, 4);
+            for (_, p) in &layers[1..] {
+                assert_eq!(p.stride, 1);
+            }
+        }
+    }
+
+    #[test]
+    fn sec54_grid_is_24_points() {
+        assert_eq!(sec54_grid().len(), 24);
+    }
+
+    #[test]
+    fn request_trace_is_sorted_and_deterministic() {
+        let a = request_trace(100, 50.0, 7);
+        let b = request_trace(100, 50.0, 7);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.arrival_s, y.arrival_s);
+        }
+        for w in a.windows(2) {
+            assert!(w[0].arrival_s <= w[1].arrival_s);
+        }
+    }
+
+    #[test]
+    fn synthetic_batch_is_labeled_and_bounded() {
+        let mut rng = Rng::new(1);
+        let (x, y) = synthetic_batch(&mut rng, 8, 1, 16, 4);
+        assert_eq!(x.len(), 8 * 256);
+        assert!(y.iter().all(|l| (0..4).contains(l)));
+        assert!(x.iter().all(|v| v.abs() < 10.0));
+    }
+}

@@ -1,0 +1,9 @@
+//! In-tree utility substrates (no registry access in this image, so the
+//! usual crates — serde_json, rand, rayon, criterion, proptest — are
+//! replaced by small, tested, purpose-built implementations).
+
+pub mod json;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,229 @@
+//! Integration tests over the real artifacts directory: PJRT-loaded
+//! AOT modules cross-checked against the in-tree host engines.
+//!
+//! These require `make artifacts` to have run (the Makefile's `test`
+//! target guarantees the ordering).
+
+use fbfft_repro::conv::{direct, ConvProblem, FftConvEngine};
+use fbfft_repro::coordinator::batcher::BatcherConfig;
+use fbfft_repro::coordinator::service::{Completion, ConvService,
+                                        ServeRequest};
+use fbfft_repro::coordinator::{LayerPlan, NetworkScheduler, Pass, Strategy};
+use fbfft_repro::runtime::{HostTensor, Runtime};
+use fbfft_repro::util::Rng;
+
+fn rt() -> Runtime {
+    Runtime::open("artifacts").expect("artifacts dir (run `make artifacts`)")
+}
+
+fn max_err(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[test]
+fn manifest_has_all_experiment_families() {
+    let rt = rt();
+    let m = rt.manifest();
+    for prefix in ["conv.quickstart.", "conv.T4.", "conv.alexnet.",
+                   "conv.overfeat.", "conv.swp.", "conv.s54.",
+                   "conv.tile.", "fft1d.", "fft2d.", "train."] {
+        assert!(m.with_prefix(prefix).count() > 0,
+                "no artifacts with prefix {prefix}");
+    }
+    assert!(m.entries.len() >= 200, "expected full artifact set");
+}
+
+#[test]
+fn quickstart_artifacts_match_host_engine() {
+    let rt = rt();
+    let p = ConvProblem::square(2, 4, 4, 16, 3);
+    let mut rng = Rng::new(42);
+    let x = rng.normal_vec(p.input_len());
+    let w = rng.normal_vec(p.weight_len());
+    let want = direct::fprop(&p, &x, &w);
+    for strat in ["vendor", "fbfft"] {
+        let (got, shape) = rt
+            .execute_1f32(
+                &format!("conv.quickstart.{strat}.fprop"),
+                &[HostTensor::f32(x.clone(), &[2, 4, 16, 16]),
+                  HostTensor::f32(w.clone(), &[4, 4, 3, 3])])
+            .unwrap();
+        assert_eq!(shape, vec![2, 4, 14, 14]);
+        assert!(max_err(&got, &want) < 1e-3,
+                "{strat} deviates from host direct engine");
+    }
+}
+
+#[test]
+fn pallas_pipeline_all_three_passes_match_host() {
+    let rt = rt();
+    // T4.L4 scaled: S=8, f=f'=16, 16x16, k=7
+    let e = rt.manifest().conv("T4.L4@_8", "fbfft", "fprop")
+        .expect("T4.L4 artifact");
+    let p = e.problem().unwrap();
+    let mut rng = Rng::new(7);
+    let x = rng.normal_vec(p.input_len());
+    let w = rng.normal_vec(p.weight_len());
+    let go = rng.normal_vec(p.output_len());
+    let host = FftConvEngine::fbfft_for(&p);
+
+    let (got, _) = rt.execute_1f32(
+        "conv.T4.L4@_8.fbfft.fprop",
+        &[HostTensor::f32(x.clone(), &[p.s, p.f, p.h, p.w]),
+          HostTensor::f32(w.clone(), &[p.fo, p.f, p.kh, p.kw])]).unwrap();
+    let (want, _) = host.fprop(&p, &x, &w);
+    assert!(max_err(&got, &want) < 2e-2, "fprop mismatch");
+
+    let (got, _) = rt.execute_1f32(
+        "conv.T4.L4@_8.fbfft.bprop",
+        &[HostTensor::f32(go.clone(), &[p.s, p.fo, p.yh(), p.yw()]),
+          HostTensor::f32(w.clone(), &[p.fo, p.f, p.kh, p.kw])]).unwrap();
+    let (want, _) = host.bprop(&p, &go, &w);
+    assert!(max_err(&got, &want) < 2e-2, "bprop mismatch");
+
+    let (got, _) = rt.execute_1f32(
+        "conv.T4.L4@_8.fbfft.accgrad",
+        &[HostTensor::f32(go.clone(), &[p.s, p.fo, p.yh(), p.yw()]),
+          HostTensor::f32(x.clone(), &[p.s, p.f, p.h, p.w])]).unwrap();
+    let (want, _) = host.accgrad(&p, &go, &x);
+    assert!(max_err(&got, &want) < 5e-2, "accgrad mismatch");
+}
+
+#[test]
+fn fft1d_artifact_matches_host_fbfft() {
+    let rt = rt();
+    let n = 32usize;
+    let batch = 4096usize;
+    let mut rng = Rng::new(3);
+    let x = rng.normal_vec(batch * n);
+    let outs = rt
+        .execute(&format!("fft1d.n{n}.b{batch}.fbfft"),
+                 &[HostTensor::f32(x.clone(), &[batch, n])])
+        .unwrap();
+    let re = outs[0].as_f32().unwrap();
+    let im = outs[1].as_f32().unwrap();
+    let plan = fbfft_repro::fft::fbfft_host::cached(n);
+    let nf = n / 2 + 1;
+    let mut want = vec![fbfft_repro::fft::C32::ZERO; batch * nf];
+    plan.rfft_batch(&x, n, batch, &mut want);
+    for b in (0..batch).step_by(997) {
+        for k in 0..nf {
+            let w = want[b * nf + k];
+            assert!((re[b * nf + k] - w.re).abs() < 1e-2, "re b={b} k={k}");
+            assert!((im[b * nf + k] - w.im).abs() < 1e-2, "im b={b} k={k}");
+        }
+    }
+}
+
+#[test]
+fn tiled_artifact_equals_untiled() {
+    let rt = rt();
+    let e = rt.manifest().get("conv.tile.x57.fbfft.fprop").unwrap();
+    let p = e.problem().unwrap();
+    let mut rng = Rng::new(9);
+    let x = rng.normal_vec(p.input_len());
+    let w = rng.normal_vec(p.weight_len());
+    let args = [HostTensor::f32(x, &[p.s, p.f, p.h, p.w]),
+                HostTensor::f32(w, &[p.fo, p.f, p.kh, p.kw])];
+    let (base, _) =
+        rt.execute_1f32("conv.tile.x57.fbfft.fprop", &args).unwrap();
+    for d in [8usize, 16] {
+        let (tiledv, _) = rt
+            .execute_1f32(&format!("conv.tile.x57.fbfft_tiled.fprop.d{d}"),
+                          &args)
+            .unwrap();
+        assert!(max_err(&base, &tiledv) < 2e-2, "tile d={d} deviates");
+    }
+}
+
+#[test]
+fn train_step_reduces_loss() {
+    let rt = rt();
+    let log = fbfft_repro::reports::trainer::train_demo(&rt, 120, 0xFEED)
+        .unwrap();
+    assert_eq!(log.steps, 120);
+    let first10: f32 =
+        log.losses[..10].iter().sum::<f32>() / 10.0;
+    let last10: f32 =
+        log.losses[log.steps - 10..].iter().sum::<f32>() / 10.0;
+    assert!(last10 < first10 * 0.8,
+            "loss did not improve: {first10} -> {last10}");
+    assert!(log.losses.iter().all(|l| l.is_finite()));
+}
+
+#[test]
+fn scheduler_runs_scaled_alexnet_all_passes() {
+    let rt = rt();
+    let plans = fbfft_repro::reports::cnn::plans("alexnet", Strategy::Fbfft);
+    let mut sched = NetworkScheduler::new(&rt, plans);
+    sched.check_artifacts(&Pass::ALL).unwrap();
+    let (f, b, a) = sched.run_all().unwrap();
+    assert_eq!(f.per_layer.len(), 5);
+    assert_eq!(b.per_layer.len(), 5);
+    assert_eq!(a.per_layer.len(), 5);
+    assert!(f.total().as_nanos() > 0);
+}
+
+#[test]
+fn scheduler_fails_fast_on_missing_artifact() {
+    let rt = rt();
+    let plans = vec![LayerPlan {
+        spec: "does.not.exist".into(),
+        problem: ConvProblem::square(1, 1, 1, 8, 3),
+        strategy: Strategy::Fbfft,
+    }];
+    let sched = NetworkScheduler::new(&rt, plans);
+    let err = sched.check_artifacts(&[Pass::Fprop]).unwrap_err();
+    assert!(err.to_string().contains("does.not.exist"));
+}
+
+#[test]
+fn service_end_to_end_on_quickstart() {
+    let p = ConvProblem::square(2, 4, 4, 16, 3);
+    let svc = ConvService::start(
+        "artifacts".into(),
+        "conv.quickstart.fbfft.fprop".into(),
+        p,
+        BatcherConfig { capacity: 2,
+                        max_wait: std::time::Duration::from_millis(1) },
+    ).unwrap();
+    let (tx, rx) = std::sync::mpsc::channel::<Completion>();
+    for id in 0..10u64 {
+        svc.submit(ServeRequest { id, images: 1, reply: tx.clone() });
+    }
+    drop(tx);
+    let mut done = 0;
+    while let Ok(c) = rx.recv_timeout(std::time::Duration::from_secs(30)) {
+        assert!(c.latency.as_secs_f64() >= 0.0);
+        assert!(c.batch_images <= 2);
+        done += 1;
+        if done == 10 {
+            break;
+        }
+    }
+    let report = svc.shutdown();
+    assert_eq!(report.requests, 10);
+    assert_eq!(done, 10, "all requests completed");
+    assert!(report.launches >= 5, "batching factor <= capacity");
+}
+
+#[test]
+fn runtime_rejects_wrong_shapes() {
+    let rt = rt();
+    let err = rt
+        .execute_1f32("conv.quickstart.fbfft.fprop",
+                      &[HostTensor::f32(vec![0.0; 4], &[2, 2]),
+                        HostTensor::f32(vec![0.0; 4], &[2, 2])])
+        .unwrap_err();
+    assert!(err.to_string().contains("expected shape"));
+}
+
+#[test]
+fn executable_cache_compiles_once() {
+    let rt = rt();
+    rt.executable("conv.quickstart.vendor.fprop").unwrap();
+    let c1 = rt.stats().compiles;
+    rt.executable("conv.quickstart.vendor.fprop").unwrap();
+    assert_eq!(rt.stats().compiles, c1, "second fetch must hit the cache");
+}

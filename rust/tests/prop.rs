@@ -1,0 +1,273 @@
+//! Property-based tests over the host substrates (proptest is not
+//! available offline; these are seeded randomized properties with many
+//! cases per invariant — same coverage philosophy, deterministic replay
+//! via the case index).
+
+use fbfft_repro::conv::{direct, im2col, tiled, ConvProblem, FftConvEngine,
+                        FftMode};
+use fbfft_repro::coordinator::autotuner::candidate_bases;
+use fbfft_repro::coordinator::{Batcher, BatcherConfig};
+use fbfft_repro::fft::{fbfft_host, is_smooth, naive_dft, plan, real, C32};
+use fbfft_repro::util::{Json, Rng};
+
+const CASES: usize = 40;
+
+fn rand_problem(rng: &mut Rng, max_hw: usize) -> ConvProblem {
+    let kh = *rng.choice(&[1usize, 2, 3, 5]);
+    let kw = *rng.choice(&[1usize, 2, 3, 5]);
+    let h = rng.int_in(kh.max(2), max_hw);
+    let w = rng.int_in(kw.max(2), max_hw);
+    ConvProblem::new(rng.int_in(1, 3), rng.int_in(1, 4), rng.int_in(1, 4),
+                     h, w, kh.min(h), kw.min(w))
+}
+
+// ---------------------------------------------------------------------------
+// FFT invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_plan_matches_naive_dft_any_size() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(case as u64);
+        let n = rng.int_in(1, 48);
+        let x: Vec<C32> = (0..n)
+            .map(|_| C32::new(rng.normal(), rng.normal()))
+            .collect();
+        let got = plan::cached(n).transform(&x, plan::Direction::Forward);
+        let want = naive_dft(&x, false);
+        for (k, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!((*g - *w).abs() < 1e-2 * (n as f32).sqrt(),
+                    "case {case} n={n} k={k}: {g:?} vs {w:?}");
+        }
+    }
+}
+
+#[test]
+fn prop_fft_round_trip_and_parseval() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(1000 + case as u64);
+        let n = rng.int_in(2, 64);
+        let x: Vec<C32> = (0..n)
+            .map(|_| C32::new(rng.normal(), rng.normal()))
+            .collect();
+        let p = plan::cached(n);
+        let f = p.transform(&x, plan::Direction::Forward);
+        // Parseval: ||x||² = ||F||²/n
+        let ex: f64 = x.iter().map(|c| c.norm_sq() as f64).sum();
+        let ef: f64 =
+            f.iter().map(|c| c.norm_sq() as f64).sum::<f64>() / n as f64;
+        assert!((ex - ef).abs() < 1e-2 * ex.max(1.0),
+                "case {case} n={n}: {ex} vs {ef}");
+        let back = p.inverse_normalized(&f);
+        for (b, o) in back.iter().zip(&x) {
+            assert!((*b - *o).abs() < 1e-3, "case {case} n={n}");
+        }
+    }
+}
+
+#[test]
+fn prop_rfft_hermitian_consistency() {
+    // the half-spectrum of a real signal determines the full one: check
+    // against the complex transform of the same signal
+    for case in 0..CASES {
+        let mut rng = Rng::new(2000 + case as u64);
+        let n = rng.int_in(2, 64);
+        let x = rng.normal_vec(n);
+        let half = real::rfft(&x, n);
+        let z: Vec<C32> = x.iter().map(|v| C32::new(*v, 0.0)).collect();
+        let full = plan::cached(n).transform(&z, plan::Direction::Forward);
+        for k in 0..half.len() {
+            assert!((half[k] - full[k]).abs() < 2e-3,
+                    "case {case} n={n} k={k}");
+        }
+    }
+}
+
+#[test]
+fn prop_fbfft_implicit_pad_equals_vendor_explicit_pad() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(3000 + case as u64);
+        let n = *rng.choice(&[8usize, 16, 32, 64]);
+        let n_in = rng.int_in(1, n);
+        let batch = rng.int_in(1, 6);
+        let x = rng.normal_vec(batch * n_in);
+        let fb = fbfft_host::cached(n);
+        let nf = n / 2 + 1;
+        let mut got = vec![C32::ZERO; batch * nf];
+        fb.rfft_batch(&x, n_in, batch, &mut got);
+        for b in 0..batch {
+            let mut padded = x[b * n_in..(b + 1) * n_in].to_vec();
+            padded.resize(n, 0.0);
+            let want = real::rfft(&padded, n);
+            for k in 0..nf {
+                assert!((got[b * nf + k] - want[k]).abs() < 2e-3,
+                        "case {case} n={n} n_in={n_in} b={b} k={k}");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Convolution invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_all_engines_agree_on_fprop() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(4000 + case as u64);
+        let p = rand_problem(&mut rng, 12);
+        let x = rng.normal_vec(p.input_len());
+        let w = rng.normal_vec(p.weight_len());
+        let a = direct::fprop(&p, &x, &w);
+        let b = im2col::fprop(&p, &x, &w);
+        let n = p.h.max(p.w).next_power_of_two();
+        let (c, _) = FftConvEngine::new(FftMode::Fbfft, n).fprop(&p, &x, &w);
+        let (d, _) = FftConvEngine::new(FftMode::Vendor, n).fprop(&p, &x, &w);
+        for i in 0..a.len() {
+            assert!((a[i] - b[i]).abs() < 1e-3, "case {case} im2col@{i}");
+            assert!((a[i] - c[i]).abs() < 5e-3, "case {case} fbfft@{i}");
+            assert!((a[i] - d[i]).abs() < 5e-3, "case {case} vendor@{i}");
+        }
+    }
+}
+
+#[test]
+fn prop_adjoint_trilinear_chain() {
+    // ⟨fprop(x,w), go⟩ == ⟨x, bprop(go,w)⟩ == ⟨w, accgrad(go,x)⟩
+    for case in 0..CASES {
+        let mut rng = Rng::new(5000 + case as u64);
+        let p = rand_problem(&mut rng, 12);
+        let x = rng.normal_vec(p.input_len());
+        let w = rng.normal_vec(p.weight_len());
+        let go = rng.normal_vec(p.output_len());
+        let eng = FftConvEngine::fbfft_for(&p);
+        let (y, _) = eng.fprop(&p, &x, &w);
+        let (gx, _) = eng.bprop(&p, &go, &w);
+        let (gw, _) = eng.accgrad(&p, &go, &x);
+        let dot = |u: &[f32], v: &[f32]| -> f64 {
+            u.iter().zip(v).map(|(a, b)| (*a * *b) as f64).sum()
+        };
+        let a = dot(&y, &go);
+        let b = dot(&x, &gx);
+        let c = dot(&w, &gw);
+        let tol = 1e-2 * a.abs().max(1.0);
+        assert!((a - b).abs() < tol, "case {case}: {a} vs {b}");
+        assert!((a - c).abs() < tol, "case {case}: {a} vs {c}");
+    }
+}
+
+#[test]
+fn prop_tiling_invariant_any_tile_size() {
+    for case in 0..20 {
+        let mut rng = Rng::new(6000 + case as u64);
+        let p = ConvProblem::square(rng.int_in(1, 2), rng.int_in(1, 3),
+                                    rng.int_in(1, 3), rng.int_in(8, 20), 3);
+        let d = rng.int_in(2, p.yh());
+        let x = rng.normal_vec(p.input_len());
+        let w = rng.normal_vec(p.weight_len());
+        let want = direct::fprop(&p, &x, &w);
+        let (got, _) = tiled::fprop(&p, &x, &w, d);
+        for i in 0..want.len() {
+            assert!((got[i] - want[i]).abs() < 5e-3,
+                    "case {case} d={d} @{i}");
+        }
+    }
+}
+
+#[test]
+fn prop_conv_linearity_in_input() {
+    for case in 0..20 {
+        let mut rng = Rng::new(7000 + case as u64);
+        let p = rand_problem(&mut rng, 10);
+        let x1 = rng.normal_vec(p.input_len());
+        let x2 = rng.normal_vec(p.input_len());
+        let w = rng.normal_vec(p.weight_len());
+        let sum: Vec<f32> =
+            x1.iter().zip(&x2).map(|(a, b)| a + b).collect();
+        let y1 = direct::fprop(&p, &x1, &w);
+        let y2 = direct::fprop(&p, &x2, &w);
+        let ys = direct::fprop(&p, &sum, &w);
+        for i in 0..ys.len() {
+            assert!((ys[i] - y1[i] - y2[i]).abs() < 1e-3, "case {case}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_batcher_conserves_and_bounds_images() {
+    for case in 0..CASES {
+        let mut rng = Rng::new(8000 + case as u64);
+        let cap = rng.int_in(1, 16);
+        let mut b = Batcher::new(BatcherConfig {
+            capacity: cap,
+            max_wait: std::time::Duration::ZERO,
+        });
+        let t = std::time::Instant::now();
+        let mut pushed = 0usize;
+        for id in 0..rng.int_in(1, 30) as u64 {
+            let imgs = rng.int_in(1, 10);
+            b.push(id, imgs, t);
+            pushed += imgs;
+        }
+        let mut drained = 0usize;
+        let mut last_ids: Vec<u64> = Vec::new();
+        loop {
+            let batch = b.drain();
+            if batch.is_empty() {
+                break;
+            }
+            assert!(batch.images() <= cap, "case {case}: batch too big");
+            for (id, n) in &batch.parts {
+                assert!(*n >= 1);
+                // non-decreasing id order across the whole drain sequence
+                if let Some(last) = last_ids.last() {
+                    assert!(id >= last, "case {case}: reordered");
+                }
+                last_ids.push(*id);
+                drained += n;
+            }
+        }
+        assert_eq!(drained, pushed, "case {case}: images lost");
+    }
+}
+
+#[test]
+fn prop_candidate_bases_sound() {
+    for n in 1..300usize {
+        let c = candidate_bases(n);
+        assert!(!c.is_empty(), "no candidates for {n}");
+        assert_eq!(*c.last().unwrap(), n.next_power_of_two());
+        for i in &c {
+            assert!(is_smooth(*i) && *i >= n && *i <= n.next_power_of_two());
+        }
+    }
+}
+
+#[test]
+fn prop_json_round_trip_random_values() {
+    fn rand_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num((rng.normal() * 100.0).round() as f64),
+            3 => Json::Str(format!("s{}", rng.below(1000))),
+            4 => Json::Arr((0..rng.below(4))
+                .map(|_| rand_json(rng, depth - 1)).collect()),
+            _ => Json::Obj((0..rng.below(4))
+                .map(|i| (format!("k{i}"), rand_json(rng, depth - 1)))
+                .collect()),
+        }
+    }
+    for case in 0..CASES {
+        let mut rng = Rng::new(9000 + case as u64);
+        let j = rand_json(&mut rng, 3);
+        let text = j.to_string();
+        let back = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(back, j, "case {case}");
+    }
+}
