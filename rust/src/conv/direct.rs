@@ -180,40 +180,12 @@ pub fn accgrad(p: &ConvProblem, go: &[f32], x: &[f32]) -> Vec<f32> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::Pass;
+    use crate::testkit::{assert_close_oracle, oracle, tolerance};
     use crate::util::Rng;
 
-    /// scalar reference: literal transcription of the paper's §2 formulas,
-    /// no threading, no reuse — the oracle for the oracle.
-    fn fprop_scalar(p: &ConvProblem, x: &[f32], wei: &[f32]) -> Vec<f32> {
-        let (yh, yw) = (p.yh(), p.yw());
-        let mut y = vec![0f32; p.output_len()];
-        for s in 0..p.s {
-            for j in 0..p.fo {
-                for a in 0..yh {
-                    for b in 0..yw {
-                        let mut acc = 0f32;
-                        for i in 0..p.f {
-                            for u in 0..p.kh {
-                                for v in 0..p.kw {
-                                    let xi = x[((s * p.f + i) * p.h
-                                        + (a * p.stride + u)) * p.w
-                                        + (b * p.stride + v)];
-                                    let wv = wei[((j * p.f + i) * p.kh + u)
-                                        * p.kw + v];
-                                    acc += xi * wv;
-                                }
-                            }
-                        }
-                        y[((s * p.fo + j) * yh + a) * yw + b] = acc;
-                    }
-                }
-            }
-        }
-        y
-    }
-
     #[test]
-    fn fprop_matches_scalar_reference() {
+    fn fprop_matches_f64_oracle() {
         let mut rng = Rng::new(1);
         for p in [ConvProblem::square(2, 3, 4, 9, 3),
                   ConvProblem::new(1, 2, 2, 8, 10, 3, 5),
@@ -221,11 +193,25 @@ mod tests {
             let x = rng.normal_vec(p.input_len());
             let wei = rng.normal_vec(p.weight_len());
             let got = fprop(&p, &x, &wei);
-            let want = fprop_scalar(&p, &x, &wei);
-            for (g, w) in got.iter().zip(&want) {
-                assert!((g - w).abs() < 1e-4);
-            }
+            let want = oracle::fprop64(&p, &x, &wei);
+            assert_close_oracle(&got, &want,
+                                tolerance::time_domain(&p, Pass::Fprop));
         }
+    }
+
+    #[test]
+    fn bprop_and_accgrad_match_f64_oracle() {
+        let p = ConvProblem::new(2, 3, 2, 8, 9, 3, 5);
+        let mut rng = Rng::new(2);
+        let go = rng.normal_vec(p.output_len());
+        let wei = rng.normal_vec(p.weight_len());
+        let x = rng.normal_vec(p.input_len());
+        assert_close_oracle(&bprop(&p, &go, &wei),
+                            &oracle::bprop64(&p, &go, &wei),
+                            tolerance::time_domain(&p, Pass::Bprop));
+        assert_close_oracle(&accgrad(&p, &go, &x),
+                            &oracle::accgrad64(&p, &go, &x),
+                            tolerance::time_domain(&p, Pass::AccGrad));
     }
 
     #[test]

@@ -319,15 +319,10 @@ impl FftConvEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::conv::direct;
+    use crate::coordinator::Pass;
+    use crate::testkit::{assert_close, assert_close_oracle, oracle,
+                         tolerance};
     use crate::util::Rng;
-
-    fn close(a: &[f32], b: &[f32], tol: f32) {
-        assert_eq!(a.len(), b.len());
-        for (i, (x, y)) in a.iter().zip(b).enumerate() {
-            assert!((x - y).abs() < tol, "idx {i}: {x} vs {y}");
-        }
-    }
 
     fn problems() -> Vec<ConvProblem> {
         vec![
@@ -338,14 +333,16 @@ mod tests {
     }
 
     #[test]
-    fn fbfft_fprop_matches_direct() {
+    fn fbfft_fprop_matches_oracle() {
         let mut rng = Rng::new(20);
         for p in problems() {
             let eng = FftConvEngine::fbfft_for(&p);
             let x = rng.normal_vec(p.input_len());
             let wei = rng.normal_vec(p.weight_len());
             let (got, timings) = eng.fprop(&p, &x, &wei);
-            close(&got, &direct::fprop(&p, &x, &wei), 2e-3);
+            assert_close_oracle(
+                &got, &oracle::fprop64(&p, &x, &wei),
+                tolerance::frequency(&p, Pass::Fprop, eng.n_fft));
             // fbfft elides every TRANS stage
             assert_eq!(timings.trans_a, Duration::ZERO);
             assert_eq!(timings.trans_b, Duration::ZERO);
@@ -354,7 +351,7 @@ mod tests {
     }
 
     #[test]
-    fn vendor_fprop_matches_direct_pow2_and_smooth() {
+    fn vendor_fprop_matches_oracle_pow2_and_smooth() {
         let mut rng = Rng::new(21);
         let p = ConvProblem::square(2, 2, 3, 9, 3);
         for n in [16usize, 12, 10] {
@@ -363,39 +360,47 @@ mod tests {
             let x = rng.normal_vec(p.input_len());
             let wei = rng.normal_vec(p.weight_len());
             let (got, _) = eng.fprop(&p, &x, &wei);
-            close(&got, &direct::fprop(&p, &x, &wei), 2e-3);
+            assert_close_oracle(&got, &oracle::fprop64(&p, &x, &wei),
+                                tolerance::frequency(&p, Pass::Fprop, n));
         }
     }
 
     #[test]
-    fn both_modes_bprop_match_direct() {
+    fn both_modes_bprop_match_oracle() {
         let mut rng = Rng::new(22);
         for p in problems() {
             let go = rng.normal_vec(p.output_len());
             let wei = rng.normal_vec(p.weight_len());
-            let want = direct::bprop(&p, &go, &wei);
-            let (a, _) = FftConvEngine::fbfft_for(&p).bprop(&p, &go, &wei);
-            close(&a, &want, 2e-3);
+            let want = oracle::bprop64(&p, &go, &wei);
+            let eng = FftConvEngine::fbfft_for(&p);
+            let (a, _) = eng.bprop(&p, &go, &wei);
+            assert_close_oracle(
+                &a, &want, tolerance::frequency(&p, Pass::Bprop, eng.n_fft));
             let n = p.h.max(p.w).next_power_of_two();
             let (b, _) = FftConvEngine::new(FftMode::Vendor, n)
                 .bprop(&p, &go, &wei);
-            close(&b, &want, 2e-3);
+            assert_close_oracle(
+                &b, &want, tolerance::frequency(&p, Pass::Bprop, n));
         }
     }
 
     #[test]
-    fn both_modes_accgrad_match_direct() {
+    fn both_modes_accgrad_match_oracle() {
         let mut rng = Rng::new(23);
         for p in problems() {
             let go = rng.normal_vec(p.output_len());
             let x = rng.normal_vec(p.input_len());
-            let want = direct::accgrad(&p, &go, &x);
-            let (a, _) = FftConvEngine::fbfft_for(&p).accgrad(&p, &go, &x);
-            close(&a, &want, 3e-3);
+            let want = oracle::accgrad64(&p, &go, &x);
+            let eng = FftConvEngine::fbfft_for(&p);
+            let (a, _) = eng.accgrad(&p, &go, &x);
+            assert_close_oracle(
+                &a, &want,
+                tolerance::frequency(&p, Pass::AccGrad, eng.n_fft));
             let n = p.h.max(p.w).next_power_of_two();
             let (b, _) = FftConvEngine::new(FftMode::Vendor, n)
                 .accgrad(&p, &go, &x);
-            close(&b, &want, 3e-3);
+            assert_close_oracle(
+                &b, &want, tolerance::frequency(&p, Pass::AccGrad, n));
         }
     }
 
@@ -407,7 +412,8 @@ mod tests {
         let wei = rng.normal_vec(p.weight_len());
         let (a, _) = FftConvEngine::new(FftMode::Fbfft, 16).fprop(&p, &x, &wei);
         let (b, _) = FftConvEngine::new(FftMode::Fbfft, 32).fprop(&p, &x, &wei);
-        close(&a, &b, 2e-3);
+        assert_close(&a, &b,
+                     2.0 * tolerance::frequency(&p, Pass::Fprop, 32));
     }
 
     #[test]

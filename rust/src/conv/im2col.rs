@@ -139,53 +139,60 @@ pub fn accgrad(p: &ConvProblem, go: &[f32], x: &[f32]) -> Vec<f32> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::conv::direct;
+    use crate::coordinator::Pass;
+    use crate::testkit::{assert_close, assert_close_oracle, oracle,
+                         tolerance};
     use crate::util::Rng;
 
-    fn close(a: &[f32], b: &[f32], tol: f32) {
-        assert_eq!(a.len(), b.len());
-        for (i, (x, y)) in a.iter().zip(b).enumerate() {
-            assert!((x - y).abs() < tol, "idx {i}: {x} vs {y}");
-        }
-    }
-
     #[test]
-    fn fprop_matches_direct() {
+    fn fprop_matches_f64_oracle() {
         let mut rng = Rng::new(10);
         for p in [ConvProblem::square(2, 3, 4, 9, 3),
                   ConvProblem::new(1, 2, 3, 8, 11, 5, 3),
                   ConvProblem::square(3, 1, 1, 6, 6)] {
             let x = rng.normal_vec(p.input_len());
             let wei = rng.normal_vec(p.weight_len());
-            close(&fprop(&p, &x, &wei), &direct::fprop(&p, &x, &wei), 1e-3);
+            assert_close_oracle(&fprop(&p, &x, &wei),
+                                &oracle::fprop64(&p, &x, &wei),
+                                tolerance::time_domain(&p, Pass::Fprop));
         }
     }
 
     #[test]
-    fn strided_fprop_matches_direct() {
+    fn strided_fprop_matches_f64_oracle() {
         let mut p = ConvProblem::square(2, 2, 2, 9, 3);
         p.stride = 2;
         let mut rng = Rng::new(11);
         let x = rng.normal_vec(p.input_len());
         let wei = rng.normal_vec(p.weight_len());
-        close(&fprop(&p, &x, &wei), &direct::fprop(&p, &x, &wei), 1e-3);
+        assert_close_oracle(&fprop(&p, &x, &wei),
+                            &oracle::fprop64(&p, &x, &wei),
+                            tolerance::time_domain(&p, Pass::Fprop));
     }
 
     #[test]
-    fn bprop_matches_direct() {
+    fn bprop_matches_oracle_and_direct() {
         let p = ConvProblem::square(2, 3, 2, 8, 3);
         let mut rng = Rng::new(12);
         let go = rng.normal_vec(p.output_len());
         let wei = rng.normal_vec(p.weight_len());
-        close(&bprop(&p, &go, &wei), &direct::bprop(&p, &go, &wei), 1e-3);
+        let got = bprop(&p, &go, &wei);
+        let tol = tolerance::time_domain(&p, Pass::Bprop);
+        assert_close_oracle(&got, &oracle::bprop64(&p, &go, &wei), tol);
+        assert_close(&got, &crate::conv::direct::bprop(&p, &go, &wei),
+                     2.0 * tol);
     }
 
     #[test]
-    fn accgrad_matches_direct() {
+    fn accgrad_matches_oracle_and_direct() {
         let p = ConvProblem::new(3, 2, 2, 7, 9, 3, 5);
         let mut rng = Rng::new(13);
         let go = rng.normal_vec(p.output_len());
         let x = rng.normal_vec(p.input_len());
-        close(&accgrad(&p, &go, &x), &direct::accgrad(&p, &go, &x), 1e-3);
+        let got = accgrad(&p, &go, &x);
+        let tol = tolerance::time_domain(&p, Pass::AccGrad);
+        assert_close_oracle(&got, &oracle::accgrad64(&p, &go, &x), tol);
+        assert_close(&got, &crate::conv::direct::accgrad(&p, &go, &x),
+                     2.0 * tol);
     }
 }

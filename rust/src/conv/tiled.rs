@@ -139,52 +139,49 @@ pub fn accgrad(p: &ConvProblem, go: &[f32], x: &[f32], d: usize)
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::conv::direct;
+    use crate::coordinator::Pass;
+    use crate::testkit::{assert_close_oracle, oracle, tolerance};
     use crate::util::Rng;
 
-    fn close(a: &[f32], b: &[f32], tol: f32) {
-        assert_eq!(a.len(), b.len());
-        for (i, (x, y)) in a.iter().zip(b).enumerate() {
-            assert!((x - y).abs() < tol, "idx {i}: {x} vs {y}");
-        }
-    }
-
     #[test]
-    fn tiled_fprop_matches_direct_all_tile_sizes() {
+    fn tiled_fprop_matches_oracle_all_tile_sizes() {
         let p = ConvProblem::square(2, 2, 3, 16, 3);
         let mut rng = Rng::new(30);
         let x = rng.normal_vec(p.input_len());
         let wei = rng.normal_vec(p.weight_len());
-        let want = direct::fprop(&p, &x, &wei);
+        let want = oracle::fprop64(&p, &x, &wei);
         for d in [3usize, 4, 6, 7, 14, 20] {
             let (got, _) = fprop(&p, &x, &wei, d);
-            close(&got, &want, 2e-3);
+            assert_close_oracle(&got, &want,
+                                tolerance::tiled(&p, Pass::Fprop, d));
         }
     }
 
     #[test]
-    fn tiled_bprop_matches_direct() {
+    fn tiled_bprop_matches_oracle() {
         let p = ConvProblem::square(2, 2, 2, 16, 5);
         let mut rng = Rng::new(31);
         let go = rng.normal_vec(p.output_len());
         let wei = rng.normal_vec(p.weight_len());
-        let want = direct::bprop(&p, &go, &wei);
+        let want = oracle::bprop64(&p, &go, &wei);
         for d in [3usize, 5, 12] {
             let (got, _) = bprop(&p, &go, &wei, d);
-            close(&got, &want, 2e-3);
+            assert_close_oracle(&got, &want,
+                                tolerance::tiled(&p, Pass::Bprop, d));
         }
     }
 
     #[test]
-    fn tiled_accgrad_matches_direct() {
+    fn tiled_accgrad_matches_oracle() {
         let p = ConvProblem::square(2, 2, 2, 14, 3);
         let mut rng = Rng::new(32);
         let go = rng.normal_vec(p.output_len());
         let x = rng.normal_vec(p.input_len());
-        let want = direct::accgrad(&p, &go, &x);
+        let want = oracle::accgrad64(&p, &go, &x);
         for d in [4usize, 5, 12] {
             let (got, _) = accgrad(&p, &go, &x, d);
-            close(&got, &want, 4e-3);
+            assert_close_oracle(&got, &want,
+                                tolerance::tiled(&p, Pass::AccGrad, d));
         }
     }
 
@@ -201,8 +198,9 @@ mod tests {
         let mut rng = Rng::new(33);
         let x = rng.normal_vec(p.input_len());
         let wei = rng.normal_vec(p.weight_len());
-        let want = direct::fprop(&p, &x, &wei);
+        let want = oracle::fprop64(&p, &x, &wei);
         let (got, _) = fprop(&p, &x, &wei, 6);
-        close(&got, &want, 2e-3);
+        assert_close_oracle(&got, &want,
+                            tolerance::tiled(&p, Pass::Fprop, 6));
     }
 }

@@ -47,8 +47,11 @@ pub fn is_smooth(mut n: usize) -> bool {
     n == 1
 }
 
-/// Naive `O(n²)` DFT in f64 — the independent oracle used by tests and
-/// the Bluestein inner product. Forward sign convention `e^{-2πi jk/n}`.
+/// Naive `O(n²)` DFT in f64, used by this module's own tests. Forward
+/// sign convention `e^{-2πi jk/n}`, unnormalized inverse. The
+/// conformance layer keeps its own definition
+/// ([`crate::testkit::oracle::dft64`]) so the oracle stays independent
+/// of the substrate it checks.
 pub fn naive_dft(input: &[C32], inverse: bool) -> Vec<C32> {
     let n = input.len();
     let sign = if inverse { 2.0 } else { -2.0 };

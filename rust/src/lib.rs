@@ -23,6 +23,15 @@
 //!
 //! Python (Layers 1+2, under `python/`) runs only at build time; the
 //! binary is self-contained once `artifacts/` exists.
+//!
+//! * [`testkit`] — the conformance/verification substrate: f64 oracles,
+//!   adversarial + Table-2 case generation, the scaled tolerance model
+//!   and the {engine × pass} conformance matrix.
+
+// Numeric-kernel style: index loops mirror the paper's subscripts, and
+// fixed-size transform types expose `len` without an `is_empty` notion.
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::len_without_is_empty)]
 
 pub mod conv;
 pub mod coordinator;
@@ -31,5 +40,6 @@ pub mod fft;
 pub mod metrics;
 pub mod reports;
 pub mod runtime;
+pub mod testkit;
 pub mod trace;
 pub mod util;

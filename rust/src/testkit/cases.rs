@@ -1,0 +1,233 @@
+//! Deterministic problem generation for the conformance matrix: a fixed
+//! adversarial set (the shapes that historically break FFT convolution
+//! engines) plus seeded samples of the paper's Table-2 sweep space,
+//! bounded to a CPU-friendly work budget.
+
+use crate::conv::ConvProblem;
+use crate::coordinator::autotuner::candidate_bases;
+use crate::fft::{fbfft_host, is_smooth};
+use crate::trace;
+use crate::util::{hash64, Rng};
+
+/// One conformance case: the problem plus every engine parameter the
+/// matrix needs to run it (explicit, so a case can deliberately force a
+/// degenerate or slow path).
+#[derive(Clone, Debug)]
+pub struct ConformanceCase {
+    pub name: String,
+    pub problem: ConvProblem,
+    /// Fourier basis handed to the vendor engine. A prime or otherwise
+    /// non-smooth basis forces the planner's Bluestein fallback.
+    pub vendor_basis: usize,
+    /// Power-of-two basis handed to the fbfft engine.
+    pub fbfft_basis: usize,
+    /// Output-tile size for the §6 tiled engine.
+    pub tile: usize,
+    /// Seed for the case's synthetic tensors (derived from the name, so
+    /// renaming a case intentionally reshuffles its data).
+    pub seed: u64,
+}
+
+impl ConformanceCase {
+    /// Case with default engine parameters: smallest smooth vendor basis
+    /// covering the input, next-pow-2 fbfft basis, ~2×2 output tiles.
+    pub fn new(name: &str, problem: ConvProblem) -> ConformanceCase {
+        let n = problem.h.max(problem.w);
+        let fbfft_basis = n.next_power_of_two();
+        assert!(fbfft_basis >= 2 && fbfft_basis <= fbfft_host::MAX_N,
+                "{name}: input {n} outside fbfft's basis range");
+        ConformanceCase {
+            name: name.to_string(),
+            problem,
+            vendor_basis: candidate_bases(n)[0],
+            fbfft_basis,
+            tile: default_tile(&problem),
+            seed: hash64(name.as_bytes()),
+        }
+    }
+
+    /// Override the vendor basis (e.g. a prime size to force Bluestein).
+    pub fn with_vendor_basis(mut self, n: usize) -> ConformanceCase {
+        assert!(n >= self.problem.h.max(self.problem.w),
+                "vendor basis must cover the input");
+        self.vendor_basis = n;
+        self
+    }
+
+    /// Override the tiled engine's output-tile size.
+    pub fn with_tile(mut self, d: usize) -> ConformanceCase {
+        assert!(d >= 1);
+        self.tile = d;
+        self
+    }
+
+    /// Does this case exercise the planner's Bluestein path?
+    pub fn forces_bluestein(&self) -> bool {
+        !is_smooth(self.vendor_basis)
+    }
+}
+
+/// Default output-tile size: split each axis roughly in two so the tiled
+/// engine genuinely decomposes, degrading to one tile for tiny outputs.
+fn default_tile(p: &ConvProblem) -> usize {
+    p.yh().min(p.yw()).div_ceil(2).clamp(1, 8)
+}
+
+/// The hand-picked adversarial shapes:
+///
+/// * `k == h` — the output is a single pixel and the FFT "convolution"
+///   degenerates to a pointwise reduction;
+/// * `k == 1` — the kernel is a scalar per plane pair;
+/// * prime input sizes run with a prime vendor basis — the planner must
+///   take Bluestein, not mixed-radix;
+/// * non-smooth (but composite) sizes — the other Bluestein trigger;
+/// * rectangular problems, batch-heavy and plane-heavy aspect ratios,
+///   and a kernel at the paper's 13×13 extreme.
+pub fn adversarial_cases() -> Vec<ConformanceCase> {
+    vec![
+        ConformanceCase::new("adv-k-eq-h-pointwise",
+                             ConvProblem::square(2, 3, 3, 5, 5)),
+        ConformanceCase::new("adv-k1-scalar-kernel",
+                             ConvProblem::square(2, 2, 2, 6, 1)),
+        ConformanceCase::new("adv-prime-11",
+                             ConvProblem::square(1, 2, 2, 11, 3))
+            .with_vendor_basis(11),
+        ConformanceCase::new("adv-prime-13-rect",
+                             ConvProblem::new(1, 2, 3, 13, 13, 5, 3))
+            .with_vendor_basis(13),
+        ConformanceCase::new("adv-nonsmooth-22",
+                             ConvProblem::square(1, 2, 2, 22, 3))
+            .with_vendor_basis(22),
+        ConformanceCase::new("adv-rect-8x10-k3x5",
+                             ConvProblem::new(1, 2, 2, 8, 10, 3, 5)),
+        ConformanceCase::new("adv-batch-heavy",
+                             ConvProblem::square(8, 1, 2, 8, 3)),
+        ConformanceCase::new("adv-plane-heavy",
+                             ConvProblem::square(1, 8, 8, 10, 3)),
+        ConformanceCase::new("adv-big-kernel-13",
+                             ConvProblem::square(1, 2, 2, 16, 13)),
+        ConformanceCase::new("adv-tile-stress",
+                             ConvProblem::square(2, 2, 2, 16, 5))
+            .with_tile(3),
+    ]
+}
+
+/// Work budget for one sampled problem (time-domain reductions of one
+/// fprop): keeps the full matrix runnable in seconds on CI hardware.
+pub const MAX_REDUCTIONS: u64 = 3_000_000;
+
+/// Seeded samples of the paper's Table-2 sweep space (sizes 8–128,
+/// kernels 3–13, batch 1–128), rejection-bounded to a work budget so the
+/// matrix stays CPU-testable. Deterministic for a given `(seed, count)`.
+pub fn sampled_cases(seed: u64, count: usize) -> Vec<ConformanceCase> {
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(count);
+    let mut draws = 0usize;
+    while out.len() < count && draws < 100_000 {
+        draws += 1;
+        let p = trace::table2_sample(&mut rng);
+        // CPU budget: bound both the arithmetic and the fbfft basis
+        if p.reductions() > MAX_REDUCTIONS
+            || p.h.max(p.w) > 64
+            || p.s > 16
+            || p.f > 16
+            || p.fo > 16
+        {
+            continue;
+        }
+        let name = format!(
+            "t2-s{}f{}fo{}x{}k{}", p.s, p.f, p.fo, p.h, p.kh);
+        // the sampler can repeat a grid point; keep names unique
+        if out.iter().any(|c: &ConformanceCase| c.name == name) {
+            continue;
+        }
+        out.push(ConformanceCase::new(&name, p));
+    }
+    assert_eq!(out.len(), count,
+               "table-2 sampler exhausted its draw budget");
+    out
+}
+
+/// The default conformance suite: every adversarial case plus six
+/// Table-2 samples — ≥ 10 problems, at least one Bluestein-path case,
+/// every case exercising the tiled decomposition.
+pub fn conformance_suite() -> Vec<ConformanceCase> {
+    let mut cases = adversarial_cases();
+    cases.extend(sampled_cases(0x7AB1E2, 6));
+    cases
+}
+
+/// Random small problem for property tests (moved here from
+/// `tests/prop.rs` so every test layer draws from one generator).
+pub fn random_small_problem(rng: &mut Rng, max_hw: usize) -> ConvProblem {
+    let kh = *rng.choice(&[1usize, 2, 3, 5]);
+    let kw = *rng.choice(&[1usize, 2, 3, 5]);
+    let h = rng.int_in(kh.max(2), max_hw);
+    let w = rng.int_in(kw.max(2), max_hw);
+    ConvProblem::new(rng.int_in(1, 3), rng.int_in(1, 4), rng.int_in(1, 4),
+                     h, w, kh.min(h), kw.min(w))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn adversarial_set_covers_the_claimed_paths() {
+        let cases = adversarial_cases();
+        assert!(cases.iter().any(|c| c.problem.kh == c.problem.h),
+                "missing k == h case");
+        assert!(cases.iter().any(|c| c.problem.kh == 1),
+                "missing k == 1 case");
+        assert!(cases.iter().filter(|c| c.forces_bluestein()).count() >= 2,
+                "missing Bluestein cases");
+        assert!(cases.iter().any(|c| c.problem.kh != c.problem.kw
+                                     || c.problem.h != c.problem.w),
+                "missing rectangular case");
+        for c in &cases {
+            c.problem.validate();
+            assert!(c.vendor_basis >= c.problem.h.max(c.problem.w));
+            assert!(c.fbfft_basis.is_power_of_two());
+        }
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_budgeted() {
+        let a = sampled_cases(42, 5);
+        let b = sampled_cases(42, 5);
+        assert_eq!(a.len(), 5);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.problem, y.problem);
+            assert_eq!(x.name, y.name);
+        }
+        for c in &a {
+            assert!(c.problem.reductions() <= MAX_REDUCTIONS);
+            assert!(c.problem.h.max(c.problem.w) <= 64);
+            // sampled from the paper's axes
+            assert!(trace::TABLE2_K.contains(&c.problem.kh));
+            assert!(trace::TABLE2_Y.contains(&c.problem.yh()));
+        }
+    }
+
+    #[test]
+    fn suite_meets_the_acceptance_floor() {
+        let suite = conformance_suite();
+        assert!(suite.len() >= 10, "suite has {} cases", suite.len());
+        assert!(suite.iter().any(|c| c.forces_bluestein()));
+        // distinct names (report rows must be addressable)
+        let mut names: Vec<&str> =
+            suite.iter().map(|c| c.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), suite.len());
+    }
+
+    #[test]
+    fn seeds_differ_between_cases() {
+        let suite = conformance_suite();
+        let mut seeds: Vec<u64> = suite.iter().map(|c| c.seed).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), suite.len());
+    }
+}

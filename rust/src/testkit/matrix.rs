@@ -1,0 +1,320 @@
+//! The conformance matrix: run every {engine × pass} pair against the
+//! f64 oracle (and every engine against every other), reporting a
+//! per-cell max-abs / max-ULP table gated by the `tolerance` model.
+
+use crate::conv::{direct, im2col, tiled, FftConvEngine, FftMode};
+use crate::coordinator::Pass;
+use crate::metrics::Table;
+use crate::util::Rng;
+
+use super::cases::ConformanceCase;
+use super::{oracle, tolerance};
+
+/// The five host engines under conformance test.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    Direct,
+    Im2col,
+    VendorFft,
+    Fbfft,
+    Tiled,
+}
+
+impl Engine {
+    pub const ALL: [Engine; 5] = [Engine::Direct, Engine::Im2col,
+                                  Engine::VendorFft, Engine::Fbfft,
+                                  Engine::Tiled];
+
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Engine::Direct => "direct",
+            Engine::Im2col => "im2col",
+            Engine::VendorFft => "vendor_fft",
+            Engine::Fbfft => "fbfft",
+            Engine::Tiled => "tiled",
+        }
+    }
+}
+
+/// One cell of the matrix: an engine's deviation from the oracle on one
+/// pass, against its modelled tolerance.
+#[derive(Clone, Copy, Debug)]
+pub struct Cell {
+    pub engine: Engine,
+    pub pass: Pass,
+    pub max_abs: f64,
+    pub max_ulp: u64,
+    pub tol: f32,
+    pub ok: bool,
+}
+
+/// All 15 cells of one case, plus the cross-engine agreement check.
+#[derive(Clone, Debug)]
+pub struct CaseReport {
+    pub name: String,
+    pub cells: Vec<Cell>,
+    /// worst pairwise engine-vs-engine deviation over all passes
+    pub cross_max: f64,
+    pub cross_ok: bool,
+}
+
+impl CaseReport {
+    pub fn ok(&self) -> bool {
+        self.cross_ok && self.cells.iter().all(|c| c.ok)
+    }
+
+    pub fn cell(&self, engine: Engine, pass: Pass) -> &Cell {
+        self.cells
+            .iter()
+            .find(|c| c.engine == engine && c.pass == pass)
+            .expect("matrix covers every engine x pass")
+    }
+}
+
+/// The whole suite's reports plus rendering.
+#[derive(Clone, Debug, Default)]
+pub struct SuiteReport {
+    pub cases: Vec<CaseReport>,
+}
+
+impl SuiteReport {
+    pub fn all_ok(&self) -> bool {
+        self.cases.iter().all(CaseReport::ok)
+    }
+
+    /// Render the conformance matrix: one row per {case × engine}, one
+    /// column per pass showing `max_abs (max_ulp)`, flagged when a cell
+    /// exceeds its tolerance.
+    pub fn render(&self) -> String {
+        let mut t = Table::new(&[
+            "case", "engine", "fprop", "bprop", "accgrad", "status"]);
+        for cr in &self.cases {
+            for engine in Engine::ALL {
+                let fmt = |pass: Pass| {
+                    let c = cr.cell(engine, pass);
+                    let mark = if c.ok { "" } else { " !>tol" };
+                    format!("{:.1e} ({}u){mark}", c.max_abs, c.max_ulp)
+                };
+                let ok = Pass::ALL
+                    .iter()
+                    .all(|p| cr.cell(engine, *p).ok);
+                t.row(vec![
+                    cr.name.clone(),
+                    engine.tag().to_string(),
+                    fmt(Pass::Fprop),
+                    fmt(Pass::Bprop),
+                    fmt(Pass::AccGrad),
+                    if ok { "ok".into() } else { "FAIL".into() },
+                ]);
+            }
+        }
+        let failed: Vec<&str> = self
+            .cases
+            .iter()
+            .filter(|c| !c.ok())
+            .map(|c| c.name.as_str())
+            .collect();
+        format!(
+            "conformance matrix: {} cases x {} engines x 3 passes \
+             vs f64 oracle\n{}\ncross-engine max deviation: {:.2e}\n{}",
+            self.cases.len(),
+            Engine::ALL.len(),
+            t.render(),
+            self.cases
+                .iter()
+                .map(|c| c.cross_max)
+                .fold(0.0, worst),
+            if failed.is_empty() {
+                "all cells within tolerance".to_string()
+            } else {
+                format!("FAILED cases: {failed:?}")
+            })
+    }
+}
+
+/// NaN-propagating max: a NaN deviation must poison the cell (plain
+/// `f64::max` silently ignores NaN, which would let an engine emitting
+/// NaN pass the gate).
+fn worst(acc: f64, d: f64) -> f64 {
+    if d.is_nan() || d > acc {
+        d
+    } else {
+        acc
+    }
+}
+
+/// Max absolute deviation and max ULP distance of `got` vs the oracle.
+fn compare(got: &[f32], want: &[f64]) -> (f64, u64) {
+    assert_eq!(got.len(), want.len(), "output length mismatch");
+    let mut max_abs = 0f64;
+    let mut max_ulp = 0u64;
+    for (g, w) in got.iter().zip(want) {
+        max_abs = worst(max_abs, (*g as f64 - w).abs());
+        max_ulp = max_ulp.max(tolerance::ulps(*g, *w as f32));
+    }
+    (max_abs, max_ulp)
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (*x as f64 - *y as f64).abs())
+        .fold(0.0, worst)
+}
+
+/// This engine's modelled tolerance for one pass of this case.
+pub fn cell_tolerance(engine: Engine, case: &ConformanceCase, pass: Pass)
+                      -> f32 {
+    let p = &case.problem;
+    match engine {
+        Engine::Direct | Engine::Im2col => tolerance::time_domain(p, pass),
+        Engine::VendorFft => tolerance::frequency(p, pass, case.vendor_basis),
+        Engine::Fbfft => tolerance::frequency(p, pass, case.fbfft_basis),
+        Engine::Tiled => tolerance::tiled(p, pass, case.tile),
+    }
+}
+
+/// Run one case through every engine and pass.
+pub fn run_case(case: &ConformanceCase) -> CaseReport {
+    let p = &case.problem;
+    let mut rng = Rng::new(case.seed);
+    let x = rng.normal_vec(p.input_len());
+    let w = rng.normal_vec(p.weight_len());
+    let go = rng.normal_vec(p.output_len());
+
+    let want = [oracle::fprop64(p, &x, &w),
+                oracle::bprop64(p, &go, &w),
+                oracle::accgrad64(p, &go, &x)];
+
+    let vendor = FftConvEngine::new(FftMode::Vendor, case.vendor_basis);
+    let fbfft = FftConvEngine::new(FftMode::Fbfft, case.fbfft_basis);
+    let d = case.tile;
+
+    let outputs: Vec<(Engine, [Vec<f32>; 3])> = vec![
+        (Engine::Direct,
+         [direct::fprop(p, &x, &w),
+          direct::bprop(p, &go, &w),
+          direct::accgrad(p, &go, &x)]),
+        (Engine::Im2col,
+         [im2col::fprop(p, &x, &w),
+          im2col::bprop(p, &go, &w),
+          im2col::accgrad(p, &go, &x)]),
+        (Engine::VendorFft,
+         [vendor.fprop(p, &x, &w).0,
+          vendor.bprop(p, &go, &w).0,
+          vendor.accgrad(p, &go, &x).0]),
+        (Engine::Fbfft,
+         [fbfft.fprop(p, &x, &w).0,
+          fbfft.bprop(p, &go, &w).0,
+          fbfft.accgrad(p, &go, &x).0]),
+        (Engine::Tiled,
+         [tiled::fprop(p, &x, &w, d).0,
+          tiled::bprop(p, &go, &w, d).0,
+          tiled::accgrad(p, &go, &x, d).0]),
+    ];
+
+    let mut cells = Vec::with_capacity(15);
+    for (engine, outs) in &outputs {
+        for (pi, pass) in Pass::ALL.iter().enumerate() {
+            let tol = cell_tolerance(*engine, case, *pass);
+            let (max_abs, max_ulp) = compare(&outs[pi], &want[pi]);
+            cells.push(Cell {
+                engine: *engine,
+                pass: *pass,
+                max_abs,
+                max_ulp,
+                tol,
+                ok: max_abs <= tol as f64,
+            });
+        }
+    }
+
+    // cross-check engines against each other: two conforming engines may
+    // drift apart by at most the sum of their budgets
+    let mut cross_max = 0f64;
+    let mut cross_ok = true;
+    for (pi, pass) in Pass::ALL.iter().enumerate() {
+        for i in 0..outputs.len() {
+            for j in (i + 1)..outputs.len() {
+                let dmax = max_abs_diff(&outputs[i].1[pi], &outputs[j].1[pi]);
+                cross_max = worst(cross_max, dmax);
+                let lim = cell_tolerance(outputs[i].0, case, *pass) as f64
+                    + cell_tolerance(outputs[j].0, case, *pass) as f64;
+                // NaN-safe: a NaN deviation must fail, not slip past `>`
+                if dmax.is_nan() || dmax > lim {
+                    cross_ok = false;
+                }
+            }
+        }
+    }
+
+    CaseReport { name: case.name.clone(), cells, cross_max, cross_ok }
+}
+
+/// Run a whole suite of cases.
+pub fn run_suite(cases: &[ConformanceCase]) -> SuiteReport {
+    SuiteReport { cases: cases.iter().map(run_case).collect() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::conv::ConvProblem;
+    use crate::testkit::cases::ConformanceCase;
+
+    #[test]
+    fn small_case_passes_every_cell() {
+        let case = ConformanceCase::new(
+            "unit-small", ConvProblem::square(2, 2, 2, 9, 3));
+        let r = run_case(&case);
+        assert_eq!(r.cells.len(), Engine::ALL.len() * Pass::ALL.len());
+        assert!(r.ok(), "\n{}", SuiteReport { cases: vec![r] }.render());
+    }
+
+    #[test]
+    fn prime_basis_case_takes_bluestein_and_passes() {
+        let case = ConformanceCase::new(
+            "unit-prime", ConvProblem::square(1, 2, 2, 11, 3))
+            .with_vendor_basis(11);
+        assert!(case.forces_bluestein());
+        let r = run_case(&case);
+        assert!(r.ok(), "\n{}", SuiteReport { cases: vec![r] }.render());
+    }
+
+    #[test]
+    fn corrupted_output_is_flagged() {
+        // compare() must see through a single flipped element
+        let want = vec![1.0f64, 2.0, 3.0];
+        let mut got = vec![1.0f32, 2.0, 3.0];
+        let (abs0, ulp0) = compare(&got, &want);
+        assert_eq!(abs0, 0.0);
+        assert_eq!(ulp0, 0);
+        got[1] = 2.5;
+        let (abs1, ulp1) = compare(&got, &want);
+        assert!((abs1 - 0.5).abs() < 1e-12);
+        assert!(ulp1 > 1000);
+    }
+
+    #[test]
+    fn nan_output_poisons_the_cell() {
+        // plain f64::max would ignore NaN and report the engine "ok"
+        let want = vec![1.0f64, 2.0];
+        let got = vec![1.0f32, f32::NAN];
+        let (abs, _) = compare(&got, &want);
+        assert!(abs.is_nan()); // so the `max_abs <= tol` ok-gate fails
+        assert!(max_abs_diff(&got, &[1.0, 2.0]).is_nan());
+    }
+
+    #[test]
+    fn report_renders_every_engine_row() {
+        let case = ConformanceCase::new(
+            "unit-render", ConvProblem::square(1, 1, 1, 6, 3));
+        let rep = run_suite(std::slice::from_ref(&case));
+        let text = rep.render();
+        for e in Engine::ALL {
+            assert!(text.contains(e.tag()), "missing row for {}", e.tag());
+        }
+        assert!(text.contains("unit-render"));
+        assert!(rep.all_ok(), "\n{text}");
+    }
+}

@@ -1,0 +1,67 @@
+//! Conformance and verification substrate — the reusable layer every
+//! test tier builds on, so each later perf/scale PR can prove it changed
+//! nothing but speed.
+//!
+//! * [`oracle`] — f64 reference implementations of the three conv passes
+//!   and the naive DFT, independent of every engine under test;
+//! * [`cases`] — deterministic problem generation: adversarial shapes
+//!   (k == h, prime sizes forcing Bluestein, non-smooth sizes,
+//!   rectangular/batch-heavy/plane-heavy aspect ratios) plus seeded
+//!   samples of the paper's Table-2 sweep space;
+//! * [`tolerance`] — the acceptance-threshold model, scaling with
+//!   accumulation depth and transform size instead of hard-coded
+//!   constants, plus ULP distance for reporting;
+//! * [`matrix`] — the conformance runner: every {engine × pass} pair
+//!   (direct, im2col, vendor-FFT, fbfft, tiled — all three passes each)
+//!   against the oracle and against each other, rendered as a per-cell
+//!   max-abs / max-ULP table.
+//!
+//! `rust/tests/conformance.rs` runs the full matrix in CI; the engines'
+//! own unit tests reuse the oracle and [`assert_close`].
+
+pub mod cases;
+pub mod matrix;
+pub mod oracle;
+pub mod tolerance;
+
+pub use cases::{conformance_suite, ConformanceCase};
+pub use matrix::{run_case, run_suite, Engine, SuiteReport};
+
+/// Assert two f32 slices agree elementwise within `tol`, with an
+/// index-carrying panic message (the shared helper the engine unit tests
+/// previously each duplicated).
+#[track_caller]
+pub fn assert_close(got: &[f32], want: &[f32], tol: f32) {
+    assert_eq!(got.len(), want.len(), "length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!((g - w).abs() < tol,
+                "idx {i}: {g} vs {w} (tol {tol})");
+    }
+}
+
+/// Assert an f32 engine output matches an f64 oracle output within `tol`.
+#[track_caller]
+pub fn assert_close_oracle(got: &[f32], want: &[f64], tol: f32) {
+    assert_eq!(got.len(), want.len(), "length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!((*g as f64 - w).abs() < tol as f64,
+                "idx {i}: {g} vs {w} (tol {tol})");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assert_close_accepts_within_tol() {
+        assert_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5);
+        assert_close_oracle(&[1.0], &[1.0 + 1e-8], 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "idx 1")]
+    fn assert_close_reports_the_offending_index() {
+        assert_close(&[1.0, 2.0], &[1.0, 3.0], 1e-3);
+    }
+}

@@ -1,0 +1,228 @@
+//! f64 reference implementations — the independent oracle every engine
+//! is conformance-tested against.
+//!
+//! Deliberately *not* shared with any engine under test: the three conv
+//! passes are literal transcriptions of the paper's §2 summations in
+//! gather form (the engines use scatter/blocked/threaded forms), and the
+//! DFT is the O(n²) definition. All accumulation is f64, so the oracle's
+//! own rounding error is negligible next to any f32 engine's.
+
+use crate::conv::ConvProblem;
+
+/// fprop oracle: `y[s,j,a,b] = Σ_{i,u,v} x[s,i,a·st+u,b·st+v] · w[j,i,u,v]`
+/// (valid cross-correlation, stride honoured).
+pub fn fprop64(p: &ConvProblem, x: &[f32], wei: &[f32]) -> Vec<f64> {
+    assert_eq!(x.len(), p.input_len());
+    assert_eq!(wei.len(), p.weight_len());
+    let (yh, yw) = (p.yh(), p.yw());
+    let mut y = vec![0f64; p.output_len()];
+    for s in 0..p.s {
+        for j in 0..p.fo {
+            for a in 0..yh {
+                for b in 0..yw {
+                    let mut acc = 0f64;
+                    for i in 0..p.f {
+                        for u in 0..p.kh {
+                            for v in 0..p.kw {
+                                let xi = x[((s * p.f + i) * p.h
+                                    + (a * p.stride + u)) * p.w
+                                    + (b * p.stride + v)] as f64;
+                                let wv = wei[((j * p.f + i) * p.kh + u)
+                                    * p.kw + v] as f64;
+                                acc += xi * wv;
+                            }
+                        }
+                    }
+                    y[((s * p.fo + j) * yh + a) * yw + b] = acc;
+                }
+            }
+        }
+    }
+    y
+}
+
+/// bprop oracle (gather form): for each input-gradient pixel `(r, c)`,
+/// `gx[s,i,r,c] = Σ_{j,u,v} go[s,j,r-u,c-v] · w[j,i,u,v]` over the taps
+/// whose gradient index lands inside the valid output.
+pub fn bprop64(p: &ConvProblem, go: &[f32], wei: &[f32]) -> Vec<f64> {
+    assert_eq!(p.stride, 1, "strided bprop is out of oracle scope");
+    assert_eq!(go.len(), p.output_len());
+    assert_eq!(wei.len(), p.weight_len());
+    let (yh, yw) = (p.yh(), p.yw());
+    let mut gx = vec![0f64; p.input_len()];
+    for s in 0..p.s {
+        for i in 0..p.f {
+            for r in 0..p.h {
+                for c in 0..p.w {
+                    let mut acc = 0f64;
+                    for j in 0..p.fo {
+                        for u in 0..p.kh {
+                            if u > r || r - u >= yh {
+                                continue;
+                            }
+                            for v in 0..p.kw {
+                                if v > c || c - v >= yw {
+                                    continue;
+                                }
+                                let g = go[((s * p.fo + j) * yh + (r - u))
+                                    * yw + (c - v)] as f64;
+                                let wv = wei[((j * p.f + i) * p.kh + u)
+                                    * p.kw + v] as f64;
+                                acc += g * wv;
+                            }
+                        }
+                    }
+                    gx[((s * p.f + i) * p.h + r) * p.w + c] = acc;
+                }
+            }
+        }
+    }
+    gx
+}
+
+/// accGrad oracle:
+/// `gw[j,i,u,v] = Σ_{s,a,b} go[s,j,a,b] · x[s,i,a+u,b+v]`.
+pub fn accgrad64(p: &ConvProblem, go: &[f32], x: &[f32]) -> Vec<f64> {
+    assert_eq!(p.stride, 1, "strided accGrad is out of oracle scope");
+    assert_eq!(go.len(), p.output_len());
+    assert_eq!(x.len(), p.input_len());
+    let (yh, yw) = (p.yh(), p.yw());
+    let mut gw = vec![0f64; p.weight_len()];
+    for j in 0..p.fo {
+        for i in 0..p.f {
+            for u in 0..p.kh {
+                for v in 0..p.kw {
+                    let mut acc = 0f64;
+                    for s in 0..p.s {
+                        for a in 0..yh {
+                            for b in 0..yw {
+                                let g = go[((s * p.fo + j) * yh + a) * yw
+                                    + b] as f64;
+                                let xi = x[((s * p.f + i) * p.h + (a + u))
+                                    * p.w + (b + v)] as f64;
+                                acc += g * xi;
+                            }
+                        }
+                    }
+                    gw[((j * p.f + i) * p.kh + u) * p.kw + v] = acc;
+                }
+            }
+        }
+    }
+    gw
+}
+
+/// Naive O(n²) DFT in pure f64 (`(re, im)` pairs). Forward sign
+/// convention `e^{-2πi jk/n}`, unnormalized inverse. Deliberately a
+/// separate definition from `fft::naive_dft` so the conformance oracle
+/// shares no code with the substrate under test.
+pub fn dft64(input: &[(f64, f64)], inverse: bool) -> Vec<(f64, f64)> {
+    let n = input.len();
+    let sign = if inverse { 2.0 } else { -2.0 };
+    (0..n)
+        .map(|k| {
+            let mut re = 0f64;
+            let mut im = 0f64;
+            for (j, (xr, xi)) in input.iter().enumerate() {
+                let ang = sign * std::f64::consts::PI * (j as f64)
+                    * (k as f64) / (n as f64);
+                let (s, c) = ang.sin_cos();
+                re += xr * c - xi * s;
+                im += xr * s + xi * c;
+            }
+            (re, im)
+        })
+        .collect()
+}
+
+/// One bin of the naive 2-D DFT of an `h × w` image zero-padded onto an
+/// `n × n` basis: `Σ_{r,c} img[r,c] · e^{-2πi(kh·r + kw·c)/n}`.
+pub fn dft2_bin64(img: &[f32], h: usize, w: usize, n: usize, kh: usize,
+                  kw: usize) -> (f64, f64) {
+    assert_eq!(img.len(), h * w);
+    let mut re = 0f64;
+    let mut im = 0f64;
+    for r in 0..h {
+        for c in 0..w {
+            let ang = -2.0 * std::f64::consts::PI
+                * ((kh * r) as f64 + (kw * c) as f64) / (n as f64);
+            let (s, co) = ang.sin_cos();
+            re += img[r * w + c] as f64 * co;
+            im += img[r * w + c] as f64 * s;
+        }
+    }
+    (re, im)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn identity_kernel_is_identity() {
+        let p = ConvProblem::square(1, 2, 2, 5, 1);
+        let mut rng = Rng::new(40);
+        let x = rng.normal_vec(p.input_len());
+        // w[j,i,0,0] = δ_{ij}
+        let mut wei = vec![0f32; p.weight_len()];
+        wei[0] = 1.0;
+        wei[3] = 1.0;
+        let y = fprop64(&p, &x, &wei);
+        for (g, o) in y.iter().zip(&x) {
+            assert!((g - *o as f64).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn adjoint_identities_hold_to_f64_precision() {
+        // ⟨fprop(x,w), go⟩ == ⟨x, bprop(go,w)⟩ == ⟨w, accgrad(go,x)⟩
+        let p = ConvProblem::new(2, 3, 2, 7, 9, 3, 5);
+        let mut rng = Rng::new(41);
+        let x = rng.normal_vec(p.input_len());
+        let wei = rng.normal_vec(p.weight_len());
+        let go = rng.normal_vec(p.output_len());
+        let y = fprop64(&p, &x, &wei);
+        let gx = bprop64(&p, &go, &wei);
+        let gw = accgrad64(&p, &go, &x);
+        let a: f64 = y.iter().zip(&go).map(|(u, v)| u * *v as f64).sum();
+        let b: f64 = gx.iter().zip(&x).map(|(u, v)| u * *v as f64).sum();
+        let c: f64 = gw.iter().zip(&wei).map(|(u, v)| u * *v as f64).sum();
+        assert!((a - b).abs() < 1e-9 * a.abs().max(1.0), "{a} vs {b}");
+        assert!((a - c).abs() < 1e-9 * a.abs().max(1.0), "{a} vs {c}");
+    }
+
+    #[test]
+    fn strided_fprop_center_tap() {
+        let mut p = ConvProblem::square(1, 1, 1, 7, 3);
+        p.stride = 2;
+        let x: Vec<f32> = (0..49).map(|i| i as f32).collect();
+        let wei = vec![0., 0., 0., 0., 1., 0., 0., 0., 0.];
+        let y = fprop64(&p, &x, &wei);
+        assert_eq!(y, vec![8., 10., 12., 22., 24., 26., 36., 38., 40.]);
+    }
+
+    #[test]
+    fn dft64_impulse_is_flat_and_inverse_round_trips() {
+        let mut x = vec![(0f64, 0f64); 8];
+        x[0] = (1.0, 0.0);
+        for (re, im) in dft64(&x, false) {
+            assert!((re - 1.0).abs() < 1e-12 && im.abs() < 1e-12);
+        }
+        let sig: Vec<(f64, f64)> =
+            (0..9).map(|j| ((j as f64).sin(), (j as f64).cos())).collect();
+        let f = dft64(&sig, false);
+        let back = dft64(&f, true);
+        for ((br, bi), (or, oi)) in back.iter().zip(&sig) {
+            assert!((br / 9.0 - or).abs() < 1e-10);
+            assert!((bi / 9.0 - oi).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn dft2_bin_dc_is_sum() {
+        let img = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let (re, im) = dft2_bin64(&img, 2, 3, 8, 0, 0);
+        assert!((re - 21.0).abs() < 1e-10 && im.abs() < 1e-10);
+    }
+}

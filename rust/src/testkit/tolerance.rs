@@ -1,0 +1,139 @@
+//! The acceptance-threshold model: tolerances that *scale* with the
+//! accumulation depth of the pass and the transform size of the engine,
+//! replacing the hard-coded `1e-3`-style constants the seed tests used.
+//!
+//! Model: with unit-variance inputs, a reduction of depth `d` produces
+//! outputs of magnitude ~√d and accumulates rounding noise of the same
+//! √d order, so the absolute error of a faithful f32 engine grows like
+//! `ε·d`. A frequency-domain engine additionally pays per-butterfly
+//! rounding over `log₂n + 1` stages on operands of magnitude ~√n, and a
+//! tiled engine sums per-tile results. The constants are deliberately
+//! generous (an order of magnitude over observed error): the matrix is a
+//! conformance gate, not a precision benchmark — a wrong conjugation,
+//! layout or clip produces errors of *output magnitude*, thousands of
+//! times past these thresholds.
+
+use crate::conv::tiled::tile_fft_size;
+use crate::conv::ConvProblem;
+use crate::coordinator::Pass;
+
+/// f32 unit roundoff.
+pub const EPS32: f32 = f32::EPSILON;
+
+/// Length of the reduction producing one output element of `pass`.
+pub fn reduction_depth(p: &ConvProblem, pass: Pass) -> usize {
+    match pass {
+        Pass::Fprop => p.f * p.kh * p.kw,
+        Pass::Bprop => p.fo * p.kh * p.kw,
+        Pass::AccGrad => p.s * p.yh() * p.yw(),
+    }
+}
+
+/// Absolute tolerance for a time-domain engine (direct, im2col).
+pub fn time_domain(p: &ConvProblem, pass: Pass) -> f32 {
+    let d = reduction_depth(p, pass) as f32;
+    (32.0 * EPS32 * d).max(1e-5)
+}
+
+/// Absolute tolerance for a frequency-domain engine on basis `n_fft`.
+/// The effective depth is at least `n²`: the pipeline's intermediates
+/// carry the full transform-basis energy even when the conv reduction is
+/// tiny (the paper's k-independence, mirrored in the rounding noise —
+/// e.g. accGrad on a `k == h` shape reduces over a handful of elements
+/// but still rides n²-energy spectra).
+pub fn frequency(p: &ConvProblem, pass: Pass, n_fft: usize) -> f32 {
+    let d = reduction_depth(p, pass).max(n_fft * n_fft) as f32;
+    let n = n_fft as f32;
+    let stages = n.log2().max(1.0) + 1.0;
+    (32.0 * EPS32 * d * stages * n.sqrt()).max(2e-5)
+}
+
+/// Absolute tolerance for the tiled engine with output-tile size `d_tile`
+/// (per-tile frequency error, accumulated over the resident tiles).
+pub fn tiled(p: &ConvProblem, pass: Pass, d_tile: usize) -> f32 {
+    let n_t = tile_fft_size(d_tile, p.kh, p.kw);
+    let tiles =
+        (p.yh().div_ceil(d_tile) * p.yw().div_ceil(d_tile)) as f32;
+    frequency(p, pass, n_t) * (1.0 + tiles.sqrt())
+}
+
+/// Absolute tolerance for one forward transform of size `n` on
+/// unit-variance input (the FFT edge tests): output magnitude ~√n,
+/// rounding over the stage count, with headroom for Bluestein's larger
+/// internal transform.
+pub fn fft_abs(n: usize) -> f32 {
+    let nf = n as f32;
+    (128.0 * EPS32 * nf.sqrt() * (nf.log2().max(1.0) + 1.0)).max(1e-5)
+}
+
+/// ULP distance between two f32 values (0 for bit-identical numbers;
+/// monotone in the real-line gap). The conformance matrix reports the
+/// max over each {engine × pass} cell.
+pub fn ulps(a: f32, b: f32) -> u64 {
+    fn key(x: f32) -> i64 {
+        // map the f32 line onto a monotone integer line
+        let bits = x.to_bits() as i32 as i64;
+        if bits < 0 {
+            (i32::MIN as i64) - bits
+        } else {
+            bits
+        }
+    }
+    (key(a) - key(b)).unsigned_abs()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn depth_tracks_pass() {
+        let p = ConvProblem::square(4, 3, 5, 9, 3);
+        assert_eq!(reduction_depth(&p, Pass::Fprop), 3 * 9);
+        assert_eq!(reduction_depth(&p, Pass::Bprop), 5 * 9);
+        assert_eq!(reduction_depth(&p, Pass::AccGrad), 4 * 49);
+    }
+
+    #[test]
+    fn tolerances_scale_with_size() {
+        let small = ConvProblem::square(1, 2, 2, 8, 3);
+        let big = ConvProblem::square(16, 16, 16, 32, 5);
+        assert!(time_domain(&big, Pass::Fprop)
+                > time_domain(&small, Pass::Fprop));
+        assert!(frequency(&big, Pass::Fprop, 32)
+                > frequency(&small, Pass::Fprop, 8));
+        assert!(frequency(&small, Pass::Fprop, 8)
+                >= time_domain(&small, Pass::Fprop));
+        assert!(fft_abs(256) > fft_abs(8));
+    }
+
+    #[test]
+    fn tiled_adds_tile_accumulation() {
+        // at the tile's own basis, the tiled budget exceeds the plain
+        // frequency budget by the tile-accumulation factor
+        let p = ConvProblem::square(2, 2, 2, 16, 3);
+        let d_tile = 2; // 7x7 = 49 tiles
+        let n_t = tile_fft_size(d_tile, p.kh, p.kw);
+        assert!(tiled(&p, Pass::Fprop, d_tile)
+                > 2.0 * frequency(&p, Pass::Fprop, n_t));
+    }
+
+    #[test]
+    fn ulp_distance_basics() {
+        assert_eq!(ulps(1.0, 1.0), 0);
+        assert_eq!(ulps(1.0, f32::from_bits(1.0f32.to_bits() + 1)), 1);
+        assert_eq!(ulps(0.0, -0.0), 0);
+        assert!(ulps(-1.0, 1.0) > 1_000_000);
+        assert_eq!(ulps(-1.5, -1.5), 0);
+    }
+
+    #[test]
+    fn thresholds_are_small_relative_to_signal() {
+        // magnitude of an fprop output is ~sqrt(depth); the tolerance
+        // must stay a tiny fraction of it or the gate is meaningless
+        let p = ConvProblem::square(16, 16, 16, 32, 5);
+        let mag = (reduction_depth(&p, Pass::Fprop) as f32).sqrt();
+        assert!(frequency(&p, Pass::Fprop, 32) < 0.01 * mag);
+        assert!(time_domain(&p, Pass::Fprop) < 0.001 * mag);
+    }
+}

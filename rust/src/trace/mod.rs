@@ -31,6 +31,18 @@ pub fn table2_grid() -> Vec<ConvProblem> {
     v
 }
 
+/// Uniformly sample one Table-2 configuration (one point of the same
+/// space `table2_grid` enumerates; `testkit::cases` rejection-samples
+/// this under a CPU work budget for the conformance matrix).
+pub fn table2_sample(rng: &mut Rng) -> ConvProblem {
+    let s = *rng.choice(&TABLE2_S);
+    let f = *rng.choice(&TABLE2_F);
+    let fo = *rng.choice(&TABLE2_FO);
+    let k = *rng.choice(&TABLE2_K);
+    let y = *rng.choice(&TABLE2_Y);
+    ConvProblem::square(s, f, fo, y + k - 1, k)
+}
+
 /// Table 4's representative layers L1–L5 (exact paper parameters).
 pub fn table4_layers() -> Vec<(&'static str, ConvProblem)> {
     vec![
@@ -164,6 +176,16 @@ mod tests {
         for p in &g {
             assert!(TABLE2_Y.contains(&p.yh()));
             assert!(TABLE2_K.contains(&p.kh));
+        }
+    }
+
+    #[test]
+    fn table2_sample_stays_on_the_grid() {
+        let mut rng = Rng::new(0x7AB);
+        let grid = table2_grid();
+        for _ in 0..50 {
+            let p = table2_sample(&mut rng);
+            assert!(grid.contains(&p), "{p:?} not a Table-2 point");
         }
     }
 

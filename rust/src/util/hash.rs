@@ -1,0 +1,34 @@
+//! FNV-1a 64-bit hash — stable across runs and platforms (unlike
+//! `std::hash`'s randomized `DefaultHasher`), so seeds derived from
+//! names (testkit case seeds, artifact shard keys) are reproducible.
+
+/// FNV-1a over a byte string.
+pub fn hash64(bytes: &[u8]) -> u64 {
+    const OFFSET: u64 = 0xCBF29CE484222325;
+    const PRIME: u64 = 0x100000001B3;
+    let mut h = OFFSET;
+    for b in bytes {
+        h ^= *b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // canonical FNV-1a test vectors
+        assert_eq!(hash64(b""), 0xCBF29CE484222325);
+        assert_eq!(hash64(b"a"), 0xAF63DC4C8601EC8C);
+        assert_eq!(hash64(b"foobar"), 0x85944171F73967E8);
+    }
+
+    #[test]
+    fn distinct_names_distinct_seeds() {
+        assert_ne!(hash64(b"adv-prime-11"), hash64(b"adv-prime-13"));
+        assert_ne!(hash64(b"x"), hash64(b"y"));
+    }
+}

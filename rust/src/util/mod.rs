@@ -2,8 +2,10 @@
 //! usual crates — serde_json, rand, rayon, criterion, proptest — are
 //! replaced by small, tested, purpose-built implementations).
 
+pub mod hash;
 pub mod json;
 pub mod rng;
 
+pub use hash::hash64;
 pub use json::Json;
 pub use rng::Rng;

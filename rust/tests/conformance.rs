@@ -1,0 +1,69 @@
+//! The cross-engine conformance matrix, run in full by `cargo test`:
+//! every host engine × every training pass, validated against the f64
+//! oracle (and against each other) over the default suite — adversarial
+//! shapes plus seeded Table-2 samples.
+
+use fbfft_repro::coordinator::Pass;
+use fbfft_repro::testkit::{cases, matrix, Engine};
+
+#[test]
+fn full_conformance_matrix() {
+    let suite = cases::conformance_suite();
+
+    // acceptance floor: ≥10 generated problems, a Bluestein-path case,
+    // and the tiled decomposition in every row
+    assert!(suite.len() >= 10, "suite has only {} cases", suite.len());
+    assert!(suite.iter().any(|c| c.forces_bluestein()),
+            "no prime/non-smooth vendor basis in the suite");
+
+    let report = matrix::run_suite(&suite);
+    // always print the matrix; visible via `cargo test -- --nocapture`
+    // and in the failure output
+    println!("{}", report.render());
+
+    // 5 engines × 3 passes validated in every case
+    for cr in &report.cases {
+        assert_eq!(cr.cells.len(), Engine::ALL.len() * Pass::ALL.len(),
+                   "{}: incomplete matrix row", cr.name);
+        for engine in Engine::ALL {
+            for pass in Pass::ALL {
+                let cell = cr.cell(engine, pass);
+                assert!(cell.max_abs.is_finite(),
+                        "{}: {}/{} produced non-finite error", cr.name,
+                        engine.tag(), pass.tag());
+            }
+        }
+    }
+
+    assert!(report.all_ok(), "conformance failures:\n{}", report.render());
+}
+
+#[test]
+fn bluestein_case_really_runs_bluestein() {
+    // the adversarial prime cases must exercise the planner's Bluestein
+    // algorithm, not mixed-radix
+    use fbfft_repro::fft::Plan;
+    for c in cases::adversarial_cases() {
+        if c.forces_bluestein() {
+            assert_eq!(Plan::new(c.vendor_basis).algorithm_name(),
+                       "bluestein",
+                       "{}: basis {} does not dispatch to Bluestein",
+                       c.name, c.vendor_basis);
+        }
+    }
+}
+
+#[test]
+fn matrix_report_is_greppable() {
+    // one small case end to end through the public API: the rendered
+    // report names the case, every engine, and the cross-engine line
+    let suite = cases::sampled_cases(0xD0C, 1);
+    let report = matrix::run_suite(&suite);
+    let text = report.render();
+    assert!(text.contains(&suite[0].name));
+    for e in Engine::ALL {
+        assert!(text.contains(e.tag()));
+    }
+    assert!(text.contains("cross-engine max deviation"));
+    assert!(report.all_ok(), "\n{text}");
+}

@@ -1,0 +1,116 @@
+//! Edge coverage for the FFT substrate: the paths a convolution-level
+//! test can miss — Bluestein at primes, round-trip identity across the
+//! whole supported size range, the real-transform/complex-transform
+//! agreement, and the 2-D row–column decomposition vs the naive 2-D DFT.
+
+use fbfft_repro::fft::bluestein::Bluestein;
+use fbfft_repro::fft::fft2d::{irfft2, rfft2};
+use fbfft_repro::fft::real::{irfft, rfft, rfft_len};
+use fbfft_repro::fft::{is_smooth, naive_dft, plan, C32, Direction};
+use fbfft_repro::testkit::{oracle, tolerance};
+use fbfft_repro::util::Rng;
+
+fn rand_complex(rng: &mut Rng, n: usize) -> Vec<C32> {
+    (0..n).map(|_| C32::new(rng.normal(), rng.normal())).collect()
+}
+
+#[test]
+fn bluestein_matches_naive_dft_at_primes() {
+    // primes outside the radix set {2,3,5,7}: the pure Bluestein path
+    for n in [11usize, 13, 17, 19, 23, 29, 31, 37, 41, 53, 61, 101, 127,
+              251] {
+        assert!(!is_smooth(n), "{n} must exercise Bluestein");
+        let mut rng = Rng::new(0xB1 + n as u64);
+        let x = rand_complex(&mut rng, n);
+        let bs = Bluestein::new(n);
+        let tol = tolerance::fft_abs(n);
+        let want = naive_dft(&x, false);
+        for (k, (g, w)) in
+            bs.transform(&x, false).iter().zip(&want).enumerate()
+        {
+            assert!((*g - *w).abs() < tol,
+                    "n={n} k={k}: {g:?} vs {w:?} (tol {tol})");
+        }
+        // and the planner dispatches these sizes to Bluestein
+        assert_eq!(plan::cached(n).algorithm_name(), "bluestein");
+    }
+}
+
+#[test]
+fn forward_inverse_round_trip_sizes_8_to_256() {
+    // every size in the paper's transform range, smooth or not
+    for n in 8usize..=256 {
+        let mut rng = Rng::new(0x27 + n as u64);
+        let x = rand_complex(&mut rng, n);
+        let p = plan::cached(n);
+        let f = p.transform(&x, Direction::Forward);
+        let back = p.inverse_normalized(&f);
+        let tol = tolerance::fft_abs(n);
+        for (i, (b, o)) in back.iter().zip(&x).enumerate() {
+            assert!((*b - *o).abs() < tol,
+                    "n={n} i={i}: {b:?} vs {o:?} (tol {tol})");
+        }
+    }
+}
+
+#[test]
+fn rfft_agrees_with_complex_fft_on_real_input() {
+    // even (packed half-size path), odd, prime and smooth sizes
+    for n in [8usize, 9, 11, 12, 16, 21, 25, 27, 31, 32, 49, 64, 97, 100,
+              128, 243, 256] {
+        let mut rng = Rng::new(0x3E + n as u64);
+        let x = rng.normal_vec(n);
+        let half = rfft(&x, n);
+        assert_eq!(half.len(), rfft_len(n));
+        let z: Vec<C32> = x.iter().map(|v| C32::new(*v, 0.0)).collect();
+        let full = plan::cached(n).transform(&z, Direction::Forward);
+        let tol = tolerance::fft_abs(n);
+        for (k, (g, w)) in half.iter().zip(&full).enumerate() {
+            assert!((*g - *w).abs() < tol,
+                    "n={n} k={k}: {g:?} vs {w:?} (tol {tol})");
+        }
+        // and C2R inverts R2C
+        let back = irfft(&half, n);
+        for (i, (b, o)) in back.iter().zip(&x).enumerate() {
+            assert!((b - o).abs() < tol, "n={n} i={i}: {b} vs {o}");
+        }
+    }
+}
+
+#[test]
+fn rfft2_matches_naive_2d_dft() {
+    // row–column decomposition vs the oracle's direct 2-D definition,
+    // on pow2, smooth non-pow2 and prime bases, square and rectangular
+    for (h, w, n) in [(5usize, 6usize, 8usize), (7, 7, 8), (5, 5, 12),
+                      (6, 4, 10), (9, 9, 13), (8, 8, 8)] {
+        let mut rng = Rng::new(0x2D + (h * 31 + w * 7 + n) as u64);
+        let img = rng.normal_vec(h * w);
+        let f = rfft2(&img, h, w, n);
+        let nf = rfft_len(n);
+        // bigger constant than the 1-D budget: h·w terms per bin
+        let tol = 4.0 * tolerance::fft_abs(n);
+        for kh in 0..n {
+            for kw in 0..nf {
+                let (re, im) = oracle::dft2_bin64(&img, h, w, n, kh, kw);
+                let got = f[kh * nf + kw];
+                assert!((got.re as f64 - re).abs() < tol as f64
+                        && (got.im as f64 - im).abs() < tol as f64,
+                        "h={h} w={w} n={n} bin=({kh},{kw}): \
+                         {got:?} vs ({re}, {im}) (tol {tol})");
+            }
+        }
+        // round trip with clip back to the unpadded image
+        let back = irfft2(&f, n, h, w);
+        for (i, (b, o)) in back.iter().zip(&img).enumerate() {
+            assert!((b - o).abs() < tol, "h={h} w={w} n={n} i={i}");
+        }
+    }
+}
+
+#[test]
+fn rfft_len_is_half_spectrum() {
+    assert_eq!(rfft_len(8), 5);
+    assert_eq!(rfft_len(9), 5);
+    assert_eq!(rfft_len(256), 129);
+    assert_eq!(rfft_len(1), 1);
+}

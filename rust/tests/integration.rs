@@ -1,8 +1,12 @@
 //! Integration tests over the real artifacts directory: PJRT-loaded
 //! AOT modules cross-checked against the in-tree host engines.
 //!
-//! These require `make artifacts` to have run (the Makefile's `test`
-//! target guarantees the ordering).
+//! These require `make artifacts` (the Python AOT pipeline) *and* a real
+//! PJRT backend. When either is absent — the common case for a plain
+//! `cargo test` checkout — every test here skips with an explanatory
+//! message instead of failing: the host-engine tiers (`unit tests`,
+//! `prop.rs`, `conformance.rs`) carry the correctness burden without
+//! artifacts.
 
 use fbfft_repro::conv::{direct, ConvProblem, FftConvEngine};
 use fbfft_repro::coordinator::batcher::BatcherConfig;
@@ -12,8 +16,35 @@ use fbfft_repro::coordinator::{LayerPlan, NetworkScheduler, Pass, Strategy};
 use fbfft_repro::runtime::{HostTensor, Runtime};
 use fbfft_repro::util::Rng;
 
-fn rt() -> Runtime {
-    Runtime::open("artifacts").expect("artifacts dir (run `make artifacts`)")
+/// Print the one shared skip message for this artifact-gated tier.
+fn skip(e: &anyhow::Error) {
+    eprintln!(
+        "SKIP artifact-gated integration test: {e:#}\n  \
+         (run the Python AOT pipeline, `python/compile/aot.py`, and \
+         provide a real PJRT backend to enable this tier)");
+}
+
+/// Open the artifacts-backed runtime, or explain why this test is
+/// skipping (no `artifacts/` from the AOT pipeline, or no PJRT backend).
+fn rt() -> Option<Runtime> {
+    match Runtime::open("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            skip(&e);
+            None
+        }
+    }
+}
+
+/// `let Some(rt) = ... else return` with the skip message, as a macro so
+/// every test body stays one line longer than before.
+macro_rules! require_rt {
+    () => {
+        match rt() {
+            Some(rt) => rt,
+            None => return,
+        }
+    };
 }
 
 fn max_err(a: &[f32], b: &[f32]) -> f32 {
@@ -23,7 +54,7 @@ fn max_err(a: &[f32], b: &[f32]) -> f32 {
 
 #[test]
 fn manifest_has_all_experiment_families() {
-    let rt = rt();
+    let rt = require_rt!();
     let m = rt.manifest();
     for prefix in ["conv.quickstart.", "conv.T4.", "conv.alexnet.",
                    "conv.overfeat.", "conv.swp.", "conv.s54.",
@@ -36,7 +67,7 @@ fn manifest_has_all_experiment_families() {
 
 #[test]
 fn quickstart_artifacts_match_host_engine() {
-    let rt = rt();
+    let rt = require_rt!();
     let p = ConvProblem::square(2, 4, 4, 16, 3);
     let mut rng = Rng::new(42);
     let x = rng.normal_vec(p.input_len());
@@ -57,7 +88,7 @@ fn quickstart_artifacts_match_host_engine() {
 
 #[test]
 fn pallas_pipeline_all_three_passes_match_host() {
-    let rt = rt();
+    let rt = require_rt!();
     // T4.L4 scaled: S=8, f=f'=16, 16x16, k=7
     let e = rt.manifest().conv("T4.L4@_8", "fbfft", "fprop")
         .expect("T4.L4 artifact");
@@ -92,7 +123,7 @@ fn pallas_pipeline_all_three_passes_match_host() {
 
 #[test]
 fn fft1d_artifact_matches_host_fbfft() {
-    let rt = rt();
+    let rt = require_rt!();
     let n = 32usize;
     let batch = 4096usize;
     let mut rng = Rng::new(3);
@@ -118,7 +149,7 @@ fn fft1d_artifact_matches_host_fbfft() {
 
 #[test]
 fn tiled_artifact_equals_untiled() {
-    let rt = rt();
+    let rt = require_rt!();
     let e = rt.manifest().get("conv.tile.x57.fbfft.fprop").unwrap();
     let p = e.problem().unwrap();
     let mut rng = Rng::new(9);
@@ -139,7 +170,7 @@ fn tiled_artifact_equals_untiled() {
 
 #[test]
 fn train_step_reduces_loss() {
-    let rt = rt();
+    let rt = require_rt!();
     let log = fbfft_repro::reports::trainer::train_demo(&rt, 120, 0xFEED)
         .unwrap();
     assert_eq!(log.steps, 120);
@@ -154,7 +185,7 @@ fn train_step_reduces_loss() {
 
 #[test]
 fn scheduler_runs_scaled_alexnet_all_passes() {
-    let rt = rt();
+    let rt = require_rt!();
     let plans = fbfft_repro::reports::cnn::plans("alexnet", Strategy::Fbfft);
     let mut sched = NetworkScheduler::new(&rt, plans);
     sched.check_artifacts(&Pass::ALL).unwrap();
@@ -167,7 +198,7 @@ fn scheduler_runs_scaled_alexnet_all_passes() {
 
 #[test]
 fn scheduler_fails_fast_on_missing_artifact() {
-    let rt = rt();
+    let rt = require_rt!();
     let plans = vec![LayerPlan {
         spec: "does.not.exist".into(),
         problem: ConvProblem::square(1, 1, 1, 8, 3),
@@ -181,13 +212,19 @@ fn scheduler_fails_fast_on_missing_artifact() {
 #[test]
 fn service_end_to_end_on_quickstart() {
     let p = ConvProblem::square(2, 4, 4, 16, 3);
-    let svc = ConvService::start(
+    let svc = match ConvService::start(
         "artifacts".into(),
         "conv.quickstart.fbfft.fprop".into(),
         p,
         BatcherConfig { capacity: 2,
                         max_wait: std::time::Duration::from_millis(1) },
-    ).unwrap();
+    ) {
+        Ok(svc) => svc,
+        Err(e) => {
+            skip(&e);
+            return;
+        }
+    };
     let (tx, rx) = std::sync::mpsc::channel::<Completion>();
     for id in 0..10u64 {
         svc.submit(ServeRequest { id, images: 1, reply: tx.clone() });
@@ -210,7 +247,7 @@ fn service_end_to_end_on_quickstart() {
 
 #[test]
 fn runtime_rejects_wrong_shapes() {
-    let rt = rt();
+    let rt = require_rt!();
     let err = rt
         .execute_1f32("conv.quickstart.fbfft.fprop",
                       &[HostTensor::f32(vec![0.0; 4], &[2, 2]),
@@ -221,7 +258,7 @@ fn runtime_rejects_wrong_shapes() {
 
 #[test]
 fn executable_cache_compiles_once() {
-    let rt = rt();
+    let rt = require_rt!();
     rt.executable("conv.quickstart.vendor.fprop").unwrap();
     let c1 = rt.stats().compiles;
     rt.executable("conv.quickstart.vendor.fprop").unwrap();

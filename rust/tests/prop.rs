@@ -8,18 +8,10 @@ use fbfft_repro::conv::{direct, im2col, tiled, ConvProblem, FftConvEngine,
 use fbfft_repro::coordinator::autotuner::candidate_bases;
 use fbfft_repro::coordinator::{Batcher, BatcherConfig};
 use fbfft_repro::fft::{fbfft_host, is_smooth, naive_dft, plan, real, C32};
+use fbfft_repro::testkit::cases::random_small_problem as rand_problem;
 use fbfft_repro::util::{Json, Rng};
 
 const CASES: usize = 40;
-
-fn rand_problem(rng: &mut Rng, max_hw: usize) -> ConvProblem {
-    let kh = *rng.choice(&[1usize, 2, 3, 5]);
-    let kw = *rng.choice(&[1usize, 2, 3, 5]);
-    let h = rng.int_in(kh.max(2), max_hw);
-    let w = rng.int_in(kw.max(2), max_hw);
-    ConvProblem::new(rng.int_in(1, 3), rng.int_in(1, 4), rng.int_in(1, 4),
-                     h, w, kh.min(h), kw.min(w))
-}
 
 // ---------------------------------------------------------------------------
 // FFT invariants
