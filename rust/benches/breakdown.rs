@@ -1,10 +1,61 @@
-//! Bench target for Table 5: per-stage pipeline breakdown (host engines),
-//! plus the Sec 5.4 comparison when artifacts are present.
-use fbfft_repro::reports::{sweep::sec54_report, table5_report};
+//! Bench target for Table 5: per-stage pipeline breakdown (host engines)
+//! plus the machine-readable `BENCH_fftconv.json` perf artifact, and the
+//! Sec 5.4 comparison when artifacts are present.
+//!
+//! One measurement pass feeds both outputs: the JSON is written first
+//! and the Table-5 text is rendered from its entries (so the table and
+//! the artifact can never disagree). `cargo bench --bench breakdown --
+//! --smoke` runs only the fixed acceptance config with one rep (the CI
+//! smoke gate) and still writes the JSON.
+use fbfft_repro::metrics::Table;
+use fbfft_repro::reports::{breakdown_json, sweep::sec54_report};
 use fbfft_repro::runtime::Runtime;
+use fbfft_repro::util::Json;
 
 fn main() {
-    println!("{}", table5_report());
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let json = breakdown_json(smoke);
+    std::fs::write("BENCH_fftconv.json", json.to_string())
+        .expect("write BENCH_fftconv.json");
+    eprintln!("wrote BENCH_fftconv.json (smoke={smoke})");
+    let entries = json
+        .get("entries")
+        .and_then(Json::as_arr)
+        .unwrap_or(&[]);
+    let s = |e: &Json, k: &str| {
+        e.get(k).and_then(Json::as_str).unwrap_or("?").to_string()
+    };
+    let g = |e: &Json, k: &str| {
+        e.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN)
+    };
+    let ms = |e: &Json, k: &str| format!("{:.3}", g(e, k) / 1e6);
+    if smoke {
+        // surface the acceptance ratio without a JSON reader
+        for e in entries {
+            println!(
+                "{} {} {}: cgemm {:.0} ns, naive {:.0} ns, speedup {:.2}x",
+                s(e, "layer"), s(e, "mode"), s(e, "pass"),
+                g(e, "cgemm_ns"), g(e, "cgemm_naive_ns"),
+                g(e, "cgemm_speedup"));
+        }
+        return;
+    }
+    let mut t = Table::new(&[
+        "layer", "pass", "mode", "FFT A", "TRANS A", "FFT B", "TRANS B",
+        "CGEMM", "TRANS C", "IFFT C", "total ms", "cgemm speedup"]);
+    for e in entries {
+        t.row(vec![
+            s(e, "layer"), s(e, "pass"), s(e, "mode"),
+            ms(e, "fft_a_ns"), ms(e, "trans_a_ns"), ms(e, "fft_b_ns"),
+            ms(e, "trans_b_ns"), ms(e, "cgemm_ns"), ms(e, "trans_c_ns"),
+            ms(e, "ifft_c_ns"), ms(e, "total_ns"),
+            format!("{:.2}x", g(e, "cgemm_speedup")),
+        ]);
+    }
+    println!(
+        "Table 5: frequency-pipeline stage breakdown \
+         (host engines, planes/16, S=4; from BENCH_fftconv.json):\n{}",
+        t.render());
     if let Ok(rt) = Runtime::open("artifacts") {
         match sec54_report(&rt) {
             Ok(r) => println!("{r}"),

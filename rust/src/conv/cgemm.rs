@@ -1,0 +1,507 @@
+//! Blocked, multithreaded frequency-domain CGEMM — the per-bin batched
+//! complex GEMM engine behind Table 1's `CGEMM` stage.
+//!
+//! Table 5 shows that once batch and feature counts grow, this stage —
+//! not the transforms — dominates FFT-convolution runtime, and Zlateski
+//! et al. (1809.07851) make the same point for CPU reproductions: FFT
+//! conv wins only when the frequency-domain GEMM is cache-blocked and
+//! vectorized. Design, per the batched formulation of Mathieu et al.
+//! (1312.5851):
+//!
+//! * **one shape vocabulary** ([`BinShape`]) covering the three
+//!   conjugation patterns of §2 — fprop `X·conj(W)ᵀ`, bprop `Go·W`,
+//!   accGrad `conj(Go)ᵀ·X` (minibatch reduction) — as stride + conjugate
+//!   flags, so packing and the microkernel are written once;
+//! * **interleaved→planar packing**: operand panels are repacked from
+//!   interleaved `C32` into separate re/im `f32` planes (conjugation
+//!   becomes a sign flip at pack time, transposition a stride), which is
+//!   what lets rustc autovectorize the FMA chains — the naive `C32`
+//!   triple loop serializes on one complex accumulator;
+//! * **register-blocked [`MR`]×[`NR`] microkernel** on split re/im
+//!   accumulators, fed by [`KC`]/[`MC`]/[`NC`]-blocked panels so the
+//!   working set stays cache-resident;
+//! * **`std::thread::scope` parallelism over bin ranges** (bins are
+//!   independent small GEMMs; the output is bin-major so per-thread
+//!   chunks are contiguous), sized by [`crate::util::threads`];
+//! * **zero steady-state allocation**: packing panels come from the
+//!   [`Workspace`] pool and are returned after each call.
+
+use std::thread;
+
+use crate::coordinator::{BufferPool, Pass};
+use crate::fft::C32;
+use crate::util::{chunk_ranges, threads};
+
+/// Microkernel tile rows (distinct re/im accumulator pairs per operand
+/// row; MR·NR·2 accumulators must fit the register file).
+pub const MR: usize = 4;
+/// Microkernel tile columns (one SIMD lane group per accumulator row).
+pub const NR: usize = 8;
+/// Reduction-depth panel: one packed A panel of `MR×KC` and B panel of
+/// `KC×NR` stream through L1 per microkernel call.
+pub const KC: usize = 256;
+/// Row block: the packed A block (`MC×KC` re + im planes) targets L2.
+pub const MC: usize = 64;
+/// Column block: the packed B block (`KC×NC` re + im planes) targets L2.
+pub const NC: usize = 128;
+
+/// Below this many complex MACs per call the thread fan-out costs more
+/// than it buys (the §6 tiled engine issues thousands of tiny calls);
+/// run single-threaded on the caller's thread instead.
+const PARALLEL_MACS: usize = 1 << 17;
+
+/// The reusable buffer arena threaded through the frequency-convolution
+/// pipeline (`forward` / CGEMM / `inverse`): a role-keyed [`BufferPool`]
+/// with both `f32` and `C32` planes. After one warmup pass per problem
+/// shape, every checkout is a reuse — steady-state pass execution
+/// performs zero heap allocation (asserted via the pool counters in
+/// `tests/workspace_alloc.rs`).
+#[derive(Debug, Default)]
+pub struct Workspace {
+    pub pool: BufferPool,
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Workspace { pool: BufferPool::new() }
+    }
+}
+
+/// One frequency bin's GEMM, `C[m×n] (+)= op(A)·op(B)` with the reduction
+/// over `k`, expressed as strides into the bin-major slabs plus
+/// conjugation flags. `of()` maps each training pass of §2 onto it.
+#[derive(Clone, Copy, Debug)]
+pub struct BinShape {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    /// elements per bin in the A / B / C slabs
+    pub a_len: usize,
+    pub b_len: usize,
+    pub c_len: usize,
+    /// `A[m,k]` lives at `m·a_mstride + k·a_kstride`
+    pub a_mstride: usize,
+    pub a_kstride: usize,
+    pub conj_a: bool,
+    /// `B[k,n]` lives at `n·b_nstride + k·b_kstride`
+    pub b_nstride: usize,
+    pub b_kstride: usize,
+    pub conj_b: bool,
+}
+
+impl BinShape {
+    /// The three conjugation patterns of §2 on the bin-major layout
+    /// (A-slab rows are `S×f` or `S×f'`, B-slab rows `f'×f` or `S×f`):
+    ///
+    /// * fprop:   `Out[s,j] = Σ_i X[s,i]·conj(W[j,i])`
+    /// * bprop:   `Gx[s,i]  = Σ_j Go[s,j]·W[j,i]`
+    /// * accGrad: `Gw[j,i]  = Σ_s conj(Go[s,j])·X[s,i]`
+    pub fn of(pass: Pass, s: usize, f: usize, fo: usize) -> BinShape {
+        match pass {
+            // A = X (S×f), B = W (f'×f), C = Out (S×f')
+            Pass::Fprop => BinShape {
+                m: s, n: fo, k: f,
+                a_len: s * f, b_len: fo * f, c_len: s * fo,
+                a_mstride: f, a_kstride: 1, conj_a: false,
+                b_nstride: f, b_kstride: 1, conj_b: true,
+            },
+            // A = Go (S×f'), B = W (f'×f), C = Gx (S×f)
+            Pass::Bprop => BinShape {
+                m: s, n: f, k: fo,
+                a_len: s * fo, b_len: fo * f, c_len: s * f,
+                a_mstride: fo, a_kstride: 1, conj_a: false,
+                b_nstride: 1, b_kstride: f, conj_b: false,
+            },
+            // A = Go (S×f', k-major), B = X (S×f, k-major), C = Gw (f'×f)
+            Pass::AccGrad => BinShape {
+                m: fo, n: f, k: s,
+                a_len: s * fo, b_len: s * f, c_len: fo * f,
+                a_mstride: 1, a_kstride: fo, conj_a: true,
+                b_nstride: 1, b_kstride: f, conj_b: false,
+            },
+        }
+    }
+}
+
+/// Round `x` up to a multiple of `to`.
+fn round_up(x: usize, to: usize) -> usize {
+    x.div_ceil(to) * to
+}
+
+/// Pack an `mc×kc` block of A into planar re/im panels of `MR` rows:
+/// element `(ir·MR+mi, kk)` lands at `(ir·kc + kk)·MR + mi`, rows beyond
+/// `mc` zero-padded so the microkernel never branches on ragged edges.
+/// Conjugation folds into the imaginary plane's sign.
+#[allow(clippy::too_many_arguments)]
+fn pack_a(sh: &BinShape, a: &[C32], m0: usize, mc: usize, p0: usize,
+          kc: usize, out_re: &mut [f32], out_im: &mut [f32]) {
+    let sign = if sh.conj_a { -1.0f32 } else { 1.0 };
+    for ir in 0..mc.div_ceil(MR) {
+        let base = ir * kc * MR;
+        for kk in 0..kc {
+            let ks = (p0 + kk) * sh.a_kstride;
+            for mi in 0..MR {
+                let idx = base + kk * MR + mi;
+                let mrow = ir * MR + mi;
+                if mrow < mc {
+                    let v = a[(m0 + mrow) * sh.a_mstride + ks];
+                    out_re[idx] = v.re;
+                    out_im[idx] = sign * v.im;
+                } else {
+                    out_re[idx] = 0.0;
+                    out_im[idx] = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// Pack a `kc×nc` block of B into planar re/im panels of `NR` columns
+/// (mirror of [`pack_a`]).
+#[allow(clippy::too_many_arguments)]
+fn pack_b(sh: &BinShape, b: &[C32], p0: usize, kc: usize, n0: usize,
+          nc: usize, out_re: &mut [f32], out_im: &mut [f32]) {
+    let sign = if sh.conj_b { -1.0f32 } else { 1.0 };
+    for jr in 0..nc.div_ceil(NR) {
+        let base = jr * kc * NR;
+        for kk in 0..kc {
+            let ks = (p0 + kk) * sh.b_kstride;
+            for ni in 0..NR {
+                let idx = base + kk * NR + ni;
+                let ncol = jr * NR + ni;
+                if ncol < nc {
+                    let v = b[(n0 + ncol) * sh.b_nstride + ks];
+                    out_re[idx] = v.re;
+                    out_im[idx] = sign * v.im;
+                } else {
+                    out_re[idx] = 0.0;
+                    out_im[idx] = 0.0;
+                }
+            }
+        }
+    }
+}
+
+/// The register-blocked core: `MR×NR` split re/im accumulators, rank-1
+/// updated per reduction step from one packed A column (`MR` values) and
+/// one packed B row (`NR` values). Fixed-size arrays + planar operands
+/// are what rustc needs to emit packed FMA over the `ni` loop.
+#[inline(always)]
+fn microkernel(kc: usize, apr: &[f32], api: &[f32], bpr: &[f32],
+               bpi: &[f32], acc_re: &mut [[f32; NR]; MR],
+               acc_im: &mut [[f32; NR]; MR]) {
+    for kk in 0..kc {
+        let mut b_re = [0f32; NR];
+        let mut b_im = [0f32; NR];
+        b_re.copy_from_slice(&bpr[kk * NR..kk * NR + NR]);
+        b_im.copy_from_slice(&bpi[kk * NR..kk * NR + NR]);
+        let a_re = &apr[kk * MR..kk * MR + MR];
+        let a_im = &api[kk * MR..kk * MR + MR];
+        for mi in 0..MR {
+            let ar = a_re[mi];
+            let ai = a_im[mi];
+            let cr = &mut acc_re[mi];
+            let ci = &mut acc_im[mi];
+            for ni in 0..NR {
+                cr[ni] += ar * b_re[ni] - ai * b_im[ni];
+                ci[ni] += ar * b_im[ni] + ai * b_re[ni];
+            }
+        }
+    }
+}
+
+/// Re-interleave one accumulator tile into the row-major `C32` output,
+/// clipping ragged edges. `first` selects store vs accumulate (the
+/// k-block loop's semantics).
+#[allow(clippy::too_many_arguments)]
+fn writeback(acc_re: &[[f32; NR]; MR], acc_im: &[[f32; NR]; MR],
+             c: &mut [C32], m0: usize, mr_eff: usize, n0: usize,
+             nr_eff: usize, ldc: usize, first: bool) {
+    for mi in 0..mr_eff {
+        let crow = &mut c[(m0 + mi) * ldc + n0..][..nr_eff];
+        for (ni, cv) in crow.iter_mut().enumerate() {
+            let v = C32::new(acc_re[mi][ni], acc_im[mi][ni]);
+            if first {
+                *cv = v;
+            } else {
+                *cv += v;
+            }
+        }
+    }
+}
+
+/// One bin's blocked GEMM over pre-split packing planes.
+#[allow(clippy::too_many_arguments)]
+fn bin_gemm(sh: &BinShape, a: &[C32], b: &[C32], c: &mut [C32],
+            ar: &mut [f32], ai: &mut [f32], br: &mut [f32],
+            bi: &mut [f32]) {
+    let (m, n, k) = (sh.m, sh.n, sh.k);
+    let mut p0 = 0;
+    while p0 < k {
+        let kc = KC.min(k - p0);
+        let first = p0 == 0;
+        let mut n0 = 0;
+        while n0 < n {
+            let nc = NC.min(n - n0);
+            pack_b(sh, b, p0, kc, n0, nc, br, bi);
+            let mut m0 = 0;
+            while m0 < m {
+                let mc = MC.min(m - m0);
+                pack_a(sh, a, m0, mc, p0, kc, ar, ai);
+                let mut jr = 0;
+                while jr * NR < nc {
+                    let nr_eff = NR.min(nc - jr * NR);
+                    let bpr = &br[jr * kc * NR..][..kc * NR];
+                    let bpi = &bi[jr * kc * NR..][..kc * NR];
+                    let mut ir = 0;
+                    while ir * MR < mc {
+                        let mr_eff = MR.min(mc - ir * MR);
+                        let apr = &ar[ir * kc * MR..][..kc * MR];
+                        let api = &ai[ir * kc * MR..][..kc * MR];
+                        let mut acc_re = [[0f32; NR]; MR];
+                        let mut acc_im = [[0f32; NR]; MR];
+                        microkernel(kc, apr, api, bpr, bpi, &mut acc_re,
+                                    &mut acc_im);
+                        writeback(&acc_re, &acc_im, c, m0 + ir * MR,
+                                  mr_eff, n0 + jr * NR, nr_eff, n, first);
+                        ir += 1;
+                    }
+                    jr += 1;
+                }
+                m0 += mc;
+            }
+            n0 += nc;
+        }
+        p0 += kc;
+    }
+}
+
+/// Batched per-bin complex GEMM over `bins` frequency bins in bin-major
+/// slabs: `a` is `bins × a_len`, `b` is `bins × b_len`, `c` (overwritten)
+/// is `bins × c_len`, with the per-bin shapes of [`BinShape::of`].
+/// Threads over contiguous bin ranges; packing panels come from `ws` so
+/// the steady state allocates nothing.
+#[allow(clippy::too_many_arguments)]
+pub fn batched(pass: Pass, bins: usize, s: usize, f: usize, fo: usize,
+               a: &[C32], b: &[C32], c: &mut [C32], ws: &mut Workspace) {
+    let sh = BinShape::of(pass, s, f, fo);
+    assert_eq!(a.len(), bins * sh.a_len, "A slab length");
+    assert_eq!(b.len(), bins * sh.b_len, "B slab length");
+    assert_eq!(c.len(), bins * sh.c_len, "C slab length");
+    if bins == 0 {
+        return;
+    }
+    let kc_max = sh.k.min(KC);
+    let a_sz = round_up(sh.m.min(MC), MR) * kc_max;
+    let b_sz = round_up(sh.n.min(NC), NR) * kc_max;
+    let per_thread = 2 * (a_sz + b_sz);
+    let macs = bins * sh.m * sh.n * sh.k;
+    let nthreads = if macs < PARALLEL_MACS {
+        1
+    } else {
+        threads().min(bins)
+    };
+    let mut pack = ws.pool.take_raw("cgemm.pack", nthreads * per_thread);
+    thread::scope(|scope| {
+        let mut c_rem: &mut [C32] = c;
+        let mut p_rem: &mut [f32] = &mut pack;
+        for (start, len) in chunk_ranges(bins, nthreads) {
+            let (c_head, c_tail) = c_rem.split_at_mut(len * sh.c_len);
+            c_rem = c_tail;
+            let (p_head, p_tail) = p_rem.split_at_mut(per_thread);
+            p_rem = p_tail;
+            let worker = move || {
+                let (ar, rest) = p_head.split_at_mut(a_sz);
+                let (ai, rest) = rest.split_at_mut(a_sz);
+                let (br, bi) = rest.split_at_mut(b_sz);
+                for (qi, cq) in c_head.chunks_mut(sh.c_len).enumerate() {
+                    let q = start + qi;
+                    bin_gemm(&sh, &a[q * sh.a_len..][..sh.a_len],
+                             &b[q * sh.b_len..][..sh.b_len], cq, ar, ai,
+                             br, bi);
+                }
+            };
+            if nthreads == 1 {
+                // below the fan-out threshold: run on the caller's thread
+                let mut run_now = worker;
+                run_now();
+            } else {
+                scope.spawn(worker);
+            }
+        }
+    });
+    ws.pool.put("cgemm.pack", pack);
+}
+
+/// The pre-blocking reference: the naive scalar `C32` triple loop the
+/// engine replaced, kept verbatim as the conformance baseline for the
+/// microkernel tests and the `BENCH_fftconv.json` speedup denominator.
+#[allow(clippy::too_many_arguments)]
+pub fn batched_naive(pass: Pass, bins: usize, s: usize, f: usize,
+                     fo: usize, a: &[C32], b: &[C32], c: &mut [C32]) {
+    let sh = BinShape::of(pass, s, f, fo);
+    assert_eq!(a.len(), bins * sh.a_len, "A slab length");
+    assert_eq!(b.len(), bins * sh.b_len, "B slab length");
+    assert_eq!(c.len(), bins * sh.c_len, "C slab length");
+    c.fill(C32::ZERO);
+    for q in 0..bins {
+        let aq = &a[q * sh.a_len..][..sh.a_len];
+        let bq = &b[q * sh.b_len..][..sh.b_len];
+        let cq = &mut c[q * sh.c_len..][..sh.c_len];
+        for mi in 0..sh.m {
+            for kk in 0..sh.k {
+                let mut av = aq[mi * sh.a_mstride + kk * sh.a_kstride];
+                if sh.conj_a {
+                    av = av.conj();
+                }
+                let crow = &mut cq[mi * sh.n..][..sh.n];
+                for (ni, cv) in crow.iter_mut().enumerate() {
+                    let mut bv =
+                        bq[ni * sh.b_nstride + kk * sh.b_kstride];
+                    if sh.conj_b {
+                        bv = bv.conj();
+                    }
+                    *cv = cv.mul_add(av, bv);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn cvec(rng: &mut Rng, len: usize) -> Vec<C32> {
+        (0..len).map(|_| C32::new(rng.normal(), rng.normal())).collect()
+    }
+
+    fn check(pass: Pass, bins: usize, s: usize, f: usize, fo: usize,
+             seed: u64) {
+        let sh = BinShape::of(pass, s, f, fo);
+        let mut rng = Rng::new(seed);
+        let a = cvec(&mut rng, bins * sh.a_len);
+        let b = cvec(&mut rng, bins * sh.b_len);
+        let mut got = vec![C32::ZERO; bins * sh.c_len];
+        let mut want = vec![C32::ZERO; bins * sh.c_len];
+        let mut ws = Workspace::new();
+        batched(pass, bins, s, f, fo, &a, &b, &mut got, &mut ws);
+        batched_naive(pass, bins, s, f, fo, &a, &b, &mut want);
+        // naive accumulates with fused mul_add, the microkernel with
+        // separate mul/add — both within O(√k·eps) of exact, so the gate
+        // scales with reduction depth (index/conjugation bugs are O(1))
+        let tol = 1e-3 * (sh.k as f32).sqrt().max(1.0);
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!((*g - *w).abs() < tol,
+                    "{pass:?} bins={bins} s={s} f={f} fo={fo} \
+                     elem {i}: {g:?} vs {w:?}");
+        }
+    }
+
+    #[test]
+    fn all_passes_match_naive_on_table2_shape() {
+        for pass in Pass::ALL {
+            check(pass, 5, 16, 16, 16, 0x11);
+        }
+    }
+
+    #[test]
+    fn ragged_sizes_not_multiples_of_blocks() {
+        // S, f, f' straddle MR (4) and NR (8) boundaries in every way
+        for pass in Pass::ALL {
+            check(pass, 3, 3, 5, 7, 0x22);
+            check(pass, 2, 5, 9, 17, 0x23);
+            check(pass, 1, 7, 33, 12, 0x24);
+        }
+    }
+
+    #[test]
+    fn degenerate_one_by_one_features() {
+        for pass in Pass::ALL {
+            check(pass, 4, 1, 1, 1, 0x33);
+            check(pass, 1, 1, 1, 1, 0x34);
+        }
+    }
+
+    #[test]
+    fn reduction_deeper_than_kc_blocks() {
+        // accGrad reduces over S: push it past KC to hit the k-block
+        // accumulate path; bprop reduces over f'
+        check(Pass::AccGrad, 2, KC + 44, 4, 3, 0x44);
+        check(Pass::Bprop, 2, 3, 4, KC + 7, 0x45);
+    }
+
+    #[test]
+    fn big_enough_to_thread_matches_naive() {
+        // clear PARALLEL_MACS so the scoped-thread path runs
+        check(Pass::Fprop, 96, 8, 24, 8, 0x55);
+    }
+
+    #[test]
+    fn conjugation_patterns_are_the_papers() {
+        // one bin, tiny dims, independent hand-rolled formulas
+        let (s, f, fo) = (2usize, 3usize, 2usize);
+        let mut rng = Rng::new(0x66);
+        let x = cvec(&mut rng, s * f);
+        let w = cvec(&mut rng, fo * f);
+        let go = cvec(&mut rng, s * fo);
+        let mut ws = Workspace::new();
+
+        let mut out = vec![C32::ZERO; s * fo];
+        batched(Pass::Fprop, 1, s, f, fo, &x, &w, &mut out, &mut ws);
+        for si in 0..s {
+            for j in 0..fo {
+                let mut want = C32::ZERO;
+                for i in 0..f {
+                    want += x[si * f + i] * w[j * f + i].conj();
+                }
+                assert!((out[si * fo + j] - want).abs() < 1e-4);
+            }
+        }
+
+        let mut gx = vec![C32::ZERO; s * f];
+        batched(Pass::Bprop, 1, s, f, fo, &go, &w, &mut gx, &mut ws);
+        for si in 0..s {
+            for i in 0..f {
+                let mut want = C32::ZERO;
+                for j in 0..fo {
+                    want += go[si * fo + j] * w[j * f + i];
+                }
+                assert!((gx[si * f + i] - want).abs() < 1e-4);
+            }
+        }
+
+        let mut gw = vec![C32::ZERO; fo * f];
+        batched(Pass::AccGrad, 1, s, f, fo, &go, &x, &mut gw, &mut ws);
+        for j in 0..fo {
+            for i in 0..f {
+                let mut want = C32::ZERO;
+                for si in 0..s {
+                    want += go[si * fo + j].conj() * x[si * f + i];
+                }
+                assert!((gw[j * f + i] - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn steady_state_takes_nothing_from_the_heap() {
+        let (bins, s, f, fo) = (6usize, 4usize, 8usize, 8usize);
+        let sh = BinShape::of(Pass::Fprop, s, f, fo);
+        let mut rng = Rng::new(0x77);
+        let a = cvec(&mut rng, bins * sh.a_len);
+        let b = cvec(&mut rng, bins * sh.b_len);
+        let mut c = vec![C32::ZERO; bins * sh.c_len];
+        let mut ws = Workspace::new();
+        batched(Pass::Fprop, bins, s, f, fo, &a, &b, &mut c, &mut ws);
+        let allocs = ws.pool.allocations;
+        let exps = ws.pool.expansions;
+        for _ in 0..3 {
+            batched(Pass::Fprop, bins, s, f, fo, &a, &b, &mut c, &mut ws);
+        }
+        assert_eq!(ws.pool.allocations, allocs);
+        assert_eq!(ws.pool.expansions, exps);
+        assert!(ws.pool.reuses >= 3);
+    }
+}

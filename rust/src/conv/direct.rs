@@ -5,27 +5,15 @@
 
 use std::thread;
 
+use crate::util::chunk_ranges as chunks;
+
 use super::problem::ConvProblem;
 
-/// Threads used by the host engines (bounded; the benches prefer stable
-/// numbers over max throughput).
+/// Threads used by the host engines — delegates to the process-wide
+/// [`crate::util::threads`] helper so the `FBFFT_THREADS` override steers
+/// every engine uniformly.
 pub fn threads() -> usize {
-    thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(16)
-}
-
-/// Split `n` items into per-thread (start, len) chunks.
-fn chunks(n: usize, parts: usize) -> Vec<(usize, usize)> {
-    let parts = parts.min(n.max(1));
-    let base = n / parts;
-    let extra = n % parts;
-    let mut out = Vec::with_capacity(parts);
-    let mut start = 0;
-    for i in 0..parts {
-        let len = base + usize::from(i < extra);
-        out.push((start, len));
-        start += len;
-    }
-    out
+    crate::util::threads()
 }
 
 /// fprop: `y[s,j] = Σ_i x[s,i] ⋆ w[j,i]` (valid cross-correlation).

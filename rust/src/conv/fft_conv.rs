@@ -18,16 +18,26 @@
 //!   layout (fused transpose) and clipped on the way out (fused clip), so
 //!   the three TRANS stages identically vanish.
 //!
-//! All three passes share the bin-major CGEMM with the conjugation
-//! pattern of §2 (fprop: conj W; bprop: none; accGrad: conj Go, reduce S).
+//! All three passes run the blocked multithreaded bin-major CGEMM of
+//! [`super::cgemm`] with the conjugation pattern of §2 (fprop: conj W;
+//! bprop: none; accGrad: conj Go, reduce S). Per-plane transforms,
+//! transposes and CGEMM all fan out over [`crate::util::threads`], and
+//! every intermediate tensor comes from the caller's [`Workspace`] pool —
+//! the `*_into` entry points allocate nothing in steady state (the
+//! `fprop`/`bprop`/`accgrad` wrappers keep the old allocating signature
+//! for the tuner, the §6 tiled engine and the tests).
 
+use std::thread;
 use std::time::{Duration, Instant};
 
+use crate::coordinator::Pass;
 use crate::fft::fbfft_host;
-use crate::fft::fft2d::{irfft2, rfft2};
+use crate::fft::fft2d::{self, irfft2_into, rfft2_into};
 use crate::fft::real::rfft_len;
 use crate::fft::C32;
+use crate::util::{chunk_ranges, threads};
 
+use super::cgemm::{self, Workspace};
 use super::problem::ConvProblem;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -68,12 +78,81 @@ impl StageTimings {
     }
 }
 
-/// Frequency tensor in **bin-major** layout: `bins × rows`, one small
-/// matrix slab per frequency bin (`rows` = S·f etc.). `bins = nf·n`.
-struct FreqTensor {
-    data: Vec<C32>,
-    bins: usize,
-    rows: usize,
+/// Threads for a per-plane stage (pad / FFT / IFFT / transpose): stay on
+/// the caller's thread when the stage is small — the §6 tiled engine and
+/// the autotuner's tiny candidates issue thousands of these calls.
+fn plane_workers(count: usize, n: usize) -> usize {
+    if count * n * n < 1 << 14 {
+        1
+    } else {
+        threads().min(count)
+    }
+}
+
+/// Transpose tile edge: a 32×32 `C32` tile (8 KB in + 8 KB out) keeps
+/// both the gather and scatter sides L1-resident.
+const TRANS_TILE: usize = 32;
+
+/// Tile-blocked transposed copy of the `c0..c0+cn` source-column range:
+/// `dst_chunk[(c-c0)·rows + r] = src[r·cols + c]`. Writes are contiguous
+/// per destination row; the tiling keeps the strided reads in cache.
+fn transpose_chunk(src: &[C32], rows: usize, cols: usize, c0: usize,
+                   cn: usize, dst_chunk: &mut [C32]) {
+    let mut ct = c0;
+    while ct < c0 + cn {
+        let ce = (ct + TRANS_TILE).min(c0 + cn);
+        let mut rt = 0;
+        while rt < rows {
+            let re = (rt + TRANS_TILE).min(rows);
+            for c in ct..ce {
+                let drow = &mut dst_chunk[(c - c0) * rows..][..rows];
+                for r in rt..re {
+                    drow[r] = src[r * cols + c];
+                }
+            }
+            rt = re;
+        }
+        ct = ce;
+    }
+}
+
+/// `dst = srcᵀ` for a `rows × cols` row-major `src` — both Table-1 Cgeam
+/// transposes (BDHW→HWBD and back) are instances of this. Tile-blocked
+/// and threaded over destination-row chunks.
+fn transpose(src: &[C32], rows: usize, cols: usize, dst: &mut [C32]) {
+    assert_eq!(src.len(), rows * cols);
+    assert_eq!(dst.len(), rows * cols);
+    let nw = if rows * cols < 1 << 14 { 1 } else { threads().min(cols) };
+    if nw <= 1 {
+        transpose_chunk(src, rows, cols, 0, cols, dst);
+        return;
+    }
+    thread::scope(|scope| {
+        let mut rem: &mut [C32] = dst;
+        for (c0, cn) in chunk_ranges(cols, nw) {
+            let (head, tail) = rem.split_at_mut(cn * rows);
+            rem = tail;
+            scope.spawn(move || {
+                transpose_chunk(src, rows, cols, c0, cn, head)
+            });
+        }
+    });
+}
+
+/// Copy `h_in × w_in` planes into the top-left corner of zeroed `n × n`
+/// planes — the §5.1 duplicate padded tensor the vendor path must
+/// materialize. `dst` covers `src.len() / (h_in·w_in)` planes, pre-zeroed.
+fn pad_planes(src: &[f32], h_in: usize, w_in: usize, n: usize,
+              dst: &mut [f32]) {
+    let count = src.len() / (h_in * w_in);
+    debug_assert_eq!(dst.len(), count * n * n);
+    for b in 0..count {
+        for r in 0..h_in {
+            let d = (b * n + r) * n;
+            let s = (b * h_in + r) * w_in;
+            dst[d..d + w_in].copy_from_slice(&src[s..s + w_in]);
+        }
+    }
 }
 
 pub struct FftConvEngine {
@@ -101,104 +180,245 @@ impl FftConvEngine {
 
     // ---- forward transforms -------------------------------------------
 
-    /// Transform `count` planes of `h_in × w_in` into bin-major frequency
-    /// layout. Vendor mode pays the explicit pad + transpose; fbfft mode
-    /// emits bin-major directly.
+    /// Transform `count` planes of `h_in × w_in` into a bin-major
+    /// frequency slab (`bins × count`) checked out of `ws` under `role`
+    /// (the caller puts it back after the CGEMM consumes it). Vendor mode
+    /// pays the explicit pad + transpose; fbfft emits bin-major directly.
+    #[allow(clippy::too_many_arguments)]
     fn forward(&self, planes: &[f32], h_in: usize, w_in: usize,
-               count: usize, fft_t: &mut Duration, trans_t: &mut Duration)
-               -> FreqTensor {
+               count: usize, role: &str, ws: &mut Workspace,
+               fft_t: &mut Duration, trans_t: &mut Duration) -> Vec<C32> {
         let n = self.n_fft;
         let nf = rfft_len(n);
         let bins = self.bins();
+        let mut data = ws.pool.take_c32_raw(role, bins * count);
+        let nw = plane_workers(count, n);
         match self.mode {
             FftMode::Fbfft => {
                 let t0 = Instant::now();
                 let plan = fbfft_host::cached(n);
-                let mut data = vec![C32::ZERO; bins * count];
-                plan.rfft2_batch_transposed(planes, h_in, w_in, count,
-                                            &mut data);
+                let mut rows_all =
+                    ws.pool.take_c32_raw("fbfft.rows", count * n * nf);
+                if nw <= 1 {
+                    plan.rfft2_rows(planes, h_in, w_in, count,
+                                    &mut rows_all);
+                    plan.rfft2_cols_transposed(&rows_all, count, 0, nf,
+                                               &mut data);
+                } else {
+                    // pass 1: row transforms, image chunks
+                    let in_stride = h_in * w_in;
+                    thread::scope(|scope| {
+                        let mut rem: &mut [C32] = &mut rows_all;
+                        for (start, len) in chunk_ranges(count, nw) {
+                            let (head, tail) =
+                                rem.split_at_mut(len * n * nf);
+                            rem = tail;
+                            let src = &planes[start * in_stride
+                                ..(start + len) * in_stride];
+                            let plan = &plan;
+                            scope.spawn(move || {
+                                plan.rfft2_rows(src, h_in, w_in, len, head)
+                            });
+                        }
+                    });
+                    // pass 2: column transforms, kw chunks (contiguous
+                    // in the fused-transposed output)
+                    let nw2 = threads().min(nf);
+                    thread::scope(|scope| {
+                        let mut rem: &mut [C32] = &mut data;
+                        let rows_all = &rows_all;
+                        for (kw0, kwn) in chunk_ranges(nf, nw2) {
+                            let (head, tail) =
+                                rem.split_at_mut(kwn * n * count);
+                            rem = tail;
+                            let plan = &plan;
+                            scope.spawn(move || {
+                                plan.rfft2_cols_transposed(
+                                    rows_all, count, kw0, kwn, head)
+                            });
+                        }
+                    });
+                }
+                ws.pool.put_c32("fbfft.rows", rows_all);
                 *fft_t += t0.elapsed();
                 // fused transpose: TRANS stage does not exist
-                FreqTensor { data, bins, rows: count }
             }
             FftMode::Vendor => {
                 let t0 = Instant::now();
                 // the duplicate padded tensor cuFFT forces (§5.1)
-                let mut padded = vec![0f32; count * n * n];
-                for b in 0..count {
-                    for r in 0..h_in {
-                        let dst = (b * n + r) * n;
-                        let src = (b * h_in + r) * w_in;
-                        padded[dst..dst + w_in]
-                            .copy_from_slice(&planes[src..src + w_in]);
+                let mut padded = ws.pool.take("vendor.pad", count * n * n);
+                let in_stride = h_in * w_in;
+                if nw <= 1 {
+                    pad_planes(planes, h_in, w_in, n, &mut padded);
+                } else {
+                    thread::scope(|scope| {
+                        let mut rem: &mut [f32] = &mut padded;
+                        for (start, len) in chunk_ranges(count, nw) {
+                            let (head, tail) = rem.split_at_mut(len * n * n);
+                            rem = tail;
+                            let src = &planes[start * in_stride
+                                ..(start + len) * in_stride];
+                            scope.spawn(move || {
+                                pad_planes(src, h_in, w_in, n, head)
+                            });
+                        }
+                    });
+                }
+                // plane-major transforms (BDHW frequency layout), one
+                // planner scratch region per worker
+                let mut pm = ws.pool.take_c32_raw("vendor.pm", count * bins);
+                let sl = fft2d::scratch_len(n);
+                let mut scratch =
+                    ws.pool.take_c32_raw("vendor.fft_scratch", nw * sl);
+                if nw <= 1 {
+                    let sc = &mut scratch[..sl];
+                    for b in 0..count {
+                        rfft2_into(&padded[b * n * n..(b + 1) * n * n],
+                                   n, n, n,
+                                   &mut pm[b * bins..(b + 1) * bins], sc);
                     }
+                } else {
+                    thread::scope(|scope| {
+                        let mut pm_rem: &mut [C32] = &mut pm;
+                        let mut sc_rem: &mut [C32] = &mut scratch;
+                        let padded: &[f32] = &padded;
+                        for (start, len) in chunk_ranges(count, nw) {
+                            let (pm_head, pm_tail) =
+                                pm_rem.split_at_mut(len * bins);
+                            pm_rem = pm_tail;
+                            let (sc_head, sc_tail) =
+                                sc_rem.split_at_mut(sl);
+                            sc_rem = sc_tail;
+                            scope.spawn(move || {
+                                for bi in 0..len {
+                                    let b = start + bi;
+                                    rfft2_into(
+                                        &padded[b * n * n..(b + 1) * n * n],
+                                        n, n, n,
+                                        &mut pm_head[bi * bins
+                                            ..(bi + 1) * bins],
+                                        sc_head);
+                                }
+                            });
+                        }
+                    });
                 }
-                // plane-major transforms (BDHW frequency layout)
-                let mut plane_major = vec![C32::ZERO; count * bins];
-                for b in 0..count {
-                    let f = rfft2(&padded[b * n * n..(b + 1) * n * n],
-                                  n, n, n);
-                    plane_major[b * bins..(b + 1) * bins]
-                        .copy_from_slice(&f);
-                }
+                ws.pool.put("vendor.pad", padded);
+                ws.pool.put_c32("vendor.fft_scratch", scratch);
                 *fft_t += t0.elapsed();
-                // explicit BDHW -> HWBD transposition (the Cgeam step)
+                // explicit BDHW → HWBD transposition (the Cgeam step)
                 let t1 = Instant::now();
-                let mut data = vec![C32::ZERO; bins * count];
-                for b in 0..count {
-                    let src = &plane_major[b * bins..(b + 1) * bins];
-                    for q in 0..bins {
-                        data[q * count + b] = src[q];
-                    }
-                }
+                transpose(&pm, count, bins, &mut data);
                 *trans_t += t1.elapsed();
-                let _ = nf;
-                FreqTensor { data, bins, rows: count }
+                ws.pool.put_c32("vendor.pm", pm);
             }
         }
+        data
     }
 
-    /// Inverse-transform a bin-major frequency tensor of `count` planes,
-    /// clipping each to `clip_h × clip_w`.
-    fn inverse(&self, freq: &FreqTensor, clip_h: usize, clip_w: usize,
-               trans_t: &mut Duration, ifft_t: &mut Duration) -> Vec<f32> {
+    /// Inverse-transform a bin-major frequency slab of `count` planes,
+    /// clipping each to `clip_h × clip_w`, into `out`.
+    #[allow(clippy::too_many_arguments)]
+    fn inverse(&self, freq: &[C32], count: usize, clip_h: usize,
+               clip_w: usize, out: &mut [f32], ws: &mut Workspace,
+               trans_t: &mut Duration, ifft_t: &mut Duration) {
         let n = self.n_fft;
         let nf = rfft_len(n);
-        let count = freq.rows;
+        let bins = self.bins();
+        assert_eq!(freq.len(), bins * count);
+        assert_eq!(out.len(), count * clip_h * clip_w);
+        let nw = plane_workers(count, n);
+        let clip = clip_h * clip_w;
         match self.mode {
             FftMode::Fbfft => {
                 let t0 = Instant::now();
                 let plan = fbfft_host::cached(n);
-                let mut out = vec![0f32; count * clip_h * clip_w];
-                plan.irfft2_batch_transposed(&freq.data, count, clip_h,
-                                             clip_w, &mut out);
+                let mut rows =
+                    ws.pool.take_c32_raw("fbfft.irows", nw * n * nf);
+                if nw <= 1 {
+                    let rs = &mut rows[..n * nf];
+                    for b in 0..count {
+                        plan.irfft2_one_transposed(
+                            freq, count, b, clip_h, clip_w, rs,
+                            &mut out[b * clip..(b + 1) * clip]);
+                    }
+                } else {
+                    thread::scope(|scope| {
+                        let mut o_rem: &mut [f32] = out;
+                        let mut r_rem: &mut [C32] = &mut rows;
+                        for (start, len) in chunk_ranges(count, nw) {
+                            let (o_head, o_tail) =
+                                o_rem.split_at_mut(len * clip);
+                            o_rem = o_tail;
+                            let (r_head, r_tail) =
+                                r_rem.split_at_mut(n * nf);
+                            r_rem = r_tail;
+                            let plan = &plan;
+                            scope.spawn(move || {
+                                for bi in 0..len {
+                                    plan.irfft2_one_transposed(
+                                        freq, count, start + bi, clip_h,
+                                        clip_w, &mut r_head[..],
+                                        &mut o_head[bi * clip
+                                            ..(bi + 1) * clip]);
+                                }
+                            });
+                        }
+                    });
+                }
+                ws.pool.put_c32("fbfft.irows", rows);
                 *ifft_t += t0.elapsed();
-                out
             }
             FftMode::Vendor => {
-                // explicit HWBD -> BDHW transposition first
+                // explicit HWBD → BDHW transposition first (tile-blocked,
+                // writes contiguous per plane row)
                 let t0 = Instant::now();
-                let mut plane_major = vec![C32::ZERO; count * freq.bins];
-                for q in 0..freq.bins {
-                    for b in 0..count {
-                        plane_major[b * freq.bins + q] =
-                            freq.data[q * count + b];
-                    }
-                }
+                let mut pm = ws.pool.take_c32_raw("vendor.ipm", count * bins);
+                transpose(freq, bins, count, &mut pm);
                 *trans_t += t0.elapsed();
                 let t1 = Instant::now();
-                let mut out = vec![0f32; count * clip_h * clip_w];
-                for b in 0..count {
-                    // vendor bins are (kh, kw) row-major — exactly the
-                    // layout irfft2 consumes (rfft2 produced them)
-                    let src = &plane_major[b * freq.bins..(b + 1) * freq.bins];
-                    let img = irfft2(src, n, clip_h, clip_w);
-                    out[b * clip_h * clip_w..(b + 1) * clip_h * clip_w]
-                        .copy_from_slice(&img);
+                let sl = fft2d::scratch_len(n);
+                let mut scratch =
+                    ws.pool.take_c32_raw("vendor.fft_scratch", nw * sl);
+                if nw <= 1 {
+                    let sc = &mut scratch[..sl];
+                    for b in 0..count {
+                        // vendor bins are (kh, kw) row-major — exactly
+                        // the layout irfft2 consumes (rfft2 made them)
+                        irfft2_into(&pm[b * bins..(b + 1) * bins], n,
+                                    clip_h, clip_w,
+                                    &mut out[b * clip..(b + 1) * clip],
+                                    sc);
+                    }
+                } else {
+                    thread::scope(|scope| {
+                        let mut o_rem: &mut [f32] = out;
+                        let mut sc_rem: &mut [C32] = &mut scratch;
+                        let pm: &[C32] = &pm;
+                        for (start, len) in chunk_ranges(count, nw) {
+                            let (o_head, o_tail) =
+                                o_rem.split_at_mut(len * clip);
+                            o_rem = o_tail;
+                            let (sc_head, sc_tail) =
+                                sc_rem.split_at_mut(sl);
+                            sc_rem = sc_tail;
+                            scope.spawn(move || {
+                                for bi in 0..len {
+                                    let b = start + bi;
+                                    irfft2_into(
+                                        &pm[b * bins..(b + 1) * bins],
+                                        n, clip_h, clip_w,
+                                        &mut o_head[bi * clip
+                                            ..(bi + 1) * clip],
+                                        sc_head);
+                                }
+                            });
+                        }
+                    });
                 }
                 *ifft_t += t1.elapsed();
-                let _ = nf;
-                out
+                ws.pool.put_c32("vendor.ipm", pm);
+                ws.pool.put_c32("vendor.fft_scratch", scratch);
             }
         }
     }
@@ -206,112 +426,114 @@ impl FftConvEngine {
     // ---- the three passes ----------------------------------------------
 
     /// fprop: `Out_q = In_q · conj(W_q)ᵀ` per bin, clip to (yh, yw).
-    pub fn fprop(&self, p: &ConvProblem, x: &[f32], wei: &[f32])
-                 -> (Vec<f32>, StageTimings) {
+    /// Steady-state zero-allocation entry point; `out` must be
+    /// `p.output_len()` long.
+    pub fn fprop_into(&self, p: &ConvProblem, x: &[f32], wei: &[f32],
+                      out: &mut [f32], ws: &mut Workspace)
+                      -> StageTimings {
         assert_eq!(p.stride, 1, "strided FFT conv out of scope (paper §2)");
+        assert_eq!(x.len(), p.input_len());
+        assert_eq!(wei.len(), p.weight_len());
+        assert_eq!(out.len(), p.output_len());
         let mut t = StageTimings::default();
-        let xf = self.forward(x, p.h, p.w, p.s * p.f,
+        let xf = self.forward(x, p.h, p.w, p.s * p.f, "freq.a", ws,
                               &mut t.fft_a, &mut t.trans_a);
-        let wf = self.forward(wei, p.kh, p.kw, p.fo * p.f,
+        let wf = self.forward(wei, p.kh, p.kw, p.fo * p.f, "freq.b", ws,
                               &mut t.fft_b, &mut t.trans_b);
+        let bins = self.bins();
         let t0 = Instant::now();
-        let mut of = FreqTensor {
-            data: vec![C32::ZERO; self.bins() * p.s * p.fo],
-            bins: self.bins(),
-            rows: p.s * p.fo,
-        };
-        for q in 0..self.bins() {
-            let inq = &xf.data[q * xf.rows..][..xf.rows];       // S×f
-            let wq = &wf.data[q * wf.rows..][..wf.rows];        // fo×f
-            let oq = &mut of.data[q * p.s * p.fo..][..p.s * p.fo];
-            for s in 0..p.s {
-                let xrow = &inq[s * p.f..][..p.f];
-                for j in 0..p.fo {
-                    let wrow = &wq[j * p.f..][..p.f];
-                    let mut acc = C32::ZERO;
-                    for i in 0..p.f {
-                        acc = acc.mul_add(xrow[i], wrow[i].conj());
-                    }
-                    oq[s * p.fo + j] = acc;
-                }
-            }
-        }
+        let mut of = ws.pool.take_c32_raw("freq.c", bins * p.s * p.fo);
+        cgemm::batched(Pass::Fprop, bins, p.s, p.f, p.fo, &xf, &wf,
+                       &mut of, ws);
         t.cgemm += t0.elapsed();
-        let out = self.inverse(&of, p.yh(), p.yw(),
-                               &mut t.trans_c, &mut t.ifft_c);
-        (out, t)
+        ws.pool.put_c32("freq.a", xf);
+        ws.pool.put_c32("freq.b", wf);
+        self.inverse(&of, p.s * p.fo, p.yh(), p.yw(), out, ws,
+                     &mut t.trans_c, &mut t.ifft_c);
+        ws.pool.put_c32("freq.c", of);
+        t
     }
 
     /// bprop: `Gx_q = Go_q · W_q` per bin (no conjugation), clip (h, w).
-    pub fn bprop(&self, p: &ConvProblem, go: &[f32], wei: &[f32])
-                 -> (Vec<f32>, StageTimings) {
+    pub fn bprop_into(&self, p: &ConvProblem, go: &[f32], wei: &[f32],
+                      out: &mut [f32], ws: &mut Workspace)
+                      -> StageTimings {
         assert_eq!(p.stride, 1, "strided FFT conv out of scope (paper §2)");
+        assert_eq!(go.len(), p.output_len());
+        assert_eq!(wei.len(), p.weight_len());
+        assert_eq!(out.len(), p.input_len());
         let mut t = StageTimings::default();
-        let gof = self.forward(go, p.yh(), p.yw(), p.s * p.fo,
-                               &mut t.fft_a, &mut t.trans_a);
-        let wf = self.forward(wei, p.kh, p.kw, p.fo * p.f,
+        let gof = self.forward(go, p.yh(), p.yw(), p.s * p.fo, "freq.a",
+                               ws, &mut t.fft_a, &mut t.trans_a);
+        let wf = self.forward(wei, p.kh, p.kw, p.fo * p.f, "freq.b", ws,
                               &mut t.fft_b, &mut t.trans_b);
+        let bins = self.bins();
         let t0 = Instant::now();
-        let mut gxf = FreqTensor {
-            data: vec![C32::ZERO; self.bins() * p.s * p.f],
-            bins: self.bins(),
-            rows: p.s * p.f,
-        };
-        for q in 0..self.bins() {
-            let gq = &gof.data[q * gof.rows..][..gof.rows];     // S×fo
-            let wq = &wf.data[q * wf.rows..][..wf.rows];        // fo×f
-            let oq = &mut gxf.data[q * p.s * p.f..][..p.s * p.f];
-            for s in 0..p.s {
-                let grow = &gq[s * p.fo..][..p.fo];
-                let orow = &mut oq[s * p.f..][..p.f];
-                for (j, g) in grow.iter().enumerate() {
-                    let wrow = &wq[j * p.f..][..p.f];
-                    for i in 0..p.f {
-                        orow[i] = orow[i].mul_add(*g, wrow[i]);
-                    }
-                }
-            }
-        }
+        let mut gxf = ws.pool.take_c32_raw("freq.c", bins * p.s * p.f);
+        cgemm::batched(Pass::Bprop, bins, p.s, p.f, p.fo, &gof, &wf,
+                       &mut gxf, ws);
         t.cgemm += t0.elapsed();
-        let out = self.inverse(&gxf, p.h, p.w, &mut t.trans_c, &mut t.ifft_c);
-        (out, t)
+        ws.pool.put_c32("freq.a", gof);
+        ws.pool.put_c32("freq.b", wf);
+        self.inverse(&gxf, p.s * p.f, p.h, p.w, out, ws, &mut t.trans_c,
+                     &mut t.ifft_c);
+        ws.pool.put_c32("freq.c", gxf);
+        t
     }
 
     /// accGrad: `Gw_q = conj(Go_q)ᵀ · X_q` per bin (minibatch reduced),
     /// clip (kh, kw).
+    pub fn accgrad_into(&self, p: &ConvProblem, go: &[f32], x: &[f32],
+                        out: &mut [f32], ws: &mut Workspace)
+                        -> StageTimings {
+        assert_eq!(p.stride, 1, "strided FFT conv out of scope (paper §2)");
+        assert_eq!(go.len(), p.output_len());
+        assert_eq!(x.len(), p.input_len());
+        assert_eq!(out.len(), p.weight_len());
+        let mut t = StageTimings::default();
+        let gof = self.forward(go, p.yh(), p.yw(), p.s * p.fo, "freq.a",
+                               ws, &mut t.fft_a, &mut t.trans_a);
+        let xf = self.forward(x, p.h, p.w, p.s * p.f, "freq.b", ws,
+                              &mut t.fft_b, &mut t.trans_b);
+        let bins = self.bins();
+        let t0 = Instant::now();
+        let mut gwf = ws.pool.take_c32_raw("freq.c", bins * p.fo * p.f);
+        cgemm::batched(Pass::AccGrad, bins, p.s, p.f, p.fo, &gof, &xf,
+                       &mut gwf, ws);
+        t.cgemm += t0.elapsed();
+        ws.pool.put_c32("freq.a", gof);
+        ws.pool.put_c32("freq.b", xf);
+        self.inverse(&gwf, p.fo * p.f, p.kh, p.kw, out, ws,
+                     &mut t.trans_c, &mut t.ifft_c);
+        ws.pool.put_c32("freq.c", gwf);
+        t
+    }
+
+    /// [`FftConvEngine::fprop_into`] with a one-shot workspace and owned
+    /// output (the tuner / tiled / test-matrix convenience signature).
+    pub fn fprop(&self, p: &ConvProblem, x: &[f32], wei: &[f32])
+                 -> (Vec<f32>, StageTimings) {
+        let mut ws = Workspace::new();
+        let mut out = vec![0f32; p.output_len()];
+        let t = self.fprop_into(p, x, wei, &mut out, &mut ws);
+        (out, t)
+    }
+
+    /// [`FftConvEngine::bprop_into`] with a one-shot workspace.
+    pub fn bprop(&self, p: &ConvProblem, go: &[f32], wei: &[f32])
+                 -> (Vec<f32>, StageTimings) {
+        let mut ws = Workspace::new();
+        let mut out = vec![0f32; p.input_len()];
+        let t = self.bprop_into(p, go, wei, &mut out, &mut ws);
+        (out, t)
+    }
+
+    /// [`FftConvEngine::accgrad_into`] with a one-shot workspace.
     pub fn accgrad(&self, p: &ConvProblem, go: &[f32], x: &[f32])
                    -> (Vec<f32>, StageTimings) {
-        assert_eq!(p.stride, 1, "strided FFT conv out of scope (paper §2)");
-        let mut t = StageTimings::default();
-        let gof = self.forward(go, p.yh(), p.yw(), p.s * p.fo,
-                               &mut t.fft_a, &mut t.trans_a);
-        let xf = self.forward(x, p.h, p.w, p.s * p.f,
-                              &mut t.fft_b, &mut t.trans_b);
-        let t0 = Instant::now();
-        let mut gwf = FreqTensor {
-            data: vec![C32::ZERO; self.bins() * p.fo * p.f],
-            bins: self.bins(),
-            rows: p.fo * p.f,
-        };
-        for q in 0..self.bins() {
-            let gq = &gof.data[q * gof.rows..][..gof.rows];     // S×fo
-            let xq = &xf.data[q * xf.rows..][..xf.rows];        // S×f
-            let oq = &mut gwf.data[q * p.fo * p.f..][..p.fo * p.f];
-            for s in 0..p.s {
-                let grow = &gq[s * p.fo..][..p.fo];
-                let xrow = &xq[s * p.f..][..p.f];
-                for (j, g) in grow.iter().enumerate() {
-                    let gc = g.conj();
-                    let orow = &mut oq[j * p.f..][..p.f];
-                    for i in 0..p.f {
-                        orow[i] = orow[i].mul_add(gc, xrow[i]);
-                    }
-                }
-            }
-        }
-        t.cgemm += t0.elapsed();
-        let out = self.inverse(&gwf, p.kh, p.kw,
-                               &mut t.trans_c, &mut t.ifft_c);
+        let mut ws = Workspace::new();
+        let mut out = vec![0f32; p.weight_len()];
+        let t = self.accgrad_into(p, go, x, &mut out, &mut ws);
         (out, t)
     }
 }
@@ -319,7 +541,6 @@ impl FftConvEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::Pass;
     use crate::testkit::{assert_close, assert_close_oracle, oracle,
                          tolerance};
     use crate::util::Rng;
@@ -420,5 +641,57 @@ mod tests {
     #[should_panic(expected = "power of two")]
     fn fbfft_rejects_non_pow2_basis() {
         FftConvEngine::new(FftMode::Fbfft, 12);
+    }
+
+    #[test]
+    fn reused_workspace_reproduces_fresh_results_bitwise() {
+        // dirty pooled buffers must never leak into a later pass — run
+        // all three passes twice through one workspace and compare with
+        // fresh-workspace runs
+        let p = ConvProblem::square(2, 3, 2, 12, 3);
+        let mut rng = Rng::new(25);
+        let x = rng.normal_vec(p.input_len());
+        let wei = rng.normal_vec(p.weight_len());
+        let go = rng.normal_vec(p.output_len());
+        for mode in [FftMode::Fbfft, FftMode::Vendor] {
+            let eng = FftConvEngine::new(mode, 16);
+            let mut ws = Workspace::new();
+            let mut y = vec![0f32; p.output_len()];
+            let mut gx = vec![0f32; p.input_len()];
+            let mut gw = vec![0f32; p.weight_len()];
+            for round in 0..2 {
+                eng.fprop_into(&p, &x, &wei, &mut y, &mut ws);
+                eng.bprop_into(&p, &go, &wei, &mut gx, &mut ws);
+                eng.accgrad_into(&p, &go, &x, &mut gw, &mut ws);
+                let (fy, _) = eng.fprop(&p, &x, &wei);
+                let (fgx, _) = eng.bprop(&p, &go, &wei);
+                let (fgw, _) = eng.accgrad(&p, &go, &x);
+                assert_eq!(y, fy, "{mode:?} fprop round {round}");
+                assert_eq!(gx, fgx, "{mode:?} bprop round {round}");
+                assert_eq!(gw, fgw, "{mode:?} accgrad round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_round_trips_ragged_sizes() {
+        // both Cgeam transposes share this kernel; exercise tile edges
+        let mut rng = Rng::new(26);
+        for (rows, cols) in [(1usize, 1usize), (3, 70), (33, 33),
+                             (64, 31), (130, 5)] {
+            let src: Vec<C32> = (0..rows * cols)
+                .map(|_| C32::new(rng.normal(), rng.normal()))
+                .collect();
+            let mut t = vec![C32::ZERO; rows * cols];
+            transpose(&src, rows, cols, &mut t);
+            for r in 0..rows {
+                for c in 0..cols {
+                    assert_eq!(t[c * rows + r], src[r * cols + c]);
+                }
+            }
+            let mut back = vec![C32::ZERO; rows * cols];
+            transpose(&t, cols, rows, &mut back);
+            assert_eq!(back, src);
+        }
     }
 }

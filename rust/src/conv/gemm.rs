@@ -8,8 +8,7 @@
 use std::thread;
 
 use crate::fft::C32;
-
-use super::direct::threads;
+use crate::util::threads;
 
 /// Row-major `C[m×n] += A[m×k] · B[k×n]` (or `C = A·B` if `accumulate` is
 /// false), blocked for L1/L2 residency.
@@ -65,9 +64,10 @@ pub fn sgemm(m: usize, k: usize, n: usize, a: &[f32], b: &[f32],
 }
 
 /// Row-major complex GEMM `C = A·op(B)` where `op` optionally conjugates
-/// B's elements and/or uses Bᵀ. This is the frequency-domain Cgemm of
-/// Table 1 — the three passes differ only in the conjugation flags and
-/// which operand is transposed (paper §2).
+/// B's elements and/or uses Bᵀ. Scalar reference only — the hot
+/// frequency-domain Cgemm of Table 1 lives in [`super::cgemm`], which
+/// packs to planar re/im panels, blocks for cache and threads over bins;
+/// this one stays as the simple single-matrix utility.
 pub fn cgemm(m: usize, k: usize, n: usize, a: &[C32], conj_a: bool,
              b: &[C32], conj_b: bool, trans_b: bool, c: &mut [C32],
              accumulate: bool) {

@@ -13,9 +13,15 @@
 //!   per-stage timing for the Table-5 breakdown;
 //! * [`tiled`]   — the §6 decomposition running `Fbfft` on small tiles.
 //!
+//! The frequency pipeline's hot stage lives in [`cgemm`]: a blocked,
+//! multithreaded per-bin complex GEMM on planar re/im panels, with the
+//! zero-allocation [`Workspace`] arena the passes thread through
+//! `forward`/CGEMM/`inverse`.
+//!
 //! All engines implement all three training passes and cross-check
 //! against each other in `rust/tests/`.
 
+pub mod cgemm;
 pub mod direct;
 pub mod fft_conv;
 pub mod gemm;
@@ -23,5 +29,6 @@ pub mod im2col;
 pub mod problem;
 pub mod tiled;
 
+pub use cgemm::Workspace;
 pub use fft_conv::{FftConvEngine, FftMode, StageTimings};
 pub use problem::ConvProblem;

@@ -2,17 +2,34 @@
 //! of tensor involved … automatically expanded as required and reused as
 //! much as possible', tailored for bulk-synchronous layer execution.
 //!
-//! A [`BufferPool`] hands out role-keyed `f32` buffers. A role is e.g.
-//! `"input"`, `"weight"`, `"freq_a"` — one live buffer per role, grown
+//! A [`BufferPool`] hands out role-keyed buffers. A role is e.g.
+//! `"input"`, `"weight"`, `"freq.a"` — one live buffer per role, grown
 //! monotonically to the high-water mark, never shrunk (matching the
 //! paper's behaviour and its memory-pressure trade-off discussion in §6).
+//!
+//! Two access styles:
+//!
+//! * [`BufferPool::get`] — borrow in place. Simple, but the borrow pins
+//!   the whole pool, so only one role can be live at a time.
+//! * [`BufferPool::take`] / [`BufferPool::put`] (and the `_c32` pair) —
+//!   check a buffer *out* of the pool and back *in*. The frequency
+//!   pipeline holds several live tensors at once (two operand spectra,
+//!   the product, FFT scratch, CGEMM packing panels), so its `Workspace`
+//!   is built on this style. Capacity survives the round trip; after
+//!   warmup a checkout is never an allocation (the `take` flavors
+//!   zero-fill, the `take_raw` flavors hand back stale contents for
+//!   roles the consumer fully overwrites — no memset on the hot path)
+//!   — the `allocations` / `expansions` counters prove it in tests.
 
 use std::collections::HashMap;
 
-/// Role-keyed reusable buffer arena.
+use crate::fft::C32;
+
+/// Role-keyed reusable buffer arena (`f32` and `C32` planes).
 #[derive(Debug, Default)]
 pub struct BufferPool {
     bufs: HashMap<String, Vec<f32>>,
+    bufs_c32: HashMap<String, Vec<C32>>,
     /// counters for the reuse-vs-allocation report
     pub allocations: usize,
     pub expansions: usize,
@@ -50,20 +67,102 @@ impl BufferPool {
         }
     }
 
-    /// Capacity currently held for `role` (0 if never requested).
+    /// Check an `f32` buffer out of the pool: `len` elements, all zero.
+    /// Capacity from previous rounds is reused; return it with
+    /// [`BufferPool::put`] so the next checkout stays allocation-free.
+    pub fn take(&mut self, role: &str, len: usize) -> Vec<f32> {
+        let mut buf = self.take_raw(role, len);
+        buf.fill(0.0);
+        buf
+    }
+
+    /// [`BufferPool::take`] without the zero-fill: contents are
+    /// *unspecified* (stale data from the role's previous round). For
+    /// roles every consumer fully overwrites — the frequency slabs, the
+    /// transpose targets, FFT scratch, CGEMM packing panels — skipping
+    /// the memset keeps multi-MB zeroing out of the timed hot stages.
+    /// Only growth beyond the old length is zeroed (safe-Rust floor).
+    pub fn take_raw(&mut self, role: &str, len: usize) -> Vec<f32> {
+        match self.bufs.remove(role) {
+            Some(mut buf) => {
+                if buf.capacity() < len {
+                    self.expansions += 1;
+                } else {
+                    self.reuses += 1;
+                }
+                if buf.len() > len {
+                    buf.truncate(len);
+                } else {
+                    buf.resize(len, 0.0);
+                }
+                buf
+            }
+            None => {
+                self.allocations += 1;
+                vec![0.0; len]
+            }
+        }
+    }
+
+    /// Check an `f32` buffer back in under `role`, keeping its capacity.
+    pub fn put(&mut self, role: &str, buf: Vec<f32>) {
+        self.bufs.insert(role.to_string(), buf);
+    }
+
+    /// [`BufferPool::take`] for the complex (frequency-domain) arena.
+    pub fn take_c32(&mut self, role: &str, len: usize) -> Vec<C32> {
+        let mut buf = self.take_c32_raw(role, len);
+        buf.fill(C32::ZERO);
+        buf
+    }
+
+    /// [`BufferPool::take_raw`] for the complex arena: unspecified
+    /// (stale) contents, no memset on the steady-state path.
+    pub fn take_c32_raw(&mut self, role: &str, len: usize) -> Vec<C32> {
+        match self.bufs_c32.remove(role) {
+            Some(mut buf) => {
+                if buf.capacity() < len {
+                    self.expansions += 1;
+                } else {
+                    self.reuses += 1;
+                }
+                if buf.len() > len {
+                    buf.truncate(len);
+                } else {
+                    buf.resize(len, C32::ZERO);
+                }
+                buf
+            }
+            None => {
+                self.allocations += 1;
+                vec![C32::ZERO; len]
+            }
+        }
+    }
+
+    /// [`BufferPool::put`] for the complex arena.
+    pub fn put_c32(&mut self, role: &str, buf: Vec<C32>) {
+        self.bufs_c32.insert(role.to_string(), buf);
+    }
+
+    /// Capacity currently held for an `f32` role (0 if never requested or
+    /// currently checked out).
     pub fn capacity(&self, role: &str) -> usize {
         self.bufs.get(role).map(Vec::len).unwrap_or(0)
     }
 
-    /// Total f32 elements held — the memory-pressure figure the paper
-    /// trades against FFT-reuse opportunities (§6).
+    /// Total pool-resident elements (`f32` count; a `C32` counts as two)
+    /// — the memory-pressure figure the paper trades against FFT-reuse
+    /// opportunities (§6). Checked-out buffers are not counted until
+    /// they are put back.
     pub fn total_elems(&self) -> usize {
-        self.bufs.values().map(Vec::len).sum()
+        self.bufs.values().map(Vec::len).sum::<usize>()
+            + 2 * self.bufs_c32.values().map(Vec::len).sum::<usize>()
     }
 
     /// Number of distinct roles (the 'types of tensor involved').
     pub fn roles(&self) -> usize {
-        self.bufs.len()
+        self.bufs.len() + self.bufs_c32.len()
     }
 }
 
@@ -109,6 +208,86 @@ mod tests {
         p.get("b", 32);
         assert_eq!(p.roles(), 2);
         assert_eq!(p.total_elems(), 48);
+        assert_eq!(p.allocations, 2);
+    }
+
+    #[test]
+    fn take_put_round_trip_is_allocation_free() {
+        let mut p = BufferPool::new();
+        let b = p.take("scratch", 64);
+        assert_eq!(b.len(), 64);
+        p.put("scratch", b);
+        assert_eq!(p.allocations, 1);
+        // steady state: same role, same (or smaller) size → pure reuse
+        for len in [64usize, 32, 64] {
+            let b = p.take("scratch", len);
+            assert!(b.iter().all(|v| *v == 0.0));
+            p.put("scratch", b);
+        }
+        assert_eq!(p.allocations, 1);
+        assert_eq!(p.expansions, 0);
+        assert_eq!(p.reuses, 3);
+    }
+
+    #[test]
+    fn take_zeroes_previous_contents() {
+        let mut p = BufferPool::new();
+        let mut b = p.take("x", 4);
+        b.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        p.put("x", b);
+        let b = p.take("x", 4);
+        assert_eq!(&b[..], &[0.0; 4]);
+    }
+
+    #[test]
+    fn take_raw_reuses_without_memset_but_zeroes_growth() {
+        let mut p = BufferPool::new();
+        let mut b = p.take_raw("hot", 4);
+        b.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        p.put("hot", b);
+        // same size: stale contents visible, no allocation
+        let b = p.take_raw("hot", 4);
+        assert_eq!(&b[..], &[1.0, 2.0, 3.0, 4.0]);
+        p.put("hot", b);
+        // shrink then regrow: the regrown tail is zeroed (safe floor)
+        let b = p.take_raw("hot", 2);
+        assert_eq!(&b[..], &[1.0, 2.0]);
+        p.put("hot", b);
+        let b = p.take_raw("hot", 4);
+        assert_eq!(b.len(), 4);
+        assert_eq!(&b[2..], &[0.0, 0.0]);
+        p.put("hot", b);
+        assert_eq!(p.allocations, 1);
+        assert_eq!(p.expansions, 0);
+        assert_eq!(p.reuses, 3);
+        // the zeroing variant scrubs the same capacity
+        let b = p.take("hot", 4);
+        assert_eq!(&b[..], &[0.0; 4]);
+    }
+
+    #[test]
+    fn c32_arena_counts_and_reuses() {
+        let mut p = BufferPool::new();
+        let b = p.take_c32("freq", 8);
+        assert_eq!(b.len(), 8);
+        assert!(b.iter().all(|c| *c == C32::ZERO));
+        p.put_c32("freq", b);
+        let b = p.take_c32("freq", 8);
+        p.put_c32("freq", b);
+        assert_eq!(p.allocations, 1);
+        assert_eq!(p.reuses, 1);
+        assert_eq!(p.total_elems(), 16);
+        assert_eq!(p.roles(), 1);
+    }
+
+    #[test]
+    fn f32_and_c32_roles_do_not_collide() {
+        let mut p = BufferPool::new();
+        let a = p.take("shared-name", 4);
+        let b = p.take_c32("shared-name", 4);
+        p.put("shared-name", a);
+        p.put_c32("shared-name", b);
+        assert_eq!(p.roles(), 2);
         assert_eq!(p.allocations, 2);
     }
 }

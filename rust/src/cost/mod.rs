@@ -84,6 +84,30 @@ pub fn pipeline_cost(p: &ConvProblem, n: usize, vendor: bool) -> PipelineCost {
     }
 }
 
+/// Bytes the bin-major CGEMM stage moves under the `conv::cgemm`
+/// blocking (fprop shape `m=S, k=f, n=f'`; the passes are symmetric up
+/// to operand roles): per bin, the A panels are re-read once per NC
+/// column block, B is packed once, and C is written once per KC depth
+/// block (read+write beyond the first), at 8 B per `C32`.
+pub fn cgemm_bytes(p: &ConvProblem, n: usize) -> f64 {
+    use crate::conv::cgemm::{KC, NC};
+    let nf = (n / 2 + 1) as f64;
+    let bins = nf * n as f64;
+    let (m, k, cols) = (p.s as f64, p.f as f64, p.fo as f64);
+    let n_blocks = (cols / NC as f64).ceil().max(1.0);
+    let k_blocks = (k / KC as f64).ceil().max(1.0);
+    bins * 8.0 * (m * k * n_blocks + k * cols + 2.0 * m * cols * k_blocks)
+}
+
+/// Arithmetic intensity (FLOP/byte) of the blocked CGEMM stage — the
+/// quantity the roofline term in `model::CufftConvModel` turns into a
+/// compute- vs bandwidth-bound verdict. Grows with the reduction depth
+/// `f` (deeper reductions amortize the panel traffic), which is exactly
+/// why Table 5's CGEMM efficiency climbs with plane count.
+pub fn cgemm_intensity(p: &ConvProblem, n: usize) -> f64 {
+    pipeline_cost(p, n, false).cgemm / cgemm_bytes(p, n)
+}
+
 /// The paper's TRED/s metric in units of 10¹² reductions per second.
 pub fn tred_per_sec(p: &ConvProblem, seconds: f64) -> f64 {
     p.reductions() as f64 / seconds / 1e12
@@ -130,6 +154,18 @@ mod tests {
         let b = pipeline_cost(&ConvProblem::square(16, 16, 16, 32, 13), 32,
                               false);
         assert_eq!(a.flops(), b.flops());
+    }
+
+    #[test]
+    fn cgemm_intensity_grows_with_reduction_depth() {
+        // deeper reductions amortize panel traffic (§4's efficiency
+        // climb with plane count)
+        let a = cgemm_intensity(&ConvProblem::square(16, 4, 16, 32, 5), 32);
+        let b = cgemm_intensity(&ConvProblem::square(16, 64, 16, 32, 5), 32);
+        assert!(b > a, "I(f=64)={b} should beat I(f=4)={a}");
+        // and both are a handful of FLOP/byte — the stage sits near the
+        // roofline ridge, which is why blocking matters at all
+        assert!(a > 0.1 && b < 1e3);
     }
 
     #[test]

@@ -11,7 +11,7 @@
 
 use crate::conv::ConvProblem;
 
-use super::{direct_flops, pipeline_cost};
+use super::{cgemm_bytes, direct_flops, pipeline_cost};
 
 /// NVIDIA Tesla K40m (the paper's testbed).
 #[derive(Clone, Copy, Debug)]
@@ -143,10 +143,16 @@ impl CufftConvModel {
         let fft_a = self.fft_bytes(t_in, n, p.h, p.w) / bw;
         let fft_b = self.fft_bytes(t_wei, n, p.kh, p.kw) / bw;
         let ifft = self.fft_bytes(t_out, n, n, n) / bw;
-        // CGEMM efficiency saturates with the reduction plane count
+        // CGEMM: roofline on the blocked engine's arithmetic intensity —
+        // compute-bound once the reduction plane count saturates the
+        // efficiency term, bandwidth-bound in the skinny-f regime where
+        // the panels barely get re-used (cost::cgemm_intensity)
         let geff = self.gemm_eff * (p.f as f64 / (p.f as f64 + 16.0))
             .max(0.05);
-        let gemm = c.cgemm / (self.hw.peak_flops * geff);
+        let gemm_compute = c.cgemm / (self.hw.peak_flops * geff);
+        let gemm_memory =
+            cgemm_bytes(p, n) / (self.hw.mem_bw * self.trans_mem_eff);
+        let gemm = gemm_compute.max(gemm_memory);
         let trans = c.trans_bytes / (self.hw.mem_bw * self.trans_mem_eff);
         fft_a + fft_b + ifft + gemm + trans + c.launches * self.hw.launch
     }

@@ -194,10 +194,98 @@ impl FbfftPlan {
         }
     }
 
+    /// One image's row pass: R2C along rows with §5.2 pair packing and
+    /// implicit padding, into a row-spectrum plane `rows[..n·nf]`
+    /// (row-major `n × nf`; rows `h_in..n` are zero).
+    fn rfft_rows_one(&self, img: &[f32], h_in: usize, w_in: usize,
+                     rows: &mut [C32], buf: &mut [C32; MAX_N]) {
+        let n = self.n;
+        let nf = rfft_len(n);
+        rows[..n * nf].fill(C32::ZERO);
+        let mut r = 0;
+        while r < h_in {
+            let paired = r + 1 < h_in;
+            let ra = &img[r * w_in..(r + 1) * w_in];
+            if paired {
+                let rb = &img[(r + 1) * w_in..(r + 2) * w_in];
+                for j in 0..w_in {
+                    buf[j] = C32::new(ra[j], rb[j]);
+                }
+            } else {
+                for j in 0..w_in {
+                    buf[j] = C32::new(ra[j], 0.0);
+                }
+            }
+            buf[w_in..n].fill(C32::ZERO);
+            self.cfft_in_place(&mut buf[..n], false);
+            for k in 0..nf {
+                let zk = buf[k];
+                let zc = buf[(n - k) % n].conj();
+                rows[r * nf + k] = (zk + zc).scale(0.5);
+                if paired {
+                    rows[(r + 1) * nf + k] =
+                        ((zk - zc).scale(0.5)).mul_i().scale(-1.0);
+                }
+            }
+            r += 2;
+        }
+    }
+
+    /// Pass 1 of the fused 2-D transform for a contiguous image range:
+    /// `input` is `count × h_in × w_in`, `rows_out` receives `count`
+    /// row-spectrum planes of `n × nf` each. The convolution pipeline
+    /// threads this over image chunks (each chunk's output is
+    /// contiguous), then runs [`FbfftPlan::rfft2_cols_transposed`] over
+    /// kw ranges — together they equal [`FbfftPlan::rfft2_batch_transposed`].
+    pub fn rfft2_rows(&self, input: &[f32], h_in: usize, w_in: usize,
+                      count: usize, rows_out: &mut [C32]) {
+        let n = self.n;
+        let nf = rfft_len(n);
+        assert!(h_in <= n && w_in <= n, "image exceeds basis");
+        assert_eq!(input.len(), count * h_in * w_in);
+        assert_eq!(rows_out.len(), count * n * nf);
+        let mut buf = [C32::ZERO; MAX_N];
+        for b in 0..count {
+            self.rfft_rows_one(
+                &input[b * h_in * w_in..(b + 1) * h_in * w_in], h_in,
+                w_in, &mut rows_out[b * n * nf..(b + 1) * n * nf],
+                &mut buf);
+        }
+    }
+
+    /// Pass 2: column C2C over `kw ∈ [kw0, kw0+kwn)` for the whole
+    /// batch, consuming [`FbfftPlan::rfft2_rows`] planes (`batch × n × nf`)
+    /// and writing the fused-transposed chunk `kwn × n × batch` — the
+    /// `[kw][kh][b]` slice of the full output starting at bin row `kw0`.
+    /// kw chunks are contiguous in the output, so threads split it.
+    pub fn rfft2_cols_transposed(&self, rows_all: &[C32], batch: usize,
+                                 kw0: usize, kwn: usize,
+                                 out_chunk: &mut [C32]) {
+        let n = self.n;
+        let nf = rfft_len(n);
+        assert_eq!(rows_all.len(), batch * n * nf);
+        assert!(kw0 + kwn <= nf);
+        assert_eq!(out_chunk.len(), kwn * n * batch);
+        let mut col = [C32::ZERO; MAX_N];
+        for kw in kw0..kw0 + kwn {
+            for b in 0..batch {
+                for r in 0..n {
+                    col[r] = rows_all[(b * n + r) * nf + kw];
+                }
+                self.cfft_in_place(&mut col[..n], false);
+                for kh in 0..n {
+                    out_chunk[((kw - kw0) * n + kh) * batch + b] = col[kh];
+                }
+            }
+        }
+    }
+
     /// Batched 2-D R2C with implicit padding and **fused transposed
     /// output**: `input` is `batch × h_in × w_in` row-major, `out` is
     /// `(n/2+1) × n × batch` — bin `[kw][kh][b]`, the HWBD layout the
     /// frequency CGEMM consumes with zero extra transposition passes.
+    /// Serial; the pipeline uses the two phase entry points above to
+    /// spread the same computation over threads.
     pub fn rfft2_batch_transposed(&self, input: &[f32], h_in: usize,
                                   w_in: usize, batch: usize,
                                   out: &mut [C32]) {
@@ -212,36 +300,7 @@ impl FbfftPlan {
         let mut buf = [C32::ZERO; MAX_N];
         for b in 0..batch {
             let img = &input[b * h_in * w_in..(b + 1) * h_in * w_in];
-            // pass 1: R2C along rows, packing row pairs (paper §5.2); rows
-            // h_in..n are transforms of implicit zero rows => zero.
-            rows.fill(C32::ZERO);
-            let mut r = 0;
-            while r < h_in {
-                let paired = r + 1 < h_in;
-                let ra = &img[r * w_in..(r + 1) * w_in];
-                if paired {
-                    let rb = &img[(r + 1) * w_in..(r + 2) * w_in];
-                    for j in 0..w_in {
-                        buf[j] = C32::new(ra[j], rb[j]);
-                    }
-                } else {
-                    for j in 0..w_in {
-                        buf[j] = C32::new(ra[j], 0.0);
-                    }
-                }
-                buf[w_in..n].fill(C32::ZERO);
-                self.cfft_in_place(&mut buf[..n], false);
-                for k in 0..nf {
-                    let zk = buf[k];
-                    let zc = buf[(n - k) % n].conj();
-                    rows[r * nf + k] = (zk + zc).scale(0.5);
-                    if paired {
-                        rows[(r + 1) * nf + k] =
-                            ((zk - zc).scale(0.5)).mul_i().scale(-1.0);
-                    }
-                }
-                r += 2;
-            }
+            self.rfft_rows_one(img, h_in, w_in, &mut rows, &mut buf);
             // pass 2: full C2C along columns; store transposed [kw][kh][b]
             for kw in 0..nf {
                 for (r, c) in col[..n].iter_mut().enumerate() {
@@ -251,6 +310,51 @@ impl FbfftPlan {
                 for kh in 0..n {
                     out[(kw * n + kh) * batch + b] = col[kh];
                 }
+            }
+        }
+    }
+
+    /// Inverse of one image `b` out of the fused-transposed spectrum
+    /// (`nf × n × batch`), normalized and clipped to `clip_h × clip_w`.
+    /// `rows` is caller scratch of at least `n·nf` (dirty contents fine —
+    /// every cell read is written first). The pipeline threads this over
+    /// image chunks with per-thread scratch.
+    #[allow(clippy::too_many_arguments)]
+    pub fn irfft2_one_transposed(&self, spec: &[C32], batch: usize,
+                                 b: usize, clip_h: usize, clip_w: usize,
+                                 rows: &mut [C32], out: &mut [f32]) {
+        let n = self.n;
+        let nf = rfft_len(n);
+        assert_eq!(spec.len(), nf * n * batch);
+        assert!(b < batch);
+        assert!(clip_h <= n && clip_w <= n);
+        assert_eq!(out.len(), clip_h * clip_w);
+        assert!(rows.len() >= n * nf, "rows scratch too small");
+        let scale = 1.0 / (n * n) as f32;
+        let mut col = [C32::ZERO; MAX_N];
+        let mut buf = [C32::ZERO; MAX_N];
+        // pass 1: inverse along kh for each kw bin (input is already
+        // kw-major: a contiguous-ish walk, no pre-transpose needed)
+        for kw in 0..nf {
+            for kh in 0..n {
+                col[kh] = spec[(kw * n + kh) * batch + b];
+            }
+            self.cfft_in_place(&mut col[..n], true);
+            for r in 0..clip_h {
+                rows[r * nf + kw] = col[r];
+            }
+        }
+        // pass 2: C2R along rows for the clipped rows only
+        for r in 0..clip_h {
+            for k in 0..nf {
+                buf[k] = rows[r * nf + k];
+            }
+            for k in nf..n {
+                buf[k] = rows[r * nf + (n - k)].conj();
+            }
+            self.cfft_in_place(&mut buf[..n], true);
+            for c in 0..clip_w {
+                out[r * clip_w + c] = buf[c].re * scale;
             }
         }
     }
@@ -266,36 +370,11 @@ impl FbfftPlan {
         assert_eq!(spec.len(), nf * n * batch);
         assert!(clip_h <= n && clip_w <= n);
         assert_eq!(out.len(), batch * clip_h * clip_w);
-        let scale = 1.0 / (n * n) as f32;
         let mut rows = vec![C32::ZERO; n * nf];
-        let mut col = [C32::ZERO; MAX_N];
-        let mut buf = [C32::ZERO; MAX_N];
         for b in 0..batch {
-            // pass 1: inverse along kh for each kw bin (input is already
-            // kw-major: a contiguous-ish walk, no pre-transpose needed)
-            for kw in 0..nf {
-                for kh in 0..n {
-                    col[kh] = spec[(kw * n + kh) * batch + b];
-                }
-                self.cfft_in_place(&mut col[..n], true);
-                for r in 0..clip_h {
-                    rows[r * nf + kw] = col[r];
-                }
-            }
-            // pass 2: C2R along rows for the clipped rows only
-            let img = &mut out[b * clip_h * clip_w..(b + 1) * clip_h * clip_w];
-            for r in 0..clip_h {
-                for k in 0..nf {
-                    buf[k] = rows[r * nf + k];
-                }
-                for k in nf..n {
-                    buf[k] = rows[r * nf + (n - k)].conj();
-                }
-                self.cfft_in_place(&mut buf[..n], true);
-                for c in 0..clip_w {
-                    img[r * clip_w + c] = buf[c].re * scale;
-                }
-            }
+            self.irfft2_one_transposed(
+                spec, batch, b, clip_h, clip_w, &mut rows,
+                &mut out[b * clip_h * clip_w..(b + 1) * clip_h * clip_w]);
         }
     }
 
@@ -435,6 +514,50 @@ mod tests {
         plan.irfft2_batch_transposed(&spec, batch, h, w, &mut back);
         for (g, o) in back.iter().zip(&x) {
             assert!((g - o).abs() < 2e-3);
+        }
+    }
+
+    #[test]
+    fn phase_split_equals_fused_batch() {
+        // the threaded pipeline runs rows-then-columns in two phases and
+        // kw chunks; it must reproduce the fused serial batch bitwise
+        let (n, h, w, batch) = (16usize, 11usize, 9usize, 5usize);
+        let x = rand_real(batch * h * w, 12);
+        let plan = FbfftPlan::new(n);
+        let nf = n / 2 + 1;
+        let mut want = vec![C32::ZERO; nf * n * batch];
+        plan.rfft2_batch_transposed(&x, h, w, batch, &mut want);
+        let mut rows_all = vec![C32::ZERO; batch * n * nf];
+        plan.rfft2_rows(&x, h, w, batch, &mut rows_all);
+        let mut got = vec![C32::ZERO; nf * n * batch];
+        let split = nf / 2;
+        {
+            let (lo, hi) = got.split_at_mut(split * n * batch);
+            plan.rfft2_cols_transposed(&rows_all, batch, 0, split, lo);
+            plan.rfft2_cols_transposed(&rows_all, batch, split,
+                                       nf - split, hi);
+        }
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(*g, *w);
+        }
+    }
+
+    #[test]
+    fn one_image_inverse_with_dirty_scratch() {
+        let (n, h, w, batch) = (16usize, 12usize, 10usize, 3usize);
+        let x = rand_real(batch * h * w, 13);
+        let plan = FbfftPlan::new(n);
+        let nf = n / 2 + 1;
+        let mut spec = vec![C32::ZERO; nf * n * batch];
+        plan.rfft2_batch_transposed(&x, h, w, batch, &mut spec);
+        let mut rows = vec![C32::new(3.0, -9.0); n * nf]; // stale junk
+        for b in 0..batch {
+            let mut img = vec![0f32; h * w];
+            plan.irfft2_one_transposed(&spec, batch, b, h, w, &mut rows,
+                                       &mut img);
+            for (g, o) in img.iter().zip(&x[b * h * w..(b + 1) * h * w]) {
+                assert!((g - o).abs() < 2e-3);
+            }
         }
     }
 

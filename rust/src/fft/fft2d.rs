@@ -2,69 +2,102 @@
 //! — including the explicit transposition passes a black-box library
 //! forces (paper Table 1 / Table 5's `TRANS.` columns). The fbfft host
 //! engine elides these; this module deliberately does not.
+//!
+//! The `_into` variants take the output and a caller-owned scratch slice
+//! (size from [`scratch_len`]) so the convolution pipeline can run one
+//! transform per plane across threads without per-plane buffer churn;
+//! allocations *inside* the planner (`plan.transform` returns owned
+//! spectra, mirroring a vendor library's internal workspace) remain its
+//! own business, exactly as cuFFT's do.
 
 use super::complex::C32;
 use super::plan::{cached, Direction};
 use super::real::{irfft, rfft, rfft_len};
 
+/// `C32` scratch elements the `_into` transforms need for basis `n`:
+/// one `n × (n/2+1)` row-spectrum plane plus one length-`n` column.
+pub fn scratch_len(n: usize) -> usize {
+    n * rfft_len(n) + n
+}
+
 /// Forward 2-D R2C of a row-major `h_in × w_in` image zero-padded onto an
 /// `n × n` basis. Output row-major `n × (n/2+1)`: bin `[kh][kw]`.
 pub fn rfft2(img: &[f32], h_in: usize, w_in: usize, n: usize) -> Vec<C32> {
+    let mut out = vec![C32::ZERO; n * rfft_len(n)];
+    let mut scratch = vec![C32::ZERO; scratch_len(n)];
+    rfft2_into(img, h_in, w_in, n, &mut out, &mut scratch);
+    out
+}
+
+/// [`rfft2`] into a caller-owned output, using caller-owned scratch of at
+/// least [`scratch_len`]`(n)` elements.
+pub fn rfft2_into(img: &[f32], h_in: usize, w_in: usize, n: usize,
+                  out: &mut [C32], scratch: &mut [C32]) {
     assert_eq!(img.len(), h_in * w_in);
     assert!(h_in <= n && w_in <= n, "image exceeds basis");
     let nf = rfft_len(n);
-    // vendor-style: materialize the zero-padded row before transforming
-    let mut rows = vec![C32::ZERO; n * nf];
-    let mut padded = vec![0f32; n];
+    assert_eq!(out.len(), n * nf);
+    assert!(scratch.len() >= scratch_len(n), "scratch too small");
+    let (rows, col) = scratch.split_at_mut(n * nf);
+    let col = &mut col[..n];
+    // row pass: R2C per image row (rfft zero-pads w_in..n implicitly);
+    // rows h_in..n are transforms of zero rows — cleared explicitly.
     for r in 0..h_in {
-        padded[..w_in].copy_from_slice(&img[r * w_in..(r + 1) * w_in]);
-        let f = rfft(&padded, n);
+        let f = rfft(&img[r * w_in..(r + 1) * w_in], n);
         rows[r * nf..(r + 1) * nf].copy_from_slice(&f);
     }
-    // rows h_in..n are transforms of zero rows — already zero.
+    rows[h_in * nf..].fill(C32::ZERO);
     // columns: full complex FFT per kw bin (explicit gather = the
     // transpose a black-box 1-D API imposes)
     let plan = cached(n);
-    let mut out = vec![C32::ZERO; n * nf];
-    let mut col = vec![C32::ZERO; n];
     for kw in 0..nf {
         for r in 0..n {
             col[r] = rows[r * nf + kw];
         }
-        let f = plan.transform(&col, Direction::Forward);
+        let f = plan.transform(col, Direction::Forward);
         for kh in 0..n {
             out[kh * nf + kw] = f[kh];
         }
     }
-    out
 }
 
 /// Inverse 2-D C2R of an `n × (n/2+1)` half-spectrum, clipped to
 /// `clip_h × clip_w` (row-major output).
 pub fn irfft2(spec: &[C32], n: usize, clip_h: usize, clip_w: usize) -> Vec<f32> {
+    let mut out = vec![0f32; clip_h * clip_w];
+    let mut scratch = vec![C32::ZERO; scratch_len(n)];
+    irfft2_into(spec, n, clip_h, clip_w, &mut out, &mut scratch);
+    out
+}
+
+/// [`irfft2`] into a caller-owned output, using caller-owned scratch of
+/// at least [`scratch_len`]`(n)` elements.
+pub fn irfft2_into(spec: &[C32], n: usize, clip_h: usize, clip_w: usize,
+                   out: &mut [f32], scratch: &mut [C32]) {
     let nf = rfft_len(n);
     assert_eq!(spec.len(), n * nf);
     assert!(clip_h <= n && clip_w <= n);
-    // columns first (inverse of the forward order), normalized by n here
+    assert_eq!(out.len(), clip_h * clip_w);
+    assert!(scratch.len() >= scratch_len(n), "scratch too small");
+    let (mid, col) = scratch.split_at_mut(n * nf);
+    let col = &mut col[..n];
+    // columns first (inverse of the forward order), normalized by n here;
+    // only the rows surviving the clip are materialized
     let plan = cached(n);
-    let mut mid = vec![C32::ZERO; n * nf];
-    let mut col = vec![C32::ZERO; n];
     for kw in 0..nf {
         for kh in 0..n {
             col[kh] = spec[kh * nf + kw];
         }
-        let t = plan.inverse_normalized(&col);
-        for r in 0..n {
+        let t = plan.inverse_normalized(col);
+        for r in 0..clip_h {
             mid[r * nf + kw] = t[r];
         }
     }
     // rows: C2R per row, then clip
-    let mut out = vec![0f32; clip_h * clip_w];
     for r in 0..clip_h {
         let row = irfft(&mid[r * nf..(r + 1) * nf], n);
         out[r * clip_w..(r + 1) * clip_w].copy_from_slice(&row[..clip_w]);
     }
-    out
 }
 
 #[cfg(test)]
@@ -135,6 +168,31 @@ mod tests {
         let back = irfft2(&f, n, h, w);
         for (b, o) in back.iter().zip(&img) {
             assert!((b - o).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn into_variants_reuse_dirty_scratch() {
+        // the pipeline hands the same scratch to every plane — stale
+        // contents from a previous transform must not leak through
+        let (h, w, n) = (6, 6, 8);
+        let a = rand_img(h, w, 5);
+        let b = rand_img(h, w, 6);
+        let nf = rfft_len(n);
+        let mut scratch = vec![C32::new(7.0, -7.0); scratch_len(n)];
+        let mut fa = vec![C32::ZERO; n * nf];
+        let mut fb = vec![C32::ZERO; n * nf];
+        rfft2_into(&a, h, w, n, &mut fa, &mut scratch);
+        rfft2_into(&b, h, w, n, &mut fb, &mut scratch);
+        let wa = rfft2(&a, h, w, n);
+        let wb = rfft2(&b, h, w, n);
+        for (g, want) in fa.iter().zip(&wa).chain(fb.iter().zip(&wb)) {
+            assert!((*g - *want).abs() < 1e-5);
+        }
+        let mut back = vec![0f32; h * w];
+        irfft2_into(&fb, n, h, w, &mut back, &mut scratch);
+        for (g, o) in back.iter().zip(&b) {
+            assert!((g - o).abs() < 1e-4);
         }
     }
 }

@@ -12,5 +12,6 @@ pub mod trainer;
 pub use cnn::table3_report;
 pub use fftbench::{fig7_report, fig8_report};
 pub use sweep::{fig16_report, sec54_report};
-pub use tables::{table4_report, table5_report, tiling_report};
+pub use tables::{breakdown_json, table4_report, table5_report,
+                 tiling_report};
 pub use trainer::{train_demo, TrainLog};

@@ -1,17 +1,21 @@
 //! Table 4 (representative layers), Table 5 (stage breakdown) and the §6
 //! tiling experiment.
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::conv::{tiled, ConvProblem, FftConvEngine, FftMode};
+use crate::conv::{cgemm, tiled, ConvProblem, FftConvEngine, FftMode,
+                  StageTimings, Workspace};
 use crate::coordinator::autotuner::candidate_bases;
+use crate::coordinator::Pass;
 use crate::cost::{tred_per_sec, CudnnModel, CufftConvModel};
+use crate::fft::real::rfft_len;
+use crate::fft::C32;
 use crate::metrics::Table;
 use crate::runtime::Runtime;
 use crate::trace;
-use crate::util::Rng;
+use crate::util::{threads, Json, Rng};
 
 use super::sweep::build_pass_args;
 
@@ -232,6 +236,126 @@ pub fn autotune_report() -> String {
     out
 }
 
+/// The fixed acceptance config the perf gate tracks across PRs
+/// (Table-2-sized: S=16, f=f'=16, 32×32 input, k=5 → basis 32).
+pub fn accept32_problem() -> ConvProblem {
+    ConvProblem::square(16, 16, 16, 32, 5)
+}
+
+/// Machine-readable per-stage pipeline breakdown, written by
+/// `cargo bench --bench breakdown` as `BENCH_fftconv.json` so the perf
+/// trajectory is tracked across PRs. Covers the scaled Table-4 layer
+/// configs plus [`accept32_problem`], both modes, all three passes; each
+/// entry also times the pre-blocking naive CGEMM on identically shaped
+/// frequency slabs, so `cgemm_speedup` (naive / blocked, same data) is
+/// the acceptance ratio. `smoke` restricts to the accept32 config with a
+/// single rep (the CI smoke run).
+pub fn breakdown_json(smoke: bool) -> Json {
+    let reps = if smoke { 1usize } else { 3 };
+    let mut configs: Vec<(String, ConvProblem)> = Vec::new();
+    if !smoke {
+        for (name, paper) in trace::table4_layers() {
+            configs.push((format!("{name}/16"), trace::scale(&paper, 16, 4)));
+        }
+    }
+    configs.push(("accept32".to_string(), accept32_problem()));
+
+    let ns = |d: Duration| Json::num(d.as_secs_f64() * 1e9);
+    let mut rng = Rng::new(0xBE9C);
+    let mut entries = Vec::new();
+    for (name, p) in &configs {
+        let x = rng.normal_vec(p.input_len());
+        let wei = rng.normal_vec(p.weight_len());
+        let go = rng.normal_vec(p.output_len());
+        let n = p.h.max(p.w).next_power_of_two();
+        let bins = rfft_len(n) * n;
+        for (mode, label) in [(FftMode::Vendor, "vendor"),
+                              (FftMode::Fbfft, "fbfft")] {
+            let eng = FftConvEngine::new(mode, n);
+            let mut ws = Workspace::new();
+            let mut yout = vec![0f32; p.output_len()];
+            let mut gxout = vec![0f32; p.input_len()];
+            let mut gwout = vec![0f32; p.weight_len()];
+            for pass in Pass::ALL {
+                // rep 0 warms the workspace; keep the fastest steady rep
+                let mut best: Option<StageTimings> = None;
+                for rep in 0..=reps {
+                    let st = match pass {
+                        Pass::Fprop => eng.fprop_into(p, &x, &wei,
+                                                      &mut yout, &mut ws),
+                        Pass::Bprop => eng.bprop_into(p, &go, &wei,
+                                                      &mut gxout, &mut ws),
+                        Pass::AccGrad => eng.accgrad_into(p, &go, &x,
+                                                          &mut gwout,
+                                                          &mut ws),
+                    };
+                    let better = best
+                        .map(|b| st.total() < b.total())
+                        .unwrap_or(true);
+                    if rep > 0 && better {
+                        best = Some(st);
+                    }
+                }
+                let st = best.expect("at least one timed rep");
+                // naive-vs-blocked CGEMM on identically shaped slabs
+                let sh = cgemm::BinShape::of(pass, p.s, p.f, p.fo);
+                let fa: Vec<C32> = (0..bins * sh.a_len)
+                    .map(|_| C32::new(rng.normal(), rng.normal()))
+                    .collect();
+                let fb: Vec<C32> = (0..bins * sh.b_len)
+                    .map(|_| C32::new(rng.normal(), rng.normal()))
+                    .collect();
+                let mut fc = vec![C32::ZERO; bins * sh.c_len];
+                // both sides discard rep 0 (first-touch pages, cold
+                // caches) so the speedup compares steady vs steady
+                let mut naive_lo = f64::INFINITY;
+                for rep in 0..=reps {
+                    let t0 = Instant::now();
+                    cgemm::batched_naive(pass, bins, p.s, p.f, p.fo, &fa,
+                                         &fb, &mut fc);
+                    if rep > 0 {
+                        naive_lo =
+                            naive_lo.min(t0.elapsed().as_secs_f64());
+                    }
+                }
+                let mut blocked_lo = f64::INFINITY;
+                for rep in 0..=reps {
+                    let t0 = Instant::now();
+                    cgemm::batched(pass, bins, p.s, p.f, p.fo, &fa, &fb,
+                                   &mut fc, &mut ws);
+                    if rep > 0 {
+                        blocked_lo =
+                            blocked_lo.min(t0.elapsed().as_secs_f64());
+                    }
+                }
+                entries.push(Json::obj(vec![
+                    ("layer", Json::str(name)),
+                    ("pass", Json::str(pass.tag())),
+                    ("mode", Json::str(label)),
+                    ("n_fft", Json::num(n as f64)),
+                    ("fft_a_ns", ns(st.fft_a)),
+                    ("trans_a_ns", ns(st.trans_a)),
+                    ("fft_b_ns", ns(st.fft_b)),
+                    ("trans_b_ns", ns(st.trans_b)),
+                    ("cgemm_ns", ns(st.cgemm)),
+                    ("trans_c_ns", ns(st.trans_c)),
+                    ("ifft_c_ns", ns(st.ifft_c)),
+                    ("total_ns", ns(st.total())),
+                    ("cgemm_naive_ns", Json::num(naive_lo * 1e9)),
+                    ("cgemm_blocked_ns", Json::num(blocked_lo * 1e9)),
+                    ("cgemm_speedup", Json::num(naive_lo / blocked_lo)),
+                ]));
+            }
+        }
+    }
+    Json::obj(vec![
+        ("version", Json::num(1.0)),
+        ("threads", Json::num(threads() as f64)),
+        ("smoke", Json::Bool(smoke)),
+        ("entries", Json::Arr(entries)),
+    ])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -242,5 +366,25 @@ mod tests {
         for l in ["L1", "L2", "L3", "L4", "L5"] {
             assert!(r.contains(l));
         }
+    }
+
+    #[test]
+    fn breakdown_json_smoke_has_all_cells() {
+        let j = breakdown_json(true);
+        let entries = j.get("entries").unwrap().as_arr().unwrap();
+        // 1 config × 2 modes × 3 passes
+        assert_eq!(entries.len(), 6);
+        for e in entries {
+            assert_eq!(e.get("layer").unwrap().as_str().unwrap(),
+                       "accept32");
+            assert!(e.get("cgemm_ns").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(e.get("cgemm_speedup").unwrap().as_f64().unwrap()
+                    > 0.0);
+            let total = e.get("total_ns").unwrap().as_f64().unwrap();
+            assert!(total > 0.0);
+        }
+        // round-trips through the in-tree parser
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.get("version").unwrap().as_usize(), Some(1));
     }
 }

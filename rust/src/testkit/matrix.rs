@@ -2,7 +2,8 @@
 //! f64 oracle (and every engine against every other), reporting a
 //! per-cell max-abs / max-ULP table gated by the `tolerance` model.
 
-use crate::conv::{direct, im2col, tiled, FftConvEngine, FftMode};
+use crate::conv::{direct, im2col, tiled, FftConvEngine, FftMode,
+                  Workspace};
 use crate::coordinator::Pass;
 use crate::metrics::Table;
 use crate::util::Rng;
@@ -190,6 +191,21 @@ pub fn run_case(case: &ConformanceCase) -> CaseReport {
     let fbfft = FftConvEngine::new(FftMode::Fbfft, case.fbfft_basis);
     let d = case.tile;
 
+    // the FFT engines run through the production `_into` entry points
+    // with ONE workspace shared across both engines and all passes, so
+    // the conformance gate also covers pooled-buffer reuse (a stale
+    // buffer leaking between passes fails the oracle cells)
+    let mut ws = Workspace::new();
+    let mut run_fft = |eng: &FftConvEngine| -> [Vec<f32>; 3] {
+        let mut y = vec![0f32; p.output_len()];
+        let mut gx = vec![0f32; p.input_len()];
+        let mut gw = vec![0f32; p.weight_len()];
+        eng.fprop_into(p, &x, &w, &mut y, &mut ws);
+        eng.bprop_into(p, &go, &w, &mut gx, &mut ws);
+        eng.accgrad_into(p, &go, &x, &mut gw, &mut ws);
+        [y, gx, gw]
+    };
+
     let outputs: Vec<(Engine, [Vec<f32>; 3])> = vec![
         (Engine::Direct,
          [direct::fprop(p, &x, &w),
@@ -199,14 +215,8 @@ pub fn run_case(case: &ConformanceCase) -> CaseReport {
          [im2col::fprop(p, &x, &w),
           im2col::bprop(p, &go, &w),
           im2col::accgrad(p, &go, &x)]),
-        (Engine::VendorFft,
-         [vendor.fprop(p, &x, &w).0,
-          vendor.bprop(p, &go, &w).0,
-          vendor.accgrad(p, &go, &x).0]),
-        (Engine::Fbfft,
-         [fbfft.fprop(p, &x, &w).0,
-          fbfft.bprop(p, &go, &w).0,
-          fbfft.accgrad(p, &go, &x).0]),
+        (Engine::VendorFft, run_fft(&vendor)),
+        (Engine::Fbfft, run_fft(&fbfft)),
         (Engine::Tiled,
          [tiled::fprop(p, &x, &w, d).0,
           tiled::bprop(p, &go, &w, d).0,

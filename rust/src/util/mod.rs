@@ -5,7 +5,9 @@
 pub mod hash;
 pub mod json;
 pub mod rng;
+pub mod threads;
 
 pub use hash::hash64;
 pub use json::Json;
 pub use rng::Rng;
+pub use threads::{chunk_ranges, threads};

@@ -1,0 +1,79 @@
+//! Unified host thread-count configuration (one knob for every engine).
+//!
+//! All multithreaded stages — the direct engine, the SGEMM substrate, the
+//! frequency-domain CGEMM and the parallel FFT/transpose loops — size
+//! their `std::thread::scope` fan-out from this single helper, so one
+//! `FBFFT_THREADS` environment override steers the whole pipeline (the
+//! benches want stable, reproducible numbers more than max throughput).
+
+use std::sync::OnceLock;
+
+/// Worker count: `FBFFT_THREADS` if set to a positive integer (clamped to
+/// 64), else `available_parallelism` clamped to 16. Resolved once per
+/// process — the engines call this on every pass, so it must stay cheap.
+pub fn threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        if let Ok(v) = std::env::var("FBFFT_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                if n >= 1 {
+                    return n.min(64);
+                }
+            }
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .min(16)
+    })
+}
+
+/// Split `n` items into at most `parts` contiguous `(start, len)` ranges,
+/// allocation-free (the per-pass hot paths must not touch the heap).
+pub fn chunk_ranges(n: usize, parts: usize)
+                    -> impl Iterator<Item = (usize, usize)> {
+    let parts = parts.min(n.max(1)).max(1);
+    let base = n / parts;
+    let extra = n % parts;
+    (0..parts).map(move |i| {
+        let len = base + usize::from(i < extra);
+        let start = i * base + i.min(extra);
+        (start, len)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_count_is_positive_and_bounded() {
+        let n = threads();
+        assert!(n >= 1 && n <= 64);
+        // cached: a second call must agree
+        assert_eq!(threads(), n);
+    }
+
+    #[test]
+    fn chunk_ranges_cover_exactly() {
+        for (n, parts) in [(10, 3), (3, 10), (16, 4), (1, 1), (7, 7),
+                           (0, 4), (100, 16)] {
+            let ranges: Vec<(usize, usize)> =
+                chunk_ranges(n, parts).collect();
+            let mut next = 0usize;
+            for (start, len) in &ranges {
+                assert_eq!(*start, next, "n={n} parts={parts}");
+                next += len;
+            }
+            assert_eq!(next, n, "n={n} parts={parts}");
+            assert!(ranges.len() <= parts.max(1));
+        }
+    }
+
+    #[test]
+    fn chunk_ranges_balanced() {
+        let lens: Vec<usize> =
+            chunk_ranges(10, 3).map(|(_, l)| l).collect();
+        assert_eq!(lens, vec![4, 3, 3]);
+    }
+}

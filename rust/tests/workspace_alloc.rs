@@ -1,0 +1,107 @@
+//! The zero-allocation pipeline gate: after one warmup round per problem
+//! shape, the `_into` passes must never take a new buffer from the heap
+//! — every checkout is a reuse of pooled capacity, proven by the
+//! `BufferPool` allocation/expansion counters staying flat while the
+//! reuse counter climbs. (Vendor-planner internals may still allocate
+//! like cuFFT's own workspace does; the pool counters gate every tensor
+//! the pipeline itself owns.)
+
+use fbfft_repro::conv::{ConvProblem, FftConvEngine, FftMode, Workspace};
+use fbfft_repro::testkit::{assert_close_oracle, oracle, tolerance};
+use fbfft_repro::coordinator::Pass;
+use fbfft_repro::util::Rng;
+
+#[allow(clippy::too_many_arguments)]
+fn run_all_passes(eng: &FftConvEngine, p: &ConvProblem, x: &[f32],
+                  wei: &[f32], go: &[f32], y: &mut [f32],
+                  gx: &mut [f32], gw: &mut [f32], ws: &mut Workspace) {
+    eng.fprop_into(p, x, wei, y, ws);
+    eng.bprop_into(p, go, wei, gx, ws);
+    eng.accgrad_into(p, go, x, gw, ws);
+}
+
+fn zero_alloc_steady_state(mode: FftMode, p: &ConvProblem, n: usize) {
+    let mut rng = Rng::new(0xA110C ^ n as u64);
+    let x = rng.normal_vec(p.input_len());
+    let wei = rng.normal_vec(p.weight_len());
+    let go = rng.normal_vec(p.output_len());
+    let mut y = vec![0f32; p.output_len()];
+    let mut gx = vec![0f32; p.input_len()];
+    let mut gw = vec![0f32; p.weight_len()];
+    let eng = FftConvEngine::new(mode, n);
+    let mut ws = Workspace::new();
+
+    // warmup: every role reaches its high-water mark across all passes
+    run_all_passes(&eng, p, &x, &wei, &go, &mut y, &mut gx, &mut gw,
+                   &mut ws);
+    let allocs = ws.pool.allocations;
+    let exps = ws.pool.expansions;
+    let reuses = ws.pool.reuses;
+    assert!(allocs > 0, "the pipeline must actually use the pool");
+
+    // steady state: counters prove no checkout touched the heap
+    for _ in 0..3 {
+        run_all_passes(&eng, p, &x, &wei, &go, &mut y, &mut gx, &mut gw,
+                       &mut ws);
+    }
+    assert_eq!(ws.pool.allocations, allocs,
+               "{mode:?}: steady-state pass allocated a new pool buffer");
+    assert_eq!(ws.pool.expansions, exps,
+               "{mode:?}: steady-state pass grew a pool buffer");
+    assert!(ws.pool.reuses > reuses,
+            "{mode:?}: steady-state passes must reuse pooled buffers");
+
+    // and the reused-buffer outputs are still the right answers
+    assert_close_oracle(&y, &oracle::fprop64(p, &x, &wei),
+                        tolerance::frequency(p, Pass::Fprop, n));
+    assert_close_oracle(&gx, &oracle::bprop64(p, &go, &wei),
+                        tolerance::frequency(p, Pass::Bprop, n));
+    assert_close_oracle(&gw, &oracle::accgrad64(p, &go, &x),
+                        tolerance::frequency(p, Pass::AccGrad, n));
+}
+
+#[test]
+fn fbfft_acceptance_config_is_zero_alloc_after_warmup() {
+    // the acceptance-criteria config: S=16, f=f'=16, 32×32 input, n=32
+    let p = ConvProblem::square(16, 16, 16, 32, 5);
+    zero_alloc_steady_state(FftMode::Fbfft, &p, 32);
+}
+
+#[test]
+fn vendor_acceptance_config_is_zero_alloc_after_warmup() {
+    let p = ConvProblem::square(16, 16, 16, 32, 5);
+    zero_alloc_steady_state(FftMode::Vendor, &p, 32);
+}
+
+#[test]
+fn small_ragged_config_is_zero_alloc_after_warmup() {
+    // ragged dims exercise different role sizes per pass
+    let p = ConvProblem::new(3, 5, 7, 13, 11, 5, 3);
+    zero_alloc_steady_state(FftMode::Fbfft, &p, 16);
+}
+
+#[test]
+fn pool_survives_problem_size_growth_then_stabilizes() {
+    // §3.3: buffers grow to the high-water mark, then everything reuses
+    let small = ConvProblem::square(2, 2, 2, 9, 3);
+    let big = ConvProblem::square(4, 6, 6, 15, 3);
+    let mut rng = Rng::new(0x9770);
+    let eng = FftConvEngine::new(FftMode::Fbfft, 16);
+    let mut ws = Workspace::new();
+    for p in [&small, &big, &small, &big] {
+        let x = rng.normal_vec(p.input_len());
+        let wei = rng.normal_vec(p.weight_len());
+        let mut y = vec![0f32; p.output_len()];
+        eng.fprop_into(p, &x, &wei, &mut y, &mut ws);
+    }
+    let allocs = ws.pool.allocations;
+    let exps = ws.pool.expansions;
+    for p in [&small, &big] {
+        let x = rng.normal_vec(p.input_len());
+        let wei = rng.normal_vec(p.weight_len());
+        let mut y = vec![0f32; p.output_len()];
+        eng.fprop_into(p, &x, &wei, &mut y, &mut ws);
+    }
+    assert_eq!(ws.pool.allocations, allocs);
+    assert_eq!(ws.pool.expansions, exps);
+}
