@@ -30,25 +30,30 @@ fn main() {
     };
     let ms = |e: &Json, k: &str| format!("{:.3}", g(e, k) / 1e6);
     if smoke {
-        // surface the acceptance ratio without a JSON reader
+        // surface the acceptance ratios without a JSON reader: the
+        // cgemm speedup gate plus the SoA proof points (fft_ns beating
+        // the scalar path, pack_ns == 0 under fbfft)
         for e in entries {
             println!(
-                "{} {} {}: cgemm {:.0} ns, naive {:.0} ns, speedup {:.2}x",
+                "{} {} {}: fft {:.0} ns, pack {:.0} ns, cgemm {:.0} ns, \
+                 naive {:.0} ns, speedup {:.2}x",
                 s(e, "layer"), s(e, "mode"), s(e, "pass"),
-                g(e, "cgemm_ns"), g(e, "cgemm_naive_ns"),
-                g(e, "cgemm_speedup"));
+                g(e, "fft_ns"), g(e, "pack_ns"), g(e, "cgemm_ns"),
+                g(e, "cgemm_naive_ns"), g(e, "cgemm_speedup"));
         }
         return;
     }
     let mut t = Table::new(&[
         "layer", "pass", "mode", "FFT A", "TRANS A", "FFT B", "TRANS B",
-        "CGEMM", "TRANS C", "IFFT C", "total ms", "cgemm speedup"]);
+        "CGEMM", "TRANS C", "IFFT C", "FFT Σ", "PACK Σ", "total ms",
+        "cgemm speedup"]);
     for e in entries {
         t.row(vec![
             s(e, "layer"), s(e, "pass"), s(e, "mode"),
             ms(e, "fft_a_ns"), ms(e, "trans_a_ns"), ms(e, "fft_b_ns"),
             ms(e, "trans_b_ns"), ms(e, "cgemm_ns"), ms(e, "trans_c_ns"),
-            ms(e, "ifft_c_ns"), ms(e, "total_ns"),
+            ms(e, "ifft_c_ns"), ms(e, "fft_ns"), ms(e, "pack_ns"),
+            ms(e, "total_ns"),
             format!("{:.2}x", g(e, "cgemm_speedup")),
         ]);
     }

@@ -128,13 +128,83 @@ fn round_up(x: usize, to: usize) -> usize {
     x.div_ceil(to) * to
 }
 
+/// Read-only complex operand view: the packing kernels are written once
+/// and monomorphize over the storage — interleaved `C32` slabs (vendor /
+/// scalar-fbfft staging) or the split-complex re/im planes the SoA fbfft
+/// transforms emit natively ([`batched_planar`]'s *pack-from-planar*
+/// path: no interleave shuffle ever runs between the FFT and the FMAs).
+trait CMat {
+    fn load(&self, idx: usize) -> (f32, f32);
+}
+
+struct InterMat<'a>(&'a [C32]);
+
+impl CMat for InterMat<'_> {
+    #[inline(always)]
+    fn load(&self, idx: usize) -> (f32, f32) {
+        let v = self.0[idx];
+        (v.re, v.im)
+    }
+}
+
+struct PlanarMat<'a> {
+    re: &'a [f32],
+    im: &'a [f32],
+}
+
+impl CMat for PlanarMat<'_> {
+    #[inline(always)]
+    fn load(&self, idx: usize) -> (f32, f32) {
+        (self.re[idx], self.im[idx])
+    }
+}
+
+/// Mutable complex output view — the writeback twin of [`CMat`].
+/// [`batched_planar`]'s *store-planar* side keeps the product planar so
+/// the SoA inverse transform consumes it without re-interleaving.
+trait CSink {
+    fn store(&mut self, idx: usize, re: f32, im: f32, first: bool);
+}
+
+struct InterSink<'a>(&'a mut [C32]);
+
+impl CSink for InterSink<'_> {
+    #[inline(always)]
+    fn store(&mut self, idx: usize, re: f32, im: f32, first: bool) {
+        let v = C32::new(re, im);
+        if first {
+            self.0[idx] = v;
+        } else {
+            self.0[idx] += v;
+        }
+    }
+}
+
+struct PlanarSink<'a> {
+    re: &'a mut [f32],
+    im: &'a mut [f32],
+}
+
+impl CSink for PlanarSink<'_> {
+    #[inline(always)]
+    fn store(&mut self, idx: usize, re: f32, im: f32, first: bool) {
+        if first {
+            self.re[idx] = re;
+            self.im[idx] = im;
+        } else {
+            self.re[idx] += re;
+            self.im[idx] += im;
+        }
+    }
+}
+
 /// Pack an `mc×kc` block of A into planar re/im panels of `MR` rows:
 /// element `(ir·MR+mi, kk)` lands at `(ir·kc + kk)·MR + mi`, rows beyond
 /// `mc` zero-padded so the microkernel never branches on ragged edges.
 /// Conjugation folds into the imaginary plane's sign.
 #[allow(clippy::too_many_arguments)]
-fn pack_a(sh: &BinShape, a: &[C32], m0: usize, mc: usize, p0: usize,
-          kc: usize, out_re: &mut [f32], out_im: &mut [f32]) {
+fn pack_a<A: CMat>(sh: &BinShape, a: &A, m0: usize, mc: usize, p0: usize,
+                   kc: usize, out_re: &mut [f32], out_im: &mut [f32]) {
     let sign = if sh.conj_a { -1.0f32 } else { 1.0 };
     for ir in 0..mc.div_ceil(MR) {
         let base = ir * kc * MR;
@@ -144,9 +214,9 @@ fn pack_a(sh: &BinShape, a: &[C32], m0: usize, mc: usize, p0: usize,
                 let idx = base + kk * MR + mi;
                 let mrow = ir * MR + mi;
                 if mrow < mc {
-                    let v = a[(m0 + mrow) * sh.a_mstride + ks];
-                    out_re[idx] = v.re;
-                    out_im[idx] = sign * v.im;
+                    let (vr, vi) = a.load((m0 + mrow) * sh.a_mstride + ks);
+                    out_re[idx] = vr;
+                    out_im[idx] = sign * vi;
                 } else {
                     out_re[idx] = 0.0;
                     out_im[idx] = 0.0;
@@ -159,8 +229,8 @@ fn pack_a(sh: &BinShape, a: &[C32], m0: usize, mc: usize, p0: usize,
 /// Pack a `kc×nc` block of B into planar re/im panels of `NR` columns
 /// (mirror of [`pack_a`]).
 #[allow(clippy::too_many_arguments)]
-fn pack_b(sh: &BinShape, b: &[C32], p0: usize, kc: usize, n0: usize,
-          nc: usize, out_re: &mut [f32], out_im: &mut [f32]) {
+fn pack_b<B: CMat>(sh: &BinShape, b: &B, p0: usize, kc: usize, n0: usize,
+                   nc: usize, out_re: &mut [f32], out_im: &mut [f32]) {
     let sign = if sh.conj_b { -1.0f32 } else { 1.0 };
     for jr in 0..nc.div_ceil(NR) {
         let base = jr * kc * NR;
@@ -170,9 +240,9 @@ fn pack_b(sh: &BinShape, b: &[C32], p0: usize, kc: usize, n0: usize,
                 let idx = base + kk * NR + ni;
                 let ncol = jr * NR + ni;
                 if ncol < nc {
-                    let v = b[(n0 + ncol) * sh.b_nstride + ks];
-                    out_re[idx] = v.re;
-                    out_im[idx] = sign * v.im;
+                    let (vr, vi) = b.load((n0 + ncol) * sh.b_nstride + ks);
+                    out_re[idx] = vr;
+                    out_im[idx] = sign * vi;
                 } else {
                     out_re[idx] = 0.0;
                     out_im[idx] = 0.0;
@@ -210,31 +280,26 @@ fn microkernel(kc: usize, apr: &[f32], api: &[f32], bpr: &[f32],
     }
 }
 
-/// Re-interleave one accumulator tile into the row-major `C32` output,
-/// clipping ragged edges. `first` selects store vs accumulate (the
-/// k-block loop's semantics).
+/// Store one accumulator tile into the row-major output view, clipping
+/// ragged edges. `first` selects store vs accumulate (the k-block loop's
+/// semantics).
 #[allow(clippy::too_many_arguments)]
-fn writeback(acc_re: &[[f32; NR]; MR], acc_im: &[[f32; NR]; MR],
-             c: &mut [C32], m0: usize, mr_eff: usize, n0: usize,
-             nr_eff: usize, ldc: usize, first: bool) {
+fn writeback<S: CSink>(acc_re: &[[f32; NR]; MR], acc_im: &[[f32; NR]; MR],
+                       c: &mut S, m0: usize, mr_eff: usize, n0: usize,
+                       nr_eff: usize, ldc: usize, first: bool) {
     for mi in 0..mr_eff {
-        let crow = &mut c[(m0 + mi) * ldc + n0..][..nr_eff];
-        for (ni, cv) in crow.iter_mut().enumerate() {
-            let v = C32::new(acc_re[mi][ni], acc_im[mi][ni]);
-            if first {
-                *cv = v;
-            } else {
-                *cv += v;
-            }
+        let base = (m0 + mi) * ldc + n0;
+        for ni in 0..nr_eff {
+            c.store(base + ni, acc_re[mi][ni], acc_im[mi][ni], first);
         }
     }
 }
 
 /// One bin's blocked GEMM over pre-split packing planes.
 #[allow(clippy::too_many_arguments)]
-fn bin_gemm(sh: &BinShape, a: &[C32], b: &[C32], c: &mut [C32],
-            ar: &mut [f32], ai: &mut [f32], br: &mut [f32],
-            bi: &mut [f32]) {
+fn bin_gemm<A: CMat, B: CMat, S: CSink>(
+    sh: &BinShape, a: &A, b: &B, c: &mut S, ar: &mut [f32],
+    ai: &mut [f32], br: &mut [f32], bi: &mut [f32]) {
     let (m, n, k) = (sh.m, sh.n, sh.k);
     let mut p0 = 0;
     while p0 < k {
@@ -316,13 +381,90 @@ pub fn batched(pass: Pass, bins: usize, s: usize, f: usize, fo: usize,
                 let (br, bi) = rest.split_at_mut(b_sz);
                 for (qi, cq) in c_head.chunks_mut(sh.c_len).enumerate() {
                     let q = start + qi;
-                    bin_gemm(&sh, &a[q * sh.a_len..][..sh.a_len],
-                             &b[q * sh.b_len..][..sh.b_len], cq, ar, ai,
-                             br, bi);
+                    bin_gemm(&sh, &InterMat(&a[q * sh.a_len..][..sh.a_len]),
+                             &InterMat(&b[q * sh.b_len..][..sh.b_len]),
+                             &mut InterSink(cq), ar, ai, br, bi);
                 }
             };
             if nthreads == 1 {
                 // below the fan-out threshold: run on the caller's thread
+                let mut run_now = worker;
+                run_now();
+            } else {
+                scope.spawn(worker);
+            }
+        }
+    });
+    ws.pool.put("cgemm.pack", pack);
+}
+
+/// [`batched`] over split-complex operands: the slabs arrive and leave as
+/// separate re/im `f32` planes (`bins × len` each), exactly the layout
+/// the SoA fbfft transforms produce — so in fbfft mode the
+/// interleaved→planar pack/unpack conversions that used to sit between
+/// the transforms and the microkernel are **elided entirely**; panel
+/// packing reads planar (`pack_from_planar`) and writeback stores planar.
+/// Arithmetic is identical to [`batched`] (same packed panels, same
+/// microkernel, same order) — the two entry points agree bitwise.
+#[allow(clippy::too_many_arguments)]
+pub fn batched_planar(pass: Pass, bins: usize, s: usize, f: usize,
+                      fo: usize, a_re: &[f32], a_im: &[f32], b_re: &[f32],
+                      b_im: &[f32], c_re: &mut [f32], c_im: &mut [f32],
+                      ws: &mut Workspace) {
+    let sh = BinShape::of(pass, s, f, fo);
+    assert_eq!(a_re.len(), bins * sh.a_len, "A re plane length");
+    assert_eq!(a_im.len(), bins * sh.a_len, "A im plane length");
+    assert_eq!(b_re.len(), bins * sh.b_len, "B re plane length");
+    assert_eq!(b_im.len(), bins * sh.b_len, "B im plane length");
+    assert_eq!(c_re.len(), bins * sh.c_len, "C re plane length");
+    assert_eq!(c_im.len(), bins * sh.c_len, "C im plane length");
+    if bins == 0 {
+        return;
+    }
+    let kc_max = sh.k.min(KC);
+    let a_sz = round_up(sh.m.min(MC), MR) * kc_max;
+    let b_sz = round_up(sh.n.min(NC), NR) * kc_max;
+    let per_thread = 2 * (a_sz + b_sz);
+    let macs = bins * sh.m * sh.n * sh.k;
+    let nthreads = if macs < PARALLEL_MACS {
+        1
+    } else {
+        threads().min(bins)
+    };
+    let mut pack = ws.pool.take_raw("cgemm.pack", nthreads * per_thread);
+    thread::scope(|scope| {
+        let mut cr_rem: &mut [f32] = c_re;
+        let mut ci_rem: &mut [f32] = c_im;
+        let mut p_rem: &mut [f32] = &mut pack;
+        for (start, len) in chunk_ranges(bins, nthreads) {
+            let (cr_head, cr_tail) = cr_rem.split_at_mut(len * sh.c_len);
+            cr_rem = cr_tail;
+            let (ci_head, ci_tail) = ci_rem.split_at_mut(len * sh.c_len);
+            ci_rem = ci_tail;
+            let (p_head, p_tail) = p_rem.split_at_mut(per_thread);
+            p_rem = p_tail;
+            let worker = move || {
+                let (ar, rest) = p_head.split_at_mut(a_sz);
+                let (ai, rest) = rest.split_at_mut(a_sz);
+                let (br, bi) = rest.split_at_mut(b_sz);
+                for qi in 0..len {
+                    let q = start + qi;
+                    let aq = PlanarMat {
+                        re: &a_re[q * sh.a_len..][..sh.a_len],
+                        im: &a_im[q * sh.a_len..][..sh.a_len],
+                    };
+                    let bq = PlanarMat {
+                        re: &b_re[q * sh.b_len..][..sh.b_len],
+                        im: &b_im[q * sh.b_len..][..sh.b_len],
+                    };
+                    let mut cq = PlanarSink {
+                        re: &mut cr_head[qi * sh.c_len..][..sh.c_len],
+                        im: &mut ci_head[qi * sh.c_len..][..sh.c_len],
+                    };
+                    bin_gemm(&sh, &aq, &bq, &mut cq, ar, ai, br, bi);
+                }
+            };
+            if nthreads == 1 {
                 let mut run_now = worker;
                 run_now();
             } else {
@@ -482,6 +624,66 @@ mod tests {
                 }
                 assert!((gw[j * f + i] - want).abs() < 1e-4);
             }
+        }
+    }
+
+    /// Split a `C32` slice into planar planes (test-local helper).
+    fn split(v: &[C32]) -> (Vec<f32>, Vec<f32>) {
+        (v.iter().map(|c| c.re).collect(), v.iter().map(|c| c.im).collect())
+    }
+
+    #[test]
+    fn planar_path_is_bitwise_the_interleaved_path() {
+        // same panels, same microkernel, same order — the pack-from-
+        // planar / store-planar path must agree exactly, not just within
+        // tolerance, across all conjugation patterns and ragged shapes
+        for (pass, bins, s, f, fo, seed) in [
+            (Pass::Fprop, 5usize, 16usize, 16usize, 16usize, 0x91u64),
+            (Pass::Bprop, 3, 3, 5, 7, 0x92),
+            (Pass::AccGrad, 2, 5, 9, 17, 0x93),
+            (Pass::AccGrad, 2, KC + 44, 4, 3, 0x94), // k-block accumulate
+        ] {
+            let sh = BinShape::of(pass, s, f, fo);
+            let mut rng = Rng::new(seed);
+            let a = cvec(&mut rng, bins * sh.a_len);
+            let b = cvec(&mut rng, bins * sh.b_len);
+            let mut want = vec![C32::ZERO; bins * sh.c_len];
+            let mut ws = Workspace::new();
+            batched(pass, bins, s, f, fo, &a, &b, &mut want, &mut ws);
+            let (ar, ai) = split(&a);
+            let (br, bi) = split(&b);
+            let mut cr = vec![0f32; bins * sh.c_len];
+            let mut ci = vec![0f32; bins * sh.c_len];
+            batched_planar(pass, bins, s, f, fo, &ar, &ai, &br, &bi,
+                           &mut cr, &mut ci, &mut ws);
+            for (i, w) in want.iter().enumerate() {
+                assert_eq!(cr[i], w.re, "{pass:?} elem {i} re");
+                assert_eq!(ci[i], w.im, "{pass:?} elem {i} im");
+            }
+        }
+    }
+
+    #[test]
+    fn planar_threaded_matches_naive() {
+        // clear PARALLEL_MACS so the scoped-thread fan-out runs planar
+        let (pass, bins, s, f, fo) = (Pass::Fprop, 96usize, 8, 24, 8);
+        let sh = BinShape::of(pass, s, f, fo);
+        let mut rng = Rng::new(0x95);
+        let a = cvec(&mut rng, bins * sh.a_len);
+        let b = cvec(&mut rng, bins * sh.b_len);
+        let mut want = vec![C32::ZERO; bins * sh.c_len];
+        batched_naive(pass, bins, s, f, fo, &a, &b, &mut want);
+        let (ar, ai) = split(&a);
+        let (br, bi) = split(&b);
+        let mut cr = vec![0f32; bins * sh.c_len];
+        let mut ci = vec![0f32; bins * sh.c_len];
+        let mut ws = Workspace::new();
+        batched_planar(pass, bins, s, f, fo, &ar, &ai, &br, &bi, &mut cr,
+                       &mut ci, &mut ws);
+        let tol = 1e-3 * (sh.k as f32).sqrt().max(1.0);
+        for (i, w) in want.iter().enumerate() {
+            let g = C32::new(cr[i], ci[i]);
+            assert!((g - *w).abs() < tol, "elem {i}: {g:?} vs {w:?}");
         }
     }
 

@@ -5,7 +5,7 @@
 //!   FFT A → TRANS A → FFT B → TRANS B → CGEMM → TRANS C → IFFT C
 //! ```
 //!
-//! Two modes:
+//! Three modes:
 //!
 //! * [`FftMode::Vendor`] — the cuFFT-based implementation of §3: the
 //!   operands are **explicitly copied into zero-padded buffers** (§5.1:
@@ -13,17 +13,30 @@
 //!   data from non-padded tensors to padded tensors'), transformed with
 //!   the general planner, then **explicitly transposed** BDHW→HWBD for
 //!   the per-bin CGEMM and back (the Cgeam steps of Table 1).
-//! * [`FftMode::Fbfft`] — the §5 implementation: implicit zero-copy
-//!   padding inside `fbfft_host`, output *born* in the HWBD bin-major
-//!   layout (fused transpose) and clipped on the way out (fused clip), so
-//!   the three TRANS stages identically vanish.
+//! * [`FftMode::FbfftScalar`] — the §5 design points, one scalar
+//!   transform at a time: implicit zero-copy padding inside `fbfft_host`,
+//!   output *born* in the HWBD bin-major layout (fused transpose) and
+//!   clipped on the way out (fused clip), so the three TRANS stages
+//!   identically vanish. Kept as the measurable baseline for the SoA
+//!   rewrite below (the `fbfft_scalar` rows of `BENCH_fftconv.json`).
+//! * [`FftMode::Fbfft`] — the production fbfft path: the same fused
+//!   layouts, executed by the **split-complex batch-lane kernels** of
+//!   [`crate::fft::soa`] (batch mapped across SIMD lanes — the CPU image
+//!   of the paper's one-transform-per-warp §5 mapping). The spectra are
+//!   born as *planar* re/im `f32` slabs in bin-major order and flow into
+//!   [`super::cgemm::batched_planar`] untouched, so the
+//!   interleaved→planar PACK stage the other modes pay also vanishes.
 //!
-//! All three passes run the blocked multithreaded bin-major CGEMM of
-//! [`super::cgemm`] with the conjugation pattern of §2 (fprop: conj W;
+//! The CGEMM core is planar either way; Vendor and FbfftScalar bridge
+//! into it through an explicit, separately-timed PACK conversion
+//! ([`StageTimings::pack_a`]/`pack_b`/`pack_c` — zero in `Fbfft` mode by
+//! construction). All three passes run the blocked multithreaded
+//! bin-major CGEMM with the conjugation pattern of §2 (fprop: conj W;
 //! bprop: none; accGrad: conj Go, reduce S). Per-plane transforms,
-//! transposes and CGEMM all fan out over [`crate::util::threads`], and
-//! every intermediate tensor comes from the caller's [`Workspace`] pool —
-//! the `*_into` entry points allocate nothing in steady state (the
+//! transposes and CGEMM all fan out over [`crate::util::threads`]
+//! (the SoA inverse by LANES-aligned batch groups), and every
+//! intermediate tensor comes from the caller's [`Workspace`] pool — the
+//! `*_into` entry points allocate nothing in steady state (the
 //! `fprop`/`bprop`/`accgrad` wrappers keep the old allocating signature
 //! for the tuner, the §6 tiled engine and the tests).
 
@@ -34,8 +47,9 @@ use crate::coordinator::Pass;
 use crate::fft::fbfft_host;
 use crate::fft::fft2d::{self, irfft2_into, rfft2_into};
 use crate::fft::real::rfft_len;
+use crate::fft::soa::{self, LANES};
 use crate::fft::C32;
-use crate::util::{chunk_ranges, threads};
+use crate::util::{chunk_ranges, chunk_ranges_grouped, threads};
 
 use super::cgemm::{self, Workspace};
 use super::problem::ConvProblem;
@@ -44,36 +58,60 @@ use super::problem::ConvProblem;
 pub enum FftMode {
     /// cuFFT-analogue: explicit padding, planner FFTs, explicit transposes.
     Vendor,
-    /// fbfft: implicit padding, fused transpose + clip, power-of-two only.
+    /// fbfft, SoA batch-lane kernels: implicit padding, fused transpose +
+    /// clip, planar spectra (no PACK stage), power-of-two only.
     Fbfft,
+    /// fbfft, one scalar transform at a time — the pre-SoA baseline.
+    FbfftScalar,
 }
 
-/// Wall-clock per Table-1 stage (Table 5's columns). Stages elided by
-/// fbfft's fused layouts report zero.
+/// Wall-clock per Table-1 stage (Table 5's columns), plus the PACK
+/// conversions between interleaved staging and the planar CGEMM layout.
+/// Stages elided by fbfft's fused layouts report zero; the SoA mode's
+/// planar handoff zeroes all three PACK cells too.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct StageTimings {
     pub fft_a: Duration,
     pub trans_a: Duration,
+    pub pack_a: Duration,
     pub fft_b: Duration,
     pub trans_b: Duration,
+    pub pack_b: Duration,
     pub cgemm: Duration,
     pub trans_c: Duration,
+    pub pack_c: Duration,
     pub ifft_c: Duration,
 }
 
 impl StageTimings {
     pub fn total(&self) -> Duration {
-        self.fft_a + self.trans_a + self.fft_b + self.trans_b + self.cgemm
-            + self.trans_c + self.ifft_c
+        self.fft_a + self.trans_a + self.pack_a + self.fft_b + self.trans_b
+            + self.pack_b + self.cgemm + self.trans_c + self.pack_c
+            + self.ifft_c
+    }
+
+    /// Combined transform time (FFT A + FFT B + IFFT C) — the
+    /// `fft_ns` column of `BENCH_fftconv.json`.
+    pub fn fft_total(&self) -> Duration {
+        self.fft_a + self.fft_b + self.ifft_c
+    }
+
+    /// Combined layout-conversion time (PACK A + PACK B + PACK C) — the
+    /// `pack_ns` column; identically zero in SoA fbfft mode.
+    pub fn pack_total(&self) -> Duration {
+        self.pack_a + self.pack_b + self.pack_c
     }
 
     pub fn add(&mut self, o: &StageTimings) {
         self.fft_a += o.fft_a;
         self.trans_a += o.trans_a;
+        self.pack_a += o.pack_a;
         self.fft_b += o.fft_b;
         self.trans_b += o.trans_b;
+        self.pack_b += o.pack_b;
         self.cgemm += o.cgemm;
         self.trans_c += o.trans_c;
+        self.pack_c += o.pack_c;
         self.ifft_c += o.ifft_c;
     }
 }
@@ -139,6 +177,49 @@ fn transpose(src: &[C32], rows: usize, cols: usize, dst: &mut [C32]) {
     });
 }
 
+/// Threaded interleaved→planar split — the PACK stage the staging modes
+/// pay on the way into the planar CGEMM (and the SoA mode elides).
+fn split_complex_mt(src: &[C32], re: &mut [f32], im: &mut [f32]) {
+    let len = src.len();
+    let nw = if len < 1 << 15 { 1 } else { threads() };
+    if nw <= 1 {
+        soa::split_complex(src, re, im);
+        return;
+    }
+    thread::scope(|scope| {
+        let mut re_rem: &mut [f32] = re;
+        let mut im_rem: &mut [f32] = im;
+        for (start, cn) in chunk_ranges(len, nw) {
+            let (re_h, re_t) = re_rem.split_at_mut(cn);
+            re_rem = re_t;
+            let (im_h, im_t) = im_rem.split_at_mut(cn);
+            im_rem = im_t;
+            let s = &src[start..start + cn];
+            scope.spawn(move || soa::split_complex(s, re_h, im_h));
+        }
+    });
+}
+
+/// Threaded planar→interleaved merge (the inverse-side PACK conversion).
+fn interleave_complex_mt(re: &[f32], im: &[f32], dst: &mut [C32]) {
+    let len = dst.len();
+    let nw = if len < 1 << 15 { 1 } else { threads() };
+    if nw <= 1 {
+        soa::interleave_complex(re, im, dst);
+        return;
+    }
+    thread::scope(|scope| {
+        let mut d_rem: &mut [C32] = dst;
+        for (start, cn) in chunk_ranges(len, nw) {
+            let (d_h, d_t) = d_rem.split_at_mut(cn);
+            d_rem = d_t;
+            let r = &re[start..start + cn];
+            let i = &im[start..start + cn];
+            scope.spawn(move || soa::interleave_complex(r, i, d_h));
+        }
+    });
+}
+
 /// Copy `h_in × w_in` planes into the top-left corner of zeroed `n × n`
 /// planes — the §5.1 duplicate padded tensor the vendor path must
 /// materialize. `dst` covers `src.len() / (h_in·w_in)` planes, pre-zeroed.
@@ -162,9 +243,13 @@ pub struct FftConvEngine {
 
 impl FftConvEngine {
     pub fn new(mode: FftMode, n_fft: usize) -> Self {
-        if mode == FftMode::Fbfft {
-            assert!(n_fft.is_power_of_two() && n_fft <= fbfft_host::MAX_N,
-                    "fbfft basis must be a power of two <= 256, got {n_fft}");
+        if matches!(mode, FftMode::Fbfft | FftMode::FbfftScalar) {
+            // match FbfftPlan's domain exactly so an unsupported basis
+            // fails here, at construction, not mid-transform
+            assert!(n_fft.is_power_of_two()
+                        && (2..=fbfft_host::MAX_N).contains(&n_fft),
+                    "fbfft basis must be a power of two in 2..=256, \
+                     got {n_fft}");
         }
         FftConvEngine { mode, n_fft }
     }
@@ -181,22 +266,111 @@ impl FftConvEngine {
     // ---- forward transforms -------------------------------------------
 
     /// Transform `count` planes of `h_in × w_in` into a bin-major
-    /// frequency slab (`bins × count`) checked out of `ws` under `role`
-    /// (the caller puts it back after the CGEMM consumes it). Vendor mode
-    /// pays the explicit pad + transpose; fbfft emits bin-major directly.
+    /// **planar** frequency slab (re/im planes of `bins × count` each)
+    /// checked out of `ws` under `role` (the caller puts it back after
+    /// the CGEMM consumes it). Vendor mode pays the explicit pad +
+    /// transpose + PACK split; scalar fbfft pays only the PACK split;
+    /// SoA fbfft emits bin-major planar directly.
     #[allow(clippy::too_many_arguments)]
     fn forward(&self, planes: &[f32], h_in: usize, w_in: usize,
                count: usize, role: &str, ws: &mut Workspace,
-               fft_t: &mut Duration, trans_t: &mut Duration) -> Vec<C32> {
+               fft_t: &mut Duration, trans_t: &mut Duration,
+               pack_t: &mut Duration) -> (Vec<f32>, Vec<f32>) {
         let n = self.n_fft;
         let nf = rfft_len(n);
         let bins = self.bins();
-        let mut data = ws.pool.take_c32_raw(role, bins * count);
+        let (mut re, mut im) = ws.pool.take_planar_raw(role, bins * count);
         let nw = plane_workers(count, n);
         match self.mode {
             FftMode::Fbfft => {
                 let t0 = Instant::now();
                 let plan = fbfft_host::cached(n);
+                // scratch roles are distinct per operand (A vs B counts
+                // differ) and per direction (forward vs inverse sizes
+                // differ): take_planar_raw zero-fills regrowth, so a
+                // shared role would re-memset the size gap every pass
+                let (rows_role, work_role) = if role == "freq.a" {
+                    ("soa.rows.a", "soa.fwork.a")
+                } else {
+                    ("soa.rows.b", "soa.fwork.b")
+                };
+                let (mut rows_re, mut rows_im) =
+                    ws.pool.take_planar_raw(rows_role, count * n * nf);
+                // phase 1: batched row-pair transforms (§5.2 pack across
+                // image rows, all `count` planes in lanes), chunked over
+                // row pairs — each chunk's rows block is contiguous
+                let pairs = n / 2;
+                let nw1 = nw.min(pairs);
+                let (mut work_re, mut work_im) =
+                    ws.pool.take_planar_raw(work_role, nw1 * n * count);
+                thread::scope(|scope| {
+                    let mut rr: &mut [f32] = &mut rows_re;
+                    let mut ri: &mut [f32] = &mut rows_im;
+                    let mut wr_rem: &mut [f32] = &mut work_re;
+                    let mut wi_rem: &mut [f32] = &mut work_im;
+                    for (rp0, rpn) in chunk_ranges(pairs, nw1) {
+                        let (rr_h, rr_t) =
+                            rr.split_at_mut(2 * rpn * nf * count);
+                        rr = rr_t;
+                        let (ri_h, ri_t) =
+                            ri.split_at_mut(2 * rpn * nf * count);
+                        ri = ri_t;
+                        let (wr_h, wr_t) = wr_rem.split_at_mut(n * count);
+                        wr_rem = wr_t;
+                        let (wi_h, wi_t) = wi_rem.split_at_mut(n * count);
+                        wi_rem = wi_t;
+                        let plan = &plan;
+                        let worker = move || {
+                            plan.rfft2_rows_soa(planes, h_in, w_in, count,
+                                                rp0, rpn, rr_h, ri_h,
+                                                wr_h, wi_h)
+                        };
+                        if nw1 <= 1 {
+                            // below the fan-out threshold: run inline
+                            let mut run_now = worker;
+                            run_now();
+                        } else {
+                            scope.spawn(worker);
+                        }
+                    }
+                });
+                // phase 2: batched column transforms, chunked over kw —
+                // contiguous in the fused-transposed planar output
+                let nw2 = if nw <= 1 { 1 } else { threads().min(nf) };
+                thread::scope(|scope| {
+                    let mut or: &mut [f32] = &mut re;
+                    let mut oi: &mut [f32] = &mut im;
+                    let rows_re = &rows_re;
+                    let rows_im = &rows_im;
+                    for (kw0, kwn) in chunk_ranges(nf, nw2) {
+                        let (or_h, or_t) =
+                            or.split_at_mut(kwn * n * count);
+                        or = or_t;
+                        let (oi_h, oi_t) =
+                            oi.split_at_mut(kwn * n * count);
+                        oi = oi_t;
+                        let plan = &plan;
+                        let worker = move || {
+                            plan.rfft2_cols_soa(rows_re, rows_im, count,
+                                                kw0, kwn, or_h, oi_h)
+                        };
+                        if nw2 <= 1 {
+                            let mut run_now = worker;
+                            run_now();
+                        } else {
+                            scope.spawn(worker);
+                        }
+                    }
+                });
+                ws.pool.put_planar(rows_role, (rows_re, rows_im));
+                ws.pool.put_planar(work_role, (work_re, work_im));
+                *fft_t += t0.elapsed();
+                // fused transpose + planar birth: no TRANS, no PACK
+            }
+            FftMode::FbfftScalar => {
+                let t0 = Instant::now();
+                let plan = fbfft_host::cached(n);
+                let mut data = ws.pool.take_c32_raw(role, bins * count);
                 let mut rows_all =
                     ws.pool.take_c32_raw("fbfft.rows", count * n * nf);
                 if nw <= 1 {
@@ -241,10 +415,17 @@ impl FftConvEngine {
                 }
                 ws.pool.put_c32("fbfft.rows", rows_all);
                 *fft_t += t0.elapsed();
-                // fused transpose: TRANS stage does not exist
+                // fused transpose: TRANS does not exist — but the scalar
+                // path's interleaved spectrum must still be split for
+                // the planar CGEMM (the PACK the SoA path elides)
+                let t1 = Instant::now();
+                split_complex_mt(&data, &mut re, &mut im);
+                *pack_t += t1.elapsed();
+                ws.pool.put_c32(role, data);
             }
             FftMode::Vendor => {
                 let t0 = Instant::now();
+                let mut data = ws.pool.take_c32_raw(role, bins * count);
                 // the duplicate padded tensor cuFFT forces (§5.1)
                 let mut padded = ws.pool.take("vendor.pad", count * n * n);
                 let in_stride = h_in * w_in;
@@ -311,27 +492,89 @@ impl FftConvEngine {
                 transpose(&pm, count, bins, &mut data);
                 *trans_t += t1.elapsed();
                 ws.pool.put_c32("vendor.pm", pm);
+                // PACK: split for the planar CGEMM
+                let t2 = Instant::now();
+                split_complex_mt(&data, &mut re, &mut im);
+                *pack_t += t2.elapsed();
+                ws.pool.put_c32(role, data);
             }
         }
-        data
+        (re, im)
     }
 
-    /// Inverse-transform a bin-major frequency slab of `count` planes,
-    /// clipping each to `clip_h × clip_w`, into `out`.
+    /// Inverse-transform a planar bin-major frequency slab of `count`
+    /// planes, clipping each to `clip_h × clip_w`, into `out`.
     #[allow(clippy::too_many_arguments)]
-    fn inverse(&self, freq: &[C32], count: usize, clip_h: usize,
-               clip_w: usize, out: &mut [f32], ws: &mut Workspace,
-               trans_t: &mut Duration, ifft_t: &mut Duration) {
+    fn inverse(&self, freq_re: &[f32], freq_im: &[f32], count: usize,
+               clip_h: usize, clip_w: usize, out: &mut [f32],
+               ws: &mut Workspace, trans_t: &mut Duration,
+               ifft_t: &mut Duration, pack_t: &mut Duration) {
         let n = self.n_fft;
         let nf = rfft_len(n);
         let bins = self.bins();
-        assert_eq!(freq.len(), bins * count);
+        assert_eq!(freq_re.len(), bins * count);
+        assert_eq!(freq_im.len(), bins * count);
         assert_eq!(out.len(), count * clip_h * clip_w);
         let nw = plane_workers(count, n);
         let clip = clip_h * clip_w;
         match self.mode {
             FftMode::Fbfft => {
+                // SoA inverse straight off the planar product — no PACK,
+                // threaded over LANES-aligned batch groups with
+                // per-group scratch carved out of two pooled planes
                 let t0 = Instant::now();
+                let plan = fbfft_host::cached(n);
+                let (mut rows_re, mut rows_im) = ws.pool.take_planar_raw(
+                    "soa.irows", clip_h * nf * count);
+                let (mut work_re, mut work_im) =
+                    ws.pool.take_planar_raw("soa.iwork", n * count);
+                thread::scope(|scope| {
+                    let mut o_rem: &mut [f32] = out;
+                    let mut rr_rem: &mut [f32] = &mut rows_re;
+                    let mut ri_rem: &mut [f32] = &mut rows_im;
+                    let mut wr_rem: &mut [f32] = &mut work_re;
+                    let mut wi_rem: &mut [f32] = &mut work_im;
+                    for (b0, bn) in chunk_ranges_grouped(count, nw, LANES) {
+                        let (o_h, o_t) = o_rem.split_at_mut(bn * clip);
+                        o_rem = o_t;
+                        let (rr_h, rr_t) =
+                            rr_rem.split_at_mut(clip_h * nf * bn);
+                        rr_rem = rr_t;
+                        let (ri_h, ri_t) =
+                            ri_rem.split_at_mut(clip_h * nf * bn);
+                        ri_rem = ri_t;
+                        let (wr_h, wr_t) = wr_rem.split_at_mut(n * bn);
+                        wr_rem = wr_t;
+                        let (wi_h, wi_t) = wi_rem.split_at_mut(n * bn);
+                        wi_rem = wi_t;
+                        let plan = &plan;
+                        let worker = move || {
+                            plan.irfft2_soa_chunk(freq_re, freq_im, count,
+                                                  b0, bn, clip_h, clip_w,
+                                                  rr_h, ri_h, wr_h, wi_h,
+                                                  o_h)
+                        };
+                        if nw <= 1 {
+                            let mut run_now = worker;
+                            run_now();
+                        } else {
+                            scope.spawn(worker);
+                        }
+                    }
+                });
+                ws.pool.put_planar("soa.irows", (rows_re, rows_im));
+                ws.pool.put_planar("soa.iwork", (work_re, work_im));
+                *ifft_t += t0.elapsed();
+            }
+            FftMode::FbfftScalar => {
+                // PACK: merge the planar product back to interleaved for
+                // the scalar inverse path
+                let t0 = Instant::now();
+                let mut stage =
+                    ws.pool.take_c32_raw("stage.inv", bins * count);
+                interleave_complex_mt(freq_re, freq_im, &mut stage);
+                *pack_t += t0.elapsed();
+                let t1 = Instant::now();
                 let plan = fbfft_host::cached(n);
                 let mut rows =
                     ws.pool.take_c32_raw("fbfft.irows", nw * n * nf);
@@ -339,13 +582,14 @@ impl FftConvEngine {
                     let rs = &mut rows[..n * nf];
                     for b in 0..count {
                         plan.irfft2_one_transposed(
-                            freq, count, b, clip_h, clip_w, rs,
+                            &stage, count, b, clip_h, clip_w, rs,
                             &mut out[b * clip..(b + 1) * clip]);
                     }
                 } else {
                     thread::scope(|scope| {
                         let mut o_rem: &mut [f32] = out;
                         let mut r_rem: &mut [C32] = &mut rows;
+                        let stage: &[C32] = &stage;
                         for (start, len) in chunk_ranges(count, nw) {
                             let (o_head, o_tail) =
                                 o_rem.split_at_mut(len * clip);
@@ -357,7 +601,7 @@ impl FftConvEngine {
                             scope.spawn(move || {
                                 for bi in 0..len {
                                     plan.irfft2_one_transposed(
-                                        freq, count, start + bi, clip_h,
+                                        stage, count, start + bi, clip_h,
                                         clip_w, &mut r_head[..],
                                         &mut o_head[bi * clip
                                             ..(bi + 1) * clip]);
@@ -367,16 +611,23 @@ impl FftConvEngine {
                     });
                 }
                 ws.pool.put_c32("fbfft.irows", rows);
-                *ifft_t += t0.elapsed();
+                ws.pool.put_c32("stage.inv", stage);
+                *ifft_t += t1.elapsed();
             }
             FftMode::Vendor => {
-                // explicit HWBD → BDHW transposition first (tile-blocked,
-                // writes contiguous per plane row)
+                // PACK: interleave, then the explicit HWBD → BDHW
+                // transposition (tile-blocked, writes contiguous)
                 let t0 = Instant::now();
-                let mut pm = ws.pool.take_c32_raw("vendor.ipm", count * bins);
-                transpose(freq, bins, count, &mut pm);
-                *trans_t += t0.elapsed();
+                let mut stage =
+                    ws.pool.take_c32_raw("stage.inv", bins * count);
+                interleave_complex_mt(freq_re, freq_im, &mut stage);
+                *pack_t += t0.elapsed();
                 let t1 = Instant::now();
+                let mut pm = ws.pool.take_c32_raw("vendor.ipm", count * bins);
+                transpose(&stage, bins, count, &mut pm);
+                *trans_t += t1.elapsed();
+                ws.pool.put_c32("stage.inv", stage);
+                let t2 = Instant::now();
                 let sl = fft2d::scratch_len(n);
                 let mut scratch =
                     ws.pool.take_c32_raw("vendor.fft_scratch", nw * sl);
@@ -416,7 +667,7 @@ impl FftConvEngine {
                         }
                     });
                 }
-                *ifft_t += t1.elapsed();
+                *ifft_t += t2.elapsed();
                 ws.pool.put_c32("vendor.ipm", pm);
                 ws.pool.put_c32("vendor.fft_scratch", scratch);
             }
@@ -436,21 +687,24 @@ impl FftConvEngine {
         assert_eq!(wei.len(), p.weight_len());
         assert_eq!(out.len(), p.output_len());
         let mut t = StageTimings::default();
-        let xf = self.forward(x, p.h, p.w, p.s * p.f, "freq.a", ws,
-                              &mut t.fft_a, &mut t.trans_a);
-        let wf = self.forward(wei, p.kh, p.kw, p.fo * p.f, "freq.b", ws,
-                              &mut t.fft_b, &mut t.trans_b);
+        let (xr, xi) = self.forward(x, p.h, p.w, p.s * p.f, "freq.a", ws,
+                                    &mut t.fft_a, &mut t.trans_a,
+                                    &mut t.pack_a);
+        let (wr, wi) = self.forward(wei, p.kh, p.kw, p.fo * p.f, "freq.b",
+                                    ws, &mut t.fft_b, &mut t.trans_b,
+                                    &mut t.pack_b);
         let bins = self.bins();
         let t0 = Instant::now();
-        let mut of = ws.pool.take_c32_raw("freq.c", bins * p.s * p.fo);
-        cgemm::batched(Pass::Fprop, bins, p.s, p.f, p.fo, &xf, &wf,
-                       &mut of, ws);
+        let (mut or, mut oi) =
+            ws.pool.take_planar_raw("freq.c", bins * p.s * p.fo);
+        cgemm::batched_planar(Pass::Fprop, bins, p.s, p.f, p.fo, &xr, &xi,
+                              &wr, &wi, &mut or, &mut oi, ws);
         t.cgemm += t0.elapsed();
-        ws.pool.put_c32("freq.a", xf);
-        ws.pool.put_c32("freq.b", wf);
-        self.inverse(&of, p.s * p.fo, p.yh(), p.yw(), out, ws,
-                     &mut t.trans_c, &mut t.ifft_c);
-        ws.pool.put_c32("freq.c", of);
+        ws.pool.put_planar("freq.a", (xr, xi));
+        ws.pool.put_planar("freq.b", (wr, wi));
+        self.inverse(&or, &oi, p.s * p.fo, p.yh(), p.yw(), out, ws,
+                     &mut t.trans_c, &mut t.ifft_c, &mut t.pack_c);
+        ws.pool.put_planar("freq.c", (or, oi));
         t
     }
 
@@ -463,21 +717,24 @@ impl FftConvEngine {
         assert_eq!(wei.len(), p.weight_len());
         assert_eq!(out.len(), p.input_len());
         let mut t = StageTimings::default();
-        let gof = self.forward(go, p.yh(), p.yw(), p.s * p.fo, "freq.a",
-                               ws, &mut t.fft_a, &mut t.trans_a);
-        let wf = self.forward(wei, p.kh, p.kw, p.fo * p.f, "freq.b", ws,
-                              &mut t.fft_b, &mut t.trans_b);
+        let (gr, gi) = self.forward(go, p.yh(), p.yw(), p.s * p.fo,
+                                    "freq.a", ws, &mut t.fft_a,
+                                    &mut t.trans_a, &mut t.pack_a);
+        let (wr, wi) = self.forward(wei, p.kh, p.kw, p.fo * p.f, "freq.b",
+                                    ws, &mut t.fft_b, &mut t.trans_b,
+                                    &mut t.pack_b);
         let bins = self.bins();
         let t0 = Instant::now();
-        let mut gxf = ws.pool.take_c32_raw("freq.c", bins * p.s * p.f);
-        cgemm::batched(Pass::Bprop, bins, p.s, p.f, p.fo, &gof, &wf,
-                       &mut gxf, ws);
+        let (mut or, mut oi) =
+            ws.pool.take_planar_raw("freq.c", bins * p.s * p.f);
+        cgemm::batched_planar(Pass::Bprop, bins, p.s, p.f, p.fo, &gr, &gi,
+                              &wr, &wi, &mut or, &mut oi, ws);
         t.cgemm += t0.elapsed();
-        ws.pool.put_c32("freq.a", gof);
-        ws.pool.put_c32("freq.b", wf);
-        self.inverse(&gxf, p.s * p.f, p.h, p.w, out, ws, &mut t.trans_c,
-                     &mut t.ifft_c);
-        ws.pool.put_c32("freq.c", gxf);
+        ws.pool.put_planar("freq.a", (gr, gi));
+        ws.pool.put_planar("freq.b", (wr, wi));
+        self.inverse(&or, &oi, p.s * p.f, p.h, p.w, out, ws,
+                     &mut t.trans_c, &mut t.ifft_c, &mut t.pack_c);
+        ws.pool.put_planar("freq.c", (or, oi));
         t
     }
 
@@ -491,21 +748,24 @@ impl FftConvEngine {
         assert_eq!(x.len(), p.input_len());
         assert_eq!(out.len(), p.weight_len());
         let mut t = StageTimings::default();
-        let gof = self.forward(go, p.yh(), p.yw(), p.s * p.fo, "freq.a",
-                               ws, &mut t.fft_a, &mut t.trans_a);
-        let xf = self.forward(x, p.h, p.w, p.s * p.f, "freq.b", ws,
-                              &mut t.fft_b, &mut t.trans_b);
+        let (gr, gi) = self.forward(go, p.yh(), p.yw(), p.s * p.fo,
+                                    "freq.a", ws, &mut t.fft_a,
+                                    &mut t.trans_a, &mut t.pack_a);
+        let (xr, xi) = self.forward(x, p.h, p.w, p.s * p.f, "freq.b", ws,
+                                    &mut t.fft_b, &mut t.trans_b,
+                                    &mut t.pack_b);
         let bins = self.bins();
         let t0 = Instant::now();
-        let mut gwf = ws.pool.take_c32_raw("freq.c", bins * p.fo * p.f);
-        cgemm::batched(Pass::AccGrad, bins, p.s, p.f, p.fo, &gof, &xf,
-                       &mut gwf, ws);
+        let (mut or, mut oi) =
+            ws.pool.take_planar_raw("freq.c", bins * p.fo * p.f);
+        cgemm::batched_planar(Pass::AccGrad, bins, p.s, p.f, p.fo, &gr,
+                              &gi, &xr, &xi, &mut or, &mut oi, ws);
         t.cgemm += t0.elapsed();
-        ws.pool.put_c32("freq.a", gof);
-        ws.pool.put_c32("freq.b", xf);
-        self.inverse(&gwf, p.fo * p.f, p.kh, p.kw, out, ws,
-                     &mut t.trans_c, &mut t.ifft_c);
-        ws.pool.put_c32("freq.c", gwf);
+        ws.pool.put_planar("freq.a", (gr, gi));
+        ws.pool.put_planar("freq.b", (xr, xi));
+        self.inverse(&or, &oi, p.fo * p.f, p.kh, p.kw, out, ws,
+                     &mut t.trans_c, &mut t.ifft_c, &mut t.pack_c);
+        ws.pool.put_planar("freq.c", (or, oi));
         t
     }
 
@@ -564,9 +824,28 @@ mod tests {
             assert_close_oracle(
                 &got, &oracle::fprop64(&p, &x, &wei),
                 tolerance::frequency(&p, Pass::Fprop, eng.n_fft));
-            // fbfft elides every TRANS stage
+            // fbfft elides every TRANS stage, and the SoA planar handoff
+            // elides every PACK stage too
             assert_eq!(timings.trans_a, Duration::ZERO);
             assert_eq!(timings.trans_b, Duration::ZERO);
+            assert_eq!(timings.trans_c, Duration::ZERO);
+            assert_eq!(timings.pack_total(), Duration::ZERO);
+        }
+    }
+
+    #[test]
+    fn fbfft_scalar_fprop_matches_oracle() {
+        let mut rng = Rng::new(27);
+        for p in problems() {
+            let n = p.h.max(p.w).next_power_of_two();
+            let eng = FftConvEngine::new(FftMode::FbfftScalar, n);
+            let x = rng.normal_vec(p.input_len());
+            let wei = rng.normal_vec(p.weight_len());
+            let (got, timings) = eng.fprop(&p, &x, &wei);
+            assert_close_oracle(&got, &oracle::fprop64(&p, &x, &wei),
+                                tolerance::frequency(&p, Pass::Fprop, n));
+            // scalar fbfft still fuses the transposes away
+            assert_eq!(timings.trans_a, Duration::ZERO);
             assert_eq!(timings.trans_c, Duration::ZERO);
         }
     }
@@ -587,41 +866,36 @@ mod tests {
     }
 
     #[test]
-    fn both_modes_bprop_match_oracle() {
+    fn all_modes_bprop_match_oracle() {
         let mut rng = Rng::new(22);
         for p in problems() {
             let go = rng.normal_vec(p.output_len());
             let wei = rng.normal_vec(p.weight_len());
             let want = oracle::bprop64(&p, &go, &wei);
-            let eng = FftConvEngine::fbfft_for(&p);
-            let (a, _) = eng.bprop(&p, &go, &wei);
-            assert_close_oracle(
-                &a, &want, tolerance::frequency(&p, Pass::Bprop, eng.n_fft));
             let n = p.h.max(p.w).next_power_of_two();
-            let (b, _) = FftConvEngine::new(FftMode::Vendor, n)
-                .bprop(&p, &go, &wei);
-            assert_close_oracle(
-                &b, &want, tolerance::frequency(&p, Pass::Bprop, n));
+            for mode in [FftMode::Fbfft, FftMode::FbfftScalar,
+                         FftMode::Vendor] {
+                let (a, _) = FftConvEngine::new(mode, n).bprop(&p, &go, &wei);
+                assert_close_oracle(
+                    &a, &want, tolerance::frequency(&p, Pass::Bprop, n));
+            }
         }
     }
 
     #[test]
-    fn both_modes_accgrad_match_oracle() {
+    fn all_modes_accgrad_match_oracle() {
         let mut rng = Rng::new(23);
         for p in problems() {
             let go = rng.normal_vec(p.output_len());
             let x = rng.normal_vec(p.input_len());
             let want = oracle::accgrad64(&p, &go, &x);
-            let eng = FftConvEngine::fbfft_for(&p);
-            let (a, _) = eng.accgrad(&p, &go, &x);
-            assert_close_oracle(
-                &a, &want,
-                tolerance::frequency(&p, Pass::AccGrad, eng.n_fft));
             let n = p.h.max(p.w).next_power_of_two();
-            let (b, _) = FftConvEngine::new(FftMode::Vendor, n)
-                .accgrad(&p, &go, &x);
-            assert_close_oracle(
-                &b, &want, tolerance::frequency(&p, Pass::AccGrad, n));
+            for mode in [FftMode::Fbfft, FftMode::FbfftScalar,
+                         FftMode::Vendor] {
+                let (a, _) = FftConvEngine::new(mode, n).accgrad(&p, &go, &x);
+                assert_close_oracle(
+                    &a, &want, tolerance::frequency(&p, Pass::AccGrad, n));
+            }
         }
     }
 
@@ -638,9 +912,30 @@ mod tests {
     }
 
     #[test]
+    fn soa_and_scalar_fbfft_agree_closely() {
+        // same transforms up to §5.2 pairing order — the two fbfft paths
+        // must agree much tighter than either's oracle budget
+        let p = ConvProblem::square(3, 4, 5, 12, 3);
+        let mut rng = Rng::new(28);
+        let x = rng.normal_vec(p.input_len());
+        let wei = rng.normal_vec(p.weight_len());
+        let (a, _) = FftConvEngine::new(FftMode::Fbfft, 16)
+            .fprop(&p, &x, &wei);
+        let (b, _) = FftConvEngine::new(FftMode::FbfftScalar, 16)
+            .fprop(&p, &x, &wei);
+        assert_close(&a, &b, tolerance::frequency(&p, Pass::Fprop, 16));
+    }
+
+    #[test]
     #[should_panic(expected = "power of two")]
     fn fbfft_rejects_non_pow2_basis() {
         FftConvEngine::new(FftMode::Fbfft, 12);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn fbfft_scalar_rejects_non_pow2_basis() {
+        FftConvEngine::new(FftMode::FbfftScalar, 12);
     }
 
     #[test]
@@ -653,7 +948,7 @@ mod tests {
         let x = rng.normal_vec(p.input_len());
         let wei = rng.normal_vec(p.weight_len());
         let go = rng.normal_vec(p.output_len());
-        for mode in [FftMode::Fbfft, FftMode::Vendor] {
+        for mode in [FftMode::Fbfft, FftMode::FbfftScalar, FftMode::Vendor] {
             let eng = FftConvEngine::new(mode, 16);
             let mut ws = Workspace::new();
             let mut y = vec![0f32; p.output_len()];

@@ -6,16 +6,19 @@
 //!
 //! * [`direct`]  — straightforward time-domain loops (the ccn2 analogue);
 //! * [`im2col`]  — matrix unrolling + in-tree SGEMM (the cuDNN analogue);
-//! * [`fft_conv`] — the Table-1 frequency pipeline in two flavours:
+//! * [`fft_conv`] — the Table-1 frequency pipeline in three flavours:
 //!   `Vendor` (explicit padding, separate transposes, planner FFTs — the
-//!   cuFFT-based implementation of §3) and `Fbfft` (implicit padding,
-//!   fused transposes, `fbfft_host` — the §5 implementation), with
+//!   cuFFT-based implementation of §3), `Fbfft` (implicit padding, fused
+//!   transposes, split-complex batch-lane SoA kernels with a planar
+//!   handoff straight into the CGEMM — the §5 implementation) and
+//!   `FbfftScalar` (the pre-SoA one-transform-at-a-time baseline), with
 //!   per-stage timing for the Table-5 breakdown;
 //! * [`tiled`]   — the §6 decomposition running `Fbfft` on small tiles.
 //!
 //! The frequency pipeline's hot stage lives in [`cgemm`]: a blocked,
-//! multithreaded per-bin complex GEMM on planar re/im panels, with the
-//! zero-allocation [`Workspace`] arena the passes thread through
+//! multithreaded per-bin complex GEMM on planar re/im panels (packed
+//! straight from the SoA planes in fbfft mode), with the zero-allocation
+//! [`Workspace`] arena the passes thread through
 //! `forward`/CGEMM/`inverse`.
 //!
 //! All engines implement all three training passes and cross-check

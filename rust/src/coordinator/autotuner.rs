@@ -159,13 +159,22 @@ impl Autotuner {
                 consider(Choice { strategy: Strategy::VendorFft,
                                   n_fft: Some(n), seconds: secs });
             }
-            // fbfft candidate (power-of-two basis)
+            // fbfft candidates (power-of-two basis): the SoA batch-lane
+            // engine and the scalar baseline are tuned separately — the
+            // lane mapping wins once the plane count covers the SIMD
+            // width, the scalar path can still edge it out on tiny
+            // batches, and the measured gap is the host analogue of the
+            // paper's §5.4 transform-level comparison
             let n = p.h.max(p.w).next_power_of_two();
-            if n <= crate::fft::fbfft_host::MAX_N {
-                let eng = FftConvEngine::new(FftMode::Fbfft, n);
-                let secs = time_fft(&eng, &mut ws, &mut fft_out);
-                consider(Choice { strategy: Strategy::Fbfft,
-                                  n_fft: Some(n), seconds: secs });
+            if (2..=crate::fft::fbfft_host::MAX_N).contains(&n) {
+                for (mode, strategy) in
+                    [(FftMode::Fbfft, Strategy::Fbfft),
+                     (FftMode::FbfftScalar, Strategy::FbfftScalar)] {
+                    let eng = FftConvEngine::new(mode, n);
+                    let secs = time_fft(&eng, &mut ws, &mut fft_out);
+                    consider(Choice { strategy, n_fft: Some(n),
+                                      seconds: secs });
+                }
             }
             // §6 tiled candidates, kernel-sized tiles (fprop family)
             if self.try_tiling && p.kh.max(p.kw) * 4 < p.h.min(p.w) {

@@ -25,11 +25,15 @@ use std::collections::HashMap;
 
 use crate::fft::C32;
 
-/// Role-keyed reusable buffer arena (`f32` and `C32` planes).
+/// Role-keyed reusable buffer arena (`f32`, `C32` and split-complex
+/// planar-pair planes).
 #[derive(Debug, Default)]
 pub struct BufferPool {
     bufs: HashMap<String, Vec<f32>>,
     bufs_c32: HashMap<String, Vec<C32>>,
+    /// planar re/im pairs — the SoA frequency slabs; a dedicated map so
+    /// a pair checkout is one lookup with no derived-key allocation
+    bufs_pair: HashMap<String, (Vec<f32>, Vec<f32>)>,
     /// counters for the reuse-vs-allocation report
     pub allocations: usize,
     pub expansions: usize,
@@ -145,6 +149,40 @@ impl BufferPool {
         self.bufs_c32.insert(role.to_string(), buf);
     }
 
+    /// Planar (split-complex) checkout: one re and one im `f32` plane of
+    /// `len` elements each under one role. The SoA frequency pipeline
+    /// holds every spectrum as such a pair — same stale-contents
+    /// contract as [`BufferPool::take_raw`], counted as one checkout.
+    pub fn take_planar_raw(&mut self, role: &str,
+                           len: usize) -> (Vec<f32>, Vec<f32>) {
+        match self.bufs_pair.remove(role) {
+            Some((mut re, mut im)) => {
+                if re.capacity() < len || im.capacity() < len {
+                    self.expansions += 1;
+                } else {
+                    self.reuses += 1;
+                }
+                for buf in [&mut re, &mut im] {
+                    if buf.len() > len {
+                        buf.truncate(len);
+                    } else {
+                        buf.resize(len, 0.0);
+                    }
+                }
+                (re, im)
+            }
+            None => {
+                self.allocations += 1;
+                (vec![0.0; len], vec![0.0; len])
+            }
+        }
+    }
+
+    /// Check a planar re/im pair back in, keeping both capacities.
+    pub fn put_planar(&mut self, role: &str, pair: (Vec<f32>, Vec<f32>)) {
+        self.bufs_pair.insert(role.to_string(), pair);
+    }
+
     /// Capacity currently held for an `f32` role (0 if never requested or
     /// currently checked out).
     pub fn capacity(&self, role: &str) -> usize {
@@ -158,11 +196,14 @@ impl BufferPool {
     pub fn total_elems(&self) -> usize {
         self.bufs.values().map(Vec::len).sum::<usize>()
             + 2 * self.bufs_c32.values().map(Vec::len).sum::<usize>()
+            + self.bufs_pair.values()
+                .map(|(re, im)| re.len() + im.len())
+                .sum::<usize>()
     }
 
     /// Number of distinct roles (the 'types of tensor involved').
     pub fn roles(&self) -> usize {
-        self.bufs.len() + self.bufs_c32.len()
+        self.bufs.len() + self.bufs_c32.len() + self.bufs_pair.len()
     }
 }
 
@@ -278,6 +319,28 @@ mod tests {
         assert_eq!(p.reuses, 1);
         assert_eq!(p.total_elems(), 16);
         assert_eq!(p.roles(), 1);
+    }
+
+    #[test]
+    fn planar_pair_round_trip_reuses_and_zeroes_growth() {
+        let mut p = BufferPool::new();
+        let (mut re, im) = p.take_planar_raw("soa", 4);
+        re.copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        p.put_planar("soa", (re, im));
+        assert_eq!(p.allocations, 1);
+        // same size: stale contents visible, pure reuse
+        let (re, im) = p.take_planar_raw("soa", 4);
+        assert_eq!(&re[..], &[1.0, 2.0, 3.0, 4.0]);
+        p.put_planar("soa", (re, im));
+        // shrink then regrow: the regrown tail is zeroed
+        let pair = p.take_planar_raw("soa", 2);
+        p.put_planar("soa", pair);
+        let (re, _im) = p.take_planar_raw("soa", 4);
+        assert_eq!(&re[2..], &[0.0, 0.0]);
+        assert_eq!(p.allocations, 1);
+        assert_eq!(p.expansions, 0);
+        assert_eq!(p.reuses, 3);
+        assert_eq!(p.roles(), 0, "pair is checked out");
     }
 
     #[test]

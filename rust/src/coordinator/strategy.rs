@@ -10,8 +10,11 @@ pub enum Strategy {
     Vendor,
     /// jnp.fft-based frequency convolution — the cuFFT-analogue.
     VendorFft,
-    /// The Pallas fbfft pipeline (§5).
+    /// The Pallas fbfft pipeline (§5) — host twin runs the SoA
+    /// batch-lane kernels.
     Fbfft,
+    /// The pre-SoA scalar fbfft host path, kept as a tunable baseline.
+    FbfftScalar,
     /// §6 tiling over fbfft with output-tile size d.
     FbfftTiled(usize),
     /// In-tree direct time-domain kernel (ccn2 analogue).
@@ -27,6 +30,7 @@ impl Strategy {
             Strategy::Vendor => "vendor".into(),
             Strategy::VendorFft => "vendor_fft".into(),
             Strategy::Fbfft => "fbfft".into(),
+            Strategy::FbfftScalar => "fbfft_scalar".into(),
             Strategy::FbfftTiled(d) => format!("fbfft_tiled.fprop.d{d}"),
             Strategy::Direct => "direct".into(),
             Strategy::Im2col => "im2col".into(),
@@ -38,6 +42,7 @@ impl Strategy {
             "vendor" => Strategy::Vendor,
             "vendor_fft" => Strategy::VendorFft,
             "fbfft" => Strategy::Fbfft,
+            "fbfft_scalar" => Strategy::FbfftScalar,
             "direct" => Strategy::Direct,
             "im2col" => Strategy::Im2col,
             t if t.starts_with("fbfft_tiled") => {
@@ -104,7 +109,8 @@ mod tests {
     #[test]
     fn tags_round_trip() {
         for s in [Strategy::Vendor, Strategy::VendorFft, Strategy::Fbfft,
-                  Strategy::Direct, Strategy::Im2col] {
+                  Strategy::FbfftScalar, Strategy::Direct,
+                  Strategy::Im2col] {
             assert_eq!(Strategy::from_tag(&s.tag()), Some(s));
         }
     }

@@ -84,6 +84,18 @@ pub struct CufftConvModel {
     /// fused transposes (elided), fewer launches, §5.4's measured ≥1.4×
     /// transform-level gain folded into the FFT stages
     pub fbfft: bool,
+    /// Batch-lane SIMD width the transform kernels exploit — the §5
+    /// mapping puts one transform per warp with the batch across the 32
+    /// lanes, so a scalar transform stream sustains 1/32 of the machine.
+    /// The FFT stages gain a lane-scaled compute-roofline term
+    /// `flops / (peak · fft_lanes/32)` alongside the bandwidth term;
+    /// on the Table-4/5 regimes bandwidth still binds (the fitted
+    /// defaults leave those predictions untouched) but scalar-lane
+    /// transforms (`fft_lanes = 1`, the pre-SoA host baseline) go
+    /// compute-bound at small bases, which is exactly the regime the
+    /// SoA rewrite targets. The host twin's width is
+    /// [`crate::fft::soa::LANES`].
+    pub fft_lanes: f64,
 }
 
 impl CufftConvModel {
@@ -94,6 +106,9 @@ impl CufftConvModel {
             gemm_eff: 0.35,
             trans_mem_eff: 0.90,
             fbfft: false,
+            // the planner's internal vectorization, fitted — well short
+            // of the full warp but never scalar
+            fft_lanes: 4.0,
         }
     }
 
@@ -102,6 +117,8 @@ impl CufftConvModel {
             // §5: 'reaches up to 78% efficiency'; §5.4: ≥1.4× over cuFFT
             fft_mem_eff: 0.60,
             fbfft: true,
+            // one transform per warp, batch across all 32 lanes (§5)
+            fft_lanes: 32.0,
             ..Self::vendor()
         }
     }
@@ -140,9 +157,17 @@ impl CufftConvModel {
         let t_wei = (p.fo * p.f) as f64;
         let t_out = (p.s * p.fo) as f64;
         let bw = self.hw.mem_bw * self.fft_mem_eff;
-        let fft_a = self.fft_bytes(t_in, n, p.h, p.w) / bw;
-        let fft_b = self.fft_bytes(t_wei, n, p.kh, p.kw) / bw;
-        let ifft = self.fft_bytes(t_out, n, n, n) / bw;
+        // each transform stage is a roofline: bandwidth-bound on the
+        // fitted regimes, compute-bound when the lane utilization drops
+        // (fft_lanes → 1 models the scalar-transform baseline)
+        let fft_rate =
+            self.hw.peak_flops * (self.fft_lanes / 32.0).min(1.0);
+        let fft_a = (self.fft_bytes(t_in, n, p.h, p.w) / bw)
+            .max(c.fft_a / fft_rate);
+        let fft_b = (self.fft_bytes(t_wei, n, p.kh, p.kw) / bw)
+            .max(c.fft_b / fft_rate);
+        let ifft = (self.fft_bytes(t_out, n, n, n) / bw)
+            .max(c.ifft_c / fft_rate);
         // CGEMM: roofline on the blocked engine's arithmetic intensity —
         // compute-bound once the reduction plane count saturates the
         // efficiency term, bandwidth-bound in the skinny-f regime where
@@ -269,6 +294,24 @@ mod tests {
         for r in &ratios {
             assert!(*r > 1.0, "fbfft slower somewhere: {r}");
         }
+    }
+
+    #[test]
+    fn fft_lanes_term_penalizes_scalar_transforms() {
+        // the §5 regime the SoA rewrite targets: small basis, plane-heavy
+        let p = ConvProblem::square(64, 16, 16, 13, 3);
+        let base = CufftConvModel::fbfft();
+        let mut scalar = base;
+        scalar.fft_lanes = 1.0;
+        let mut mid = base;
+        mid.fft_lanes = 8.0;
+        // scalar-lane transforms go compute-bound → strictly slower
+        assert!(scalar.time(&p, 16) > base.time(&p, 16),
+                "scalar {} vs lanes=32 {}", scalar.time(&p, 16),
+                base.time(&p, 16));
+        // and the term is monotone in lane width
+        assert!(mid.time(&p, 16) <= scalar.time(&p, 16));
+        assert!(base.time(&p, 16) <= mid.time(&p, 16));
     }
 
     #[test]

@@ -16,11 +16,11 @@
 //!    frequency-transposed `(kw, kh, batch)` layout the CGEMM stage wants,
 //!    eliding the separate transposition pass entirely.
 
-use std::collections::HashMap;
-use std::sync::{Arc, Mutex, OnceLock};
+use std::sync::{Arc, OnceLock};
 
 use super::complex::C32;
 use super::real::rfft_len;
+use super::soa;
 
 pub const MAX_N: usize = 256;
 
@@ -123,7 +123,12 @@ impl FbfftPlan {
                     buf[j] = C32::new(row_a[j], 0.0);
                 }
             }
-            buf[n_in..n].fill(C32::ZERO);
+            // only the padding tail needs clearing — positions 0..n_in
+            // were just overwritten (no redundant full-buffer memset on
+            // the n_in == n fast path)
+            if n_in < n {
+                buf[n_in..n].fill(C32::ZERO);
+            }
             self.cfft_in_place(&mut buf[..n], false);
             // Hermitian unpack of the packed pair:
             // A[k] = (Z[k]+conj(Z[n-k]))/2, B[k] = -i(Z[k]-conj(Z[n-k]))/2
@@ -201,7 +206,9 @@ impl FbfftPlan {
                      rows: &mut [C32], buf: &mut [C32; MAX_N]) {
         let n = self.n;
         let nf = rfft_len(n);
-        rows[..n * nf].fill(C32::ZERO);
+        // rows 0..h_in are fully written by the unpack loop below; only
+        // the zero-row tail h_in..n actually needs clearing
+        rows[h_in * nf..n * nf].fill(C32::ZERO);
         let mut r = 0;
         while r < h_in {
             let paired = r + 1 < h_in;
@@ -216,7 +223,9 @@ impl FbfftPlan {
                     buf[j] = C32::new(ra[j], 0.0);
                 }
             }
-            buf[w_in..n].fill(C32::ZERO);
+            if w_in < n {
+                buf[w_in..n].fill(C32::ZERO);
+            }
             self.cfft_in_place(&mut buf[..n], false);
             for k in 0..nf {
                 let zk = buf[k];
@@ -390,15 +399,302 @@ impl FbfftPlan {
         let w = self.twiddles[idx];
         if inverse { w.conj() } else { w }
     }
+
+    /// Cached bit-reversal of index `i` (used by the SoA batch kernels,
+    /// which permute whole lane rows instead of single elements).
+    #[inline]
+    pub fn bitrev(&self, i: usize) -> usize {
+        self.bitrev[i] as usize
+    }
+
+    // ---- split-complex (SoA) batch-lane 2-D transforms ----------------
+    //
+    // The batched twins of the scalar 2-D path above, built on
+    // [`crate::fft::soa::cfft_batch`]: every plane/row/column index is a
+    // *lane*, batch is the contiguous innermost axis, and the complex
+    // data lives in separate re/im `f32` planes. Layouts:
+    //
+    //   rows planes:  `[r][k][b]`   (n × nf × batch, batch innermost)
+    //   output planes: `[kw][kh][b]` (nf × n × batch) — the same fused
+    //   transposed bin-major layout as the scalar path, split-complex,
+    //   handed to the planar CGEMM with **no repacking stage at all**.
+
+    /// SoA pass 1 over the row-pair range `[rp0, rp0+rpn)` (row pairs of
+    /// the §5.2 two-reals-in-one-complex pack; pair `rp` covers image
+    /// rows `2rp` and `2rp+1`). All `batch` images advance in lanes.
+    /// `rows_*` receive the `2·rpn × nf × batch` chunk starting at row
+    /// `2·rp0`; `work_*` are per-caller scratch of `n·batch` (dirty ok).
+    /// Threads split the full `0..n/2` pair range into contiguous chunks.
+    #[allow(clippy::too_many_arguments)]
+    pub fn rfft2_rows_soa(&self, input: &[f32], h_in: usize, w_in: usize,
+                          batch: usize, rp0: usize, rpn: usize,
+                          rows_re: &mut [f32], rows_im: &mut [f32],
+                          work_re: &mut [f32], work_im: &mut [f32]) {
+        let n = self.n;
+        let nf = rfft_len(n);
+        assert!(h_in <= n && w_in <= n, "image exceeds basis");
+        assert_eq!(input.len(), batch * h_in * w_in);
+        assert!(2 * (rp0 + rpn) <= n);
+        assert_eq!(rows_re.len(), 2 * rpn * nf * batch);
+        assert_eq!(rows_im.len(), 2 * rpn * nf * batch);
+        assert!(work_re.len() >= n * batch && work_im.len() >= n * batch,
+                "work scratch too small");
+        if batch == 0 {
+            return;
+        }
+        let work_re = &mut work_re[..n * batch];
+        let work_im = &mut work_im[..n * batch];
+        let hw = h_in * w_in;
+        for rp in 0..rpn {
+            let r0 = 2 * (rp0 + rp);
+            let r1 = r0 + 1;
+            let c0 = 2 * rp * nf * batch; // chunk offset of row r0
+            let c1 = c0 + nf * batch; // chunk offset of row r1
+            if r0 >= h_in {
+                // transform of all-zero rows is zero — pure memset
+                rows_re[c0..c1 + nf * batch].fill(0.0);
+                rows_im[c0..c1 + nf * batch].fill(0.0);
+                continue;
+            }
+            let paired = r1 < h_in;
+            // lane load: row r0 → re plane, row r1 → im plane (§5.2);
+            // b-outer keeps the image reads perfectly sequential
+            for b in 0..batch {
+                let ra = &input[b * hw + r0 * w_in..][..w_in];
+                for (j, v) in ra.iter().enumerate() {
+                    work_re[j * batch + b] = *v;
+                }
+                if paired {
+                    let rb = &input[b * hw + r1 * w_in..][..w_in];
+                    for (j, v) in rb.iter().enumerate() {
+                        work_im[j * batch + b] = *v;
+                    }
+                } else {
+                    for j in 0..w_in {
+                        work_im[j * batch + b] = 0.0;
+                    }
+                }
+            }
+            // implicit padding: clear only the w_in..n tail
+            if w_in < n {
+                work_re[w_in * batch..].fill(0.0);
+                work_im[w_in * batch..].fill(0.0);
+            }
+            soa::cfft_batch(self, work_re, work_im, batch, false);
+            // Hermitian unpack of the packed pair, lane-wise per bin —
+            // row r0 (A) lands below c1, row r1 (B) at or above it
+            let (a_rows_re, b_rows_re) = rows_re.split_at_mut(c1);
+            let (a_rows_im, b_rows_im) = rows_im.split_at_mut(c1);
+            for k in 0..nf {
+                let m = (n - k) % n;
+                let a0 = c0 + k * batch;
+                let b0 = k * batch; // offset within the post-c1 half
+                let b_out = if paired {
+                    Some((&mut b_rows_re[b0..b0 + batch],
+                          &mut b_rows_im[b0..b0 + batch]))
+                } else {
+                    None
+                };
+                soa::unpack_pair_bin(
+                    &work_re[k * batch..(k + 1) * batch],
+                    &work_im[k * batch..(k + 1) * batch],
+                    &work_re[m * batch..(m + 1) * batch],
+                    &work_im[m * batch..(m + 1) * batch],
+                    &mut a_rows_re[a0..a0 + batch],
+                    &mut a_rows_im[a0..a0 + batch], b_out, batch);
+            }
+            if !paired {
+                b_rows_re[..nf * batch].fill(0.0);
+                b_rows_im[..nf * batch].fill(0.0);
+            }
+        }
+    }
+
+    /// SoA pass 2 over `kw ∈ [kw0, kw0+kwn)`: batched C2C down the
+    /// columns of the full rows planes (`n × nf × batch`), writing the
+    /// planar fused-transposed chunk `kwn × n × batch` in place — the
+    /// gather lands directly in the output slab and the FFT runs there,
+    /// so the column pass stores contiguously with zero extra copies.
+    #[allow(clippy::too_many_arguments)]
+    pub fn rfft2_cols_soa(&self, rows_re: &[f32], rows_im: &[f32],
+                          batch: usize, kw0: usize, kwn: usize,
+                          out_re: &mut [f32], out_im: &mut [f32]) {
+        let n = self.n;
+        let nf = rfft_len(n);
+        assert_eq!(rows_re.len(), n * nf * batch);
+        assert_eq!(rows_im.len(), n * nf * batch);
+        assert!(kw0 + kwn <= nf);
+        assert_eq!(out_re.len(), kwn * n * batch);
+        assert_eq!(out_im.len(), kwn * n * batch);
+        if batch == 0 {
+            return;
+        }
+        for kw in kw0..kw0 + kwn {
+            let oc = (kw - kw0) * n * batch;
+            let oc_re = &mut out_re[oc..oc + n * batch];
+            let oc_im = &mut out_im[oc..oc + n * batch];
+            for r in 0..n {
+                let src = (r * nf + kw) * batch;
+                oc_re[r * batch..(r + 1) * batch]
+                    .copy_from_slice(&rows_re[src..src + batch]);
+                oc_im[r * batch..(r + 1) * batch]
+                    .copy_from_slice(&rows_im[src..src + batch]);
+            }
+            soa::cfft_batch(self, oc_re, oc_im, batch, false);
+        }
+    }
+
+    /// Batched 2-D R2C in split-complex form: `input` is
+    /// `batch × h_in × w_in` row-major, the output planes hold the fused
+    /// transposed `(n/2+1) × n × batch` bin-major layout. Serial
+    /// convenience over the two phase entry points above (the pipeline
+    /// threads those directly with pooled scratch).
+    pub fn rfft2_batch_soa(&self, input: &[f32], h_in: usize, w_in: usize,
+                           batch: usize, out_re: &mut [f32],
+                           out_im: &mut [f32]) {
+        let n = self.n;
+        let nf = rfft_len(n);
+        assert_eq!(out_re.len(), nf * n * batch);
+        assert_eq!(out_im.len(), nf * n * batch);
+        let mut rows_re = vec![0f32; n * nf * batch];
+        let mut rows_im = vec![0f32; n * nf * batch];
+        let mut work_re = vec![0f32; n * batch];
+        let mut work_im = vec![0f32; n * batch];
+        self.rfft2_rows_soa(input, h_in, w_in, batch, 0, n / 2,
+                            &mut rows_re, &mut rows_im, &mut work_re,
+                            &mut work_im);
+        self.rfft2_cols_soa(&rows_re, &rows_im, batch, 0, nf, out_re,
+                            out_im);
+    }
+
+    /// SoA inverse for the lane group `[b0, b0+bn)` out of the planar
+    /// fused-transposed spectrum (`nf × n × batch`), normalized and
+    /// clipped to `clip_h × clip_w` per image. `out_chunk` receives the
+    /// `bn` images (`bn × clip_h × clip_w` row-major). `rows_*` scratch
+    /// needs `clip_h·nf·bn`, `work_*` needs `n·bn` (dirty contents fine).
+    /// The pipeline threads this over LANES-aligned batch groups.
+    #[allow(clippy::too_many_arguments)]
+    pub fn irfft2_soa_chunk(&self, spec_re: &[f32], spec_im: &[f32],
+                            batch: usize, b0: usize, bn: usize,
+                            clip_h: usize, clip_w: usize,
+                            rows_re: &mut [f32], rows_im: &mut [f32],
+                            work_re: &mut [f32], work_im: &mut [f32],
+                            out_chunk: &mut [f32]) {
+        let n = self.n;
+        let nf = rfft_len(n);
+        assert_eq!(spec_re.len(), nf * n * batch);
+        assert_eq!(spec_im.len(), nf * n * batch);
+        assert!(b0 + bn <= batch);
+        assert!(clip_h <= n && clip_w <= n);
+        assert_eq!(out_chunk.len(), bn * clip_h * clip_w);
+        assert!(rows_re.len() >= clip_h * nf * bn
+                && rows_im.len() >= clip_h * nf * bn,
+                "rows scratch too small");
+        assert!(work_re.len() >= n * bn && work_im.len() >= n * bn,
+                "work scratch too small");
+        if bn == 0 {
+            return;
+        }
+        let work_re = &mut work_re[..n * bn];
+        let work_im = &mut work_im[..n * bn];
+        // pass 1: inverse C2C along kh per kw bin; the spectrum is
+        // already kw-major so the lane gathers are contiguous bn-runs
+        for kw in 0..nf {
+            for kh in 0..n {
+                let src = (kw * n + kh) * batch + b0;
+                work_re[kh * bn..(kh + 1) * bn]
+                    .copy_from_slice(&spec_re[src..src + bn]);
+                work_im[kh * bn..(kh + 1) * bn]
+                    .copy_from_slice(&spec_im[src..src + bn]);
+            }
+            soa::cfft_batch(self, work_re, work_im, bn, true);
+            for r in 0..clip_h {
+                let dst = (r * nf + kw) * bn;
+                rows_re[dst..dst + bn]
+                    .copy_from_slice(&work_re[r * bn..(r + 1) * bn]);
+                rows_im[dst..dst + bn]
+                    .copy_from_slice(&work_im[r * bn..(r + 1) * bn]);
+            }
+        }
+        // pass 2: C2R along rows, two rows per complex inverse (§5.2
+        // pack run backwards: Z = A + i·B, Re ← row 2rp, Im ← row 2rp+1)
+        let scale = 1.0 / (n * n) as f32;
+        let clip = clip_h * clip_w;
+        let mut rp = 0;
+        while 2 * rp < clip_h {
+            let r0 = 2 * rp;
+            let r1 = r0 + 1;
+            let paired = r1 < clip_h;
+            for k in 0..n {
+                let (src, conj) = if k < nf { (k, false) } else { (n - k, true) };
+                let a = (r0 * nf + src) * bn;
+                let wr = &mut work_re[k * bn..(k + 1) * bn];
+                let wi = &mut work_im[k * bn..(k + 1) * bn];
+                let sgn = if conj { -1.0f32 } else { 1.0 };
+                if paired {
+                    let b = (r1 * nf + src) * bn;
+                    for l in 0..bn {
+                        let (ar, ai) = (rows_re[a + l], sgn * rows_im[a + l]);
+                        let (br, bi) = (rows_re[b + l], sgn * rows_im[b + l]);
+                        wr[l] = ar - bi;
+                        wi[l] = ai + br;
+                    }
+                } else {
+                    for l in 0..bn {
+                        wr[l] = rows_re[a + l];
+                        wi[l] = sgn * rows_im[a + l];
+                    }
+                }
+            }
+            soa::cfft_batch(self, work_re, work_im, bn, true);
+            for l in 0..bn {
+                let o0 = l * clip + r0 * clip_w;
+                for c in 0..clip_w {
+                    out_chunk[o0 + c] = work_re[c * bn + l] * scale;
+                }
+                if paired {
+                    let o1 = l * clip + r1 * clip_w;
+                    for c in 0..clip_w {
+                        out_chunk[o1 + c] = work_im[c * bn + l] * scale;
+                    }
+                }
+            }
+            rp += 1;
+        }
+    }
+
+    /// Batched 2-D C2R from the planar transposed layout, normalized and
+    /// clipped — serial convenience over [`FbfftPlan::irfft2_soa_chunk`].
+    pub fn irfft2_batch_soa(&self, spec_re: &[f32], spec_im: &[f32],
+                            batch: usize, clip_h: usize, clip_w: usize,
+                            out: &mut [f32]) {
+        let n = self.n;
+        let nf = rfft_len(n);
+        let mut rows_re = vec![0f32; clip_h * nf * batch];
+        let mut rows_im = vec![0f32; clip_h * nf * batch];
+        let mut work_re = vec![0f32; n * batch];
+        let mut work_im = vec![0f32; n * batch];
+        self.irfft2_soa_chunk(spec_re, spec_im, batch, 0, batch, clip_h,
+                              clip_w, &mut rows_re, &mut rows_im,
+                              &mut work_re, &mut work_im, out);
+    }
 }
 
-/// Process-wide fbfft plan cache.
+/// Process-wide fbfft plan cache, lock-free: the legal sizes are the
+/// powers of two `2..=256`, so the cache is a fixed array indexed by
+/// `log2 n` with one `OnceLock` per slot. The threaded pipeline fan-outs
+/// call this once per worker per pass — under the old `Mutex<HashMap>`
+/// every lookup serialized on one lock; now a warm lookup is a single
+/// atomic load.
 pub fn cached(n: usize) -> Arc<FbfftPlan> {
-    static CACHE: OnceLock<Mutex<HashMap<usize, Arc<FbfftPlan>>>> =
-        OnceLock::new();
-    let cache = CACHE.get_or_init(|| Mutex::new(HashMap::new()));
-    let mut guard = cache.lock().expect("fbfft plan cache poisoned");
-    guard.entry(n).or_insert_with(|| Arc::new(FbfftPlan::new(n))).clone()
+    assert!(n.is_power_of_two() && (2..=MAX_N).contains(&n),
+            "fbfft supports power-of-two sizes 2..=256, got {n}");
+    // array-repeat seed, not a shared value (each slot is its own cell)
+    #[allow(clippy::declare_interior_mutable_const)]
+    const EMPTY: OnceLock<Arc<FbfftPlan>> = OnceLock::new();
+    static CACHE: [OnceLock<Arc<FbfftPlan>>; 8] = [EMPTY; 8];
+    let slot = n.trailing_zeros() as usize - 1;
+    CACHE[slot].get_or_init(|| Arc::new(FbfftPlan::new(n))).clone()
 }
 
 #[cfg(test)]
@@ -423,6 +719,29 @@ mod tests {
         for n in [0usize, 1, 3, 12, 512] {
             assert!(std::panic::catch_unwind(|| FbfftPlan::new(n)).is_err(),
                     "n={n} should be rejected");
+        }
+    }
+
+    #[test]
+    fn plan_cache_is_per_size_and_rejects_bad_sizes() {
+        // every legal size gets exactly one shared plan, including under
+        // concurrent first access (the lock-free OnceLock-array cache)
+        for n in [2usize, 4, 8, 16, 32, 64, 128, 256] {
+            let from_threads: Vec<Arc<FbfftPlan>> =
+                std::thread::scope(|s| {
+                    let handles: Vec<_> =
+                        (0..4).map(|_| s.spawn(move || cached(n))).collect();
+                    handles.into_iter().map(|h| h.join().unwrap()).collect()
+                });
+            for p in &from_threads {
+                assert_eq!(p.len(), n);
+                assert!(Arc::ptr_eq(p, &from_threads[0]),
+                        "n={n}: cache handed out distinct plans");
+            }
+        }
+        for n in [0usize, 3, 12, 512] {
+            assert!(std::panic::catch_unwind(|| cached(n)).is_err(),
+                    "cached({n}) should panic");
         }
     }
 
@@ -559,6 +878,98 @@ mod tests {
                 assert!((g - o).abs() < 2e-3);
             }
         }
+    }
+
+    #[test]
+    fn soa_2d_forward_matches_scalar_transposed() {
+        // the SoA path follows the scalar operation order exactly, so
+        // the planar planes must reproduce the interleaved output
+        for (n, h, w, batch) in [(16usize, 11usize, 9usize, 5usize),
+                                 (8, 8, 8, 1), (32, 20, 32, 12)] {
+            let x = rand_real(batch * h * w, 21 + n as u64);
+            let plan = FbfftPlan::new(n);
+            let nf = n / 2 + 1;
+            let mut want = vec![C32::ZERO; nf * n * batch];
+            plan.rfft2_batch_transposed(&x, h, w, batch, &mut want);
+            let mut got_re = vec![0f32; nf * n * batch];
+            let mut got_im = vec![0f32; nf * n * batch];
+            plan.rfft2_batch_soa(&x, h, w, batch, &mut got_re, &mut got_im);
+            for (i, wv) in want.iter().enumerate() {
+                let g = C32::new(got_re[i], got_im[i]);
+                assert!((g - *wv).abs() < 1e-4 * (n as f32),
+                        "n={n} h={h} w={w} batch={batch} i={i}: \
+                         {g:?} vs {wv:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn soa_2d_round_trip_and_chunked_inverse() {
+        let (n, h, w, batch) = (16usize, 12usize, 10usize, 11usize);
+        let x = rand_real(batch * h * w, 31);
+        let plan = FbfftPlan::new(n);
+        let nf = n / 2 + 1;
+        let mut sr = vec![0f32; nf * n * batch];
+        let mut si = vec![0f32; nf * n * batch];
+        plan.rfft2_batch_soa(&x, h, w, batch, &mut sr, &mut si);
+        // whole-batch inverse round-trips
+        let mut back = vec![0f32; batch * h * w];
+        plan.irfft2_batch_soa(&sr, &si, batch, h, w, &mut back);
+        for (g, o) in back.iter().zip(&x) {
+            assert!((g - o).abs() < 2e-3);
+        }
+        // ragged batch-group chunks reproduce it exactly (the threaded
+        // pipeline decomposition), with dirty per-chunk scratch
+        let mut chunked = vec![0f32; batch * h * w];
+        let mut rows_re = vec![3f32; h * nf * batch];
+        let mut rows_im = vec![-9f32; h * nf * batch];
+        let mut work_re = vec![1f32; n * batch];
+        let mut work_im = vec![2f32; n * batch];
+        for (b0, bn) in [(0usize, 3usize), (3, 8)] {
+            plan.irfft2_soa_chunk(&sr, &si, batch, b0, bn, h, w,
+                                  &mut rows_re, &mut rows_im,
+                                  &mut work_re, &mut work_im,
+                                  &mut chunked[b0 * h * w
+                                      ..(b0 + bn) * h * w]);
+        }
+        assert_eq!(chunked, back);
+    }
+
+    #[test]
+    fn soa_phase_split_equals_fused_batch() {
+        // row-pair and kw chunking must reproduce the serial SoA batch
+        // bitwise — the threaded pipeline depends on it
+        let (n, h, w, batch) = (16usize, 13usize, 9usize, 7usize);
+        let x = rand_real(batch * h * w, 41);
+        let plan = FbfftPlan::new(n);
+        let nf = n / 2 + 1;
+        let mut want_re = vec![0f32; nf * n * batch];
+        let mut want_im = vec![0f32; nf * n * batch];
+        plan.rfft2_batch_soa(&x, h, w, batch, &mut want_re, &mut want_im);
+        let mut rows_re = vec![0f32; n * nf * batch];
+        let mut rows_im = vec![0f32; n * nf * batch];
+        let mut work_re = vec![5f32; n * batch];
+        let mut work_im = vec![-5f32; n * batch];
+        // ragged row-pair chunks: 3 + 5 = n/2 pairs
+        for (rp0, rpn) in [(0usize, 3usize), (3, 5)] {
+            let c = 2 * rp0 * nf * batch;
+            let len = 2 * rpn * nf * batch;
+            plan.rfft2_rows_soa(&x, h, w, batch, rp0, rpn,
+                                &mut rows_re[c..c + len],
+                                &mut rows_im[c..c + len], &mut work_re,
+                                &mut work_im);
+        }
+        let mut got_re = vec![0f32; nf * n * batch];
+        let mut got_im = vec![0f32; nf * n * batch];
+        for (kw0, kwn) in [(0usize, 4usize), (4, 5)] {
+            let c = kw0 * n * batch;
+            let len = kwn * n * batch;
+            plan.rfft2_cols_soa(&rows_re, &rows_im, batch, kw0, kwn,
+                                &mut got_re[c..c + len],
+                                &mut got_im[c..c + len]);
+        }
+        assert_eq!(got_re, want_re);
+        assert_eq!(got_im, want_im);
     }
 
     #[test]

@@ -10,7 +10,9 @@
 //! * **[`fbfft_host`]** — the batched small-transform specialist
 //!   reproducing the paper's §5 design points on this testbed: sizes
 //!   8–256, implicit zero-copy padding, fused transposed output, batch
-//!   panel blocking, per-size cached twiddle/bit-reversal tables.
+//!   panel blocking, per-size cached twiddle/bit-reversal tables — with
+//!   the [`soa`] split-complex batch-lane kernels underneath (batch
+//!   mapped across SIMD lanes, the CPU image of the §5 warp mapping).
 //!
 //! Everything is `f32` (the paper is single-precision throughout);
 //! correctness tests compare against an `f64` naive DFT.
@@ -23,6 +25,7 @@ pub mod fft2d;
 pub mod plan;
 pub mod radix;
 pub mod real;
+pub mod soa;
 
 pub use complex::C32;
 pub use plan::{Direction, Plan};

@@ -1,0 +1,406 @@
+//! Split-complex (SoA) batch-lane FFT kernels — the CPU image of the
+//! paper's §5 warp mapping.
+//!
+//! The Pallas/fbfft design point this module transplants: map the *batch*
+//! dimension across parallel lanes so one butterfly instruction stream
+//! executes simultaneously for many transforms (paper §5: one transform
+//! per warp, batch across threads). On the host that means:
+//!
+//! * **split-complex planes** — `re[]` / `im[]` as separate flat `f32`
+//!   slices (Zlateski et al., arXiv:1809.07851: CPU FFT convolutions live
+//!   or die by SIMD-friendly SoA layouts), so no interleave shuffles sit
+//!   between loads and FMAs;
+//! * **batch-innermost layout** — element `j` of transform `b` lives at
+//!   `j * batch + b`, so every butterfly's inner loop runs over a flat
+//!   contiguous lane slice the compiler autovectorizes;
+//! * **loop-invariant twiddles** — within one butterfly the twiddle is a
+//!   pair of scalar broadcasts, hoisted out of the lane loop;
+//! * **[`LANES`]-wide passes** — the lane loops process `LANES = 8`
+//!   transforms per pass through fixed-size arrays (one AVX2 register of
+//!   `f32`), with a scalar tail for ragged batches.
+//!
+//! The kernels reuse [`FbfftPlan`]'s cached bit-reversal and stage-major
+//! twiddle tables, and follow the exact operation order of the scalar
+//! [`FbfftPlan::cfft_in_place`] path — a lane of the batched transform is
+//! arithmetically identical to one scalar transform, so the conformance
+//! gap between the two paths is pure reassociation-free floating point.
+
+use super::complex::C32;
+use super::fbfft_host::FbfftPlan;
+use super::real::rfft_len;
+
+/// Transforms processed per vectorized pass of the lane loops (the rest
+/// of a ragged batch takes the scalar tail). Eight `f32` lanes = one
+/// 256-bit SIMD register.
+pub const LANES: usize = 8;
+
+/// `dst[i] = a[i] op b[i]`-style butterfly over one lane slice:
+/// `(top, bot) <- (top + w·bot, top - w·bot)` for all `batch` lanes,
+/// with the twiddle `(wr, wi)` broadcast. `LANES` at a time + tail.
+#[inline(always)]
+fn butterfly_lanes(tr_: &mut [f32], ti_: &mut [f32], br_: &mut [f32],
+                   bi_: &mut [f32], wr: f32, wi: f32, batch: usize) {
+    let (tr_, ti_) = (&mut tr_[..batch], &mut ti_[..batch]);
+    let (br_, bi_) = (&mut br_[..batch], &mut bi_[..batch]);
+    let mut b = 0;
+    while b + LANES <= batch {
+        for l in 0..LANES {
+            let i = b + l;
+            let vr = br_[i] * wr - bi_[i] * wi;
+            let vi = br_[i] * wi + bi_[i] * wr;
+            let ur = tr_[i];
+            let ui = ti_[i];
+            tr_[i] = ur + vr;
+            ti_[i] = ui + vi;
+            br_[i] = ur - vr;
+            bi_[i] = ui - vi;
+        }
+        b += LANES;
+    }
+    while b < batch {
+        let vr = br_[b] * wr - bi_[b] * wi;
+        let vi = br_[b] * wi + bi_[b] * wr;
+        let ur = tr_[b];
+        let ui = ti_[b];
+        tr_[b] = ur + vr;
+        ti_[b] = ui + vi;
+        br_[b] = ur - vr;
+        bi_[b] = ui - vi;
+        b += 1;
+    }
+}
+
+/// Batched in-place complex FFT over split-complex planes: `re`/`im` hold
+/// `n × batch` values, element `j` of transform `b` at `j·batch + b`
+/// (batch innermost). Iterative radix-2 DIT with the plan's cached LUTs —
+/// the batched twin of [`FbfftPlan::cfft_in_place`], one whole batch per
+/// butterfly pass.
+pub fn cfft_batch(plan: &FbfftPlan, re: &mut [f32], im: &mut [f32],
+                  batch: usize, inverse: bool) {
+    let n = plan.len();
+    assert_eq!(re.len(), n * batch, "re plane length");
+    assert_eq!(im.len(), n * batch, "im plane length");
+    if batch == 0 {
+        return;
+    }
+    // bit-reversal permutation of whole lane rows
+    for i in 0..n {
+        let j = plan.bitrev(i);
+        if i < j {
+            let (rl, rh) = re.split_at_mut(j * batch);
+            rl[i * batch..i * batch + batch]
+                .swap_with_slice(&mut rh[..batch]);
+            let (il, ih) = im.split_at_mut(j * batch);
+            il[i * batch..i * batch + batch]
+                .swap_with_slice(&mut ih[..batch]);
+        }
+    }
+    let log2n = n.trailing_zeros();
+    let mut tw_off = 0usize;
+    for s in 0..log2n {
+        let half = 1usize << s;
+        let m = half << 1;
+        let mut base = 0;
+        while base < n {
+            for j in 0..half {
+                let w = plan.twiddle(tw_off + j, inverse);
+                // rows base+j and base+j+half never alias
+                let top = (base + j) * batch;
+                let bot = (base + j + half) * batch;
+                let (rl, rh) = re.split_at_mut(bot);
+                let (il, ih) = im.split_at_mut(bot);
+                butterfly_lanes(&mut rl[top..top + batch],
+                                &mut il[top..top + batch],
+                                &mut rh[..batch], &mut ih[..batch],
+                                w.re, w.im, batch);
+            }
+            base += m;
+        }
+        tw_off += half;
+    }
+}
+
+/// Hermitian unpack of a §5.2 pair-packed spectrum, one bin `k` over all
+/// lanes: given `Z = A + iB` (two real signals packed re/im),
+/// `A[k] = (Z[k] + conj(Z[n-k]))/2` into `(ar, ai)` and, when `b_out` is
+/// `Some`, `B[k] = -i·(Z[k] - conj(Z[n-k]))/2` into it.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub(crate) fn unpack_pair_bin(zr_k: &[f32], zi_k: &[f32], zr_m: &[f32],
+                              zi_m: &[f32], ar: &mut [f32], ai: &mut [f32],
+                              b_out: Option<(&mut [f32], &mut [f32])>,
+                              batch: usize) {
+    for b in 0..batch {
+        let (kr, ki) = (zr_k[b], zi_k[b]);
+        let (mr, mi) = (zr_m[b], -zi_m[b]); // conj(Z[n-k])
+        ar[b] = 0.5 * (kr + mr);
+        ai[b] = 0.5 * (ki + mi);
+    }
+    if let Some((br, bi)) = b_out {
+        for b in 0..batch {
+            let (kr, ki) = (zr_k[b], zi_k[b]);
+            let (mr, mi) = (zr_m[b], -zi_m[b]);
+            // -i·(Z - conj(Zm))/2 = (im-part, -re-part)/2
+            br[b] = 0.5 * (ki - mi);
+            bi[b] = -0.5 * (kr - mr);
+        }
+    }
+}
+
+/// Batched 1-D R2C in SoA form with implicit zero padding and the §5.2
+/// two-reals-in-one-complex pack across consecutive batch rows: `input`
+/// is `batch × n_in` row-major (`n_in ≤ n`), the output planes hold the
+/// **bin-major** `(n/2+1) × batch` layout (`out[k·batch + b]`). `work_*`
+/// are caller scratch of `n · ⌈batch/2⌉` (dirty contents fine).
+#[allow(clippy::too_many_arguments)]
+pub fn rfft_batch_soa(plan: &FbfftPlan, input: &[f32], n_in: usize,
+                      batch: usize, out_re: &mut [f32],
+                      out_im: &mut [f32], work_re: &mut [f32],
+                      work_im: &mut [f32]) {
+    let n = plan.len();
+    assert!(n_in <= n, "n_in {n_in} exceeds plan size {n}");
+    assert_eq!(input.len(), batch * n_in);
+    let nf = rfft_len(n);
+    assert_eq!(out_re.len(), nf * batch);
+    assert_eq!(out_im.len(), nf * batch);
+    if batch == 0 {
+        return;
+    }
+    let pairs = batch.div_ceil(2);
+    assert!(work_re.len() >= n * pairs && work_im.len() >= n * pairs,
+            "work scratch too small");
+    let work_re = &mut work_re[..n * pairs];
+    let work_im = &mut work_im[..n * pairs];
+    // lane load: pair (2p, 2p+1) → (re, im); implicit padding past n_in
+    for j in 0..n_in {
+        let wr = &mut work_re[j * pairs..(j + 1) * pairs];
+        let wi = &mut work_im[j * pairs..(j + 1) * pairs];
+        for p in 0..pairs {
+            wr[p] = input[2 * p * n_in + j];
+            wi[p] = if 2 * p + 1 < batch {
+                input[(2 * p + 1) * n_in + j]
+            } else {
+                0.0
+            };
+        }
+    }
+    if n_in < n {
+        work_re[n_in * pairs..].fill(0.0);
+        work_im[n_in * pairs..].fill(0.0);
+    }
+    cfft_batch(plan, work_re, work_im, pairs, false);
+    // Hermitian unpack, lane p → batch rows 2p (A) and 2p+1 (B),
+    // written straight into the strided output (no temporaries — the
+    // contiguous-lane form of this math lives in [`unpack_pair_bin`])
+    for k in 0..nf {
+        let m = (n - k) % n;
+        let zr_k = &work_re[k * pairs..(k + 1) * pairs];
+        let zi_k = &work_im[k * pairs..(k + 1) * pairs];
+        let zr_m = &work_re[m * pairs..(m + 1) * pairs];
+        let zi_m = &work_im[m * pairs..(m + 1) * pairs];
+        let or = &mut out_re[k * batch..(k + 1) * batch];
+        let oi = &mut out_im[k * batch..(k + 1) * batch];
+        for p in 0..pairs {
+            let (kr, ki) = (zr_k[p], zi_k[p]);
+            let (mr, mi) = (zr_m[p], -zi_m[p]); // conj(Z[n-k])
+            // A[k] = (Z[k] + conj(Z[n-k])) / 2
+            or[2 * p] = 0.5 * (kr + mr);
+            oi[2 * p] = 0.5 * (ki + mi);
+            if 2 * p + 1 < batch {
+                // B[k] = -i · (Z[k] - conj(Z[n-k])) / 2
+                or[2 * p + 1] = 0.5 * (ki - mi);
+                oi[2 * p + 1] = -0.5 * (kr - mr);
+            }
+        }
+    }
+}
+
+/// Inverse of [`rfft_batch_soa`]: bin-major `(n/2+1) × batch` planes in,
+/// normalized real rows out (`batch × clip` row-major), pairwise-packed.
+/// `work_*` are caller scratch of `n · ⌈batch/2⌉`.
+#[allow(clippy::too_many_arguments)]
+pub fn irfft_batch_soa(plan: &FbfftPlan, spec_re: &[f32], spec_im: &[f32],
+                       batch: usize, clip: usize, out: &mut [f32],
+                       work_re: &mut [f32], work_im: &mut [f32]) {
+    let n = plan.len();
+    let nf = rfft_len(n);
+    assert!(clip <= n);
+    assert_eq!(spec_re.len(), nf * batch);
+    assert_eq!(spec_im.len(), nf * batch);
+    assert_eq!(out.len(), batch * clip);
+    if batch == 0 {
+        return;
+    }
+    let pairs = batch.div_ceil(2);
+    assert!(work_re.len() >= n * pairs && work_im.len() >= n * pairs,
+            "work scratch too small");
+    let work_re = &mut work_re[..n * pairs];
+    let work_im = &mut work_im[..n * pairs];
+    // rebuild Z = A + i·B on the full circle via Hermitian extension
+    for k in 0..n {
+        let wr = &mut work_re[k * pairs..(k + 1) * pairs];
+        let wi = &mut work_im[k * pairs..(k + 1) * pairs];
+        let (src, sign) = if k < nf {
+            (k, 1.0f32)
+        } else {
+            (n - k, -1.0) // conj(A), conj(B): flips both im parts
+        };
+        let sr = &spec_re[src * batch..(src + 1) * batch];
+        let si = &spec_im[src * batch..(src + 1) * batch];
+        for p in 0..pairs {
+            let (a_re, a_im) = (sr[2 * p], sign * si[2 * p]);
+            let (b_re, b_im) = if 2 * p + 1 < batch {
+                (sr[2 * p + 1], sign * si[2 * p + 1])
+            } else {
+                (0.0, 0.0)
+            };
+            // Z = A + i·B  (with A/B already conjugated past nf)
+            wr[p] = a_re - b_im;
+            wi[p] = a_im + b_re;
+        }
+    }
+    cfft_batch(plan, work_re, work_im, pairs, true);
+    let scale = 1.0 / n as f32;
+    for j in 0..clip {
+        let wr = &work_re[j * pairs..(j + 1) * pairs];
+        let wi = &work_im[j * pairs..(j + 1) * pairs];
+        for p in 0..pairs {
+            out[2 * p * clip + j] = wr[p] * scale;
+            if 2 * p + 1 < batch {
+                out[(2 * p + 1) * clip + j] = wi[p] * scale;
+            }
+        }
+    }
+}
+
+/// Split an interleaved `C32` slice into planar re/im planes.
+pub fn split_complex(src: &[C32], re: &mut [f32], im: &mut [f32]) {
+    assert_eq!(src.len(), re.len());
+    assert_eq!(src.len(), im.len());
+    for ((s, r), i) in src.iter().zip(re.iter_mut()).zip(im.iter_mut()) {
+        *r = s.re;
+        *i = s.im;
+    }
+}
+
+/// Re-interleave planar re/im planes into a `C32` slice.
+pub fn interleave_complex(re: &[f32], im: &[f32], dst: &mut [C32]) {
+    assert_eq!(dst.len(), re.len());
+    assert_eq!(dst.len(), im.len());
+    for ((d, r), i) in dst.iter_mut().zip(re.iter()).zip(im.iter()) {
+        *d = C32::new(*r, *i);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::real::rfft;
+
+    fn rand_real(len: usize, seed: u64) -> Vec<f32> {
+        let mut s = seed.wrapping_mul(0x9E3779B97F4A7C15) | 1;
+        (0..len)
+            .map(|_| {
+                s ^= s << 13;
+                s ^= s >> 7;
+                s ^= s << 17;
+                (s as f64 / u64::MAX as f64) as f32 * 2.0 - 1.0
+            })
+            .collect()
+    }
+
+    /// A lane of the batched kernel must be *bitwise* identical to the
+    /// scalar plan transform — same LUTs, same operation order.
+    #[test]
+    fn cfft_batch_lane_is_bitwise_scalar() {
+        for n in [8usize, 32, 256] {
+            for batch in [1usize, LANES - 1, LANES, LANES + 1,
+                          4 * LANES + 3] {
+                let plan = FbfftPlan::new(n);
+                let re0 = rand_real(n * batch, 1 + n as u64);
+                let im0 = rand_real(n * batch, 2 + batch as u64);
+                for inverse in [false, true] {
+                    let mut re = re0.clone();
+                    let mut im = im0.clone();
+                    cfft_batch(&plan, &mut re, &mut im, batch, inverse);
+                    for b in 0..batch {
+                        let mut buf: Vec<C32> = (0..n)
+                            .map(|j| C32::new(re0[j * batch + b],
+                                              im0[j * batch + b]))
+                            .collect();
+                        plan.cfft_in_place(&mut buf, inverse);
+                        for (j, v) in buf.iter().enumerate() {
+                            assert_eq!(re[j * batch + b], v.re,
+                                       "n={n} b={b} j={j} re");
+                            assert_eq!(im[j * batch + b], v.im,
+                                       "n={n} b={b} j={j} im");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rfft_batch_soa_matches_planner() {
+        for n in [8usize, 16, 64] {
+            for batch in [1usize, 5, LANES, LANES + 1] {
+                let plan = FbfftPlan::new(n);
+                let nf = rfft_len(n);
+                let x = rand_real(batch * n, 3 + n as u64);
+                let mut or = vec![0f32; nf * batch];
+                let mut oi = vec![0f32; nf * batch];
+                let pairs = batch.div_ceil(2);
+                let mut wr = vec![0f32; n * pairs];
+                let mut wi = vec![0f32; n * pairs];
+                rfft_batch_soa(&plan, &x, n, batch, &mut or, &mut oi,
+                               &mut wr, &mut wi);
+                for b in 0..batch {
+                    let want = rfft(&x[b * n..(b + 1) * n], n);
+                    for (k, w) in want.iter().enumerate() {
+                        let g = C32::new(or[k * batch + b],
+                                         oi[k * batch + b]);
+                        assert!((g - *w).abs() < 2e-3 * (n as f32).sqrt(),
+                                "n={n} batch={batch} b={b} k={k}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn irfft_batch_soa_round_trip_with_clip() {
+        let (n, batch, clip) = (32usize, 7usize, 20usize);
+        let plan = FbfftPlan::new(n);
+        let nf = rfft_len(n);
+        let x = rand_real(batch * n, 9);
+        let mut sr = vec![0f32; nf * batch];
+        let mut si = vec![0f32; nf * batch];
+        let pairs = batch.div_ceil(2);
+        let mut wr = vec![7f32; n * pairs]; // dirty scratch is fine
+        let mut wi = vec![-7f32; n * pairs];
+        rfft_batch_soa(&plan, &x, n, batch, &mut sr, &mut si, &mut wr,
+                       &mut wi);
+        let mut back = vec![0f32; batch * clip];
+        irfft_batch_soa(&plan, &sr, &si, batch, clip, &mut back, &mut wr,
+                        &mut wi);
+        for b in 0..batch {
+            for j in 0..clip {
+                assert!((back[b * clip + j] - x[b * n + j]).abs() < 1e-3,
+                        "b={b} j={j}");
+            }
+        }
+    }
+
+    #[test]
+    fn split_and_interleave_round_trip() {
+        let src: Vec<C32> =
+            (0..37).map(|i| C32::new(i as f32, -(i as f32))).collect();
+        let mut re = vec![0f32; src.len()];
+        let mut im = vec![0f32; src.len()];
+        split_complex(&src, &mut re, &mut im);
+        let mut back = vec![C32::ZERO; src.len()];
+        interleave_complex(&re, &im, &mut back);
+        assert_eq!(src, back);
+    }
+}

@@ -105,12 +105,14 @@ pub fn table4_report(rt: Option<&Runtime>) -> Result<String> {
 }
 
 /// Table 5: per-stage breakdown of the frequency pipeline (host engines,
-/// scaled layers), vendor vs fbfft side by side — the TRANS columns
-/// vanish under fbfft, the paper's §5.1 point.
+/// scaled layers), vendor vs SoA fbfft vs scalar fbfft side by side —
+/// the TRANS columns vanish under fbfft (the paper's §5.1 point), and
+/// the PACK column (interleaved↔planar conversion around the planar
+/// CGEMM) additionally vanishes under the SoA batch-lane path.
 pub fn table5_report() -> String {
     let mut t = Table::new(&[
         "layer", "pass", "mode", "FFT A", "TRANS A", "FFT B", "TRANS B",
-        "CGEMM", "TRANS C", "IFFT C", "total ms"]);
+        "CGEMM", "TRANS C", "IFFT C", "PACK", "total ms"]);
     let mut rng = Rng::new(0x75);
     for (name, paper) in trace::table4_layers() {
         let p = trace::scale(&paper, 16, 4);
@@ -118,7 +120,8 @@ pub fn table5_report() -> String {
         let wei = rng.normal_vec(p.weight_len());
         let go = rng.normal_vec(p.output_len());
         for (mode, label) in [(FftMode::Vendor, "vendor"),
-                              (FftMode::Fbfft, "fbfft")] {
+                              (FftMode::Fbfft, "fbfft"),
+                              (FftMode::FbfftScalar, "fbfft_scalar")] {
             let n = p.h.max(p.w).next_power_of_two();
             let eng = FftConvEngine::new(mode, n);
             for pass in ["fprop", "bprop", "accgrad"] {
@@ -134,7 +137,7 @@ pub fn table5_report() -> String {
                     name.to_string(), pass.to_string(), label.to_string(),
                     ms(st.fft_a), ms(st.trans_a), ms(st.fft_b),
                     ms(st.trans_b), ms(st.cgemm), ms(st.trans_c),
-                    ms(st.ifft_c), ms(st.total()),
+                    ms(st.ifft_c), ms(st.pack_total()), ms(st.total()),
                 ]);
             }
         }
@@ -245,11 +248,15 @@ pub fn accept32_problem() -> ConvProblem {
 /// Machine-readable per-stage pipeline breakdown, written by
 /// `cargo bench --bench breakdown` as `BENCH_fftconv.json` so the perf
 /// trajectory is tracked across PRs. Covers the scaled Table-4 layer
-/// configs plus [`accept32_problem`], both modes, all three passes; each
+/// configs plus [`accept32_problem`], all three modes (`vendor`, the SoA
+/// `fbfft`, the pre-SoA `fbfft_scalar` baseline), all three passes; each
 /// entry also times the pre-blocking naive CGEMM on identically shaped
 /// frequency slabs, so `cgemm_speedup` (naive / blocked, same data) is
-/// the acceptance ratio. `smoke` restricts to the accept32 config with a
-/// single rep (the CI smoke run).
+/// the acceptance ratio. The `fft_ns` / `pack_ns` aggregates split the
+/// transform time from the interleaved↔planar conversion time: the SoA
+/// fbfft rows must show `pack_ns == 0` (planar handoff, pack elided) and
+/// beat `fbfft_scalar`'s `fft_ns` (vectorized butterflies). `smoke`
+/// restricts to the accept32 config with a single rep (the CI smoke run).
 pub fn breakdown_json(smoke: bool) -> Json {
     let reps = if smoke { 1usize } else { 3 };
     let mut configs: Vec<(String, ConvProblem)> = Vec::new();
@@ -270,7 +277,8 @@ pub fn breakdown_json(smoke: bool) -> Json {
         let n = p.h.max(p.w).next_power_of_two();
         let bins = rfft_len(n) * n;
         for (mode, label) in [(FftMode::Vendor, "vendor"),
-                              (FftMode::Fbfft, "fbfft")] {
+                              (FftMode::Fbfft, "fbfft"),
+                              (FftMode::FbfftScalar, "fbfft_scalar")] {
             let eng = FftConvEngine::new(mode, n);
             let mut ws = Workspace::new();
             let mut yout = vec![0f32; p.output_len()];
@@ -335,11 +343,18 @@ pub fn breakdown_json(smoke: bool) -> Json {
                     ("n_fft", Json::num(n as f64)),
                     ("fft_a_ns", ns(st.fft_a)),
                     ("trans_a_ns", ns(st.trans_a)),
+                    ("pack_a_ns", ns(st.pack_a)),
                     ("fft_b_ns", ns(st.fft_b)),
                     ("trans_b_ns", ns(st.trans_b)),
+                    ("pack_b_ns", ns(st.pack_b)),
                     ("cgemm_ns", ns(st.cgemm)),
                     ("trans_c_ns", ns(st.trans_c)),
+                    ("pack_c_ns", ns(st.pack_c)),
                     ("ifft_c_ns", ns(st.ifft_c)),
+                    // the acceptance aggregates: transform time vs
+                    // layout-conversion time (pack_ns == 0 in SoA fbfft)
+                    ("fft_ns", ns(st.fft_total())),
+                    ("pack_ns", ns(st.pack_total())),
                     ("total_ns", ns(st.total())),
                     ("cgemm_naive_ns", Json::num(naive_lo * 1e9)),
                     ("cgemm_blocked_ns", Json::num(blocked_lo * 1e9)),
@@ -349,7 +364,7 @@ pub fn breakdown_json(smoke: bool) -> Json {
         }
     }
     Json::obj(vec![
-        ("version", Json::num(1.0)),
+        ("version", Json::num(2.0)),
         ("threads", Json::num(threads() as f64)),
         ("smoke", Json::Bool(smoke)),
         ("entries", Json::Arr(entries)),
@@ -372,8 +387,9 @@ mod tests {
     fn breakdown_json_smoke_has_all_cells() {
         let j = breakdown_json(true);
         let entries = j.get("entries").unwrap().as_arr().unwrap();
-        // 1 config × 2 modes × 3 passes
-        assert_eq!(entries.len(), 6);
+        // 1 config × 3 modes × 3 passes
+        assert_eq!(entries.len(), 9);
+        let mut saw_fbfft = 0;
         for e in entries {
             assert_eq!(e.get("layer").unwrap().as_str().unwrap(),
                        "accept32");
@@ -382,9 +398,19 @@ mod tests {
                     > 0.0);
             let total = e.get("total_ns").unwrap().as_f64().unwrap();
             assert!(total > 0.0);
+            // the acceptance aggregates exist in every entry
+            let fft = e.get("fft_ns").unwrap().as_f64().unwrap();
+            let pack = e.get("pack_ns").unwrap().as_f64().unwrap();
+            assert!(fft > 0.0);
+            // the SoA fbfft rows prove the elided pack stage exactly
+            if e.get("mode").unwrap().as_str().unwrap() == "fbfft" {
+                assert_eq!(pack, 0.0, "SoA fbfft must elide PACK");
+                saw_fbfft += 1;
+            }
         }
+        assert_eq!(saw_fbfft, 3, "one SoA fbfft entry per pass");
         // round-trips through the in-tree parser
         let back = Json::parse(&j.to_string()).unwrap();
-        assert_eq!(back.get("version").unwrap().as_usize(), Some(1));
+        assert_eq!(back.get("version").unwrap().as_usize(), Some(2));
     }
 }

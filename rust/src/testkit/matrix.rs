@@ -11,20 +11,23 @@ use crate::util::Rng;
 use super::cases::ConformanceCase;
 use super::{oracle, tolerance};
 
-/// The five host engines under conformance test.
+/// The six host engines under conformance test (`Fbfft` is the SoA
+/// batch-lane path, `FbfftScalar` the pre-SoA baseline — both run so the
+/// lane kernels are gated against the oracle *and* their scalar twin).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Engine {
     Direct,
     Im2col,
     VendorFft,
     Fbfft,
+    FbfftScalar,
     Tiled,
 }
 
 impl Engine {
-    pub const ALL: [Engine; 5] = [Engine::Direct, Engine::Im2col,
+    pub const ALL: [Engine; 6] = [Engine::Direct, Engine::Im2col,
                                   Engine::VendorFft, Engine::Fbfft,
-                                  Engine::Tiled];
+                                  Engine::FbfftScalar, Engine::Tiled];
 
     pub fn tag(&self) -> &'static str {
         match self {
@@ -32,6 +35,7 @@ impl Engine {
             Engine::Im2col => "im2col",
             Engine::VendorFft => "vendor_fft",
             Engine::Fbfft => "fbfft",
+            Engine::FbfftScalar => "fbfft_scalar",
             Engine::Tiled => "tiled",
         }
     }
@@ -49,7 +53,7 @@ pub struct Cell {
     pub ok: bool,
 }
 
-/// All 15 cells of one case, plus the cross-engine agreement check.
+/// All engine × pass cells of one case, plus the cross-engine check.
 #[derive(Clone, Debug)]
 pub struct CaseReport {
     pub name: String,
@@ -170,7 +174,9 @@ pub fn cell_tolerance(engine: Engine, case: &ConformanceCase, pass: Pass)
     match engine {
         Engine::Direct | Engine::Im2col => tolerance::time_domain(p, pass),
         Engine::VendorFft => tolerance::frequency(p, pass, case.vendor_basis),
-        Engine::Fbfft => tolerance::frequency(p, pass, case.fbfft_basis),
+        Engine::Fbfft | Engine::FbfftScalar => {
+            tolerance::frequency(p, pass, case.fbfft_basis)
+        }
         Engine::Tiled => tolerance::tiled(p, pass, case.tile),
     }
 }
@@ -189,6 +195,8 @@ pub fn run_case(case: &ConformanceCase) -> CaseReport {
 
     let vendor = FftConvEngine::new(FftMode::Vendor, case.vendor_basis);
     let fbfft = FftConvEngine::new(FftMode::Fbfft, case.fbfft_basis);
+    let fbfft_scalar =
+        FftConvEngine::new(FftMode::FbfftScalar, case.fbfft_basis);
     let d = case.tile;
 
     // the FFT engines run through the production `_into` entry points
@@ -217,13 +225,14 @@ pub fn run_case(case: &ConformanceCase) -> CaseReport {
           im2col::accgrad(p, &go, &x)]),
         (Engine::VendorFft, run_fft(&vendor)),
         (Engine::Fbfft, run_fft(&fbfft)),
+        (Engine::FbfftScalar, run_fft(&fbfft_scalar)),
         (Engine::Tiled,
          [tiled::fprop(p, &x, &w, d).0,
           tiled::bprop(p, &go, &w, d).0,
           tiled::accgrad(p, &go, &x, d).0]),
     ];
 
-    let mut cells = Vec::with_capacity(15);
+    let mut cells = Vec::with_capacity(Engine::ALL.len() * Pass::ALL.len());
     for (engine, outs) in &outputs {
         for (pi, pass) in Pass::ALL.iter().enumerate() {
             let tol = cell_tolerance(*engine, case, *pass);

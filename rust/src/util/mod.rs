@@ -10,4 +10,4 @@ pub mod threads;
 pub use hash::hash64;
 pub use json::Json;
 pub use rng::Rng;
-pub use threads::{chunk_ranges, threads};
+pub use threads::{chunk_ranges, chunk_ranges_grouped, threads};

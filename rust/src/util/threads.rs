@@ -42,6 +42,28 @@ pub fn chunk_ranges(n: usize, parts: usize)
     })
 }
 
+/// [`chunk_ranges`] with every boundary (except the final end) aligned to
+/// a multiple of `group`: the SoA frequency pipeline fans the inverse
+/// transform out over *batch groups* so each worker's lane count stays a
+/// multiple of the SIMD width ([`crate::fft::soa::LANES`]) — only the
+/// very last chunk carries the scalar tail. Degenerates to one chunk when
+/// `n < parts·group` would leave empty workers.
+pub fn chunk_ranges_grouped(n: usize, parts: usize, group: usize)
+                            -> impl Iterator<Item = (usize, usize)> {
+    let group = group.max(1);
+    let groups = n.div_ceil(group);
+    let parts = parts.min(groups.max(1)).max(1);
+    let base = groups / parts;
+    let extra = groups % parts;
+    (0..parts).map(move |i| {
+        let g_len = base + usize::from(i < extra);
+        let g_start = i * base + i.min(extra);
+        let start = (g_start * group).min(n);
+        let end = ((g_start + g_len) * group).min(n);
+        (start, end - start)
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -75,5 +97,36 @@ mod tests {
         let lens: Vec<usize> =
             chunk_ranges(10, 3).map(|(_, l)| l).collect();
         assert_eq!(lens, vec![4, 3, 3]);
+    }
+
+    #[test]
+    fn grouped_ranges_cover_exactly_and_align() {
+        for (n, parts, group) in [(35usize, 3usize, 8usize), (8, 4, 8),
+                                  (16, 2, 8), (7, 3, 8), (100, 16, 8),
+                                  (0, 4, 8), (9, 2, 1), (24, 5, 8)] {
+            let ranges: Vec<(usize, usize)> =
+                chunk_ranges_grouped(n, parts, group).collect();
+            let mut next = 0usize;
+            for (i, (start, len)) in ranges.iter().enumerate() {
+                assert_eq!(*start, next, "n={n} parts={parts}");
+                assert_eq!(start % group, 0,
+                           "n={n}: chunk {i} start unaligned");
+                if i + 1 < ranges.len() {
+                    assert_eq!((start + len) % group, 0,
+                               "n={n}: interior boundary unaligned");
+                }
+                next += len;
+            }
+            assert_eq!(next, n, "n={n} parts={parts} group={group}");
+            assert!(ranges.len() <= parts.max(1));
+        }
+    }
+
+    #[test]
+    fn grouped_ranges_only_tail_is_ragged() {
+        let ranges: Vec<(usize, usize)> =
+            chunk_ranges_grouped(35, 3, 8).collect();
+        // 5 groups of 8 → split 2/2/1 groups → 16/16/3 lanes
+        assert_eq!(ranges, vec![(0, 16), (16, 16), (32, 3)]);
     }
 }

@@ -1,0 +1,145 @@
+//! Property suite for the split-complex (SoA) batch-lane FFT kernels:
+//! every fbfft plan size (8–256) × ragged batch counts straddling the
+//! SIMD lane width, asserting the SoA kernels match the scalar
+//! `cfft_in_place` / `rfft_batch` path within the testkit tolerance
+//! model, plus inverse round-trips and the 2-D planar fused-transposed
+//! layout against its interleaved twin. (The conformance matrix in
+//! `tests/conformance.rs` additionally runs the SoA engine through every
+//! conv pass against the f64 oracle.)
+
+use fbfft_repro::fft::fbfft_host::FbfftPlan;
+use fbfft_repro::fft::real::rfft_len;
+use fbfft_repro::fft::soa::{self, LANES};
+use fbfft_repro::fft::C32;
+use fbfft_repro::testkit::tolerance;
+use fbfft_repro::util::Rng;
+
+const SIZES: [usize; 6] = [8, 16, 32, 64, 128, 256];
+
+fn batches() -> [usize; 5] {
+    [1, LANES - 1, LANES, LANES + 1, 4 * LANES + 3]
+}
+
+#[test]
+fn cfft_batch_matches_scalar_across_sizes_and_ragged_batches() {
+    for n in SIZES {
+        let plan = FbfftPlan::new(n);
+        for batch in batches() {
+            let mut rng = Rng::new(0x50A ^ (n * 1000 + batch) as u64);
+            let re0 = rng.normal_vec(n * batch);
+            let im0 = rng.normal_vec(n * batch);
+            for inverse in [false, true] {
+                let mut re = re0.clone();
+                let mut im = im0.clone();
+                soa::cfft_batch(&plan, &mut re, &mut im, batch, inverse);
+                let tol = tolerance::fft_abs(n);
+                for b in (0..batch).step_by((batch / 3).max(1)) {
+                    let mut buf: Vec<C32> = (0..n)
+                        .map(|j| C32::new(re0[j * batch + b],
+                                          im0[j * batch + b]))
+                        .collect();
+                    plan.cfft_in_place(&mut buf, inverse);
+                    for (j, v) in buf.iter().enumerate() {
+                        let g = C32::new(re[j * batch + b],
+                                         im[j * batch + b]);
+                        assert!((g - *v).abs() <= tol,
+                                "n={n} batch={batch} b={b} j={j} \
+                                 inverse={inverse}: {g:?} vs {v:?}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn rfft_batch_soa_matches_scalar_rfft_batch() {
+    for n in SIZES {
+        let plan = FbfftPlan::new(n);
+        let nf = rfft_len(n);
+        for batch in batches() {
+            let mut rng = Rng::new(0xAB0 ^ (n + batch) as u64);
+            let x = rng.normal_vec(batch * n);
+            // scalar path: batch-major interleaved
+            let mut want = vec![C32::ZERO; batch * nf];
+            plan.rfft_batch(&x, n, batch, &mut want);
+            // SoA path: bin-major planar
+            let mut got_re = vec![0f32; nf * batch];
+            let mut got_im = vec![0f32; nf * batch];
+            let pairs = batch.div_ceil(2);
+            let mut wr = vec![0f32; n * pairs];
+            let mut wi = vec![0f32; n * pairs];
+            soa::rfft_batch_soa(&plan, &x, n, batch, &mut got_re,
+                                &mut got_im, &mut wr, &mut wi);
+            let tol = tolerance::fft_abs(n);
+            for b in 0..batch {
+                for k in 0..nf {
+                    let g = C32::new(got_re[k * batch + b],
+                                     got_im[k * batch + b]);
+                    let w = want[b * nf + k];
+                    assert!((g - w).abs() <= tol,
+                            "n={n} batch={batch} b={b} k={k}: \
+                             {g:?} vs {w:?}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn soa_1d_inverse_round_trips_with_implicit_padding() {
+    for n in SIZES {
+        let plan = FbfftPlan::new(n);
+        let nf = rfft_len(n);
+        let n_in = (3 * n) / 4; // exercise the implicit-padding load
+        for batch in batches() {
+            let mut rng = Rng::new(0x1F ^ (n * 31 + batch) as u64);
+            let x = rng.normal_vec(batch * n_in);
+            let mut sr = vec![0f32; nf * batch];
+            let mut si = vec![0f32; nf * batch];
+            let pairs = batch.div_ceil(2);
+            let mut wr = vec![0f32; n * pairs];
+            let mut wi = vec![0f32; n * pairs];
+            soa::rfft_batch_soa(&plan, &x, n_in, batch, &mut sr, &mut si,
+                                &mut wr, &mut wi);
+            let mut back = vec![0f32; batch * n_in];
+            soa::irfft_batch_soa(&plan, &sr, &si, batch, n_in, &mut back,
+                                 &mut wr, &mut wi);
+            let tol = 2.0 * tolerance::fft_abs(n);
+            for (i, (g, o)) in back.iter().zip(&x).enumerate() {
+                assert!((g - o).abs() <= tol,
+                        "n={n} batch={batch} elem {i}: {g} vs {o}");
+            }
+        }
+    }
+}
+
+#[test]
+fn soa_2d_planar_matches_interleaved_scalar_2d() {
+    for (n, h, w, batch) in [(8usize, 6usize, 7usize, LANES + 1),
+                             (16, 16, 16, LANES - 1),
+                             (32, 21, 17, 4 * LANES + 3), (64, 40, 64, 1)] {
+        let plan = FbfftPlan::new(n);
+        let nf = rfft_len(n);
+        let mut rng = Rng::new(0x2D ^ (n + batch) as u64);
+        let x = rng.normal_vec(batch * h * w);
+        let mut want = vec![C32::ZERO; nf * n * batch];
+        plan.rfft2_batch_transposed(&x, h, w, batch, &mut want);
+        let mut got_re = vec![0f32; nf * n * batch];
+        let mut got_im = vec![0f32; nf * n * batch];
+        plan.rfft2_batch_soa(&x, h, w, batch, &mut got_re, &mut got_im);
+        // two forward passes: double the single-transform budget
+        let tol = 2.0 * tolerance::fft_abs(n) * (n as f32).sqrt();
+        for (i, wv) in want.iter().enumerate() {
+            let g = C32::new(got_re[i], got_im[i]);
+            assert!((g - *wv).abs() <= tol,
+                    "n={n} batch={batch} bin {i}: {g:?} vs {wv:?}");
+        }
+        // and the planar inverse round-trips through the fused clip
+        let mut back = vec![0f32; batch * h * w];
+        plan.irfft2_batch_soa(&got_re, &got_im, batch, h, w, &mut back);
+        for (i, (g, o)) in back.iter().zip(&x).enumerate() {
+            assert!((g - o).abs() <= tol, "round-trip elem {i}");
+        }
+    }
+}

@@ -74,6 +74,14 @@ fn vendor_acceptance_config_is_zero_alloc_after_warmup() {
 }
 
 #[test]
+fn fbfft_scalar_acceptance_config_is_zero_alloc_after_warmup() {
+    // the scalar baseline's extra PACK staging ("stage.inv", the planar
+    // splits) must pool-reuse like everything else
+    let p = ConvProblem::square(16, 16, 16, 32, 5);
+    zero_alloc_steady_state(FftMode::FbfftScalar, &p, 32);
+}
+
+#[test]
 fn small_ragged_config_is_zero_alloc_after_warmup() {
     // ragged dims exercise different role sizes per pass
     let p = ConvProblem::new(3, 5, 7, 13, 11, 5, 3);
