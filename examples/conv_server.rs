@@ -1,22 +1,29 @@
-//! Serving example: a convolution service behind the dynamic batcher.
+//! Serving example: the sharded multi-worker engine behind the
+//! deadline-aware dynamic batcher.
 //!
 //! A Poisson request trace (mixed request sizes) is replayed against a
-//! `ConvService` that owns the PJRT runtime on a worker thread; the
-//! batcher flushes on capacity or deadline, amortizing each executable
-//! launch over several requests — the 'large batches' economics the
-//! paper's regime is about, applied at serving time.
+//! `ServeEngine`: admission checks each request's deadline against the
+//! strategy cache's launch estimate, routes it to the least-loaded
+//! shard, and each shard worker batches and launches independently —
+//! the 'large batches' economics the paper's regime is about, applied
+//! at serving time across a worker pool.
+//!
+//! With `make artifacts` and a real PJRT backend each worker owns its
+//! own runtime; otherwise the engine serves through the in-tree host
+//! engines picked per flush shape by the persistent autotune cache, so
+//! the example runs everywhere:
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example conv_server [requests]
+//! cargo run --release --example conv_server [requests] [shards]
 //! ```
 
 use std::time::{Duration, Instant};
 
 use fbfft_repro::conv::ConvProblem;
 use fbfft_repro::coordinator::batcher::BatcherConfig;
-use fbfft_repro::coordinator::service::{Completion, ConvService,
-                                        ServeRequest};
-use fbfft_repro::metrics::Histogram;
+use fbfft_repro::coordinator::service::{Completion, EngineConfig,
+                                        ServeEngine, ServeRequest};
+use fbfft_repro::reports;
 use fbfft_repro::trace;
 
 fn main() -> anyhow::Result<()> {
@@ -24,50 +31,72 @@ fn main() -> anyhow::Result<()> {
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(300);
-    let p = ConvProblem::square(2, 4, 4, 16, 3);
-    let svc = ConvService::start(
+    let shards: usize = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let cfg = |capacity: usize| EngineConfig {
+        shards,
+        batcher: BatcherConfig { capacity,
+                                 max_wait: Duration::from_millis(2) },
+        default_deadline: Duration::from_millis(500),
+        ..Default::default()
+    };
+    let pj = ConvProblem::square(2, 4, 4, 16, 3);
+    let (engine, capacity) = match ServeEngine::start_pjrt(
         "artifacts".into(),
         "conv.quickstart.fbfft.fprop".into(),
-        p,
-        BatcherConfig { capacity: p.s, max_wait: Duration::from_millis(2) },
-    )?;
-    println!("replaying {n} requests at ~400 req/s...");
+        pj,
+        cfg(pj.s))
+    {
+        Ok(e) => (e, pj.s),
+        Err(e) => {
+            eprintln!("note: PJRT serving unavailable ({e:#}); \
+                       using the host-engine backend");
+            let p = ConvProblem::square(8, 4, 4, 16, 3);
+            (ServeEngine::start_host(p, cfg(p.s))?, p.s)
+        }
+    };
+    println!("replaying {n} requests at ~400 req/s over {shards} shards...");
     let reqs = trace::request_trace(n, 400.0, 0x5E);
     let (tx, rx) = std::sync::mpsc::channel::<Completion>();
     let t0 = Instant::now();
+    let mut accepted = 0usize;
+    let mut tight = 0usize;
     for r in &reqs {
         std::thread::sleep(
             Duration::from_secs_f64(r.arrival_s)
                 .saturating_sub(t0.elapsed()));
-        svc.submit(ServeRequest { id: r.id, images: r.images.min(p.s),
-                                  reply: tx.clone() });
+        // unlike the CLI demo, exercise explicit SLAs: every 4th
+        // request carries a tight 10 ms reply-by deadline (the engine
+        // both batches it sooner — flush-by = min(max_wait, SLA) — and
+        // reports whether the reply beat it)
+        let deadline = (r.id % 4 == 0)
+            .then(|| Instant::now() + Duration::from_millis(10));
+        tight += deadline.is_some() as usize;
+        if engine.submit(ServeRequest { id: r.id,
+                                        images: r.images.min(capacity),
+                                        deadline,
+                                        reply: tx.clone() }) {
+            accepted += 1;
+        }
     }
     drop(tx);
-    let mut hist = Histogram::new();
-    let mut batch_factor = 0usize;
     let mut done = 0usize;
-    while done < reqs.len() {
+    let mut met = 0usize;
+    while done < accepted {
         let Ok(c) = rx.recv_timeout(Duration::from_secs(10)) else { break };
-        hist.record(c.latency.as_secs_f64());
-        batch_factor += c.batch_images;
         done += 1;
+        met += c.deadline_met as usize;
     }
     let wall = t0.elapsed();
-    let report = svc.shutdown();
-    println!("completed {done}/{} requests ({} images) in {:.2}s",
-             reqs.len(), report.images, wall.as_secs_f64());
-    println!("launches: {} ({} full flushes, {} deadline flushes), \
-              mean batch factor {:.2}",
-             report.launches, report.flushes_full, report.flushes_timeout,
-             batch_factor as f64 / done.max(1) as f64);
-    println!("throughput: {:.0} images/s",
-             report.images as f64 / wall.as_secs_f64());
-    println!("latency ms: p50 {:.2}  p95 {:.2}  p99 {:.2}  max {:.2}",
-             hist.percentile(50.0) * 1e3, hist.percentile(95.0) * 1e3,
-             hist.percentile(99.0) * 1e3, hist.max() * 1e3);
-    println!("service busy {:.1}% of wall clock",
-             report.busy.as_secs_f64() / wall.as_secs_f64() * 100.0);
-    anyhow::ensure!(done == reqs.len(), "dropped requests");
+    let report = engine.shutdown();
+    let json = reports::serve_json(&report, "open", false, wall);
+    println!("{}", reports::serve_table(&json));
+    println!("completed {done}/{accepted} accepted requests \
+              ({met} within deadline; {tight} carried tight SLAs) \
+              in {:.2}s", wall.as_secs_f64());
+    anyhow::ensure!(done == accepted, "dropped requests");
     println!("conv_server OK");
     Ok(())
 }

@@ -1,0 +1,208 @@
+//! Closed-loop load bench for the sharded serving engine, plus the
+//! machine-readable `BENCH_serve.json` perf artifact (CI's serve-smoke
+//! gate reads it; `reports::serve` renders the human table from the
+//! same document so the two can never disagree).
+//!
+//! Two load models:
+//!
+//! * `--mode closed` (default): N client threads, each submits one
+//!   request, waits for its completion, submits the next — the classic
+//!   closed loop whose offered load self-regulates to the engine's
+//!   capacity (throughput-oriented).
+//! * `--mode open`: replays a Poisson arrival trace at a fixed rate
+//!   regardless of completions — the latency-under-load view (arrival
+//!   bursts pile onto the batcher exactly as §3.3's bulk-synchronous
+//!   regime expects).
+//!
+//! `cargo bench --bench serve -- --smoke` runs a fixed small closed-loop
+//! config (4 shards, host backend) and still writes the JSON.
+//!
+//! Flags: `--smoke`, `--mode open|closed`, `--requests N`, `--shards N`,
+//! `--clients N`, `--capacity N`, `--rate R` (open mode, req/s).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fbfft_repro::conv::ConvProblem;
+use fbfft_repro::coordinator::batcher::BatcherConfig;
+use fbfft_repro::coordinator::service::{Completion, EngineClient,
+                                        EngineConfig, ServeEngine,
+                                        ServeRequest};
+use fbfft_repro::reports::{serve_json, serve_table};
+use fbfft_repro::trace;
+use fbfft_repro::util::Rng;
+
+struct BenchArgs {
+    smoke: bool,
+    mode: String,
+    requests: usize,
+    shards: usize,
+    clients: usize,
+    capacity: usize,
+    rate: f64,
+}
+
+fn parse() -> BenchArgs {
+    let argv: Vec<String> = std::env::args().collect();
+    let flag = |name: &str| argv.iter().any(|a| a == name);
+    let val = |name: &str| {
+        argv.iter()
+            .position(|a| a == name)
+            .and_then(|i| argv.get(i + 1))
+            .cloned()
+    };
+    let smoke = flag("--smoke");
+    let mut a = BenchArgs {
+        smoke,
+        mode: val("--mode").unwrap_or_else(|| "closed".into()),
+        requests: if smoke { 200 } else { 2000 },
+        shards: 4,
+        clients: if smoke { 8 } else { 16 },
+        capacity: if smoke { 8 } else { 16 },
+        rate: 400.0,
+    };
+    let usize_of = |s: Option<String>, d: usize| {
+        s.and_then(|v| v.parse().ok()).unwrap_or(d)
+    };
+    a.requests = usize_of(val("--requests"), a.requests);
+    a.shards = usize_of(val("--shards"), a.shards).max(1);
+    a.clients = usize_of(val("--clients"), a.clients).max(1);
+    a.capacity = usize_of(val("--capacity"), a.capacity).max(1);
+    a.rate = val("--rate")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(a.rate);
+    a
+}
+
+/// Each client thread drives its own request stream: submit → await
+/// completion → submit, sharing one global request budget.
+fn run_closed(client: &EngineClient, a: &BenchArgs) -> usize {
+    let budget = Arc::new(AtomicUsize::new(a.requests));
+    let completed = Arc::new(AtomicUsize::new(0));
+    std::thread::scope(|scope| {
+        for c in 0..a.clients {
+            let client = client.clone();
+            let budget = budget.clone();
+            let completed = completed.clone();
+            let capacity = a.capacity;
+            scope.spawn(move || {
+                let mut rng = Rng::new(0x10AD ^ c as u64);
+                let (tx, rx) = mpsc::channel::<Completion>();
+                let mut seq = 0u64;
+                loop {
+                    let slot = budget.fetch_update(
+                        Ordering::Relaxed, Ordering::Relaxed,
+                        |v| v.checked_sub(1));
+                    if slot.is_err() {
+                        break; // budget exhausted
+                    }
+                    // the serving trace's request-size mixture
+                    let images = match rng.below(10) {
+                        0..=5 => 1,
+                        6..=7 => 2,
+                        8 => 4,
+                        _ => 8,
+                    }
+                    .min(capacity);
+                    let id = ((c as u64) << 32) | seq;
+                    seq += 1;
+                    let ok = client.submit(ServeRequest {
+                        id,
+                        images,
+                        deadline: None,
+                        reply: tx.clone(),
+                    });
+                    if !ok {
+                        continue; // rejected: counted by the engine
+                    }
+                    if rx.recv_timeout(Duration::from_secs(60)).is_ok() {
+                        completed.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+    });
+    completed.load(Ordering::Relaxed)
+}
+
+/// Replay a Poisson trace at a fixed rate; completions drain on a
+/// collector channel.
+fn run_open(client: &EngineClient, a: &BenchArgs) -> usize {
+    let reqs = trace::request_trace(a.requests, a.rate, 0x5E);
+    let (tx, rx) = mpsc::channel::<Completion>();
+    let t0 = Instant::now();
+    let mut accepted = 0usize;
+    for r in &reqs {
+        std::thread::sleep(
+            Duration::from_secs_f64(r.arrival_s)
+                .saturating_sub(t0.elapsed()));
+        if client.submit(ServeRequest {
+            id: r.id,
+            images: r.images.min(a.capacity),
+            deadline: None,
+            reply: tx.clone(),
+        }) {
+            accepted += 1;
+        }
+    }
+    drop(tx);
+    let mut done = 0usize;
+    while done < accepted {
+        if rx.recv_timeout(Duration::from_secs(60)).is_err() {
+            break;
+        }
+        done += 1;
+    }
+    done
+}
+
+fn main() {
+    let a = parse();
+    // host backend: the bench must run on any checkout (the PJRT path
+    // is exercised by the artifact-gated integration tier)
+    let problem = if a.smoke {
+        ConvProblem::square(a.capacity, 2, 2, 8, 3)
+    } else {
+        ConvProblem::square(a.capacity, 8, 8, 16, 3)
+    };
+    let engine = ServeEngine::start_host(
+        problem,
+        EngineConfig {
+            shards: a.shards,
+            batcher: BatcherConfig {
+                capacity: a.capacity,
+                max_wait: Duration::from_millis(2),
+            },
+            // generous SLA: the bench measures latency, it does not
+            // shed load (zero rejections is a smoke-gate assertion)
+            default_deadline: Duration::from_secs(if a.smoke {
+                30
+            } else {
+                5
+            }),
+            ..Default::default()
+        })
+        .expect("host serve engine starts");
+    let client = engine.client();
+    let t0 = Instant::now();
+    let done = match a.mode.as_str() {
+        "open" => run_open(&client, &a),
+        "closed" => run_closed(&client, &a),
+        m => {
+            eprintln!("unknown --mode {m} (open|closed)");
+            std::process::exit(2);
+        }
+    };
+    let wall = t0.elapsed();
+    let report = engine.shutdown();
+    assert_eq!(done, report.requests(),
+               "every accepted request completes exactly once");
+    let json = serve_json(&report, &a.mode, a.smoke, wall);
+    std::fs::write("BENCH_serve.json", json.to_string())
+        .expect("write BENCH_serve.json");
+    eprintln!("wrote BENCH_serve.json (mode={}, smoke={})", a.mode,
+              a.smoke);
+    println!("{}", serve_table(&json));
+}

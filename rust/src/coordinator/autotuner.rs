@@ -12,7 +12,9 @@
 //! persists as JSON so tuning survives process restarts.
 
 use std::collections::HashMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::conv::{direct, im2col, tiled, ConvProblem, FftConvEngine,
@@ -56,6 +58,12 @@ impl Autotuner {
 
     pub fn cached(&self, p: &ConvProblem, pass: Pass) -> Option<Choice> {
         self.cache.get(&(*p, pass)).copied()
+    }
+
+    /// Insert a decision measured elsewhere (the [`StrategyCache`] tunes
+    /// outside its lock and publishes the winner through this).
+    pub fn insert(&mut self, p: &ConvProblem, pass: Pass, c: Choice) {
+        self.cache.insert((*p, pass), c);
     }
 
     pub fn len(&self) -> usize {
@@ -268,6 +276,142 @@ impl Autotuner {
     }
 }
 
+// ---------------------------------------------------------------------------
+// StrategyCache — the serving engine's shared per-shape decision store
+// ---------------------------------------------------------------------------
+
+/// Counters describing how the cache has been used (surfaced in the
+/// `reports::serve` table and `BENCH_serve.json`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub entries: usize,
+    pub hits: usize,
+    pub misses: usize,
+    /// full tuner runs triggered by `ensure` misses
+    pub tunes: usize,
+}
+
+/// Thread-safe, persistent per-`(ConvProblem, Pass)` strategy cache for
+/// the serving hot path. Wraps an [`Autotuner`] behind a mutex:
+///
+/// * [`StrategyCache::lookup`] is the *admission/launch* path — a pure
+///   map probe, never tunes, never blocks behind a measurement;
+/// * [`StrategyCache::ensure`] is the *miss* path — it measures with a
+///   throwaway tuner **outside** the lock (so concurrent shards keep
+///   serving cached shapes) and publishes the winner;
+/// * [`StrategyCache::persist`] writes the same JSON schema
+///   `Autotuner::save`/`load` use, so a warm restart re-serves every
+///   previously seen shape without re-tuning (§3.4's run-once economics
+///   carried across process lifetimes).
+#[derive(Debug)]
+pub struct StrategyCache {
+    tuner: Mutex<Autotuner>,
+    path: Option<PathBuf>,
+    dirty: AtomicBool,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+    tunes: AtomicUsize,
+    /// measurement repetitions for `ensure` misses
+    pub reps: usize,
+    /// include §6 tiled candidates when tuning on miss
+    pub try_tiling: bool,
+}
+
+impl StrategyCache {
+    /// Warm-load from `path` when it exists (otherwise start empty).
+    /// `None` keeps the cache purely in-memory.
+    pub fn open(path: Option<&Path>) -> StrategyCache {
+        let tuner = path
+            .and_then(Autotuner::load)
+            .unwrap_or_else(Autotuner::new);
+        StrategyCache {
+            tuner: Mutex::new(tuner),
+            path: path.map(Path::to_path_buf),
+            dirty: AtomicBool::new(false),
+            hits: AtomicUsize::new(0),
+            misses: AtomicUsize::new(0),
+            tunes: AtomicUsize::new(0),
+            reps: 1,
+            try_tiling: true,
+        }
+    }
+
+    /// Hot-path probe: the best known strategy for this shape, or `None`
+    /// if never tuned. Never measures.
+    pub fn lookup(&self, p: &ConvProblem, pass: Pass) -> Option<Choice> {
+        let got = self.tuner.lock().expect("tuner lock").cached(p, pass);
+        match got {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        got
+    }
+
+    /// Cached choice, tuning on miss. The measurement runs on a local
+    /// tuner with the lock released; last writer wins if two threads race
+    /// on the same shape (both measured the same candidates, so either
+    /// result is valid).
+    pub fn ensure(&self, p: &ConvProblem, pass: Pass) -> Choice {
+        if let Some(c) = self.lookup(p, pass) {
+            return c;
+        }
+        let mut t = Autotuner::new();
+        t.reps = self.reps;
+        t.try_tiling = self.try_tiling;
+        let c = t.tune(p, pass);
+        self.tunes.fetch_add(1, Ordering::Relaxed);
+        self.tuner.lock().expect("tuner lock").insert(p, pass, c);
+        self.dirty.store(true, Ordering::Release);
+        c
+    }
+
+    /// Record an *observed* launch time for a shape served by a fixed
+    /// backend (the PJRT serving path, where no host tuner runs and the
+    /// strategy is whatever the artifact compiled). Keeps the fastest
+    /// observation — the same minimum-of-measurements semantics as
+    /// [`Autotuner::tune`] — so deadline admission has a live launch
+    /// estimate instead of `None` forever.
+    pub fn observe(&self, p: &ConvProblem, pass: Pass,
+                   strategy: Strategy, seconds: f64) {
+        let mut t = self.tuner.lock().expect("tuner lock");
+        let better = t
+            .cached(p, pass)
+            .map(|c| seconds < c.seconds)
+            .unwrap_or(true);
+        if better {
+            t.insert(p, pass, Choice { strategy, n_fft: None, seconds });
+            self.dirty.store(true, Ordering::Release);
+        }
+    }
+
+    /// Write the cache back to its file if anything changed since the
+    /// last persist. No-op for in-memory caches.
+    pub fn persist(&self) -> std::io::Result<()> {
+        let Some(path) = &self.path else { return Ok(()) };
+        if !self.dirty.swap(false, Ordering::AcqRel) {
+            return Ok(());
+        }
+        self.tuner.lock().expect("tuner lock").save(path)
+    }
+
+    pub fn len(&self) -> usize {
+        self.tuner.lock().expect("tuner lock").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            entries: self.len(),
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            tunes: self.tunes.load(Ordering::Relaxed),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -346,5 +490,62 @@ mod tests {
         assert!(c.seconds <= lo * 2.0,
                 "tuned {:?} at {:.3}ms is slower than direct {:.3}ms",
                 c.strategy, c.seconds * 1e3, lo * 1e3);
+    }
+
+    #[test]
+    fn strategy_cache_lookup_never_tunes() {
+        let cache = StrategyCache::open(None);
+        let p = ConvProblem::square(1, 1, 1, 8, 3);
+        assert_eq!(cache.lookup(&p, Pass::Fprop), None);
+        let s = cache.stats();
+        assert_eq!((s.entries, s.hits, s.misses, s.tunes), (0, 0, 1, 0));
+    }
+
+    #[test]
+    fn strategy_cache_ensure_tunes_once_then_hits() {
+        let mut cache = StrategyCache::open(None);
+        cache.try_tiling = false;
+        let p = ConvProblem::square(1, 2, 2, 9, 3);
+        let a = cache.ensure(&p, Pass::Fprop);
+        let b = cache.ensure(&p, Pass::Fprop);
+        assert_eq!(a, b);
+        let s = cache.stats();
+        assert_eq!(s.entries, 1);
+        assert_eq!(s.tunes, 1);
+        assert!(s.hits >= 1, "second ensure must hit: {s:?}");
+    }
+
+    #[test]
+    fn observe_keeps_the_fastest_measurement() {
+        let cache = StrategyCache::open(None);
+        let p = ConvProblem::square(2, 1, 1, 8, 3);
+        cache.observe(&p, Pass::Fprop, Strategy::Vendor, 2e-3);
+        cache.observe(&p, Pass::Fprop, Strategy::Vendor, 1e-3);
+        cache.observe(&p, Pass::Fprop, Strategy::Vendor, 5e-3); // slower
+        let c = cache.lookup(&p, Pass::Fprop).unwrap();
+        assert_eq!(c.seconds, 1e-3);
+        assert_eq!(c.strategy, Strategy::Vendor);
+        assert_eq!(c.n_fft, None);
+    }
+
+    #[test]
+    fn strategy_cache_warm_loads_from_disk() {
+        let tmp = std::env::temp_dir().join("fbfft_strategy_cache_test.json");
+        std::fs::remove_file(&tmp).ok();
+        let p = ConvProblem::square(1, 2, 2, 9, 3);
+        let choice;
+        {
+            let mut cache = StrategyCache::open(Some(&tmp));
+            cache.try_tiling = false;
+            choice = cache.ensure(&p, Pass::Fprop);
+            cache.persist().unwrap();
+        }
+        // a fresh cache over the same file serves the shape without tuning
+        let warm = StrategyCache::open(Some(&tmp));
+        assert_eq!(warm.lookup(&p, Pass::Fprop), Some(choice));
+        assert_eq!(warm.stats().tunes, 0);
+        // persist with nothing dirty is a no-op (file mtime aside, no error)
+        warm.persist().unwrap();
+        std::fs::remove_file(&tmp).ok();
     }
 }

@@ -3,19 +3,25 @@
 //! 'large batches, small feature planes' regime exploits.
 //!
 //! Policy: flush when the queued image count reaches the executable's
-//! batch capacity, or when the oldest queued request has waited
-//! `max_wait`. Requests never reorder *within* a flush; a request larger
-//! than the capacity is split across consecutive batches.
+//! batch capacity, or when the most urgent queued request reaches its
+//! flush-by deadline. The queue is kept in deadline order (stable for
+//! equal deadlines, so plain `push` traffic stays FIFO): an urgent
+//! request admitted behind a lax one rides the *next* flush, which is
+//! what lets the sharded engine honor per-request SLAs. Requests never
+//! reorder *within* a flush; a request larger than the capacity is split
+//! across consecutive batches.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
-/// One enqueued unit: `images` samples belonging to request `id`.
+/// One enqueued unit: `images` samples belonging to request `id`,
+/// to be flushed no later than `deadline`.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Pending {
     pub id: u64,
     pub images: usize,
     pub enqueued: Instant,
+    pub deadline: Instant,
 }
 
 /// A flushed batch: (request id, image count) pairs in arrival order;
@@ -65,9 +71,29 @@ impl Batcher {
                   flushes_timeout: 0 }
     }
 
+    /// Enqueue with the default flush-by deadline `now + max_wait`
+    /// (pure batching traffic, FIFO by construction).
     pub fn push(&mut self, id: u64, images: usize, now: Instant) {
+        let deadline = now + self.cfg.max_wait;
+        self.push_deadline(id, images, now, deadline);
+    }
+
+    /// Enqueue with an explicit flush-by deadline (the admission path:
+    /// the engine passes `min(now + max_wait, sla_deadline)`). Stable
+    /// insertion sorted by deadline — equal deadlines keep arrival order.
+    pub fn push_deadline(&mut self, id: u64, images: usize, now: Instant,
+                         deadline: Instant) {
         assert!(images >= 1, "empty request");
-        self.queue.push_back(Pending { id, images, enqueued: now });
+        let p = Pending { id, images, enqueued: now, deadline };
+        // insert after the last entry at least as urgent (usually the
+        // back: deadlines grow with arrival time for uniform traffic)
+        let at = self
+            .queue
+            .iter()
+            .rposition(|q| q.deadline <= deadline)
+            .map(|i| i + 1)
+            .unwrap_or(0);
+        self.queue.insert(at, p);
     }
 
     pub fn queued_images(&self) -> usize {
@@ -79,8 +105,9 @@ impl Batcher {
     }
 
     /// Earliest deadline by which a flush must happen (None if empty).
+    /// The queue is deadline-sorted, so this is the front entry's.
     pub fn deadline(&self) -> Option<Instant> {
-        self.queue.front().map(|p| p.enqueued + self.cfg.max_wait)
+        self.queue.front().map(|p| p.deadline)
     }
 
     /// Non-blocking poll: returns a batch if the policy says flush now.
@@ -187,6 +214,26 @@ mod tests {
                 break;
             }
         }
+    }
+
+    #[test]
+    fn urgent_request_jumps_the_queue_but_not_mid_flush() {
+        let mut b = Batcher::new(cfg(2, 1000));
+        let t = Instant::now();
+        // lax request first, urgent one second: the urgent one must lead
+        b.push_deadline(1, 2, t, t + Duration::from_millis(500));
+        b.push_deadline(2, 2, t, t + Duration::from_millis(5));
+        assert_eq!(b.deadline(), Some(t + Duration::from_millis(5)));
+        let first = b.poll(t).expect("full flush");
+        assert_eq!(first.parts, vec![(2, 2)]);
+        let second = b.poll(t).expect("still full");
+        assert_eq!(second.parts, vec![(1, 2)]);
+        // equal deadlines preserve arrival order (stable insert)
+        let d = t + Duration::from_millis(9);
+        b.push_deadline(3, 1, t, d);
+        b.push_deadline(4, 1, t, d);
+        let batch = b.poll(t).expect("full");
+        assert_eq!(batch.parts, vec![(3, 1), (4, 1)]);
     }
 
     #[test]

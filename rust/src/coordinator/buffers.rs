@@ -205,6 +205,16 @@ impl BufferPool {
     pub fn roles(&self) -> usize {
         self.bufs.len() + self.bufs_c32.len() + self.bufs_pair.len()
     }
+
+    /// Zero the reuse/allocation counters while keeping every buffer,
+    /// so a caller can measure steady-state reuse in isolation: reset
+    /// after warmup, run the hot phase, then assert `allocations == 0`
+    /// (how `workspace_alloc.rs` proves the zero-allocation pipeline).
+    pub fn reset_counters(&mut self) {
+        self.allocations = 0;
+        self.expansions = 0;
+        self.reuses = 0;
+    }
 }
 
 #[cfg(test)]
@@ -341,6 +351,19 @@ mod tests {
         assert_eq!(p.expansions, 0);
         assert_eq!(p.reuses, 3);
         assert_eq!(p.roles(), 0, "pair is checked out");
+    }
+
+    #[test]
+    fn reset_counters_keeps_buffers() {
+        let mut p = BufferPool::new();
+        let b = p.take("warm", 64);
+        p.put("warm", b);
+        p.reset_counters();
+        assert_eq!((p.allocations, p.expansions, p.reuses), (0, 0, 0));
+        let b = p.take("warm", 64);
+        p.put("warm", b);
+        assert_eq!(p.allocations, 0, "buffer survived the reset");
+        assert_eq!(p.reuses, 1);
     }
 
     #[test]

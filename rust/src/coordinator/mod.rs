@@ -11,8 +11,11 @@
 //!   role, auto-expanded and reused across layers;
 //! * [`scheduler`] — bulk-synchronous whole-CNN execution through cached
 //!   PJRT executables (the Table-3 harness);
-//! * [`batcher`]   — dynamic request batching for the serving example;
-//! * [`service`]   — the request loop gluing batcher → runtime.
+//! * [`batcher`]   — deadline-aware dynamic request batching;
+//! * [`service`]   — the sharded multi-worker serving engine
+//!   ([`ServeEngine`]): admission → least-loaded shard → per-shard
+//!   batcher → strategy-cache dispatch, with the legacy single-shard
+//!   [`ConvService`] wrapper on top.
 
 pub mod autotuner;
 pub mod batcher;
@@ -21,8 +24,11 @@ pub mod scheduler;
 pub mod service;
 pub mod strategy;
 
-pub use autotuner::{Autotuner, Choice};
+pub use autotuner::{Autotuner, CacheStats, Choice, StrategyCache};
 pub use batcher::{Batch, Batcher, BatcherConfig};
 pub use buffers::BufferPool;
 pub use scheduler::{LayerPlan, NetworkScheduler, PassTimings};
+pub use service::{Completion, ConvService, EngineClient, EngineConfig,
+                  EngineReport, ServeEngine, ServeRequest, ServiceReport,
+                  ShardReport};
 pub use strategy::{Pass, Strategy};

@@ -16,6 +16,7 @@ use crate::conv::ConvProblem;
 use crate::runtime::{HostTensor, Runtime};
 use crate::util::Rng;
 
+use super::autotuner::StrategyCache;
 use super::strategy::{artifact_name, Pass, Strategy};
 
 /// One layer's execution plan: which artifact serves each pass.
@@ -30,6 +31,20 @@ pub struct LayerPlan {
 impl LayerPlan {
     pub fn artifact(&self, pass: Pass) -> String {
         artifact_name(&self.spec, self.strategy, pass)
+    }
+
+    /// Build a plan from the persistent strategy cache: the tuned winner
+    /// for `pass`, mapped onto its artifact-backed equivalent (strided
+    /// layers and never-tuned shapes fall back to the vendor black box —
+    /// the same conv1 treatment as the paper's Table 3).
+    pub fn tuned(spec: impl Into<String>, problem: ConvProblem,
+                 cache: &StrategyCache, pass: Pass) -> LayerPlan {
+        let strategy = cache
+            .lookup(&problem, pass)
+            .map(|c| c.strategy.artifact_equivalent())
+            .filter(|s| s.supports_stride(problem.stride))
+            .unwrap_or(Strategy::Vendor);
+        LayerPlan { spec: spec.into(), problem, strategy }
     }
 }
 
@@ -177,6 +192,26 @@ mod tests {
                    "conv.alexnet.conv2@_8.fbfft.fprop");
         assert_eq!(l.artifact(Pass::AccGrad),
                    "conv.alexnet.conv2@_8.fbfft.accgrad");
+    }
+
+    #[test]
+    fn tuned_plan_maps_host_strategies_to_artifacts() {
+        use crate::coordinator::autotuner::StrategyCache;
+        let cache = StrategyCache::open(None);
+        // never-tuned shape → vendor fallback
+        let p = ConvProblem::square(2, 2, 2, 9, 3);
+        let plan = LayerPlan::tuned("l0", p, &cache, Pass::Fprop);
+        assert_eq!(plan.strategy, Strategy::Vendor);
+        // a tuned host-only winner maps onto its artifact family
+        let c = cache.ensure(&p, Pass::Fprop);
+        let plan = LayerPlan::tuned("l0", p, &cache, Pass::Fprop);
+        assert_eq!(plan.strategy, c.strategy.artifact_equivalent());
+        assert!(plan.strategy.supports_stride(p.stride));
+        // strided layers stay vendor regardless of the cache
+        let mut q = p;
+        q.stride = 2;
+        let plan = LayerPlan::tuned("l1", q, &cache, Pass::Fprop);
+        assert_eq!(plan.strategy, Strategy::Vendor);
     }
 
     #[test]

@@ -57,6 +57,21 @@ impl Strategy {
     pub fn supports_stride(&self, stride: usize) -> bool {
         stride == 1 || matches!(self, Strategy::Vendor)
     }
+
+    /// The nearest strategy that has AOT artifacts behind it. The
+    /// autotuner measures *host* engines, some of which have no compiled
+    /// counterpart (`Direct`/`Im2col` are in-tree analogues of the
+    /// vendor black box, `FbfftScalar` is a tuning baseline of the same
+    /// fbfft pipeline) — when a tuned [`Choice`](super::Choice) drives a
+    /// PJRT [`LayerPlan`](super::LayerPlan), map it onto the artifact
+    /// family it stands in for.
+    pub fn artifact_equivalent(&self) -> Strategy {
+        match self {
+            Strategy::Direct | Strategy::Im2col => Strategy::Vendor,
+            Strategy::FbfftScalar => Strategy::Fbfft,
+            s => *s,
+        }
+    }
 }
 
 impl fmt::Display for Strategy {
@@ -121,6 +136,18 @@ mod tests {
         assert!(!Strategy::Fbfft.supports_stride(4));
         assert!(Strategy::Fbfft.supports_stride(1));
         assert!(!Strategy::VendorFft.supports_stride(2));
+    }
+
+    #[test]
+    fn artifact_equivalents_are_artifact_backed() {
+        assert_eq!(Strategy::Direct.artifact_equivalent(), Strategy::Vendor);
+        assert_eq!(Strategy::Im2col.artifact_equivalent(), Strategy::Vendor);
+        assert_eq!(Strategy::FbfftScalar.artifact_equivalent(),
+                   Strategy::Fbfft);
+        assert_eq!(Strategy::FbfftTiled(8).artifact_equivalent(),
+                   Strategy::FbfftTiled(8));
+        assert_eq!(Strategy::VendorFft.artifact_equivalent(),
+                   Strategy::VendorFft);
     }
 
     #[test]

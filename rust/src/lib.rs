@@ -16,8 +16,10 @@
 //! * [`trace`] — workload generation: Table 2's 8,232-config sweep,
 //!   Table 4's layers, AlexNet/OverFeat tables, request traces;
 //! * [`runtime`] — the PJRT bridge loading AOT-compiled HLO artifacts;
-//! * [`coordinator`] — strategy autotuner (§3.4), buffer manager (§3.3),
-//!   bulk-synchronous network scheduler, dynamic request batcher;
+//! * [`coordinator`] — strategy autotuner (§3.4) with its persistent
+//!   per-shape cache, buffer manager (§3.3), bulk-synchronous network
+//!   scheduler, deadline-aware dynamic batcher, and the sharded
+//!   multi-worker serving engine;
 //! * [`metrics`] — timers, histograms and report writers shared by the
 //!   benches.
 //!

@@ -7,9 +7,8 @@
 use std::process::ExitCode;
 
 use fbfft_repro::coordinator::batcher::BatcherConfig;
-use fbfft_repro::coordinator::service::{Completion, ConvService,
-                                        ServeRequest};
-use fbfft_repro::metrics::Histogram;
+use fbfft_repro::coordinator::service::{Completion, EngineConfig,
+                                        ServeEngine, ServeRequest};
 use fbfft_repro::reports;
 use fbfft_repro::runtime::Runtime;
 use fbfft_repro::trace;
@@ -30,12 +29,15 @@ COMMANDS (one per paper artifact):
   tiling           Sec 6: tiled vs untiled decomposition
   autotune         Sec 3.4: strategy/basis autotuner demonstration
   train [--steps N]        e2e: train the demo CNN via train.step
-  serve [--requests N]     serving demo: batcher + PJRT runtime
+  serve [--requests N] [--shards N]
+                   serving demo: sharded engine + deadline batcher
+                   (PJRT artifacts when present, host engines otherwise)
   cost-model       print the calibrated K40m model vs paper numbers
 
 OPTIONS:
   --artifacts <dir>   artifacts directory (default: artifacts)
   --no-pjrt           skip PJRT-backed sections (model/host-only output)
+  --shards <n>        serving worker-pool width (default: 4)
 ";
 
 struct Args {
@@ -46,6 +48,7 @@ struct Args {
     dim: usize,
     steps: usize,
     requests: usize,
+    shards: usize,
 }
 
 fn parse_args() -> Option<Args> {
@@ -59,6 +62,7 @@ fn parse_args() -> Option<Args> {
         dim: 1,
         steps: 300,
         requests: 200,
+        shards: 4,
     };
     let mut i = 1;
     while i < argv.len() {
@@ -85,6 +89,10 @@ fn parse_args() -> Option<Args> {
             }
             "--requests" => {
                 a.requests = argv.get(i + 1)?.parse().ok()?;
+                i += 2;
+            }
+            "--shards" => {
+                a.shards = argv.get(i + 1)?.parse().ok()?;
                 i += 2;
             }
             other => {
@@ -173,50 +181,66 @@ fn run(a: Args) -> anyhow::Result<()> {
 }
 
 fn serve_demo(a: &Args) -> anyhow::Result<()> {
-    // serve the quickstart fprop layer through the dynamic batcher
-    let p = fbfft_repro::conv::ConvProblem::square(2, 4, 4, 16, 3);
-    let svc = ConvService::start(
-        a.artifacts.clone().into(),
-        "conv.quickstart.fbfft.fprop".into(),
-        p,
-        BatcherConfig { capacity: p.s,
-                        max_wait: std::time::Duration::from_millis(2) },
-    )?;
+    // serve the quickstart fprop layer through the sharded engine: PJRT
+    // artifacts when available, the strategy-cache host path otherwise
+    let cfg = |capacity: usize| EngineConfig {
+        shards: a.shards.max(1),
+        batcher: BatcherConfig {
+            capacity,
+            max_wait: std::time::Duration::from_millis(2),
+        },
+        default_deadline: std::time::Duration::from_millis(500),
+        ..Default::default()
+    };
+    let pj = fbfft_repro::conv::ConvProblem::square(2, 4, 4, 16, 3);
+    let pjrt = if a.no_pjrt {
+        Err(anyhow::anyhow!("--no-pjrt"))
+    } else {
+        ServeEngine::start_pjrt(a.artifacts.clone().into(),
+                                "conv.quickstart.fbfft.fprop".into(),
+                                pj, cfg(pj.s))
+    };
+    let (engine, capacity) = match pjrt {
+        Ok(e) => {
+            println!("serving PJRT artifacts on {} shards", a.shards);
+            (e, pj.s)
+        }
+        Err(e) => {
+            eprintln!("note: PJRT serving unavailable ({e:#}); \
+                       using the host-engine backend");
+            let p = fbfft_repro::conv::ConvProblem::square(8, 4, 4, 16, 3);
+            (ServeEngine::start_host(p, cfg(p.s))?, p.s)
+        }
+    };
     let trace = trace::request_trace(a.requests, 400.0, 0x5E);
     let (tx, rx) = std::sync::mpsc::channel::<Completion>();
     let t0 = std::time::Instant::now();
+    let mut accepted = 0usize;
     for r in &trace {
         let wait = std::time::Duration::from_secs_f64(r.arrival_s)
             .saturating_sub(t0.elapsed());
         std::thread::sleep(wait);
-        svc.submit(ServeRequest { id: r.id, images: r.images.min(p.s),
-                                  reply: tx.clone() });
+        if engine.submit(ServeRequest { id: r.id,
+                                        images: r.images.min(capacity),
+                                        deadline: None,
+                                        reply: tx.clone() }) {
+            accepted += 1;
+        }
     }
     drop(tx);
-    let mut hist = Histogram::new();
     let mut done = 0usize;
-    while done < trace.len() {
+    while done < accepted {
         match rx.recv_timeout(std::time::Duration::from_secs(5)) {
-            Ok(c) => {
-                hist.record(c.latency.as_secs_f64());
-                done += 1;
-            }
+            Ok(_) => done += 1,
             Err(_) => break,
         }
     }
-    let report = svc.shutdown();
-    println!("serving demo: {} requests, {} images, {} launches",
-             report.requests, report.images, report.launches);
-    println!("flushes: {} full, {} timeout", report.flushes_full,
-             report.flushes_timeout);
-    if !hist.is_empty() {
-        println!("latency ms: p50 {:.2}  p95 {:.2}  p99 {:.2}  max {:.2}",
-                 hist.percentile(50.0) * 1e3, hist.percentile(95.0) * 1e3,
-                 hist.percentile(99.0) * 1e3, hist.max() * 1e3);
-    }
-    println!("busy {:.1} ms over {:.1} ms wall",
-             report.busy.as_secs_f64() * 1e3,
-             t0.elapsed().as_secs_f64() * 1e3);
+    let wall = t0.elapsed();
+    let report = engine.shutdown();
+    let json = reports::serve_json(&report, "open", false, wall);
+    println!("{}", reports::serve_table(&json));
+    anyhow::ensure!(done == accepted, "dropped {} accepted requests",
+                    accepted - done);
     Ok(())
 }
 

@@ -108,6 +108,42 @@ impl Histogram {
         self.ensure_sorted();
         *self.samples.last().expect("empty histogram")
     }
+
+    /// Fold another histogram's samples into this one (per-shard →
+    /// aggregate reduction in the serving report).
+    pub fn merge(&mut self, other: &Histogram) {
+        self.samples.extend_from_slice(&other.samples);
+        self.sorted = false;
+    }
+
+    /// The serving report's fixed percentile set in one pass. An empty
+    /// histogram summarizes to all-zero (count 0) instead of panicking —
+    /// a shard that served nothing is a report row, not a crash.
+    pub fn summary(&mut self) -> Summary {
+        if self.samples.is_empty() {
+            return Summary::default();
+        }
+        Summary {
+            count: self.len(),
+            mean: self.mean(),
+            p50: self.percentile(50.0),
+            p95: self.percentile(95.0),
+            p99: self.percentile(99.0),
+            max: self.max(),
+        }
+    }
+}
+
+/// Percentile snapshot of one [`Histogram`] (values in the histogram's
+/// own unit — seconds for latency, images for queue depth).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
 }
 
 /// Fixed-width markdown-ish table writer for the bench reports.
@@ -241,6 +277,27 @@ mod tests {
         assert_eq!(h.percentile(100.0), 100.0);
         assert_eq!(h.percentile(1.0), 1.0);
         assert!((h.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_merge_and_summary() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for i in 1..=50 {
+            a.record(i as f64);
+        }
+        for i in 51..=100 {
+            b.record(i as f64);
+        }
+        a.merge(&b);
+        let s = a.summary();
+        assert_eq!(s.count, 100);
+        assert_eq!(s.p50, 50.0);
+        assert_eq!(s.p99, 99.0);
+        assert_eq!(s.max, 100.0);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+        // empty histograms summarize to zero, not panic
+        assert_eq!(Histogram::new().summary(), Summary::default());
     }
 
     #[test]

@@ -5,12 +5,14 @@
 
 pub mod cnn;
 pub mod fftbench;
+pub mod serve;
 pub mod sweep;
 pub mod tables;
 pub mod trainer;
 
 pub use cnn::table3_report;
 pub use fftbench::{fig7_report, fig8_report};
+pub use serve::{serve_json, serve_table};
 pub use sweep::{fig16_report, sec54_report};
 pub use tables::{breakdown_json, table4_report, table5_report,
                  tiling_report};

@@ -1,0 +1,243 @@
+//! The serving-engine report: `BENCH_serve.json` (machine-readable,
+//! gated by CI's serve-smoke step) and the human table rendered from
+//! that same document — the JSON is built first and the table reads
+//! only it, so the two can never disagree (the `breakdown` pattern).
+//!
+//! Schema (version 1):
+//!
+//! ```text
+//! { "version": 1, "bench": "serve", "mode": "closed"|"open",
+//!   "smoke": bool, "shards": N, "capacity": C, "pass": "fprop",
+//!   "requests": n, "images": n, "launches": n,
+//!   "rejected_deadline": n, "sla_miss": n, "launch_errors": n,
+//!   "wall_s": s, "throughput_img_s": r, "batch_fill": f,
+//!   "busy_frac": f,
+//!   "cache": {"entries": n, "hits": n, "misses": n, "tunes": n},
+//!   "aggregate": {"count","mean_ms","p50_ms","p95_ms","p99_ms","max_ms"},
+//!   "per_shard": [ {"shard","requests","images","launches",
+//!                   "flushes_full","flushes_timeout","batch_fill",
+//!                   "queue_depth_p50","queue_depth_max",
+//!                   "mean_ms","p50_ms","p95_ms","p99_ms","max_ms"} ] }
+//! ```
+
+use std::time::Duration;
+
+use crate::coordinator::service::EngineReport;
+use crate::metrics::{Histogram, Table};
+use crate::util::Json;
+
+/// Latency summary of one histogram as a `*_ms` JSON object.
+fn summary_ms(hist: &Histogram) -> Json {
+    let mut h = hist.clone();
+    let s = h.summary();
+    Json::obj(vec![
+        ("count", Json::num(s.count as f64)),
+        ("mean_ms", Json::num(s.mean * 1e3)),
+        ("p50_ms", Json::num(s.p50 * 1e3)),
+        ("p95_ms", Json::num(s.p95 * 1e3)),
+        ("p99_ms", Json::num(s.p99 * 1e3)),
+        ("max_ms", Json::num(s.max * 1e3)),
+    ])
+}
+
+/// Build the `BENCH_serve.json` document from a finished engine run.
+pub fn serve_json(r: &EngineReport, mode: &str, smoke: bool,
+                  wall: Duration) -> Json {
+    let wall_s = wall.as_secs_f64();
+    let mut per_shard = Vec::with_capacity(r.shards.len());
+    for s in &r.shards {
+        let mut depth = s.depth.clone();
+        let d = depth.summary();
+        let mut row = match summary_ms(&s.latency) {
+            Json::Obj(m) => m,
+            _ => unreachable!("summary_ms builds an object"),
+        };
+        row.insert("shard".into(), Json::num(s.shard as f64));
+        row.insert("requests".into(), Json::num(s.requests as f64));
+        row.insert("images".into(), Json::num(s.images as f64));
+        row.insert("launches".into(), Json::num(s.launches as f64));
+        row.insert("flushes_full".into(),
+                   Json::num(s.flushes_full as f64));
+        row.insert("flushes_timeout".into(),
+                   Json::num(s.flushes_timeout as f64));
+        row.insert("batch_fill".into(), Json::num(s.batch_fill));
+        row.insert("queue_depth_p50".into(), Json::num(d.p50));
+        row.insert("queue_depth_max".into(), Json::num(d.max));
+        per_shard.push(Json::Obj(row));
+    }
+    Json::obj(vec![
+        ("version", Json::num(1.0)),
+        ("bench", Json::str("serve")),
+        ("mode", Json::str(mode)),
+        ("smoke", Json::Bool(smoke)),
+        ("shards", Json::num(r.shards.len() as f64)),
+        ("capacity", Json::num(r.capacity as f64)),
+        ("pass", Json::str(r.pass.tag())),
+        ("requests", Json::num(r.requests() as f64)),
+        ("images", Json::num(r.images() as f64)),
+        ("launches", Json::num(r.launches() as f64)),
+        ("rejected_deadline", Json::num(r.rejected_deadline as f64)),
+        ("sla_miss", Json::num(r.sla_miss() as f64)),
+        ("launch_errors", Json::num(r.launch_errors() as f64)),
+        ("wall_s", Json::num(wall_s)),
+        ("throughput_img_s",
+         Json::num(if wall_s > 0.0 {
+             r.images() as f64 / wall_s
+         } else {
+             0.0
+         })),
+        ("batch_fill", Json::num(r.batch_fill())),
+        ("busy_frac",
+         Json::num(if wall_s > 0.0 {
+             // busy is summed across shards; normalize by shard-seconds
+             r.busy().as_secs_f64() / (wall_s * r.shards.len().max(1) as f64)
+         } else {
+             0.0
+         })),
+        ("cache", Json::obj(vec![
+            ("entries", Json::num(r.cache.entries as f64)),
+            ("hits", Json::num(r.cache.hits as f64)),
+            ("misses", Json::num(r.cache.misses as f64)),
+            ("tunes", Json::num(r.cache.tunes as f64)),
+        ])),
+        ("aggregate", summary_ms(&r.aggregate_latency())),
+        ("per_shard", Json::Arr(per_shard)),
+    ])
+}
+
+/// Render the human serving table from a `BENCH_serve.json` document:
+/// one row per shard, one aggregate row, and a counters footer.
+pub fn serve_table(j: &Json) -> String {
+    let g = |e: &Json, k: &str| e.get(k).and_then(Json::as_f64)
+        .unwrap_or(f64::NAN);
+    let n = |e: &Json, k: &str| e.get(k).and_then(Json::as_usize)
+        .unwrap_or(0);
+    let ms = |v: f64| format!("{v:.2}");
+    let mut t = Table::new(&[
+        "shard", "reqs", "imgs", "launches", "fill", "depth p50/max",
+        "p50 ms", "p95 ms", "p99 ms", "max ms"]);
+    for s in j.get("per_shard").and_then(Json::as_arr).unwrap_or(&[]) {
+        t.row(vec![
+            format!("{}", n(s, "shard")),
+            format!("{}", n(s, "requests")),
+            format!("{}", n(s, "images")),
+            format!("{}", n(s, "launches")),
+            format!("{:.2}", g(s, "batch_fill")),
+            format!("{:.0}/{:.0}", g(s, "queue_depth_p50"),
+                    g(s, "queue_depth_max")),
+            ms(g(s, "p50_ms")),
+            ms(g(s, "p95_ms")),
+            ms(g(s, "p99_ms")),
+            ms(g(s, "max_ms")),
+        ]);
+    }
+    if let Some(agg) = j.get("aggregate") {
+        t.row(vec![
+            "all".into(),
+            format!("{}", n(j, "requests")),
+            format!("{}", n(j, "images")),
+            format!("{}", n(j, "launches")),
+            format!("{:.2}", g(j, "batch_fill")),
+            "-".into(),
+            ms(g(agg, "p50_ms")),
+            ms(g(agg, "p95_ms")),
+            ms(g(agg, "p99_ms")),
+            ms(g(agg, "max_ms")),
+        ]);
+    }
+    let cache = j.get("cache");
+    let cn = |k: &str| cache.and_then(|c| c.get(k))
+        .and_then(Json::as_usize).unwrap_or(0);
+    format!(
+        "serve: {} mode, {} shards x capacity {} ({} pass)\n{}\
+         throughput {:.0} img/s over {:.2}s wall, busy {:.0}%  \
+         rejected {}  sla_miss {}\n\
+         strategy cache: {} entries, {} hits / {} misses, {} tunes\n",
+        j.get("mode").and_then(Json::as_str).unwrap_or("?"),
+        n(j, "shards"), n(j, "capacity"),
+        j.get("pass").and_then(Json::as_str).unwrap_or("?"),
+        t.render(),
+        g(j, "throughput_img_s"), g(j, "wall_s"),
+        g(j, "busy_frac") * 100.0,
+        n(j, "rejected_deadline"), n(j, "sla_miss"),
+        cn("entries"), cn("hits"), cn("misses"), cn("tunes"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::autotuner::CacheStats;
+    use crate::coordinator::service::ShardReport;
+    use crate::coordinator::Pass;
+
+    fn sample_report() -> EngineReport {
+        let mut shards = Vec::new();
+        for i in 0..2usize {
+            let mut s = ShardReport { shard: i, ..Default::default() };
+            s.requests = 10 * (i + 1);
+            s.images = 20 * (i + 1);
+            s.launches = 5;
+            s.batch_fill = 0.75;
+            s.flushes_full = 3;
+            s.flushes_timeout = 2;
+            for k in 1..=10 {
+                s.latency.record(k as f64 * 1e-3 * (i + 1) as f64);
+                s.depth.record(k as f64);
+            }
+            shards.push(s);
+        }
+        EngineReport {
+            shards,
+            rejected_deadline: 1,
+            cache: CacheStats { entries: 3, hits: 40, misses: 5,
+                                tunes: 3 },
+            capacity: 8,
+            pass: Pass::Fprop,
+        }
+    }
+
+    #[test]
+    fn json_has_gate_keys_and_consistent_totals() {
+        let r = sample_report();
+        let j = serve_json(&r, "closed", true,
+                           Duration::from_millis(500));
+        assert_eq!(j.get("version").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("requests").unwrap().as_usize(), Some(30));
+        assert_eq!(j.get("images").unwrap().as_usize(), Some(60));
+        assert_eq!(j.get("rejected_deadline").unwrap().as_usize(),
+                   Some(1));
+        let agg = j.get("aggregate").expect("aggregate block");
+        for k in ["p50_ms", "p95_ms", "p99_ms", "max_ms", "mean_ms"] {
+            assert!(agg.get(k).and_then(Json::as_f64).is_some(),
+                    "missing aggregate {k}");
+        }
+        // aggregate p99 covers both shards: max sample is 20ms
+        assert!((agg.get("max_ms").unwrap().as_f64().unwrap() - 20.0)
+                    .abs() < 1e-9);
+        let per = j.get("per_shard").unwrap().as_arr().unwrap();
+        assert_eq!(per.len(), 2);
+        for s in per {
+            for k in ["p50_ms", "p99_ms", "batch_fill",
+                      "queue_depth_max"] {
+                assert!(s.get(k).and_then(Json::as_f64).is_some(),
+                        "missing per-shard {k}");
+            }
+        }
+        // throughput: 60 images / 0.5 s
+        assert!((j.get("throughput_img_s").unwrap().as_f64().unwrap()
+                 - 120.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn json_round_trips_and_table_renders() {
+        let r = sample_report();
+        let j = serve_json(&r, "open", false, Duration::from_secs(1));
+        let parsed = Json::parse(&j.to_string()).expect("valid JSON");
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("serve"));
+        let table = serve_table(&parsed);
+        // 2 shard rows + aggregate row + header/rule
+        assert!(table.lines().count() >= 6, "{table}");
+        assert!(table.contains("all"));
+        assert!(table.contains("strategy cache: 3 entries"));
+    }
+}

@@ -227,7 +227,8 @@ fn service_end_to_end_on_quickstart() {
     };
     let (tx, rx) = std::sync::mpsc::channel::<Completion>();
     for id in 0..10u64 {
-        svc.submit(ServeRequest { id, images: 1, reply: tx.clone() });
+        svc.submit(ServeRequest { id, images: 1, deadline: None,
+                                  reply: tx.clone() });
     }
     drop(tx);
     let mut done = 0;

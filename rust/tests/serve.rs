@@ -1,0 +1,316 @@
+//! Serving-engine tier: batcher admission invariants, the persistent
+//! strategy cache, and the multi-shard soak. Everything here runs on
+//! the host-engine backend — no artifacts or PJRT needed — so this
+//! tier always executes (the PJRT serving path is covered by the
+//! artifact-gated `integration.rs`).
+
+use std::collections::HashSet;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use fbfft_repro::conv::ConvProblem;
+use fbfft_repro::coordinator::batcher::{Batcher, BatcherConfig};
+use fbfft_repro::coordinator::service::{Completion, EngineConfig,
+                                        ServeEngine, ServeRequest};
+use fbfft_repro::coordinator::{Pass, StrategyCache};
+use fbfft_repro::reports::serve_json;
+use fbfft_repro::util::Json;
+
+fn cfg(cap: usize, wait_ms: u64) -> BatcherConfig {
+    BatcherConfig { capacity: cap,
+                    max_wait: Duration::from_millis(wait_ms) }
+}
+
+// ---------------------------------------------------------------------------
+// Batcher admission path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn batcher_orders_flushes_by_deadline_not_arrival() {
+    let mut b = Batcher::new(cfg(4, 1000));
+    let t = Instant::now();
+    let ms = |n: u64| t + Duration::from_millis(n);
+    // arrival order 1,2,3 — deadline order 3,1,2
+    b.push_deadline(1, 4, t, ms(50));
+    b.push_deadline(2, 4, t, ms(80));
+    b.push_deadline(3, 4, t, ms(10));
+    assert_eq!(b.deadline(), Some(ms(10)), "most urgent leads");
+    let order: Vec<u64> = std::iter::from_fn(|| {
+        let batch = b.drain();
+        batch.parts.first().map(|(id, _)| *id)
+    })
+    .collect();
+    assert_eq!(order, vec![3, 1, 2]);
+}
+
+#[test]
+fn batcher_deadline_poll_flushes_only_expired_urgency() {
+    let mut b = Batcher::new(cfg(64, 1000));
+    let t = Instant::now();
+    b.push_deadline(1, 1, t, t + Duration::from_millis(5));
+    b.push_deadline(2, 1, t, t + Duration::from_millis(500));
+    assert!(b.poll(t).is_none(), "nothing expired yet");
+    let batch = b
+        .poll(t + Duration::from_millis(6))
+        .expect("urgent deadline expired");
+    // a timeout flush takes the whole queue up to capacity
+    assert_eq!(batch.parts, vec![(1, 1), (2, 1)]);
+    assert_eq!(b.flushes_timeout, 1);
+}
+
+#[test]
+fn batcher_splits_oversized_requests_across_batches() {
+    let mut b = Batcher::new(cfg(8, 0));
+    let t = Instant::now();
+    b.push(1, 35, t); // >4x capacity
+    let mut sizes = Vec::new();
+    loop {
+        let batch = b.drain();
+        if batch.is_empty() {
+            break;
+        }
+        assert!(batch.images() <= 8);
+        sizes.push(batch.images());
+    }
+    assert_eq!(sizes, vec![8, 8, 8, 8, 3]);
+}
+
+#[test]
+fn batcher_handles_ragged_final_batches() {
+    // the fft_soa.rs ragged batch sizes, one request each
+    let sizes = [1usize, 7, 8, 9, 35];
+    let mut b = Batcher::new(cfg(8, 0));
+    let t = Instant::now();
+    for (id, n) in sizes.iter().enumerate() {
+        b.push(id as u64, *n, t);
+    }
+    let total: usize = sizes.iter().sum();
+    let mut drained = 0usize;
+    let mut batches = 0usize;
+    loop {
+        let batch = b.drain();
+        if batch.is_empty() {
+            break;
+        }
+        assert!(batch.images() >= 1 && batch.images() <= 8);
+        drained += batch.images();
+        batches += 1;
+    }
+    assert_eq!(drained, total, "images conserved across ragged batches");
+    // 60 images at capacity 8 → at least ceil(60/8) batches
+    assert!(batches >= 8, "{batches} batches");
+    assert!(b.is_empty());
+}
+
+// ---------------------------------------------------------------------------
+// Strategy cache through the engine
+// ---------------------------------------------------------------------------
+
+#[test]
+fn engine_persists_and_warm_loads_the_strategy_cache() {
+    let tmp = std::env::temp_dir().join("fbfft_serve_tune_test.json");
+    std::fs::remove_file(&tmp).ok();
+    let p = ConvProblem::square(4, 1, 1, 8, 3);
+    let engine_cfg = || EngineConfig {
+        shards: 1,
+        batcher: cfg(4, 1),
+        default_deadline: Duration::from_secs(60),
+        tuner_path: Some(tmp.clone()),
+        ..Default::default()
+    };
+    let run_once = || {
+        let engine = ServeEngine::start_host(p, engine_cfg()).unwrap();
+        // sequential closed loop: each request flushes alone, so both
+        // runs exercise exactly the shapes s ∈ {1, 2, 3}
+        for id in 0..3u64 {
+            let (tx, rx) = mpsc::channel::<Completion>();
+            assert!(engine.submit(ServeRequest {
+                id,
+                images: 1 + id as usize,
+                deadline: None,
+                reply: tx,
+            }));
+            rx.recv_timeout(Duration::from_secs(30))
+                .expect("request served");
+        }
+        engine.shutdown()
+    };
+    let first = run_once();
+    assert!(first.cache.entries > 0, "cache populated: {:?}",
+            first.cache);
+    assert!(first.cache.tunes > 0, "cold start tunes");
+    assert!(tmp.exists(), "cache persisted at shutdown");
+    // warm restart: same shapes, zero tuner runs
+    let second = run_once();
+    assert_eq!(second.cache.tunes, 0,
+               "warm-loaded cache serves without re-tuning: {:?}",
+               second.cache);
+    assert!(second.cache.hits > 0);
+    std::fs::remove_file(&tmp).ok();
+}
+
+#[test]
+fn warm_cache_lookup_is_populated_for_flush_shapes() {
+    let p = ConvProblem::square(8, 1, 1, 8, 3);
+    let engine = ServeEngine::start_host(
+        p,
+        EngineConfig {
+            shards: 1,
+            batcher: cfg(8, 1),
+            ..Default::default()
+        })
+        .unwrap();
+    // startup warming covers the singleton and the full batch
+    let cache: &StrategyCache = engine.cache();
+    for s in [1usize, 8] {
+        let q = ConvProblem { s, ..p };
+        assert!(cache.lookup(&q, Pass::Fprop).is_some(),
+                "warm shape s={s} missing");
+    }
+    engine.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Multi-shard soak
+// ---------------------------------------------------------------------------
+
+/// ISSUE 5 acceptance: N>=4 shards, >=500 requests with mixed and
+/// oversized sizes, zero lost or duplicated completions, and the
+/// serve report carries aggregate p99 plus per-shard histograms.
+#[test]
+fn soak_four_shards_exactly_once_and_reported() {
+    const SHARDS: usize = 4;
+    const SUBMITTERS: usize = 4;
+    const PER_THREAD: usize = 130; // 520 total
+    let sizes = [1usize, 7, 8, 9, 35, 2, 4, 3];
+    let p = ConvProblem::square(8, 2, 2, 8, 3);
+    let engine = ServeEngine::start_host(
+        p,
+        EngineConfig {
+            shards: SHARDS,
+            batcher: cfg(8, 1),
+            default_deadline: Duration::from_secs(120),
+            ..Default::default()
+        })
+        .unwrap();
+    let t0 = Instant::now();
+    let mut per_thread: Vec<(usize, Vec<Completion>)> = Vec::new();
+    std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for w in 0..SUBMITTERS {
+            let client = engine.client();
+            handles.push(scope.spawn(move || {
+                let (tx, rx) = mpsc::channel::<Completion>();
+                let mut submitted_images = 0usize;
+                for i in 0..PER_THREAD {
+                    let images = sizes[(w + i) % sizes.len()];
+                    let accepted = client.submit(ServeRequest {
+                        id: ((w as u64) << 32) | i as u64,
+                        images,
+                        deadline: None,
+                        reply: tx.clone(),
+                    });
+                    assert!(accepted, "soak load must not be shed");
+                    submitted_images += images;
+                }
+                drop(tx);
+                let mut got = Vec::new();
+                while let Ok(c) =
+                    rx.recv_timeout(Duration::from_secs(60))
+                {
+                    got.push(c);
+                    if got.len() == PER_THREAD {
+                        break;
+                    }
+                }
+                (submitted_images, got)
+            }));
+        }
+        for h in handles {
+            per_thread.push(h.join().expect("submitter panicked"));
+        }
+    });
+    let wall = t0.elapsed();
+
+    // exactly-once: every request completed, no id twice, image counts
+    // preserved end to end (oversized requests reassembled from splits)
+    let mut seen = HashSet::new();
+    let mut total_images = 0usize;
+    let mut expected_images = 0usize;
+    for (submitted, completions) in &per_thread {
+        expected_images += submitted;
+        assert_eq!(completions.len(), PER_THREAD,
+                   "every request completes");
+        for c in completions {
+            assert!(seen.insert(c.id), "duplicate completion {}", c.id);
+            assert!(c.shard < SHARDS);
+            total_images += c.images;
+        }
+    }
+    assert_eq!(seen.len(), SUBMITTERS * PER_THREAD);
+    assert_eq!(total_images, expected_images,
+               "split requests report their full image count");
+
+    let report = engine.shutdown();
+    assert_eq!(report.shards.len(), SHARDS);
+    assert_eq!(report.requests(), SUBMITTERS * PER_THREAD);
+    assert_eq!(report.images(), expected_images);
+    assert_eq!(report.rejected_deadline, 0);
+    assert_eq!(report.launch_errors(), 0,
+               "host backend launches never fail");
+    for s in &report.shards {
+        assert!(s.requests > 0,
+                "least-loaded routing spreads over shard {}", s.shard);
+        assert!(s.launches > 0);
+        assert!(s.batch_fill > 0.0 && s.batch_fill <= 1.0);
+    }
+
+    // the reports::serve document carries the acceptance keys
+    let j = serve_json(&report, "soak", false, wall);
+    let agg = j.get("aggregate").expect("aggregate block");
+    let p99 = agg.get("p99_ms").and_then(Json::as_f64)
+        .expect("aggregate p99");
+    assert!(p99 > 0.0);
+    assert_eq!(agg.get("count").and_then(Json::as_usize),
+               Some(SUBMITTERS * PER_THREAD));
+    let shards = j.get("per_shard").and_then(Json::as_arr)
+        .expect("per-shard rows");
+    assert_eq!(shards.len(), SHARDS);
+    for s in shards {
+        for k in ["p50_ms", "p95_ms", "p99_ms", "batch_fill",
+                  "queue_depth_max"] {
+            assert!(s.get(k).and_then(Json::as_f64).is_some(),
+                    "per-shard key {k} missing");
+        }
+    }
+    assert_eq!(j.get("rejected_deadline").and_then(Json::as_usize),
+               Some(0));
+}
+
+/// An idle engine parks on its channel (no deadline spin) and still
+/// wakes promptly for late traffic.
+#[test]
+fn idle_engine_wakes_for_late_requests() {
+    let p = ConvProblem::square(4, 1, 1, 8, 3);
+    let engine = ServeEngine::start_host(
+        p,
+        EngineConfig {
+            shards: 2,
+            batcher: cfg(4, 1),
+            warm: false,
+            ..Default::default()
+        })
+        .unwrap();
+    std::thread::sleep(Duration::from_millis(120)); // idle period
+    let (tx, rx) = mpsc::channel::<Completion>();
+    assert!(engine.submit(ServeRequest { id: 9, images: 2,
+                                         deadline: None,
+                                         reply: tx }));
+    let c = rx.recv_timeout(Duration::from_secs(30))
+        .expect("late request served after idle park");
+    assert_eq!(c.id, 9);
+    assert_eq!(c.images, 2);
+    let report = engine.shutdown();
+    assert_eq!(report.requests(), 1);
+    assert_eq!(report.launches(), 1);
+}

@@ -34,21 +34,21 @@ fn zero_alloc_steady_state(mode: FftMode, p: &ConvProblem, n: usize) {
     // warmup: every role reaches its high-water mark across all passes
     run_all_passes(&eng, p, &x, &wei, &go, &mut y, &mut gx, &mut gw,
                    &mut ws);
-    let allocs = ws.pool.allocations;
-    let exps = ws.pool.expansions;
-    let reuses = ws.pool.reuses;
-    assert!(allocs > 0, "the pipeline must actually use the pool");
+    assert!(ws.pool.allocations > 0,
+            "the pipeline must actually use the pool");
 
-    // steady state: counters prove no checkout touched the heap
+    // steady state measured in isolation: reset after warmup, then the
+    // counters prove no checkout touched the heap
+    ws.pool.reset_counters();
     for _ in 0..3 {
         run_all_passes(&eng, p, &x, &wei, &go, &mut y, &mut gx, &mut gw,
                        &mut ws);
     }
-    assert_eq!(ws.pool.allocations, allocs,
+    assert_eq!(ws.pool.allocations, 0,
                "{mode:?}: steady-state pass allocated a new pool buffer");
-    assert_eq!(ws.pool.expansions, exps,
+    assert_eq!(ws.pool.expansions, 0,
                "{mode:?}: steady-state pass grew a pool buffer");
-    assert!(ws.pool.reuses > reuses,
+    assert!(ws.pool.reuses > 0,
             "{mode:?}: steady-state passes must reuse pooled buffers");
 
     // and the reused-buffer outputs are still the right answers
