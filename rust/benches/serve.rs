@@ -30,9 +30,10 @@ use fbfft_repro::coordinator::batcher::BatcherConfig;
 use fbfft_repro::coordinator::service::{Completion, EngineClient,
                                         EngineConfig, ServeEngine,
                                         ServeRequest};
+use fbfft_repro::coordinator::Strategy;
 use fbfft_repro::reports::{serve_json, serve_table};
 use fbfft_repro::trace;
-use fbfft_repro::util::Rng;
+use fbfft_repro::util::{Json, Rng};
 
 struct BenchArgs {
     smoke: bool,
@@ -158,6 +159,57 @@ fn run_open(client: &EngineClient, a: &BenchArgs) -> usize {
     done
 }
 
+/// Deterministic weight-spectrum cache probe: a fresh single-shard
+/// engine forced onto the fbfft path serves two back-to-back
+/// full-capacity flushes. The first pays the weight FFT (spectrum
+/// miss), the second must hit the cache and spend **zero** weight-FFT
+/// time — the `second_weight_fft_ns == 0` statement CI gates on.
+fn spectra_probe(a: &BenchArgs) -> Json {
+    let problem = ConvProblem::square(a.capacity, 2, 2, 8, 3);
+    let engine = ServeEngine::start_host(
+        problem,
+        EngineConfig {
+            shards: 1,
+            batcher: BatcherConfig {
+                capacity: a.capacity,
+                max_wait: Duration::from_millis(2),
+            },
+            default_deadline: Duration::from_secs(30),
+            warm: false,
+            force_strategy: Some(Strategy::Fbfft),
+            ..Default::default()
+        })
+        .expect("probe engine starts");
+    let (tx, rx) = mpsc::channel::<Completion>();
+    for flush in 0..2u64 {
+        // a full-capacity request flushes immediately and alone, and
+        // the blocking recv serializes the two flushes
+        assert!(engine.submit(ServeRequest {
+            id: flush,
+            images: a.capacity,
+            deadline: None,
+            reply: tx.clone(),
+        }));
+        rx.recv_timeout(Duration::from_secs(60))
+            .expect("probe flush completes");
+    }
+    let report = engine.shutdown();
+    let wfft = report.weight_fft();
+    let (sum_ns, last_ns) = (wfft.sum() * 1e9, wfft.last() * 1e9);
+    assert_eq!(report.launches(), 2, "probe must flush exactly twice");
+    assert_eq!(report.spectra_misses(), 1, "first flush transforms");
+    assert_eq!(report.spectra_hits(), 1, "second flush must hit");
+    assert_eq!(last_ns, 0.0,
+               "steady-state flush must skip the weight FFT");
+    Json::obj(vec![
+        ("launches", Json::num(report.launches() as f64)),
+        ("spectra_hits", Json::num(report.spectra_hits() as f64)),
+        ("spectra_misses", Json::num(report.spectra_misses() as f64)),
+        ("first_weight_fft_ns", Json::num(sum_ns - last_ns)),
+        ("second_weight_fft_ns", Json::num(last_ns)),
+    ])
+}
+
 fn main() {
     let a = parse();
     // host backend: the bench must run on any checkout (the PJRT path
@@ -200,6 +252,14 @@ fn main() {
     assert_eq!(done, report.requests(),
                "every accepted request completes exactly once");
     let json = serve_json(&report, &a.mode, a.smoke, wall);
+    let probe = spectra_probe(&a);
+    let json = match json {
+        Json::Obj(mut doc) => {
+            doc.insert("spectra_probe".into(), probe);
+            Json::Obj(doc)
+        }
+        _ => unreachable!("serve_json builds an object"),
+    };
     std::fs::write("BENCH_serve.json", json.to_string())
         .expect("write BENCH_serve.json");
     eprintln!("wrote BENCH_serve.json (mode={}, smoke={})", a.mode,

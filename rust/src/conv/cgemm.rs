@@ -159,6 +159,24 @@ impl CMat for PlanarMat<'_> {
     }
 }
 
+/// Split-complex planes stored as IEEE binary16 bits — the serving
+/// tier's cached weight spectra ([`crate::conv::spectra`]). Dequantizing
+/// here, inside the `pack_b` element load, means the f16 slabs go
+/// straight into the packed panels: the B operand's memory traffic is
+/// halved and no intermediate f32 copy of the spectrum ever exists.
+struct F16PlanarMat<'a> {
+    re: &'a [u16],
+    im: &'a [u16],
+}
+
+impl CMat for F16PlanarMat<'_> {
+    #[inline(always)]
+    fn load(&self, idx: usize) -> (f32, f32) {
+        (crate::util::f16::f16_to_f32(self.re[idx]),
+         crate::util::f16::f16_to_f32(self.im[idx]))
+    }
+}
+
 /// Mutable complex output view — the writeback twin of [`CMat`].
 /// [`batched_planar`]'s *store-planar* side keeps the product planar so
 /// the SoA inverse transform consumes it without re-interleaving.
@@ -412,10 +430,52 @@ pub fn batched_planar(pass: Pass, bins: usize, s: usize, f: usize,
                       b_im: &[f32], c_re: &mut [f32], c_im: &mut [f32],
                       ws: &mut Workspace) {
     let sh = BinShape::of(pass, s, f, fo);
-    assert_eq!(a_re.len(), bins * sh.a_len, "A re plane length");
-    assert_eq!(a_im.len(), bins * sh.a_len, "A im plane length");
     assert_eq!(b_re.len(), bins * sh.b_len, "B re plane length");
     assert_eq!(b_im.len(), bins * sh.b_len, "B im plane length");
+    planar_driver(&sh, bins, a_re, a_im,
+                  &|q| PlanarMat {
+                      re: &b_re[q * sh.b_len..][..sh.b_len],
+                      im: &b_im[q * sh.b_len..][..sh.b_len],
+                  },
+                  c_re, c_im, ws);
+}
+
+/// [`batched_planar`] with the B operand held as f16 bit planes — the
+/// cached-weight-spectrum fast path of the serving tier. The A operand
+/// (the per-flush activations) and the product stay f32; only the cached
+/// spectrum is reduced precision, dequantized lane-wise in `pack_b` via
+/// [`F16PlanarMat`]. Arithmetic order is identical to [`batched_planar`]
+/// on the dequantized values (same panels, same microkernel), so the two
+/// agree bitwise when the f32 B operand is exactly f16-representable.
+#[allow(clippy::too_many_arguments)]
+pub fn batched_planar_f16b(pass: Pass, bins: usize, s: usize, f: usize,
+                           fo: usize, a_re: &[f32], a_im: &[f32],
+                           b_re: &[u16], b_im: &[u16], c_re: &mut [f32],
+                           c_im: &mut [f32], ws: &mut Workspace) {
+    let sh = BinShape::of(pass, s, f, fo);
+    assert_eq!(b_re.len(), bins * sh.b_len, "B re plane length");
+    assert_eq!(b_im.len(), bins * sh.b_len, "B im plane length");
+    planar_driver(&sh, bins, a_re, a_im,
+                  &|q| F16PlanarMat {
+                      re: &b_re[q * sh.b_len..][..sh.b_len],
+                      im: &b_im[q * sh.b_len..][..sh.b_len],
+                  },
+                  c_re, c_im, ws);
+}
+
+/// The shared planar-GEMM body: blocked/threaded exactly like
+/// [`batched`], with the B operand abstracted as a per-bin [`CMat`]
+/// factory so the f32 and f16 storage paths monomorphize from one
+/// implementation.
+fn planar_driver<BV, FB>(sh: &BinShape, bins: usize, a_re: &[f32],
+                         a_im: &[f32], b_of: &FB, c_re: &mut [f32],
+                         c_im: &mut [f32], ws: &mut Workspace)
+where
+    BV: CMat,
+    FB: Fn(usize) -> BV + Sync,
+{
+    assert_eq!(a_re.len(), bins * sh.a_len, "A re plane length");
+    assert_eq!(a_im.len(), bins * sh.a_len, "A im plane length");
     assert_eq!(c_re.len(), bins * sh.c_len, "C re plane length");
     assert_eq!(c_im.len(), bins * sh.c_len, "C im plane length");
     if bins == 0 {
@@ -453,15 +513,12 @@ pub fn batched_planar(pass: Pass, bins: usize, s: usize, f: usize,
                         re: &a_re[q * sh.a_len..][..sh.a_len],
                         im: &a_im[q * sh.a_len..][..sh.a_len],
                     };
-                    let bq = PlanarMat {
-                        re: &b_re[q * sh.b_len..][..sh.b_len],
-                        im: &b_im[q * sh.b_len..][..sh.b_len],
-                    };
+                    let bq = b_of(q);
                     let mut cq = PlanarSink {
                         re: &mut cr_head[qi * sh.c_len..][..sh.c_len],
                         im: &mut ci_head[qi * sh.c_len..][..sh.c_len],
                     };
-                    bin_gemm(&sh, &aq, &bq, &mut cq, ar, ai, br, bi);
+                    bin_gemm(sh, &aq, &bq, &mut cq, ar, ai, br, bi);
                 }
             };
             if nthreads == 1 {
@@ -685,6 +742,79 @@ mod tests {
             let g = C32::new(cr[i], ci[i]);
             assert!((g - *w).abs() < tol, "elem {i}: {g:?} vs {w:?}");
         }
+    }
+
+    #[test]
+    fn f16_b_path_is_bitwise_planar_on_representable_operands() {
+        use crate::util::f16::{decode_slab, encode_slab};
+        // encode B to f16 bits, then run (a) the f16 path on the bits and
+        // (b) the f32 path on the decoded values: identical panels reach
+        // the microkernel, so the products must agree bitwise — across
+        // every conjugation pattern and a k-block accumulate shape
+        for (pass, bins, s, f, fo, seed) in [
+            (Pass::Fprop, 5usize, 16usize, 16usize, 16usize, 0xA1u64),
+            (Pass::Bprop, 3, 3, 5, 7, 0xA2),
+            (Pass::AccGrad, 2, 5, 9, 17, 0xA3),
+            (Pass::Fprop, 96, 8, 24, 8, 0xA4), // threaded fan-out
+        ] {
+            let sh = BinShape::of(pass, s, f, fo);
+            let mut rng = Rng::new(seed);
+            let a = cvec(&mut rng, bins * sh.a_len);
+            let b = cvec(&mut rng, bins * sh.b_len);
+            let (ar, ai) = split(&a);
+            let (br, bi) = split(&b);
+            let (hbr, hbi) = (encode_slab(&br), encode_slab(&bi));
+            let mut ws = Workspace::new();
+            let mut want_r = vec![0f32; bins * sh.c_len];
+            let mut want_i = vec![0f32; bins * sh.c_len];
+            batched_planar(pass, bins, s, f, fo, &ar, &ai,
+                           &decode_slab(&hbr), &decode_slab(&hbi),
+                           &mut want_r, &mut want_i, &mut ws);
+            let mut got_r = vec![0f32; bins * sh.c_len];
+            let mut got_i = vec![0f32; bins * sh.c_len];
+            batched_planar_f16b(pass, bins, s, f, fo, &ar, &ai, &hbr,
+                                &hbi, &mut got_r, &mut got_i, &mut ws);
+            for i in 0..bins * sh.c_len {
+                assert_eq!(got_r[i].to_bits(), want_r[i].to_bits(),
+                           "{pass:?} elem {i} re");
+                assert_eq!(got_i[i].to_bits(), want_i[i].to_bits(),
+                           "{pass:?} elem {i} im");
+            }
+        }
+    }
+
+    #[test]
+    fn f16_b_quantization_error_is_small_and_bounded() {
+        // unit-variance operands: the f16 B quantization perturbs each
+        // product by ~EPS16 per term, so the output error is O(EPS16·√k)
+        let (pass, bins, s, f, fo) = (Pass::Fprop, 4usize, 8, 16, 8);
+        let sh = BinShape::of(pass, s, f, fo);
+        let mut rng = Rng::new(0xB5);
+        let a = cvec(&mut rng, bins * sh.a_len);
+        let b = cvec(&mut rng, bins * sh.b_len);
+        let (ar, ai) = split(&a);
+        let (br, bi) = split(&b);
+        let mut ws = Workspace::new();
+        let mut want_r = vec![0f32; bins * sh.c_len];
+        let mut want_i = vec![0f32; bins * sh.c_len];
+        batched_planar(pass, bins, s, f, fo, &ar, &ai, &br, &bi,
+                       &mut want_r, &mut want_i, &mut ws);
+        let mut got_r = vec![0f32; bins * sh.c_len];
+        let mut got_i = vec![0f32; bins * sh.c_len];
+        use crate::util::f16::encode_slab;
+        batched_planar_f16b(pass, bins, s, f, fo, &ar, &ai,
+                            &encode_slab(&br), &encode_slab(&bi),
+                            &mut got_r, &mut got_i, &mut ws);
+        let bound = 16.0 * crate::util::f16::EPS16
+            * (sh.k as f32).sqrt().max(1.0);
+        let mut max_err = 0f32;
+        for i in 0..bins * sh.c_len {
+            max_err = max_err
+                .max((got_r[i] - want_r[i]).abs())
+                .max((got_i[i] - want_i[i]).abs());
+        }
+        assert!(max_err > 0.0, "f16 must actually quantize something");
+        assert!(max_err < bound, "err {max_err} vs bound {bound}");
     }
 
     #[test]

@@ -53,8 +53,9 @@ use crate::util::{chunk_ranges, chunk_ranges_grouped, threads};
 
 use super::cgemm::{self, Workspace};
 use super::problem::ConvProblem;
+use super::spectra::{SpectrumPrecision, SpectrumSlabs, WeightSpectrum};
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum FftMode {
     /// cuFFT-analogue: explicit padding, planner FFTs, explicit transposes.
     Vendor,
@@ -81,6 +82,15 @@ pub struct StageTimings {
     pub trans_c: Duration,
     pub pack_c: Duration,
     pub ifft_c: Duration,
+    /// Time attributable to transforming the **weight** operand (the
+    /// B-side `fft_b + trans_b + pack_b` when B is the weight tensor —
+    /// fprop and bprop; zero for accGrad, whose B is the activation).
+    /// The spec-path entry points feed cached spectra instead, so this
+    /// is identically zero on a weight-spectrum-cache hit — the
+    /// `weight_fft_ns == 0` statement `BENCH_serve.json` gates on. An
+    /// attribution alias of the B stages, not a new stage: excluded
+    /// from [`StageTimings::total`].
+    pub weight_fft: Duration,
 }
 
 impl StageTimings {
@@ -113,6 +123,7 @@ impl StageTimings {
         self.trans_c += o.trans_c;
         self.pack_c += o.pack_c;
         self.ifft_c += o.ifft_c;
+        self.weight_fft += o.weight_fft;
     }
 }
 
@@ -705,6 +716,7 @@ impl FftConvEngine {
         self.inverse(&or, &oi, p.s * p.fo, p.yh(), p.yw(), out, ws,
                      &mut t.trans_c, &mut t.ifft_c, &mut t.pack_c);
         ws.pool.put_planar("freq.c", (or, oi));
+        t.weight_fft = t.fft_b + t.trans_b + t.pack_b;
         t
     }
 
@@ -735,6 +747,7 @@ impl FftConvEngine {
         self.inverse(&or, &oi, p.s * p.f, p.h, p.w, out, ws,
                      &mut t.trans_c, &mut t.ifft_c, &mut t.pack_c);
         ws.pool.put_planar("freq.c", (or, oi));
+        t.weight_fft = t.fft_b + t.trans_b + t.pack_b;
         t
     }
 
@@ -767,6 +780,128 @@ impl FftConvEngine {
                      &mut t.trans_c, &mut t.ifft_c, &mut t.pack_c);
         ws.pool.put_planar("freq.c", (or, oi));
         t
+    }
+
+    // ---- cached-weight-spectrum (spec) entry points --------------------
+
+    /// Transform a weight tensor into an owned [`WeightSpectrum`] —
+    /// the miss path of the serving tier's spectrum cache. Identical
+    /// transform to the `"freq.b"` forward of [`fprop_into`] /
+    /// [`bprop_into`] (both passes share it), copied out of the pooled
+    /// slab into owned storage at the requested precision.
+    ///
+    /// [`fprop_into`]: FftConvEngine::fprop_into
+    /// [`bprop_into`]: FftConvEngine::bprop_into
+    pub fn weight_spectrum(&self, p: &ConvProblem, wei: &[f32],
+                           version: u64, precision: SpectrumPrecision,
+                           ws: &mut Workspace) -> WeightSpectrum {
+        assert_eq!(wei.len(), p.weight_len());
+        let mut sink = Duration::ZERO;
+        let (wr, wi) = self.forward(wei, p.kh, p.kw, p.fo * p.f, "freq.b",
+                                    ws, &mut sink, &mut sink, &mut sink);
+        let slabs = match precision {
+            SpectrumPrecision::F32 => {
+                SpectrumSlabs::F32 { re: wr.clone(), im: wi.clone() }
+            }
+            SpectrumPrecision::F16 => SpectrumSlabs::F16 {
+                re: crate::util::f16::encode_slab(&wr),
+                im: crate::util::f16::encode_slab(&wi),
+            },
+        };
+        ws.pool.put_planar("freq.b", (wr, wi));
+        WeightSpectrum { n_fft: self.n_fft, mode: self.mode,
+                         count: p.fo * p.f, version, slabs }
+    }
+
+    /// [`fprop_into`](FftConvEngine::fprop_into) against a cached weight
+    /// spectrum: the weight pad+FFT stages are skipped entirely, so
+    /// `fft_b`/`trans_b`/`pack_b` — and therefore `weight_fft` — are
+    /// identically zero. With an f32 spectrum the output is bitwise
+    /// identical to the uncached pass; with f16 it stays inside the
+    /// testkit's `frequency_f16` tolerance.
+    pub fn fprop_spec_into(&self, p: &ConvProblem, x: &[f32],
+                           spec: &WeightSpectrum, out: &mut [f32],
+                           ws: &mut Workspace) -> StageTimings {
+        assert_eq!(p.stride, 1, "strided FFT conv out of scope (paper §2)");
+        assert_eq!(x.len(), p.input_len());
+        assert_eq!(out.len(), p.output_len());
+        self.check_spec(p, spec);
+        let mut t = StageTimings::default();
+        let (xr, xi) = self.forward(x, p.h, p.w, p.s * p.f, "freq.a", ws,
+                                    &mut t.fft_a, &mut t.trans_a,
+                                    &mut t.pack_a);
+        let bins = self.bins();
+        let t0 = Instant::now();
+        let (mut or, mut oi) =
+            ws.pool.take_planar_raw("freq.c", bins * p.s * p.fo);
+        self.spec_cgemm(Pass::Fprop, p, &xr, &xi, spec, &mut or, &mut oi,
+                        ws);
+        t.cgemm += t0.elapsed();
+        ws.pool.put_planar("freq.a", (xr, xi));
+        self.inverse(&or, &oi, p.s * p.fo, p.yh(), p.yw(), out, ws,
+                     &mut t.trans_c, &mut t.ifft_c, &mut t.pack_c);
+        ws.pool.put_planar("freq.c", (or, oi));
+        t
+    }
+
+    /// [`bprop_into`](FftConvEngine::bprop_into) against a cached weight
+    /// spectrum — the same spectrum
+    /// [`fprop_spec_into`](FftConvEngine::fprop_spec_into) consumes,
+    /// since both passes
+    /// transform the weights identically (§2: the conjugation patterns
+    /// differ only inside the CGEMM).
+    pub fn bprop_spec_into(&self, p: &ConvProblem, go: &[f32],
+                           spec: &WeightSpectrum, out: &mut [f32],
+                           ws: &mut Workspace) -> StageTimings {
+        assert_eq!(p.stride, 1, "strided FFT conv out of scope (paper §2)");
+        assert_eq!(go.len(), p.output_len());
+        assert_eq!(out.len(), p.input_len());
+        self.check_spec(p, spec);
+        let mut t = StageTimings::default();
+        let (gr, gi) = self.forward(go, p.yh(), p.yw(), p.s * p.fo,
+                                    "freq.a", ws, &mut t.fft_a,
+                                    &mut t.trans_a, &mut t.pack_a);
+        let bins = self.bins();
+        let t0 = Instant::now();
+        let (mut or, mut oi) =
+            ws.pool.take_planar_raw("freq.c", bins * p.s * p.f);
+        self.spec_cgemm(Pass::Bprop, p, &gr, &gi, spec, &mut or, &mut oi,
+                        ws);
+        t.cgemm += t0.elapsed();
+        ws.pool.put_planar("freq.a", (gr, gi));
+        self.inverse(&or, &oi, p.s * p.f, p.h, p.w, out, ws,
+                     &mut t.trans_c, &mut t.ifft_c, &mut t.pack_c);
+        ws.pool.put_planar("freq.c", (or, oi));
+        t
+    }
+
+    fn check_spec(&self, p: &ConvProblem, spec: &WeightSpectrum) {
+        assert_eq!(spec.mode, self.mode, "spectrum mode mismatch");
+        assert_eq!(spec.n_fft, self.n_fft, "spectrum basis mismatch");
+        assert_eq!(spec.count, p.fo * p.f, "spectrum plane count");
+        assert_eq!(spec.len(), self.bins() * p.fo * p.f,
+                   "spectrum slab length");
+    }
+
+    /// Dispatch the planar CGEMM over a cached spectrum's storage: f32
+    /// slabs run the exact planar path, f16 slabs the lane-dequantizing
+    /// one.
+    #[allow(clippy::too_many_arguments)]
+    fn spec_cgemm(&self, pass: Pass, p: &ConvProblem, a_re: &[f32],
+                  a_im: &[f32], spec: &WeightSpectrum, c_re: &mut [f32],
+                  c_im: &mut [f32], ws: &mut Workspace) {
+        let bins = self.bins();
+        match &spec.slabs {
+            SpectrumSlabs::F32 { re, im } => {
+                cgemm::batched_planar(pass, bins, p.s, p.f, p.fo, a_re,
+                                      a_im, re, im, c_re, c_im, ws);
+            }
+            SpectrumSlabs::F16 { re, im } => {
+                cgemm::batched_planar_f16b(pass, bins, p.s, p.f, p.fo,
+                                           a_re, a_im, re, im, c_re,
+                                           c_im, ws);
+            }
+        }
     }
 
     /// [`FftConvEngine::fprop_into`] with a one-shot workspace and owned
@@ -966,6 +1101,90 @@ mod tests {
                 assert_eq!(gw, fgw, "{mode:?} accgrad round {round}");
             }
         }
+    }
+
+    #[test]
+    fn weight_fft_attributes_the_b_stages() {
+        let p = ConvProblem::square(2, 3, 4, 9, 3);
+        let mut rng = Rng::new(0x30);
+        let x = rng.normal_vec(p.input_len());
+        let wei = rng.normal_vec(p.weight_len());
+        let go = rng.normal_vec(p.output_len());
+        for mode in [FftMode::Fbfft, FftMode::FbfftScalar, FftMode::Vendor] {
+            let eng = FftConvEngine::new(mode, 16);
+            let (_, tf) = eng.fprop(&p, &x, &wei);
+            assert_eq!(tf.weight_fft, tf.fft_b + tf.trans_b + tf.pack_b,
+                       "{mode:?} fprop weight_fft aliases the B stages");
+            assert!(tf.weight_fft > Duration::ZERO);
+            let (_, tb) = eng.bprop(&p, &go, &wei);
+            assert_eq!(tb.weight_fft, tb.fft_b + tb.trans_b + tb.pack_b);
+            // accGrad's B operand is the activation, never cached
+            let (_, ta) = eng.accgrad(&p, &go, &x);
+            assert_eq!(ta.weight_fft, Duration::ZERO);
+        }
+    }
+
+    #[test]
+    fn spec_path_f32_is_bitwise_the_uncached_pass() {
+        // same forward, same CGEMM, same inverse — an f32 spectrum must
+        // reproduce fprop_into/bprop_into exactly, with zero B-side time
+        let p = ConvProblem::square(2, 3, 4, 9, 3);
+        let mut rng = Rng::new(0x31);
+        let x = rng.normal_vec(p.input_len());
+        let wei = rng.normal_vec(p.weight_len());
+        let go = rng.normal_vec(p.output_len());
+        for mode in [FftMode::Fbfft, FftMode::FbfftScalar, FftMode::Vendor] {
+            let eng = FftConvEngine::new(mode, 16);
+            let mut ws = Workspace::new();
+            let spec = eng.weight_spectrum(&p, &wei, 7,
+                                           SpectrumPrecision::F32,
+                                           &mut ws);
+            let mut y = vec![0f32; p.output_len()];
+            let t = eng.fprop_spec_into(&p, &x, &spec, &mut y, &mut ws);
+            let (want, _) = eng.fprop(&p, &x, &wei);
+            assert_eq!(y, want, "{mode:?} fprop spec path");
+            assert_eq!(t.fft_b + t.trans_b + t.pack_b, Duration::ZERO,
+                       "{mode:?}: cached spectrum skips the weight FFT");
+            assert_eq!(t.weight_fft, Duration::ZERO);
+            let mut gx = vec![0f32; p.input_len()];
+            eng.bprop_spec_into(&p, &go, &spec, &mut gx, &mut ws);
+            let (gwant, _) = eng.bprop(&p, &go, &wei);
+            assert_eq!(gx, gwant, "{mode:?} bprop shares the spectrum");
+        }
+    }
+
+    #[test]
+    fn spec_path_f16_stays_inside_the_oracle_budget() {
+        let mut rng = Rng::new(0x32);
+        for p in problems() {
+            let eng = FftConvEngine::fbfft_for(&p);
+            let x = rng.normal_vec(p.input_len());
+            let wei = rng.normal_vec(p.weight_len());
+            let mut ws = Workspace::new();
+            let spec = eng.weight_spectrum(&p, &wei, 1,
+                                           SpectrumPrecision::F16,
+                                           &mut ws);
+            let mut y = vec![0f32; p.output_len()];
+            eng.fprop_spec_into(&p, &x, &spec, &mut y, &mut ws);
+            assert_close_oracle(
+                &y, &oracle::fprop64(&p, &x, &wei),
+                tolerance::frequency_f16(&p, Pass::Fprop, eng.n_fft));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "basis mismatch")]
+    fn spec_path_rejects_wrong_basis() {
+        let p = ConvProblem::square(1, 2, 2, 8, 3);
+        let mut rng = Rng::new(0x33);
+        let wei = rng.normal_vec(p.weight_len());
+        let x = rng.normal_vec(p.input_len());
+        let mut ws = Workspace::new();
+        let spec = FftConvEngine::new(FftMode::Fbfft, 8)
+            .weight_spectrum(&p, &wei, 1, SpectrumPrecision::F16, &mut ws);
+        let mut y = vec![0f32; p.output_len()];
+        FftConvEngine::new(FftMode::Fbfft, 16)
+            .fprop_spec_into(&p, &x, &spec, &mut y, &mut ws);
     }
 
     #[test]

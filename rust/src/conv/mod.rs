@@ -19,7 +19,9 @@
 //! multithreaded per-bin complex GEMM on planar re/im panels (packed
 //! straight from the SoA planes in fbfft mode), with the zero-allocation
 //! [`Workspace`] arena the passes thread through
-//! `forward`/CGEMM/`inverse`.
+//! `forward`/CGEMM/`inverse`. [`spectra`] caches the weight-operand
+//! spectra across serve flushes (versioned, f16 planar slabs by
+//! default) so steady-state serving skips the weight FFT entirely.
 //!
 //! All engines implement all three training passes and cross-check
 //! against each other in `rust/tests/`.
@@ -30,8 +32,11 @@ pub mod fft_conv;
 pub mod gemm;
 pub mod im2col;
 pub mod problem;
+pub mod spectra;
 pub mod tiled;
 
 pub use cgemm::Workspace;
 pub use fft_conv::{FftConvEngine, FftMode, StageTimings};
 pub use problem::ConvProblem;
+pub use spectra::{SpectrumCache, SpectrumPrecision, SpectrumStats,
+                  WeightSpectrum};

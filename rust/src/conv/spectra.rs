@@ -1,0 +1,309 @@
+//! The per-shard **weight-spectrum cache** — the serving tier's answer
+//! to the reuse argument of Mathieu et al. (1312.5851): inference
+//! weights change rarely, so their forward transform is computed once
+//! per `(weight shape, basis, mode, weights_version)` and every later
+//! flush skips the weight pad+FFT stages entirely
+//! ([`crate::conv::FftConvEngine::fprop_spec_into`] /
+//! [`bprop_spec_into`](crate::conv::FftConvEngine::bprop_spec_into) —
+//! both passes transform the weights identically, so one cached
+//! spectrum serves both; accGrad's B operand is the activation and is
+//! never cached).
+//!
+//! Cached slabs default to **f16 planar storage** ([`crate::util::f16`],
+//! no external deps): the bandwidth-bound CGEMM reads half the bytes,
+//! dequantizing lane-wise inside the packing path. The accuracy cost is
+//! gated per Table-2 case by `testkit::tolerance::frequency_f16`, and
+//! `FBFFT_SPECTRA=f32` (or [`SpectrumPrecision::F32`] in config) is the
+//! escape hatch back to exact f32 slabs.
+//!
+//! Versioned invalidation: every entry records the `weights_version` it
+//! was built from. [`SpectrumCache::bump`] drops the bumped weight
+//! shape's stale entries eagerly (and only those — other problems'
+//! spectra survive), while `ensure` lazily rebuilds on any version
+//! mismatch, so a new version serves correct spectra from its first
+//! flush with zero downtime.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use super::fft_conv::{FftConvEngine, FftMode};
+use super::problem::ConvProblem;
+use crate::conv::cgemm::Workspace;
+
+/// Storage precision for cached weight spectra.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpectrumPrecision {
+    /// Exact f32 planes — bitwise identical to the uncached pipeline.
+    F32,
+    /// IEEE binary16 planes — half the CGEMM B-operand traffic, error
+    /// bounded by the testkit's `frequency_f16` tolerance model.
+    F16,
+}
+
+impl SpectrumPrecision {
+    /// The configured default: f16 unless `FBFFT_SPECTRA=f32` asks for
+    /// the exact-storage escape hatch.
+    pub fn from_env() -> Self {
+        match std::env::var("FBFFT_SPECTRA").as_deref() {
+            Ok("f32") => SpectrumPrecision::F32,
+            _ => SpectrumPrecision::F16,
+        }
+    }
+}
+
+impl Default for SpectrumPrecision {
+    fn default() -> Self {
+        Self::from_env()
+    }
+}
+
+/// Owned planar frequency slabs of one weight tensor (`bins × fo·f`
+/// lanes per plane, bin-major — exactly what `forward("freq.b")`
+/// produces).
+#[derive(Clone, Debug)]
+pub enum SpectrumSlabs {
+    F32 { re: Vec<f32>, im: Vec<f32> },
+    F16 { re: Vec<u16>, im: Vec<u16> },
+}
+
+/// One cached weight spectrum: the slabs plus the identity they were
+/// computed under, so the spec-path entry points can assert a match
+/// instead of silently convolving with the wrong basis.
+#[derive(Clone, Debug)]
+pub struct WeightSpectrum {
+    pub n_fft: usize,
+    pub mode: FftMode,
+    /// planes in the slab (`fo · f`)
+    pub count: usize,
+    /// the `weights_version` the slabs were transformed from
+    pub version: u64,
+    pub slabs: SpectrumSlabs,
+}
+
+impl WeightSpectrum {
+    /// Total f32-lane count per plane (re and im each).
+    pub fn len(&self) -> usize {
+        match &self.slabs {
+            SpectrumSlabs::F32 { re, .. } => re.len(),
+            SpectrumSlabs::F16 { re, .. } => re.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Resident bytes of both planes — halved by f16 storage.
+    pub fn bytes(&self) -> usize {
+        match &self.slabs {
+            SpectrumSlabs::F32 { re, im } => 4 * (re.len() + im.len()),
+            SpectrumSlabs::F16 { re, im } => 2 * (re.len() + im.len()),
+        }
+    }
+
+    pub fn precision(&self) -> SpectrumPrecision {
+        match self.slabs {
+            SpectrumSlabs::F32 { .. } => SpectrumPrecision::F32,
+            SpectrumSlabs::F16 { .. } => SpectrumPrecision::F16,
+        }
+    }
+}
+
+/// Cache key: the weight-tensor shape plus the transform identity. The
+/// batch size is deliberately absent — a weight spectrum is independent
+/// of `s`, so one entry serves every flush shape of a problem (that is
+/// the whole win: ragged serve batches re-tune CGEMM strategies per
+/// shape but share the weight spectrum).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SpectrumKey {
+    pub f: usize,
+    pub fo: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub n_fft: usize,
+    pub mode: FftMode,
+}
+
+impl SpectrumKey {
+    pub fn of(eng: &FftConvEngine, p: &ConvProblem) -> Self {
+        SpectrumKey { f: p.f, fo: p.fo, kh: p.kh, kw: p.kw,
+                      n_fft: eng.n_fft, mode: eng.mode }
+    }
+}
+
+/// Counter snapshot for reports (`BENCH_serve.json`'s `spectra_*` keys).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SpectrumStats {
+    pub entries: usize,
+    pub hits: usize,
+    pub misses: usize,
+    pub invalidated: usize,
+}
+
+/// The versioned weight-spectrum cache. One per shard worker: entries
+/// are plain owned slabs (no locking — the worker thread owns it), and
+/// the hit/miss/invalidation counters feed the shard report.
+#[derive(Debug, Default)]
+pub struct SpectrumCache {
+    precision: SpectrumPrecision,
+    entries: HashMap<SpectrumKey, WeightSpectrum>,
+    pub hits: usize,
+    pub misses: usize,
+    pub invalidated: usize,
+}
+
+impl SpectrumCache {
+    pub fn new(precision: SpectrumPrecision) -> Self {
+        SpectrumCache { precision, ..Default::default() }
+    }
+
+    pub fn precision(&self) -> SpectrumPrecision {
+        self.precision
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn stats(&self) -> SpectrumStats {
+        SpectrumStats { entries: self.entries.len(), hits: self.hits,
+                        misses: self.misses,
+                        invalidated: self.invalidated }
+    }
+
+    /// Return the cached spectrum for `(p, eng, version)`, transforming
+    /// the weights on a miss (or on a version mismatch — the lazy half
+    /// of invalidation). The returned `Duration` is the weight-FFT time
+    /// actually spent: zero on a hit, which is exactly the
+    /// `weight_fft_ns == 0` statement the serve report gates on.
+    pub fn ensure(&mut self, eng: &FftConvEngine, p: &ConvProblem,
+                  weights: &[f32], version: u64, ws: &mut Workspace)
+                  -> (&WeightSpectrum, Duration) {
+        let key = SpectrumKey::of(eng, p);
+        let cached = self.entries.get(&key).map(|e| e.version);
+        if cached == Some(version) {
+            self.hits += 1;
+            return (&self.entries[&key], Duration::ZERO);
+        }
+        if cached.is_some() {
+            self.invalidated += 1; // stale version replaced in place
+        }
+        self.misses += 1;
+        let t0 = Instant::now();
+        let spec =
+            eng.weight_spectrum(p, weights, version, self.precision, ws);
+        let took = t0.elapsed();
+        self.entries.insert(key, spec);
+        (&self.entries[&key], took)
+    }
+
+    /// Eager half of a `weights_version` bump: drop every entry of this
+    /// problem's weight shape built from an older version, and only
+    /// those — spectra of other problems (different weight shapes)
+    /// survive untouched. Returns the number of entries dropped.
+    pub fn bump(&mut self, p: &ConvProblem, new_version: u64) -> usize {
+        let before = self.entries.len();
+        self.entries.retain(|k, e| {
+            !(k.f == p.f && k.fo == p.fo && k.kh == p.kh && k.kw == p.kw
+              && e.version < new_version)
+        });
+        let dropped = before - self.entries.len();
+        self.invalidated += dropped;
+        dropped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn hit_returns_zero_weight_fft_and_shared_across_batch_sizes() {
+        let p = ConvProblem::square(4, 2, 3, 8, 3);
+        let eng = FftConvEngine::fbfft_for(&p);
+        let mut rng = Rng::new(0x5CA1E);
+        let wei = rng.normal_vec(p.weight_len());
+        let mut ws = Workspace::new();
+        let mut cache = SpectrumCache::new(SpectrumPrecision::F16);
+        let (_, d0) = cache.ensure(&eng, &p, &wei, 1, &mut ws);
+        assert!(d0 > Duration::ZERO, "miss spends weight-FFT time");
+        // a different batch size is the same weight tensor — still a hit
+        let q = ConvProblem { s: 9, ..p };
+        let (_, d1) = cache.ensure(&eng, &q, &wei, 1, &mut ws);
+        assert_eq!(d1, Duration::ZERO, "hit skips the weight FFT");
+        assert_eq!(cache.stats(),
+                   SpectrumStats { entries: 1, hits: 1, misses: 1,
+                                   invalidated: 0 });
+    }
+
+    #[test]
+    fn version_mismatch_rebuilds_lazily() {
+        let p = ConvProblem::square(2, 2, 2, 8, 3);
+        let eng = FftConvEngine::fbfft_for(&p);
+        let mut rng = Rng::new(0xBEEF);
+        let w1 = rng.normal_vec(p.weight_len());
+        let w2 = rng.normal_vec(p.weight_len());
+        let mut ws = Workspace::new();
+        let mut cache = SpectrumCache::new(SpectrumPrecision::F32);
+        let (s1, _) = cache.ensure(&eng, &p, &w1, 1, &mut ws);
+        let v1_slab = match &s1.slabs {
+            SpectrumSlabs::F32 { re, .. } => re.clone(),
+            _ => unreachable!(),
+        };
+        let (s2, d2) = cache.ensure(&eng, &p, &w2, 2, &mut ws);
+        assert_eq!(s2.version, 2);
+        assert!(d2 > Duration::ZERO, "stale entry must be rebuilt");
+        let v2_slab = match &s2.slabs {
+            SpectrumSlabs::F32 { re, .. } => re.clone(),
+            _ => unreachable!(),
+        };
+        assert_ne!(v1_slab, v2_slab, "new weights, new spectrum");
+        let st = cache.stats();
+        assert_eq!((st.misses, st.invalidated), (2, 1));
+    }
+
+    #[test]
+    fn bump_drops_exactly_the_bumped_problems_entries() {
+        let pa = ConvProblem::square(2, 2, 2, 8, 3);
+        let pb = ConvProblem::square(2, 3, 4, 8, 5); // different weights
+        let ea = FftConvEngine::fbfft_for(&pa);
+        let eb = FftConvEngine::fbfft_for(&pb);
+        let mut rng = Rng::new(0xD1FF);
+        let wa = rng.normal_vec(pa.weight_len());
+        let wb = rng.normal_vec(pb.weight_len());
+        let mut ws = Workspace::new();
+        let mut cache = SpectrumCache::new(SpectrumPrecision::F16);
+        cache.ensure(&ea, &pa, &wa, 1, &mut ws);
+        cache.ensure(&eb, &pb, &wb, 1, &mut ws);
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.bump(&pa, 2), 1, "only pa's entry dropped");
+        assert_eq!(cache.len(), 1);
+        // pb's spectrum survived: still a hit at its version
+        let (_, d) = cache.ensure(&eb, &pb, &wb, 1, &mut ws);
+        assert_eq!(d, Duration::ZERO);
+        // a same-or-newer entry is never dropped by a stale bump
+        cache.ensure(&ea, &pa, &wa, 2, &mut ws);
+        assert_eq!(cache.bump(&pa, 2), 0);
+    }
+
+    #[test]
+    fn f16_storage_halves_resident_bytes() {
+        let p = ConvProblem::square(2, 4, 4, 8, 3);
+        let eng = FftConvEngine::fbfft_for(&p);
+        let mut rng = Rng::new(0xB17E5);
+        let wei = rng.normal_vec(p.weight_len());
+        let mut ws = Workspace::new();
+        let h = eng.weight_spectrum(&p, &wei, 1, SpectrumPrecision::F16,
+                                    &mut ws);
+        let f = eng.weight_spectrum(&p, &wei, 1, SpectrumPrecision::F32,
+                                    &mut ws);
+        assert_eq!(h.len(), f.len());
+        assert_eq!(2 * h.bytes(), f.bytes());
+        assert_eq!(h.precision(), SpectrumPrecision::F16);
+    }
+}

@@ -18,7 +18,7 @@ use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::conv::{direct, im2col, tiled, ConvProblem, FftConvEngine,
-                  FftMode, Workspace};
+                  FftMode, SpectrumPrecision, Workspace};
 use crate::fft::is_smooth;
 use crate::util::{Json, Rng};
 
@@ -49,11 +49,17 @@ pub struct Autotuner {
     pub reps: usize,
     /// include the §6 tiled candidates (fprop only)
     pub try_tiling: bool,
+    /// time frequency candidates through the weight-spectrum cache at
+    /// this precision (fprop/bprop): the serving engine amortizes the
+    /// weight FFT away, so its tuner must measure flushes the same way
+    /// or it would systematically under-rate the frequency strategies
+    pub serve_spectra: Option<SpectrumPrecision>,
 }
 
 impl Autotuner {
     pub fn new() -> Self {
-        Autotuner { cache: HashMap::new(), reps: 3, try_tiling: true }
+        Autotuner { cache: HashMap::new(), reps: 3, try_tiling: true,
+                    serve_spectra: None }
     }
 
     pub fn cached(&self, p: &ConvProblem, pass: Pass) -> Option<Choice> {
@@ -137,20 +143,37 @@ impl Autotuner {
                 Pass::AccGrad => p.weight_len(),
             }];
             let reps = self.reps.max(1);
+            // serving amortizes the weight FFT through the spectrum
+            // cache, so when tuning for that tier the weight spectrum
+            // is built once *outside* the timed region and the
+            // candidates measure the spec-path flush cost instead
+            let spec_precision = match (self.serve_spectra, pass) {
+                (Some(prec), Pass::Fprop | Pass::Bprop) => Some(prec),
+                _ => None,
+            };
             let time_fft = |eng: &FftConvEngine,
                                 ws: &mut Workspace,
                                 out: &mut [f32]| -> f64 {
+                let spec = spec_precision.map(|prec| {
+                    eng.weight_spectrum(p, &wei, 0, prec, ws)
+                });
                 let mut lo = f64::INFINITY;
                 for rep in 0..=reps {
                     let t0 = Instant::now();
-                    match pass {
-                        Pass::Fprop => {
+                    match (&spec, pass) {
+                        (Some(s), Pass::Fprop) => {
+                            eng.fprop_spec_into(p, &x, s, out, ws);
+                        }
+                        (Some(s), Pass::Bprop) => {
+                            eng.bprop_spec_into(p, &go, s, out, ws);
+                        }
+                        (None, Pass::Fprop) => {
                             eng.fprop_into(p, &x, &wei, out, ws);
                         }
-                        Pass::Bprop => {
+                        (None, Pass::Bprop) => {
                             eng.bprop_into(p, &go, &wei, out, ws);
                         }
-                        Pass::AccGrad => {
+                        (_, Pass::AccGrad) => {
                             eng.accgrad_into(p, &go, &x, out, ws);
                         }
                     }
@@ -315,6 +338,8 @@ pub struct StrategyCache {
     pub reps: usize,
     /// include §6 tiled candidates when tuning on miss
     pub try_tiling: bool,
+    /// mirror of [`Autotuner::serve_spectra`] applied to miss-path tunes
+    pub serve_spectra: Option<SpectrumPrecision>,
 }
 
 impl StrategyCache {
@@ -333,6 +358,7 @@ impl StrategyCache {
             tunes: AtomicUsize::new(0),
             reps: 1,
             try_tiling: true,
+            serve_spectra: None,
         }
     }
 
@@ -358,6 +384,7 @@ impl StrategyCache {
         let mut t = Autotuner::new();
         t.reps = self.reps;
         t.try_tiling = self.try_tiling;
+        t.serve_spectra = self.serve_spectra;
         let c = t.tune(p, pass);
         self.tunes.fetch_add(1, Ordering::Relaxed);
         self.tuner.lock().expect("tuner lock").insert(p, pass, c);

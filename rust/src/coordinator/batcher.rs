@@ -59,16 +59,24 @@ impl Default for BatcherConfig {
 pub struct Batcher {
     cfg: BatcherConfig,
     queue: VecDeque<Pending>,
-    /// counters for the serving report
+    /// running image count over `queue`, kept in lockstep by
+    /// `push_deadline` / `take_batch` so the per-poll fullness check is
+    /// O(1) instead of an O(queue) recount
+    queued: usize,
+    /// counters for the serving report — every batch handed out is
+    /// exactly one of full / timeout / drain, so
+    /// `flushes_full + flushes_timeout + flushes_drain` equals the
+    /// number of launches the batcher has fed
     pub flushes_full: usize,
     pub flushes_timeout: usize,
+    pub flushes_drain: usize,
 }
 
 impl Batcher {
     pub fn new(cfg: BatcherConfig) -> Self {
         assert!(cfg.capacity >= 1);
-        Batcher { cfg, queue: VecDeque::new(), flushes_full: 0,
-                  flushes_timeout: 0 }
+        Batcher { cfg, queue: VecDeque::new(), queued: 0,
+                  flushes_full: 0, flushes_timeout: 0, flushes_drain: 0 }
     }
 
     /// Enqueue with the default flush-by deadline `now + max_wait`
@@ -94,10 +102,16 @@ impl Batcher {
             .map(|i| i + 1)
             .unwrap_or(0);
         self.queue.insert(at, p);
+        self.queued += images;
     }
 
     pub fn queued_images(&self) -> usize {
-        self.queue.iter().map(|p| p.images).sum()
+        debug_assert_eq!(
+            self.queued,
+            self.queue.iter().map(|p| p.images).sum::<usize>(),
+            "running image count out of sync with the queue"
+        );
+        self.queued
     }
 
     pub fn is_empty(&self) -> bool {
@@ -128,11 +142,24 @@ impl Batcher {
         } else {
             self.flushes_timeout += 1;
         }
-        Some(self.drain())
+        Some(self.take_batch())
     }
 
-    /// Force-flush whatever is queued (shutdown path).
+    /// Force-flush whatever is queued (shutdown path). Counted under
+    /// `flushes_drain` when non-empty, so drained batches are not
+    /// invisible to the `batches == Σ flushes` reconciliation.
     pub fn drain(&mut self) -> Batch {
+        let batch = self.take_batch();
+        if !batch.is_empty() {
+            self.flushes_drain += 1;
+        }
+        batch
+    }
+
+    /// Pop up to one capacity's worth of images off the front of the
+    /// queue (splitting an oversized request), keeping the running
+    /// image count in sync. Callers attribute the flush to a counter.
+    fn take_batch(&mut self) -> Batch {
         let mut batch = Batch::default();
         let mut room = self.cfg.capacity;
         while room > 0 {
@@ -140,6 +167,7 @@ impl Batcher {
             let take = front.images.min(room);
             batch.parts.push((front.id, take));
             room -= take;
+            self.queued -= take;
             if take == front.images {
                 self.queue.pop_front();
             } else {
@@ -234,6 +262,41 @@ mod tests {
         b.push_deadline(4, 1, t, d);
         let batch = b.poll(t).expect("full");
         assert_eq!(batch.parts, vec![(3, 1), (4, 1)]);
+    }
+
+    #[test]
+    fn drain_counts_shutdown_flushes() {
+        let mut b = Batcher::new(cfg(8, 1000));
+        let t = Instant::now();
+        assert!(b.drain().is_empty());
+        assert_eq!(b.flushes_drain, 0, "empty drain is not a flush");
+        b.push(1, 3, t);
+        b.push(2, 2, t);
+        let batch = b.drain();
+        assert_eq!(batch.images(), 5);
+        assert_eq!(b.flushes_drain, 1);
+        assert_eq!(b.flushes_full + b.flushes_timeout, 0);
+    }
+
+    #[test]
+    fn running_image_count_tracks_pushes_splits_and_drains() {
+        let mut b = Batcher::new(cfg(4, 1000));
+        let t = Instant::now();
+        b.push(1, 3, t);
+        // urgent oversized request jumps the queue and splits
+        b.push_deadline(2, 6, t, t + Duration::from_millis(1));
+        assert_eq!(b.queued_images(), 9);
+        let first = b.poll(t).expect("full");
+        assert_eq!(first.parts, vec![(2, 4)]);
+        assert_eq!(b.queued_images(), 5);
+        let second = b.poll(t).expect("still full");
+        assert_eq!(second.parts, vec![(2, 2), (1, 2)]);
+        assert_eq!(b.queued_images(), 1);
+        assert_eq!(b.drain().parts, vec![(1, 1)]);
+        assert_eq!(b.queued_images(), 0);
+        assert!(b.is_empty());
+        assert_eq!((b.flushes_full, b.flushes_timeout, b.flushes_drain),
+                   (2, 0, 1));
     }
 
     #[test]

@@ -53,11 +53,17 @@ impl BufferPool {
         match self.bufs.entry(role.to_string()) {
             std::collections::hash_map::Entry::Occupied(mut e) => {
                 let buf = e.get_mut();
-                if buf.len() < len {
-                    buf.resize(len, 0.0);
+                // an expansion is a real reallocation: key on *capacity*,
+                // exactly as `take_raw` does — a role whose length was
+                // truncated by an earlier smaller checkout but whose
+                // capacity still covers `len` is a reuse
+                if buf.capacity() < len {
                     self.expansions += 1;
                 } else {
                     self.reuses += 1;
+                }
+                if buf.len() < len {
+                    buf.resize(len, 0.0);
                 }
                 let buf = e.into_mut();
                 let s = &mut buf[..len];
@@ -314,6 +320,24 @@ mod tests {
         // the zeroing variant scrubs the same capacity
         let b = p.take("hot", 4);
         assert_eq!(&b[..], &[0.0; 4]);
+    }
+
+    #[test]
+    fn get_counts_expansion_by_capacity_not_length() {
+        let mut p = BufferPool::new();
+        let b = p.take_raw("mix", 8);
+        p.put("mix", b);
+        // shrink the role's *length* via a smaller checkout …
+        let b = p.take_raw("mix", 2);
+        p.put("mix", b);
+        p.reset_counters();
+        // … then `get` at the original size: capacity 8 still covers
+        // it, so this must count as a reuse, not an expansion
+        let s = p.get("mix", 8);
+        assert_eq!(s, &[0.0; 8]);
+        assert_eq!(p.allocations, 0);
+        assert_eq!(p.expansions, 0);
+        assert_eq!(p.reuses, 1);
     }
 
     #[test]

@@ -39,7 +39,7 @@
 //! original examples were written against.
 
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -48,7 +48,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::conv::{direct, im2col, tiled, ConvProblem, FftConvEngine,
-                  FftMode, Workspace};
+                  FftMode, SpectrumCache, SpectrumPrecision, Workspace};
 use crate::metrics::Histogram;
 use crate::runtime::{HostTensor, Runtime};
 use crate::util::Rng;
@@ -106,6 +106,12 @@ pub struct EngineConfig {
     pub tuner_reps: usize,
     /// tune the {1, capacity}-image shapes before accepting traffic
     pub warm: bool,
+    /// storage precision of the per-shard weight-spectrum cache
+    /// (default: f16 unless `FBFFT_SPECTRA=f32`)
+    pub spectra: SpectrumPrecision,
+    /// bypass the tuner and serve every flush with this strategy —
+    /// the deterministic-probe escape hatch (bench smoke, CI gates)
+    pub force_strategy: Option<Strategy>,
 }
 
 impl Default for EngineConfig {
@@ -118,6 +124,8 @@ impl Default for EngineConfig {
             tuner_path: None,
             tuner_reps: 1,
             warm: true,
+            spectra: SpectrumPrecision::default(),
+            force_strategy: None,
         }
     }
 }
@@ -136,6 +144,9 @@ struct Accepted {
 
 enum Msg {
     Req(Accepted),
+    /// install a new weight tensor under `version`, invalidating the
+    /// shard's cached spectra of the served problem
+    Weights { version: u64, weights: Arc<Vec<f32>> },
     Shutdown,
 }
 
@@ -150,6 +161,18 @@ pub struct ShardReport {
     pub busy: Duration,
     pub flushes_full: usize,
     pub flushes_timeout: usize,
+    /// shutdown-path drains — `flushes_full + flushes_timeout +
+    /// flushes_drain == launches` reconciles every batch
+    pub flushes_drain: usize,
+    /// weight-spectrum cache counters (tentpole: steady-state hits)
+    pub spectra_hits: usize,
+    pub spectra_misses: usize,
+    pub spectra_invalidated: usize,
+    /// per-flush weight-FFT seconds (frequency-strategy launches only;
+    /// zero samples on spectrum hits — `sum`/`last` feed the report)
+    pub weight_fft: Histogram,
+    /// weights version the shard was serving at shutdown
+    pub weights_version: u64,
     /// completions delivered after their SLA deadline
     pub sla_miss: usize,
     /// failed backend launches (their requests complete anyway — a
@@ -199,6 +222,37 @@ impl EngineReport {
         self.shards.iter().map(|s| s.flushes_timeout).sum()
     }
 
+    pub fn flushes_drain(&self) -> usize {
+        self.shards.iter().map(|s| s.flushes_drain).sum()
+    }
+
+    pub fn spectra_hits(&self) -> usize {
+        self.shards.iter().map(|s| s.spectra_hits).sum()
+    }
+
+    pub fn spectra_misses(&self) -> usize {
+        self.shards.iter().map(|s| s.spectra_misses).sum()
+    }
+
+    pub fn spectra_invalidated(&self) -> usize {
+        self.shards.iter().map(|s| s.spectra_invalidated).sum()
+    }
+
+    /// Newest weights version any shard was serving (every shard
+    /// converges to it once the bump broadcast drains).
+    pub fn weights_version(&self) -> u64 {
+        self.shards.iter().map(|s| s.weights_version).max().unwrap_or(0)
+    }
+
+    /// All shards' per-flush weight-FFT samples merged.
+    pub fn weight_fft(&self) -> Histogram {
+        let mut h = Histogram::new();
+        for s in &self.shards {
+            h.merge(&s.weight_fft);
+        }
+        h
+    }
+
     pub fn sla_miss(&self) -> usize {
         self.shards.iter().map(|s| s.sla_miss).sum()
     }
@@ -239,6 +293,7 @@ pub struct EngineClient {
     depths: Vec<Arc<AtomicUsize>>,
     rejected: Arc<AtomicUsize>,
     rr: Arc<AtomicUsize>,
+    weights_version: Arc<AtomicU64>,
     cache: Arc<StrategyCache>,
     problem: ConvProblem,
     pass: Pass,
@@ -304,6 +359,34 @@ impl EngineClient {
         true
     }
 
+    /// Install a new weight tensor across every shard and invalidate the
+    /// cached weight spectra built from the old one. The bump is
+    /// zero-downtime: each worker applies it between flushes, so batches
+    /// flushed before the message arrives ride the old version and every
+    /// later flush serves (and re-transforms once, lazily) the new one.
+    /// Returns the new `weights_version`.
+    ///
+    /// Panics when `weights` does not match the served problem's weight
+    /// tensor (`fo·f·kh·kw` elements) — same caller-thread contract as
+    /// [`EngineClient::submit`].
+    pub fn update_weights(&self, weights: Vec<f32>) -> u64 {
+        assert_eq!(weights.len(), self.problem.weight_len(),
+                   "weight tensor shape mismatch");
+        let version =
+            self.weights_version.fetch_add(1, Ordering::Relaxed) + 1;
+        let shared = Arc::new(weights);
+        for tx in &self.txs {
+            tx.send(Msg::Weights { version, weights: shared.clone() })
+                .expect("serve shard worker gone");
+        }
+        version
+    }
+
+    /// The version the next flush-after-drain will serve (starts at 1).
+    pub fn weights_version(&self) -> u64 {
+        self.weights_version.load(Ordering::Relaxed)
+    }
+
     pub fn shards(&self) -> usize {
         self.txs.len()
     }
@@ -323,6 +406,8 @@ struct WorkerCtx {
     pass: Pass,
     batcher_cfg: BatcherConfig,
     cache: Arc<StrategyCache>,
+    spectra: SpectrumPrecision,
+    force: Option<Strategy>,
     depth: Arc<AtomicUsize>,
     rx: Receiver<Msg>,
     ready: Sender<std::result::Result<(), String>>,
@@ -357,6 +442,17 @@ impl ServeEngine {
         assert!(cfg.shards >= 1, "engine needs at least one shard");
         let mut cache = StrategyCache::open(cfg.tuner_path.as_deref());
         cache.reps = cfg.tuner_reps.max(1);
+        // host serving of the weight-carrying passes runs through the
+        // spectrum cache, so tune frequency candidates the same way —
+        // the measured Choice then reflects steady-state (cached-weight)
+        // flush cost, not the one-time weight FFT
+        cache.serve_spectra = if matches!(backend, Backend::Host)
+            && matches!(cfg.pass, Pass::Fprop | Pass::Bprop)
+        {
+            Some(cfg.spectra)
+        } else {
+            None
+        };
         let cache = Arc::new(cache);
         // warm-tune the shapes every steady flush produces (full batches
         // and singletons); restarts hit the persisted entries instead
@@ -383,6 +479,8 @@ impl ServeEngine {
                 pass: cfg.pass,
                 batcher_cfg: cfg.batcher,
                 cache: cache.clone(),
+                spectra: cfg.spectra,
+                force: cfg.force_strategy,
                 depth: depth.clone(),
                 rx,
                 ready: ready_tx.clone(),
@@ -418,6 +516,7 @@ impl ServeEngine {
             depths,
             rejected: Arc::new(AtomicUsize::new(0)),
             rr: Arc::new(AtomicUsize::new(0)),
+            weights_version: Arc::new(AtomicU64::new(1)),
             cache: cache.clone(),
             problem,
             pass: cfg.pass,
@@ -437,6 +536,12 @@ impl ServeEngine {
     /// [`EngineClient::submit`].
     pub fn submit(&self, req: ServeRequest) -> bool {
         self.client.submit(req)
+    }
+
+    /// Install new weights across the pool. See
+    /// [`EngineClient::update_weights`].
+    pub fn update_weights(&self, weights: Vec<f32>) -> u64 {
+        self.client.update_weights(weights)
     }
 
     pub fn cache(&self) -> &StrategyCache {
@@ -472,7 +577,8 @@ impl ServeEngine {
 
 fn worker_main(ctx: WorkerCtx) -> ShardReport {
     let WorkerCtx { shard, backend, problem, pass, batcher_cfg, cache,
-                    depth, rx, ready } = ctx;
+                    spectra: spectra_precision, force, depth, rx,
+                    ready } = ctx;
     // backend setup runs before the readiness handshake so compile
     // failures surface from ServeEngine::start
     let rt = match &backend {
@@ -513,8 +619,13 @@ fn worker_main(ctx: WorkerCtx) -> ShardReport {
     let mut rng = Rng::new(0xC0FFEE ^ shard as u64);
     let mut ws = Workspace::new();
     let mut stage = BufferPool::new();
-    // the layer's weights live on the shard (one buffered copy, §3.3)
-    let weights = rng.normal_vec(problem.weight_len());
+    // the layer's weights live on the shard (one buffered copy, §3.3),
+    // alongside the spectra transformed from them — keyed by the
+    // version so a bump invalidates exactly the stale entries
+    let mut weights = rng.normal_vec(problem.weight_len());
+    let mut weights_version: u64 = 1;
+    let mut spectra = SpectrumCache::new(spectra_precision);
+    report.weights_version = weights_version;
     let mut fill_sum = 0f64;
     let mut done = false;
     loop {
@@ -568,6 +679,19 @@ fn worker_main(ctx: WorkerCtx) -> ShardReport {
                     report.images += a.images;
                     report.depth.record(batcher.queued_images() as f64);
                 }
+                Msg::Weights { version, weights: w } => {
+                    // applied between flushes: already-flushed batches
+                    // rode the old version, everything later serves the
+                    // new one (bumps can arrive reordered only relative
+                    // to newer bumps — never regress)
+                    if version > weights_version {
+                        weights.clear();
+                        weights.extend_from_slice(&w);
+                        weights_version = version;
+                        spectra.bump(&problem, version);
+                        report.weights_version = version;
+                    }
+                }
                 Msg::Shutdown => done = true,
             }
         }
@@ -595,8 +719,13 @@ fn worker_main(ctx: WorkerCtx) -> ShardReport {
                             &mut rng)
             }
             None => {
-                launch_host(&cache, pass, &problem, imgs, &weights,
-                            &mut rng, &mut stage, &mut ws);
+                let wfft = launch_host(&cache, force, pass, &problem,
+                                       imgs, &weights, weights_version,
+                                       &mut spectra, &mut rng,
+                                       &mut stage, &mut ws);
+                if let Some(d) = wfft {
+                    report.weight_fft.record(d.as_secs_f64());
+                }
                 true
             }
         };
@@ -649,6 +778,10 @@ fn worker_main(ctx: WorkerCtx) -> ShardReport {
     }
     report.flushes_full = batcher.flushes_full;
     report.flushes_timeout = batcher.flushes_timeout;
+    report.flushes_drain = batcher.flushes_drain;
+    report.spectra_hits = spectra.hits;
+    report.spectra_misses = spectra.misses;
+    report.spectra_invalidated = spectra.invalidated;
     if report.launches > 0 {
         report.batch_fill = fill_sum / report.launches as f64;
     }
@@ -682,13 +815,22 @@ fn launch_pjrt(rt: &Runtime, artifact: &str, p: &ConvProblem,
 /// (allocation-free after warmup); the frequency engines also write
 /// their output through the pool, while the time-domain engines
 /// allocate their result by API design (no redundant pooled copy is
-/// layered on top).
+/// layered on top). Returns the weight-FFT time the launch actually
+/// spent when the flush served a frequency strategy from the spectrum
+/// cache (`Some(ZERO)` on a hit — the steady state), `None` otherwise.
 #[allow(clippy::too_many_arguments)]
-fn launch_host(cache: &StrategyCache, pass: Pass, p: &ConvProblem,
-               imgs: usize, weights: &[f32], rng: &mut Rng,
-               stage: &mut BufferPool, ws: &mut Workspace) {
+fn launch_host(cache: &StrategyCache, force: Option<Strategy>, pass: Pass,
+               p: &ConvProblem, imgs: usize, weights: &[f32],
+               version: u64, spectra: &mut SpectrumCache, rng: &mut Rng,
+               stage: &mut BufferPool, ws: &mut Workspace)
+               -> Option<Duration> {
     let q = ConvProblem { s: imgs, ..*p };
-    let choice = cache.ensure(&q, pass);
+    let choice = match force {
+        // deterministic probe: serve the forced strategy at its default
+        // basis without consulting (or populating) the tuner
+        Some(strategy) => Choice { strategy, n_fft: None, seconds: 0.0 },
+        None => cache.ensure(&q, pass),
+    };
     // the "payload": a fresh synthetic operand per flush
     let a_len = match pass {
         Pass::Fprop => q.input_len(),
@@ -698,26 +840,36 @@ fn launch_host(cache: &StrategyCache, pass: Pass, p: &ConvProblem,
     for v in a.iter_mut() {
         *v = rng.normal();
     }
-    match pass {
+    let wfft = match pass {
         Pass::AccGrad => {
             // accGrad pairs the gradient with an activation, not weights
             let mut b = stage.take_raw("serve.b", q.input_len());
             for v in b.iter_mut() {
                 *v = rng.normal();
             }
-            run_strategy(&choice, &q, pass, &a, &b, stage, ws);
+            run_strategy(&choice, &q, pass, &a, &b, None, stage, ws);
             stage.put("serve.b", b);
+            None
         }
-        _ => run_strategy(&choice, &q, pass, &a, weights, stage, ws),
-    }
+        _ => run_strategy(&choice, &q, pass, &a, weights,
+                          Some((spectra, version)), stage, ws),
+    };
     stage.put("serve.a", a);
+    wfft
 }
 
 /// Dispatch one pass through the tuned strategy. `a`/`b` follow each
 /// engine's own operand order: (x, weights) for fprop, (grad_output,
-/// weights) for bprop, (grad_output, x) for accGrad.
+/// weights) for bprop, (grad_output, x) for accGrad. When `b` is the
+/// weight tensor the caller passes the shard's spectrum cache and the
+/// live `weights_version`; frequency strategies then serve from the
+/// cached spectrum — skipping the weight pad+FFT on a hit — and the
+/// return value is the weight-FFT time actually spent.
+#[allow(clippy::too_many_arguments)]
 fn run_strategy(choice: &Choice, q: &ConvProblem, pass: Pass, a: &[f32],
-                b: &[f32], stage: &mut BufferPool, ws: &mut Workspace) {
+                b: &[f32], spectra: Option<(&mut SpectrumCache, u64)>,
+                stage: &mut BufferPool, ws: &mut Workspace)
+                -> Option<Duration> {
     match choice.strategy {
         Strategy::VendorFft | Strategy::Fbfft | Strategy::FbfftScalar => {
             let out_len = match pass {
@@ -735,18 +887,34 @@ fn run_strategy(choice: &Choice, q: &ConvProblem, pass: Pass, a: &[f32],
                 .n_fft
                 .unwrap_or_else(|| q.h.max(q.w).next_power_of_two());
             let eng = FftConvEngine::new(mode, n);
-            match pass {
-                Pass::Fprop => {
+            let wfft = match (pass, spectra) {
+                (Pass::Fprop, Some((spectra, version))) => {
+                    let (spec, took) =
+                        spectra.ensure(&eng, q, b, version, ws);
+                    eng.fprop_spec_into(q, a, spec, &mut out, ws);
+                    Some(took)
+                }
+                (Pass::Bprop, Some((spectra, version))) => {
+                    let (spec, took) =
+                        spectra.ensure(&eng, q, b, version, ws);
+                    eng.bprop_spec_into(q, a, spec, &mut out, ws);
+                    Some(took)
+                }
+                (Pass::Fprop, None) => {
                     eng.fprop_into(q, a, b, &mut out, ws);
+                    None
                 }
-                Pass::Bprop => {
+                (Pass::Bprop, None) => {
                     eng.bprop_into(q, a, b, &mut out, ws);
+                    None
                 }
-                Pass::AccGrad => {
+                (Pass::AccGrad, _) => {
                     eng.accgrad_into(q, a, b, &mut out, ws);
+                    None
                 }
-            }
+            };
             stage.put("serve.out", out);
+            wfft
         }
         // the vendor black box has no host twin; direct is its analogue
         Strategy::Direct | Strategy::Vendor => {
@@ -755,6 +923,7 @@ fn run_strategy(choice: &Choice, q: &ConvProblem, pass: Pass, a: &[f32],
                 Pass::Bprop => direct::bprop(q, a, b),
                 Pass::AccGrad => direct::accgrad(q, a, b),
             };
+            None
         }
         Strategy::Im2col => {
             let _ = match pass {
@@ -762,6 +931,7 @@ fn run_strategy(choice: &Choice, q: &ConvProblem, pass: Pass, a: &[f32],
                 Pass::Bprop => im2col::bprop(q, a, b),
                 Pass::AccGrad => im2col::accgrad(q, a, b),
             };
+            None
         }
         Strategy::FbfftTiled(d) => {
             let _ = match pass {
@@ -769,6 +939,7 @@ fn run_strategy(choice: &Choice, q: &ConvProblem, pass: Pass, a: &[f32],
                 Pass::Bprop => tiled::bprop(q, a, b, d),
                 Pass::AccGrad => tiled::accgrad(q, a, b, d),
             };
+            None
         }
     }
 }

@@ -60,6 +60,9 @@ impl BenchResult {
 pub struct Histogram {
     samples: Vec<f64>,
     sorted: bool,
+    /// most recently recorded sample (percentile queries sort the
+    /// sample buffer in place, so recency is tracked separately)
+    last: f64,
 }
 
 impl Histogram {
@@ -69,6 +72,7 @@ impl Histogram {
 
     pub fn record(&mut self, seconds: f64) {
         self.samples.push(seconds);
+        self.last = seconds;
         self.sorted = false;
     }
 
@@ -109,10 +113,27 @@ impl Histogram {
         *self.samples.last().expect("empty histogram")
     }
 
+    /// Sum of every recorded sample (0.0 when empty) — turns a
+    /// per-event histogram into a total, e.g. total weight-FFT seconds
+    /// over a serve run.
+    pub fn sum(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+
+    /// The most recently recorded sample (0.0 when empty). Unaffected
+    /// by the in-place percentile sort; `merge` adopts the other
+    /// histogram's recency when it has samples.
+    pub fn last(&self) -> f64 {
+        self.last
+    }
+
     /// Fold another histogram's samples into this one (per-shard →
     /// aggregate reduction in the serving report).
     pub fn merge(&mut self, other: &Histogram) {
         self.samples.extend_from_slice(&other.samples);
+        if !other.samples.is_empty() {
+            self.last = other.last;
+        }
         self.sorted = false;
     }
 
@@ -298,6 +319,29 @@ mod tests {
         assert!((s.mean - 50.5).abs() < 1e-9);
         // empty histograms summarize to zero, not panic
         assert_eq!(Histogram::new().summary(), Summary::default());
+    }
+
+    #[test]
+    fn histogram_sum_and_last_survive_sorting() {
+        let mut h = Histogram::new();
+        assert_eq!(h.sum(), 0.0);
+        assert_eq!(h.last(), 0.0);
+        h.record(3.0);
+        h.record(1.0);
+        h.record(2.0);
+        assert_eq!(h.sum(), 6.0);
+        assert_eq!(h.last(), 2.0);
+        // a percentile query sorts the buffer; recency must survive
+        assert_eq!(h.percentile(100.0), 3.0);
+        assert_eq!(h.last(), 2.0);
+        // merge adopts the merged-in histogram's recency
+        let mut other = Histogram::new();
+        other.record(9.0);
+        h.merge(&other);
+        assert_eq!(h.last(), 9.0);
+        assert_eq!(h.sum(), 15.0);
+        h.merge(&Histogram::new());
+        assert_eq!(h.last(), 9.0, "empty merge keeps recency");
     }
 
     #[test]

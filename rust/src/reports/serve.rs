@@ -3,19 +3,26 @@
 //! that same document — the JSON is built first and the table reads
 //! only it, so the two can never disagree (the `breakdown` pattern).
 //!
-//! Schema (version 1):
+//! Schema (version 2 — v1 plus the weight-spectrum cache fields):
 //!
 //! ```text
-//! { "version": 1, "bench": "serve", "mode": "closed"|"open",
+//! { "version": 2, "bench": "serve", "mode": "closed"|"open",
 //!   "smoke": bool, "shards": N, "capacity": C, "pass": "fprop",
 //!   "requests": n, "images": n, "launches": n,
 //!   "rejected_deadline": n, "sla_miss": n, "launch_errors": n,
 //!   "wall_s": s, "throughput_img_s": r, "batch_fill": f,
 //!   "busy_frac": f,
+//!   "weights_version": v,
+//!   "spectra_hits": n, "spectra_misses": n, "spectra_invalidated": n,
+//!   "weight_fft_ns": n,       // total weight-FFT time over the run
+//!   "weight_fft_last_ns": n,  // most recent flush's weight-FFT time
+//!                             // (0 on a spectrum hit — the CI gate)
 //!   "cache": {"entries": n, "hits": n, "misses": n, "tunes": n},
 //!   "aggregate": {"count","mean_ms","p50_ms","p95_ms","p99_ms","max_ms"},
 //!   "per_shard": [ {"shard","requests","images","launches",
-//!                   "flushes_full","flushes_timeout","batch_fill",
+//!                   "flushes_full","flushes_timeout","flushes_drain",
+//!                   "spectra_hits","spectra_misses",
+//!                   "spectra_invalidated","weight_fft_ns","batch_fill",
 //!                   "queue_depth_p50","queue_depth_max",
 //!                   "mean_ms","p50_ms","p95_ms","p99_ms","max_ms"} ] }
 //! ```
@@ -60,13 +67,24 @@ pub fn serve_json(r: &EngineReport, mode: &str, smoke: bool,
                    Json::num(s.flushes_full as f64));
         row.insert("flushes_timeout".into(),
                    Json::num(s.flushes_timeout as f64));
+        row.insert("flushes_drain".into(),
+                   Json::num(s.flushes_drain as f64));
+        row.insert("spectra_hits".into(),
+                   Json::num(s.spectra_hits as f64));
+        row.insert("spectra_misses".into(),
+                   Json::num(s.spectra_misses as f64));
+        row.insert("spectra_invalidated".into(),
+                   Json::num(s.spectra_invalidated as f64));
+        row.insert("weight_fft_ns".into(),
+                   Json::num(s.weight_fft.sum() * 1e9));
         row.insert("batch_fill".into(), Json::num(s.batch_fill));
         row.insert("queue_depth_p50".into(), Json::num(d.p50));
         row.insert("queue_depth_max".into(), Json::num(d.max));
         per_shard.push(Json::Obj(row));
     }
+    let weight_fft = r.weight_fft();
     Json::obj(vec![
-        ("version", Json::num(1.0)),
+        ("version", Json::num(2.0)),
         ("bench", Json::str("serve")),
         ("mode", Json::str(mode)),
         ("smoke", Json::Bool(smoke)),
@@ -94,6 +112,13 @@ pub fn serve_json(r: &EngineReport, mode: &str, smoke: bool,
          } else {
              0.0
          })),
+        ("weights_version", Json::num(r.weights_version() as f64)),
+        ("spectra_hits", Json::num(r.spectra_hits() as f64)),
+        ("spectra_misses", Json::num(r.spectra_misses() as f64)),
+        ("spectra_invalidated",
+         Json::num(r.spectra_invalidated() as f64)),
+        ("weight_fft_ns", Json::num(weight_fft.sum() * 1e9)),
+        ("weight_fft_last_ns", Json::num(weight_fft.last() * 1e9)),
         ("cache", Json::obj(vec![
             ("entries", Json::num(r.cache.entries as f64)),
             ("hits", Json::num(r.cache.hits as f64)),
@@ -152,7 +177,9 @@ pub fn serve_table(j: &Json) -> String {
         "serve: {} mode, {} shards x capacity {} ({} pass)\n{}\
          throughput {:.0} img/s over {:.2}s wall, busy {:.0}%  \
          rejected {}  sla_miss {}\n\
-         strategy cache: {} entries, {} hits / {} misses, {} tunes\n",
+         strategy cache: {} entries, {} hits / {} misses, {} tunes\n\
+         weight spectra: v{}, {} hits / {} misses, {} invalidated, \
+         weight-FFT {:.2} ms total ({:.0} ns last flush)\n",
         j.get("mode").and_then(Json::as_str).unwrap_or("?"),
         n(j, "shards"), n(j, "capacity"),
         j.get("pass").and_then(Json::as_str).unwrap_or("?"),
@@ -160,7 +187,10 @@ pub fn serve_table(j: &Json) -> String {
         g(j, "throughput_img_s"), g(j, "wall_s"),
         g(j, "busy_frac") * 100.0,
         n(j, "rejected_deadline"), n(j, "sla_miss"),
-        cn("entries"), cn("hits"), cn("misses"), cn("tunes"))
+        cn("entries"), cn("hits"), cn("misses"), cn("tunes"),
+        n(j, "weights_version"), n(j, "spectra_hits"),
+        n(j, "spectra_misses"), n(j, "spectra_invalidated"),
+        g(j, "weight_fft_ns") / 1e6, g(j, "weight_fft_last_ns"))
 }
 
 #[cfg(test)]
@@ -179,7 +209,17 @@ mod tests {
             s.launches = 5;
             s.batch_fill = 0.75;
             s.flushes_full = 3;
-            s.flushes_timeout = 2;
+            s.flushes_timeout = 1;
+            s.flushes_drain = 1;
+            s.spectra_hits = 4;
+            s.spectra_misses = 1;
+            s.spectra_invalidated = i; // shard 1 saw one version bump
+            s.weights_version = (i + 1) as u64;
+            // one miss paid the weight FFT, then four hits were free
+            s.weight_fft.record(2e-3);
+            for _ in 0..4 {
+                s.weight_fft.record(0.0);
+            }
             for k in 1..=10 {
                 s.latency.record(k as f64 * 1e-3 * (i + 1) as f64);
                 s.depth.record(k as f64);
@@ -201,11 +241,24 @@ mod tests {
         let r = sample_report();
         let j = serve_json(&r, "closed", true,
                            Duration::from_millis(500));
-        assert_eq!(j.get("version").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("version").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("requests").unwrap().as_usize(), Some(30));
         assert_eq!(j.get("images").unwrap().as_usize(), Some(60));
         assert_eq!(j.get("rejected_deadline").unwrap().as_usize(),
                    Some(1));
+        // the spectrum-cache gate keys: totals over both shards, the
+        // newest served weights version, and the per-flush probe value
+        assert_eq!(j.get("spectra_hits").unwrap().as_usize(), Some(8));
+        assert_eq!(j.get("spectra_misses").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("spectra_invalidated").unwrap().as_usize(),
+                   Some(1));
+        assert_eq!(j.get("weights_version").unwrap().as_usize(),
+                   Some(2));
+        // two 2ms misses in total; the last recorded flush was a hit
+        assert!((j.get("weight_fft_ns").unwrap().as_f64().unwrap()
+                 - 4e6).abs() < 1.0);
+        assert_eq!(j.get("weight_fft_last_ns").unwrap().as_f64(),
+                   Some(0.0));
         let agg = j.get("aggregate").expect("aggregate block");
         for k in ["p50_ms", "p95_ms", "p99_ms", "max_ms", "mean_ms"] {
             assert!(agg.get(k).and_then(Json::as_f64).is_some(),
@@ -218,7 +271,9 @@ mod tests {
         assert_eq!(per.len(), 2);
         for s in per {
             for k in ["p50_ms", "p99_ms", "batch_fill",
-                      "queue_depth_max"] {
+                      "queue_depth_max", "flushes_drain",
+                      "spectra_hits", "spectra_misses",
+                      "spectra_invalidated", "weight_fft_ns"] {
                 assert!(s.get(k).and_then(Json::as_f64).is_some(),
                         "missing per-shard {k}");
             }
@@ -239,5 +294,7 @@ mod tests {
         assert!(table.lines().count() >= 6, "{table}");
         assert!(table.contains("all"));
         assert!(table.contains("strategy cache: 3 entries"));
+        assert!(table.contains("weight spectra: v2, 8 hits / 2 misses"),
+                "{table}");
     }
 }

@@ -48,6 +48,20 @@ pub fn frequency(p: &ConvProblem, pass: Pass, n_fft: usize) -> f32 {
     (32.0 * EPS32 * d * stages * n.sqrt()).max(2e-5)
 }
 
+/// Absolute tolerance for a frequency-domain engine whose **weight
+/// spectrum is stored as f16** (the serving tier's cached slabs).
+/// Quantizing the weight spectrum adds relative noise `EPS16` per
+/// spectral value; propagated through the CGEMM reduction and the
+/// (energy-preserving, `1/n²`-scaled) inverse transform it lands on the
+/// output as ~`EPS16·√d` absolute — added on top of the f32 pipeline's
+/// own budget, with the usual order-of-magnitude headroom (the gate
+/// catches wrong-layout errors of *output magnitude*, thousands of
+/// times larger).
+pub fn frequency_f16(p: &ConvProblem, pass: Pass, n_fft: usize) -> f32 {
+    let d = reduction_depth(p, pass).max(n_fft * n_fft) as f32;
+    frequency(p, pass, n_fft) + 16.0 * crate::util::f16::EPS16 * d.sqrt()
+}
+
 /// Absolute tolerance for the tiled engine with output-tile size `d_tile`
 /// (per-tile frequency error, accumulated over the resident tiles).
 pub fn tiled(p: &ConvProblem, pass: Pass, d_tile: usize) -> f32 {
@@ -135,5 +149,10 @@ mod tests {
         let mag = (reduction_depth(&p, Pass::Fprop) as f32).sqrt();
         assert!(frequency(&p, Pass::Fprop, 32) < 0.01 * mag);
         assert!(time_domain(&p, Pass::Fprop) < 0.001 * mag);
+        // the f16-slab budget is wider than f32's but still a small
+        // fraction of the signal — the gate keeps its teeth
+        let f16_tol = frequency_f16(&p, Pass::Fprop, 32);
+        assert!(f16_tol > frequency(&p, Pass::Fprop, 32));
+        assert!(f16_tol < 0.05 * mag, "{f16_tol} vs magnitude {mag}");
     }
 }

@@ -1,0 +1,182 @@
+//! Software IEEE 754 binary16 ("half") conversion — no `half` crate in
+//! this image, and the spectrum cache only needs storage conversion, not
+//! arithmetic: slabs are encoded once per weight version and decoded
+//! lane-wise inside the CGEMM packing path.
+//!
+//! Encoding is round-to-nearest-even (the hardware default), with
+//! correct subnormal, infinity and NaN handling; decoding uses the
+//! shift-and-rescale trick (one multiply renormalizes subnormals), so
+//! the hot path is branch-free except for the inf/NaN fixup.
+
+/// Relative precision of a binary16 normal: one half-ULP, `2^-11`.
+pub const EPS16: f32 = 4.8828125e-4;
+
+/// Convert one f32 to IEEE binary16 bits with round-to-nearest-even.
+/// Overflow saturates to ±inf; NaN payloads keep their top mantissa
+/// bits (quieted so the result is never mistaken for inf).
+#[inline]
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+    if exp == 0xFF {
+        // inf stays inf; NaN keeps payload with the quiet bit forced
+        return if man == 0 {
+            sign | 0x7C00
+        } else {
+            sign | 0x7C00 | 0x0200 | ((man >> 13) as u16 & 0x03FF)
+        };
+    }
+    let e = exp - 127 + 15; // rebias toward the 5-bit exponent
+    if e >= 0x1F {
+        return sign | 0x7C00; // overflow → ±inf
+    }
+    if e <= 0 {
+        // subnormal target: value = m16 · 2^-24 with m16 = RNE(m24 >> s)
+        if e < -10 {
+            return sign; // below half the smallest subnormal → ±0
+        }
+        let m24 = man | 0x0080_0000; // restore the implicit bit
+        let s = (14 - e) as u32; // s ∈ [14, 24]
+        let kept = m24 >> s;
+        let rem = m24 & ((1u32 << s) - 1);
+        let half = 1u32 << (s - 1);
+        let round_up = rem > half || (rem == half && (kept & 1) == 1);
+        // a carry out of the 10-bit mantissa lands on exponent 1 — the
+        // adjacent normal — which is exactly the right answer
+        return sign | (kept + round_up as u32) as u16;
+    }
+    // normal target: 13 mantissa bits shift out
+    let kept = man >> 13;
+    let rem = man & 0x1FFF;
+    let round_up = rem > 0x1000 || (rem == 0x1000 && (kept & 1) == 1);
+    // mantissa carry ripples into the exponent (and to inf on overflow)
+    sign | (((e as u32) << 10 | kept) + round_up as u32) as u16
+}
+
+/// Convert IEEE binary16 bits back to f32 (exact — every half value is
+/// representable in f32).
+#[inline(always)]
+pub fn f16_to_f32(h: u16) -> f32 {
+    const SHIFTED_EXP: u32 = 0x7C00 << 13;
+    // the f16 subnormal scale as an f32: 2^-14 with a zero mantissa
+    const MAGIC: u32 = 113 << 23;
+    let sign = ((h & 0x8000) as u32) << 16;
+    let mut bits = ((h & 0x7FFF) as u32) << 13; // exp+man in f32 position
+    let exp = bits & SHIFTED_EXP;
+    bits += (127 - 15) << 23; // rebias
+    if exp == SHIFTED_EXP {
+        bits += (128 - 16) << 23; // inf/NaN: push exponent to 0xFF
+    } else if exp == 0 {
+        // zero/subnormal: renormalize through one f32 subtract
+        bits += 1 << 23;
+        bits = (f32::from_bits(bits) - f32::from_bits(MAGIC)).to_bits();
+    }
+    f32::from_bits(bits | sign)
+}
+
+/// Encode a slab of f32 lanes into f16 bits (spectrum-cache storage).
+pub fn encode_slab(src: &[f32]) -> Vec<u16> {
+    src.iter().map(|&x| f32_to_f16(x)).collect()
+}
+
+/// Decode a slab of f16 bits back into f32 lanes (test/debug path — the
+/// CGEMM packers decode lane-wise without materializing this).
+pub fn decode_slab(src: &[u16]) -> Vec<f32> {
+    src.iter().map(|&h| f16_to_f32(h)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_cases_round_trip() {
+        for &(x, h) in &[
+            (0.0f32, 0x0000u16),
+            (-0.0, 0x8000),
+            (1.0, 0x3C00),
+            (-2.0, 0xC000),
+            (0.5, 0x3800),
+            (65504.0, 0x7BFF),             // largest finite half
+            (6.103_515_6e-5, 0x0400),      // smallest normal half
+            (5.960_464_5e-8, 0x0001),      // smallest subnormal half
+            (f32::INFINITY, 0x7C00),
+            (f32::NEG_INFINITY, 0xFC00),
+        ] {
+            assert_eq!(f32_to_f16(x), h, "encode {x}");
+            assert_eq!(f16_to_f32(h).to_bits(), x.to_bits(), "decode {h:#06x}");
+        }
+    }
+
+    #[test]
+    fn round_to_nearest_even_at_ties() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and the next half;
+        // RNE keeps the even mantissa (1.0). One ULP above rounds up.
+        let half_ulp = f32::from_bits(0x3F80_1000);
+        assert_eq!(f32_to_f16(half_ulp), 0x3C00);
+        let above = f32::from_bits(0x3F80_1001);
+        assert_eq!(f32_to_f16(above), 0x3C01);
+        // 1 + 3·2^-11 is halfway between mantissas 1 and 2 → even (2)
+        let tie_up = f32::from_bits(0x3F80_3000);
+        assert_eq!(f32_to_f16(tie_up), 0x3C02);
+    }
+
+    #[test]
+    fn saturation_and_underflow() {
+        assert_eq!(f32_to_f16(65520.0), 0x7C00, "overflow → inf");
+        assert_eq!(f32_to_f16(-1e9), 0xFC00);
+        assert_eq!(f32_to_f16(1e-9), 0x0000, "deep underflow → 0");
+        // exactly half the smallest subnormal ties to even zero
+        assert_eq!(f32_to_f16(2.980_232_2e-8), 0x0000);
+        // just above it rounds to the smallest subnormal
+        assert_eq!(f32_to_f16(3.0e-8), 0x0001);
+    }
+
+    #[test]
+    fn nan_stays_nan() {
+        let h = f32_to_f16(f32::NAN);
+        assert_eq!(h & 0x7C00, 0x7C00);
+        assert_ne!(h & 0x03FF, 0, "NaN mantissa must stay nonzero");
+        assert!(f16_to_f32(h).is_nan());
+    }
+
+    #[test]
+    fn all_half_values_round_trip_bitwise() {
+        // decode→encode is the identity for every non-NaN half pattern —
+        // the strongest statement that both directions are faithful
+        for h in 0..=u16::MAX {
+            let exp = h & 0x7C00;
+            let man = h & 0x03FF;
+            if exp == 0x7C00 && man != 0 {
+                continue; // NaN payloads are canonicalized, not preserved
+            }
+            let x = f16_to_f32(h);
+            assert_eq!(f32_to_f16(x), h, "h={h:#06x} x={x}");
+        }
+    }
+
+    #[test]
+    fn relative_error_stays_inside_eps16() {
+        let mut rng = crate::util::Rng::new(0xF16);
+        for _ in 0..10_000 {
+            let x = rng.normal() * 8.0;
+            let y = f16_to_f32(f32_to_f16(x));
+            let err = (y - x).abs();
+            let bound = EPS16 * x.abs().max(6.2e-5);
+            assert!(err <= bound, "x={x} y={y} err={err} bound={bound}");
+        }
+    }
+
+    #[test]
+    fn slab_helpers_match_scalar_path() {
+        let src = [0.0f32, 1.5, -3.25, 1e-6, 7.0e4, -0.125];
+        let enc = encode_slab(&src);
+        let dec = decode_slab(&enc);
+        for (i, &x) in src.iter().enumerate() {
+            assert_eq!(enc[i], f32_to_f16(x));
+            assert_eq!(dec[i].to_bits(), f16_to_f32(enc[i]).to_bits());
+        }
+    }
+}

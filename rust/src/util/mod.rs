@@ -2,6 +2,7 @@
 //! usual crates — serde_json, rand, rayon, criterion, proptest — are
 //! replaced by small, tested, purpose-built implementations).
 
+pub mod f16;
 pub mod hash;
 pub mod json;
 pub mod rng;

@@ -12,9 +12,9 @@ use fbfft_repro::conv::ConvProblem;
 use fbfft_repro::coordinator::batcher::{Batcher, BatcherConfig};
 use fbfft_repro::coordinator::service::{Completion, EngineConfig,
                                         ServeEngine, ServeRequest};
-use fbfft_repro::coordinator::{Pass, StrategyCache};
+use fbfft_repro::coordinator::{Pass, Strategy, StrategyCache};
 use fbfft_repro::reports::serve_json;
-use fbfft_repro::util::Json;
+use fbfft_repro::util::{Json, Rng};
 
 fn cfg(cap: usize, wait_ms: u64) -> BatcherConfig {
     BatcherConfig { capacity: cap,
@@ -263,6 +263,12 @@ fn soak_four_shards_exactly_once_and_reported() {
                 "least-loaded routing spreads over shard {}", s.shard);
         assert!(s.launches > 0);
         assert!(s.batch_fill > 0.0 && s.batch_fill <= 1.0);
+        // every launch reconciles to exactly one flush reason — the
+        // `flushes_drain` counter closes the shutdown-path gap
+        assert_eq!(s.launches,
+                   s.flushes_full + s.flushes_timeout + s.flushes_drain,
+                   "shard {}: launches must equal full+timeout+drain",
+                   s.shard);
     }
 
     // the reports::serve document carries the acceptance keys
@@ -278,13 +284,81 @@ fn soak_four_shards_exactly_once_and_reported() {
     assert_eq!(shards.len(), SHARDS);
     for s in shards {
         for k in ["p50_ms", "p95_ms", "p99_ms", "batch_fill",
-                  "queue_depth_max"] {
+                  "queue_depth_max", "flushes_drain", "spectra_hits",
+                  "spectra_misses", "spectra_invalidated",
+                  "weight_fft_ns"] {
             assert!(s.get(k).and_then(Json::as_f64).is_some(),
                     "per-shard key {k} missing");
         }
     }
     assert_eq!(j.get("rejected_deadline").and_then(Json::as_usize),
                Some(0));
+    // schema v2: top-level spectrum-cache accounting
+    assert_eq!(j.get("version").and_then(Json::as_f64), Some(2.0));
+    assert_eq!(j.get("weights_version").and_then(Json::as_usize),
+               Some(1), "no bump issued during the soak");
+    for k in ["spectra_hits", "spectra_misses", "spectra_invalidated",
+              "weight_fft_ns", "weight_fft_last_ns"] {
+        assert!(j.get(k).and_then(Json::as_f64).is_some(),
+                "top-level key {k} missing");
+    }
+}
+
+/// Tentpole acceptance at the serving layer: two back-to-back
+/// full-capacity flushes forced onto the fbfft path — the first pays
+/// the weight FFT (spectrum miss), the second must spend zero
+/// weight-FFT time, and a mid-traffic `update_weights` bump
+/// invalidates exactly that problem's spectra with traffic continuing
+/// uninterrupted.
+#[test]
+fn weight_bump_invalidates_spectra_without_downtime() {
+    const CAP: usize = 8;
+    let p = ConvProblem::square(CAP, 2, 2, 8, 3);
+    let engine = ServeEngine::start_host(
+        p,
+        EngineConfig {
+            shards: 1,
+            batcher: cfg(CAP, 1),
+            default_deadline: Duration::from_secs(60),
+            warm: false,
+            force_strategy: Some(Strategy::Fbfft),
+            ..Default::default()
+        })
+        .unwrap();
+    assert_eq!(engine.client().weights_version(), 1);
+    let (tx, rx) = mpsc::channel::<Completion>();
+    let serve_one = |id: u64| {
+        // full-capacity requests flush immediately and alone; the
+        // blocking recv serializes the flushes
+        assert!(engine.submit(ServeRequest {
+            id,
+            images: CAP,
+            deadline: None,
+            reply: tx.clone(),
+        }));
+        let c = rx.recv_timeout(Duration::from_secs(30))
+            .expect("flush completes");
+        assert_eq!(c.id, id);
+    };
+    serve_one(0); // miss: builds the v1 spectrum
+    serve_one(1); // hit: steady state
+    let new_weights = Rng::new(0xB0B).normal_vec(p.weight_len());
+    assert_eq!(engine.update_weights(new_weights), 2,
+               "bump returns the freshly installed version");
+    serve_one(2); // miss: v1 spectrum invalidated, v2 built
+    serve_one(3); // hit again at v2
+    let report = engine.shutdown();
+    assert_eq!(report.requests(), 4);
+    assert_eq!(report.launches(), 4);
+    assert_eq!(report.launch_errors(), 0, "zero downtime across the bump");
+    assert_eq!(report.weights_version(), 2);
+    assert_eq!(report.spectra_misses(), 2, "one weight FFT per version");
+    assert_eq!(report.spectra_hits(), 2);
+    assert_eq!(report.spectra_invalidated(), 1,
+               "the bump dropped exactly the stale v1 spectrum");
+    // both steady-state flushes skipped the weight FFT entirely
+    assert_eq!(report.weight_fft().last(), 0.0,
+               "final flush must hit the spectrum cache");
 }
 
 /// An idle engine parks on its channel (no deadline spin) and still

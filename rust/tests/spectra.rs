@@ -1,0 +1,145 @@
+//! Weight-spectrum cache tier: versioned invalidation must be
+//! equivalent to rebuilding the spectrum from scratch, and the f16
+//! planar slabs must conform to the testkit's `frequency_f16` budget
+//! across the Table-2 matrix — not just on a hand-picked shape.
+
+use std::time::Duration;
+
+use fbfft_repro::conv::{ConvProblem, FftConvEngine, SpectrumCache,
+                        SpectrumPrecision, Workspace};
+use fbfft_repro::coordinator::Pass;
+use fbfft_repro::testkit::{assert_close_oracle, cases, oracle,
+                           tolerance};
+use fbfft_repro::util::Rng;
+
+/// ISSUE 6 tentpole acceptance: bumping the version and re-ensuring
+/// produces exactly the output an uncached engine computes with the new
+/// weights — bitwise, since f32 slabs replay the identical CGEMM.
+#[test]
+fn bumped_cache_matches_an_uncached_engine_bitwise() {
+    let p = ConvProblem::square(4, 3, 2, 10, 3);
+    let eng = FftConvEngine::fbfft_for(&p);
+    let mut rng = Rng::new(0xBEEF);
+    let x = rng.normal_vec(p.input_len());
+    let w1 = rng.normal_vec(p.weight_len());
+    let w2 = rng.normal_vec(p.weight_len());
+    let mut ws = Workspace::new();
+    let mut cache = SpectrumCache::new(SpectrumPrecision::F32);
+    let mut y = vec![0f32; p.output_len()];
+
+    // v1 populates; the hit replays it without touching the weights
+    {
+        let (spec, took) = cache.ensure(&eng, &p, &w1, 1, &mut ws);
+        assert!(took > Duration::ZERO);
+        eng.fprop_spec_into(&p, &x, spec, &mut y, &mut ws);
+    }
+    {
+        let (spec, took) = cache.ensure(&eng, &p, &w1, 1, &mut ws);
+        assert_eq!(took, Duration::ZERO, "same version must hit");
+        eng.fprop_spec_into(&p, &x, spec, &mut y, &mut ws);
+    }
+
+    // the bump drops exactly the stale entry, and the rebuilt spectrum
+    // serves the new weights as if the cache had never existed
+    assert_eq!(cache.bump(&p, 2), 1, "one stale entry dropped");
+    let mut y2 = vec![0f32; p.output_len()];
+    {
+        let (spec, took) = cache.ensure(&eng, &p, &w2, 2, &mut ws);
+        assert!(took > Duration::ZERO, "post-bump ensure is a miss");
+        eng.fprop_spec_into(&p, &x, spec, &mut y2, &mut ws);
+    }
+    let mut fresh = vec![0f32; p.output_len()];
+    eng.fprop_into(&p, &x, &w2, &mut fresh, &mut Workspace::new());
+    assert_eq!(y2, fresh, "f32 spec path must be bitwise the fresh pass");
+
+    let stats = cache.stats();
+    assert_eq!(stats.hits, 1);
+    assert_eq!(stats.misses, 2);
+    assert_eq!(stats.invalidated, 1);
+}
+
+/// A bump must not evict spectra of *other* weight shapes: only the
+/// bumped problem's (f, f', kh, kw) entries older than the new version
+/// go.
+#[test]
+fn bump_spares_other_weight_shapes() {
+    let p = ConvProblem::square(2, 2, 2, 8, 3);
+    let q = ConvProblem::square(2, 4, 4, 8, 3); // different weight shape
+    let ep = FftConvEngine::fbfft_for(&p);
+    let eq = FftConvEngine::fbfft_for(&q);
+    let mut rng = Rng::new(0xD1FF);
+    let wp = rng.normal_vec(p.weight_len());
+    let wq = rng.normal_vec(q.weight_len());
+    let mut ws = Workspace::new();
+    let mut cache = SpectrumCache::new(SpectrumPrecision::F16);
+    cache.ensure(&ep, &p, &wp, 1, &mut ws);
+    cache.ensure(&eq, &q, &wq, 1, &mut ws);
+    assert_eq!(cache.len(), 2);
+    assert_eq!(cache.bump(&p, 2), 1, "only p's entry is stale");
+    assert_eq!(cache.len(), 1, "q's spectrum survives the bump");
+    let (_, took) = cache.ensure(&eq, &q, &wq, 1, &mut ws);
+    assert_eq!(took, Duration::ZERO, "q still hits after p's bump");
+}
+
+/// Satellite 4 acceptance: f16 planar slabs stay inside the
+/// `frequency_f16` tolerance model for every conformance-suite shape
+/// (the adversarial set plus sampled Table-2 points), fprop and bprop —
+/// the two passes that consume cached spectra.
+#[test]
+fn f16_slabs_conform_across_the_conformance_matrix() {
+    for case in cases::conformance_suite() {
+        let p = &case.problem;
+        let eng = FftConvEngine::fbfft_for(p);
+        let mut rng = Rng::new(case.seed);
+        let x = rng.normal_vec(p.input_len());
+        let wei = rng.normal_vec(p.weight_len());
+        let go = rng.normal_vec(p.output_len());
+        let mut ws = Workspace::new();
+        let mut cache = SpectrumCache::new(SpectrumPrecision::F16);
+
+        let mut y = vec![0f32; p.output_len()];
+        {
+            let (spec, _) = cache.ensure(&eng, p, &wei, 1, &mut ws);
+            eng.fprop_spec_into(p, &x, spec, &mut y, &mut ws);
+        }
+        assert_close_oracle(
+            &y, &oracle::fprop64(p, &x, &wei),
+            tolerance::frequency_f16(p, Pass::Fprop, eng.n_fft));
+
+        let mut gx = vec![0f32; p.input_len()];
+        {
+            // bprop shares the fprop spectrum — this must be a hit
+            let (spec, took) = cache.ensure(&eng, p, &wei, 1, &mut ws);
+            assert_eq!(took, Duration::ZERO,
+                       "{}: bprop re-transformed the weights", case.name);
+            eng.bprop_spec_into(p, &go, spec, &mut gx, &mut ws);
+        }
+        assert_close_oracle(
+            &gx, &oracle::bprop64(p, &go, &wei),
+            tolerance::frequency_f16(p, Pass::Bprop, eng.n_fft));
+    }
+}
+
+/// The `FBFFT_SPECTRA=f32` escape hatch stores full-precision slabs:
+/// spec-path output is then bitwise the uncached pass on every
+/// conformance shape, so the hatch really is "cache off, numerics-wise".
+#[test]
+fn f32_slabs_are_bitwise_the_uncached_pass_matrix_wide() {
+    for case in cases::conformance_suite() {
+        let p = &case.problem;
+        let eng = FftConvEngine::fbfft_for(p);
+        let mut rng = Rng::new(case.seed ^ 0xF32);
+        let x = rng.normal_vec(p.input_len());
+        let wei = rng.normal_vec(p.weight_len());
+        let mut ws = Workspace::new();
+        let mut cache = SpectrumCache::new(SpectrumPrecision::F32);
+        let mut y = vec![0f32; p.output_len()];
+        {
+            let (spec, _) = cache.ensure(&eng, p, &wei, 1, &mut ws);
+            eng.fprop_spec_into(p, &x, spec, &mut y, &mut ws);
+        }
+        let mut fresh = vec![0f32; p.output_len()];
+        eng.fprop_into(p, &x, &wei, &mut fresh, &mut Workspace::new());
+        assert_eq!(y, fresh, "{}: f32 spec path diverged", case.name);
+    }
+}

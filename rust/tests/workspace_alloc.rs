@@ -6,7 +6,8 @@
 //! like cuFFT's own workspace does; the pool counters gate every tensor
 //! the pipeline itself owns.)
 
-use fbfft_repro::conv::{ConvProblem, FftConvEngine, FftMode, Workspace};
+use fbfft_repro::conv::{ConvProblem, FftConvEngine, FftMode,
+                        SpectrumCache, SpectrumPrecision, Workspace};
 use fbfft_repro::testkit::{assert_close_oracle, oracle, tolerance};
 use fbfft_repro::coordinator::Pass;
 use fbfft_repro::util::Rng;
@@ -86,6 +87,69 @@ fn small_ragged_config_is_zero_alloc_after_warmup() {
     // ragged dims exercise different role sizes per pass
     let p = ConvProblem::new(3, 5, 7, 13, 11, 5, 3);
     zero_alloc_steady_state(FftMode::Fbfft, &p, 16);
+}
+
+#[test]
+fn spec_path_is_zero_alloc_after_warmup_across_batch_sizes() {
+    // the serving steady state: cached weight spectrum, mixed batch
+    // sizes. The spectrum-hit passes mix `get` checkouts (CGEMM pack
+    // staging, f16 dequant lanes) with `take` checkouts (frequency
+    // slabs); a smaller batch after warmup must register as pure reuse —
+    // the capacity-keyed expansion accounting, proven at pipeline level.
+    let big = ConvProblem::square(8, 4, 4, 16, 3);
+    let small = ConvProblem { s: 3, ..big };
+    let eng = FftConvEngine::fbfft_for(&big);
+    let mut rng = Rng::new(0x5bec);
+    let x_big = rng.normal_vec(big.input_len());
+    let x_small = rng.normal_vec(small.input_len());
+    let go_big = rng.normal_vec(big.output_len());
+    let wei = rng.normal_vec(big.weight_len());
+    let mut y = vec![0f32; big.output_len()];
+    let mut y_small = vec![0f32; small.output_len()];
+    let mut gx = vec![0f32; big.input_len()];
+    let mut ws = Workspace::new();
+    let mut cache = SpectrumCache::new(SpectrumPrecision::F16);
+
+    // warmup covers the high-water marks of every role, both passes
+    {
+        let (spec, _) = cache.ensure(&eng, &big, &wei, 1, &mut ws);
+        eng.fprop_spec_into(&big, &x_big, spec, &mut y, &mut ws);
+        eng.bprop_spec_into(&big, &go_big, spec, &mut gx, &mut ws);
+    }
+    assert!(ws.pool.allocations > 0, "spec path must use the pool");
+
+    ws.pool.reset_counters();
+    for _ in 0..3 {
+        let (spec, took) = cache.ensure(&eng, &big, &wei, 1, &mut ws);
+        assert_eq!(took.as_nanos(), 0, "steady state must hit the cache");
+        eng.fprop_spec_into(&big, &x_big, spec, &mut y, &mut ws);
+        eng.bprop_spec_into(&big, &go_big, spec, &mut gx, &mut ws);
+    }
+    // the smaller batch shares the spectrum (the key omits s) and fits
+    // inside warmed capacity
+    {
+        let (spec, took) = cache.ensure(&eng, &small, &wei, 1, &mut ws);
+        assert_eq!(took.as_nanos(), 0, "spectra are batch-size agnostic");
+        eng.fprop_spec_into(&small, &x_small, spec, &mut y_small,
+                            &mut ws);
+    }
+    assert_eq!(ws.pool.allocations, 0,
+               "steady-state spec pass allocated a new pool buffer");
+    assert_eq!(ws.pool.expansions, 0,
+               "steady-state spec pass grew a pool buffer");
+    assert!(ws.pool.reuses > 0,
+            "spec passes must reuse pooled buffers");
+
+    assert_close_oracle(&y, &oracle::fprop64(&big, &x_big, &wei),
+                        tolerance::frequency_f16(&big, Pass::Fprop,
+                                                 eng.n_fft));
+    assert_close_oracle(&y_small,
+                        &oracle::fprop64(&small, &x_small, &wei),
+                        tolerance::frequency_f16(&small, Pass::Fprop,
+                                                 eng.n_fft));
+    assert_close_oracle(&gx, &oracle::bprop64(&big, &go_big, &wei),
+                        tolerance::frequency_f16(&big, Pass::Bprop,
+                                                 eng.n_fft));
 }
 
 #[test]
