@@ -77,7 +77,7 @@ fn main() -> anyhow::Result<()> {
         if engine.submit(ServeRequest { id: r.id,
                                         images: r.images.min(capacity),
                                         deadline,
-                                        reply: tx.clone() }) {
+                                        reply: tx.clone() }).is_ok() {
             accepted += 1;
         }
     }

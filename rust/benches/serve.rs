@@ -17,8 +17,16 @@
 //! `cargo bench --bench serve -- --smoke` runs a fixed small closed-loop
 //! config (4 shards, host backend) and still writes the JSON.
 //!
+//! Smoke mode also runs the open-loop *overload knee* probe: fresh
+//! small engines replay Poisson traces at escalating rates and the
+//! first rate whose client-side p99 blows past 2x the base rate's p99
+//! is the knee — committed into the JSON as the `overload` block so
+//! the carrying capacity is a tracked artifact key.
+//!
 //! Flags: `--smoke`, `--mode open|closed`, `--requests N`, `--shards N`,
-//! `--clients N`, `--capacity N`, `--rate R` (open mode, req/s).
+//! `--clients N`, `--capacity N`, `--rate R` (open mode, req/s),
+//! `--faults SPEC` (deterministic chaos script, see `testkit::faults`),
+//! `--out FILE` (default `BENCH_serve.json`).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
@@ -31,7 +39,9 @@ use fbfft_repro::coordinator::service::{Completion, EngineClient,
                                         EngineConfig, ServeEngine,
                                         ServeRequest};
 use fbfft_repro::coordinator::Strategy;
+use fbfft_repro::metrics::Histogram;
 use fbfft_repro::reports::{serve_json, serve_table};
+use fbfft_repro::testkit::faults::FaultPlan;
 use fbfft_repro::trace;
 use fbfft_repro::util::{Json, Rng};
 
@@ -43,6 +53,8 @@ struct BenchArgs {
     clients: usize,
     capacity: usize,
     rate: f64,
+    faults: Option<Arc<FaultPlan>>,
+    out: String,
 }
 
 fn parse() -> BenchArgs {
@@ -55,6 +67,15 @@ fn parse() -> BenchArgs {
             .cloned()
     };
     let smoke = flag("--smoke");
+    let faults = val("--faults").map(|spec| {
+        match FaultPlan::parse(&spec) {
+            Ok(p) => Arc::new(p),
+            Err(e) => {
+                eprintln!("bad --faults: {e}");
+                std::process::exit(2);
+            }
+        }
+    });
     let mut a = BenchArgs {
         smoke,
         mode: val("--mode").unwrap_or_else(|| "closed".into()),
@@ -63,6 +84,8 @@ fn parse() -> BenchArgs {
         clients: if smoke { 8 } else { 16 },
         capacity: if smoke { 8 } else { 16 },
         rate: 400.0,
+        faults,
+        out: val("--out").unwrap_or_else(|| "BENCH_serve.json".into()),
     };
     let usize_of = |s: Option<String>, d: usize| {
         s.and_then(|v| v.parse().ok()).unwrap_or(d)
@@ -115,7 +138,7 @@ fn run_closed(client: &EngineClient, a: &BenchArgs) -> usize {
                         deadline: None,
                         reply: tx.clone(),
                     });
-                    if !ok {
+                    if ok.is_err() {
                         continue; // rejected: counted by the engine
                     }
                     if rx.recv_timeout(Duration::from_secs(60)).is_ok() {
@@ -139,12 +162,15 @@ fn run_open(client: &EngineClient, a: &BenchArgs) -> usize {
         std::thread::sleep(
             Duration::from_secs_f64(r.arrival_s)
                 .saturating_sub(t0.elapsed()));
-        if client.submit(ServeRequest {
-            id: r.id,
-            images: r.images.min(a.capacity),
-            deadline: None,
-            reply: tx.clone(),
-        }) {
+        if client
+            .submit(ServeRequest {
+                id: r.id,
+                images: r.images.min(a.capacity),
+                deadline: None,
+                reply: tx.clone(),
+            })
+            .is_ok()
+        {
             accepted += 1;
         }
     }
@@ -184,12 +210,14 @@ fn spectra_probe(a: &BenchArgs) -> Json {
     for flush in 0..2u64 {
         // a full-capacity request flushes immediately and alone, and
         // the blocking recv serializes the two flushes
-        assert!(engine.submit(ServeRequest {
-            id: flush,
-            images: a.capacity,
-            deadline: None,
-            reply: tx.clone(),
-        }));
+        assert!(engine
+            .submit(ServeRequest {
+                id: flush,
+                images: a.capacity,
+                deadline: None,
+                reply: tx.clone(),
+            })
+            .is_ok());
         rx.recv_timeout(Duration::from_secs(60))
             .expect("probe flush completes");
     }
@@ -207,6 +235,77 @@ fn spectra_probe(a: &BenchArgs) -> Json {
         ("spectra_misses", Json::num(report.spectra_misses() as f64)),
         ("first_weight_fft_ns", Json::num(sum_ns - last_ns)),
         ("second_weight_fft_ns", Json::num(last_ns)),
+    ])
+}
+
+/// Open-loop overload probe: replay short Poisson traces at escalating
+/// rates against fresh small engines and record the client-side p99 at
+/// each. The knee is the first rate whose p99 exceeds 2x the base
+/// rate's p99 (or the top rate when the engine never saturates) — the
+/// carrying-capacity artifact key CI tracks run over run.
+fn overload_knee(a: &BenchArgs) -> Json {
+    let rates = [200.0f64, 400.0, 800.0, 1600.0];
+    let mut p99s = Vec::with_capacity(rates.len());
+    for (i, rate) in rates.iter().enumerate() {
+        let problem = ConvProblem::square(a.capacity, 2, 2, 8, 3);
+        let engine = ServeEngine::start_host(
+            problem,
+            EngineConfig {
+                shards: 2,
+                batcher: BatcherConfig {
+                    capacity: a.capacity,
+                    max_wait: Duration::from_millis(2),
+                },
+                default_deadline: Duration::from_secs(30),
+                warm: false,
+                force_strategy: Some(Strategy::Direct),
+                ..Default::default()
+            })
+            .expect("knee engine starts");
+        let reqs = trace::request_trace(60, *rate, 0x5E ^ i as u64);
+        let (tx, rx) = mpsc::channel::<Completion>();
+        let t0 = Instant::now();
+        let mut accepted = 0usize;
+        for r in &reqs {
+            std::thread::sleep(
+                Duration::from_secs_f64(r.arrival_s)
+                    .saturating_sub(t0.elapsed()));
+            if engine
+                .submit(ServeRequest {
+                    id: r.id,
+                    images: r.images.min(a.capacity),
+                    deadline: None,
+                    reply: tx.clone(),
+                })
+                .is_ok()
+            {
+                accepted += 1;
+            }
+        }
+        drop(tx);
+        let mut lat = Histogram::new();
+        for _ in 0..accepted {
+            match rx.recv_timeout(Duration::from_secs(60)) {
+                Ok(c) => lat.record(c.latency.as_secs_f64()),
+                Err(_) => break,
+            }
+        }
+        engine.shutdown();
+        p99s.push(lat.summary().p99 * 1e3);
+    }
+    let base = p99s[0].max(1e-6);
+    let knee = rates
+        .iter()
+        .zip(&p99s)
+        .find(|(_, p)| **p > 2.0 * base)
+        .map(|(r, _)| *r)
+        .unwrap_or(rates[rates.len() - 1]);
+    Json::obj(vec![
+        ("rates_req_s",
+         Json::Arr(rates.iter().map(|r| Json::num(*r)).collect())),
+        ("p99_ms",
+         Json::Arr(p99s.iter().map(|p| Json::num(*p)).collect())),
+        ("knee_req_s", Json::num(knee)),
     ])
 }
 
@@ -234,6 +333,9 @@ fn main() {
             } else {
                 5
             }),
+            // chaos script (--faults): only the main engine sees it —
+            // the probe engines below run fault-free
+            faults: a.faults.clone(),
             ..Default::default()
         })
         .expect("host serve engine starts");
@@ -256,13 +358,15 @@ fn main() {
     let json = match json {
         Json::Obj(mut doc) => {
             doc.insert("spectra_probe".into(), probe);
+            if a.smoke {
+                doc.insert("overload".into(), overload_knee(&a));
+            }
             Json::Obj(doc)
         }
         _ => unreachable!("serve_json builds an object"),
     };
-    std::fs::write("BENCH_serve.json", json.to_string())
-        .expect("write BENCH_serve.json");
-    eprintln!("wrote BENCH_serve.json (mode={}, smoke={})", a.mode,
-              a.smoke);
+    std::fs::write(&a.out, json.to_string())
+        .unwrap_or_else(|e| panic!("write {}: {e}", a.out));
+    eprintln!("wrote {} (mode={}, smoke={})", a.out, a.mode, a.smoke);
     println!("{}", serve_table(&json));
 }

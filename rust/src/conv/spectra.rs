@@ -215,6 +215,15 @@ impl SpectrumCache {
         self.invalidated += dropped;
         dropped
     }
+
+    /// Drop every cached spectrum while keeping the hit/miss/invalidated
+    /// counters. Supervised shard restarts call this (via a rebuild) so
+    /// a crash mid-transform can never leave a half-written spectrum
+    /// serving traffic; the counters survive so reports still account
+    /// for the pre-crash work.
+    pub fn clear(&mut self) {
+        self.entries.clear();
+    }
 }
 
 #[cfg(test)]

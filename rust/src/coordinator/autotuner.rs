@@ -54,12 +54,16 @@ pub struct Autotuner {
     /// weight FFT away, so its tuner must measure flushes the same way
     /// or it would systematically under-rate the frequency strategies
     pub serve_spectra: Option<SpectrumPrecision>,
+    /// persisted-state problems swallowed by the tolerant loader
+    /// (corrupt JSON, unknown schema, malformed entries) — a warm start
+    /// degraded to a (partial) cold start instead of an error
+    pub load_warnings: usize,
 }
 
 impl Autotuner {
     pub fn new() -> Self {
         Autotuner { cache: HashMap::new(), reps: 3, try_tiling: true,
-                    serve_spectra: None }
+                    serve_spectra: None, load_warnings: 0 }
     }
 
     pub fn cached(&self, p: &ConvProblem, pass: Pass) -> Option<Choice> {
@@ -283,19 +287,67 @@ impl Autotuner {
         ]).to_string())
     }
 
+    /// Warm-load a persisted cache. `None` only when the file cannot be
+    /// read at all (missing path — an ordinary cold start); any *parse*
+    /// problem degrades instead of failing: corrupt or truncated JSON
+    /// and unknown schema versions return an empty tuner, malformed
+    /// entries are skipped — each counted in `load_warnings` so the
+    /// degradation is visible in reports, never silent.
     pub fn load(path: &Path) -> Option<Autotuner> {
         let text = std::fs::read_to_string(path).ok()?;
-        let j = Json::parse(&text).ok()?;
+        Some(Self::from_json_text(&text))
+    }
+
+    /// The tolerant half of [`Autotuner::load`]: parse persisted cache
+    /// text, swallowing corruption into `load_warnings` (a poisoned
+    /// cache file must cost a re-tune, not an outage).
+    pub fn from_json_text(text: &str) -> Autotuner {
         let mut t = Autotuner::new();
-        for e in j.get("entries")?.as_arr()? {
-            let (p, pass) = Self::key_parse(e.get("key")?.as_str()?)?;
-            let strategy = Strategy::from_tag(e.get("strategy")?.as_str()?)?;
-            let n_fft = e.get("n_fft").and_then(Json::as_usize);
-            let seconds = e.get("seconds")?.as_f64()?;
-            t.cache.insert((p, pass),
-                           Choice { strategy, n_fft, seconds });
+        let j = match Json::parse(text) {
+            Ok(j) => j,
+            Err(_) => {
+                eprintln!("tuner cache: corrupt JSON; starting cold");
+                t.load_warnings += 1;
+                return t;
+            }
+        };
+        match j.get("version").and_then(Json::as_usize) {
+            Some(1) => {}
+            v => {
+                eprintln!("tuner cache: unknown schema version {v:?}; \
+                           starting cold");
+                t.load_warnings += 1;
+                return t;
+            }
         }
-        Some(t)
+        let Some(entries) = j.get("entries").and_then(Json::as_arr)
+        else {
+            eprintln!("tuner cache: missing entries array; starting \
+                       cold");
+            t.load_warnings += 1;
+            return t;
+        };
+        for e in entries {
+            let parsed = (|| {
+                let (p, pass) =
+                    Self::key_parse(e.get("key")?.as_str()?)?;
+                let strategy =
+                    Strategy::from_tag(e.get("strategy")?.as_str()?)?;
+                let n_fft = e.get("n_fft").and_then(Json::as_usize);
+                let seconds = e.get("seconds")?.as_f64()?;
+                Some(((p, pass), Choice { strategy, n_fft, seconds }))
+            })();
+            match parsed {
+                Some((key, choice)) => {
+                    t.cache.insert(key, choice);
+                }
+                None => {
+                    eprintln!("tuner cache: skipping malformed entry");
+                    t.load_warnings += 1;
+                }
+            }
+        }
+        t
     }
 }
 
@@ -312,6 +364,11 @@ pub struct CacheStats {
     pub misses: usize,
     /// full tuner runs triggered by `ensure` misses
     pub tunes: usize,
+    /// persisted-state problems swallowed by the tolerant warm-load
+    pub load_warnings: usize,
+    /// poisoned-lock recoveries (a shard panicked holding the tuner —
+    /// the cache kept serving instead of wedging every shard)
+    pub lock_recovered: usize,
 }
 
 /// Thread-safe, persistent per-`(ConvProblem, Pass)` strategy cache for
@@ -334,6 +391,15 @@ pub struct StrategyCache {
     hits: AtomicUsize,
     misses: AtomicUsize,
     tunes: AtomicUsize,
+    /// poisoned-lock recoveries (see [`CacheStats::lock_recovered`])
+    lock_recovered: AtomicUsize,
+    /// problems demoted to the direct fallback until the recorded
+    /// instant (graceful degradation after a PJRT error or non-finite
+    /// frequency output) — keyed with `s = 0` by the serving layer so
+    /// one demotion covers every flush shape of the problem
+    demoted: Mutex<HashMap<(ConvProblem, Pass), Instant>>,
+    /// persisted-state problems swallowed at warm-load
+    load_warnings: AtomicUsize,
     /// measurement repetitions for `ensure` misses
     pub reps: usize,
     /// include §6 tiled candidates when tuning on miss
@@ -346,9 +412,34 @@ impl StrategyCache {
     /// Warm-load from `path` when it exists (otherwise start empty).
     /// `None` keeps the cache purely in-memory.
     pub fn open(path: Option<&Path>) -> StrategyCache {
+        Self::open_with_faults(path, None)
+    }
+
+    /// [`StrategyCache::open`] with a fault-injection hook: a scripted
+    /// `CorruptLoad` occurrence corrupts the persisted text before the
+    /// tolerant parser sees it, exercising the real cold-start
+    /// degradation path end to end.
+    pub fn open_with_faults(
+        path: Option<&Path>,
+        faults: Option<&crate::testkit::faults::FaultPlan>,
+    ) -> StrategyCache {
         let tuner = path
-            .and_then(Autotuner::load)
+            .and_then(|p| {
+                let mut text = std::fs::read_to_string(p).ok()?;
+                if let Some(plan) = faults {
+                    if plan.fire(
+                        crate::testkit::faults::FaultKind::CorruptLoad,
+                        None)
+                    {
+                        eprintln!("tuner cache: injected corrupt load \
+                                   (FaultPlan)");
+                        text.truncate(text.len() / 2);
+                    }
+                }
+                Some(Autotuner::from_json_text(&text))
+            })
             .unwrap_or_else(Autotuner::new);
+        let load_warnings = tuner.load_warnings;
         StrategyCache {
             tuner: Mutex::new(tuner),
             path: path.map(Path::to_path_buf),
@@ -356,16 +447,32 @@ impl StrategyCache {
             hits: AtomicUsize::new(0),
             misses: AtomicUsize::new(0),
             tunes: AtomicUsize::new(0),
+            lock_recovered: AtomicUsize::new(0),
+            demoted: Mutex::new(HashMap::new()),
+            load_warnings: AtomicUsize::new(load_warnings),
             reps: 1,
             try_tiling: true,
             serve_spectra: None,
         }
     }
 
+    /// Lock the tuner, recovering from poisoning: a shard that panicked
+    /// while holding the lock must not wedge every other shard, and the
+    /// guarded state (a plain decision map) stays valid across an
+    /// unwound writer — worst case a racing insert is lost and the
+    /// shape re-tunes once.
+    fn tuner(&self) -> std::sync::MutexGuard<'_, Autotuner> {
+        self.tuner.lock().unwrap_or_else(|poisoned| {
+            self.lock_recovered.fetch_add(1, Ordering::Relaxed);
+            eprintln!("tuner cache: recovered poisoned lock");
+            poisoned.into_inner()
+        })
+    }
+
     /// Hot-path probe: the best known strategy for this shape, or `None`
     /// if never tuned. Never measures.
     pub fn lookup(&self, p: &ConvProblem, pass: Pass) -> Option<Choice> {
-        let got = self.tuner.lock().expect("tuner lock").cached(p, pass);
+        let got = self.tuner().cached(p, pass);
         match got {
             Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
             None => self.misses.fetch_add(1, Ordering::Relaxed),
@@ -387,9 +494,39 @@ impl StrategyCache {
         t.serve_spectra = self.serve_spectra;
         let c = t.tune(p, pass);
         self.tunes.fetch_add(1, Ordering::Relaxed);
-        self.tuner.lock().expect("tuner lock").insert(p, pass, c);
+        self.tuner().insert(p, pass, c);
         self.dirty.store(true, Ordering::Release);
         c
+    }
+
+    /// Demote a problem to the direct fallback until `until` (graceful
+    /// degradation: a PJRT runtime error or a non-finite frequency
+    /// output buys the problem a cooldown on the always-correct path
+    /// instead of crashing or serving garbage repeatedly).
+    pub fn demote(&self, p: &ConvProblem, pass: Pass, until: Instant) {
+        let mut map = self
+            .demoted
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        let slot = map.entry((*p, pass)).or_insert(until);
+        *slot = (*slot).max(until);
+    }
+
+    /// Is the problem inside a demotion cooldown window? Expired
+    /// windows are pruned on probe, so recovery needs no sweeper.
+    pub fn is_demoted(&self, p: &ConvProblem, pass: Pass) -> bool {
+        let mut map = self
+            .demoted
+            .lock()
+            .unwrap_or_else(|e| e.into_inner());
+        match map.get(&(*p, pass)) {
+            Some(until) if Instant::now() < *until => true,
+            Some(_) => {
+                map.remove(&(*p, pass));
+                false
+            }
+            None => false,
+        }
     }
 
     /// Record an *observed* launch time for a shape served by a fixed
@@ -400,7 +537,7 @@ impl StrategyCache {
     /// estimate instead of `None` forever.
     pub fn observe(&self, p: &ConvProblem, pass: Pass,
                    strategy: Strategy, seconds: f64) {
-        let mut t = self.tuner.lock().expect("tuner lock");
+        let mut t = self.tuner();
         let better = t
             .cached(p, pass)
             .map(|c| seconds < c.seconds)
@@ -418,11 +555,11 @@ impl StrategyCache {
         if !self.dirty.swap(false, Ordering::AcqRel) {
             return Ok(());
         }
-        self.tuner.lock().expect("tuner lock").save(path)
+        self.tuner().save(path)
     }
 
     pub fn len(&self) -> usize {
-        self.tuner.lock().expect("tuner lock").len()
+        self.tuner().len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -435,6 +572,8 @@ impl StrategyCache {
             hits: self.hits.load(Ordering::Relaxed),
             misses: self.misses.load(Ordering::Relaxed),
             tunes: self.tunes.load(Ordering::Relaxed),
+            load_warnings: self.load_warnings.load(Ordering::Relaxed),
+            lock_recovered: self.lock_recovered.load(Ordering::Relaxed),
         }
     }
 }
@@ -553,6 +692,94 @@ mod tests {
         assert_eq!(c.seconds, 1e-3);
         assert_eq!(c.strategy, Strategy::Vendor);
         assert_eq!(c.n_fft, None);
+    }
+
+    #[test]
+    fn load_tolerates_garbage_bytes() {
+        let tmp = std::env::temp_dir().join("fbfft_tuner_garbage.json");
+        std::fs::write(&tmp, b"\x00\xffnot json{{{").unwrap();
+        let t = Autotuner::load(&tmp).unwrap();
+        assert!(t.is_empty(), "garbage must degrade to a cold start");
+        assert!(t.load_warnings >= 1);
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn load_tolerates_truncation_and_unknown_schema() {
+        // truncated mid-document
+        let t = Autotuner::from_json_text("{\"version\": 1, \"entr");
+        assert!(t.is_empty() && t.load_warnings >= 1);
+        // future schema version
+        let t = Autotuner::from_json_text(
+            "{\"version\": 99, \"entries\": []}");
+        assert!(t.is_empty() && t.load_warnings >= 1);
+        // malformed entry skipped, valid shape of document kept
+        let t = Autotuner::from_json_text(
+            "{\"version\": 1, \"entries\": [{\"key\": \"nope\"}]}");
+        assert!(t.is_empty() && t.load_warnings >= 1);
+    }
+
+    #[test]
+    fn corrupt_load_fault_forces_cold_start() {
+        use crate::testkit::faults::FaultPlan;
+        let tmp = std::env::temp_dir()
+            .join("fbfft_tuner_corrupt_fault.json");
+        std::fs::remove_file(&tmp).ok();
+        let p = ConvProblem::square(1, 2, 2, 9, 3);
+        {
+            let mut cache = StrategyCache::open(Some(&tmp));
+            cache.try_tiling = false;
+            cache.ensure(&p, Pass::Fprop);
+            cache.persist().unwrap();
+        }
+        let plan = FaultPlan::parse("corrupt_load@1").unwrap();
+        let cold = StrategyCache::open_with_faults(Some(&tmp),
+                                                   Some(&plan));
+        assert_eq!(plan.injected(), 1);
+        let s = cold.stats();
+        assert_eq!(s.entries, 0,
+                   "corrupted file must not warm-load entries");
+        assert!(s.load_warnings >= 1, "degradation must be counted");
+        // the untouched file still warm-loads on the next open
+        let warm = StrategyCache::open(Some(&tmp));
+        assert_eq!(warm.stats().entries, 1);
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn poisoned_tuner_lock_recovers() {
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+        use std::sync::Arc;
+        let cache = Arc::new(StrategyCache::open(None));
+        let p = ConvProblem::square(1, 1, 1, 8, 3);
+        cache.observe(&p, Pass::Fprop, Strategy::Vendor, 1e-3);
+        // poison the tuner mutex by panicking while holding it
+        let c2 = Arc::clone(&cache);
+        let _ = catch_unwind(AssertUnwindSafe(|| {
+            let _guard = c2.tuner();
+            panic!("poison");
+        }));
+        // the cache keeps serving and counts the recovery
+        assert_eq!(cache.lookup(&p, Pass::Fprop).map(|c| c.seconds),
+                   Some(1e-3));
+        assert!(cache.stats().lock_recovered >= 1);
+    }
+
+    #[test]
+    fn demotion_window_expires() {
+        let cache = StrategyCache::open(None);
+        let p = ConvProblem::square(0, 2, 2, 9, 3);
+        assert!(!cache.is_demoted(&p, Pass::Fprop));
+        cache.demote(&p, Pass::Fprop,
+                     Instant::now() + Duration::from_secs(60));
+        assert!(cache.is_demoted(&p, Pass::Fprop));
+        assert!(!cache.is_demoted(&p, Pass::Bprop),
+                "demotion is per-pass");
+        // an already-expired window reads as not demoted and is pruned
+        let q = ConvProblem::square(0, 1, 1, 8, 3);
+        cache.demote(&q, Pass::Fprop, Instant::now());
+        std::thread::sleep(Duration::from_millis(1));
+        assert!(!cache.is_demoted(&q, Pass::Fprop));
     }
 
     #[test]

@@ -22,8 +22,10 @@
 //!   — the `allocations` / `expansions` counters prove it in tests.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use crate::fft::C32;
+use crate::testkit::faults::{FaultKind, FaultPlan};
 
 /// Role-keyed reusable buffer arena (`f32`, `C32` and split-complex
 /// planar-pair planes).
@@ -38,11 +40,40 @@ pub struct BufferPool {
     pub allocations: usize,
     pub expansions: usize,
     pub reuses: usize,
+    /// deterministic fault-injection hook: when armed, `take_raw`
+    /// checkouts count as `AllocFail` occurrences for the scoped shard
+    /// and a scripted occurrence panics — inside the serving engine
+    /// the panic lands in the supervised flush region
+    faults: Option<(Arc<FaultPlan>, Option<usize>)>,
+    /// allocation failures this pool has injected (shard attribution
+    /// for the serve report)
+    pub faults_injected: usize,
 }
 
 impl BufferPool {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Arm the pool's fault-injection hook: `take_raw` checkouts become
+    /// `AllocFail` occurrences scoped to `shard` (see
+    /// [`FaultPlan::fire`]).
+    pub fn set_faults(&mut self, plan: Arc<FaultPlan>,
+                      shard: Option<usize>) {
+        self.faults = Some((plan, shard));
+    }
+
+    /// Probe the fault plan for an injected allocation failure. Panics
+    /// like a real failed allocation would; callers on the serving path
+    /// are supervised (`catch_unwind`) and treat it as a shard crash.
+    fn maybe_fail_alloc(&mut self) {
+        if let Some((plan, shard)) = &self.faults {
+            if plan.fire(FaultKind::AllocFail, *shard) {
+                self.faults_injected += 1;
+                panic!("injected allocation failure (FaultPlan, \
+                        shard {shard:?})");
+            }
+        }
     }
 
     /// Fetch the buffer for `role`, expanded to at least `len` elements
@@ -93,6 +124,7 @@ impl BufferPool {
     /// the memset keeps multi-MB zeroing out of the timed hot stages.
     /// Only growth beyond the old length is zeroed (safe-Rust floor).
     pub fn take_raw(&mut self, role: &str, len: usize) -> Vec<f32> {
+        self.maybe_fail_alloc();
         match self.bufs.remove(role) {
             Some(mut buf) => {
                 if buf.capacity() < len {
@@ -388,6 +420,26 @@ mod tests {
         p.put("warm", b);
         assert_eq!(p.allocations, 0, "buffer survived the reset");
         assert_eq!(p.reuses, 1);
+    }
+
+    #[test]
+    fn armed_pool_fails_the_scripted_checkout_only() {
+        let mut p = BufferPool::new();
+        let plan = Arc::new(FaultPlan::parse("shard0:alloc_fail@2")
+            .unwrap());
+        p.set_faults(plan.clone(), Some(0));
+        let b = p.take_raw("stage", 8); // occurrence 1: survives
+        p.put("stage", b);
+        let failed = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                p.take_raw("stage", 8) // occurrence 2: scripted failure
+            }));
+        assert!(failed.is_err(), "scripted checkout must panic");
+        assert_eq!(p.faults_injected, 1);
+        assert_eq!(plan.injected(), 1);
+        // the spec fired once; later checkouts are healthy again
+        let b = p.take_raw("stage", 8);
+        assert_eq!(b.len(), 8);
     }
 
     #[test]

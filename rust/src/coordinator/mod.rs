@@ -14,7 +14,9 @@
 //! * [`batcher`]   — deadline-aware dynamic request batching;
 //! * [`service`]   — the sharded multi-worker serving engine
 //!   ([`ServeEngine`]): admission → least-loaded shard → per-shard
-//!   batcher → strategy-cache dispatch, with the legacy single-shard
+//!   batcher → strategy-cache dispatch, supervised (`catch_unwind`
+//!   per flush, [`ShardHealth`] circuit breaker, graceful degradation
+//!   to the direct fallback), with the legacy single-shard
 //!   [`ConvService`] wrapper on top.
 
 pub mod autotuner;
@@ -29,6 +31,6 @@ pub use batcher::{Batch, Batcher, BatcherConfig};
 pub use buffers::BufferPool;
 pub use scheduler::{LayerPlan, NetworkScheduler, PassTimings};
 pub use service::{Completion, ConvService, EngineClient, EngineConfig,
-                  EngineReport, ServeEngine, ServeRequest, ServiceReport,
-                  ShardReport};
+                  EngineReport, ServeEngine, ServeError, ServeRequest,
+                  ServiceReport, ShardHealth, ShardReport, SubmitError};
 pub use strategy::{Pass, Strategy};

@@ -34,14 +34,29 @@
 //!   batch-fill ratio, SLA misses and flush counters, merged into the
 //!   aggregate view by [`EngineReport`] and rendered by
 //!   [`reports::serve`](crate::reports::serve).
+//! * **Supervision**: every flush runs under `catch_unwind`. A panic
+//!   fails the in-flight batch with error [`Completion`]s (exactly-once
+//!   is preserved — a hung client is worse than a served error), is
+//!   recorded in the shared [`ShardHealth`] table, and the shard
+//!   rebuilds its flush-local state (workspace, staging pool, spectrum
+//!   entries) with exponential backoff. A shard that keeps flapping
+//!   trips a circuit breaker: it is marked dead, admission re-routes to
+//!   the survivors, and the dead shard drains its channel as a
+//!   dead-letter queue so racing submissions fail fast instead of
+//!   hanging. Degradation ladder for bad *outputs* (PJRT launch errors,
+//!   non-finite frequency results): the problem demotes to the direct
+//!   fallback for a cooldown window via
+//!   [`StrategyCache::demote`]. Faults are injectable deterministically
+//!   through a [`FaultPlan`] (`FBFFT_FAULTS`) for chaos tests.
 //!
 //! [`ConvService`] survives as the single-shard PJRT wrapper the
 //! original examples were written against.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -51,10 +66,11 @@ use crate::conv::{direct, im2col, tiled, ConvProblem, FftConvEngine,
                   FftMode, SpectrumCache, SpectrumPrecision, Workspace};
 use crate::metrics::Histogram;
 use crate::runtime::{HostTensor, Runtime};
+use crate::testkit::faults::{FaultKind, FaultPlan};
 use crate::util::Rng;
 
 use super::autotuner::{CacheStats, Choice, StrategyCache};
-use super::batcher::{Batcher, BatcherConfig};
+use super::batcher::{Batch, Batcher, BatcherConfig};
 use super::buffers::BufferPool;
 use super::strategy::{Pass, Strategy};
 
@@ -73,12 +89,121 @@ pub struct Completion {
     pub id: u64,
     pub images: usize,
     pub latency: Duration,
-    /// images in the last flushed batch this request rode in
+    /// images in the last flushed batch this request rode in (0 when
+    /// the request failed — it never rode a completed batch)
     pub batch_images: usize,
     /// which shard served the request
     pub shard: usize,
     /// whether the reply beat the request's SLA deadline
     pub deadline_met: bool,
+    /// `Some` when the request was *failed* rather than served — the
+    /// shard panicked with the request in flight, or was circuit-broken
+    /// with it still queued. Exactly-once still holds: a failed request
+    /// gets exactly one completion, carrying the error.
+    pub error: Option<ServeError>,
+}
+
+/// Why a request's completion is an error instead of a result.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// the owning shard panicked with the request's batch in flight
+    ShardPanic,
+    /// the owning shard was circuit-broken (dead) with the request
+    /// queued behind the break
+    ShardUnavailable,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::ShardPanic => write!(f, "shard panicked"),
+            ServeError::ShardUnavailable => write!(f, "shard unavailable"),
+        }
+    }
+}
+
+/// Why admission refused a request up front (nothing was enqueued and
+/// no completion will arrive).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// the deadline cannot cover the cached launch estimate
+    DeadlineUnmeetable,
+    /// no live shard exists to take the request (every shard dead)
+    Unavailable,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::DeadlineUnmeetable =>
+                write!(f, "deadline unmeetable"),
+            SubmitError::Unavailable => write!(f, "no live shard"),
+        }
+    }
+}
+
+/// Live health of one shard, shared between its worker (writer) and
+/// every [`EngineClient`] (readers routing around dead shards).
+#[derive(Debug)]
+pub struct ShardHealth {
+    alive: AtomicBool,
+    restarts: AtomicUsize,
+    consecutive_failures: AtomicUsize,
+    last_error: Mutex<Option<String>>,
+}
+
+impl Default for ShardHealth {
+    fn default() -> Self {
+        ShardHealth {
+            alive: AtomicBool::new(true),
+            restarts: AtomicUsize::new(0),
+            consecutive_failures: AtomicUsize::new(0),
+            last_error: Mutex::new(None),
+        }
+    }
+}
+
+impl ShardHealth {
+    pub fn is_alive(&self) -> bool {
+        self.alive.load(Ordering::Acquire)
+    }
+
+    /// Supervised restarts so far (rebuild-after-panic events).
+    pub fn restarts(&self) -> usize {
+        self.restarts.load(Ordering::Relaxed)
+    }
+
+    pub fn consecutive_failures(&self) -> usize {
+        self.consecutive_failures.load(Ordering::Relaxed)
+    }
+
+    pub fn last_error(&self) -> Option<String> {
+        self.last_error
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .clone()
+    }
+
+    fn mark_dead(&self) {
+        self.alive.store(false, Ordering::Release);
+    }
+
+    /// Record one flush failure; returns the new consecutive count.
+    fn record_failure(&self, msg: &str) -> usize {
+        *self.last_error.lock().unwrap_or_else(|e| e.into_inner()) =
+            Some(msg.to_string());
+        self.consecutive_failures.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    fn record_restart(&self) {
+        self.restarts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A clean flush resets the flap counter (the breaker only trips on
+    /// *consecutive* failures).
+    fn record_success(&self) {
+        self.consecutive_failures.store(0, Ordering::Relaxed);
+    }
 }
 
 /// How the worker pool executes a flushed batch.
@@ -112,6 +237,18 @@ pub struct EngineConfig {
     /// bypass the tuner and serve every flush with this strategy —
     /// the deterministic-probe escape hatch (bench smoke, CI gates)
     pub force_strategy: Option<Strategy>,
+    /// base sleep before a supervised shard rebuild; doubles per
+    /// consecutive failure (capped at 500ms)
+    pub restart_backoff: Duration,
+    /// consecutive flush failures that trip the circuit breaker and
+    /// mark the shard dead
+    pub max_consecutive_failures: usize,
+    /// how long a problem stays demoted to the direct fallback after a
+    /// PJRT error or non-finite frequency output
+    pub degrade_cooldown: Duration,
+    /// deterministic fault script for chaos tests; `None` falls back to
+    /// `FBFFT_FAULTS` in the environment (unset = no faults)
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl Default for EngineConfig {
@@ -126,6 +263,10 @@ impl Default for EngineConfig {
             warm: true,
             spectra: SpectrumPrecision::default(),
             force_strategy: None,
+            restart_backoff: Duration::from_millis(10),
+            max_consecutive_failures: 3,
+            degrade_cooldown: Duration::from_secs(5),
+            faults: None,
         }
     }
 }
@@ -178,6 +319,25 @@ pub struct ShardReport {
     /// failed backend launches (their requests complete anyway — a
     /// hung client is worse than a served error)
     pub launch_errors: usize,
+    /// requests that received a *success* completion — with
+    /// `requests_failed` this extends the flush ledger to
+    /// `completed + failed == requests` per shard
+    pub requests_completed: usize,
+    /// requests that received an *error* completion (shard panic or
+    /// circuit break; still exactly one completion each)
+    pub requests_failed: usize,
+    /// supervised rebuilds after a flush panic
+    pub restarts: usize,
+    /// flushes served on the degraded (direct-fallback) rung of the
+    /// ladder — demotion cooldowns and PJRT fallbacks
+    pub degraded_flushes: usize,
+    /// scripted faults this shard actually injected
+    pub faults_injected: usize,
+    /// the circuit breaker tripped: the shard died flapping and its
+    /// traffic re-routed to the survivors
+    pub circuit_broken: bool,
+    /// message of the shard's most recent flush failure
+    pub last_error: Option<String>,
     /// reply latency per completed request, seconds
     pub latency: Histogram,
     /// queued images sampled at each admission
@@ -192,6 +352,12 @@ pub struct EngineReport {
     pub shards: Vec<ShardReport>,
     /// requests refused at admission (deadline unmeetable)
     pub rejected_deadline: usize,
+    /// requests refused at admission because no live shard existed
+    pub rejected_unavailable: usize,
+    /// scripted faults injected engine-wide (the [`FaultPlan`]'s own
+    /// count — includes engine-level faults such as `corrupt_load`
+    /// that no shard counter sees)
+    pub faults_injected: usize,
     pub cache: CacheStats,
     pub capacity: usize,
     pub pass: Pass,
@@ -261,6 +427,27 @@ impl EngineReport {
         self.shards.iter().map(|s| s.launch_errors).sum()
     }
 
+    pub fn requests_completed(&self) -> usize {
+        self.shards.iter().map(|s| s.requests_completed).sum()
+    }
+
+    pub fn requests_failed(&self) -> usize {
+        self.shards.iter().map(|s| s.requests_failed).sum()
+    }
+
+    pub fn shard_restarts(&self) -> usize {
+        self.shards.iter().map(|s| s.restarts).sum()
+    }
+
+    pub fn degraded_flushes(&self) -> usize {
+        self.shards.iter().map(|s| s.degraded_flushes).sum()
+    }
+
+    /// Shards whose circuit breaker tripped.
+    pub fn circuit_broken(&self) -> usize {
+        self.shards.iter().filter(|s| s.circuit_broken).count()
+    }
+
     /// All shards' latency samples merged (the aggregate percentiles).
     pub fn aggregate_latency(&self) -> Histogram {
         let mut h = Histogram::new();
@@ -291,7 +478,9 @@ impl EngineReport {
 pub struct EngineClient {
     txs: Vec<Sender<Msg>>,
     depths: Vec<Arc<AtomicUsize>>,
+    health: Arc<Vec<ShardHealth>>,
     rejected: Arc<AtomicUsize>,
+    rejected_unavailable: Arc<AtomicUsize>,
     rr: Arc<AtomicUsize>,
     weights_version: Arc<AtomicU64>,
     cache: Arc<StrategyCache>,
@@ -303,11 +492,13 @@ pub struct EngineClient {
 }
 
 impl EngineClient {
-    /// Admit (or reject) a request. Returns `false` — and sends nothing
-    /// on `reply` — when the deadline cannot cover the cached launch
-    /// estimate for the request's own shape. Accepted requests are
-    /// routed to the least-loaded shard and receive exactly one
-    /// [`Completion`]. Submissions must not race
+    /// Admit (or reject) a request. `Err` — with nothing sent on
+    /// `reply` — when the deadline cannot cover the cached launch
+    /// estimate for the request's own shape
+    /// ([`SubmitError::DeadlineUnmeetable`]) or when every shard is
+    /// dead ([`SubmitError::Unavailable`]). Accepted requests are
+    /// routed to the least-loaded *live* shard and receive exactly one
+    /// [`Completion`] — success or error. Submissions must not race
     /// [`ServeEngine::shutdown`]: stop every client first (an accepted
     /// request whose send lands after the worker's final drain would be
     /// dropped).
@@ -315,7 +506,8 @@ impl EngineClient {
     /// Panics on a zero-image request (same contract as
     /// [`Batcher::push`]) — asserting here keeps the panic on the
     /// caller's thread instead of poisoning a shard worker.
-    pub fn submit(&self, req: ServeRequest) -> bool {
+    pub fn submit(&self, req: ServeRequest)
+                  -> std::result::Result<(), SubmitError> {
         assert!(req.images >= 1, "empty request");
         let now = Instant::now();
         let sla = req.deadline.unwrap_or(now + self.default_deadline);
@@ -330,56 +522,84 @@ impl EngineClient {
             .unwrap_or(Duration::ZERO);
         if now + est > sla {
             self.rejected.fetch_add(1, Ordering::Relaxed);
-            return false;
+            return Err(SubmitError::DeadlineUnmeetable);
         }
-        // least queued images wins; start point rotates so ties spread
+        // least queued images among *live* shards wins; the start point
+        // rotates so ties spread. A send that still fails (worker gone
+        // without marking itself dead) marks the shard dead and retries
+        // the survivors — the alive set shrinks, so this terminates.
+        let images = req.images;
         let n = self.txs.len();
         let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
-        let mut best = start;
-        let mut best_depth = usize::MAX;
-        for i in 0..n {
-            let s = (start + i) % n;
-            let d = self.depths[s].load(Ordering::Relaxed);
-            if d < best_depth {
-                best = s;
-                best_depth = d;
+        let mut msg = Msg::Req(Accepted {
+            id: req.id,
+            images,
+            enqueued: now,
+            flush_by: sla.min(now + self.max_wait),
+            sla,
+            reply: req.reply,
+        });
+        loop {
+            let mut best: Option<usize> = None;
+            let mut best_depth = usize::MAX;
+            for i in 0..n {
+                let s = (start + i) % n;
+                if !self.health[s].is_alive() {
+                    continue;
+                }
+                let d = self.depths[s].load(Ordering::Relaxed);
+                if d < best_depth {
+                    best = Some(s);
+                    best_depth = d;
+                }
+            }
+            let Some(best) = best else {
+                self.rejected_unavailable.fetch_add(1, Ordering::Relaxed);
+                return Err(SubmitError::Unavailable);
+            };
+            self.depths[best].fetch_add(images, Ordering::Relaxed);
+            match self.txs[best].send(msg) {
+                Ok(()) => return Ok(()),
+                Err(e) => {
+                    self.depths[best].fetch_sub(images, Ordering::Relaxed);
+                    self.health[best].mark_dead();
+                    msg = e.0;
+                }
             }
         }
-        self.depths[best].fetch_add(req.images, Ordering::Relaxed);
-        self.txs[best]
-            .send(Msg::Req(Accepted {
-                id: req.id,
-                images: req.images,
-                enqueued: now,
-                flush_by: sla.min(now + self.max_wait),
-                sla,
-                reply: req.reply,
-            }))
-            .expect("serve shard worker gone");
-        true
     }
 
-    /// Install a new weight tensor across every shard and invalidate the
-    /// cached weight spectra built from the old one. The bump is
-    /// zero-downtime: each worker applies it between flushes, so batches
-    /// flushed before the message arrives ride the old version and every
-    /// later flush serves (and re-transforms once, lazily) the new one.
-    /// Returns the new `weights_version`.
+    /// Install a new weight tensor across every live shard and
+    /// invalidate the cached weight spectra built from the old one. The
+    /// bump is zero-downtime: each worker applies it between flushes,
+    /// so batches flushed before the message arrives ride the old
+    /// version and every later flush serves (and re-transforms once,
+    /// lazily) the new one. Returns the new `weights_version`;
+    /// `Err(Unavailable)` when no shard could take the bump.
     ///
     /// Panics when `weights` does not match the served problem's weight
     /// tensor (`fo·f·kh·kw` elements) — same caller-thread contract as
     /// [`EngineClient::submit`].
-    pub fn update_weights(&self, weights: Vec<f32>) -> u64 {
+    pub fn update_weights(&self, weights: Vec<f32>)
+                          -> std::result::Result<u64, SubmitError> {
         assert_eq!(weights.len(), self.problem.weight_len(),
                    "weight tensor shape mismatch");
         let version =
             self.weights_version.fetch_add(1, Ordering::Relaxed) + 1;
         let shared = Arc::new(weights);
-        for tx in &self.txs {
-            tx.send(Msg::Weights { version, weights: shared.clone() })
-                .expect("serve shard worker gone");
+        let mut delivered = 0usize;
+        for (s, tx) in self.txs.iter().enumerate() {
+            let msg = Msg::Weights { version, weights: shared.clone() };
+            if tx.send(msg).is_ok() {
+                delivered += 1;
+            } else {
+                self.health[s].mark_dead();
+            }
         }
-        version
+        if delivered == 0 {
+            return Err(SubmitError::Unavailable);
+        }
+        Ok(version)
     }
 
     /// The version the next flush-after-drain will serve (starts at 1).
@@ -390,6 +610,11 @@ impl EngineClient {
     pub fn shards(&self) -> usize {
         self.txs.len()
     }
+
+    /// Live per-shard health (alive flag, restart and failure counts).
+    pub fn health(&self) -> &[ShardHealth] {
+        &self.health
+    }
 }
 
 /// Handle to the running sharded engine; `shutdown` flushes and joins.
@@ -397,6 +622,7 @@ pub struct ServeEngine {
     client: EngineClient,
     workers: Vec<JoinHandle<ShardReport>>,
     cache: Arc<StrategyCache>,
+    faults: Option<Arc<FaultPlan>>,
 }
 
 struct WorkerCtx {
@@ -409,6 +635,11 @@ struct WorkerCtx {
     spectra: SpectrumPrecision,
     force: Option<Strategy>,
     depth: Arc<AtomicUsize>,
+    health: Arc<Vec<ShardHealth>>,
+    faults: Option<Arc<FaultPlan>>,
+    restart_backoff: Duration,
+    max_consecutive_failures: usize,
+    degrade_cooldown: Duration,
     rx: Receiver<Msg>,
     ready: Sender<std::result::Result<(), String>>,
 }
@@ -440,7 +671,9 @@ impl ServeEngine {
     fn start(backend: Backend, problem: ConvProblem, cfg: EngineConfig)
              -> Result<ServeEngine> {
         assert!(cfg.shards >= 1, "engine needs at least one shard");
-        let mut cache = StrategyCache::open(cfg.tuner_path.as_deref());
+        let faults = cfg.faults.clone().or_else(FaultPlan::from_env);
+        let mut cache = StrategyCache::open_with_faults(
+            cfg.tuner_path.as_deref(), faults.as_deref());
         cache.reps = cfg.tuner_reps.max(1);
         // host serving of the weight-carrying passes runs through the
         // spectrum cache, so tune frequency candidates the same way —
@@ -466,6 +699,8 @@ impl ServeEngine {
         }
         let (ready_tx, ready_rx) =
             mpsc::channel::<std::result::Result<(), String>>();
+        let health: Arc<Vec<ShardHealth>> = Arc::new(
+            (0..cfg.shards).map(|_| ShardHealth::default()).collect());
         let mut txs = Vec::with_capacity(cfg.shards);
         let mut depths = Vec::with_capacity(cfg.shards);
         let mut workers = Vec::with_capacity(cfg.shards);
@@ -482,6 +717,11 @@ impl ServeEngine {
                 spectra: cfg.spectra,
                 force: cfg.force_strategy,
                 depth: depth.clone(),
+                health: health.clone(),
+                faults: faults.clone(),
+                restart_backoff: cfg.restart_backoff,
+                max_consecutive_failures: cfg.max_consecutive_failures,
+                degrade_cooldown: cfg.degrade_cooldown,
                 rx,
                 ready: ready_tx.clone(),
             };
@@ -514,7 +754,9 @@ impl ServeEngine {
         let client = EngineClient {
             txs,
             depths,
+            health,
             rejected: Arc::new(AtomicUsize::new(0)),
+            rejected_unavailable: Arc::new(AtomicUsize::new(0)),
             rr: Arc::new(AtomicUsize::new(0)),
             weights_version: Arc::new(AtomicU64::new(1)),
             cache: cache.clone(),
@@ -524,7 +766,7 @@ impl ServeEngine {
             default_deadline: cfg.default_deadline,
             max_wait: cfg.batcher.max_wait,
         };
-        Ok(ServeEngine { client, workers, cache })
+        Ok(ServeEngine { client, workers, cache, faults })
     }
 
     /// A cloneable submission handle for multi-threaded load.
@@ -534,14 +776,21 @@ impl ServeEngine {
 
     /// Admit a request from the engine owner's thread. See
     /// [`EngineClient::submit`].
-    pub fn submit(&self, req: ServeRequest) -> bool {
+    pub fn submit(&self, req: ServeRequest)
+                  -> std::result::Result<(), SubmitError> {
         self.client.submit(req)
     }
 
     /// Install new weights across the pool. See
     /// [`EngineClient::update_weights`].
-    pub fn update_weights(&self, weights: Vec<f32>) -> u64 {
+    pub fn update_weights(&self, weights: Vec<f32>)
+                          -> std::result::Result<u64, SubmitError> {
         self.client.update_weights(weights)
+    }
+
+    /// Live per-shard health. See [`EngineClient::health`].
+    pub fn health(&self) -> &[ShardHealth] {
+        self.client.health()
     }
 
     pub fn cache(&self) -> &StrategyCache {
@@ -553,21 +802,39 @@ impl ServeEngine {
     }
 
     /// Flush outstanding work, join every worker, persist the strategy
-    /// cache, and return the merged report.
+    /// cache, and return the merged report. Never propagates a worker
+    /// panic: a worker that somehow died outside its supervised flush
+    /// region yields an empty report for its shard instead of taking
+    /// the caller down.
     pub fn shutdown(self) -> EngineReport {
-        let ServeEngine { client, workers, cache } = self;
+        let ServeEngine { client, workers, cache, faults } = self;
         for tx in &client.txs {
             tx.send(Msg::Shutdown).ok();
         }
         let mut shards: Vec<ShardReport> = workers
             .into_iter()
-            .map(|w| w.join().expect("serve worker panicked"))
+            .enumerate()
+            .map(|(i, w)| {
+                w.join().unwrap_or_else(|_| {
+                    eprintln!("serve: shard {i} worker died outside \
+                               supervision; reporting empty");
+                    ShardReport { shard: i, ..Default::default() }
+                })
+            })
             .collect();
         shards.sort_by_key(|r| r.shard);
         cache.persist().ok();
+        let shard_faults: usize =
+            shards.iter().map(|s| s.faults_injected).sum();
         EngineReport {
             shards,
             rejected_deadline: client.rejected.load(Ordering::Relaxed),
+            rejected_unavailable: client
+                .rejected_unavailable
+                .load(Ordering::Relaxed),
+            faults_injected: faults
+                .map(|f| f.injected())
+                .unwrap_or(shard_faults),
             cache: cache.stats(),
             capacity: client.capacity,
             pass: client.pass,
@@ -575,10 +842,107 @@ impl ServeEngine {
     }
 }
 
+/// One request's reply-tracking state while any of its parts are queued
+/// or in flight on the shard.
+struct PendingReply {
+    id: u64,
+    remaining: usize,
+    total: usize,
+    enqueued: Instant,
+    sla: Instant,
+    reply: Sender<Completion>,
+}
+
+/// What one supervised flush produced (the `Ok` side of `catch_unwind`).
+struct FlushOutcome {
+    /// weight-FFT time actually spent (frequency strategies through the
+    /// spectrum cache)
+    wfft: Option<Duration>,
+    /// served on the degraded (direct-fallback) rung of the ladder
+    degraded: bool,
+    /// the primary backend launch failed (PJRT error, non-finite output)
+    launch_error: bool,
+    /// scripted faults injected inside the flush
+    injected: usize,
+}
+
+/// Best-effort human-readable panic payload.
+fn panic_msg(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "shard worker panicked".to_string()
+    }
+}
+
+/// Deliver completions for every part of `batch`. With `error: None`
+/// this is the success path (a split request completes only when its
+/// last part lands); with `Some(err)` every request with a part in the
+/// batch fails *entirely* — exactly one error completion, and later
+/// flushes of its other parts find no pending entry (harmless).
+fn complete_batch(batch: &Batch, pending: &mut Vec<PendingReply>,
+                  report: &mut ShardReport, shard: usize, imgs: usize,
+                  error: Option<ServeError>) {
+    let now = Instant::now();
+    for (id, n) in &batch.parts {
+        let Some(pos) = pending.iter().position(|p| p.id == *id) else {
+            continue;
+        };
+        if error.is_none() {
+            pending[pos].remaining =
+                pending[pos].remaining.saturating_sub(*n);
+            if pending[pos].remaining > 0 {
+                continue; // split request: more parts ride later batches
+            }
+        }
+        let p = pending.remove(pos);
+        let latency = now.duration_since(p.enqueued);
+        match error {
+            None => {
+                let met = now <= p.sla;
+                if !met {
+                    report.sla_miss += 1;
+                }
+                report.latency.record(latency.as_secs_f64());
+                report.requests_completed += 1;
+                p.reply
+                    .send(Completion {
+                        id: p.id,
+                        images: p.total,
+                        latency,
+                        batch_images: imgs,
+                        shard,
+                        deadline_met: met,
+                        error: None,
+                    })
+                    .ok();
+            }
+            Some(err) => {
+                report.requests_failed += 1;
+                p.reply
+                    .send(Completion {
+                        id: p.id,
+                        images: p.total,
+                        latency,
+                        batch_images: 0,
+                        shard,
+                        deadline_met: false,
+                        error: Some(err),
+                    })
+                    .ok();
+            }
+        }
+    }
+}
+
 fn worker_main(ctx: WorkerCtx) -> ShardReport {
     let WorkerCtx { shard, backend, problem, pass, batcher_cfg, cache,
-                    spectra: spectra_precision, force, depth, rx,
-                    ready } = ctx;
+                    spectra: spectra_precision, force, depth, health,
+                    faults, restart_backoff, max_consecutive_failures,
+                    degrade_cooldown, rx, ready } = ctx;
+    let my_health = &health[shard];
     // backend setup runs before the readiness handshake so compile
     // failures surface from ServeEngine::start
     let rt = match &backend {
@@ -603,15 +967,6 @@ fn worker_main(ctx: WorkerCtx) -> ShardReport {
     };
     drop(ready);
 
-    struct PendingReply {
-        id: u64,
-        remaining: usize,
-        total: usize,
-        enqueued: Instant,
-        sla: Instant,
-        reply: Sender<Completion>,
-    }
-
     let mut batcher = Batcher::new(batcher_cfg);
     let capacity = batcher_cfg.capacity;
     let mut pending: Vec<PendingReply> = Vec::new();
@@ -619,6 +974,9 @@ fn worker_main(ctx: WorkerCtx) -> ShardReport {
     let mut rng = Rng::new(0xC0FFEE ^ shard as u64);
     let mut ws = Workspace::new();
     let mut stage = BufferPool::new();
+    if let Some(f) = &faults {
+        stage.set_faults(f.clone(), Some(shard));
+    }
     // the layer's weights live on the shard (one buffered copy, §3.3),
     // alongside the spectra transformed from them — keyed by the
     // version so a bump invalidates exactly the stale entries
@@ -709,79 +1067,209 @@ fn worker_main(ctx: WorkerCtx) -> ShardReport {
             }
         };
         let imgs = batch.images();
+        // the scripted-panic probe counts this flush *before* the
+        // supervised region so the occurrence index is deterministic
+        // even when the launch itself panics for another reason
+        let inject_panic = faults
+            .as_ref()
+            .map_or(false,
+                    |f| f.fire(FaultKind::Panic, Some(shard)));
         let t0 = Instant::now();
-        let ok = match &rt {
-            Some(rt) => {
-                let Backend::Pjrt { artifact, .. } = &backend else {
-                    unreachable!("runtime without PJRT backend")
-                };
-                launch_pjrt(rt, artifact, &problem, imgs, &weights,
-                            &mut rng)
+        // ---- supervised region ----------------------------------------
+        // Everything that can panic — backend launches, staging-pool
+        // checkouts, spectrum transforms — runs under catch_unwind. A
+        // panic must fail this batch (error completions, exactly-once),
+        // never the whole engine.
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            if inject_panic {
+                panic!("injected shard panic (FaultPlan, shard {shard})");
             }
-            None => {
-                let wfft = launch_host(&cache, force, pass, &problem,
-                                       imgs, &weights, weights_version,
-                                       &mut spectra, &mut rng,
-                                       &mut stage, &mut ws);
-                if let Some(d) = wfft {
-                    report.weight_fft.record(d.as_secs_f64());
+            match &rt {
+                Some(rt) => {
+                    let Backend::Pjrt { artifact, .. } = &backend else {
+                        unreachable!("runtime without PJRT backend")
+                    };
+                    // demotion is keyed batch-size-normalized so one
+                    // bad launch covers every flush shape
+                    let dkey = ConvProblem { s: 0, ..problem };
+                    if cache.is_demoted(&dkey, pass) {
+                        // cooldown: serve the host direct fallback
+                        let mut o = launch_host(
+                            &cache, Some(Strategy::Direct), pass,
+                            &problem, imgs, &weights, weights_version,
+                            &mut spectra, &mut rng, &mut stage, &mut ws,
+                            None, shard, degrade_cooldown);
+                        o.degraded = true;
+                        o
+                    } else if launch_pjrt(rt, artifact, &problem, imgs,
+                                          &weights, &mut rng) {
+                        FlushOutcome { wfft: None, degraded: false,
+                                       launch_error: false, injected: 0 }
+                    } else {
+                        // PJRT runtime error (already logged): demote
+                        // the problem and serve this flush on the host
+                        // direct fallback instead of dropping it
+                        cache.demote(&dkey, pass,
+                                     Instant::now() + degrade_cooldown);
+                        let mut o = launch_host(
+                            &cache, Some(Strategy::Direct), pass,
+                            &problem, imgs, &weights, weights_version,
+                            &mut spectra, &mut rng, &mut stage, &mut ws,
+                            None, shard, degrade_cooldown);
+                        o.degraded = true;
+                        o.launch_error = true;
+                        o
+                    }
                 }
-                true
+                None => launch_host(&cache, force, pass, &problem, imgs,
+                                    &weights, weights_version,
+                                    &mut spectra, &mut rng, &mut stage,
+                                    &mut ws, faults.as_deref(), shard,
+                                    degrade_cooldown),
             }
-        };
+        }));
         let elapsed = t0.elapsed();
         report.launches += 1;
         report.busy += elapsed;
         fill_sum += imgs as f64 / capacity as f64;
         depth.fetch_sub(imgs, Ordering::Relaxed);
-        if !ok {
-            // the launch failed (PJRT error, already logged): the batch
-            // is gone from the batcher, so still complete its parts —
-            // a hung client is worse than a served error
-            report.launch_errors += 1;
-        } else if rt.is_some() {
-            // no host tuner runs for a compiled artifact; feed measured
-            // launch times back so deadline admission has an estimate
-            cache.observe(&ConvProblem { s: imgs, ..problem }, pass,
-                          Strategy::Vendor, elapsed.as_secs_f64());
-        }
-        // ---- completion phase -----------------------------------------
-        let now = Instant::now();
-        for (id, n) in &batch.parts {
-            let Some(pos) = pending.iter().position(|p| p.id == *id)
-            else {
+        match outcome {
+            Ok(o) => {
+                report.faults_injected += o.injected;
+                if let Some(d) = o.wfft {
+                    report.weight_fft.record(d.as_secs_f64());
+                }
+                if o.degraded {
+                    report.degraded_flushes += 1;
+                }
+                if o.launch_error {
+                    report.launch_errors += 1;
+                }
+                if !o.launch_error && !o.degraded && rt.is_some() {
+                    // no host tuner runs for a compiled artifact; feed
+                    // measured launch times back so deadline admission
+                    // has an estimate (clean launches only — fallback
+                    // timings would poison the estimate)
+                    cache.observe(&ConvProblem { s: imgs, ..problem },
+                                  pass, Strategy::Vendor,
+                                  elapsed.as_secs_f64());
+                }
+                my_health.record_success();
+                complete_batch(&batch, &mut pending, &mut report, shard,
+                               imgs, None);
+            }
+            Err(payload) => {
+                let msg = panic_msg(payload.as_ref());
+                eprintln!("serve: shard {shard} flush panicked: {msg}");
+                if inject_panic {
+                    report.faults_injected += 1;
+                }
+                report.launch_errors += 1;
+                // the batch is gone from the batcher: fail its requests
+                // with error completions (exactly-once — a hung client
+                // is worse than a served error)
+                complete_batch(&batch, &mut pending, &mut report, shard,
+                               imgs, Some(ServeError::ShardPanic));
+                let consecutive = my_health.record_failure(&msg);
+                report.last_error = Some(msg);
+                if consecutive >= max_consecutive_failures {
+                    // ---- circuit breaker --------------------------------
+                    // flapping: mark the shard dead so admission routes
+                    // around it, fail everything still queued, then
+                    // dead-letter the channel until shutdown
+                    my_health.mark_dead();
+                    report.circuit_broken = true;
+                    eprintln!("serve: shard {shard} circuit-broken \
+                               after {consecutive} consecutive failures");
+                    loop {
+                        let b = batcher.drain();
+                        if b.is_empty() {
+                            break;
+                        }
+                        let n = b.images();
+                        report.launches += 1; // ledger: drains count
+                        fill_sum += n as f64 / capacity as f64;
+                        depth.fetch_sub(n, Ordering::Relaxed);
+                        complete_batch(
+                            &b, &mut pending, &mut report, shard, n,
+                            Some(ServeError::ShardUnavailable));
+                    }
+                    for p in pending.drain(..) {
+                        report.requests_failed += 1;
+                        p.reply
+                            .send(Completion {
+                                id: p.id,
+                                images: p.total,
+                                latency: p.enqueued.elapsed(),
+                                batch_images: 0,
+                                shard,
+                                deadline_met: false,
+                                error: Some(ServeError::ShardUnavailable),
+                            })
+                            .ok();
+                    }
+                    // dead-letter: racing submissions fail fast instead
+                    // of hanging their clients (skipped when shutdown
+                    // already arrived — nothing more can be sent)
+                    while !done {
+                        match rx.recv() {
+                            Ok(Msg::Req(a)) => {
+                                depth.fetch_sub(a.images,
+                                                Ordering::Relaxed);
+                                report.requests += 1;
+                                report.images += a.images;
+                                report.requests_failed += 1;
+                                a.reply
+                                    .send(Completion {
+                                        id: a.id,
+                                        images: a.images,
+                                        latency: a.enqueued.elapsed(),
+                                        batch_images: 0,
+                                        shard,
+                                        deadline_met: false,
+                                        error: Some(
+                                            ServeError::ShardUnavailable),
+                                    })
+                                    .ok();
+                            }
+                            Ok(Msg::Weights { .. }) => {}
+                            Ok(Msg::Shutdown) | Err(_) => break,
+                        }
+                    }
+                    break;
+                }
+                // ---- supervised restart -----------------------------
+                // rebuild every piece of flush-local state the panic
+                // could have left inconsistent (workspace scratch,
+                // checked-out staging buffers, half-built spectra);
+                // the batcher and pending queue were outside the
+                // supervised region and stay live
+                report.restarts += 1;
+                my_health.record_restart();
+                report.faults_injected += stage.faults_injected;
+                spectra.clear();
+                ws = Workspace::new();
+                stage = BufferPool::new();
+                if let Some(f) = &faults {
+                    stage.set_faults(f.clone(), Some(shard));
+                }
+                let backoff = restart_backoff
+                    * (1u32 << (consecutive.min(6) as u32 - 1));
+                std::thread::sleep(
+                    backoff.min(Duration::from_millis(500)));
                 continue;
-            };
-            pending[pos].remaining =
-                pending[pos].remaining.saturating_sub(*n);
-            if pending[pos].remaining > 0 {
-                continue; // split request: more parts ride later batches
             }
-            let p = pending.remove(pos);
-            let latency = now.duration_since(p.enqueued);
-            let met = now <= p.sla;
-            if !met {
-                report.sla_miss += 1;
-            }
-            report.latency.record(latency.as_secs_f64());
-            p.reply
-                .send(Completion {
-                    id: p.id,
-                    images: p.total,
-                    latency,
-                    batch_images: imgs,
-                    shard,
-                    deadline_met: met,
-                })
-                .ok();
         }
     }
     report.flushes_full = batcher.flushes_full;
     report.flushes_timeout = batcher.flushes_timeout;
     report.flushes_drain = batcher.flushes_drain;
+    // SpectrumCache::clear keeps its counters across supervised
+    // restarts, so plain assignment still accounts for pre-crash work
     report.spectra_hits = spectra.hits;
     report.spectra_misses = spectra.misses;
     report.spectra_invalidated = spectra.invalidated;
+    report.faults_injected += stage.faults_injected;
     if report.launches > 0 {
         report.batch_fill = fill_sum / report.launches as f64;
     }
@@ -815,22 +1303,45 @@ fn launch_pjrt(rt: &Runtime, artifact: &str, p: &ConvProblem,
 /// (allocation-free after warmup); the frequency engines also write
 /// their output through the pool, while the time-domain engines
 /// allocate their result by API design (no redundant pooled copy is
-/// layered on top). Returns the weight-FFT time the launch actually
-/// spent when the flush served a frequency strategy from the spectrum
-/// cache (`Some(ZERO)` on a hit — the steady state), `None` otherwise.
+/// layered on top).
+///
+/// Degradation ladder: a problem inside a demotion cooldown serves the
+/// direct fallback instead of its tuned frequency strategy; a
+/// frequency flush whose output scans non-finite demotes the problem
+/// (cooldown keyed batch-size-normalized, `s = 0`) and re-serves the
+/// flush on direct. The returned [`FlushOutcome`] carries the
+/// weight-FFT time actually spent (`Some(ZERO)` on a spectrum hit —
+/// the steady state), the degraded/launch-error flags, and any
+/// scripted `nonfinite` faults injected.
 #[allow(clippy::too_many_arguments)]
 fn launch_host(cache: &StrategyCache, force: Option<Strategy>, pass: Pass,
                p: &ConvProblem, imgs: usize, weights: &[f32],
                version: u64, spectra: &mut SpectrumCache, rng: &mut Rng,
-               stage: &mut BufferPool, ws: &mut Workspace)
-               -> Option<Duration> {
+               stage: &mut BufferPool, ws: &mut Workspace,
+               faults: Option<&FaultPlan>, shard: usize,
+               cooldown: Duration)
+               -> FlushOutcome {
     let q = ConvProblem { s: imgs, ..*p };
-    let choice = match force {
+    // demotion is keyed batch-size-normalized (s = 0) so one bad
+    // output covers every flush shape of the problem at once
+    let dkey = ConvProblem { s: 0, ..*p };
+    let mut outcome = FlushOutcome { wfft: None, degraded: false,
+                                     launch_error: false, injected: 0 };
+    let mut choice = match force {
         // deterministic probe: serve the forced strategy at its default
         // basis without consulting (or populating) the tuner
         Some(strategy) => Choice { strategy, n_fft: None, seconds: 0.0 },
         None => cache.ensure(&q, pass),
     };
+    let fallback =
+        Choice { strategy: Strategy::Direct, n_fft: None, seconds: 0.0 };
+    let frequency = matches!(
+        choice.strategy,
+        Strategy::VendorFft | Strategy::Fbfft | Strategy::FbfftScalar);
+    if frequency && cache.is_demoted(&dkey, pass) {
+        choice = fallback;
+        outcome.degraded = true;
+    }
     // the "payload": a fresh synthetic operand per flush
     let a_len = match pass {
         Pass::Fprop => q.input_len(),
@@ -840,22 +1351,64 @@ fn launch_host(cache: &StrategyCache, force: Option<Strategy>, pass: Pass,
     for v in a.iter_mut() {
         *v = rng.normal();
     }
-    let wfft = match pass {
+    if frequency && !outcome.degraded {
+        if let Some(plan) = faults {
+            if plan.fire(FaultKind::NonFinite, Some(shard)) {
+                outcome.injected += 1;
+                a[0] = f32::NAN;
+            }
+        }
+    }
+    match pass {
         Pass::AccGrad => {
             // accGrad pairs the gradient with an activation, not weights
             let mut b = stage.take_raw("serve.b", q.input_len());
             for v in b.iter_mut() {
                 *v = rng.normal();
             }
-            run_strategy(&choice, &q, pass, &a, &b, None, stage, ws);
+            let (_, finite) =
+                run_strategy(&choice, &q, pass, &a, &b, None, stage, ws);
+            if !finite {
+                cache.demote(&dkey, pass, Instant::now() + cooldown);
+                eprintln!("serve: non-finite {:?} output on shard \
+                           {shard}; demoting to direct",
+                          choice.strategy);
+                for v in a.iter_mut() {
+                    *v = rng.normal();
+                }
+                run_strategy(&fallback, &q, pass, &a, &b, None, stage,
+                             ws);
+                outcome.degraded = true;
+                outcome.launch_error = true;
+            }
             stage.put("serve.b", b);
-            None
         }
-        _ => run_strategy(&choice, &q, pass, &a, weights,
-                          Some((spectra, version)), stage, ws),
-    };
+        _ => {
+            let (wfft, finite) =
+                run_strategy(&choice, &q, pass, &a, weights,
+                             Some((spectra, version)), stage, ws);
+            if !finite {
+                cache.demote(&dkey, pass, Instant::now() + cooldown);
+                eprintln!("serve: non-finite {:?} output on shard \
+                           {shard}; demoting to direct",
+                          choice.strategy);
+                // re-serve the flush on the always-correct path with a
+                // regenerated operand (the bad values must not leak
+                // into the fallback result)
+                for v in a.iter_mut() {
+                    *v = rng.normal();
+                }
+                run_strategy(&fallback, &q, pass, &a, weights, None,
+                             stage, ws);
+                outcome.degraded = true;
+                outcome.launch_error = true;
+            } else {
+                outcome.wfft = wfft;
+            }
+        }
+    }
     stage.put("serve.a", a);
-    wfft
+    outcome
 }
 
 /// Dispatch one pass through the tuned strategy. `a`/`b` follow each
@@ -864,12 +1417,15 @@ fn launch_host(cache: &StrategyCache, force: Option<Strategy>, pass: Pass,
 /// weight tensor the caller passes the shard's spectrum cache and the
 /// live `weights_version`; frequency strategies then serve from the
 /// cached spectrum — skipping the weight pad+FFT on a hit — and the
-/// return value is the weight-FFT time actually spent.
+/// `Option<Duration>` is the weight-FFT time actually spent. The bool
+/// is the output-health verdict: frequency outputs are scanned for
+/// non-finite values (the paper's frequency path is where numerical
+/// blowups surface); the time-domain engines always report healthy.
 #[allow(clippy::too_many_arguments)]
 fn run_strategy(choice: &Choice, q: &ConvProblem, pass: Pass, a: &[f32],
                 b: &[f32], spectra: Option<(&mut SpectrumCache, u64)>,
                 stage: &mut BufferPool, ws: &mut Workspace)
-                -> Option<Duration> {
+                -> (Option<Duration>, bool) {
     match choice.strategy {
         Strategy::VendorFft | Strategy::Fbfft | Strategy::FbfftScalar => {
             let out_len = match pass {
@@ -913,8 +1469,9 @@ fn run_strategy(choice: &Choice, q: &ConvProblem, pass: Pass, a: &[f32],
                     None
                 }
             };
+            let finite = out.iter().all(|v| v.is_finite());
             stage.put("serve.out", out);
-            wfft
+            (wfft, finite)
         }
         // the vendor black box has no host twin; direct is its analogue
         Strategy::Direct | Strategy::Vendor => {
@@ -923,7 +1480,7 @@ fn run_strategy(choice: &Choice, q: &ConvProblem, pass: Pass, a: &[f32],
                 Pass::Bprop => direct::bprop(q, a, b),
                 Pass::AccGrad => direct::accgrad(q, a, b),
             };
-            None
+            (None, true)
         }
         Strategy::Im2col => {
             let _ = match pass {
@@ -931,7 +1488,7 @@ fn run_strategy(choice: &Choice, q: &ConvProblem, pass: Pass, a: &[f32],
                 Pass::Bprop => im2col::bprop(q, a, b),
                 Pass::AccGrad => im2col::accgrad(q, a, b),
             };
-            None
+            (None, true)
         }
         Strategy::FbfftTiled(d) => {
             let _ = match pass {
@@ -939,7 +1496,7 @@ fn run_strategy(choice: &Choice, q: &ConvProblem, pass: Pass, a: &[f32],
                 Pass::Bprop => tiled::bprop(q, a, b, d),
                 Pass::AccGrad => tiled::accgrad(q, a, b, d),
             };
-            None
+            (None, true)
         }
     }
 }
@@ -987,7 +1544,7 @@ impl ConvService {
 
     pub fn submit(&self, req: ServeRequest) {
         let accepted = self.engine.submit(req);
-        debug_assert!(accepted, "legacy service never rejects");
+        debug_assert!(accepted.is_ok(), "legacy service never rejects");
     }
 
     /// Flush outstanding work and join the worker.
@@ -1036,6 +1593,8 @@ mod tests {
         let r = EngineReport {
             shards: vec![a, b],
             rejected_deadline: 4,
+            rejected_unavailable: 0,
+            faults_injected: 0,
             cache: CacheStats::default(),
             capacity: 8,
             pass: Pass::Fprop,
@@ -1073,14 +1632,15 @@ mod tests {
             deadline: Some(expired),
             reply: tx.clone(),
         });
-        assert!(!accepted, "expired deadline must be rejected");
+        assert_eq!(accepted, Err(SubmitError::DeadlineUnmeetable),
+                   "expired deadline must be rejected");
         let accepted = engine.submit(ServeRequest {
             id: 2,
             images: 1,
             deadline: None,
             reply: tx,
         });
-        assert!(accepted);
+        assert!(accepted.is_ok());
         let c = rx.recv_timeout(Duration::from_secs(30))
             .expect("accepted request completes");
         assert_eq!(c.id, 2);

@@ -223,7 +223,7 @@ fn serve_demo(a: &Args) -> anyhow::Result<()> {
         if engine.submit(ServeRequest { id: r.id,
                                         images: r.images.min(capacity),
                                         deadline: None,
-                                        reply: tx.clone() }) {
+                                        reply: tx.clone() }).is_ok() {
             accepted += 1;
         }
     }

@@ -3,13 +3,19 @@
 //! that same document — the JSON is built first and the table reads
 //! only it, so the two can never disagree (the `breakdown` pattern).
 //!
-//! Schema (version 2 — v1 plus the weight-spectrum cache fields):
+//! Schema (version 3 — v2 plus the supervision/fault-tolerance ledger:
+//! the per-shard `launches == full + timeout + drain` invariant is
+//! joined by `completed + failed == requests`):
 //!
 //! ```text
-//! { "version": 2, "bench": "serve", "mode": "closed"|"open",
+//! { "version": 3, "bench": "serve", "mode": "closed"|"open",
 //!   "smoke": bool, "shards": N, "capacity": C, "pass": "fprop",
 //!   "requests": n, "images": n, "launches": n,
-//!   "rejected_deadline": n, "sla_miss": n, "launch_errors": n,
+//!   "completed": n, "requests_failed": n,       // ledger: == requests
+//!   "rejected_deadline": n, "rejected_unavailable": n,
+//!   "sla_miss": n, "launch_errors": n,
+//!   "shard_restarts": n, "degraded_flushes": n,
+//!   "faults_injected": n, "circuit_broken": n,  // shards tripped
 //!   "wall_s": s, "throughput_img_s": r, "batch_fill": f,
 //!   "busy_frac": f,
 //!   "weights_version": v,
@@ -17,15 +23,22 @@
 //!   "weight_fft_ns": n,       // total weight-FFT time over the run
 //!   "weight_fft_last_ns": n,  // most recent flush's weight-FFT time
 //!                             // (0 on a spectrum hit — the CI gate)
-//!   "cache": {"entries": n, "hits": n, "misses": n, "tunes": n},
+//!   "cache": {"entries": n, "hits": n, "misses": n, "tunes": n,
+//!             "load_warnings": n, "lock_recovered": n},
 //!   "aggregate": {"count","mean_ms","p50_ms","p95_ms","p99_ms","max_ms"},
 //!   "per_shard": [ {"shard","requests","images","launches",
+//!                   "completed","requests_failed","restarts",
+//!                   "degraded_flushes","faults_injected",
+//!                   "circuit_broken",
 //!                   "flushes_full","flushes_timeout","flushes_drain",
 //!                   "spectra_hits","spectra_misses",
 //!                   "spectra_invalidated","weight_fft_ns","batch_fill",
 //!                   "queue_depth_p50","queue_depth_max",
 //!                   "mean_ms","p50_ms","p95_ms","p99_ms","max_ms"} ] }
 //! ```
+//!
+//! Chaos runs (`--faults`, `FBFFT_FAULTS`) may also carry an
+//! `"overload"` block from the smoke-mode open-loop knee probe.
 
 use std::time::Duration;
 
@@ -69,6 +82,17 @@ pub fn serve_json(r: &EngineReport, mode: &str, smoke: bool,
                    Json::num(s.flushes_timeout as f64));
         row.insert("flushes_drain".into(),
                    Json::num(s.flushes_drain as f64));
+        row.insert("completed".into(),
+                   Json::num(s.requests_completed as f64));
+        row.insert("requests_failed".into(),
+                   Json::num(s.requests_failed as f64));
+        row.insert("restarts".into(), Json::num(s.restarts as f64));
+        row.insert("degraded_flushes".into(),
+                   Json::num(s.degraded_flushes as f64));
+        row.insert("faults_injected".into(),
+                   Json::num(s.faults_injected as f64));
+        row.insert("circuit_broken".into(),
+                   Json::num(if s.circuit_broken { 1.0 } else { 0.0 }));
         row.insert("spectra_hits".into(),
                    Json::num(s.spectra_hits as f64));
         row.insert("spectra_misses".into(),
@@ -84,7 +108,7 @@ pub fn serve_json(r: &EngineReport, mode: &str, smoke: bool,
     }
     let weight_fft = r.weight_fft();
     Json::obj(vec![
-        ("version", Json::num(2.0)),
+        ("version", Json::num(3.0)),
         ("bench", Json::str("serve")),
         ("mode", Json::str(mode)),
         ("smoke", Json::Bool(smoke)),
@@ -94,9 +118,17 @@ pub fn serve_json(r: &EngineReport, mode: &str, smoke: bool,
         ("requests", Json::num(r.requests() as f64)),
         ("images", Json::num(r.images() as f64)),
         ("launches", Json::num(r.launches() as f64)),
+        ("completed", Json::num(r.requests_completed() as f64)),
+        ("requests_failed", Json::num(r.requests_failed() as f64)),
         ("rejected_deadline", Json::num(r.rejected_deadline as f64)),
+        ("rejected_unavailable",
+         Json::num(r.rejected_unavailable as f64)),
         ("sla_miss", Json::num(r.sla_miss() as f64)),
         ("launch_errors", Json::num(r.launch_errors() as f64)),
+        ("shard_restarts", Json::num(r.shard_restarts() as f64)),
+        ("degraded_flushes", Json::num(r.degraded_flushes() as f64)),
+        ("faults_injected", Json::num(r.faults_injected as f64)),
+        ("circuit_broken", Json::num(r.circuit_broken() as f64)),
         ("wall_s", Json::num(wall_s)),
         ("throughput_img_s",
          Json::num(if wall_s > 0.0 {
@@ -124,6 +156,9 @@ pub fn serve_json(r: &EngineReport, mode: &str, smoke: bool,
             ("hits", Json::num(r.cache.hits as f64)),
             ("misses", Json::num(r.cache.misses as f64)),
             ("tunes", Json::num(r.cache.tunes as f64)),
+            ("load_warnings", Json::num(r.cache.load_warnings as f64)),
+            ("lock_recovered",
+             Json::num(r.cache.lock_recovered as f64)),
         ])),
         ("aggregate", summary_ms(&r.aggregate_latency())),
         ("per_shard", Json::Arr(per_shard)),
@@ -179,7 +214,10 @@ pub fn serve_table(j: &Json) -> String {
          rejected {}  sla_miss {}\n\
          strategy cache: {} entries, {} hits / {} misses, {} tunes\n\
          weight spectra: v{}, {} hits / {} misses, {} invalidated, \
-         weight-FFT {:.2} ms total ({:.0} ns last flush)\n",
+         weight-FFT {:.2} ms total ({:.0} ns last flush)\n\
+         supervision: {} completed / {} failed, {} restarts, \
+         {} degraded flushes, {} faults injected, \
+         {} circuit-broken\n",
         j.get("mode").and_then(Json::as_str).unwrap_or("?"),
         n(j, "shards"), n(j, "capacity"),
         j.get("pass").and_then(Json::as_str).unwrap_or("?"),
@@ -190,7 +228,10 @@ pub fn serve_table(j: &Json) -> String {
         cn("entries"), cn("hits"), cn("misses"), cn("tunes"),
         n(j, "weights_version"), n(j, "spectra_hits"),
         n(j, "spectra_misses"), n(j, "spectra_invalidated"),
-        g(j, "weight_fft_ns") / 1e6, g(j, "weight_fft_last_ns"))
+        g(j, "weight_fft_ns") / 1e6, g(j, "weight_fft_last_ns"),
+        n(j, "completed"), n(j, "requests_failed"),
+        n(j, "shard_restarts"), n(j, "degraded_flushes"),
+        n(j, "faults_injected"), n(j, "circuit_broken"))
 }
 
 #[cfg(test)]
@@ -215,6 +256,11 @@ mod tests {
             s.spectra_misses = 1;
             s.spectra_invalidated = i; // shard 1 saw one version bump
             s.weights_version = (i + 1) as u64;
+            s.requests_completed = 10 * (i + 1) - i;
+            s.requests_failed = i; // shard 1 failed one (panic)
+            s.restarts = i;
+            s.degraded_flushes = i;
+            s.faults_injected = i;
             // one miss paid the weight FFT, then four hits were free
             s.weight_fft.record(2e-3);
             for _ in 0..4 {
@@ -229,8 +275,10 @@ mod tests {
         EngineReport {
             shards,
             rejected_deadline: 1,
+            rejected_unavailable: 0,
+            faults_injected: 1,
             cache: CacheStats { entries: 3, hits: 40, misses: 5,
-                                tunes: 3 },
+                                tunes: 3, ..Default::default() },
             capacity: 8,
             pass: Pass::Fprop,
         }
@@ -241,11 +289,23 @@ mod tests {
         let r = sample_report();
         let j = serve_json(&r, "closed", true,
                            Duration::from_millis(500));
-        assert_eq!(j.get("version").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("version").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("requests").unwrap().as_usize(), Some(30));
         assert_eq!(j.get("images").unwrap().as_usize(), Some(60));
         assert_eq!(j.get("rejected_deadline").unwrap().as_usize(),
                    Some(1));
+        // the v3 ledger: completed + failed == requests
+        assert_eq!(j.get("completed").unwrap().as_usize(), Some(29));
+        assert_eq!(j.get("requests_failed").unwrap().as_usize(),
+                   Some(1));
+        assert_eq!(j.get("shard_restarts").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("degraded_flushes").unwrap().as_usize(),
+                   Some(1));
+        assert_eq!(j.get("faults_injected").unwrap().as_usize(),
+                   Some(1));
+        assert_eq!(j.get("circuit_broken").unwrap().as_usize(), Some(0));
+        assert_eq!(j.get("rejected_unavailable").unwrap().as_usize(),
+                   Some(0));
         // the spectrum-cache gate keys: totals over both shards, the
         // newest served weights version, and the per-flush probe value
         assert_eq!(j.get("spectra_hits").unwrap().as_usize(), Some(8));
@@ -273,10 +333,18 @@ mod tests {
             for k in ["p50_ms", "p99_ms", "batch_fill",
                       "queue_depth_max", "flushes_drain",
                       "spectra_hits", "spectra_misses",
-                      "spectra_invalidated", "weight_fft_ns"] {
+                      "spectra_invalidated", "weight_fft_ns",
+                      "completed", "requests_failed", "restarts",
+                      "degraded_flushes", "faults_injected",
+                      "circuit_broken"] {
                 assert!(s.get(k).and_then(Json::as_f64).is_some(),
                         "missing per-shard {k}");
             }
+        }
+        let cache = j.get("cache").unwrap();
+        for k in ["load_warnings", "lock_recovered"] {
+            assert!(cache.get(k).and_then(Json::as_usize).is_some(),
+                    "missing cache.{k}");
         }
         // throughput: 60 images / 0.5 s
         assert!((j.get("throughput_img_s").unwrap().as_f64().unwrap()

@@ -1,0 +1,284 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] is a small, seeded script of failures — "shard 1's
+//! third flush panics", "the tenth staging-buffer checkout fails", "the
+//! next strategy-cache load reads corrupt bytes" — threaded through the
+//! shard workers, the [`BufferPool`](crate::coordinator::BufferPool)
+//! and the cache load paths so every recovery path in the supervision
+//! layer is exercised by *reproducible* tests and a CI chaos gate, not
+//! by hoping production fails interestingly.
+//!
+//! Plans come from config ([`EngineConfig::faults`]
+//! (crate::coordinator::EngineConfig)) or from the environment:
+//!
+//! ```text
+//! FBFFT_FAULTS="shard1:panic@flush3,shard0:alloc_fail@10,corrupt_load@1"
+//! ```
+//!
+//! Grammar: comma-separated `[shard<i>:]<kind>@<occurrence>`, where
+//! `<kind>` is one of `panic`, `nonfinite`, `alloc_fail`,
+//! `corrupt_load` and `<occurrence>` is the 1-based index of the event
+//! within the kind's scope (an optional alphabetic label such as
+//! `flush3` or `take10` is accepted and ignored — only the digits
+//! count). Scopes: `panic` counts flushes per shard, `nonfinite`
+//! counts frequency-strategy flushes per shard, `alloc_fail` counts
+//! staging-pool checkouts per shard, `corrupt_load` counts
+//! strategy-cache load attempts (engine-wide). Each spec fires at most
+//! once; an unscoped spec fires on the first shard whose own counter
+//! reaches the occurrence.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// The failure classes the serving stack knows how to survive.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FaultKind {
+    /// Panic inside a shard worker's flush (supervised by
+    /// `catch_unwind`: the batch fails, the shard restarts).
+    Panic,
+    /// Plant a non-finite value into a frequency-strategy flush so the
+    /// output scan trips and the problem demotes to the direct path.
+    NonFinite,
+    /// Fail a staging [`BufferPool`](crate::coordinator::BufferPool)
+    /// checkout (panics inside the supervised flush region).
+    AllocFail,
+    /// Treat the next persisted strategy-cache file as corrupt, forcing
+    /// the tolerant-load cold-start path.
+    CorruptLoad,
+}
+
+impl FaultKind {
+    fn parse(s: &str) -> Option<FaultKind> {
+        match s {
+            "panic" => Some(FaultKind::Panic),
+            "nonfinite" => Some(FaultKind::NonFinite),
+            "alloc_fail" => Some(FaultKind::AllocFail),
+            "corrupt_load" => Some(FaultKind::CorruptLoad),
+            _ => None,
+        }
+    }
+
+    pub fn tag(&self) -> &'static str {
+        match self {
+            FaultKind::Panic => "panic",
+            FaultKind::NonFinite => "nonfinite",
+            FaultKind::AllocFail => "alloc_fail",
+            FaultKind::CorruptLoad => "corrupt_load",
+        }
+    }
+}
+
+/// One scripted failure: fire `kind` on occurrence `at` (1-based)
+/// within `shard`'s scope (`None` = any shard / engine-wide).
+#[derive(Debug)]
+struct FaultSpec {
+    shard: Option<usize>,
+    kind: FaultKind,
+    at: usize,
+    fired: AtomicBool,
+}
+
+/// A deterministic script of failures, shared (`Arc`) between the
+/// engine, its shard workers and their staging pools. Thread-safe;
+/// every spec fires at most once.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    specs: Vec<FaultSpec>,
+    /// occurrence counters per (kind, scope) — bumped by every `fire`
+    /// probe so the 1-based spec indices are deterministic per scope
+    counts: Mutex<HashMap<(FaultKind, Option<usize>), usize>>,
+    injected: AtomicUsize,
+}
+
+impl FaultPlan {
+    /// Parse a comma-separated fault script (see module docs for the
+    /// grammar). Errors name the offending entry.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut specs = Vec::new();
+        for entry in spec.split(',') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            specs.push(Self::parse_entry(entry)?);
+        }
+        if specs.is_empty() {
+            return Err(format!("empty fault spec {spec:?}"));
+        }
+        Ok(FaultPlan { specs, ..Default::default() })
+    }
+
+    fn parse_entry(entry: &str) -> Result<FaultSpec, String> {
+        let (scope, rest) = match entry.split_once(':') {
+            Some((s, rest)) => (Some(s), rest),
+            None => (None, entry),
+        };
+        let shard = match scope {
+            Some(s) => {
+                let idx = s.strip_prefix("shard").ok_or_else(|| {
+                    format!("bad scope {s:?} in {entry:?} \
+                             (want shard<N>)")
+                })?;
+                Some(idx.parse::<usize>().map_err(|_| {
+                    format!("bad shard index {idx:?} in {entry:?}")
+                })?)
+            }
+            None => None,
+        };
+        let (kind, occ) = rest.split_once('@').ok_or_else(|| {
+            format!("missing @occurrence in {entry:?}")
+        })?;
+        let kind = FaultKind::parse(kind).ok_or_else(|| {
+            format!("unknown fault kind {kind:?} in {entry:?} (want \
+                     panic|nonfinite|alloc_fail|corrupt_load)")
+        })?;
+        // accept a labelled occurrence ("flush3", "take10") — only the
+        // trailing digits carry meaning
+        let digits =
+            occ.trim_start_matches(|c: char| c.is_ascii_alphabetic());
+        let at = digits.parse::<usize>().map_err(|_| {
+            format!("bad occurrence {occ:?} in {entry:?}")
+        })?;
+        if at == 0 {
+            return Err(format!("occurrence in {entry:?} is 1-based"));
+        }
+        Ok(FaultSpec { shard, kind, at,
+                       fired: AtomicBool::new(false) })
+    }
+
+    /// Read `FBFFT_FAULTS` from the environment. An unset or empty
+    /// variable is `None`; a malformed script is reported and ignored
+    /// (a typo'd chaos knob must never take serving down by itself).
+    pub fn from_env() -> Option<Arc<FaultPlan>> {
+        let spec = std::env::var("FBFFT_FAULTS").ok()?;
+        let spec = spec.trim().to_string();
+        if spec.is_empty() {
+            return None;
+        }
+        match FaultPlan::parse(&spec) {
+            Ok(p) => Some(Arc::new(p)),
+            Err(e) => {
+                eprintln!("serve: FBFFT_FAULTS ignored: {e}");
+                None
+            }
+        }
+    }
+
+    /// Count one occurrence of `kind` in `shard`'s scope and report
+    /// whether a scripted fault fires here. A spec fires exactly once
+    /// (first matching probe wins); unmatched probes only advance the
+    /// scope counter.
+    pub fn fire(&self, kind: FaultKind, shard: Option<usize>) -> bool {
+        let occurrence = {
+            let mut counts = self
+                .counts
+                .lock()
+                .unwrap_or_else(|e| e.into_inner());
+            let c = counts.entry((kind, shard)).or_insert(0);
+            *c += 1;
+            *c
+        };
+        for spec in &self.specs {
+            if spec.kind != kind || spec.at != occurrence {
+                continue;
+            }
+            if let Some(want) = spec.shard {
+                if shard != Some(want) {
+                    continue;
+                }
+            }
+            if spec.fired.swap(true, Ordering::AcqRel) {
+                continue;
+            }
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        false
+    }
+
+    /// Faults actually injected so far (the CI chaos gate's
+    /// `faults_injected` source of truth).
+    pub fn injected(&self) -> usize {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Scripted specs in the plan.
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+
+    /// Specs that have not fired yet (a finished chaos run should
+    /// usually report 0 here — anything left means the script asked
+    /// for events the run never produced).
+    pub fn armed(&self) -> usize {
+        self.specs
+            .iter()
+            .filter(|s| !s.fired.load(Ordering::Acquire))
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_issue_grammar() {
+        let p = FaultPlan::parse(
+            "shard1:panic@flush3, alloc_fail@10,corrupt_load@1")
+            .unwrap();
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.injected(), 0);
+        assert_eq!(p.armed(), 3);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in ["", "panic", "panic@zero", "panic@0",
+                    "worker1:panic@1", "explode@1", "shardx:panic@1"] {
+            assert!(FaultPlan::parse(bad).is_err(), "{bad:?} accepted");
+        }
+    }
+
+    #[test]
+    fn fires_exactly_once_at_the_scripted_occurrence() {
+        let p = FaultPlan::parse("shard0:panic@2").unwrap();
+        assert!(!p.fire(FaultKind::Panic, Some(0)), "occurrence 1");
+        assert!(p.fire(FaultKind::Panic, Some(0)), "occurrence 2 fires");
+        assert!(!p.fire(FaultKind::Panic, Some(0)), "fired specs stay off");
+        assert_eq!(p.injected(), 1);
+        assert_eq!(p.armed(), 0);
+    }
+
+    #[test]
+    fn shard_scope_isolates_counters() {
+        let p = FaultPlan::parse("shard1:alloc_fail@1").unwrap();
+        assert!(!p.fire(FaultKind::AllocFail, Some(0)),
+                "shard 0 never matches a shard-1 spec");
+        assert!(!p.fire(FaultKind::AllocFail, Some(0)));
+        assert!(p.fire(FaultKind::AllocFail, Some(1)),
+                "shard 1's own first occurrence fires");
+        assert_eq!(p.injected(), 1);
+    }
+
+    #[test]
+    fn kinds_do_not_cross_trigger() {
+        let p = FaultPlan::parse("shard0:panic@1").unwrap();
+        assert!(!p.fire(FaultKind::AllocFail, Some(0)));
+        assert!(!p.fire(FaultKind::NonFinite, Some(0)));
+        assert!(p.fire(FaultKind::Panic, Some(0)));
+    }
+
+    #[test]
+    fn unscoped_spec_fires_on_first_scope_to_reach_it() {
+        let p = FaultPlan::parse("corrupt_load@2").unwrap();
+        assert!(!p.fire(FaultKind::CorruptLoad, None));
+        assert!(p.fire(FaultKind::CorruptLoad, None));
+        assert_eq!(p.injected(), 1);
+    }
+}

@@ -14,17 +14,22 @@
 //! * [`matrix`] — the conformance runner: every {engine × pass} pair
 //!   (direct, im2col, vendor-FFT, fbfft, tiled — all three passes each)
 //!   against the oracle and against each other, rendered as a per-cell
-//!   max-abs / max-ULP table.
+//!   max-abs / max-ULP table;
+//! * [`faults`] — deterministic fault injection ([`FaultPlan`],
+//!   `FBFFT_FAULTS`) driving the serving layer's supervision and
+//!   degradation paths in reproducible chaos tests.
 //!
 //! `rust/tests/conformance.rs` runs the full matrix in CI; the engines'
 //! own unit tests reuse the oracle and [`assert_close`].
 
 pub mod cases;
+pub mod faults;
 pub mod matrix;
 pub mod oracle;
 pub mod tolerance;
 
 pub use cases::{conformance_suite, ConformanceCase};
+pub use faults::{FaultKind, FaultPlan};
 pub use matrix::{run_case, run_suite, Engine, SuiteReport};
 
 /// Assert two f32 slices agree elementwise within `tol`, with an

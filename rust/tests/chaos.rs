@@ -1,0 +1,372 @@
+//! Chaos tier: deterministic fault injection against the sharded
+//! serving engine. Every test scripts a `FaultPlan` (the same hook the
+//! CI chaos-smoke bench drives via `--faults`) and asserts the ISSUE 7
+//! robustness contract: exactly-once completions (success **or**
+//! error), supervised restarts with a circuit breaker, graceful
+//! degradation to the direct fallback, and cold-start recovery from a
+//! corrupt persisted cache. Host backend only — no artifacts needed.
+
+use std::collections::HashSet;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fbfft_repro::conv::ConvProblem;
+use fbfft_repro::coordinator::batcher::BatcherConfig;
+use fbfft_repro::coordinator::service::{Completion, EngineConfig,
+                                        ServeEngine, ServeError,
+                                        ServeRequest, SubmitError};
+use fbfft_repro::coordinator::Strategy;
+use fbfft_repro::testkit::faults::FaultPlan;
+
+fn cfg(cap: usize, wait_ms: u64) -> BatcherConfig {
+    BatcherConfig { capacity: cap,
+                    max_wait: Duration::from_millis(wait_ms) }
+}
+
+fn plan(spec: &str) -> Option<Arc<FaultPlan>> {
+    Some(Arc::new(FaultPlan::parse(spec).expect("fault spec parses")))
+}
+
+/// Wait (bounded) for the supervisor to flip a shard's alive bit.
+fn await_dead(engine: &ServeEngine, shard: usize) {
+    let t0 = Instant::now();
+    while engine.health()[shard].is_alive() {
+        assert!(t0.elapsed() < Duration::from_secs(10),
+                "shard {shard} never circuit-broke");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// ISSUE 7 acceptance core: a scripted panic mid-flush fails exactly
+/// the in-flight batch (error completions, never silence), the shard
+/// restarts, and every admitted request still resolves exactly once.
+#[test]
+fn injected_panic_mid_flush_preserves_exactly_once() {
+    const REQUESTS: usize = 40;
+    let p = ConvProblem::square(4, 1, 1, 8, 3);
+    let engine = ServeEngine::start_host(
+        p,
+        EngineConfig {
+            shards: 2,
+            batcher: cfg(4, 1),
+            default_deadline: Duration::from_secs(60),
+            warm: false,
+            restart_backoff: Duration::from_millis(1),
+            faults: plan("shard0:panic@1"),
+            ..Default::default()
+        })
+        .unwrap();
+    let (tx, rx) = mpsc::channel::<Completion>();
+    for id in 0..REQUESTS as u64 {
+        assert!(engine
+            .submit(ServeRequest {
+                id,
+                images: 1 + (id % 3) as usize,
+                deadline: None,
+                reply: tx.clone(),
+            })
+            .is_ok());
+    }
+    drop(tx);
+    let mut seen = HashSet::new();
+    let mut failed = 0usize;
+    for _ in 0..REQUESTS {
+        let c = rx.recv_timeout(Duration::from_secs(30))
+            .expect("every admitted request completes, success or error");
+        assert!(seen.insert(c.id), "duplicate completion {}", c.id);
+        if let Some(err) = c.error {
+            assert_eq!(err, ServeError::ShardPanic);
+            assert!(!c.deadline_met);
+            failed += 1;
+        }
+    }
+    assert_eq!(seen.len(), REQUESTS);
+    assert!(failed >= 1, "the panicked flush must fail its batch");
+    assert!(rx.recv_timeout(Duration::from_millis(50)).is_err(),
+            "no extra completions after exactly-once delivery");
+
+    let report = engine.shutdown();
+    assert_eq!(report.requests(), REQUESTS);
+    assert_eq!(report.requests_failed(), failed);
+    assert_eq!(report.requests_completed(), REQUESTS - failed);
+    assert_eq!(report.shard_restarts(), 1, "one panic, one respawn");
+    assert!(report.faults_injected >= 1);
+    assert_eq!(report.circuit_broken(), 0,
+               "a single panic must not trip the breaker");
+    for s in &report.shards {
+        assert_eq!(s.requests_completed + s.requests_failed, s.requests,
+                   "shard {}: completed+failed must equal requests",
+                   s.shard);
+        assert_eq!(s.launches,
+                   s.flushes_full + s.flushes_timeout + s.flushes_drain,
+                   "shard {}: flush ledger stays balanced under faults",
+                   s.shard);
+    }
+    let s0 = &report.shards[0];
+    assert_eq!(s0.restarts, 1);
+    assert!(s0.requests_failed >= 1);
+    assert!(s0.last_error.as_deref().unwrap_or("")
+              .contains("injected shard panic"),
+            "last_error records the panic payload: {:?}", s0.last_error);
+}
+
+/// Two consecutive scripted panics trip the circuit breaker: the shard
+/// is marked dead, its queue is drained with error completions, and the
+/// three survivors keep serving within SLA.
+#[test]
+fn circuit_breaker_reroutes_to_surviving_shards() {
+    const CAP: usize = 4;
+    let p = ConvProblem::square(CAP, 1, 1, 8, 3);
+    let engine = ServeEngine::start_host(
+        p,
+        EngineConfig {
+            shards: 4,
+            batcher: cfg(CAP, 1),
+            default_deadline: Duration::from_secs(60),
+            warm: false,
+            restart_backoff: Duration::from_millis(1),
+            max_consecutive_failures: 2,
+            faults: plan("shard0:panic@1,shard0:panic@2"),
+            ..Default::default()
+        })
+        .unwrap();
+    let (tx, rx) = mpsc::channel::<Completion>();
+    // serialized full-capacity requests: each flushes alone and the
+    // rotating least-loaded tie-break walks the shards round-robin, so
+    // shard 0 sees its two scripted panics within the first rounds
+    let serve_one = |id: u64| -> Completion {
+        assert!(engine
+            .submit(ServeRequest {
+                id,
+                images: CAP,
+                deadline: None,
+                reply: tx.clone(),
+            })
+            .is_ok(), "survivors keep the engine available");
+        rx.recv_timeout(Duration::from_secs(30))
+            .expect("request resolves")
+    };
+    let mut failed = 0usize;
+    for id in 0..8u64 {
+        let c = serve_one(id);
+        if c.error.is_some() {
+            assert_eq!(c.error, Some(ServeError::ShardPanic));
+            failed += 1;
+        }
+    }
+    assert_eq!(failed, 2, "both scripted panics fail their flush");
+    await_dead(&engine, 0);
+    assert!(!engine.health()[0].is_alive());
+    assert_eq!(engine.health()[0].restarts(), 1,
+               "first panic respawns, second trips the breaker");
+    // post-break traffic: only survivors, all within the (generous) SLA
+    for id in 100..112u64 {
+        let c = serve_one(id);
+        assert!(c.error.is_none(), "survivors serve cleanly");
+        assert!(c.shard != 0, "no traffic to the dead shard");
+        assert!(c.deadline_met, "survivors meet the SLA");
+    }
+    drop(tx);
+
+    let report = engine.shutdown();
+    assert_eq!(report.requests(), 20);
+    assert_eq!(report.requests_failed(), 2);
+    assert_eq!(report.requests_completed(), 18);
+    assert_eq!(report.circuit_broken(), 1);
+    assert_eq!(report.faults_injected, 2);
+    let s0 = &report.shards[0];
+    assert!(s0.circuit_broken, "shard 0 tripped the breaker");
+    assert_eq!(s0.restarts, 1);
+    assert_eq!(s0.requests_failed, 2);
+    for s in &report.shards {
+        assert_eq!(s.requests_completed + s.requests_failed, s.requests);
+        assert_eq!(s.launches,
+                   s.flushes_full + s.flushes_timeout + s.flushes_drain);
+    }
+}
+
+/// With every shard dead, `submit` returns `Err(Unavailable)` instead
+/// of panicking — the satellite contract replacing the old
+/// `.expect("serve shard worker gone")`.
+#[test]
+fn submit_reports_unavailable_when_all_shards_are_dead() {
+    const CAP: usize = 4;
+    let p = ConvProblem::square(CAP, 1, 1, 8, 3);
+    let engine = ServeEngine::start_host(
+        p,
+        EngineConfig {
+            shards: 1,
+            batcher: cfg(CAP, 1),
+            default_deadline: Duration::from_secs(60),
+            warm: false,
+            max_consecutive_failures: 1,
+            faults: plan("shard0:panic@1"),
+            ..Default::default()
+        })
+        .unwrap();
+    let (tx, rx) = mpsc::channel::<Completion>();
+    assert!(engine
+        .submit(ServeRequest { id: 1, images: CAP, deadline: None,
+                               reply: tx.clone() })
+        .is_ok());
+    let c = rx.recv_timeout(Duration::from_secs(30)).expect("resolves");
+    assert_eq!(c.error, Some(ServeError::ShardPanic));
+    await_dead(&engine, 0);
+    assert_eq!(engine
+                   .submit(ServeRequest { id: 2, images: 1,
+                                          deadline: None, reply: tx })
+                   .unwrap_err(),
+               SubmitError::Unavailable);
+    let report = engine.shutdown();
+    assert_eq!(report.rejected_unavailable, 1);
+    assert_eq!(report.requests(), 1);
+    assert_eq!(report.requests_failed(), 1);
+    assert_eq!(report.circuit_broken(), 1);
+    assert_eq!(report.shards[0].restarts, 0,
+               "max_consecutive_failures=1 breaks without a respawn");
+}
+
+/// A scripted staging-pool allocation failure unwinds the flush, fails
+/// the batch, and the respawned shard (fresh pool) serves on.
+#[test]
+fn alloc_failure_fails_batch_then_recovers() {
+    const CAP: usize = 4;
+    let p = ConvProblem::square(CAP, 1, 1, 8, 3);
+    let engine = ServeEngine::start_host(
+        p,
+        EngineConfig {
+            shards: 1,
+            batcher: cfg(CAP, 1),
+            default_deadline: Duration::from_secs(60),
+            warm: false,
+            restart_backoff: Duration::from_millis(1),
+            faults: plan("shard0:alloc_fail@1"),
+            ..Default::default()
+        })
+        .unwrap();
+    let (tx, rx) = mpsc::channel::<Completion>();
+    let serve_one = |id: u64| -> Completion {
+        assert!(engine
+            .submit(ServeRequest { id, images: CAP, deadline: None,
+                                   reply: tx.clone() })
+            .is_ok());
+        rx.recv_timeout(Duration::from_secs(30)).expect("resolves")
+    };
+    let first = serve_one(1);
+    assert_eq!(first.error, Some(ServeError::ShardPanic),
+               "the poisoned checkout fails its flush");
+    for id in 2..5u64 {
+        let c = serve_one(id);
+        assert!(c.error.is_none(), "fresh pool serves after respawn");
+    }
+    drop(tx);
+    let report = engine.shutdown();
+    let s0 = &report.shards[0];
+    assert_eq!(s0.restarts, 1);
+    assert_eq!(s0.requests_failed, 1);
+    assert_eq!(s0.requests_completed, 3);
+    assert!(report.faults_injected >= 1);
+    assert!(s0.last_error.as_deref().unwrap_or("")
+              .contains("allocation failure"),
+            "{:?}", s0.last_error);
+}
+
+/// A scripted `corrupt_load` truncates the persisted strategy cache on
+/// open: the engine must cold-start (warning counted, zero entries,
+/// re-tune) instead of refusing to boot.
+#[test]
+fn corrupt_cache_load_degrades_to_cold_start() {
+    let tmp = std::env::temp_dir().join("fbfft_chaos_tune_test.json");
+    std::fs::remove_file(&tmp).ok();
+    const CAP: usize = 4;
+    let p = ConvProblem::square(CAP, 1, 1, 8, 3);
+    let engine_cfg = |faults: Option<Arc<FaultPlan>>| EngineConfig {
+        shards: 1,
+        batcher: cfg(CAP, 1),
+        default_deadline: Duration::from_secs(60),
+        warm: false,
+        tuner_path: Some(tmp.clone()),
+        faults,
+        ..Default::default()
+    };
+    let serve_one = |engine: &ServeEngine| {
+        let (tx, rx) = mpsc::channel::<Completion>();
+        assert!(engine
+            .submit(ServeRequest { id: 7, images: CAP, deadline: None,
+                                   reply: tx })
+            .is_ok());
+        let c = rx.recv_timeout(Duration::from_secs(30))
+            .expect("request served");
+        assert!(c.error.is_none());
+    };
+    // seed a healthy persisted cache
+    let engine = ServeEngine::start_host(p, engine_cfg(None)).unwrap();
+    serve_one(&engine);
+    let seeded = engine.shutdown();
+    assert!(seeded.cache.tunes > 0);
+    assert!(tmp.exists(), "cache persisted");
+    // reopen with the load fault scripted: cold start, not a crash
+    let engine =
+        ServeEngine::start_host(p, engine_cfg(plan("corrupt_load@1")))
+            .unwrap();
+    assert!(engine.cache().stats().load_warnings >= 1,
+            "corrupted text must be counted, not expected away");
+    serve_one(&engine);
+    let report = engine.shutdown();
+    assert!(report.cache.load_warnings >= 1);
+    assert!(report.cache.tunes > 0,
+            "cold start re-tunes the served shape");
+    assert!(report.faults_injected >= 1);
+    std::fs::remove_file(&tmp).ok();
+}
+
+/// A scripted non-finite frequency-domain output demotes the problem's
+/// strategy to the direct fallback for the cooldown window: the client
+/// sees clean successes while the report counts degraded flushes.
+#[test]
+fn nonfinite_output_demotes_to_direct_fallback() {
+    const CAP: usize = 8;
+    let p = ConvProblem::square(CAP, 2, 2, 8, 3);
+    let engine = ServeEngine::start_host(
+        p,
+        EngineConfig {
+            shards: 1,
+            batcher: cfg(CAP, 1),
+            default_deadline: Duration::from_secs(60),
+            warm: false,
+            force_strategy: Some(Strategy::Fbfft),
+            degrade_cooldown: Duration::from_secs(30),
+            faults: plan("shard0:nonfinite@1"),
+            ..Default::default()
+        })
+        .unwrap();
+    let (tx, rx) = mpsc::channel::<Completion>();
+    for id in 0..2u64 {
+        // full-capacity requests flush immediately and alone; the
+        // blocking recv serializes the two flushes
+        assert!(engine
+            .submit(ServeRequest { id, images: CAP, deadline: None,
+                                   reply: tx.clone() })
+            .is_ok());
+        let c = rx.recv_timeout(Duration::from_secs(30))
+            .expect("flush completes");
+        assert!(c.error.is_none(),
+                "degradation is invisible to the client");
+    }
+    drop(tx);
+    let report = engine.shutdown();
+    let s0 = &report.shards[0];
+    assert_eq!(report.requests(), 2);
+    assert_eq!(report.requests_failed(), 0);
+    assert_eq!(s0.restarts, 0, "degradation never respawns the shard");
+    assert_eq!(report.degraded_flushes(), 2,
+               "the triggering flush plus the cooldown-window flush");
+    assert_eq!(report.launch_errors(), 1,
+               "only the triggering flush counts as a launch error");
+    assert_eq!(report.faults_injected, 1);
+    // the demoted window never touched the frequency path again
+    assert_eq!(report.spectra_misses(), 1,
+               "one weight FFT before the NaN was caught");
+    assert_eq!(report.spectra_hits(), 0);
+}

@@ -129,7 +129,7 @@ fn engine_persists_and_warm_loads_the_strategy_cache() {
                 images: 1 + id as usize,
                 deadline: None,
                 reply: tx,
-            }));
+            }).is_ok());
             rx.recv_timeout(Duration::from_secs(30))
                 .expect("request served");
         }
@@ -210,7 +210,7 @@ fn soak_four_shards_exactly_once_and_reported() {
                         deadline: None,
                         reply: tx.clone(),
                     });
-                    assert!(accepted, "soak load must not be shed");
+                    assert!(accepted.is_ok(), "soak load must not be shed");
                     submitted_images += images;
                 }
                 drop(tx);
@@ -269,6 +269,13 @@ fn soak_four_shards_exactly_once_and_reported() {
                    s.flushes_full + s.flushes_timeout + s.flushes_drain,
                    "shard {}: launches must equal full+timeout+drain",
                    s.shard);
+        // supervision ledger: every admitted request resolves
+        assert_eq!(s.requests_completed + s.requests_failed, s.requests,
+                   "shard {}: completed+failed must equal requests",
+                   s.shard);
+        assert_eq!(s.requests_failed, 0, "clean soak fails nothing");
+        assert_eq!(s.restarts, 0);
+        assert!(!s.circuit_broken);
     }
 
     // the reports::serve document carries the acceptance keys
@@ -286,22 +293,35 @@ fn soak_four_shards_exactly_once_and_reported() {
         for k in ["p50_ms", "p95_ms", "p99_ms", "batch_fill",
                   "queue_depth_max", "flushes_drain", "spectra_hits",
                   "spectra_misses", "spectra_invalidated",
-                  "weight_fft_ns"] {
+                  "weight_fft_ns", "completed", "requests_failed",
+                  "restarts", "degraded_flushes", "faults_injected",
+                  "circuit_broken"] {
             assert!(s.get(k).and_then(Json::as_f64).is_some(),
                     "per-shard key {k} missing");
         }
     }
     assert_eq!(j.get("rejected_deadline").and_then(Json::as_usize),
                Some(0));
-    // schema v2: top-level spectrum-cache accounting
-    assert_eq!(j.get("version").and_then(Json::as_f64), Some(2.0));
+    // schema v3: spectrum-cache plus supervision accounting
+    assert_eq!(j.get("version").and_then(Json::as_f64), Some(3.0));
     assert_eq!(j.get("weights_version").and_then(Json::as_usize),
                Some(1), "no bump issued during the soak");
     for k in ["spectra_hits", "spectra_misses", "spectra_invalidated",
-              "weight_fft_ns", "weight_fft_last_ns"] {
+              "weight_fft_ns", "weight_fft_last_ns", "completed",
+              "requests_failed", "rejected_unavailable",
+              "shard_restarts", "degraded_flushes", "faults_injected",
+              "circuit_broken"] {
         assert!(j.get(k).and_then(Json::as_f64).is_some(),
                 "top-level key {k} missing");
     }
+    // the fault-free soak is a clean run: ledger balances with zero
+    // failures and no supervision events
+    assert_eq!(j.get("completed").and_then(Json::as_usize),
+               Some(SUBMITTERS * PER_THREAD));
+    assert_eq!(j.get("requests_failed").and_then(Json::as_usize),
+               Some(0));
+    assert_eq!(j.get("shard_restarts").and_then(Json::as_usize),
+               Some(0));
 }
 
 /// Tentpole acceptance at the serving layer: two back-to-back
@@ -335,7 +355,7 @@ fn weight_bump_invalidates_spectra_without_downtime() {
             images: CAP,
             deadline: None,
             reply: tx.clone(),
-        }));
+        }).is_ok());
         let c = rx.recv_timeout(Duration::from_secs(30))
             .expect("flush completes");
         assert_eq!(c.id, id);
@@ -343,7 +363,7 @@ fn weight_bump_invalidates_spectra_without_downtime() {
     serve_one(0); // miss: builds the v1 spectrum
     serve_one(1); // hit: steady state
     let new_weights = Rng::new(0xB0B).normal_vec(p.weight_len());
-    assert_eq!(engine.update_weights(new_weights), 2,
+    assert_eq!(engine.update_weights(new_weights), Ok(2),
                "bump returns the freshly installed version");
     serve_one(2); // miss: v1 spectrum invalidated, v2 built
     serve_one(3); // hit again at v2
@@ -379,7 +399,7 @@ fn idle_engine_wakes_for_late_requests() {
     let (tx, rx) = mpsc::channel::<Completion>();
     assert!(engine.submit(ServeRequest { id: 9, images: 2,
                                          deadline: None,
-                                         reply: tx }));
+                                         reply: tx }).is_ok());
     let c = rx.recv_timeout(Duration::from_secs(30))
         .expect("late request served after idle park");
     assert_eq!(c.id, 9);
