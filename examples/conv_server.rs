@@ -20,9 +20,10 @@
 use std::time::{Duration, Instant};
 
 use fbfft_repro::conv::ConvProblem;
-use fbfft_repro::coordinator::batcher::BatcherConfig;
-use fbfft_repro::coordinator::service::{Completion, EngineConfig,
-                                        ServeEngine, ServeRequest};
+use fbfft_repro::coordinator::service::{Backend, Completion,
+                                        EngineConfig, ServeEngine,
+                                        ServeRequest};
+use fbfft_repro::coordinator::NetPlan;
 use fbfft_repro::reports;
 use fbfft_repro::trace;
 
@@ -35,12 +36,14 @@ fn main() -> anyhow::Result<()> {
         .nth(2)
         .and_then(|s| s.parse().ok())
         .unwrap_or(4);
-    let cfg = |capacity: usize| EngineConfig {
-        shards,
-        batcher: BatcherConfig { capacity,
-                                 max_wait: Duration::from_millis(2) },
-        default_deadline: Duration::from_millis(500),
-        ..Default::default()
+    let cfg = |capacity: usize| {
+        EngineConfig::builder()
+            .shards(shards)
+            .capacity(capacity)
+            .max_wait(Duration::from_millis(2))
+            .default_deadline(Duration::from_millis(500))
+            .build()
+            .expect("example config is valid")
     };
     let pj = ConvProblem::square(2, 4, 4, 16, 3);
     let (engine, capacity) = match ServeEngine::start_pjrt(
@@ -52,11 +55,23 @@ fn main() -> anyhow::Result<()> {
         Ok(e) => (e, pj.s),
         Err(e) => {
             eprintln!("note: PJRT serving unavailable ({e:#}); \
-                       using the host-engine backend");
-            let p = ConvProblem::square(8, 4, 4, 16, 3);
-            (ServeEngine::start_host(p, cfg(p.s))?, p.s)
+                       serving the AlexNet-style chain on the \
+                       host-engine backend");
+            let net = NetPlan::alexnet_small(8);
+            let cap = net.batch();
+            (ServeEngine::start(Backend::Host, net, cfg(cap))?, cap)
         }
     };
+    // the Ticket API covers the simple submit-and-wait case: one warm
+    // request up front, awaited synchronously
+    let warm = engine
+        .submit_images(1, None)
+        .map_err(|e| anyhow::anyhow!("warm request rejected: {e}"))?;
+    let c = warm
+        .wait_timeout(Duration::from_secs(10))
+        .map_err(|e| anyhow::anyhow!("warm request lost: {e}"))?;
+    println!("warm request {} served by shard {} in {:.2} ms",
+             c.id, c.shard, c.latency.as_secs_f64() * 1e3);
     println!("replaying {n} requests at ~400 req/s over {shards} shards...");
     let reqs = trace::request_trace(n, 400.0, 0x5E);
     let (tx, rx) = std::sync::mpsc::channel::<Completion>();

@@ -23,8 +23,15 @@
 //! is the knee — committed into the JSON as the `overload` block so
 //! the carrying capacity is a tracked artifact key.
 //!
-//! Flags: `--smoke`, `--mode open|closed`, `--requests N`, `--shards N`,
-//! `--clients N`, `--capacity N`, `--rate R` (open mode, req/s),
+//! The default workload is the Table-4 AlexNet-style layer chain
+//! (`--net alexnet`): every admitted image traverses all layers behind
+//! one admission decision, and the report's `states_per_sec` is the
+//! paper's whole-CNN rate. `--net single` reproduces the old one-layer
+//! workload.
+//!
+//! Flags: `--smoke`, `--mode open|closed`, `--net alexnet|single`,
+//! `--requests N`, `--shards N`, `--clients N`, `--capacity N`,
+//! `--rate R` (open mode, req/s),
 //! `--faults SPEC` (deterministic chaos script, see `testkit::faults`),
 //! `--out FILE` (default `BENCH_serve.json`).
 
@@ -34,11 +41,10 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use fbfft_repro::conv::ConvProblem;
-use fbfft_repro::coordinator::batcher::BatcherConfig;
-use fbfft_repro::coordinator::service::{Completion, EngineClient,
-                                        EngineConfig, ServeEngine,
-                                        ServeRequest};
-use fbfft_repro::coordinator::Strategy;
+use fbfft_repro::coordinator::service::{Backend, Completion,
+                                        EngineClient, EngineConfig,
+                                        ServeEngine, ServeRequest};
+use fbfft_repro::coordinator::{NetPlan, Strategy};
 use fbfft_repro::metrics::Histogram;
 use fbfft_repro::reports::{serve_json, serve_table};
 use fbfft_repro::testkit::faults::FaultPlan;
@@ -48,6 +54,7 @@ use fbfft_repro::util::{Json, Rng};
 struct BenchArgs {
     smoke: bool,
     mode: String,
+    net: String,
     requests: usize,
     shards: usize,
     clients: usize,
@@ -79,6 +86,7 @@ fn parse() -> BenchArgs {
     let mut a = BenchArgs {
         smoke,
         mode: val("--mode").unwrap_or_else(|| "closed".into()),
+        net: val("--net").unwrap_or_else(|| "alexnet".into()),
         requests: if smoke { 200 } else { 2000 },
         shards: 4,
         clients: if smoke { 8 } else { 16 },
@@ -100,8 +108,9 @@ fn parse() -> BenchArgs {
     a
 }
 
-/// Each client thread drives its own request stream: submit → await
-/// completion → submit, sharing one global request budget.
+/// Each client thread drives its own request stream through the
+/// [`Ticket`](fbfft_repro::coordinator::Ticket) API: submit → wait →
+/// submit, sharing one global request budget.
 fn run_closed(client: &EngineClient, a: &BenchArgs) -> usize {
     let budget = Arc::new(AtomicUsize::new(a.requests));
     let completed = Arc::new(AtomicUsize::new(0));
@@ -113,8 +122,6 @@ fn run_closed(client: &EngineClient, a: &BenchArgs) -> usize {
             let capacity = a.capacity;
             scope.spawn(move || {
                 let mut rng = Rng::new(0x10AD ^ c as u64);
-                let (tx, rx) = mpsc::channel::<Completion>();
-                let mut seq = 0u64;
                 loop {
                     let slot = budget.fetch_update(
                         Ordering::Relaxed, Ordering::Relaxed,
@@ -130,18 +137,16 @@ fn run_closed(client: &EngineClient, a: &BenchArgs) -> usize {
                         _ => 8,
                     }
                     .min(capacity);
-                    let id = ((c as u64) << 32) | seq;
-                    seq += 1;
-                    let ok = client.submit(ServeRequest {
-                        id,
-                        images,
-                        deadline: None,
-                        reply: tx.clone(),
-                    });
-                    if ok.is_err() {
-                        continue; // rejected: counted by the engine
-                    }
-                    if rx.recv_timeout(Duration::from_secs(60)).is_ok() {
+                    let ticket = match client.submit_images(images, None)
+                    {
+                        Ok(t) => t,
+                        // rejected: counted by the engine
+                        Err(_) => continue,
+                    };
+                    if ticket
+                        .wait_timeout(Duration::from_secs(60))
+                        .is_ok()
+                    {
                         completed.fetch_add(1, Ordering::Relaxed);
                     }
                 }
@@ -192,20 +197,18 @@ fn run_open(client: &EngineClient, a: &BenchArgs) -> usize {
 /// time — the `second_weight_fft_ns == 0` statement CI gates on.
 fn spectra_probe(a: &BenchArgs) -> Json {
     let problem = ConvProblem::square(a.capacity, 2, 2, 8, 3);
-    let engine = ServeEngine::start_host(
-        problem,
-        EngineConfig {
-            shards: 1,
-            batcher: BatcherConfig {
-                capacity: a.capacity,
-                max_wait: Duration::from_millis(2),
-            },
-            default_deadline: Duration::from_secs(30),
-            warm: false,
-            force_strategy: Some(Strategy::Fbfft),
-            ..Default::default()
-        })
-        .expect("probe engine starts");
+    let cfg = EngineConfig::builder()
+        .shards(1)
+        .capacity(a.capacity)
+        .max_wait(Duration::from_millis(2))
+        .default_deadline(Duration::from_secs(30))
+        .warm(false)
+        .force_strategy(Strategy::Fbfft)
+        .build()
+        .expect("probe config is valid");
+    let engine =
+        ServeEngine::start(Backend::Host, NetPlan::single(problem), cfg)
+            .expect("probe engine starts");
     let (tx, rx) = mpsc::channel::<Completion>();
     for flush in 0..2u64 {
         // a full-capacity request flushes immediately and alone, and
@@ -248,19 +251,17 @@ fn overload_knee(a: &BenchArgs) -> Json {
     let mut p99s = Vec::with_capacity(rates.len());
     for (i, rate) in rates.iter().enumerate() {
         let problem = ConvProblem::square(a.capacity, 2, 2, 8, 3);
-        let engine = ServeEngine::start_host(
-            problem,
-            EngineConfig {
-                shards: 2,
-                batcher: BatcherConfig {
-                    capacity: a.capacity,
-                    max_wait: Duration::from_millis(2),
-                },
-                default_deadline: Duration::from_secs(30),
-                warm: false,
-                force_strategy: Some(Strategy::Direct),
-                ..Default::default()
-            })
+        let cfg = EngineConfig::builder()
+            .shards(2)
+            .capacity(a.capacity)
+            .max_wait(Duration::from_millis(2))
+            .default_deadline(Duration::from_secs(30))
+            .warm(false)
+            .force_strategy(Strategy::Direct)
+            .build()
+            .expect("knee config is valid");
+        let engine = ServeEngine::start(Backend::Host,
+                                        NetPlan::single(problem), cfg)
             .expect("knee engine starts");
         let reqs = trace::request_trace(60, *rate, 0x5E ^ i as u64);
         let (tx, rx) = mpsc::channel::<Completion>();
@@ -313,31 +314,44 @@ fn main() {
     let a = parse();
     // host backend: the bench must run on any checkout (the PJRT path
     // is exercised by the artifact-gated integration tier)
-    let problem = if a.smoke {
-        ConvProblem::square(a.capacity, 2, 2, 8, 3)
-    } else {
-        ConvProblem::square(a.capacity, 8, 8, 16, 3)
-    };
-    let engine = ServeEngine::start_host(
-        problem,
-        EngineConfig {
-            shards: a.shards,
-            batcher: BatcherConfig {
-                capacity: a.capacity,
-                max_wait: Duration::from_millis(2),
-            },
-            // generous SLA: the bench measures latency, it does not
-            // shed load (zero rejections is a smoke-gate assertion)
-            default_deadline: Duration::from_secs(if a.smoke {
-                30
+    let net = match a.net.as_str() {
+        // the Table-4 whole-CNN regime: the AlexNet-style chain (the
+        // smoke tier runs the proportionally shrunk variant)
+        "alexnet" => {
+            if a.smoke {
+                NetPlan::alexnet_small(a.capacity)
             } else {
-                5
-            }),
-            // chaos script (--faults): only the main engine sees it —
-            // the probe engines below run fault-free
-            faults: a.faults.clone(),
-            ..Default::default()
-        })
+                NetPlan::alexnet(a.capacity)
+            }
+        }
+        "single" => NetPlan::single(if a.smoke {
+            ConvProblem::square(a.capacity, 2, 2, 8, 3)
+        } else {
+            ConvProblem::square(a.capacity, 8, 8, 16, 3)
+        }),
+        n => {
+            eprintln!("unknown --net {n} (alexnet|single)");
+            std::process::exit(2);
+        }
+    };
+    let mut builder = EngineConfig::builder()
+        .shards(a.shards)
+        .capacity(a.capacity)
+        .max_wait(Duration::from_millis(2))
+        // generous SLA: the bench measures latency, it does not shed
+        // load (zero rejections is a smoke-gate assertion)
+        .default_deadline(Duration::from_secs(if a.smoke {
+            30
+        } else {
+            5
+        }));
+    // chaos script (--faults): only the main engine sees it — the
+    // probe engines below run fault-free
+    if let Some(plan) = &a.faults {
+        builder = builder.faults(plan.clone());
+    }
+    let cfg = builder.build().expect("bench config is valid");
+    let engine = ServeEngine::start(Backend::Host, net, cfg)
         .expect("host serve engine starts");
     let client = engine.client();
     let t0 = Instant::now();
@@ -367,6 +381,7 @@ fn main() {
     };
     std::fs::write(&a.out, json.to_string())
         .unwrap_or_else(|e| panic!("write {}: {e}", a.out));
-    eprintln!("wrote {} (mode={}, smoke={})", a.out, a.mode, a.smoke);
+    eprintln!("wrote {} (mode={}, net={}, smoke={})", a.out, a.mode,
+              a.net, a.smoke);
     println!("{}", serve_table(&json));
 }

@@ -38,5 +38,5 @@ pub mod tiled;
 pub use cgemm::Workspace;
 pub use fft_conv::{FftConvEngine, FftMode, StageTimings};
 pub use problem::ConvProblem;
-pub use spectra::{SpectrumCache, SpectrumPrecision, SpectrumStats,
-                  WeightSpectrum};
+pub use spectra::{LayerSpectra, SpectrumCache, SpectrumPrecision,
+                  SpectrumStats, WeightSpectrum};

@@ -226,6 +226,76 @@ impl SpectrumCache {
     }
 }
 
+/// Per-chain-position spectrum caches for net-level serving: one
+/// [`SpectrumCache`] per layer of a
+/// [`NetPlan`](crate::coordinator::NetPlan), indexed by chain position
+/// rather than pooled behind the shape key. Two layers with identical
+/// weight *shapes* (common in the conv4/conv5 tail of AlexNet-style
+/// nets) carry different weight *values*, so sharing a shape-keyed
+/// cache between them would alias their spectra; positional caches keep
+/// each layer's slabs and version lineage independent while the
+/// summed counters still feed one shard report.
+#[derive(Debug)]
+pub struct LayerSpectra {
+    caches: Vec<SpectrumCache>,
+}
+
+impl LayerSpectra {
+    pub fn new(layers: usize, precision: SpectrumPrecision) -> Self {
+        LayerSpectra {
+            caches: (0..layers)
+                .map(|_| SpectrumCache::new(precision))
+                .collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.caches.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.caches.is_empty()
+    }
+
+    /// Chain position `i`'s own cache.
+    pub fn layer(&mut self, i: usize) -> &mut SpectrumCache {
+        &mut self.caches[i]
+    }
+
+    /// Eagerly invalidate layer `i`'s entries for `p` below
+    /// `new_version` — other layers' spectra are untouched even when
+    /// their weight shapes collide.
+    pub fn bump(&mut self, i: usize, p: &ConvProblem,
+                new_version: u64) -> usize {
+        self.caches[i].bump(p, new_version)
+    }
+
+    /// Drop every layer's cached slabs while keeping all counters
+    /// (the shard-restart rebuild path).
+    pub fn clear(&mut self) {
+        for c in &mut self.caches {
+            c.clear();
+        }
+    }
+
+    pub fn hits(&self) -> usize {
+        self.caches.iter().map(|c| c.hits).sum()
+    }
+
+    pub fn misses(&self) -> usize {
+        self.caches.iter().map(|c| c.misses).sum()
+    }
+
+    pub fn invalidated(&self) -> usize {
+        self.caches.iter().map(|c| c.invalidated).sum()
+    }
+
+    /// Counters for chain position `i` alone.
+    pub fn layer_stats(&self, i: usize) -> SpectrumStats {
+        self.caches[i].stats()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -298,6 +368,44 @@ mod tests {
         // a same-or-newer entry is never dropped by a stale bump
         cache.ensure(&ea, &pa, &wa, 2, &mut ws);
         assert_eq!(cache.bump(&pa, 2), 0);
+    }
+
+    #[test]
+    fn layer_spectra_isolates_identical_weight_shapes() {
+        // two chain positions with the same weight shape but different
+        // values: a shape-keyed shared cache would alias them
+        let p = ConvProblem::square(2, 2, 2, 8, 3);
+        let eng = FftConvEngine::fbfft_for(&p);
+        let mut rng = Rng::new(0xA11A5);
+        let w0 = rng.normal_vec(p.weight_len());
+        let w1 = rng.normal_vec(p.weight_len());
+        let mut ws = Workspace::new();
+        let mut ls = LayerSpectra::new(2, SpectrumPrecision::F32);
+        let s0 = {
+            let (s, d) = ls.layer(0).ensure(&eng, &p, &w0, 1, &mut ws);
+            assert!(d > Duration::ZERO);
+            match &s.slabs {
+                SpectrumSlabs::F32 { re, .. } => re.clone(),
+                _ => unreachable!(),
+            }
+        };
+        let s1 = {
+            let (s, d) = ls.layer(1).ensure(&eng, &p, &w1, 1, &mut ws);
+            assert!(d > Duration::ZERO, "layer 1 is its own miss");
+            match &s.slabs {
+                SpectrumSlabs::F32 { re, .. } => re.clone(),
+                _ => unreachable!(),
+            }
+        };
+        assert_ne!(s0, s1, "positional caches must not alias");
+        assert_eq!((ls.hits(), ls.misses()), (0, 2));
+        // bumping layer 0 leaves layer 1's same-shaped entry intact
+        assert_eq!(ls.bump(0, &p, 2), 1);
+        let (_, d) = ls.layer(1).ensure(&eng, &p, &w1, 1, &mut ws);
+        assert_eq!(d, Duration::ZERO, "layer 1 still hits");
+        assert_eq!(ls.invalidated(), 1);
+        ls.clear();
+        assert_eq!(ls.misses(), 2, "clear keeps counters");
     }
 
     #[test]

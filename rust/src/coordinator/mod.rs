@@ -13,11 +13,14 @@
 //!   PJRT executables (the Table-3 harness);
 //! * [`batcher`]   — deadline-aware dynamic request batching;
 //! * [`service`]   — the sharded multi-worker serving engine
-//!   ([`ServeEngine`]): admission → least-loaded shard → per-shard
-//!   batcher → strategy-cache dispatch, supervised (`catch_unwind`
-//!   per flush, [`ShardHealth`] circuit breaker, graceful degradation
-//!   to the direct fallback), with the legacy single-shard
-//!   [`ConvService`] wrapper on top.
+//!   ([`ServeEngine`]): one admission decision per request against the
+//!   summed per-layer estimates of a [`NetPlan`] → least-loaded shard
+//!   → per-shard batcher → whole-chain dispatch with pooled ping-pong
+//!   activations and overlapped host-side packing, supervised
+//!   (`catch_unwind` per flush with the failing layer recorded,
+//!   [`ShardHealth`] circuit breaker, per-layer graceful degradation
+//!   to the direct fallback), with the deprecated single-shard
+//!   `ConvService` wrapper on top.
 
 pub mod autotuner;
 pub mod batcher;
@@ -29,8 +32,12 @@ pub mod strategy;
 pub use autotuner::{Autotuner, CacheStats, Choice, StrategyCache};
 pub use batcher::{Batch, Batcher, BatcherConfig};
 pub use buffers::BufferPool;
-pub use scheduler::{LayerPlan, NetworkScheduler, PassTimings};
-pub use service::{Completion, ConvService, EngineClient, EngineConfig,
-                  EngineReport, ServeEngine, ServeError, ServeRequest,
-                  ServiceReport, ShardHealth, ShardReport, SubmitError};
+pub use scheduler::{LayerPlan, NetLayer, NetPlan, NetworkScheduler,
+                    PassTimings};
+#[allow(deprecated)]
+pub use service::ConvService;
+pub use service::{chain_outputs, Backend, Completion, EngineClient,
+                  EngineConfig, EngineConfigBuilder, EngineReport,
+                  LayerStats, ServeEngine, ServeFailure, ServeRequest,
+                  ServiceReport, ShardHealth, ShardReport, Ticket};
 pub use strategy::{Pass, Strategy};

@@ -48,6 +48,150 @@ impl LayerPlan {
     }
 }
 
+/// One chain position of a [`NetPlan`]: a display name for reports
+/// plus the layer's convolution shape at the plan's nominal batch.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NetLayer {
+    pub name: String,
+    pub problem: ConvProblem,
+}
+
+impl NetLayer {
+    pub fn new(name: impl Into<String>, problem: ConvProblem)
+               -> NetLayer {
+        NetLayer { name: name.into(), problem }
+    }
+}
+
+/// An ordered whole-CNN serving plan: the net-level counterpart of a
+/// single `ConvProblem`. Shard workers execute the chain in order,
+/// feeding each layer's output `(s, fo, yh, yw)` to the next layer's
+/// input `(s, f, h, w)` through pooled activation slabs; admission
+/// prices a request against the *sum* of the layers' cached launch
+/// estimates ([`NetPlan::estimate`]), so one accepted deadline covers
+/// the request's full trip through the stack — the regime the paper's
+/// Table 3/4 whole-CNN totals actually measure.
+///
+/// Construction validates the chain: every adjacent pair must agree on
+/// batch size and on output→input shape, so a mis-specified net fails
+/// at plan time, not mid-flush.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct NetPlan {
+    layers: Vec<NetLayer>,
+}
+
+impl NetPlan {
+    pub fn new(layers: Vec<NetLayer>) -> Result<NetPlan, String> {
+        if layers.is_empty() {
+            return Err("a NetPlan needs at least one layer".into());
+        }
+        for w in layers.windows(2) {
+            let (a, b) = (&w[0], &w[1]);
+            let (p, q) = (&a.problem, &b.problem);
+            if p.s != q.s {
+                return Err(format!(
+                    "batch mismatch {} -> {}: {} vs {}",
+                    a.name, b.name, p.s, q.s));
+            }
+            if p.fo != q.f || p.yh() != q.h || p.yw() != q.w {
+                return Err(format!(
+                    "shape break {} -> {}: output [{}, {}, {}, {}] \
+                     does not feed input [{}, {}, {}, {}]",
+                    a.name, b.name, p.s, p.fo, p.yh(), p.yw(),
+                    q.s, q.f, q.h, q.w));
+            }
+        }
+        Ok(NetPlan { layers })
+    }
+
+    /// The 1-layer degenerate plan — exactly the pre-net serving
+    /// behavior, used by `start_host`/`start_pjrt` shims.
+    pub fn single(problem: ConvProblem) -> NetPlan {
+        NetPlan {
+            layers: vec![NetLayer::new("conv", problem)],
+        }
+    }
+
+    /// A 5-layer AlexNet-style stride-1 chain at batch `s` (Table-4
+    /// shape progression scaled to host-executable sizes: 5×5 stem,
+    /// 3×3 tail, channels 3→8→12→12→12→8 over 32²→18² spatial).
+    pub fn alexnet(s: usize) -> NetPlan {
+        let l = |name: &str, f, fo, n, k| {
+            NetLayer::new(name, ConvProblem::square(s, f, fo, n, k))
+        };
+        NetPlan::new(vec![
+            l("conv1", 3, 8, 32, 5),
+            l("conv2", 8, 12, 28, 5),
+            l("conv3", 12, 12, 24, 3),
+            l("conv4", 12, 12, 22, 3),
+            l("conv5", 12, 8, 20, 3),
+        ])
+        .expect("alexnet chain is shape-consistent")
+    }
+
+    /// The smoke-sized 3-layer chain (CI's default `--net` workload):
+    /// same chained-3×3 structure, ~20k MACs per image.
+    pub fn alexnet_small(s: usize) -> NetPlan {
+        let l = |name: &str, f, fo, n, k| {
+            NetLayer::new(name, ConvProblem::square(s, f, fo, n, k))
+        };
+        NetPlan::new(vec![
+            l("conv1", 2, 4, 12, 3),
+            l("conv2", 4, 4, 10, 3),
+            l("conv3", 4, 2, 8, 3),
+        ])
+        .expect("alexnet_small chain is shape-consistent")
+    }
+
+    pub fn layers(&self) -> &[NetLayer] {
+        &self.layers
+    }
+
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    /// The plan's nominal batch size (every layer agrees by
+    /// construction).
+    pub fn batch(&self) -> usize {
+        self.layers[0].problem.s
+    }
+
+    /// First layer's input slab length at `imgs` images.
+    pub fn input_len(&self, imgs: usize) -> usize {
+        let p = &self.layers[0].problem;
+        ConvProblem { s: imgs, ..*p }.input_len()
+    }
+
+    /// Last layer's output slab length at `imgs` images.
+    pub fn output_len(&self, imgs: usize) -> usize {
+        let p = &self.layers[self.layers.len() - 1].problem;
+        ConvProblem { s: imgs, ..*p }.output_len()
+    }
+
+    /// Admission price of one `imgs`-image trip through the whole
+    /// chain: the sum of each layer's cached launch estimate at that
+    /// flush shape. Untuned layers price as zero (optimistic admission
+    /// — the same contract the single-problem engine always had).
+    pub fn estimate(&self, cache: &StrategyCache, pass: Pass,
+                    imgs: usize) -> Duration {
+        self.layers
+            .iter()
+            .map(|l| {
+                let q = ConvProblem { s: imgs, ..l.problem };
+                cache
+                    .lookup(&q, pass)
+                    .map(|c| Duration::from_secs_f64(c.seconds))
+                    .unwrap_or(Duration::ZERO)
+            })
+            .sum()
+    }
+}
+
 /// Per-layer, per-pass wall-clock (the Table-3 rows).
 #[derive(Clone, Debug, Default)]
 pub struct PassTimings {
@@ -212,6 +356,54 @@ mod tests {
         q.stride = 2;
         let plan = LayerPlan::tuned("l1", q, &cache, Pass::Fprop);
         assert_eq!(plan.strategy, Strategy::Vendor);
+    }
+
+    #[test]
+    fn net_plan_validates_the_chain() {
+        // the shipped chains are consistent
+        for plan in [NetPlan::alexnet(4), NetPlan::alexnet_small(4)] {
+            assert!(plan.len() >= 3);
+            assert_eq!(plan.batch(), 4);
+            for w in plan.layers().windows(2) {
+                let (p, q) = (&w[0].problem, &w[1].problem);
+                assert_eq!((p.fo, p.yh(), p.yw()), (q.f, q.h, q.w));
+            }
+        }
+        // a broken chain names the offending pair
+        let err = NetPlan::new(vec![
+            NetLayer::new("a", ConvProblem::square(2, 2, 4, 8, 3)),
+            NetLayer::new("b", ConvProblem::square(2, 4, 2, 9, 3)),
+        ])
+        .unwrap_err();
+        assert!(err.contains("a -> b"), "{err}");
+        // batch mismatch is its own error
+        let err = NetPlan::new(vec![
+            NetLayer::new("a", ConvProblem::square(2, 2, 4, 8, 3)),
+            NetLayer::new("b", ConvProblem::square(3, 4, 2, 6, 3)),
+        ])
+        .unwrap_err();
+        assert!(err.contains("batch mismatch"), "{err}");
+        assert!(NetPlan::new(vec![]).is_err());
+    }
+
+    #[test]
+    fn net_plan_estimate_sums_cached_layer_costs() {
+        use crate::coordinator::autotuner::StrategyCache;
+        let cache = StrategyCache::open(None);
+        let plan = NetPlan::alexnet_small(4);
+        assert_eq!(plan.estimate(&cache, Pass::Fprop, 4),
+                   Duration::ZERO,
+                   "untuned layers price as zero");
+        for l in plan.layers() {
+            cache.observe(&l.problem, Pass::Fprop, Strategy::Direct,
+                          0.010);
+        }
+        let est = plan.estimate(&cache, Pass::Fprop, 4);
+        let want = Duration::from_millis(10) * plan.len() as u32;
+        assert!(est >= want - Duration::from_millis(1)
+                    && est <= want + Duration::from_millis(1),
+                "estimate {est:?} should sum the per-layer 10ms \
+                 observations, want ~{want:?}");
     }
 
     #[test]

@@ -5,53 +5,72 @@
 //! implement the same event loop):
 //!
 //! ```text
-//!            submit()                 mpsc            worker pool
-//!  clients ──────────▶ admission ───────────▶ shard 0 [Batcher|Workspace|BufferPool|Runtime?]
-//!            deadline   │ least-loaded        shard 1 [Batcher|Workspace|BufferPool|Runtime?]
-//!            check      │ routing      ···    shard N [Batcher|Workspace|BufferPool|Runtime?]
+//!        submit_images() -> Ticket     mpsc            worker pool
+//!  clients ──────────▶ admission ───────────▶ shard 0 [packer thread | Batcher|Workspace|BufferPool|Runtime?]
+//!            Σ layer    │ least-loaded        shard 1 [packer thread | Batcher|Workspace|BufferPool|Runtime?]
+//!            estimates  │ routing      ···    shard N [packer thread | Batcher|Workspace|BufferPool|Runtime?]
 //!                       ▼
 //!              StrategyCache (shared, persistent JSON)
 //! ```
 //!
-//! * **Admission** ([`EngineClient::submit`]): requests carry an SLA
-//!   deadline (or inherit the engine default). A request whose deadline
-//!   cannot cover even the cached launch estimate for its own shape is
-//!   rejected up front (`rejected_deadline` in the report) instead of
-//!   wasting a batch slot; accepted requests go to the shard with the
-//!   fewest queued images (round-robin tie-break).
-//! * **Workers**: each shard is one `std::thread` owning its own
-//!   [`Batcher`], [`Workspace`], staging [`BufferPool`], RNG, one
-//!   buffered weights copy (§3.3), and — in PJRT mode — its own
-//!   [`Runtime`]. An idle worker parks on its channel *indefinitely*;
-//!   only a non-empty batcher arms `recv_timeout` with the earliest
-//!   flush-by deadline (no idle spinning).
+//! * **Net-level plans** ([`NetPlan`]): an engine serves an ordered
+//!   chain of per-layer [`ConvProblem`]s, not one shape. Every flushed
+//!   batch makes the whole trip — layer *i*'s output slab feeds layer
+//!   *i+1*'s input through pooled activation roles (`serve.act0` /
+//!   `serve.act1` ping-pong, zero steady-state allocation) — so one
+//!   admission decision covers the regime the paper's Table 3/4
+//!   whole-CNN totals actually measure. The 1-layer plan
+//!   ([`NetPlan::single`]) is exactly the old behavior.
+//! * **Admission** ([`EngineClient::submit_images`] → [`Ticket`], or
+//!   the raw [`EngineClient::submit`]): requests carry an SLA deadline
+//!   (or inherit the engine default). A request whose deadline cannot
+//!   cover the *sum* of the chain's cached per-layer launch estimates
+//!   is rejected up front ([`ServeFailure::DeadlineUnmeetable`],
+//!   `rejected_deadline` in the report) instead of wasting a batch
+//!   slot; accepted requests go to the live shard with the fewest
+//!   queued images (round-robin tie-break).
+//! * **Workers, split into submit/complete halves**: each shard is one
+//!   `std::thread` owning its own [`Batcher`], [`Workspace`], staging
+//!   [`BufferPool`], per-layer weights (§3.3 buffered copies) and
+//!   per-layer spectrum caches ([`LayerSpectra`]), and — in PJRT mode —
+//!   its own [`Runtime`]. A companion **packer thread** fills batch
+//!   *k+1*'s synthetic payload slab while the worker runs batch *k*'s
+//!   layer chain (two slabs rotate); the hidden host-side packing time
+//!   is the report's `pack_overlap` counter. An idle worker parks on
+//!   its channel *indefinitely*; only a non-empty batcher arms
+//!   `recv_timeout` with the earliest flush-by deadline.
 //! * **Strategy cache** ([`StrategyCache`]): every flush of `b` images
-//!   is the problem `{s: b, ..served}`; the worker looks the shape up
-//!   and runs the best known [`Strategy`] — the §3.4 tuner populates
-//!   the cache once per shape (persisted as JSON, warm-loaded at
-//!   startup) so the steady-state hot path never re-tunes.
-//! * **Metrics**: per-shard latency/queue-depth [`Histogram`]s,
+//!   runs layer `l` as the problem `{s: b, ..l}`; the worker looks each
+//!   shape up and runs the best known [`Strategy`] — the §3.4 tuner
+//!   populates the cache once per shape (persisted as JSON, warm-loaded
+//!   at startup) so the steady-state hot path never re-tunes.
+//! * **Metrics**: per-shard *and per-layer* latency [`Histogram`]s,
 //!   batch-fill ratio, SLA misses and flush counters, merged into the
 //!   aggregate view by [`EngineReport`] and rendered by
-//!   [`reports::serve`](crate::reports::serve).
+//!   [`reports::serve`](crate::reports::serve) (schema v4: per-layer
+//!   rows + end-to-end `states_per_sec`).
 //! * **Supervision**: every flush runs under `catch_unwind`. A panic
 //!   fails the in-flight batch with error [`Completion`]s (exactly-once
-//!   is preserved — a hung client is worse than a served error), is
-//!   recorded in the shared [`ShardHealth`] table, and the shard
-//!   rebuilds its flush-local state (workspace, staging pool, spectrum
-//!   entries) with exponential backoff. A shard that keeps flapping
-//!   trips a circuit breaker: it is marked dead, admission re-routes to
-//!   the survivors, and the dead shard drains its channel as a
-//!   dead-letter queue so racing submissions fail fast instead of
-//!   hanging. Degradation ladder for bad *outputs* (PJRT launch errors,
-//!   non-finite frequency results): the problem demotes to the direct
-//!   fallback for a cooldown window via
-//!   [`StrategyCache::demote`]. Faults are injectable deterministically
-//!   through a [`FaultPlan`] (`FBFFT_FAULTS`) for chaos tests.
+//!   is preserved — a hung client is worse than a served error) carrying
+//!   [`ServeFailure::ShardPanic`] *with the chain position that blew up*
+//!   (`layer: Some(i)` for a mid-chain panic), is recorded in the
+//!   shared [`ShardHealth`] table, and the shard rebuilds its
+//!   flush-local state (workspace, staging pool, spectrum entries) with
+//!   exponential backoff. A shard that keeps flapping trips a circuit
+//!   breaker: it is marked dead, admission re-routes to the survivors,
+//!   and the dead shard drains its channel as a dead-letter queue so
+//!   racing submissions fail fast instead of hanging. Degradation
+//!   ladder for bad *outputs* (PJRT launch errors, non-finite frequency
+//!   results): the offending layer demotes to the direct fallback for a
+//!   cooldown window via [`StrategyCache::demote`], failing/degrading
+//!   exactly the in-flight batch. Faults are injectable
+//!   deterministically through a [`FaultPlan`] (`FBFFT_FAULTS`,
+//!   `[shard<i>:][layer<j>:]kind@occ`) for chaos tests.
 //!
-//! [`ConvService`] survives as the single-shard PJRT wrapper the
-//! original examples were written against.
+//! [`ConvService`] survives, deprecated, as the single-shard PJRT
+//! wrapper the original examples were written against.
 
+use std::cell::Cell;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -63,7 +82,8 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::conv::{direct, im2col, tiled, ConvProblem, FftConvEngine,
-                  FftMode, SpectrumCache, SpectrumPrecision, Workspace};
+                  FftMode, LayerSpectra, SpectrumCache, SpectrumPrecision,
+                  Workspace};
 use crate::metrics::Histogram;
 use crate::runtime::{HostTensor, Runtime};
 use crate::testkit::faults::{FaultKind, FaultPlan};
@@ -72,6 +92,7 @@ use crate::util::Rng;
 use super::autotuner::{CacheStats, Choice, StrategyCache};
 use super::batcher::{Batch, Batcher, BatcherConfig};
 use super::buffers::BufferPool;
+use super::scheduler::NetPlan;
 use super::strategy::{Pass, Strategy};
 
 /// A conv inference request: `images` samples for the served layer.
@@ -100,47 +121,67 @@ pub struct Completion {
     /// shard panicked with the request in flight, or was circuit-broken
     /// with it still queued. Exactly-once still holds: a failed request
     /// gets exactly one completion, carrying the error.
-    pub error: Option<ServeError>,
+    pub error: Option<ServeFailure>,
 }
 
-/// Why a request's completion is an error instead of a result.
+/// The single error vocabulary of the serving tier, split along the
+/// request lifecycle:
+///
+/// * **Admission failures** — returned as `Err` by
+///   [`EngineClient::submit`] / [`submit_images`]
+///   (`EngineClient::submit_images`): *nothing was enqueued* and no
+///   completion will ever arrive. Variants:
+///   [`DeadlineUnmeetable`](ServeFailure::DeadlineUnmeetable),
+///   [`Unavailable`](ServeFailure::Unavailable).
+/// * **Completion failures** — delivered inside the request's exactly
+///   one [`Completion`] (its `error` field): the request was accepted
+///   but could not be served. Variants:
+///   [`ShardPanic`](ServeFailure::ShardPanic),
+///   [`ShardUnavailable`](ServeFailure::ShardUnavailable).
+///
+/// One enum (rather than the historical `SubmitError`/`ServeError`
+/// pair) means callers match a single vocabulary and `?` works across
+/// both halves; the lifecycle split is documented per variant instead
+/// of encoded in the type system.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum ServeError {
-    /// the owning shard panicked with the request's batch in flight
-    ShardPanic,
-    /// the owning shard was circuit-broken (dead) with the request
-    /// queued behind the break
+pub enum ServeFailure {
+    /// Admission: the deadline cannot cover the sum of the chain's
+    /// cached per-layer launch estimates.
+    DeadlineUnmeetable,
+    /// Admission: no live shard exists to take the request (every
+    /// shard dead).
+    Unavailable,
+    /// Completion: the owning shard panicked with the request's batch
+    /// in flight. `layer` is the chain position that was executing
+    /// (`None` when the panic hit outside the layer chain — e.g. a
+    /// flush-level injected panic or a staging checkout).
+    ShardPanic { layer: Option<usize> },
+    /// Completion: the owning shard was circuit-broken (dead) with the
+    /// request queued behind the break.
     ShardUnavailable,
 }
 
-impl std::fmt::Display for ServeError {
+impl std::fmt::Display for ServeFailure {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
-            ServeError::ShardPanic => write!(f, "shard panicked"),
-            ServeError::ShardUnavailable => write!(f, "shard unavailable"),
+            ServeFailure::DeadlineUnmeetable => {
+                write!(f, "deadline unmeetable")
+            }
+            ServeFailure::Unavailable => write!(f, "no live shard"),
+            ServeFailure::ShardPanic { layer: Some(i) } => {
+                write!(f, "shard panicked at layer {i}")
+            }
+            ServeFailure::ShardPanic { layer: None } => {
+                write!(f, "shard panicked")
+            }
+            ServeFailure::ShardUnavailable => {
+                write!(f, "shard unavailable")
+            }
         }
     }
 }
 
-/// Why admission refused a request up front (nothing was enqueued and
-/// no completion will arrive).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum SubmitError {
-    /// the deadline cannot cover the cached launch estimate
-    DeadlineUnmeetable,
-    /// no live shard exists to take the request (every shard dead)
-    Unavailable,
-}
-
-impl std::fmt::Display for SubmitError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            SubmitError::DeadlineUnmeetable =>
-                write!(f, "deadline unmeetable"),
-            SubmitError::Unavailable => write!(f, "no live shard"),
-        }
-    }
-}
+impl std::error::Error for ServeFailure {}
 
 /// Live health of one shard, shared between its worker (writer) and
 /// every [`EngineClient`] (readers routing around dead shards).
@@ -206,12 +247,14 @@ impl ShardHealth {
     }
 }
 
-/// How the worker pool executes a flushed batch.
+/// How the worker pool executes a flushed batch — the first argument
+/// of the one public entry point, [`ServeEngine::start`].
 #[derive(Clone, Debug)]
-enum Backend {
+pub enum Backend {
     /// In-tree host engines dispatched through the strategy cache.
     Host,
-    /// One PJRT runtime per worker, serving a fixed AOT artifact.
+    /// One PJRT runtime per worker, serving a fixed AOT artifact
+    /// (single-layer plans only).
     Pjrt { dir: PathBuf, artifact: String },
 }
 
@@ -271,6 +314,150 @@ impl Default for EngineConfig {
     }
 }
 
+impl EngineConfig {
+    /// A validating builder over the defaults — the config struct has
+    /// grown a field per subsystem (batching, tuning, spectra,
+    /// supervision, chaos), and literal structs kept copying stale
+    /// values between the bench, the CLI and the tests. Every setter
+    /// documents its default; [`EngineConfigBuilder::build`] rejects
+    /// nonsensical values instead of letting a zero-shard engine limp
+    /// into a worker panic.
+    pub fn builder() -> EngineConfigBuilder {
+        EngineConfigBuilder { cfg: EngineConfig::default() }
+    }
+}
+
+/// Builder returned by [`EngineConfig::builder`].
+#[derive(Clone, Debug)]
+pub struct EngineConfigBuilder {
+    cfg: EngineConfig,
+}
+
+impl EngineConfigBuilder {
+    /// Worker-pool width. Default: 4.
+    pub fn shards(mut self, n: usize) -> Self {
+        self.cfg.shards = n;
+        self
+    }
+
+    /// Per-shard batch capacity in images. Default:
+    /// [`BatcherConfig::default`]'s capacity.
+    pub fn capacity(mut self, images: usize) -> Self {
+        self.cfg.batcher.capacity = images;
+        self
+    }
+
+    /// Longest a queued request waits before a partial batch flushes.
+    /// Default: [`BatcherConfig::default`]'s max_wait.
+    pub fn max_wait(mut self, d: Duration) -> Self {
+        self.cfg.batcher.max_wait = d;
+        self
+    }
+
+    /// SLA applied to requests with no explicit deadline. Default: 1s.
+    pub fn default_deadline(mut self, d: Duration) -> Self {
+        self.cfg.default_deadline = d;
+        self
+    }
+
+    /// Which training pass the engine serves. Default: fprop.
+    /// Multi-layer plans serve fprop only (enforced at
+    /// [`ServeEngine::start`]).
+    pub fn pass(mut self, pass: Pass) -> Self {
+        self.cfg.pass = pass;
+        self
+    }
+
+    /// Strategy-cache warm-load/persist path. Default: `None`
+    /// (in-memory only).
+    pub fn tuner_path(mut self, path: impl Into<PathBuf>) -> Self {
+        self.cfg.tuner_path = Some(path.into());
+        self
+    }
+
+    /// Measurement repetitions on a tuner cache miss. Default: 1.
+    pub fn tuner_reps(mut self, reps: usize) -> Self {
+        self.cfg.tuner_reps = reps;
+        self
+    }
+
+    /// Tune the {1, capacity}-image shapes of every layer before
+    /// accepting traffic. Default: true.
+    pub fn warm(mut self, warm: bool) -> Self {
+        self.cfg.warm = warm;
+        self
+    }
+
+    /// Storage precision of the per-shard weight-spectrum caches.
+    /// Default: f16 unless `FBFFT_SPECTRA=f32`.
+    pub fn spectra(mut self, precision: SpectrumPrecision) -> Self {
+        self.cfg.spectra = precision;
+        self
+    }
+
+    /// Bypass the tuner and serve every flush with this strategy (the
+    /// deterministic-probe escape hatch). Default: `None`.
+    pub fn force_strategy(mut self, strategy: Strategy) -> Self {
+        self.cfg.force_strategy = Some(strategy);
+        self
+    }
+
+    /// Base sleep before a supervised shard rebuild; doubles per
+    /// consecutive failure, capped at 500ms. Default: 10ms.
+    pub fn restart_backoff(mut self, d: Duration) -> Self {
+        self.cfg.restart_backoff = d;
+        self
+    }
+
+    /// Consecutive flush failures that trip the circuit breaker.
+    /// Default: 3.
+    pub fn max_consecutive_failures(mut self, n: usize) -> Self {
+        self.cfg.max_consecutive_failures = n;
+        self
+    }
+
+    /// How long a layer stays demoted to the direct fallback after a
+    /// PJRT error or non-finite frequency output. Default: 5s.
+    pub fn degrade_cooldown(mut self, d: Duration) -> Self {
+        self.cfg.degrade_cooldown = d;
+        self
+    }
+
+    /// Deterministic fault script for chaos tests. Default: `None`
+    /// (falls back to `FBFFT_FAULTS` in the environment).
+    pub fn faults(mut self, plan: Arc<FaultPlan>) -> Self {
+        self.cfg.faults = Some(plan);
+        self
+    }
+
+    /// Validate and produce the config. Errors name the offending
+    /// knob: zero shards/capacity/reps, a zero breaker threshold, or a
+    /// zero batching window would each wedge or panic the engine at
+    /// runtime — fail here instead.
+    pub fn build(self) -> Result<EngineConfig, String> {
+        let c = &self.cfg;
+        if c.shards == 0 {
+            return Err("shards must be >= 1".into());
+        }
+        if c.batcher.capacity == 0 {
+            return Err("capacity must be >= 1 image".into());
+        }
+        if c.batcher.max_wait == Duration::ZERO {
+            return Err("max_wait must be nonzero".into());
+        }
+        if c.default_deadline == Duration::ZERO {
+            return Err("default_deadline must be nonzero".into());
+        }
+        if c.tuner_reps == 0 {
+            return Err("tuner_reps must be >= 1".into());
+        }
+        if c.max_consecutive_failures == 0 {
+            return Err("max_consecutive_failures must be >= 1".into());
+        }
+        Ok(self.cfg)
+    }
+}
+
 /// One accepted request on its way to a shard.
 struct Accepted {
     id: u64,
@@ -285,10 +472,47 @@ struct Accepted {
 
 enum Msg {
     Req(Accepted),
-    /// install a new weight tensor under `version`, invalidating the
-    /// shard's cached spectra of the served problem
-    Weights { version: u64, weights: Arc<Vec<f32>> },
+    /// install a new weight tensor for chain position `layer` under
+    /// `version`, invalidating exactly that layer's cached spectra
+    Weights { layer: usize, version: u64, weights: Arc<Vec<f32>> },
     Shutdown,
+}
+
+/// Per-chain-position statistics inside a [`ShardReport`] (and, merged
+/// across shards, the schema-v4 `per_layer` report rows).
+#[derive(Clone, Debug, Default)]
+pub struct LayerStats {
+    /// layer name from the [`NetPlan`]
+    pub name: String,
+    /// per-flush wall-clock of this layer alone, seconds
+    pub latency: Histogram,
+    /// per-flush weight-FFT seconds (frequency launches; zero on
+    /// spectrum hits)
+    pub weight_fft: Histogram,
+    pub spectra_hits: usize,
+    pub spectra_misses: usize,
+    pub spectra_invalidated: usize,
+    /// flushes this layer served on the degraded (direct-fallback) rung
+    pub degraded: usize,
+    /// non-finite outputs / failed launches attributed to this layer
+    pub launch_errors: usize,
+}
+
+impl LayerStats {
+    fn named(name: &str) -> LayerStats {
+        LayerStats { name: name.to_string(), ..Default::default() }
+    }
+
+    /// Fold another shard's stats for the same chain position in.
+    pub fn merge(&mut self, other: &LayerStats) {
+        self.latency.merge(&other.latency);
+        self.weight_fft.merge(&other.weight_fft);
+        self.spectra_hits += other.spectra_hits;
+        self.spectra_misses += other.spectra_misses;
+        self.spectra_invalidated += other.spectra_invalidated;
+        self.degraded += other.degraded;
+        self.launch_errors += other.launch_errors;
+    }
 }
 
 /// Per-shard statistics returned by the worker at shutdown.
@@ -344,6 +568,22 @@ pub struct ShardReport {
     pub depth: Histogram,
     /// mean flushed-images / capacity over all launches
     pub batch_fill: f64,
+    /// per-chain-position latency/spectra/degradation breakdown
+    pub layers: Vec<LayerStats>,
+    /// payload-packing time hidden behind layer execution by the
+    /// submit/complete split (packer filled batch k+1 while the chain
+    /// ran batch k) — `> 0` is the evidence the halves actually overlap
+    pub pack_overlap: Duration,
+    /// time the flush path stalled waiting on the packer (the
+    /// non-overlapped remainder)
+    pub pack_wait: Duration,
+    /// staging-pool heap checkouts over the shard's whole life — the
+    /// chained steady state allocates once per activation role and
+    /// then only reuses (see `workspace_alloc.rs`); counters reset
+    /// with the pool on a supervised restart
+    pub stage_allocations: usize,
+    pub stage_expansions: usize,
+    pub stage_reuses: usize,
 }
 
 /// Aggregate view over all shards plus engine-level counters.
@@ -361,6 +601,8 @@ pub struct EngineReport {
     pub cache: CacheStats,
     pub capacity: usize,
     pub pass: Pass,
+    /// the chain the engine served (layer names key the per-layer rows)
+    pub net: NetPlan,
 }
 
 impl EngineReport {
@@ -448,6 +690,50 @@ impl EngineReport {
         self.shards.iter().filter(|s| s.circuit_broken).count()
     }
 
+    /// Packing time hidden behind layer execution, summed over shards.
+    pub fn pack_overlap(&self) -> Duration {
+        self.shards.iter().map(|s| s.pack_overlap).sum()
+    }
+
+    /// Flush-path stalls waiting on the packer, summed over shards.
+    pub fn pack_wait(&self) -> Duration {
+        self.shards.iter().map(|s| s.pack_wait).sum()
+    }
+
+    /// Staging-pool heap checkouts summed over shards (zero-alloc
+    /// steady state: bounded by roles × shards, never by flushes).
+    pub fn stage_allocations(&self) -> usize {
+        self.shards.iter().map(|s| s.stage_allocations).sum()
+    }
+
+    pub fn stage_expansions(&self) -> usize {
+        self.shards.iter().map(|s| s.stage_expansions).sum()
+    }
+
+    pub fn stage_reuses(&self) -> usize {
+        self.shards.iter().map(|s| s.stage_reuses).sum()
+    }
+
+    /// Per-chain-position stats merged across shards (the schema-v4
+    /// `per_layer` rows). Shards that died before reporting layer
+    /// stats simply contribute nothing.
+    pub fn layer_stats(&self) -> Vec<LayerStats> {
+        let mut merged: Vec<LayerStats> = self
+            .net
+            .layers()
+            .iter()
+            .map(|l| LayerStats::named(&l.name))
+            .collect();
+        for s in &self.shards {
+            for (i, ls) in s.layers.iter().enumerate() {
+                if let Some(m) = merged.get_mut(i) {
+                    m.merge(ls);
+                }
+            }
+        }
+        merged
+    }
+
     /// All shards' latency samples merged (the aggregate percentiles).
     pub fn aggregate_latency(&self) -> Histogram {
         let mut h = Histogram::new();
@@ -471,6 +757,49 @@ impl EngineReport {
     }
 }
 
+/// A pending reply handle returned by [`EngineClient::submit_images`]:
+/// wraps the completion channel so callers stop hand-constructing
+/// `Sender<Completion>` pairs.
+///
+/// The request resolves to exactly one [`Completion`] — success *or*
+/// failure (a failed request's completion carries the
+/// [`ServeFailure`] in its `error` field, so ledgers and latency are
+/// still readable). [`Ticket::wait`] returns `Err` only when no
+/// completion can ever arrive (the engine was torn down with the
+/// ticket outstanding).
+pub struct Ticket {
+    id: u64,
+    rx: Receiver<Completion>,
+}
+
+impl Ticket {
+    /// The engine-assigned request id (matches `Completion::id`).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Block until the request's completion arrives.
+    /// `Err(ServeFailure::Unavailable)` when the engine was shut down
+    /// with the ticket outstanding — otherwise the completion itself,
+    /// whose `error` field reports per-request failures.
+    pub fn wait(&self) -> std::result::Result<Completion, ServeFailure> {
+        self.rx.recv().map_err(|_| ServeFailure::Unavailable)
+    }
+
+    /// Like [`Ticket::wait`] with a bound on the block.
+    pub fn wait_timeout(&self, timeout: Duration)
+                        -> std::result::Result<Completion, ServeFailure> {
+        self.rx
+            .recv_timeout(timeout)
+            .map_err(|_| ServeFailure::Unavailable)
+    }
+
+    /// Non-blocking poll: `Some` once the completion has landed.
+    pub fn try_wait(&self) -> Option<Completion> {
+        self.rx.try_recv().ok()
+    }
+}
+
 /// Cheap, cloneable submission handle — one per client thread. Holds
 /// the shard senders, the shared depth gauges and the strategy cache;
 /// admission runs entirely on the calling thread.
@@ -482,9 +811,10 @@ pub struct EngineClient {
     rejected: Arc<AtomicUsize>,
     rejected_unavailable: Arc<AtomicUsize>,
     rr: Arc<AtomicUsize>,
-    weights_version: Arc<AtomicU64>,
+    seq: Arc<AtomicU64>,
+    weights_versions: Arc<Vec<AtomicU64>>,
     cache: Arc<StrategyCache>,
-    problem: ConvProblem,
+    net: Arc<NetPlan>,
     pass: Pass,
     capacity: usize,
     default_deadline: Duration,
@@ -492,11 +822,25 @@ pub struct EngineClient {
 }
 
 impl EngineClient {
+    /// Submit `images` samples for one trip through the whole chain and
+    /// get a [`Ticket`] for the reply — the ergonomic form of
+    /// [`EngineClient::submit`] (which remains public for callers that
+    /// multiplex many requests onto one channel, like the bench's
+    /// open-loop mode). `deadline: None` inherits the engine default.
+    pub fn submit_images(&self, images: usize,
+                         deadline: Option<Instant>)
+                         -> std::result::Result<Ticket, ServeFailure> {
+        let (tx, rx) = mpsc::channel();
+        let id = self.seq.fetch_add(1, Ordering::Relaxed);
+        self.submit(ServeRequest { id, images, deadline, reply: tx })?;
+        Ok(Ticket { id, rx })
+    }
+
     /// Admit (or reject) a request. `Err` — with nothing sent on
-    /// `reply` — when the deadline cannot cover the cached launch
-    /// estimate for the request's own shape
-    /// ([`SubmitError::DeadlineUnmeetable`]) or when every shard is
-    /// dead ([`SubmitError::Unavailable`]). Accepted requests are
+    /// `reply` — when the deadline cannot cover the summed cached
+    /// launch estimates of the chain at the request's own flush shape
+    /// ([`ServeFailure::DeadlineUnmeetable`]) or when every shard is
+    /// dead ([`ServeFailure::Unavailable`]). Accepted requests are
     /// routed to the least-loaded *live* shard and receive exactly one
     /// [`Completion`] — success or error. Submissions must not race
     /// [`ServeEngine::shutdown`]: stop every client first (an accepted
@@ -507,22 +851,15 @@ impl EngineClient {
     /// [`Batcher::push`]) — asserting here keeps the panic on the
     /// caller's thread instead of poisoning a shard worker.
     pub fn submit(&self, req: ServeRequest)
-                  -> std::result::Result<(), SubmitError> {
+                  -> std::result::Result<(), ServeFailure> {
         assert!(req.images >= 1, "empty request");
         let now = Instant::now();
         let sla = req.deadline.unwrap_or(now + self.default_deadline);
-        let shape = ConvProblem {
-            s: req.images.min(self.capacity),
-            ..self.problem
-        };
-        let est = self
-            .cache
-            .lookup(&shape, self.pass)
-            .map(|c| Duration::from_secs_f64(c.seconds))
-            .unwrap_or(Duration::ZERO);
+        let est = self.net.estimate(
+            &self.cache, self.pass, req.images.min(self.capacity));
         if now + est > sla {
             self.rejected.fetch_add(1, Ordering::Relaxed);
-            return Err(SubmitError::DeadlineUnmeetable);
+            return Err(ServeFailure::DeadlineUnmeetable);
         }
         // least queued images among *live* shards wins; the start point
         // rotates so ties spread. A send that still fails (worker gone
@@ -555,7 +892,7 @@ impl EngineClient {
             }
             let Some(best) = best else {
                 self.rejected_unavailable.fetch_add(1, Ordering::Relaxed);
-                return Err(SubmitError::Unavailable);
+                return Err(ServeFailure::Unavailable);
             };
             self.depths[best].fetch_add(images, Ordering::Relaxed);
             match self.txs[best].send(msg) {
@@ -569,27 +906,35 @@ impl EngineClient {
         }
     }
 
-    /// Install a new weight tensor across every live shard and
-    /// invalidate the cached weight spectra built from the old one. The
-    /// bump is zero-downtime: each worker applies it between flushes,
-    /// so batches flushed before the message arrives ride the old
-    /// version and every later flush serves (and re-transforms once,
-    /// lazily) the new one. Returns the new `weights_version`;
-    /// `Err(Unavailable)` when no shard could take the bump.
+    /// Install a new weight tensor for chain position `layer` across
+    /// every live shard, invalidating exactly that layer's cached
+    /// spectra. The bump is zero-downtime: each worker applies it
+    /// between flushes, so batches flushed before the message arrives
+    /// ride the old version and every later flush serves (and
+    /// re-transforms once, lazily) the new one. Returns the layer's new
+    /// `weights_version`; `Err(Unavailable)` when no shard could take
+    /// the bump.
     ///
-    /// Panics when `weights` does not match the served problem's weight
-    /// tensor (`fo·f·kh·kw` elements) — same caller-thread contract as
-    /// [`EngineClient::submit`].
-    pub fn update_weights(&self, weights: Vec<f32>)
-                          -> std::result::Result<u64, SubmitError> {
-        assert_eq!(weights.len(), self.problem.weight_len(),
-                   "weight tensor shape mismatch");
-        let version =
-            self.weights_version.fetch_add(1, Ordering::Relaxed) + 1;
+    /// Panics when `layer` is out of range or `weights` does not match
+    /// that layer's weight tensor (`fo·f·kh·kw` elements) — same
+    /// caller-thread contract as [`EngineClient::submit`].
+    pub fn update_layer_weights(&self, layer: usize, weights: Vec<f32>)
+                                -> std::result::Result<u64, ServeFailure> {
+        let layers = self.net.layers();
+        assert!(layer < layers.len(), "layer {layer} out of range");
+        assert_eq!(weights.len(), layers[layer].problem.weight_len(),
+                   "weight tensor shape mismatch for layer {layer}");
+        let version = self.weights_versions[layer]
+            .fetch_add(1, Ordering::Relaxed)
+            + 1;
         let shared = Arc::new(weights);
         let mut delivered = 0usize;
         for (s, tx) in self.txs.iter().enumerate() {
-            let msg = Msg::Weights { version, weights: shared.clone() };
+            let msg = Msg::Weights {
+                layer,
+                version,
+                weights: shared.clone(),
+            };
             if tx.send(msg).is_ok() {
                 delivered += 1;
             } else {
@@ -597,14 +942,32 @@ impl EngineClient {
             }
         }
         if delivered == 0 {
-            return Err(SubmitError::Unavailable);
+            return Err(ServeFailure::Unavailable);
         }
         Ok(version)
     }
 
-    /// The version the next flush-after-drain will serve (starts at 1).
+    /// [`update_layer_weights`](EngineClient::update_layer_weights) for
+    /// chain position 0 — the single-layer engine's historical surface.
+    pub fn update_weights(&self, weights: Vec<f32>)
+                          -> std::result::Result<u64, ServeFailure> {
+        self.update_layer_weights(0, weights)
+    }
+
+    /// The version layer `layer`'s next flush-after-drain will serve
+    /// (starts at 1).
+    pub fn layer_weights_version(&self, layer: usize) -> u64 {
+        self.weights_versions[layer].load(Ordering::Relaxed)
+    }
+
+    /// Layer 0's weights version (historical single-layer surface).
     pub fn weights_version(&self) -> u64 {
-        self.weights_version.load(Ordering::Relaxed)
+        self.layer_weights_version(0)
+    }
+
+    /// The chain this engine serves.
+    pub fn net(&self) -> &NetPlan {
+        &self.net
     }
 
     pub fn shards(&self) -> usize {
@@ -628,7 +991,7 @@ pub struct ServeEngine {
 struct WorkerCtx {
     shard: usize,
     backend: Backend,
-    problem: ConvProblem,
+    net: Arc<NetPlan>,
     pass: Pass,
     batcher_cfg: BatcherConfig,
     cache: Arc<StrategyCache>,
@@ -645,32 +1008,54 @@ struct WorkerCtx {
 }
 
 impl ServeEngine {
-    /// Serve with the in-tree host engines — available everywhere (no
-    /// artifacts or PJRT backend needed). Each flush dispatches through
-    /// the strategy cache.
+    /// Serve a single conv layer with the in-tree host engines — the
+    /// historical surface, now a [`NetPlan::single`] shim over
+    /// [`ServeEngine::start`].
     pub fn start_host(problem: ConvProblem, cfg: EngineConfig)
                       -> Result<ServeEngine> {
-        Self::start(Backend::Host, problem, cfg)
+        Self::start(Backend::Host, NetPlan::single(problem), cfg)
     }
 
-    /// Serve a fixed AOT artifact; every worker owns its own PJRT
-    /// [`Runtime`] (the client is not `Send`), so startup compiles the
-    /// executable once per shard and surfaces any failure here.
+    /// Serve a fixed single-layer AOT artifact — a shim over
+    /// [`ServeEngine::start`] with `Backend::Pjrt`.
     pub fn start_pjrt(artifacts_dir: PathBuf, artifact: String,
                       problem: ConvProblem, cfg: EngineConfig)
                       -> Result<ServeEngine> {
-        if cfg.batcher.capacity > problem.s {
-            return Err(anyhow!(
-                "batcher capacity {} exceeds artifact batch S={}",
-                cfg.batcher.capacity, problem.s));
-        }
         Self::start(Backend::Pjrt { dir: artifacts_dir, artifact },
-                    problem, cfg)
+                    NetPlan::single(problem), cfg)
     }
 
-    fn start(backend: Backend, problem: ConvProblem, cfg: EngineConfig)
-             -> Result<ServeEngine> {
+    /// The one entry point: serve `net` on `backend` under `cfg`.
+    /// Host backends execute the whole chain per flush; PJRT backends
+    /// serve single-layer plans only (every worker owns its own
+    /// [`Runtime`] — the client is not `Send` — so startup compiles the
+    /// executable once per shard and surfaces any failure here).
+    /// Multi-layer plans serve fprop only: gradient passes chain in
+    /// *reverse* layer order with different operand pairings, which is
+    /// [`NetworkScheduler::backward`]
+    /// (crate::coordinator::NetworkScheduler)'s job, not a serving
+    /// path.
+    pub fn start(backend: Backend, net: NetPlan, cfg: EngineConfig)
+                 -> Result<ServeEngine> {
         assert!(cfg.shards >= 1, "engine needs at least one shard");
+        if net.len() > 1 && cfg.pass != Pass::Fprop {
+            return Err(anyhow!(
+                "multi-layer plans serve fprop only (got {:?})",
+                cfg.pass));
+        }
+        if let Backend::Pjrt { .. } = &backend {
+            if net.len() != 1 {
+                return Err(anyhow!(
+                    "PJRT backend serves single-layer plans only \
+                     ({} layers given)", net.len()));
+            }
+            if cfg.batcher.capacity > net.batch() {
+                return Err(anyhow!(
+                    "batcher capacity {} exceeds artifact batch S={}",
+                    cfg.batcher.capacity, net.batch()));
+            }
+        }
+        let net = Arc::new(net);
         let faults = cfg.faults.clone().or_else(FaultPlan::from_env);
         let mut cache = StrategyCache::open_with_faults(
             cfg.tuner_path.as_deref(), faults.as_deref());
@@ -688,12 +1073,16 @@ impl ServeEngine {
         };
         let cache = Arc::new(cache);
         // warm-tune the shapes every steady flush produces (full batches
-        // and singletons); restarts hit the persisted entries instead
-        if cfg.warm && matches!(backend, Backend::Host)
-            && problem.stride == 1
-        {
-            for s in [1, cfg.batcher.capacity] {
-                cache.ensure(&ConvProblem { s, ..problem }, cfg.pass);
+        // and singletons, per layer); restarts hit the persisted entries
+        if cfg.warm && matches!(backend, Backend::Host) {
+            for l in net.layers() {
+                if l.problem.stride != 1 {
+                    continue;
+                }
+                for s in [1, cfg.batcher.capacity] {
+                    cache.ensure(&ConvProblem { s, ..l.problem },
+                                 cfg.pass);
+                }
             }
             cache.persist().ok(); // best-effort; shutdown retries
         }
@@ -710,7 +1099,7 @@ impl ServeEngine {
             let ctx = WorkerCtx {
                 shard,
                 backend: backend.clone(),
-                problem,
+                net: net.clone(),
                 pass: cfg.pass,
                 batcher_cfg: cfg.batcher,
                 cache: cache.clone(),
@@ -758,9 +1147,11 @@ impl ServeEngine {
             rejected: Arc::new(AtomicUsize::new(0)),
             rejected_unavailable: Arc::new(AtomicUsize::new(0)),
             rr: Arc::new(AtomicUsize::new(0)),
-            weights_version: Arc::new(AtomicU64::new(1)),
+            seq: Arc::new(AtomicU64::new(1)),
+            weights_versions: Arc::new(
+                (0..net.len()).map(|_| AtomicU64::new(1)).collect()),
             cache: cache.clone(),
-            problem,
+            net,
             pass: cfg.pass,
             capacity: cfg.batcher.capacity,
             default_deadline: cfg.default_deadline,
@@ -777,15 +1168,35 @@ impl ServeEngine {
     /// Admit a request from the engine owner's thread. See
     /// [`EngineClient::submit`].
     pub fn submit(&self, req: ServeRequest)
-                  -> std::result::Result<(), SubmitError> {
+                  -> std::result::Result<(), ServeFailure> {
         self.client.submit(req)
     }
 
-    /// Install new weights across the pool. See
+    /// Submit and get a [`Ticket`]. See
+    /// [`EngineClient::submit_images`].
+    pub fn submit_images(&self, images: usize,
+                         deadline: Option<Instant>)
+                         -> std::result::Result<Ticket, ServeFailure> {
+        self.client.submit_images(images, deadline)
+    }
+
+    /// Install new layer-0 weights across the pool. See
     /// [`EngineClient::update_weights`].
     pub fn update_weights(&self, weights: Vec<f32>)
-                          -> std::result::Result<u64, SubmitError> {
+                          -> std::result::Result<u64, ServeFailure> {
         self.client.update_weights(weights)
+    }
+
+    /// Install new weights for one chain position. See
+    /// [`EngineClient::update_layer_weights`].
+    pub fn update_layer_weights(&self, layer: usize, weights: Vec<f32>)
+                                -> std::result::Result<u64, ServeFailure> {
+        self.client.update_layer_weights(layer, weights)
+    }
+
+    /// The chain this engine serves.
+    pub fn net(&self) -> &NetPlan {
+        self.client.net()
     }
 
     /// Live per-shard health. See [`EngineClient::health`].
@@ -838,6 +1249,7 @@ impl ServeEngine {
             cache: cache.stats(),
             capacity: client.capacity,
             pass: client.pass,
+            net: (*client.net).clone(),
         }
     }
 }
@@ -884,7 +1296,7 @@ fn panic_msg(payload: &(dyn std::any::Any + Send)) -> String {
 /// flushes of its other parts find no pending entry (harmless).
 fn complete_batch(batch: &Batch, pending: &mut Vec<PendingReply>,
                   report: &mut ShardReport, shard: usize, imgs: usize,
-                  error: Option<ServeError>) {
+                  error: Option<ServeFailure>) {
     let now = Instant::now();
     for (id, n) in &batch.parts {
         let Some(pos) = pending.iter().position(|p| p.id == *id) else {
@@ -938,7 +1350,7 @@ fn complete_batch(batch: &Batch, pending: &mut Vec<PendingReply>,
 }
 
 fn worker_main(ctx: WorkerCtx) -> ShardReport {
-    let WorkerCtx { shard, backend, problem, pass, batcher_cfg, cache,
+    let WorkerCtx { shard, backend, net, pass, batcher_cfg, cache,
                     spectra: spectra_precision, force, depth, health,
                     faults, restart_backoff, max_consecutive_failures,
                     degrade_cooldown, rx, ready } = ctx;
@@ -977,13 +1389,53 @@ fn worker_main(ctx: WorkerCtx) -> ShardReport {
     if let Some(f) = &faults {
         stage.set_faults(f.clone(), Some(shard));
     }
-    // the layer's weights live on the shard (one buffered copy, §3.3),
-    // alongside the spectra transformed from them — keyed by the
-    // version so a bump invalidates exactly the stale entries
-    let mut weights = rng.normal_vec(problem.weight_len());
-    let mut weights_version: u64 = 1;
-    let mut spectra = SpectrumCache::new(spectra_precision);
-    report.weights_version = weights_version;
+    // every layer's weights live on the shard (one buffered copy each,
+    // §3.3), alongside the per-layer spectra transformed from them —
+    // keyed by per-layer versions so a bump invalidates exactly the
+    // bumped layer's stale entries
+    let mut weights: Vec<Vec<f32>> = net
+        .layers()
+        .iter()
+        .map(|l| rng.normal_vec(l.problem.weight_len()))
+        .collect();
+    let mut versions: Vec<u64> = vec![1; net.len()];
+    let mut spectra = LayerSpectra::new(net.len(), spectra_precision);
+    report.weights_version = versions[0];
+    report.layers = net
+        .layers()
+        .iter()
+        .map(|l| LayerStats::named(&l.name))
+        .collect();
+    // ---- submit half: the packer thread ---------------------------
+    // the synthetic payload of batch k+1 is packed while the chain
+    // runs batch k: two capacity-sized slabs rotate between the
+    // packer and the flush path, and the fill time hidden behind
+    // compute lands in `pack_overlap`
+    let pack_len = match pass {
+        Pass::Fprop => net.input_len(capacity),
+        Pass::Bprop => net.output_len(capacity),
+        Pass::AccGrad => {
+            net.output_len(capacity) + net.input_len(capacity)
+        }
+    };
+    let (job_tx, job_rx) = mpsc::channel::<Vec<f32>>();
+    let (packed_tx, packed_rx) =
+        mpsc::channel::<(Vec<f32>, Duration)>();
+    let pack_seed = 0xFACADE ^ shard as u64;
+    let packer = std::thread::spawn(move || {
+        let mut prng = Rng::new(pack_seed);
+        while let Ok(mut buf) = job_rx.recv() {
+            let t0 = Instant::now();
+            for v in buf.iter_mut() {
+                *v = prng.normal();
+            }
+            if packed_tx.send((buf, t0.elapsed())).is_err() {
+                break;
+            }
+        }
+    });
+    job_tx.send(vec![0f32; pack_len]).ok();
+    let mut spare: Option<Vec<f32>> = Some(vec![0f32; pack_len]);
     let mut fill_sum = 0f64;
     let mut done = false;
     loop {
@@ -1037,17 +1489,19 @@ fn worker_main(ctx: WorkerCtx) -> ShardReport {
                     report.images += a.images;
                     report.depth.record(batcher.queued_images() as f64);
                 }
-                Msg::Weights { version, weights: w } => {
+                Msg::Weights { layer, version, weights: w } => {
                     // applied between flushes: already-flushed batches
                     // rode the old version, everything later serves the
                     // new one (bumps can arrive reordered only relative
-                    // to newer bumps — never regress)
-                    if version > weights_version {
-                        weights.clear();
-                        weights.extend_from_slice(&w);
-                        weights_version = version;
-                        spectra.bump(&problem, version);
-                        report.weights_version = version;
+                    // to newer bumps — never regress). Only the bumped
+                    // layer's spectra invalidate.
+                    if version > versions[layer] {
+                        weights[layer].clear();
+                        weights[layer].extend_from_slice(&w);
+                        versions[layer] = version;
+                        spectra.bump(layer, &net.layers()[layer].problem,
+                                     version);
+                        report.weights_version = versions[0];
                     }
                 }
                 Msg::Shutdown => done = true,
@@ -1067,6 +1521,31 @@ fn worker_main(ctx: WorkerCtx) -> ShardReport {
             }
         };
         let imgs = batch.images();
+        // ---- complete half: collect the pre-packed payload ----------
+        // the packer filled this slab while the previous chain ran;
+        // whatever fill time the stall did not expose was overlapped
+        let w0 = Instant::now();
+        let (mut payload, fill) = match packed_rx.recv() {
+            Ok(p) => p,
+            Err(_) => {
+                // packer gone (teardown race): pack inline, no overlap
+                let mut buf = spare
+                    .take()
+                    .unwrap_or_else(|| vec![0f32; pack_len]);
+                for v in buf.iter_mut() {
+                    *v = rng.normal();
+                }
+                (buf, Duration::ZERO)
+            }
+        };
+        let wait = w0.elapsed();
+        report.pack_wait += wait;
+        report.pack_overlap += fill.saturating_sub(wait);
+        // hand the packer the spare slab: batch k+1 packs while the
+        // chain below runs batch k
+        if let Some(buf) = spare.take() {
+            job_tx.send(buf).ok();
+        }
         // the scripted-panic probe counts this flush *before* the
         // supervised region so the occurrence index is deterministic
         // even when the launch itself panics for another reason
@@ -1074,6 +1553,9 @@ fn worker_main(ctx: WorkerCtx) -> ShardReport {
             .as_ref()
             .map_or(false,
                     |f| f.fire(FaultKind::Panic, Some(shard)));
+        // which chain position is executing — read back after a panic
+        // so the failure records the layer it hit
+        let in_layer: Cell<Option<usize>> = Cell::new(None);
         let t0 = Instant::now();
         // ---- supervised region ----------------------------------------
         // Everything that can panic — backend launches, staging-pool
@@ -1089,20 +1571,22 @@ fn worker_main(ctx: WorkerCtx) -> ShardReport {
                     let Backend::Pjrt { artifact, .. } = &backend else {
                         unreachable!("runtime without PJRT backend")
                     };
+                    let problem = net.layers()[0].problem;
                     // demotion is keyed batch-size-normalized so one
                     // bad launch covers every flush shape
                     let dkey = ConvProblem { s: 0, ..problem };
                     if cache.is_demoted(&dkey, pass) {
                         // cooldown: serve the host direct fallback
-                        let mut o = launch_host(
-                            &cache, Some(Strategy::Direct), pass,
-                            &problem, imgs, &weights, weights_version,
-                            &mut spectra, &mut rng, &mut stage, &mut ws,
-                            None, shard, degrade_cooldown);
+                        let mut o = run_chain(
+                            &cache, Some(Strategy::Direct), pass, &net,
+                            imgs, &weights, &versions, &mut spectra,
+                            &mut payload, &mut stage, &mut ws, None,
+                            shard, degrade_cooldown, &mut report.layers,
+                            &in_layer, None);
                         o.degraded = true;
                         o
                     } else if launch_pjrt(rt, artifact, &problem, imgs,
-                                          &weights, &mut rng) {
+                                          &payload, &weights[0]) {
                         FlushOutcome { wfft: None, degraded: false,
                                        launch_error: false, injected: 0 }
                     } else {
@@ -1111,24 +1595,27 @@ fn worker_main(ctx: WorkerCtx) -> ShardReport {
                         // direct fallback instead of dropping it
                         cache.demote(&dkey, pass,
                                      Instant::now() + degrade_cooldown);
-                        let mut o = launch_host(
-                            &cache, Some(Strategy::Direct), pass,
-                            &problem, imgs, &weights, weights_version,
-                            &mut spectra, &mut rng, &mut stage, &mut ws,
-                            None, shard, degrade_cooldown);
+                        let mut o = run_chain(
+                            &cache, Some(Strategy::Direct), pass, &net,
+                            imgs, &weights, &versions, &mut spectra,
+                            &mut payload, &mut stage, &mut ws, None,
+                            shard, degrade_cooldown, &mut report.layers,
+                            &in_layer, None);
                         o.degraded = true;
                         o.launch_error = true;
                         o
                     }
                 }
-                None => launch_host(&cache, force, pass, &problem, imgs,
-                                    &weights, weights_version,
-                                    &mut spectra, &mut rng, &mut stage,
-                                    &mut ws, faults.as_deref(), shard,
-                                    degrade_cooldown),
+                None => run_chain(&cache, force, pass, &net, imgs,
+                                  &weights, &versions, &mut spectra,
+                                  &mut payload, &mut stage, &mut ws,
+                                  faults.as_deref(), shard,
+                                  degrade_cooldown, &mut report.layers,
+                                  &in_layer, None),
             }
         }));
         let elapsed = t0.elapsed();
+        spare = Some(payload);
         report.launches += 1;
         report.busy += elapsed;
         fill_sum += imgs as f64 / capacity as f64;
@@ -1150,26 +1637,35 @@ fn worker_main(ctx: WorkerCtx) -> ShardReport {
                     // measured launch times back so deadline admission
                     // has an estimate (clean launches only — fallback
                     // timings would poison the estimate)
-                    cache.observe(&ConvProblem { s: imgs, ..problem },
-                                  pass, Strategy::Vendor,
-                                  elapsed.as_secs_f64());
+                    cache.observe(
+                        &ConvProblem { s: imgs,
+                                       ..net.layers()[0].problem },
+                        pass, Strategy::Vendor, elapsed.as_secs_f64());
                 }
                 my_health.record_success();
                 complete_batch(&batch, &mut pending, &mut report, shard,
                                imgs, None);
             }
-            Err(payload) => {
-                let msg = panic_msg(payload.as_ref());
+            Err(cause) => {
+                let msg = panic_msg(cause.as_ref());
+                let layer = in_layer.get();
                 eprintln!("serve: shard {shard} flush panicked: {msg}");
                 if inject_panic {
                     report.faults_injected += 1;
                 }
                 report.launch_errors += 1;
+                if let Some(i) = layer {
+                    if let Some(ls) = report.layers.get_mut(i) {
+                        ls.launch_errors += 1;
+                    }
+                }
                 // the batch is gone from the batcher: fail its requests
                 // with error completions (exactly-once — a hung client
-                // is worse than a served error)
+                // is worse than a served error), recording the chain
+                // position that blew up
                 complete_batch(&batch, &mut pending, &mut report, shard,
-                               imgs, Some(ServeError::ShardPanic));
+                               imgs,
+                               Some(ServeFailure::ShardPanic { layer }));
                 let consecutive = my_health.record_failure(&msg);
                 report.last_error = Some(msg);
                 if consecutive >= max_consecutive_failures {
@@ -1192,7 +1688,7 @@ fn worker_main(ctx: WorkerCtx) -> ShardReport {
                         depth.fetch_sub(n, Ordering::Relaxed);
                         complete_batch(
                             &b, &mut pending, &mut report, shard, n,
-                            Some(ServeError::ShardUnavailable));
+                            Some(ServeFailure::ShardUnavailable));
                     }
                     for p in pending.drain(..) {
                         report.requests_failed += 1;
@@ -1204,7 +1700,8 @@ fn worker_main(ctx: WorkerCtx) -> ShardReport {
                                 batch_images: 0,
                                 shard,
                                 deadline_met: false,
-                                error: Some(ServeError::ShardUnavailable),
+                                error:
+                                    Some(ServeFailure::ShardUnavailable),
                             })
                             .ok();
                     }
@@ -1228,7 +1725,8 @@ fn worker_main(ctx: WorkerCtx) -> ShardReport {
                                         shard,
                                         deadline_met: false,
                                         error: Some(
-                                            ServeError::ShardUnavailable),
+                                            ServeFailure::ShardUnavailable,
+                                        ),
                                     })
                                     .ok();
                             }
@@ -1261,15 +1759,29 @@ fn worker_main(ctx: WorkerCtx) -> ShardReport {
             }
         }
     }
+    // stop the packer (disconnect its job channel) and reap it —
+    // nothing is in flight once the flush loop has exited
+    drop(job_tx);
+    while packed_rx.try_recv().is_ok() {}
+    packer.join().ok();
     report.flushes_full = batcher.flushes_full;
     report.flushes_timeout = batcher.flushes_timeout;
     report.flushes_drain = batcher.flushes_drain;
-    // SpectrumCache::clear keeps its counters across supervised
+    // LayerSpectra::clear keeps its counters across supervised
     // restarts, so plain assignment still accounts for pre-crash work
-    report.spectra_hits = spectra.hits;
-    report.spectra_misses = spectra.misses;
-    report.spectra_invalidated = spectra.invalidated;
+    report.spectra_hits = spectra.hits();
+    report.spectra_misses = spectra.misses();
+    report.spectra_invalidated = spectra.invalidated();
+    for (i, ls) in report.layers.iter_mut().enumerate() {
+        let st = spectra.layer_stats(i);
+        ls.spectra_hits = st.hits;
+        ls.spectra_misses = st.misses;
+        ls.spectra_invalidated = st.invalidated;
+    }
     report.faults_injected += stage.faults_injected;
+    report.stage_allocations = stage.allocations;
+    report.stage_expansions = stage.expansions;
+    report.stage_reuses = stage.reuses;
     if report.launches > 0 {
         report.batch_fill = fill_sum / report.launches as f64;
     }
@@ -1277,14 +1789,14 @@ fn worker_main(ctx: WorkerCtx) -> ShardReport {
 }
 
 /// One PJRT launch: pad the flushed images to the artifact batch S.
+/// The payload slab was filled by the packer thread; only the live
+/// prefix is copied into the launch literal.
 fn launch_pjrt(rt: &Runtime, artifact: &str, p: &ConvProblem,
-               imgs: usize, weights: &[f32], rng: &mut Rng) -> bool {
+               imgs: usize, payload: &[f32], weights: &[f32]) -> bool {
     // PJRT literals consume their Vec, so this path allocates per launch
     let mut x = vec![0f32; p.input_len()];
     let live = imgs * p.f * p.h * p.w;
-    for v in x[..live].iter_mut() {
-        *v = rng.normal();
-    }
+    x[..live].copy_from_slice(&payload[..live]);
     let result = rt.execute_1f32(
         artifact,
         &[HostTensor::f32(x, &[p.s, p.f, p.h, p.w]),
@@ -1297,143 +1809,299 @@ fn launch_pjrt(rt: &Runtime, artifact: &str, p: &ConvProblem,
     true
 }
 
-/// One host-engine launch of a `imgs`-image batch: look the flush shape
-/// up in the strategy cache (tuning once on first sight) and dispatch
-/// the winner through the shard's workspace. Operand staging is pooled
-/// (allocation-free after warmup); the frequency engines also write
-/// their output through the pool, while the time-domain engines
-/// allocate their result by API design (no redundant pooled copy is
-/// layered on top).
+/// The two pooled ping-pong activation roles: layer `i` writes its
+/// output into `ACT_ROLES[i % 2]`, which layer `i + 1` reads as input
+/// while writing into the other slab. Allocation-free after warmup.
+const ACT_ROLES: [&str; 2] = ["serve.act0", "serve.act1"];
+
+/// Execute one admitted flush through every layer of `net` on the host
+/// engines. Layer `i`'s output becomes layer `i + 1`'s input through a
+/// pair of pooled ping-pong activation slabs ([`ACT_ROLES`]). Each
+/// layer looks its flush shape up in the strategy cache independently
+/// (tuning once on first sight) and serves weight spectra from its own
+/// positional cache in `spectra`.
 ///
-/// Degradation ladder: a problem inside a demotion cooldown serves the
-/// direct fallback instead of its tuned frequency strategy; a
-/// frequency flush whose output scans non-finite demotes the problem
-/// (cooldown keyed batch-size-normalized, `s = 0`) and re-serves the
-/// flush on direct. The returned [`FlushOutcome`] carries the
-/// weight-FFT time actually spent (`Some(ZERO)` on a spectrum hit —
-/// the steady state), the degraded/launch-error flags, and any
-/// scripted `nonfinite` faults injected.
+/// Degradation ladder, now per layer: a layer inside a demotion
+/// cooldown serves the direct fallback; a frequency layer whose output
+/// scans non-finite demotes that layer's problem (cooldown keyed
+/// batch-size-normalized, `s = 0`) and re-serves *that layer* on
+/// direct — downstream layers still consume a healthy activation.
+/// `in_layer` tracks the chain position so a panic anywhere in the
+/// chain can be attributed to the layer it happened in after
+/// `catch_unwind`. The returned [`FlushOutcome`] sums weight-FFT time
+/// across layers and ORs the degraded/launch-error flags.
+///
+/// Scripted faults: unqualified `nonfinite` entries count per flush
+/// (probed once, at the first frequency non-demoted layer);
+/// `layer<j>`-qualified entries are probed at every chain position.
+/// `capture` (tests only) collects each layer's output.
 #[allow(clippy::too_many_arguments)]
-fn launch_host(cache: &StrategyCache, force: Option<Strategy>, pass: Pass,
-               p: &ConvProblem, imgs: usize, weights: &[f32],
-               version: u64, spectra: &mut SpectrumCache, rng: &mut Rng,
-               stage: &mut BufferPool, ws: &mut Workspace,
-               faults: Option<&FaultPlan>, shard: usize,
-               cooldown: Duration)
-               -> FlushOutcome {
-    let q = ConvProblem { s: imgs, ..*p };
-    // demotion is keyed batch-size-normalized (s = 0) so one bad
-    // output covers every flush shape of the problem at once
-    let dkey = ConvProblem { s: 0, ..*p };
+fn run_chain(cache: &StrategyCache, force: Option<Strategy>, pass: Pass,
+             net: &NetPlan, imgs: usize, weights: &[Vec<f32>],
+             versions: &[u64], spectra: &mut LayerSpectra,
+             payload: &mut [f32], stage: &mut BufferPool,
+             ws: &mut Workspace, faults: Option<&FaultPlan>,
+             shard: usize, cooldown: Duration,
+             layers: &mut [LayerStats], in_layer: &Cell<Option<usize>>,
+             mut capture: Option<&mut Vec<Vec<f32>>>)
+             -> FlushOutcome {
     let mut outcome = FlushOutcome { wfft: None, degraded: false,
                                      launch_error: false, injected: 0 };
-    let mut choice = match force {
-        // deterministic probe: serve the forced strategy at its default
-        // basis without consulting (or populating) the tuner
-        Some(strategy) => Choice { strategy, n_fft: None, seconds: 0.0 },
-        None => cache.ensure(&q, pass),
-    };
-    let fallback =
-        Choice { strategy: Strategy::Direct, n_fft: None, seconds: 0.0 };
-    let frequency = matches!(
-        choice.strategy,
-        Strategy::VendorFft | Strategy::Fbfft | Strategy::FbfftScalar);
-    if frequency && cache.is_demoted(&dkey, pass) {
-        choice = fallback;
-        outcome.degraded = true;
-    }
-    // the "payload": a fresh synthetic operand per flush
-    let a_len = match pass {
-        Pass::Fprop => q.input_len(),
-        Pass::Bprop | Pass::AccGrad => q.output_len(),
-    };
-    let mut a = stage.take_raw("serve.a", a_len);
-    for v in a.iter_mut() {
-        *v = rng.normal();
-    }
-    if frequency && !outcome.degraded {
+    if pass == Pass::AccGrad {
+        // accGrad pairs the gradient with an activation, not weights;
+        // the packer stages both in one slab — [grad_out at capacity |
+        // activation at capacity]. Single-layer only (enforced at
+        // start()).
+        let p = &net.layers()[0].problem;
+        let q = ConvProblem { s: imgs, ..*p };
+        let dkey = ConvProblem { s: 0, ..*p };
+        in_layer.set(Some(0));
         if let Some(plan) = faults {
-            if plan.fire(FaultKind::NonFinite, Some(shard)) {
-                outcome.injected += 1;
-                a[0] = f32::NAN;
+            if plan.fire_layer(FaultKind::Panic, Some(shard), 0) {
+                panic!("injected shard panic (layer 0, shard {shard})");
             }
         }
-    }
-    match pass {
-        Pass::AccGrad => {
-            // accGrad pairs the gradient with an activation, not weights
-            let mut b = stage.take_raw("serve.b", q.input_len());
-            for v in b.iter_mut() {
-                *v = rng.normal();
-            }
-            let (_, finite) =
-                run_strategy(&choice, &q, pass, &a, &b, None, stage, ws);
-            if !finite {
-                cache.demote(&dkey, pass, Instant::now() + cooldown);
-                eprintln!("serve: non-finite {:?} output on shard \
-                           {shard}; demoting to direct",
-                          choice.strategy);
-                for v in a.iter_mut() {
-                    *v = rng.normal();
+        let t0 = Instant::now();
+        let mut choice = match force {
+            Some(strategy) =>
+                Choice { strategy, n_fft: None, seconds: 0.0 },
+            None => cache.ensure(&q, pass),
+        };
+        let fallback = Choice { strategy: Strategy::Direct,
+                                n_fft: None, seconds: 0.0 };
+        let frequency = matches!(
+            choice.strategy,
+            Strategy::VendorFft | Strategy::Fbfft
+                | Strategy::FbfftScalar);
+        let mut degraded = false;
+        if frequency && cache.is_demoted(&dkey, pass) {
+            choice = fallback;
+            degraded = true;
+        }
+        // split the packed slab into its gradient/activation halves
+        // (packed at capacity; only the live prefixes are consumed)
+        let out1 = net.output_len(1);
+        let in1 = net.input_len(1);
+        let offset = (payload.len() / (out1 + in1)) * out1;
+        let (a_part, b_part) = payload.split_at_mut(offset);
+        let a = &mut a_part[..q.output_len()];
+        let b = &b_part[..q.input_len()];
+        let mut planted: Option<f32> = None;
+        if frequency && !degraded {
+            if let Some(plan) = faults {
+                // both probes always run so occurrence counters
+                // advance deterministically
+                let flush_probe =
+                    plan.fire(FaultKind::NonFinite, Some(shard));
+                let layer_probe =
+                    plan.fire_layer(FaultKind::NonFinite, Some(shard), 0);
+                if flush_probe || layer_probe {
+                    outcome.injected += 1;
+                    planted = Some(a[0]);
+                    a[0] = f32::NAN;
                 }
-                run_strategy(&fallback, &q, pass, &a, &b, None, stage,
-                             ws);
-                outcome.degraded = true;
-                outcome.launch_error = true;
-            }
-            stage.put("serve.b", b);
-        }
-        _ => {
-            let (wfft, finite) =
-                run_strategy(&choice, &q, pass, &a, weights,
-                             Some((spectra, version)), stage, ws);
-            if !finite {
-                cache.demote(&dkey, pass, Instant::now() + cooldown);
-                eprintln!("serve: non-finite {:?} output on shard \
-                           {shard}; demoting to direct",
-                          choice.strategy);
-                // re-serve the flush on the always-correct path with a
-                // regenerated operand (the bad values must not leak
-                // into the fallback result)
-                for v in a.iter_mut() {
-                    *v = rng.normal();
-                }
-                run_strategy(&fallback, &q, pass, &a, weights, None,
-                             stage, ws);
-                outcome.degraded = true;
-                outcome.launch_error = true;
-            } else {
-                outcome.wfft = wfft;
             }
         }
+        let mut out = stage.take_raw(ACT_ROLES[0], q.weight_len());
+        let (_, finite) =
+            run_strategy_into(&choice, &q, pass, a, b, None, &mut out,
+                              ws);
+        if !finite {
+            cache.demote(&dkey, pass, Instant::now() + cooldown);
+            eprintln!("serve: non-finite {:?} output on shard {shard} \
+                       (layer {}); demoting to direct",
+                      choice.strategy, net.layers()[0].name);
+            // undo the planted value — the NaN must not leak into the
+            // always-correct fallback result
+            if let Some(prev) = planted.take() {
+                a[0] = prev;
+            }
+            run_strategy_into(&fallback, &q, pass, a, b, None, &mut out,
+                              ws);
+            degraded = true;
+            outcome.launch_error = true;
+            layers[0].launch_errors += 1;
+        }
+        if let Some(cap) = capture.as_mut() {
+            cap.push(out.to_vec());
+        }
+        stage.put(ACT_ROLES[0], out);
+        if degraded {
+            outcome.degraded = true;
+            layers[0].degraded += 1;
+        }
+        layers[0].latency.record(t0.elapsed());
+        in_layer.set(None);
+        return outcome;
     }
-    stage.put("serve.a", a);
+    let n_layers = net.len();
+    let mut carry: Option<Vec<f32>> = None;
+    let mut wfft_total = Duration::ZERO;
+    let mut saw_wfft = false;
+    // the per-flush nonfinite probe fires at most once per flush (on
+    // the first frequency, non-demoted layer) so unqualified
+    // `nonfinite@N` specs keep counting flushes, not chain positions
+    let mut freq_probed = false;
+    for i in 0..n_layers {
+        in_layer.set(Some(i));
+        if let Some(plan) = faults {
+            if plan.fire_layer(FaultKind::Panic, Some(shard), i) {
+                panic!("injected shard panic (layer {i}, shard \
+                        {shard})");
+            }
+        }
+        let t0 = Instant::now();
+        let p = &net.layers()[i].problem;
+        let q = ConvProblem { s: imgs, ..*p };
+        // demotion is keyed batch-size-normalized (s = 0) so one bad
+        // output covers every flush shape of the layer at once
+        let dkey = ConvProblem { s: 0, ..*p };
+        let mut choice = match force {
+            // deterministic probe: serve the forced strategy at its
+            // default basis without consulting the tuner
+            Some(strategy) =>
+                Choice { strategy, n_fft: None, seconds: 0.0 },
+            None => cache.ensure(&q, pass),
+        };
+        let fallback = Choice { strategy: Strategy::Direct,
+                                n_fft: None, seconds: 0.0 };
+        let frequency = matches!(
+            choice.strategy,
+            Strategy::VendorFft | Strategy::Fbfft
+                | Strategy::FbfftScalar);
+        let mut degraded = false;
+        if frequency && cache.is_demoted(&dkey, pass) {
+            choice = fallback;
+            degraded = true;
+        }
+        let a_len = match pass {
+            Pass::Fprop => q.input_len(),
+            Pass::Bprop | Pass::AccGrad => q.output_len(),
+        };
+        // layer 0 consumes the packed payload; later layers consume
+        // the previous layer's pooled output slab
+        let a_buf: &mut [f32] = match carry.as_mut() {
+            Some(prev) => &mut prev[..a_len],
+            None => &mut payload[..a_len],
+        };
+        let mut planted: Option<f32> = None;
+        if frequency && !degraded {
+            if let Some(plan) = faults {
+                // both probes always run so occurrence counters
+                // advance deterministically
+                let flush_probe = !freq_probed
+                    && plan.fire(FaultKind::NonFinite, Some(shard));
+                let layer_probe =
+                    plan.fire_layer(FaultKind::NonFinite, Some(shard),
+                                    i);
+                if flush_probe || layer_probe {
+                    outcome.injected += 1;
+                    planted = Some(a_buf[0]);
+                    a_buf[0] = f32::NAN;
+                }
+            }
+            freq_probed = true;
+        }
+        let out_len = match pass {
+            Pass::Fprop => q.output_len(),
+            Pass::Bprop | Pass::AccGrad => q.input_len(),
+        };
+        let role = ACT_ROLES[i % 2];
+        let mut out = stage.take_raw(role, out_len);
+        let (wfft, finite) = run_strategy_into(
+            &choice, &q, pass, a_buf, &weights[i],
+            Some((spectra.layer(i), versions[i])), &mut out, ws);
+        if !finite {
+            cache.demote(&dkey, pass, Instant::now() + cooldown);
+            eprintln!("serve: non-finite {:?} output on shard {shard} \
+                       (layer {}); demoting to direct",
+                      choice.strategy, net.layers()[i].name);
+            // re-serve this layer on the always-correct path with the
+            // planted value undone (the NaN must not leak into the
+            // fallback result)
+            if let Some(prev) = planted.take() {
+                a_buf[0] = prev;
+            }
+            run_strategy_into(&fallback, &q, pass, a_buf, &weights[i],
+                              None, &mut out, ws);
+            degraded = true;
+            outcome.launch_error = true;
+            layers[i].launch_errors += 1;
+        } else if let Some(d) = wfft {
+            wfft_total += d;
+            saw_wfft = true;
+            layers[i].weight_fft.record(d.as_secs_f64());
+        }
+        if degraded {
+            outcome.degraded = true;
+            layers[i].degraded += 1;
+        }
+        layers[i].latency.record(t0.elapsed());
+        if let Some(cap) = capture.as_mut() {
+            cap.push(out.to_vec());
+        }
+        // layer i-1's slab (same parity as i+1) is fully consumed:
+        // hand it back so layer i+1 can take it as its output
+        if let Some(prev) = carry.take() {
+            stage.put(ACT_ROLES[(i + 1) % 2], prev);
+        }
+        carry = Some(out);
+    }
+    if let Some(last) = carry.take() {
+        stage.put(ACT_ROLES[(n_layers - 1) % 2], last);
+    }
+    in_layer.set(None);
+    if saw_wfft {
+        outcome.wfft = Some(wfft_total);
+    }
     outcome
 }
 
-/// Dispatch one pass through the tuned strategy. `a`/`b` follow each
-/// engine's own operand order: (x, weights) for fprop, (grad_output,
-/// weights) for bprop, (grad_output, x) for accGrad. When `b` is the
-/// weight tensor the caller passes the shard's spectrum cache and the
-/// live `weights_version`; frequency strategies then serve from the
-/// cached spectrum — skipping the weight pad+FFT on a hit — and the
+/// Run `input` through every layer of `net` with `weights`, returning
+/// each layer's output (test/oracle surface over the same [`run_chain`]
+/// the shard workers execute, minus faults and degradation state).
+/// `force` pins every layer to one strategy; `None` tunes through a
+/// fresh in-memory cache.
+pub fn chain_outputs(net: &NetPlan, imgs: usize, input: &[f32],
+                     weights: &[Vec<f32>], force: Option<Strategy>)
+                     -> Vec<Vec<f32>> {
+    let cache = StrategyCache::open(None);
+    let mut spectra =
+        LayerSpectra::new(net.len(), SpectrumPrecision::F32);
+    let mut stage = BufferPool::new();
+    let mut ws = Workspace::new();
+    let mut layers: Vec<LayerStats> =
+        net.layers().iter().map(|l| LayerStats::named(&l.name)).collect();
+    let versions = vec![1u64; net.len()];
+    let in_layer = Cell::new(None);
+    let mut payload = input.to_vec();
+    let mut captured = Vec::new();
+    run_chain(&cache, force, Pass::Fprop, net, imgs, weights, &versions,
+              &mut spectra, &mut payload, &mut stage, &mut ws, None, 0,
+              Duration::from_secs(1), &mut layers, &in_layer,
+              Some(&mut captured));
+    captured
+}
+
+/// Dispatch one layer's pass through its tuned strategy, writing the
+/// result into `out`. `a`/`b` follow each engine's own operand order:
+/// (x, weights) for fprop, (grad_output, weights) for bprop,
+/// (grad_output, x) for accGrad. When `b` is the weight tensor the
+/// caller passes the layer's spectrum cache and its live
+/// `weights_version`; frequency strategies then serve from the cached
+/// spectrum — skipping the weight pad+FFT on a hit — and the
 /// `Option<Duration>` is the weight-FFT time actually spent. The bool
 /// is the output-health verdict: frequency outputs are scanned for
 /// non-finite values (the paper's frequency path is where numerical
 /// blowups surface); the time-domain engines always report healthy.
 #[allow(clippy::too_many_arguments)]
-fn run_strategy(choice: &Choice, q: &ConvProblem, pass: Pass, a: &[f32],
-                b: &[f32], spectra: Option<(&mut SpectrumCache, u64)>,
-                stage: &mut BufferPool, ws: &mut Workspace)
-                -> (Option<Duration>, bool) {
+fn run_strategy_into(choice: &Choice, q: &ConvProblem, pass: Pass,
+                     a: &[f32], b: &[f32],
+                     spectra: Option<(&mut SpectrumCache, u64)>,
+                     out: &mut [f32], ws: &mut Workspace)
+                     -> (Option<Duration>, bool) {
     match choice.strategy {
         Strategy::VendorFft | Strategy::Fbfft | Strategy::FbfftScalar => {
-            let out_len = match pass {
-                Pass::Fprop => q.output_len(),
-                Pass::Bprop => q.input_len(),
-                Pass::AccGrad => q.weight_len(),
-            };
-            let mut out = stage.take_raw("serve.out", out_len);
             let mode = match choice.strategy {
                 Strategy::VendorFft => FftMode::Vendor,
                 Strategy::Fbfft => FftMode::Fbfft,
@@ -1447,55 +2115,57 @@ fn run_strategy(choice: &Choice, q: &ConvProblem, pass: Pass, a: &[f32],
                 (Pass::Fprop, Some((spectra, version))) => {
                     let (spec, took) =
                         spectra.ensure(&eng, q, b, version, ws);
-                    eng.fprop_spec_into(q, a, spec, &mut out, ws);
+                    eng.fprop_spec_into(q, a, spec, out, ws);
                     Some(took)
                 }
                 (Pass::Bprop, Some((spectra, version))) => {
                     let (spec, took) =
                         spectra.ensure(&eng, q, b, version, ws);
-                    eng.bprop_spec_into(q, a, spec, &mut out, ws);
+                    eng.bprop_spec_into(q, a, spec, out, ws);
                     Some(took)
                 }
                 (Pass::Fprop, None) => {
-                    eng.fprop_into(q, a, b, &mut out, ws);
+                    eng.fprop_into(q, a, b, out, ws);
                     None
                 }
                 (Pass::Bprop, None) => {
-                    eng.bprop_into(q, a, b, &mut out, ws);
+                    eng.bprop_into(q, a, b, out, ws);
                     None
                 }
                 (Pass::AccGrad, _) => {
-                    eng.accgrad_into(q, a, b, &mut out, ws);
+                    eng.accgrad_into(q, a, b, out, ws);
                     None
                 }
             };
             let finite = out.iter().all(|v| v.is_finite());
-            stage.put("serve.out", out);
             (wfft, finite)
         }
         // the vendor black box has no host twin; direct is its analogue
         Strategy::Direct | Strategy::Vendor => {
-            let _ = match pass {
+            let r = match pass {
                 Pass::Fprop => direct::fprop(q, a, b),
                 Pass::Bprop => direct::bprop(q, a, b),
                 Pass::AccGrad => direct::accgrad(q, a, b),
             };
+            out.copy_from_slice(&r);
             (None, true)
         }
         Strategy::Im2col => {
-            let _ = match pass {
+            let r = match pass {
                 Pass::Fprop => im2col::fprop(q, a, b),
                 Pass::Bprop => im2col::bprop(q, a, b),
                 Pass::AccGrad => im2col::accgrad(q, a, b),
             };
+            out.copy_from_slice(&r);
             (None, true)
         }
         Strategy::FbfftTiled(d) => {
-            let _ = match pass {
+            let r = match pass {
                 Pass::Fprop => tiled::fprop(q, a, b, d),
                 Pass::Bprop => tiled::bprop(q, a, b, d),
                 Pass::AccGrad => tiled::accgrad(q, a, b, d),
             };
+            out.copy_from_slice(&r);
             (None, true)
         }
     }
@@ -1518,10 +2188,15 @@ pub struct ServiceReport {
 
 /// The original single-worker PJRT service, now a one-shard
 /// [`ServeEngine`] (same admission loop, same report shape).
+#[deprecated(since = "0.8.0",
+             note = "use ServeEngine::start(Backend::Pjrt { .. }, \
+                     NetPlan::single(p), cfg) — the net-level engine \
+                     with the same admission loop")]
 pub struct ConvService {
     engine: ServeEngine,
 }
 
+#[allow(deprecated)]
 impl ConvService {
     /// Serve the named fprop artifact from `artifacts_dir`.
     pub fn start(artifacts_dir: PathBuf, artifact: String,
@@ -1542,9 +2217,13 @@ impl ConvService {
         Ok(ConvService { engine })
     }
 
-    pub fn submit(&self, req: ServeRequest) {
-        let accepted = self.engine.submit(req);
-        debug_assert!(accepted.is_ok(), "legacy service never rejects");
+    /// Submit one request. The legacy 1-hour default deadline makes
+    /// [`ServeFailure::DeadlineUnmeetable`] unreachable in practice,
+    /// but the error now surfaces instead of panicking in a
+    /// `debug_assert`.
+    pub fn submit(&self, req: ServeRequest)
+                  -> std::result::Result<(), ServeFailure> {
+        self.engine.submit(req)
     }
 
     /// Flush outstanding work and join the worker.
@@ -1598,6 +2277,7 @@ mod tests {
             cache: CacheStats::default(),
             capacity: 8,
             pass: Pass::Fprop,
+            net: NetPlan::single(ConvProblem::square(8, 1, 1, 8, 3)),
         };
         assert_eq!(r.requests(), 4);
         assert_eq!(r.images(), 9);
@@ -1632,7 +2312,7 @@ mod tests {
             deadline: Some(expired),
             reply: tx.clone(),
         });
-        assert_eq!(accepted, Err(SubmitError::DeadlineUnmeetable),
+        assert_eq!(accepted, Err(ServeFailure::DeadlineUnmeetable),
                    "expired deadline must be rejected");
         let accepted = engine.submit(ServeRequest {
             id: 2,

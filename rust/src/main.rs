@@ -6,9 +6,10 @@
 
 use std::process::ExitCode;
 
-use fbfft_repro::coordinator::batcher::BatcherConfig;
-use fbfft_repro::coordinator::service::{Completion, EngineConfig,
-                                        ServeEngine, ServeRequest};
+use fbfft_repro::coordinator::service::{Backend, Completion,
+                                        EngineConfig, ServeEngine,
+                                        ServeRequest};
+use fbfft_repro::coordinator::NetPlan;
 use fbfft_repro::reports;
 use fbfft_repro::runtime::Runtime;
 use fbfft_repro::trace;
@@ -181,16 +182,17 @@ fn run(a: Args) -> anyhow::Result<()> {
 }
 
 fn serve_demo(a: &Args) -> anyhow::Result<()> {
-    // serve the quickstart fprop layer through the sharded engine: PJRT
-    // artifacts when available, the strategy-cache host path otherwise
-    let cfg = |capacity: usize| EngineConfig {
-        shards: a.shards.max(1),
-        batcher: BatcherConfig {
-            capacity,
-            max_wait: std::time::Duration::from_millis(2),
-        },
-        default_deadline: std::time::Duration::from_millis(500),
-        ..Default::default()
+    // serve through the sharded engine: the quickstart fprop layer on
+    // PJRT artifacts when available, the AlexNet-style layer chain on
+    // the strategy-cache host path otherwise
+    let cfg = |capacity: usize| {
+        EngineConfig::builder()
+            .shards(a.shards.max(1))
+            .capacity(capacity)
+            .max_wait(std::time::Duration::from_millis(2))
+            .default_deadline(std::time::Duration::from_millis(500))
+            .build()
+            .expect("demo config is valid")
     };
     let pj = fbfft_repro::conv::ConvProblem::square(2, 4, 4, 16, 3);
     let pjrt = if a.no_pjrt {
@@ -207,9 +209,11 @@ fn serve_demo(a: &Args) -> anyhow::Result<()> {
         }
         Err(e) => {
             eprintln!("note: PJRT serving unavailable ({e:#}); \
-                       using the host-engine backend");
-            let p = fbfft_repro::conv::ConvProblem::square(8, 4, 4, 16, 3);
-            (ServeEngine::start_host(p, cfg(p.s))?, p.s)
+                       serving the AlexNet-style chain on the \
+                       host-engine backend");
+            let net = NetPlan::alexnet_small(8);
+            let cap = net.batch();
+            (ServeEngine::start(Backend::Host, net, cfg(cap))?, cap)
         }
     };
     let trace = trace::request_trace(a.requests, 400.0, 0x5E);

@@ -3,13 +3,17 @@
 //! that same document — the JSON is built first and the table reads
 //! only it, so the two can never disagree (the `breakdown` pattern).
 //!
-//! Schema (version 3 — v2 plus the supervision/fault-tolerance ledger:
-//! the per-shard `launches == full + timeout + drain` invariant is
-//! joined by `completed + failed == requests`):
+//! Schema (version 4 — v3 plus the net-level chain: one engine now
+//! serves a whole [`NetPlan`](crate::coordinator::NetPlan), so the
+//! document gains the chain size, the end-to-end `states_per_sec`
+//! rate (images through the *full chain* per wall second), the
+//! submit/complete-overlap evidence counters, and one `per_layer` row
+//! per chain position, merged across shards):
 //!
 //! ```text
-//! { "version": 3, "bench": "serve", "mode": "closed"|"open",
+//! { "version": 4, "bench": "serve", "mode": "closed"|"open",
 //!   "smoke": bool, "shards": N, "capacity": C, "pass": "fprop",
+//!   "layers": L,                                // chain length
 //!   "requests": n, "images": n, "launches": n,
 //!   "completed": n, "requests_failed": n,       // ledger: == requests
 //!   "rejected_deadline": n, "rejected_unavailable": n,
@@ -18,6 +22,11 @@
 //!   "faults_injected": n, "circuit_broken": n,  // shards tripped
 //!   "wall_s": s, "throughput_img_s": r, "batch_fill": f,
 //!   "busy_frac": f,
+//!   "states_per_sec": r,       // images through the whole chain / s
+//!   "pack_overlap_ns": n,      // host packing hidden behind layer
+//!                              // execution (the submit/complete
+//!                              // split's evidence counter)
+//!   "pack_wait_ns": n,         // flush stalls waiting on the packer
 //!   "weights_version": v,
 //!   "spectra_hits": n, "spectra_misses": n, "spectra_invalidated": n,
 //!   "weight_fft_ns": n,       // total weight-FFT time over the run
@@ -26,6 +35,11 @@
 //!   "cache": {"entries": n, "hits": n, "misses": n, "tunes": n,
 //!             "load_warnings": n, "lock_recovered": n},
 //!   "aggregate": {"count","mean_ms","p50_ms","p95_ms","p99_ms","max_ms"},
+//!   "per_layer": [ {"layer","name","count","mean_ms","p50_ms",
+//!                   "p95_ms","p99_ms","max_ms","spectra_hits",
+//!                   "spectra_misses","spectra_invalidated",
+//!                   "weight_fft_ns","degraded_flushes",
+//!                   "launch_errors"} ],
 //!   "per_shard": [ {"shard","requests","images","launches",
 //!                   "completed","requests_failed","restarts",
 //!                   "degraded_flushes","faults_injected",
@@ -33,6 +47,7 @@
 //!                   "flushes_full","flushes_timeout","flushes_drain",
 //!                   "spectra_hits","spectra_misses",
 //!                   "spectra_invalidated","weight_fft_ns","batch_fill",
+//!                   "pack_overlap_ns","pack_wait_ns",
 //!                   "queue_depth_p50","queue_depth_max",
 //!                   "mean_ms","p50_ms","p95_ms","p99_ms","max_ms"} ] }
 //! ```
@@ -102,19 +117,46 @@ pub fn serve_json(r: &EngineReport, mode: &str, smoke: bool,
         row.insert("weight_fft_ns".into(),
                    Json::num(s.weight_fft.sum() * 1e9));
         row.insert("batch_fill".into(), Json::num(s.batch_fill));
+        row.insert("pack_overlap_ns".into(),
+                   Json::num(s.pack_overlap.as_secs_f64() * 1e9));
+        row.insert("pack_wait_ns".into(),
+                   Json::num(s.pack_wait.as_secs_f64() * 1e9));
         row.insert("queue_depth_p50".into(), Json::num(d.p50));
         row.insert("queue_depth_max".into(), Json::num(d.max));
         per_shard.push(Json::Obj(row));
     }
+    let mut per_layer = Vec::with_capacity(r.net.len());
+    for (i, ls) in r.layer_stats().iter().enumerate() {
+        let mut row = match summary_ms(&ls.latency) {
+            Json::Obj(m) => m,
+            _ => unreachable!("summary_ms builds an object"),
+        };
+        row.insert("layer".into(), Json::num(i as f64));
+        row.insert("name".into(), Json::str(&ls.name));
+        row.insert("spectra_hits".into(),
+                   Json::num(ls.spectra_hits as f64));
+        row.insert("spectra_misses".into(),
+                   Json::num(ls.spectra_misses as f64));
+        row.insert("spectra_invalidated".into(),
+                   Json::num(ls.spectra_invalidated as f64));
+        row.insert("weight_fft_ns".into(),
+                   Json::num(ls.weight_fft.sum() * 1e9));
+        row.insert("degraded_flushes".into(),
+                   Json::num(ls.degraded as f64));
+        row.insert("launch_errors".into(),
+                   Json::num(ls.launch_errors as f64));
+        per_layer.push(Json::Obj(row));
+    }
     let weight_fft = r.weight_fft();
     Json::obj(vec![
-        ("version", Json::num(3.0)),
+        ("version", Json::num(4.0)),
         ("bench", Json::str("serve")),
         ("mode", Json::str(mode)),
         ("smoke", Json::Bool(smoke)),
         ("shards", Json::num(r.shards.len() as f64)),
         ("capacity", Json::num(r.capacity as f64)),
         ("pass", Json::str(r.pass.tag())),
+        ("layers", Json::num(r.net.len() as f64)),
         ("requests", Json::num(r.requests() as f64)),
         ("images", Json::num(r.images() as f64)),
         ("launches", Json::num(r.launches() as f64)),
@@ -144,6 +186,17 @@ pub fn serve_json(r: &EngineReport, mode: &str, smoke: bool,
          } else {
              0.0
          })),
+        // every served image traverses the whole chain, so the
+        // end-to-end state rate is images per wall second
+        ("states_per_sec",
+         Json::num(if wall_s > 0.0 {
+             r.images() as f64 / wall_s
+         } else {
+             0.0
+         })),
+        ("pack_overlap_ns",
+         Json::num(r.pack_overlap().as_secs_f64() * 1e9)),
+        ("pack_wait_ns", Json::num(r.pack_wait().as_secs_f64() * 1e9)),
         ("weights_version", Json::num(r.weights_version() as f64)),
         ("spectra_hits", Json::num(r.spectra_hits() as f64)),
         ("spectra_misses", Json::num(r.spectra_misses() as f64)),
@@ -161,6 +214,7 @@ pub fn serve_json(r: &EngineReport, mode: &str, smoke: bool,
              Json::num(r.cache.lock_recovered as f64)),
         ])),
         ("aggregate", summary_ms(&r.aggregate_latency())),
+        ("per_layer", Json::Arr(per_layer)),
         ("per_shard", Json::Arr(per_shard)),
     ])
 }
@@ -205,13 +259,35 @@ pub fn serve_table(j: &Json) -> String {
             ms(g(agg, "max_ms")),
         ]);
     }
+    // one row per chain position, from the merged per_layer block
+    let mut lt = Table::new(&[
+        "layer", "name", "flushes", "p50 ms", "p99 ms", "max ms",
+        "spec hit/miss", "wfft ms", "degraded", "errors"]);
+    for l in j.get("per_layer").and_then(Json::as_arr).unwrap_or(&[]) {
+        lt.row(vec![
+            format!("{}", n(l, "layer")),
+            l.get("name").and_then(Json::as_str).unwrap_or("?").into(),
+            format!("{}", n(l, "count")),
+            ms(g(l, "p50_ms")),
+            ms(g(l, "p99_ms")),
+            ms(g(l, "max_ms")),
+            format!("{}/{}", n(l, "spectra_hits"),
+                    n(l, "spectra_misses")),
+            format!("{:.2}", g(l, "weight_fft_ns") / 1e6),
+            format!("{}", n(l, "degraded_flushes")),
+            format!("{}", n(l, "launch_errors")),
+        ]);
+    }
     let cache = j.get("cache");
     let cn = |k: &str| cache.and_then(|c| c.get(k))
         .and_then(Json::as_usize).unwrap_or(0);
     format!(
-        "serve: {} mode, {} shards x capacity {} ({} pass)\n{}\
+        "serve: {} mode, {} shards x capacity {} ({} pass, {} layers)\n\
+         {}{}\
          throughput {:.0} img/s over {:.2}s wall, busy {:.0}%  \
          rejected {}  sla_miss {}\n\
+         chain: {:.0} states/s end-to-end, pack overlap {:.2} ms \
+         (wait {:.2} ms)\n\
          strategy cache: {} entries, {} hits / {} misses, {} tunes\n\
          weight spectra: v{}, {} hits / {} misses, {} invalidated, \
          weight-FFT {:.2} ms total ({:.0} ns last flush)\n\
@@ -221,10 +297,13 @@ pub fn serve_table(j: &Json) -> String {
         j.get("mode").and_then(Json::as_str).unwrap_or("?"),
         n(j, "shards"), n(j, "capacity"),
         j.get("pass").and_then(Json::as_str).unwrap_or("?"),
-        t.render(),
+        n(j, "layers"),
+        t.render(), lt.render(),
         g(j, "throughput_img_s"), g(j, "wall_s"),
         g(j, "busy_frac") * 100.0,
         n(j, "rejected_deadline"), n(j, "sla_miss"),
+        g(j, "states_per_sec"),
+        g(j, "pack_overlap_ns") / 1e6, g(j, "pack_wait_ns") / 1e6,
         cn("entries"), cn("hits"), cn("misses"), cn("tunes"),
         n(j, "weights_version"), n(j, "spectra_hits"),
         n(j, "spectra_misses"), n(j, "spectra_invalidated"),
@@ -238,10 +317,11 @@ pub fn serve_table(j: &Json) -> String {
 mod tests {
     use super::*;
     use crate::coordinator::autotuner::CacheStats;
-    use crate::coordinator::service::ShardReport;
-    use crate::coordinator::Pass;
+    use crate::coordinator::service::{LayerStats, ShardReport};
+    use crate::coordinator::{NetPlan, Pass};
 
     fn sample_report() -> EngineReport {
+        let net = NetPlan::alexnet_small(8);
         let mut shards = Vec::new();
         for i in 0..2usize {
             let mut s = ShardReport { shard: i, ..Default::default() };
@@ -261,6 +341,8 @@ mod tests {
             s.restarts = i;
             s.degraded_flushes = i;
             s.faults_injected = i;
+            s.pack_overlap = Duration::from_micros(150);
+            s.pack_wait = Duration::from_micros(30);
             // one miss paid the weight FFT, then four hits were free
             s.weight_fft.record(2e-3);
             for _ in 0..4 {
@@ -270,6 +352,26 @@ mod tests {
                 s.latency.record(k as f64 * 1e-3 * (i + 1) as f64);
                 s.depth.record(k as f64);
             }
+            // per-chain-position rows, one per net layer
+            s.layers = net
+                .layers()
+                .iter()
+                .enumerate()
+                .map(|(li, l)| {
+                    let mut ls = LayerStats {
+                        name: l.name.clone(),
+                        spectra_hits: 2,
+                        spectra_misses: 1,
+                        degraded: li, // layer 1+ saw a degraded flush
+                        ..Default::default()
+                    };
+                    for _ in 0..5 {
+                        ls.latency.record(1e-3 * (li + 1) as f64);
+                    }
+                    ls.weight_fft.record(1e-3);
+                    ls
+                })
+                .collect();
             shards.push(s);
         }
         EngineReport {
@@ -281,6 +383,7 @@ mod tests {
                                 tunes: 3, ..Default::default() },
             capacity: 8,
             pass: Pass::Fprop,
+            net,
         }
     }
 
@@ -289,12 +392,13 @@ mod tests {
         let r = sample_report();
         let j = serve_json(&r, "closed", true,
                            Duration::from_millis(500));
-        assert_eq!(j.get("version").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("version").unwrap().as_usize(), Some(4));
         assert_eq!(j.get("requests").unwrap().as_usize(), Some(30));
         assert_eq!(j.get("images").unwrap().as_usize(), Some(60));
+        assert_eq!(j.get("layers").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("rejected_deadline").unwrap().as_usize(),
                    Some(1));
-        // the v3 ledger: completed + failed == requests
+        // the ledger: completed + failed == requests
         assert_eq!(j.get("completed").unwrap().as_usize(), Some(29));
         assert_eq!(j.get("requests_failed").unwrap().as_usize(),
                    Some(1));
@@ -336,7 +440,8 @@ mod tests {
                       "spectra_invalidated", "weight_fft_ns",
                       "completed", "requests_failed", "restarts",
                       "degraded_flushes", "faults_injected",
-                      "circuit_broken"] {
+                      "circuit_broken", "pack_overlap_ns",
+                      "pack_wait_ns"] {
                 assert!(s.get(k).and_then(Json::as_f64).is_some(),
                         "missing per-shard {k}");
             }
@@ -346,9 +451,37 @@ mod tests {
             assert!(cache.get(k).and_then(Json::as_usize).is_some(),
                     "missing cache.{k}");
         }
-        // throughput: 60 images / 0.5 s
+        // throughput: 60 images / 0.5 s — and every image traverses
+        // the whole chain, so states_per_sec matches
         assert!((j.get("throughput_img_s").unwrap().as_f64().unwrap()
                  - 120.0).abs() < 1e-6);
+        assert!((j.get("states_per_sec").unwrap().as_f64().unwrap()
+                 - 120.0).abs() < 1e-6);
+        // two shards x 150us packing hidden behind execution
+        assert!((j.get("pack_overlap_ns").unwrap().as_f64().unwrap()
+                 - 300e3).abs() < 1.0);
+        assert!((j.get("pack_wait_ns").unwrap().as_f64().unwrap()
+                 - 60e3).abs() < 1.0);
+        // one per_layer row per chain position, merged across shards
+        let per_layer = j.get("per_layer").unwrap().as_arr().unwrap();
+        assert_eq!(per_layer.len(), 3);
+        for (i, l) in per_layer.iter().enumerate() {
+            assert_eq!(l.get("layer").unwrap().as_usize(), Some(i));
+            assert!(l.get("name").and_then(Json::as_str).is_some());
+            // 2 shards x 5 flush samples each
+            assert_eq!(l.get("count").unwrap().as_usize(), Some(10));
+            assert_eq!(l.get("spectra_hits").unwrap().as_usize(),
+                       Some(4));
+            assert_eq!(l.get("spectra_misses").unwrap().as_usize(),
+                       Some(2));
+            assert_eq!(l.get("degraded_flushes").unwrap().as_usize(),
+                       Some(2 * i));
+            for k in ["mean_ms", "p50_ms", "p95_ms", "p99_ms", "max_ms",
+                      "weight_fft_ns", "launch_errors"] {
+                assert!(l.get(k).and_then(Json::as_f64).is_some(),
+                        "missing per-layer {k}");
+            }
+        }
     }
 
     #[test]
@@ -364,5 +497,10 @@ mod tests {
         assert!(table.contains("strategy cache: 3 entries"));
         assert!(table.contains("weight spectra: v2, 8 hits / 2 misses"),
                 "{table}");
+        // the per-layer table names every chain position
+        for name in ["conv1", "conv2", "conv3"] {
+            assert!(table.contains(name), "missing layer row {name}");
+        }
+        assert!(table.contains("states/s"), "{table}");
     }
 }

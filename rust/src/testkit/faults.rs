@@ -15,17 +15,26 @@
 //! FBFFT_FAULTS="shard1:panic@flush3,shard0:alloc_fail@10,corrupt_load@1"
 //! ```
 //!
-//! Grammar: comma-separated `[shard<i>:]<kind>@<occurrence>`, where
-//! `<kind>` is one of `panic`, `nonfinite`, `alloc_fail`,
+//! Grammar: comma-separated `[shard<i>:][layer<j>:]<kind>@<occurrence>`,
+//! where `<kind>` is one of `panic`, `nonfinite`, `alloc_fail`,
 //! `corrupt_load` and `<occurrence>` is the 1-based index of the event
 //! within the kind's scope (an optional alphabetic label such as
 //! `flush3` or `take10` is accepted and ignored — only the digits
 //! count). Scopes: `panic` counts flushes per shard, `nonfinite`
-//! counts frequency-strategy flushes per shard, `alloc_fail` counts
-//! staging-pool checkouts per shard, `corrupt_load` counts
+//! counts frequency-strategy layer launches per shard, `alloc_fail`
+//! counts staging-pool checkouts per shard, `corrupt_load` counts
 //! strategy-cache load attempts (engine-wide). Each spec fires at most
 //! once; an unscoped spec fires on the first shard whose own counter
 //! reaches the occurrence.
+//!
+//! The `layer<j>` qualifier scopes the occurrence to chain position
+//! `j` of a net-level serve (0-based, matching the `NetPlan` layer
+//! order): `shard0:layer1:panic@1` panics shard 0's first execution of
+//! layer 1, *mid-chain*, after layer 0 already ran. Specs without a
+//! layer qualifier keep their flush-level meaning — the per-flush
+//! probe happens before any per-layer probe, so `shard0:panic@2` still
+//! means "shard 0's second flush" exactly as before the qualifier
+//! existed.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -70,10 +79,12 @@ impl FaultKind {
 }
 
 /// One scripted failure: fire `kind` on occurrence `at` (1-based)
-/// within `shard`'s scope (`None` = any shard / engine-wide).
+/// within `shard`'s scope (`None` = any shard / engine-wide),
+/// optionally pinned to one chain position (`layer`).
 #[derive(Debug)]
 struct FaultSpec {
     shard: Option<usize>,
+    layer: Option<usize>,
     kind: FaultKind,
     at: usize,
     fired: AtomicBool,
@@ -85,9 +96,12 @@ struct FaultSpec {
 #[derive(Debug, Default)]
 pub struct FaultPlan {
     specs: Vec<FaultSpec>,
-    /// occurrence counters per (kind, scope) — bumped by every `fire`
-    /// probe so the 1-based spec indices are deterministic per scope
-    counts: Mutex<HashMap<(FaultKind, Option<usize>), usize>>,
+    /// occurrence counters per (kind, shard, layer) scope — bumped by
+    /// every `fire` probe so the 1-based spec indices are
+    /// deterministic per scope
+    #[allow(clippy::type_complexity)]
+    counts:
+        Mutex<HashMap<(FaultKind, Option<usize>, Option<usize>), usize>>,
     injected: AtomicUsize,
 }
 
@@ -110,22 +124,33 @@ impl FaultPlan {
     }
 
     fn parse_entry(entry: &str) -> Result<FaultSpec, String> {
-        let (scope, rest) = match entry.split_once(':') {
-            Some((s, rest)) => (Some(s), rest),
-            None => (None, entry),
-        };
-        let shard = match scope {
-            Some(s) => {
-                let idx = s.strip_prefix("shard").ok_or_else(|| {
-                    format!("bad scope {s:?} in {entry:?} \
-                             (want shard<N>)")
-                })?;
-                Some(idx.parse::<usize>().map_err(|_| {
+        let mut shard = None;
+        let mut layer = None;
+        let mut rest = entry;
+        while let Some((scope, tail)) = rest.split_once(':') {
+            if let Some(idx) = scope.strip_prefix("shard") {
+                if shard.is_some() {
+                    return Err(format!(
+                        "duplicate shard scope in {entry:?}"));
+                }
+                shard = Some(idx.parse::<usize>().map_err(|_| {
                     format!("bad shard index {idx:?} in {entry:?}")
-                })?)
+                })?);
+            } else if let Some(idx) = scope.strip_prefix("layer") {
+                if layer.is_some() {
+                    return Err(format!(
+                        "duplicate layer scope in {entry:?}"));
+                }
+                layer = Some(idx.parse::<usize>().map_err(|_| {
+                    format!("bad layer index {idx:?} in {entry:?}")
+                })?);
+            } else {
+                return Err(format!(
+                    "bad scope {scope:?} in {entry:?} \
+                     (want shard<N> or layer<N>)"));
             }
-            None => None,
-        };
+            rest = tail;
+        }
         let (kind, occ) = rest.split_once('@').ok_or_else(|| {
             format!("missing @occurrence in {entry:?}")
         })?;
@@ -143,7 +168,7 @@ impl FaultPlan {
         if at == 0 {
             return Err(format!("occurrence in {entry:?} is 1-based"));
         }
-        Ok(FaultSpec { shard, kind, at,
+        Ok(FaultSpec { shard, layer, kind, at,
                        fired: AtomicBool::new(false) })
     }
 
@@ -165,22 +190,39 @@ impl FaultPlan {
         }
     }
 
-    /// Count one occurrence of `kind` in `shard`'s scope and report
-    /// whether a scripted fault fires here. A spec fires exactly once
-    /// (first matching probe wins); unmatched probes only advance the
-    /// scope counter.
+    /// Count one occurrence of `kind` in `shard`'s flush-level scope
+    /// and report whether a scripted fault fires here. A spec fires
+    /// exactly once (first matching probe wins); unmatched probes only
+    /// advance the scope counter.
     pub fn fire(&self, kind: FaultKind, shard: Option<usize>) -> bool {
+        self.probe(kind, shard, None)
+    }
+
+    /// Count one occurrence of `kind` at chain position `layer` in
+    /// `shard`'s scope. Only `layer<j>`-qualified specs match this
+    /// probe — unqualified specs keep their flush-level occurrence
+    /// semantics through [`FaultPlan::fire`].
+    pub fn fire_layer(&self, kind: FaultKind, shard: Option<usize>,
+                      layer: usize) -> bool {
+        self.probe(kind, shard, Some(layer))
+    }
+
+    fn probe(&self, kind: FaultKind, shard: Option<usize>,
+             layer: Option<usize>) -> bool {
         let occurrence = {
             let mut counts = self
                 .counts
                 .lock()
                 .unwrap_or_else(|e| e.into_inner());
-            let c = counts.entry((kind, shard)).or_insert(0);
+            let c = counts.entry((kind, shard, layer)).or_insert(0);
             *c += 1;
             *c
         };
         for spec in &self.specs {
-            if spec.kind != kind || spec.at != occurrence {
+            if spec.kind != kind
+                || spec.at != occurrence
+                || spec.layer != layer
+            {
                 continue;
             }
             if let Some(want) = spec.shard {
@@ -240,9 +282,42 @@ mod tests {
     #[test]
     fn rejects_malformed_specs() {
         for bad in ["", "panic", "panic@zero", "panic@0",
-                    "worker1:panic@1", "explode@1", "shardx:panic@1"] {
+                    "worker1:panic@1", "explode@1", "shardx:panic@1",
+                    "layerx:panic@1", "shard0:shard1:panic@1",
+                    "layer0:layer1:panic@1"] {
             assert!(FaultPlan::parse(bad).is_err(), "{bad:?} accepted");
         }
+    }
+
+    #[test]
+    fn parses_layer_qualified_specs() {
+        let p = FaultPlan::parse(
+            "shard0:layer1:panic@1,layer2:nonfinite@1")
+            .unwrap();
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.armed(), 2);
+    }
+
+    #[test]
+    fn layer_spec_matches_only_its_chain_position() {
+        let p = FaultPlan::parse("shard0:layer1:panic@1").unwrap();
+        assert!(!p.fire(FaultKind::Panic, Some(0)),
+                "flush-level probes never match a layer spec");
+        assert!(!p.fire_layer(FaultKind::Panic, Some(0), 0),
+                "layer 0 is not layer 1");
+        assert!(p.fire_layer(FaultKind::Panic, Some(0), 1));
+        assert!(!p.fire_layer(FaultKind::Panic, Some(0), 1),
+                "fired specs stay off");
+        assert_eq!(p.injected(), 1);
+    }
+
+    #[test]
+    fn unqualified_spec_ignores_layer_probes() {
+        let p = FaultPlan::parse("shard0:panic@1").unwrap();
+        assert!(!p.fire_layer(FaultKind::Panic, Some(0), 0),
+                "per-layer probes never match a flush-level spec");
+        assert!(p.fire(FaultKind::Panic, Some(0)),
+                "flush-level occurrence 1 still fires");
     }
 
     #[test]

@@ -4,7 +4,11 @@
 //! robustness contract: exactly-once completions (success **or**
 //! error), supervised restarts with a circuit breaker, graceful
 //! degradation to the direct fallback, and cold-start recovery from a
-//! corrupt persisted cache. Host backend only — no artifacts needed.
+//! corrupt persisted cache. PR 8 adds the `layer<j>` fault qualifier:
+//! a panic scripted at a mid-chain position must fail exactly the
+//! in-flight batch with that chain position attributed in the
+//! [`ServeFailure::ShardPanic`] it resolves with. Host backend only —
+//! no artifacts needed.
 
 use std::collections::HashSet;
 use std::sync::mpsc;
@@ -13,10 +17,10 @@ use std::time::{Duration, Instant};
 
 use fbfft_repro::conv::ConvProblem;
 use fbfft_repro::coordinator::batcher::BatcherConfig;
-use fbfft_repro::coordinator::service::{Completion, EngineConfig,
-                                        ServeEngine, ServeError,
-                                        ServeRequest, SubmitError};
-use fbfft_repro::coordinator::Strategy;
+use fbfft_repro::coordinator::service::{Backend, Completion,
+                                        EngineConfig, ServeEngine,
+                                        ServeFailure, ServeRequest};
+use fbfft_repro::coordinator::{NetPlan, Strategy};
 use fbfft_repro::testkit::faults::FaultPlan;
 
 fn cfg(cap: usize, wait_ms: u64) -> BatcherConfig {
@@ -76,7 +80,9 @@ fn injected_panic_mid_flush_preserves_exactly_once() {
             .expect("every admitted request completes, success or error");
         assert!(seen.insert(c.id), "duplicate completion {}", c.id);
         if let Some(err) = c.error {
-            assert_eq!(err, ServeError::ShardPanic);
+            // a flush-level injected panic hits before the layer chain
+            // starts, so no chain position is attributed
+            assert_eq!(err, ServeFailure::ShardPanic { layer: None });
             assert!(!c.deadline_met);
             failed += 1;
         }
@@ -151,7 +157,8 @@ fn circuit_breaker_reroutes_to_surviving_shards() {
     for id in 0..8u64 {
         let c = serve_one(id);
         if c.error.is_some() {
-            assert_eq!(c.error, Some(ServeError::ShardPanic));
+            assert_eq!(c.error,
+                       Some(ServeFailure::ShardPanic { layer: None }));
             failed += 1;
         }
     }
@@ -211,13 +218,13 @@ fn submit_reports_unavailable_when_all_shards_are_dead() {
                                reply: tx.clone() })
         .is_ok());
     let c = rx.recv_timeout(Duration::from_secs(30)).expect("resolves");
-    assert_eq!(c.error, Some(ServeError::ShardPanic));
+    assert_eq!(c.error, Some(ServeFailure::ShardPanic { layer: None }));
     await_dead(&engine, 0);
     assert_eq!(engine
                    .submit(ServeRequest { id: 2, images: 1,
                                           deadline: None, reply: tx })
                    .unwrap_err(),
-               SubmitError::Unavailable);
+               ServeFailure::Unavailable);
     let report = engine.shutdown();
     assert_eq!(report.rejected_unavailable, 1);
     assert_eq!(report.requests(), 1);
@@ -254,7 +261,10 @@ fn alloc_failure_fails_batch_then_recovers() {
         rx.recv_timeout(Duration::from_secs(30)).expect("resolves")
     };
     let first = serve_one(1);
-    assert_eq!(first.error, Some(ServeError::ShardPanic),
+    // the poisoned checkout panics inside layer 0 of the chain, so the
+    // failure carries the chain position it unwound from
+    assert_eq!(first.error,
+               Some(ServeFailure::ShardPanic { layer: Some(0) }),
                "the poisoned checkout fails its flush");
     for id in 2..5u64 {
         let c = serve_one(id);
@@ -369,4 +379,68 @@ fn nonfinite_output_demotes_to_direct_fallback() {
     assert_eq!(report.spectra_misses(), 1,
                "one weight FFT before the NaN was caught");
     assert_eq!(report.spectra_hits(), 0);
+}
+
+/// PR 8 tentpole acceptance: a panic scripted at chain position 1 of a
+/// three-layer net fails exactly the in-flight batch with the layer
+/// index recorded, the shard restarts, and the chain serves on.
+#[test]
+fn mid_chain_panic_records_layer_and_preserves_exactly_once() {
+    let net = NetPlan::alexnet_small(8);
+    let cap = net.batch();
+    let engine = ServeEngine::start(
+        Backend::Host,
+        net,
+        EngineConfig {
+            shards: 1,
+            batcher: cfg(cap, 1),
+            default_deadline: Duration::from_secs(60),
+            warm: false,
+            restart_backoff: Duration::from_millis(1),
+            faults: plan("shard0:layer1:panic@1"),
+            ..Default::default()
+        })
+        .unwrap();
+    let (tx, rx) = mpsc::channel::<Completion>();
+    let serve_one = |id: u64| -> Completion {
+        assert!(engine
+            .submit(ServeRequest { id, images: cap, deadline: None,
+                                   reply: tx.clone() })
+            .is_ok());
+        rx.recv_timeout(Duration::from_secs(30)).expect("resolves")
+    };
+    // conv1 of the first flush runs clean; the scripted fault unwinds
+    // the chain from conv2 and the completion attributes layer 1
+    let first = serve_one(1);
+    assert_eq!(first.error,
+               Some(ServeFailure::ShardPanic { layer: Some(1) }),
+               "mid-chain panic records the chain position it hit");
+    for id in 2..5u64 {
+        let c = serve_one(id);
+        assert!(c.error.is_none(),
+                "the respawned shard serves the full chain");
+    }
+    assert!(rx.recv_timeout(Duration::from_millis(50)).is_err(),
+            "no extra completions after exactly-once delivery");
+    drop(tx);
+    let report = engine.shutdown();
+    assert_eq!(report.requests(), 4);
+    assert_eq!(report.requests_failed(), 1);
+    assert_eq!(report.requests_completed(), 3);
+    assert_eq!(report.shards[0].restarts, 1);
+    assert!(report.faults_injected >= 1);
+    assert!(report.shards[0].last_error.as_deref().unwrap_or("")
+              .contains("layer 1"),
+            "last_error names the chain position: {:?}",
+            report.shards[0].last_error);
+    // the per-layer ledger saw conv1 execute once more than conv3: the
+    // panicked flush recorded conv1's latency before unwinding at
+    // conv2, and the failure is charged to conv2's error count
+    let layers = report.layer_stats();
+    assert_eq!(layers.len(), 3);
+    assert_eq!(layers[1].launch_errors, 1,
+               "the panic is charged to the layer it unwound from");
+    assert_eq!(layers[0].latency.len(), 4);
+    assert_eq!(layers[1].latency.len(), 3);
+    assert_eq!(layers[2].latency.len(), 3);
 }

@@ -1,0 +1,297 @@
+//! Net-serving tier (PR 8 tentpole): whole-CNN plans behind one
+//! admission layer. Covers `NetPlan` construction invariants, the
+//! chained flush against a per-layer direct-convolution oracle (exact
+//! for the forced-direct chain, tolerance-bounded for fbfft), the
+//! net-level engine end to end through the `Ticket` client API with
+//! schema-v4 per-layer accounting, the validating `EngineConfig`
+//! builder, and per-layer weight-bump isolation. Host backend only.
+
+use std::time::Duration;
+
+use fbfft_repro::conv::{direct, ConvProblem};
+use fbfft_repro::coordinator::service::{chain_outputs, Backend,
+                                        EngineConfig, ServeEngine};
+use fbfft_repro::coordinator::{NetLayer, NetPlan, Pass, Strategy};
+use fbfft_repro::testkit::{assert_close, tolerance};
+use fbfft_repro::util::Rng;
+
+/// Frequency-path tolerance for chain position `i`: the unit-variance
+/// bound scaled by the layer's actual input magnitude (activations
+/// grow with each reduction, so later layers carry proportionally
+/// larger rounding noise).
+fn chain_tol(net: &NetPlan, imgs: usize, layer_input: &[f32],
+             i: usize) -> f32 {
+    let q = ConvProblem { s: imgs, ..net.layers()[i].problem };
+    let energy: f32 =
+        layer_input.iter().map(|v| v * v).sum::<f32>()
+            / layer_input.len() as f32;
+    tolerance::frequency(&q, Pass::Fprop, 16) * energy.sqrt().max(1.0)
+}
+
+/// Per-layer reference: the same input run through `direct::fprop`
+/// layer by layer — the semantics the chained flush must preserve.
+fn oracle(net: &NetPlan, imgs: usize, input: &[f32],
+          weights: &[Vec<f32>]) -> Vec<Vec<f32>> {
+    let mut x = input.to_vec();
+    let mut outs = Vec::new();
+    for (l, w) in net.layers().iter().zip(weights) {
+        let q = ConvProblem { s: imgs, ..l.problem };
+        x = direct::fprop(&q, &x[..q.input_len()], w);
+        outs.push(x.clone());
+    }
+    outs
+}
+
+fn chain_fixture(imgs: usize) -> (NetPlan, Vec<f32>, Vec<Vec<f32>>) {
+    let net = NetPlan::alexnet_small(imgs);
+    let mut rng = Rng::new(0x0E7);
+    let input = rng.normal_vec(net.input_len(imgs));
+    let weights: Vec<Vec<f32>> = net
+        .layers()
+        .iter()
+        .map(|l| rng.normal_vec(l.problem.weight_len()))
+        .collect();
+    (net, input, weights)
+}
+
+// ---------------------------------------------------------------------------
+// NetPlan construction
+// ---------------------------------------------------------------------------
+
+#[test]
+fn netplan_rejects_inconsistent_chains_at_plan_time() {
+    assert!(NetPlan::new(Vec::new()).is_err(), "empty plan");
+    // batch mismatch: conv2 declares a different S
+    let batch_break = NetPlan::new(vec![
+        NetLayer::new("conv1", ConvProblem::square(4, 2, 4, 12, 3)),
+        NetLayer::new("conv2", ConvProblem::square(8, 4, 4, 10, 3)),
+    ]);
+    assert!(batch_break.unwrap_err().contains("batch mismatch"));
+    // shape break: conv1 emits 4 channels at 10², conv2 wants 8 at 12²
+    let shape_break = NetPlan::new(vec![
+        NetLayer::new("conv1", ConvProblem::square(4, 2, 4, 12, 3)),
+        NetLayer::new("conv2", ConvProblem::square(4, 8, 4, 12, 3)),
+    ]);
+    assert!(shape_break.unwrap_err().contains("shape break"));
+    // the shipped chains are consistent by construction
+    assert_eq!(NetPlan::alexnet(8).len(), 5);
+    assert_eq!(NetPlan::alexnet_small(8).len(), 3);
+}
+
+#[test]
+fn netplan_slab_lengths_follow_the_chain_ends() {
+    let net = NetPlan::alexnet_small(8);
+    assert_eq!(net.batch(), 8);
+    let first = &net.layers()[0].problem;
+    let last = &net.layers()[2].problem;
+    for imgs in [1usize, 3, 8] {
+        assert_eq!(net.input_len(imgs),
+                   ConvProblem { s: imgs, ..*first }.input_len());
+        assert_eq!(net.output_len(imgs),
+                   ConvProblem { s: imgs, ..*last }.output_len());
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chain semantics vs the layerwise oracle
+// ---------------------------------------------------------------------------
+
+#[test]
+fn forced_direct_chain_is_bitwise_the_layerwise_oracle() {
+    let imgs = 4;
+    let (net, input, weights) = chain_fixture(imgs);
+    let got = chain_outputs(&net, imgs, &input, &weights,
+                            Some(Strategy::Direct));
+    let want = oracle(&net, imgs, &input, &weights);
+    assert_eq!(got.len(), net.len());
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(g, w, "layer {i} output must be bit-identical — \
+                          the chain feeds the same slabs the oracle saw");
+    }
+}
+
+#[test]
+fn fbfft_chain_matches_the_oracle_within_f32_tolerance() {
+    let imgs = 4;
+    let (net, input, weights) = chain_fixture(imgs);
+    let got = chain_outputs(&net, imgs, &input, &weights,
+                            Some(Strategy::Fbfft));
+    let want = oracle(&net, imgs, &input, &weights);
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        let x = if i == 0 { &input } else { &want[i - 1] };
+        assert_close(g, w, chain_tol(&net, imgs, x, i));
+    }
+}
+
+#[test]
+fn tuned_chain_serves_without_forcing_a_strategy() {
+    // force=None tunes each layer through a fresh in-memory cache —
+    // whatever wins must still be numerically sane
+    let imgs = 2;
+    let (net, input, weights) = chain_fixture(imgs);
+    let got = chain_outputs(&net, imgs, &input, &weights, None);
+    let want = oracle(&net, imgs, &input, &weights);
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        let x = if i == 0 { &input } else { &want[i - 1] };
+        // whatever won the tune, the frequency bound is the loosest
+        assert_close(g, w, chain_tol(&net, imgs, x, i));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The net-level engine end to end
+// ---------------------------------------------------------------------------
+
+#[test]
+fn net_engine_serves_tickets_with_per_layer_accounting() {
+    let net = NetPlan::alexnet_small(8);
+    let cap = net.batch();
+    let cfg = EngineConfig::builder()
+        .shards(2)
+        .capacity(cap)
+        .max_wait(Duration::from_millis(1))
+        .default_deadline(Duration::from_secs(60))
+        .build()
+        .expect("valid config");
+    let engine =
+        ServeEngine::start(Backend::Host, net.clone(), cfg).unwrap();
+    let sizes = [1usize, 8, 3, 8, 5, 2, 8, 4, 8, 7];
+    let tickets: Vec<_> = sizes
+        .iter()
+        .map(|&n| engine.submit_images(n, None).expect("admitted"))
+        .collect();
+    let mut images = 0usize;
+    for (t, &n) in tickets.into_iter().zip(&sizes) {
+        let c = t
+            .wait_timeout(Duration::from_secs(60))
+            .expect("every ticket resolves");
+        assert_eq!(c.images, n, "split requests report full size");
+        assert!(c.error.is_none());
+        images += c.images;
+    }
+    let report = engine.shutdown();
+    assert_eq!(report.requests(), sizes.len());
+    assert_eq!(report.images(), images);
+    assert_eq!(report.requests_failed(), 0);
+    assert_eq!(report.launch_errors(), 0);
+    // per-layer rows: one per chain position, every flush recorded in
+    // every layer's latency histogram
+    let layers = report.layer_stats();
+    assert_eq!(layers.len(), net.len());
+    for (i, (ls, l)) in layers.iter().zip(net.layers()).enumerate() {
+        assert_eq!(ls.name, l.name, "row {i} keeps the plan's name");
+        assert_eq!(ls.latency.len(), report.launches(),
+                   "layer {i} runs once per flush");
+        assert_eq!(ls.launch_errors, 0);
+    }
+    // the submit half packed batch k+1 while batch k's chain ran —
+    // the overlap the split worker loop exists to create
+    assert!(report.pack_overlap() > Duration::ZERO,
+            "packing must overlap chain execution");
+}
+
+// ---------------------------------------------------------------------------
+// Config surface
+// ---------------------------------------------------------------------------
+
+#[test]
+fn builder_rejects_configs_that_would_wedge_the_engine() {
+    assert!(EngineConfig::builder().build().is_ok(), "defaults pass");
+    let bad = [
+        EngineConfig::builder().shards(0).build(),
+        EngineConfig::builder().capacity(0).build(),
+        EngineConfig::builder().max_wait(Duration::ZERO).build(),
+        EngineConfig::builder()
+            .default_deadline(Duration::ZERO)
+            .build(),
+        EngineConfig::builder().tuner_reps(0).build(),
+        EngineConfig::builder().max_consecutive_failures(0).build(),
+    ];
+    for (i, b) in bad.iter().enumerate() {
+        assert!(b.is_err(), "bad config {i} must not build");
+    }
+    assert!(EngineConfig::builder().shards(0).build().unwrap_err()
+              .contains("shards"),
+            "errors name the offending knob");
+}
+
+#[test]
+fn start_rejects_unsupported_backend_and_pass_combinations() {
+    let net = NetPlan::alexnet_small(4);
+    // gradient passes chain in reverse order — not a serving path
+    let grad = EngineConfig::builder()
+        .shards(1)
+        .capacity(4)
+        .pass(Pass::Bprop)
+        .build()
+        .unwrap();
+    assert!(ServeEngine::start(Backend::Host, net.clone(), grad)
+              .is_err());
+    // PJRT artifacts are compiled per layer shape; multi-layer plans
+    // are host-only until a chained artifact exists
+    let cfg = EngineConfig::builder().shards(1).capacity(4).build()
+        .unwrap();
+    assert!(ServeEngine::start(
+        Backend::Pjrt { dir: "artifacts".into(),
+                        artifact: "conv.quickstart.fbfft.fprop".into() },
+        net,
+        cfg)
+        .is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Per-layer weight-bump isolation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn layer_weight_bump_invalidates_only_that_layers_spectra() {
+    let net = NetPlan::alexnet_small(8);
+    let cap = net.batch();
+    let cfg = EngineConfig::builder()
+        .shards(1)
+        .capacity(cap)
+        .max_wait(Duration::from_millis(1))
+        .default_deadline(Duration::from_secs(60))
+        .warm(false)
+        .force_strategy(Strategy::Fbfft)
+        .build()
+        .unwrap();
+    let engine =
+        ServeEngine::start(Backend::Host, net.clone(), cfg).unwrap();
+    let serve_one = |id: u64| {
+        // full-capacity tickets flush immediately and alone; the
+        // blocking wait serializes the flushes
+        let t = engine.submit_images(cap, None).expect("admitted");
+        let c = t.wait_timeout(Duration::from_secs(30))
+            .expect("flush completes");
+        assert!(c.error.is_none(), "flush {id} serves cleanly");
+    };
+    serve_one(0); // miss on every layer: three v1 spectra built
+    serve_one(1); // hit on every layer
+    let w1 = Rng::new(0xB1)
+        .normal_vec(net.layers()[1].problem.weight_len());
+    assert_eq!(engine.update_layer_weights(1, w1), Ok(2),
+               "bump returns layer 1's freshly installed version");
+    assert_eq!(engine.client().layer_weights_version(1), 2);
+    assert_eq!(engine.client().layer_weights_version(0), 1,
+               "other chain positions keep their version");
+    serve_one(2); // conv2 rebuilds at v2; conv1/conv3 still hit
+    let report = engine.shutdown();
+    assert_eq!(report.requests(), 3);
+    assert_eq!(report.launch_errors(), 0);
+    let layers = report.layer_stats();
+    assert_eq!(layers.len(), 3);
+    for (i, ls) in layers.iter().enumerate() {
+        if i == 1 {
+            assert_eq!((ls.spectra_misses, ls.spectra_hits,
+                        ls.spectra_invalidated),
+                       (2, 1, 1),
+                       "the bumped layer rebuilds exactly once");
+        } else {
+            assert_eq!((ls.spectra_misses, ls.spectra_hits,
+                        ls.spectra_invalidated),
+                       (1, 2, 0),
+                       "layer {i} must not see the bump");
+        }
+    }
+}

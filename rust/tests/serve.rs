@@ -302,18 +302,30 @@ fn soak_four_shards_exactly_once_and_reported() {
     }
     assert_eq!(j.get("rejected_deadline").and_then(Json::as_usize),
                Some(0));
-    // schema v3: spectrum-cache plus supervision accounting
-    assert_eq!(j.get("version").and_then(Json::as_f64), Some(3.0));
+    // schema v4: spectrum-cache, supervision, and net-chain accounting
+    assert_eq!(j.get("version").and_then(Json::as_f64), Some(4.0));
     assert_eq!(j.get("weights_version").and_then(Json::as_usize),
                Some(1), "no bump issued during the soak");
     for k in ["spectra_hits", "spectra_misses", "spectra_invalidated",
               "weight_fft_ns", "weight_fft_last_ns", "completed",
               "requests_failed", "rejected_unavailable",
               "shard_restarts", "degraded_flushes", "faults_injected",
-              "circuit_broken"] {
+              "circuit_broken", "states_per_sec", "pack_overlap_ns",
+              "pack_wait_ns"] {
         assert!(j.get(k).and_then(Json::as_f64).is_some(),
                 "top-level key {k} missing");
     }
+    // this engine serves a single-layer plan: one per_layer row whose
+    // flush count matches the launch ledger
+    assert_eq!(j.get("layers").and_then(Json::as_usize), Some(1));
+    let per_layer = j.get("per_layer").and_then(Json::as_arr)
+        .expect("per-layer rows");
+    assert_eq!(per_layer.len(), 1);
+    assert_eq!(per_layer[0].get("count").and_then(Json::as_usize),
+               Some(report.launches()),
+               "layer-0 latency histogram records every flush");
+    assert!(j.get("states_per_sec").and_then(Json::as_f64).unwrap()
+            > 0.0);
     // the fault-free soak is a clean run: ledger balances with zero
     // failures and no supervision events
     assert_eq!(j.get("completed").and_then(Json::as_usize),

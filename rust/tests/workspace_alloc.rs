@@ -6,10 +6,14 @@
 //! like cuFFT's own workspace does; the pool counters gate every tensor
 //! the pipeline itself owns.)
 
+use std::time::Duration;
+
 use fbfft_repro::conv::{ConvProblem, FftConvEngine, FftMode,
                         SpectrumCache, SpectrumPrecision, Workspace};
+use fbfft_repro::coordinator::service::{Backend, EngineConfig,
+                                        ServeEngine};
+use fbfft_repro::coordinator::{NetPlan, Pass};
 use fbfft_repro::testkit::{assert_close_oracle, oracle, tolerance};
-use fbfft_repro::coordinator::Pass;
 use fbfft_repro::util::Rng;
 
 #[allow(clippy::too_many_arguments)]
@@ -176,4 +180,42 @@ fn pool_survives_problem_size_growth_then_stabilizes() {
     }
     assert_eq!(ws.pool.allocations, allocs);
     assert_eq!(ws.pool.expansions, exps);
+}
+
+#[test]
+fn chained_serving_steady_state_is_zero_alloc_after_first_flush() {
+    // PR 8 satellite: the whole-chain flush ping-pongs activations
+    // through two pooled roles, so a shard's staging pool allocates
+    // exactly twice — on the first flush — and every later checkout
+    // (n_layers per flush) is a reuse. The counters ride the shard
+    // report, so the invariant is provable from outside the worker.
+    const FLUSHES: usize = 6;
+    let net = NetPlan::alexnet_small(8);
+    let cap = net.batch();
+    let n_layers = net.len();
+    let cfg = EngineConfig::builder()
+        .shards(1)
+        .capacity(cap)
+        .max_wait(Duration::from_millis(1))
+        .default_deadline(Duration::from_secs(60))
+        .warm(false)
+        .build()
+        .unwrap();
+    let engine = ServeEngine::start(Backend::Host, net, cfg).unwrap();
+    for _ in 0..FLUSHES {
+        // full-capacity tickets flush immediately and alone; the
+        // blocking wait serializes the flushes (constant shape)
+        let t = engine.submit_images(cap, None).expect("admitted");
+        let c = t.wait_timeout(Duration::from_secs(60))
+            .expect("flush completes");
+        assert!(c.error.is_none());
+    }
+    let report = engine.shutdown();
+    assert_eq!(report.launches(), FLUSHES);
+    assert_eq!(report.stage_allocations(), 2,
+               "one heap allocation per activation role, ever");
+    assert_eq!(report.stage_expansions(), 0,
+               "constant flush shape never regrows a slab");
+    assert_eq!(report.stage_reuses(), n_layers * FLUSHES - 2,
+               "every post-warmup layer checkout is a pool reuse");
 }
