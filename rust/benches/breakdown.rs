@@ -18,6 +18,19 @@ fn main() {
     std::fs::write("BENCH_fftconv.json", json.to_string())
         .expect("write BENCH_fftconv.json");
     eprintln!("wrote BENCH_fftconv.json (smoke={smoke})");
+    // the acceptance criterion: every run names the dispatch tier its
+    // numbers were measured under (CI greps this line in the smoke leg)
+    let host = json.get("host");
+    let hs = |k: &str| {
+        host.and_then(|h| h.get(k))
+            .and_then(Json::as_str)
+            .unwrap_or("?")
+    };
+    println!("simd dispatch tier: {} (detected {}, threads {})",
+             hs("simd_tier"), hs("simd_detected"),
+             host.and_then(|h| h.get("threads"))
+                 .and_then(Json::as_f64)
+                 .unwrap_or(f64::NAN));
     let entries = json
         .get("entries")
         .and_then(Json::as_arr)

@@ -1,0 +1,39 @@
+//! Toolchain probe for the SIMD dispatch layer: the AVX-512 `std::arch`
+//! intrinsics and `#[target_feature(enable = "avx512f")]` are stable only
+//! from rustc 1.89, so the AVX-512 kernel module compiles only when the
+//! building toolchain can accept it. The `fbfft_avx512` cfg gates the
+//! *code*; runtime feature detection (`util::simd`) still decides whether
+//! it ever executes, and the reported dispatch tier stays honest on
+//! toolchains where the gate is off (detection caps at `avx2`).
+
+use std::process::Command;
+
+fn main() {
+    println!("cargo:rerun-if-changed=build.rs");
+    // declare the custom cfg so check-cfg toolchains accept it under
+    // `-D warnings`
+    println!("cargo:rustc-check-cfg=cfg(fbfft_avx512)");
+    let rustc =
+        std::env::var("RUSTC").unwrap_or_else(|_| "rustc".to_string());
+    let ver = Command::new(&rustc)
+        .arg("--version")
+        .output()
+        .ok()
+        .and_then(|o| String::from_utf8(o.stdout).ok())
+        .unwrap_or_default();
+    if let Some((major, minor)) = parse_version(&ver) {
+        if (major, minor) >= (1, 89) {
+            println!("cargo:rustc-cfg=fbfft_avx512");
+        }
+    }
+}
+
+/// Parse `rustc 1.89.0 (…)` → `(1, 89)`. Unparseable output (unusual
+/// wrappers, future formats) leaves the AVX-512 gate off — safe default.
+fn parse_version(s: &str) -> Option<(u32, u32)> {
+    let tok = s.split_whitespace().nth(1)?;
+    let mut parts = tok.split(['.', '-', '+']);
+    let major = parts.next()?.parse().ok()?;
+    let minor = parts.next()?.parse().ok()?;
+    Some((major, minor))
+}

@@ -14,31 +14,55 @@
 //!   flags, so packing and the microkernel are written once;
 //! * **interleaved→planar packing**: operand panels are repacked from
 //!   interleaved `C32` into separate re/im `f32` planes (conjugation
-//!   becomes a sign flip at pack time, transposition a stride), which is
-//!   what lets rustc autovectorize the FMA chains — the naive `C32`
-//!   triple loop serializes on one complex accumulator;
-//! * **register-blocked [`MR`]×[`NR`] microkernel** on split re/im
-//!   accumulators, fed by [`KC`]/[`MC`]/[`NC`]-blocked panels so the
-//!   working set stays cache-resident;
+//!   becomes a sign flip at pack time, transposition a stride);
+//! * **register-blocked microkernel** on split re/im accumulators, with
+//!   the tile geometry chosen per [`SimdTier`] ([`Kernel`]): the scalar
+//!   reference runs the legacy 4×8 tile bit-for-bit, the AVX2+FMA
+//!   kernel a 6×8 tile (12 ymm accumulators), the AVX-512 kernel an
+//!   8×16 tile (16 zmm accumulators), all fed by [`KC`]/[`MC`]/[`NC`]-
+//!   blocked panels so the working set stays cache-resident;
 //! * **`std::thread::scope` parallelism over bin ranges** (bins are
 //!   independent small GEMMs; the output is bin-major so per-thread
 //!   chunks are contiguous), sized by [`crate::util::threads`];
 //! * **zero steady-state allocation**: packing panels come from the
 //!   [`Workspace`] pool and are returned after each call.
+//!
+//! Exactness across tiers: packing is pure data movement (copies, sign
+//! flips, IEEE-exact f16 dequant), so identical panels reach the
+//! microkernel whatever the storage path — the planar-vs-interleaved and
+//! f16-vs-f32 bitwise gates hold at every tier. The FMA microkernels
+//! contract rounding differently from the scalar tile, so *cross-tier*
+//! comparison is tolerance-gated, with the scalar tier as the anchor.
 
 use std::thread;
 
 use crate::coordinator::{BufferPool, Pass};
 use crate::fft::C32;
+use crate::util::simd::{self, SimdTier};
 use crate::util::{chunk_ranges, threads};
 
-/// Microkernel tile rows (distinct re/im accumulator pairs per operand
-/// row; MR·NR·2 accumulators must fit the register file).
+/// Scalar-tier microkernel tile rows (the legacy reference geometry —
+/// MR·NR·2 accumulators must fit the register file).
 pub const MR: usize = 4;
-/// Microkernel tile columns (one SIMD lane group per accumulator row).
+/// Scalar-tier microkernel tile columns.
 pub const NR: usize = 8;
-/// Reduction-depth panel: one packed A panel of `MR×KC` and B panel of
-/// `KC×NR` stream through L1 per microkernel call.
+/// AVX2 tile: 6 rows × one ymm column group = 12 accumulator registers
+/// (+2 operand broadcasts + 2 B rows ≈ the full 16-reg ymm file).
+const A2_MR: usize = 6;
+const A2_NR: usize = 8;
+/// AVX-512 tile: 8 rows × one zmm column group = 16 of 32 zmm
+/// accumulators, leaving room for operands and loop state.
+#[cfg(all(target_arch = "x86_64", fbfft_avx512))]
+const A5_MR: usize = 8;
+#[cfg(all(target_arch = "x86_64", fbfft_avx512))]
+const A5_NR: usize = 16;
+/// Upper bounds over every tier's tile geometry — the accumulator
+/// scratch is sized once for the worst case.
+const MAX_MR: usize = 8;
+const MAX_NR: usize = 16;
+const MAX_ACC: usize = MAX_MR * MAX_NR;
+/// Reduction-depth panel: one packed A panel of `mr×KC` and B panel of
+/// `KC×nr` stream through L1 per microkernel call.
 pub const KC: usize = 256;
 /// Row block: the packed A block (`MC×KC` re + im planes) targets L2.
 pub const MC: usize = 64;
@@ -128,6 +152,76 @@ fn round_up(x: usize, to: usize) -> usize {
     x.div_ceil(to) * to
 }
 
+/// One tier's microkernel geometry + dispatch handle. Constructing a
+/// non-scalar kernel asserts nothing by itself; the safety invariant —
+/// the tier never exceeds [`simd::detected`] — is upheld by
+/// [`Kernel::active`] (which resolves through `simd::tier()`) and by
+/// the tier-explicit test entries, which guard on detection.
+#[derive(Clone, Copy, Debug)]
+struct Kernel {
+    tier: SimdTier,
+    mr: usize,
+    nr: usize,
+}
+
+impl Kernel {
+    fn for_tier(tier: SimdTier) -> Kernel {
+        match tier {
+            SimdTier::Scalar => Kernel { tier, mr: MR, nr: NR },
+            SimdTier::Avx2 => Kernel { tier, mr: A2_MR, nr: A2_NR },
+            SimdTier::Avx512 => {
+                #[cfg(all(target_arch = "x86_64", fbfft_avx512))]
+                {
+                    Kernel { tier, mr: A5_MR, nr: A5_NR }
+                }
+                #[cfg(not(all(target_arch = "x86_64", fbfft_avx512)))]
+                {
+                    // toolchain gate off: the tier is never detected,
+                    // but a forced request degrades to the AVX2 shape
+                    Kernel { tier: SimdTier::Avx2, mr: A2_MR, nr: A2_NR }
+                }
+            }
+        }
+    }
+
+    /// The kernel for the active dispatch tier.
+    fn active() -> Kernel {
+        Kernel::for_tier(simd::tier())
+    }
+
+    /// Run one `mr×nr` tile over a `kc`-deep packed panel pair, leaving
+    /// the products in the flat accumulator scratch (row stride `nr`).
+    /// Every tier fully (re)writes rows `0..mr` — callers never zero.
+    #[allow(clippy::too_many_arguments)]
+    #[inline(always)]
+    fn run(&self, kc: usize, apr: &[f32], api: &[f32], bpr: &[f32],
+           bpi: &[f32], acc_re: &mut [f32; MAX_ACC],
+           acc_im: &mut [f32; MAX_ACC]) {
+        match self.tier {
+            #[cfg(target_arch = "x86_64")]
+            SimdTier::Avx2 => {
+                // SAFETY: Avx2 kernels are only constructed when runtime
+                // detection confirmed avx2+fma (see the type-level
+                // invariant above).
+                unsafe {
+                    microkernel_avx2(kc, apr, api, bpr, bpi, acc_re,
+                                     acc_im)
+                }
+            }
+            #[cfg(all(target_arch = "x86_64", fbfft_avx512))]
+            SimdTier::Avx512 => {
+                // SAFETY: as above, with detected avx512f.
+                unsafe {
+                    microkernel_avx512(kc, apr, api, bpr, bpi, acc_re,
+                                       acc_im)
+                }
+            }
+            _ => microkernel_scalar(kc, self.mr, self.nr, apr, api, bpr,
+                                    bpi, acc_re, acc_im),
+        }
+    }
+}
+
 /// Read-only complex operand view: the packing kernels are written once
 /// and monomorphize over the storage — interleaved `C32` slabs (vendor /
 /// scalar-fbfft staging) or the split-complex re/im planes the SoA fbfft
@@ -135,6 +229,27 @@ fn round_up(x: usize, to: usize) -> usize {
 /// path: no interleave shuffle ever runs between the FFT and the FMAs).
 trait CMat {
     fn load(&self, idx: usize) -> (f32, f32);
+
+    /// Unit-stride pack run: `out[t] = element idx+t` with the im plane
+    /// scaled by `sign` (±1, the conjugation flag). The storage types
+    /// override this with SIMD-exact bulk moves; results are bitwise
+    /// identical to the element loop at every tier.
+    fn load_run(&self, idx: usize, len: usize, sign: f32,
+                out_re: &mut [f32], out_im: &mut [f32]) {
+        for t in 0..len {
+            let (vr, vi) = self.load(idx + t);
+            out_re[t] = vr;
+            out_im[t] = sign * vi;
+        }
+    }
+
+    /// True when the storage wants k-major pack runs even at the cost of
+    /// a scatter through a stack strip (the f16 slabs: hardware dequant
+    /// is 8 halves per instruction, so contiguous runs pay for the extra
+    /// copy).
+    fn prefers_k_runs(&self) -> bool {
+        false
+    }
 }
 
 struct InterMat<'a>(&'a [C32]);
@@ -157,13 +272,23 @@ impl CMat for PlanarMat<'_> {
     fn load(&self, idx: usize) -> (f32, f32) {
         (self.re[idx], self.im[idx])
     }
+
+    #[inline]
+    fn load_run(&self, idx: usize, len: usize, sign: f32,
+                out_re: &mut [f32], out_im: &mut [f32]) {
+        out_re[..len].copy_from_slice(&self.re[idx..idx + len]);
+        simd::copy_signed(&self.im[idx..idx + len], &mut out_im[..len],
+                          sign < 0.0);
+    }
 }
 
 /// Split-complex planes stored as IEEE binary16 bits — the serving
 /// tier's cached weight spectra ([`crate::conv::spectra`]). Dequantizing
 /// here, inside the `pack_b` element load, means the f16 slabs go
 /// straight into the packed panels: the B operand's memory traffic is
-/// halved and no intermediate f32 copy of the spectrum ever exists.
+/// halved and no intermediate f32 copy of the spectrum ever exists. The
+/// run path rides [`simd::f16_dequant`] (hardware F16C on the AVX
+/// tiers, bitwise the software decoder).
 struct F16PlanarMat<'a> {
     re: &'a [u16],
     im: &'a [u16],
@@ -174,6 +299,19 @@ impl CMat for F16PlanarMat<'_> {
     fn load(&self, idx: usize) -> (f32, f32) {
         (crate::util::f16::f16_to_f32(self.re[idx]),
          crate::util::f16::f16_to_f32(self.im[idx]))
+    }
+
+    #[inline]
+    fn load_run(&self, idx: usize, len: usize, sign: f32,
+                out_re: &mut [f32], out_im: &mut [f32]) {
+        simd::f16_dequant(&self.re[idx..idx + len], &mut out_re[..len],
+                          false);
+        simd::f16_dequant(&self.im[idx..idx + len], &mut out_im[..len],
+                          sign < 0.0);
+    }
+
+    fn prefers_k_runs(&self) -> bool {
+        true
     }
 }
 
@@ -216,21 +354,35 @@ impl CSink for PlanarSink<'_> {
     }
 }
 
-/// Pack an `mc×kc` block of A into planar re/im panels of `MR` rows:
-/// element `(ir·MR+mi, kk)` lands at `(ir·kc + kk)·MR + mi`, rows beyond
+/// Pack an `mc×kc` block of A into planar re/im panels of `mr` rows:
+/// element `(ir·mr+mi, kk)` lands at `(ir·kc + kk)·mr + mi`, rows beyond
 /// `mc` zero-padded so the microkernel never branches on ragged edges.
-/// Conjugation folds into the imaginary plane's sign.
+/// Conjugation folds into the imaginary plane's sign. Full tiles of a
+/// unit-`m`-stride operand (accGrad's A) take the bulk `load_run` path —
+/// same bits, fewer address computations.
 #[allow(clippy::too_many_arguments)]
-fn pack_a<A: CMat>(sh: &BinShape, a: &A, m0: usize, mc: usize, p0: usize,
-                   kc: usize, out_re: &mut [f32], out_im: &mut [f32]) {
+fn pack_a<A: CMat>(sh: &BinShape, a: &A, mr: usize, m0: usize, mc: usize,
+                   p0: usize, kc: usize, out_re: &mut [f32],
+                   out_im: &mut [f32]) {
     let sign = if sh.conj_a { -1.0f32 } else { 1.0 };
-    for ir in 0..mc.div_ceil(MR) {
-        let base = ir * kc * MR;
+    for ir in 0..mc.div_ceil(mr) {
+        let base = ir * kc * mr;
+        let full = (ir + 1) * mr <= mc;
+        if full && sh.a_mstride == 1 {
+            for kk in 0..kc {
+                let ks = (p0 + kk) * sh.a_kstride;
+                let row = base + kk * mr;
+                a.load_run(m0 + ir * mr + ks, mr, sign,
+                           &mut out_re[row..row + mr],
+                           &mut out_im[row..row + mr]);
+            }
+            continue;
+        }
         for kk in 0..kc {
             let ks = (p0 + kk) * sh.a_kstride;
-            for mi in 0..MR {
-                let idx = base + kk * MR + mi;
-                let mrow = ir * MR + mi;
+            for mi in 0..mr {
+                let idx = base + kk * mr + mi;
+                let mrow = ir * mr + mi;
                 if mrow < mc {
                     let (vr, vi) = a.load((m0 + mrow) * sh.a_mstride + ks);
                     out_re[idx] = vr;
@@ -244,19 +396,57 @@ fn pack_a<A: CMat>(sh: &BinShape, a: &A, m0: usize, mc: usize, p0: usize,
     }
 }
 
-/// Pack a `kc×nc` block of B into planar re/im panels of `NR` columns
-/// (mirror of [`pack_a`]).
+/// Pack a `kc×nc` block of B into planar re/im panels of `nr` columns
+/// (mirror of [`pack_a`]). Two bulk paths: unit-`n`-stride operands
+/// (bprop/accGrad B) run across the tile columns; unit-`k`-stride f16
+/// slabs (fprop's cached weight spectrum) dequantize whole `kc` runs
+/// through a stack strip and scatter — the hardware-dequant fast path of
+/// [`batched_planar_f16b`]. All paths emit bit-identical panels.
 #[allow(clippy::too_many_arguments)]
-fn pack_b<B: CMat>(sh: &BinShape, b: &B, p0: usize, kc: usize, n0: usize,
-                   nc: usize, out_re: &mut [f32], out_im: &mut [f32]) {
+fn pack_b<B: CMat>(sh: &BinShape, b: &B, nr: usize, p0: usize, kc: usize,
+                   n0: usize, nc: usize, out_re: &mut [f32],
+                   out_im: &mut [f32]) {
     let sign = if sh.conj_b { -1.0f32 } else { 1.0 };
-    for jr in 0..nc.div_ceil(NR) {
-        let base = jr * kc * NR;
+    for jr in 0..nc.div_ceil(nr) {
+        let base = jr * kc * nr;
+        let full = (jr + 1) * nr <= nc;
+        if full && sh.b_nstride == 1 {
+            for kk in 0..kc {
+                let ks = (p0 + kk) * sh.b_kstride;
+                let row = base + kk * nr;
+                b.load_run(n0 + jr * nr + ks, nr, sign,
+                           &mut out_re[row..row + nr],
+                           &mut out_im[row..row + nr]);
+            }
+            continue;
+        }
+        if sh.b_kstride == 1 && b.prefers_k_runs() {
+            debug_assert!(kc <= KC);
+            let mut strip_re = [0f32; KC];
+            let mut strip_im = [0f32; KC];
+            for ni in 0..nr {
+                let ncol = jr * nr + ni;
+                if ncol < nc {
+                    b.load_run((n0 + ncol) * sh.b_nstride + p0, kc, sign,
+                               &mut strip_re[..kc], &mut strip_im[..kc]);
+                    for kk in 0..kc {
+                        out_re[base + kk * nr + ni] = strip_re[kk];
+                        out_im[base + kk * nr + ni] = strip_im[kk];
+                    }
+                } else {
+                    for kk in 0..kc {
+                        out_re[base + kk * nr + ni] = 0.0;
+                        out_im[base + kk * nr + ni] = 0.0;
+                    }
+                }
+            }
+            continue;
+        }
         for kk in 0..kc {
             let ks = (p0 + kk) * sh.b_kstride;
-            for ni in 0..NR {
-                let idx = base + kk * NR + ni;
-                let ncol = jr * NR + ni;
+            for ni in 0..nr {
+                let idx = base + kk * nr + ni;
+                let ncol = jr * nr + ni;
                 if ncol < nc {
                     let (vr, vi) = b.load((n0 + ncol) * sh.b_nstride + ks);
                     out_re[idx] = vr;
@@ -270,27 +460,31 @@ fn pack_b<B: CMat>(sh: &BinShape, b: &B, p0: usize, kc: usize, n0: usize,
     }
 }
 
-/// The register-blocked core: `MR×NR` split re/im accumulators, rank-1
-/// updated per reduction step from one packed A column (`MR` values) and
-/// one packed B row (`NR` values). Fixed-size arrays + planar operands
-/// are what rustc needs to emit packed FMA over the `ni` loop.
+/// The scalar reference microkernel, geometry-generic: `mr×nr` split
+/// re/im accumulators (flat, row stride `nr`), rank-1 updated per
+/// reduction step from one packed A column and one packed B row. At the
+/// scalar tier's 4×8 tile this is op-for-op the pre-dispatch kernel —
+/// separate mul/sub, no fused contraction — so the scalar tier stays
+/// bit-identical to the legacy tree.
+#[allow(clippy::too_many_arguments)]
 #[inline(always)]
-fn microkernel(kc: usize, apr: &[f32], api: &[f32], bpr: &[f32],
-               bpi: &[f32], acc_re: &mut [[f32; NR]; MR],
-               acc_im: &mut [[f32; NR]; MR]) {
+fn microkernel_scalar(kc: usize, mr: usize, nr: usize, apr: &[f32],
+                      api: &[f32], bpr: &[f32], bpi: &[f32],
+                      acc_re: &mut [f32; MAX_ACC],
+                      acc_im: &mut [f32; MAX_ACC]) {
+    acc_re[..mr * nr].fill(0.0);
+    acc_im[..mr * nr].fill(0.0);
     for kk in 0..kc {
-        let mut b_re = [0f32; NR];
-        let mut b_im = [0f32; NR];
-        b_re.copy_from_slice(&bpr[kk * NR..kk * NR + NR]);
-        b_im.copy_from_slice(&bpi[kk * NR..kk * NR + NR]);
-        let a_re = &apr[kk * MR..kk * MR + MR];
-        let a_im = &api[kk * MR..kk * MR + MR];
-        for mi in 0..MR {
+        let b_re = &bpr[kk * nr..kk * nr + nr];
+        let b_im = &bpi[kk * nr..kk * nr + nr];
+        let a_re = &apr[kk * mr..kk * mr + mr];
+        let a_im = &api[kk * mr..kk * mr + mr];
+        for mi in 0..mr {
             let ar = a_re[mi];
             let ai = a_im[mi];
-            let cr = &mut acc_re[mi];
-            let ci = &mut acc_im[mi];
-            for ni in 0..NR {
+            let cr = &mut acc_re[mi * nr..mi * nr + nr];
+            let ci = &mut acc_im[mi * nr..mi * nr + nr];
+            for ni in 0..nr {
                 cr[ni] += ar * b_re[ni] - ai * b_im[ni];
                 ci[ni] += ar * b_im[ni] + ai * b_re[ni];
             }
@@ -298,17 +492,87 @@ fn microkernel(kc: usize, apr: &[f32], api: &[f32], bpr: &[f32],
     }
 }
 
-/// Store one accumulator tile into the row-major output view, clipping
-/// ragged edges. `first` selects store vs accumulate (the k-block loop's
-/// semantics).
+/// AVX2+FMA microkernel, 6×8 tile: 12 ymm accumulators live across the
+/// whole `kc` loop, one broadcast pair per A element, the complex MAC as
+/// an `fmadd`/`fnmadd`/`fmadd`/`fmadd` quartet — the §5-style
+/// "hand-shaped" kernel the paper's thesis calls for, on host FMA width.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn microkernel_avx2(kc: usize, apr: &[f32], api: &[f32],
+                           bpr: &[f32], bpi: &[f32],
+                           acc_re: &mut [f32; MAX_ACC],
+                           acc_im: &mut [f32; MAX_ACC]) {
+    use std::arch::x86_64::*;
+    debug_assert!(apr.len() >= kc * A2_MR && api.len() >= kc * A2_MR);
+    debug_assert!(bpr.len() >= kc * A2_NR && bpi.len() >= kc * A2_NR);
+    let mut cr = [_mm256_setzero_ps(); A2_MR];
+    let mut ci = [_mm256_setzero_ps(); A2_MR];
+    let (ap, aip) = (apr.as_ptr(), api.as_ptr());
+    let (bp, bip) = (bpr.as_ptr(), bpi.as_ptr());
+    for kk in 0..kc {
+        let br = _mm256_loadu_ps(bp.add(kk * A2_NR));
+        let bi = _mm256_loadu_ps(bip.add(kk * A2_NR));
+        for mi in 0..A2_MR {
+            let ar = _mm256_set1_ps(*ap.add(kk * A2_MR + mi));
+            let ai = _mm256_set1_ps(*aip.add(kk * A2_MR + mi));
+            cr[mi] = _mm256_fmadd_ps(ar, br, cr[mi]);
+            cr[mi] = _mm256_fnmadd_ps(ai, bi, cr[mi]);
+            ci[mi] = _mm256_fmadd_ps(ar, bi, ci[mi]);
+            ci[mi] = _mm256_fmadd_ps(ai, br, ci[mi]);
+        }
+    }
+    for mi in 0..A2_MR {
+        _mm256_storeu_ps(acc_re.as_mut_ptr().add(mi * A2_NR), cr[mi]);
+        _mm256_storeu_ps(acc_im.as_mut_ptr().add(mi * A2_NR), ci[mi]);
+    }
+}
+
+/// AVX-512F microkernel, 8×16 tile: 16 zmm accumulators, same complex
+/// MAC structure as the AVX2 kernel at double width.
+#[cfg(all(target_arch = "x86_64", fbfft_avx512))]
+#[target_feature(enable = "avx512f")]
+unsafe fn microkernel_avx512(kc: usize, apr: &[f32], api: &[f32],
+                             bpr: &[f32], bpi: &[f32],
+                             acc_re: &mut [f32; MAX_ACC],
+                             acc_im: &mut [f32; MAX_ACC]) {
+    use std::arch::x86_64::*;
+    debug_assert!(apr.len() >= kc * A5_MR && api.len() >= kc * A5_MR);
+    debug_assert!(bpr.len() >= kc * A5_NR && bpi.len() >= kc * A5_NR);
+    let mut cr = [_mm512_setzero_ps(); A5_MR];
+    let mut ci = [_mm512_setzero_ps(); A5_MR];
+    let (ap, aip) = (apr.as_ptr(), api.as_ptr());
+    let (bp, bip) = (bpr.as_ptr(), bpi.as_ptr());
+    for kk in 0..kc {
+        let br = _mm512_loadu_ps(bp.add(kk * A5_NR));
+        let bi = _mm512_loadu_ps(bip.add(kk * A5_NR));
+        for mi in 0..A5_MR {
+            let ar = _mm512_set1_ps(*ap.add(kk * A5_MR + mi));
+            let ai = _mm512_set1_ps(*aip.add(kk * A5_MR + mi));
+            cr[mi] = _mm512_fmadd_ps(ar, br, cr[mi]);
+            cr[mi] = _mm512_fnmadd_ps(ai, bi, cr[mi]);
+            ci[mi] = _mm512_fmadd_ps(ar, bi, ci[mi]);
+            ci[mi] = _mm512_fmadd_ps(ai, br, ci[mi]);
+        }
+    }
+    for mi in 0..A5_MR {
+        _mm512_storeu_ps(acc_re.as_mut_ptr().add(mi * A5_NR), cr[mi]);
+        _mm512_storeu_ps(acc_im.as_mut_ptr().add(mi * A5_NR), ci[mi]);
+    }
+}
+
+/// Store one accumulator tile (flat, row stride `nr`) into the
+/// row-major output view, clipping ragged edges. `first` selects store
+/// vs accumulate (the k-block loop's semantics).
 #[allow(clippy::too_many_arguments)]
-fn writeback<S: CSink>(acc_re: &[[f32; NR]; MR], acc_im: &[[f32; NR]; MR],
+fn writeback<S: CSink>(acc_re: &[f32], acc_im: &[f32], nr: usize,
                        c: &mut S, m0: usize, mr_eff: usize, n0: usize,
                        nr_eff: usize, ldc: usize, first: bool) {
     for mi in 0..mr_eff {
         let base = (m0 + mi) * ldc + n0;
+        let row = mi * nr;
         for ni in 0..nr_eff {
-            c.store(base + ni, acc_re[mi][ni], acc_im[mi][ni], first);
+            c.store(base + ni, acc_re[row + ni], acc_im[row + ni],
+                    first);
         }
     }
 }
@@ -316,9 +580,12 @@ fn writeback<S: CSink>(acc_re: &[[f32; NR]; MR], acc_im: &[[f32; NR]; MR],
 /// One bin's blocked GEMM over pre-split packing planes.
 #[allow(clippy::too_many_arguments)]
 fn bin_gemm<A: CMat, B: CMat, S: CSink>(
-    sh: &BinShape, a: &A, b: &B, c: &mut S, ar: &mut [f32],
+    kern: Kernel, sh: &BinShape, a: &A, b: &B, c: &mut S, ar: &mut [f32],
     ai: &mut [f32], br: &mut [f32], bi: &mut [f32]) {
     let (m, n, k) = (sh.m, sh.n, sh.k);
+    let (mr, nr) = (kern.mr, kern.nr);
+    let mut acc_re = [0f32; MAX_ACC];
+    let mut acc_im = [0f32; MAX_ACC];
     let mut p0 = 0;
     while p0 < k {
         let kc = KC.min(k - p0);
@@ -326,27 +593,26 @@ fn bin_gemm<A: CMat, B: CMat, S: CSink>(
         let mut n0 = 0;
         while n0 < n {
             let nc = NC.min(n - n0);
-            pack_b(sh, b, p0, kc, n0, nc, br, bi);
+            pack_b(sh, b, nr, p0, kc, n0, nc, br, bi);
             let mut m0 = 0;
             while m0 < m {
                 let mc = MC.min(m - m0);
-                pack_a(sh, a, m0, mc, p0, kc, ar, ai);
+                pack_a(sh, a, mr, m0, mc, p0, kc, ar, ai);
                 let mut jr = 0;
-                while jr * NR < nc {
-                    let nr_eff = NR.min(nc - jr * NR);
-                    let bpr = &br[jr * kc * NR..][..kc * NR];
-                    let bpi = &bi[jr * kc * NR..][..kc * NR];
+                while jr * nr < nc {
+                    let nr_eff = nr.min(nc - jr * nr);
+                    let bpr = &br[jr * kc * nr..][..kc * nr];
+                    let bpi = &bi[jr * kc * nr..][..kc * nr];
                     let mut ir = 0;
-                    while ir * MR < mc {
-                        let mr_eff = MR.min(mc - ir * MR);
-                        let apr = &ar[ir * kc * MR..][..kc * MR];
-                        let api = &ai[ir * kc * MR..][..kc * MR];
-                        let mut acc_re = [[0f32; NR]; MR];
-                        let mut acc_im = [[0f32; NR]; MR];
-                        microkernel(kc, apr, api, bpr, bpi, &mut acc_re,
-                                    &mut acc_im);
-                        writeback(&acc_re, &acc_im, c, m0 + ir * MR,
-                                  mr_eff, n0 + jr * NR, nr_eff, n, first);
+                    while ir * mr < mc {
+                        let mr_eff = mr.min(mc - ir * mr);
+                        let apr = &ar[ir * kc * mr..][..kc * mr];
+                        let api = &ai[ir * kc * mr..][..kc * mr];
+                        kern.run(kc, apr, api, bpr, bpi, &mut acc_re,
+                                 &mut acc_im);
+                        writeback(&acc_re, &acc_im, nr, c, m0 + ir * mr,
+                                  mr_eff, n0 + jr * nr, nr_eff, n,
+                                  first);
                         ir += 1;
                     }
                     jr += 1;
@@ -363,10 +629,18 @@ fn bin_gemm<A: CMat, B: CMat, S: CSink>(
 /// slabs: `a` is `bins × a_len`, `b` is `bins × b_len`, `c` (overwritten)
 /// is `bins × c_len`, with the per-bin shapes of [`BinShape::of`].
 /// Threads over contiguous bin ranges; packing panels come from `ws` so
-/// the steady state allocates nothing.
+/// the steady state allocates nothing. The microkernel tier is resolved
+/// once here ([`Kernel::active`]) and inherited by the workers.
 #[allow(clippy::too_many_arguments)]
 pub fn batched(pass: Pass, bins: usize, s: usize, f: usize, fo: usize,
                a: &[C32], b: &[C32], c: &mut [C32], ws: &mut Workspace) {
+    batched_with(Kernel::active(), pass, bins, s, f, fo, a, b, c, ws);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn batched_with(kern: Kernel, pass: Pass, bins: usize, s: usize,
+                f: usize, fo: usize, a: &[C32], b: &[C32], c: &mut [C32],
+                ws: &mut Workspace) {
     let sh = BinShape::of(pass, s, f, fo);
     assert_eq!(a.len(), bins * sh.a_len, "A slab length");
     assert_eq!(b.len(), bins * sh.b_len, "B slab length");
@@ -375,8 +649,8 @@ pub fn batched(pass: Pass, bins: usize, s: usize, f: usize, fo: usize,
         return;
     }
     let kc_max = sh.k.min(KC);
-    let a_sz = round_up(sh.m.min(MC), MR) * kc_max;
-    let b_sz = round_up(sh.n.min(NC), NR) * kc_max;
+    let a_sz = round_up(sh.m.min(MC), kern.mr) * kc_max;
+    let b_sz = round_up(sh.n.min(NC), kern.nr) * kc_max;
     let per_thread = 2 * (a_sz + b_sz);
     let macs = bins * sh.m * sh.n * sh.k;
     let nthreads = if macs < PARALLEL_MACS {
@@ -399,7 +673,8 @@ pub fn batched(pass: Pass, bins: usize, s: usize, f: usize, fo: usize,
                 let (br, bi) = rest.split_at_mut(b_sz);
                 for (qi, cq) in c_head.chunks_mut(sh.c_len).enumerate() {
                     let q = start + qi;
-                    bin_gemm(&sh, &InterMat(&a[q * sh.a_len..][..sh.a_len]),
+                    bin_gemm(kern, &sh,
+                             &InterMat(&a[q * sh.a_len..][..sh.a_len]),
                              &InterMat(&b[q * sh.b_len..][..sh.b_len]),
                              &mut InterSink(cq), ar, ai, br, bi);
                 }
@@ -429,10 +704,19 @@ pub fn batched_planar(pass: Pass, bins: usize, s: usize, f: usize,
                       fo: usize, a_re: &[f32], a_im: &[f32], b_re: &[f32],
                       b_im: &[f32], c_re: &mut [f32], c_im: &mut [f32],
                       ws: &mut Workspace) {
+    batched_planar_with(Kernel::active(), pass, bins, s, f, fo, a_re,
+                        a_im, b_re, b_im, c_re, c_im, ws);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn batched_planar_with(kern: Kernel, pass: Pass, bins: usize, s: usize,
+                       f: usize, fo: usize, a_re: &[f32], a_im: &[f32],
+                       b_re: &[f32], b_im: &[f32], c_re: &mut [f32],
+                       c_im: &mut [f32], ws: &mut Workspace) {
     let sh = BinShape::of(pass, s, f, fo);
     assert_eq!(b_re.len(), bins * sh.b_len, "B re plane length");
     assert_eq!(b_im.len(), bins * sh.b_len, "B im plane length");
-    planar_driver(&sh, bins, a_re, a_im,
+    planar_driver(kern, &sh, bins, a_re, a_im,
                   &|q| PlanarMat {
                       re: &b_re[q * sh.b_len..][..sh.b_len],
                       im: &b_im[q * sh.b_len..][..sh.b_len],
@@ -444,18 +728,20 @@ pub fn batched_planar(pass: Pass, bins: usize, s: usize, f: usize,
 /// cached-weight-spectrum fast path of the serving tier. The A operand
 /// (the per-flush activations) and the product stay f32; only the cached
 /// spectrum is reduced precision, dequantized lane-wise in `pack_b` via
-/// [`F16PlanarMat`]. Arithmetic order is identical to [`batched_planar`]
-/// on the dequantized values (same panels, same microkernel), so the two
-/// agree bitwise when the f32 B operand is exactly f16-representable.
+/// [`F16PlanarMat`] (hardware F16C on the AVX tiers). Arithmetic order
+/// is identical to [`batched_planar`] on the dequantized values (same
+/// panels, same microkernel), so the two agree bitwise when the f32 B
+/// operand is exactly f16-representable.
 #[allow(clippy::too_many_arguments)]
 pub fn batched_planar_f16b(pass: Pass, bins: usize, s: usize, f: usize,
                            fo: usize, a_re: &[f32], a_im: &[f32],
                            b_re: &[u16], b_im: &[u16], c_re: &mut [f32],
                            c_im: &mut [f32], ws: &mut Workspace) {
+    let kern = Kernel::active();
     let sh = BinShape::of(pass, s, f, fo);
     assert_eq!(b_re.len(), bins * sh.b_len, "B re plane length");
     assert_eq!(b_im.len(), bins * sh.b_len, "B im plane length");
-    planar_driver(&sh, bins, a_re, a_im,
+    planar_driver(kern, &sh, bins, a_re, a_im,
                   &|q| F16PlanarMat {
                       re: &b_re[q * sh.b_len..][..sh.b_len],
                       im: &b_im[q * sh.b_len..][..sh.b_len],
@@ -467,9 +753,11 @@ pub fn batched_planar_f16b(pass: Pass, bins: usize, s: usize, f: usize,
 /// [`batched`], with the B operand abstracted as a per-bin [`CMat`]
 /// factory so the f32 and f16 storage paths monomorphize from one
 /// implementation.
-fn planar_driver<BV, FB>(sh: &BinShape, bins: usize, a_re: &[f32],
-                         a_im: &[f32], b_of: &FB, c_re: &mut [f32],
-                         c_im: &mut [f32], ws: &mut Workspace)
+#[allow(clippy::too_many_arguments)]
+fn planar_driver<BV, FB>(kern: Kernel, sh: &BinShape, bins: usize,
+                         a_re: &[f32], a_im: &[f32], b_of: &FB,
+                         c_re: &mut [f32], c_im: &mut [f32],
+                         ws: &mut Workspace)
 where
     BV: CMat,
     FB: Fn(usize) -> BV + Sync,
@@ -482,8 +770,8 @@ where
         return;
     }
     let kc_max = sh.k.min(KC);
-    let a_sz = round_up(sh.m.min(MC), MR) * kc_max;
-    let b_sz = round_up(sh.n.min(NC), NR) * kc_max;
+    let a_sz = round_up(sh.m.min(MC), kern.mr) * kc_max;
+    let b_sz = round_up(sh.n.min(NC), kern.nr) * kc_max;
     let per_thread = 2 * (a_sz + b_sz);
     let macs = bins * sh.m * sh.n * sh.k;
     let nthreads = if macs < PARALLEL_MACS {
@@ -518,7 +806,8 @@ where
                         re: &mut cr_head[qi * sh.c_len..][..sh.c_len],
                         im: &mut ci_head[qi * sh.c_len..][..sh.c_len],
                     };
-                    bin_gemm(sh, &aq, &bq, &mut cq, ar, ai, br, bi);
+                    bin_gemm(kern, sh, &aq, &bq, &mut cq, ar, ai, br,
+                             bi);
                 }
             };
             if nthreads == 1 {
@@ -588,8 +877,9 @@ mod tests {
         batched(pass, bins, s, f, fo, &a, &b, &mut got, &mut ws);
         batched_naive(pass, bins, s, f, fo, &a, &b, &mut want);
         // naive accumulates with fused mul_add, the microkernel with
-        // separate mul/add — both within O(√k·eps) of exact, so the gate
-        // scales with reduction depth (index/conjugation bugs are O(1))
+        // separate mul/add (or FMA quartets on the AVX tiers) — all
+        // within O(√k·eps) of exact, so the gate scales with reduction
+        // depth (index/conjugation bugs are O(1))
         let tol = 1e-3 * (sh.k as f32).sqrt().max(1.0);
         for (i, (g, w)) in got.iter().zip(&want).enumerate() {
             assert!((*g - *w).abs() < tol,
@@ -607,7 +897,8 @@ mod tests {
 
     #[test]
     fn ragged_sizes_not_multiples_of_blocks() {
-        // S, f, f' straddle MR (4) and NR (8) boundaries in every way
+        // S, f, f' straddle every tier's mr/nr boundaries (4/6/8 rows,
+        // 8/16 columns) in every way
         for pass in Pass::ALL {
             check(pass, 3, 3, 5, 7, 0x22);
             check(pass, 2, 5, 9, 17, 0x23);
@@ -693,7 +984,8 @@ mod tests {
     fn planar_path_is_bitwise_the_interleaved_path() {
         // same panels, same microkernel, same order — the pack-from-
         // planar / store-planar path must agree exactly, not just within
-        // tolerance, across all conjugation patterns and ragged shapes
+        // tolerance, across all conjugation patterns and ragged shapes.
+        // Holds at *every* dispatch tier: packing is exact data movement
         for (pass, bins, s, f, fo, seed) in [
             (Pass::Fprop, 5usize, 16usize, 16usize, 16usize, 0x91u64),
             (Pass::Bprop, 3, 3, 5, 7, 0x92),
@@ -744,13 +1036,87 @@ mod tests {
         }
     }
 
+    /// Every runnable FMA tier must agree with the scalar reference tile
+    /// within accumulation tolerance, on shapes whose m/n/k straddle the
+    /// ragged mr (4/6/8), nr (8/16) and KC tails — the tier-explicit
+    /// seam ([`batched_with`]) pins the kernels directly, no dispatch
+    /// state involved.
+    #[test]
+    fn fma_kernels_match_scalar_on_ragged_tails() {
+        let scalar = Kernel::for_tier(SimdTier::Scalar);
+        for tier in [SimdTier::Avx2, SimdTier::Avx512] {
+            if simd::detected() < tier {
+                eprintln!("skipping {tier}: not runnable on this host");
+                continue;
+            }
+            let kern = Kernel::for_tier(tier);
+            for (pass, bins, s, f, fo, seed) in [
+                (Pass::Fprop, 2usize, 1usize, 7usize, 9usize, 0xC1u64),
+                (Pass::Fprop, 1, 35, 16, 16, 0xC2),
+                (Pass::Bprop, 2, 7, 9, 35, 0xC3),
+                (Pass::Bprop, 1, 9, 1, 7, 0xC4),
+                (Pass::AccGrad, 2, 35, 7, 9, 0xC5),
+                (Pass::AccGrad, 1, KC + 9, 5, 7, 0xC6), // KC tail + accum
+                (Pass::Fprop, 3, 13, KC + 1, 6, 0xC7),  // ragged k block
+            ] {
+                let sh = BinShape::of(pass, s, f, fo);
+                let mut rng = Rng::new(seed);
+                let a = cvec(&mut rng, bins * sh.a_len);
+                let b = cvec(&mut rng, bins * sh.b_len);
+                let mut ws = Workspace::new();
+                let mut want = vec![C32::ZERO; bins * sh.c_len];
+                batched_with(scalar, pass, bins, s, f, fo, &a, &b,
+                             &mut want, &mut ws);
+                let mut got = vec![C32::ZERO; bins * sh.c_len];
+                batched_with(kern, pass, bins, s, f, fo, &a, &b,
+                             &mut got, &mut ws);
+                let tol = 1e-3 * (sh.k as f32).sqrt().max(1.0);
+                for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert!((*g - *w).abs() < tol,
+                            "{tier} {pass:?} s={s} f={f} fo={fo} \
+                             elem {i}: {g:?} vs {w:?}");
+                }
+            }
+        }
+    }
+
+    /// The scalar tier is the legacy kernel bit-for-bit: whatever tier
+    /// dispatch would pick, forcing scalar must reproduce the exact
+    /// bits of the pre-dispatch 4×8 tile (anchored here against the
+    /// naive path only in tolerance, but against itself across entry
+    /// points exactly — see the planar/f16 bitwise gates).
+    #[test]
+    fn scalar_tier_is_deterministic_across_entry_points() {
+        let scalar = Kernel::for_tier(SimdTier::Scalar);
+        let (pass, bins, s, f, fo) = (Pass::Fprop, 4usize, 9, 17, 5);
+        let sh = BinShape::of(pass, s, f, fo);
+        let mut rng = Rng::new(0xD1);
+        let a = cvec(&mut rng, bins * sh.a_len);
+        let b = cvec(&mut rng, bins * sh.b_len);
+        let mut ws = Workspace::new();
+        let mut c1 = vec![C32::ZERO; bins * sh.c_len];
+        batched_with(scalar, pass, bins, s, f, fo, &a, &b, &mut c1,
+                     &mut ws);
+        let (ar, ai) = split(&a);
+        let (br, bi) = split(&b);
+        let mut cr = vec![0f32; bins * sh.c_len];
+        let mut ci = vec![0f32; bins * sh.c_len];
+        batched_planar_with(scalar, pass, bins, s, f, fo, &ar, &ai, &br,
+                            &bi, &mut cr, &mut ci, &mut ws);
+        for (i, w) in c1.iter().enumerate() {
+            assert_eq!(cr[i].to_bits(), w.re.to_bits(), "elem {i} re");
+            assert_eq!(ci[i].to_bits(), w.im.to_bits(), "elem {i} im");
+        }
+    }
+
     #[test]
     fn f16_b_path_is_bitwise_planar_on_representable_operands() {
         use crate::util::f16::{decode_slab, encode_slab};
         // encode B to f16 bits, then run (a) the f16 path on the bits and
         // (b) the f32 path on the decoded values: identical panels reach
-        // the microkernel, so the products must agree bitwise — across
-        // every conjugation pattern and a k-block accumulate shape
+        // the microkernel (hardware dequant is bitwise the software
+        // decoder), so the products must agree bitwise — across every
+        // conjugation pattern and a k-block accumulate shape
         for (pass, bins, s, f, fo, seed) in [
             (Pass::Fprop, 5usize, 16usize, 16usize, 16usize, 0xA1u64),
             (Pass::Bprop, 3, 3, 5, 7, 0xA2),

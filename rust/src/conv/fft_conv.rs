@@ -49,7 +49,7 @@ use crate::fft::fft2d::{self, irfft2_into, rfft2_into};
 use crate::fft::real::rfft_len;
 use crate::fft::soa::{self, LANES};
 use crate::fft::C32;
-use crate::util::{chunk_ranges, chunk_ranges_grouped, threads};
+use crate::util::{chunk_ranges, chunk_ranges_grouped, threads, SimdTier};
 
 use super::cgemm::{self, Workspace};
 use super::problem::ConvProblem;
@@ -91,6 +91,10 @@ pub struct StageTimings {
     /// attribution alias of the B stages, not a new stage: excluded
     /// from [`StageTimings::total`].
     pub weight_fft: Duration,
+    /// The SIMD dispatch tier the measured pass executed under
+    /// ([`crate::util::simd::tier`] at entry) — timings from different
+    /// tiers are not comparable, so every report row carries this.
+    pub simd_tier: SimdTier,
 }
 
 impl StageTimings {
@@ -124,6 +128,9 @@ impl StageTimings {
         self.pack_c += o.pack_c;
         self.ifft_c += o.ifft_c;
         self.weight_fft += o.weight_fft;
+        // accumulation only ever merges same-process runs; keep the
+        // higher tier if an override flipped mid-aggregate
+        self.simd_tier = self.simd_tier.max(o.simd_tier);
     }
 }
 
@@ -697,7 +704,10 @@ impl FftConvEngine {
         assert_eq!(x.len(), p.input_len());
         assert_eq!(wei.len(), p.weight_len());
         assert_eq!(out.len(), p.output_len());
-        let mut t = StageTimings::default();
+        let mut t = StageTimings {
+            simd_tier: crate::util::simd::tier(),
+            ..StageTimings::default()
+        };
         let (xr, xi) = self.forward(x, p.h, p.w, p.s * p.f, "freq.a", ws,
                                     &mut t.fft_a, &mut t.trans_a,
                                     &mut t.pack_a);
@@ -728,7 +738,10 @@ impl FftConvEngine {
         assert_eq!(go.len(), p.output_len());
         assert_eq!(wei.len(), p.weight_len());
         assert_eq!(out.len(), p.input_len());
-        let mut t = StageTimings::default();
+        let mut t = StageTimings {
+            simd_tier: crate::util::simd::tier(),
+            ..StageTimings::default()
+        };
         let (gr, gi) = self.forward(go, p.yh(), p.yw(), p.s * p.fo,
                                     "freq.a", ws, &mut t.fft_a,
                                     &mut t.trans_a, &mut t.pack_a);
@@ -760,7 +773,10 @@ impl FftConvEngine {
         assert_eq!(go.len(), p.output_len());
         assert_eq!(x.len(), p.input_len());
         assert_eq!(out.len(), p.weight_len());
-        let mut t = StageTimings::default();
+        let mut t = StageTimings {
+            simd_tier: crate::util::simd::tier(),
+            ..StageTimings::default()
+        };
         let (gr, gi) = self.forward(go, p.yh(), p.yw(), p.s * p.fo,
                                     "freq.a", ws, &mut t.fft_a,
                                     &mut t.trans_a, &mut t.pack_a);
@@ -826,7 +842,10 @@ impl FftConvEngine {
         assert_eq!(x.len(), p.input_len());
         assert_eq!(out.len(), p.output_len());
         self.check_spec(p, spec);
-        let mut t = StageTimings::default();
+        let mut t = StageTimings {
+            simd_tier: crate::util::simd::tier(),
+            ..StageTimings::default()
+        };
         let (xr, xi) = self.forward(x, p.h, p.w, p.s * p.f, "freq.a", ws,
                                     &mut t.fft_a, &mut t.trans_a,
                                     &mut t.pack_a);
@@ -857,7 +876,10 @@ impl FftConvEngine {
         assert_eq!(go.len(), p.output_len());
         assert_eq!(out.len(), p.input_len());
         self.check_spec(p, spec);
-        let mut t = StageTimings::default();
+        let mut t = StageTimings {
+            simd_tier: crate::util::simd::tier(),
+            ..StageTimings::default()
+        };
         let (gr, gi) = self.forward(go, p.yh(), p.yw(), p.s * p.fo,
                                     "freq.a", ws, &mut t.fft_a,
                                     &mut t.trans_a, &mut t.pack_a);

@@ -9,7 +9,12 @@
 //! the model lives in `cost::` for the full-plane extrapolation.
 //!
 //! The cache is keyed by the problem (the paper keys by problem size) and
-//! persists as JSON so tuning survives process restarts.
+//! persists as JSON so tuning survives process restarts. The persisted
+//! document is stamped with the SIMD dispatch tier the measurements ran
+//! under ([`crate::util::simd::tier`]): timings measured with the scalar
+//! microkernels say nothing about the AVX2/AVX-512 ones (and vice
+//! versa), so a warm load under a different tier degrades to a counted
+//! cold start instead of serving stale decisions.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -20,7 +25,7 @@ use std::time::{Duration, Instant};
 use crate::conv::{direct, im2col, tiled, ConvProblem, FftConvEngine,
                   FftMode, SpectrumPrecision, Workspace};
 use crate::fft::is_smooth;
-use crate::util::{Json, Rng};
+use crate::util::{Json, Rng, SimdTier};
 
 use super::strategy::{Pass, Strategy};
 
@@ -282,7 +287,11 @@ impl Autotuner {
             ]));
         }
         std::fs::write(path, Json::obj(vec![
-            ("version", Json::num(1.0)),
+            ("version", Json::num(2.0)),
+            // the dispatch tier the cached timings were measured under —
+            // checked at load, mismatches cold-start (see from_json_text)
+            ("simd_tier",
+             Json::str(crate::util::simd::tier().tag())),
             ("entries", Json::Arr(entries)),
         ]).to_string())
     }
@@ -300,8 +309,18 @@ impl Autotuner {
 
     /// The tolerant half of [`Autotuner::load`]: parse persisted cache
     /// text, swallowing corruption into `load_warnings` (a poisoned
-    /// cache file must cost a re-tune, not an outage).
+    /// cache file must cost a re-tune, not an outage). Documents whose
+    /// recorded SIMD tier differs from the active dispatch tier are
+    /// *valid but stale* — they also degrade to a counted cold start,
+    /// since every cached `seconds` was measured with different
+    /// microkernels.
     pub fn from_json_text(text: &str) -> Autotuner {
+        Self::from_json_text_for_tier(text, crate::util::simd::tier())
+    }
+
+    /// [`Autotuner::from_json_text`] with the comparison tier pinned —
+    /// the testable seam (tests must not depend on the host's tier).
+    fn from_json_text_for_tier(text: &str, tier: SimdTier) -> Autotuner {
         let mut t = Autotuner::new();
         let j = match Json::parse(text) {
             Ok(j) => j,
@@ -312,9 +331,34 @@ impl Autotuner {
             }
         };
         match j.get("version").and_then(Json::as_usize) {
-            Some(1) => {}
+            Some(2) => {}
+            Some(1) => {
+                // pre-SIMD-dispatch schema: no tier recorded, so the
+                // timings are not attributable — same cold start a tier
+                // mismatch gets
+                eprintln!("tuner cache: v1 document predates SIMD-tier \
+                           stamping; starting cold");
+                t.load_warnings += 1;
+                return t;
+            }
             v => {
                 eprintln!("tuner cache: unknown schema version {v:?}; \
+                           starting cold");
+                t.load_warnings += 1;
+                return t;
+            }
+        }
+        match j.get("simd_tier").and_then(Json::as_str) {
+            Some(tag) if tag == tier.tag() => {}
+            Some(tag) => {
+                eprintln!("tuner cache: tuned under SIMD tier '{tag}' \
+                           but dispatching '{}'; timings are stale — \
+                           starting cold", tier.tag());
+                t.load_warnings += 1;
+                return t;
+            }
+            None => {
+                eprintln!("tuner cache: v2 document missing simd_tier; \
                            starting cold");
                 t.load_warnings += 1;
                 return t;
@@ -716,6 +760,49 @@ mod tests {
         // malformed entry skipped, valid shape of document kept
         let t = Autotuner::from_json_text(
             "{\"version\": 1, \"entries\": [{\"key\": \"nope\"}]}");
+        assert!(t.is_empty() && t.load_warnings >= 1);
+    }
+
+    #[test]
+    fn saved_cache_records_the_dispatch_tier() {
+        let mut t = Autotuner::new();
+        let p = ConvProblem::square(1, 2, 2, 9, 3);
+        let choice = Choice { strategy: Strategy::Direct, n_fft: None,
+                              seconds: 1e-3 };
+        t.insert(&p, Pass::Fprop, choice);
+        let tmp = std::env::temp_dir().join("fbfft_tuner_tier_test.json");
+        t.save(&tmp).unwrap();
+        let text = std::fs::read_to_string(&tmp).unwrap();
+        std::fs::remove_file(&tmp).ok();
+        let tier = crate::util::simd::tier();
+        assert!(text.contains("\"simd_tier\""), "{text}");
+        assert!(text.contains(tier.tag()), "{text}");
+        // same tier: full warm load, no warnings
+        let warm = Autotuner::from_json_text_for_tier(&text, tier);
+        assert_eq!(warm.cached(&p, Pass::Fprop), Some(choice));
+        assert_eq!(warm.load_warnings, 0);
+        // different tier: the document is valid but its timings are
+        // stale — counted cold start, entries dropped
+        let other = if tier == SimdTier::Scalar {
+            SimdTier::Avx2
+        } else {
+            SimdTier::Scalar
+        };
+        let cold = Autotuner::from_json_text_for_tier(&text, other);
+        assert!(cold.is_empty(),
+                "tier mismatch must not warm-load entries");
+        assert_eq!(cold.load_warnings, 1);
+    }
+
+    #[test]
+    fn v1_and_tierless_documents_cold_start() {
+        // pre-dispatch schema: structurally fine, but no tier recorded
+        let t = Autotuner::from_json_text(
+            "{\"version\": 1, \"entries\": []}");
+        assert!(t.is_empty() && t.load_warnings >= 1);
+        // v2 claiming the schema but missing the stamp
+        let t = Autotuner::from_json_text(
+            "{\"version\": 2, \"entries\": []}");
         assert!(t.is_empty() && t.load_warnings >= 1);
     }
 

@@ -10,6 +10,7 @@
 //! not ms-exact prediction (DESIGN.md §3).
 
 use crate::conv::ConvProblem;
+use crate::util::SimdTier;
 
 use super::{cgemm_bytes, direct_flops, pipeline_cost};
 
@@ -96,6 +97,15 @@ pub struct CufftConvModel {
     /// SoA rewrite targets. The host twin's width is
     /// [`crate::fft::soa::LANES`].
     pub fft_lanes: f64,
+    /// FMA lane width of the CGEMM engine, relative to the 32-lane warp
+    /// the calibration anchors to: the GEMM compute roofline is scaled
+    /// by `gemm_lanes/32` exactly like the transform term. The paper's
+    /// GPU ctors keep the full warp (32 — predictions unchanged); the
+    /// host-tier ctors substitute the *dispatched* SIMD tier's FMA
+    /// width ([`SimdTier::fma_lanes`]: 1 scalar / 8 AVX2 / 16 AVX-512),
+    /// so the model explains why a forced-scalar run's CGEMM goes
+    /// compute-bound an order of magnitude earlier.
+    pub gemm_lanes: f64,
 }
 
 impl CufftConvModel {
@@ -109,6 +119,8 @@ impl CufftConvModel {
             // the planner's internal vectorization, fitted — well short
             // of the full warp but never scalar
             fft_lanes: 4.0,
+            // cuBLAS CGEMM drives full warps
+            gemm_lanes: 32.0,
         }
     }
 
@@ -121,6 +133,29 @@ impl CufftConvModel {
             fft_lanes: 32.0,
             ..Self::vendor()
         }
+    }
+
+    /// The fbfft model re-anchored to a *host* SIMD dispatch tier: same
+    /// stage structure and fitted efficiencies, with both the
+    /// transform-lane and CGEMM compute terms scaled to the tier's FMA
+    /// width. The paper-calibrated [`CufftConvModel::vendor`] /
+    /// [`CufftConvModel::fbfft`] stay untouched; this twin exists so
+    /// reports and the autotuner can sanity-check *measured* tier
+    /// speedups against the roofline shape (a forced-scalar run should
+    /// slow by roughly the compute-bound fraction, not 8×).
+    pub fn host_tier(tier: SimdTier) -> Self {
+        let lanes = tier.fma_lanes() as f64;
+        CufftConvModel {
+            fft_lanes: lanes.min(crate::fft::soa::LANES as f64),
+            gemm_lanes: lanes,
+            ..Self::fbfft()
+        }
+    }
+
+    /// [`CufftConvModel::host_tier`] at the tier runtime dispatch
+    /// actually selected (detection ∧ `FBFFT_SIMD`).
+    pub fn host() -> Self {
+        Self::host_tier(crate::util::simd::tier())
     }
 
     /// Basis the engine would use for `p` (fbfft: next pow2; vendor: the
@@ -174,7 +209,9 @@ impl CufftConvModel {
         // the panels barely get re-used (cost::cgemm_intensity)
         let geff = self.gemm_eff * (p.f as f64 / (p.f as f64 + 16.0))
             .max(0.05);
-        let gemm_compute = c.cgemm / (self.hw.peak_flops * geff);
+        let gemm_rate =
+            self.hw.peak_flops * (self.gemm_lanes / 32.0).min(1.0);
+        let gemm_compute = c.cgemm / (gemm_rate * geff);
         let gemm_memory =
             cgemm_bytes(p, n) / (self.hw.mem_bw * self.trans_mem_eff);
         let gemm = gemm_compute.max(gemm_memory);
@@ -312,6 +349,36 @@ mod tests {
         // and the term is monotone in lane width
         assert!(mid.time(&p, 16) <= scalar.time(&p, 16));
         assert!(base.time(&p, 16) <= mid.time(&p, 16));
+    }
+
+    #[test]
+    fn host_tier_roofline_is_monotone_in_fma_width() {
+        use crate::util::SimdTier;
+        // CGEMM-heavy regime: plane counts large enough that the
+        // compute term binds, where tier width must show up
+        let p = ConvProblem::square(128, 128, 128, 32, 9);
+        let t_scalar =
+            CufftConvModel::host_tier(SimdTier::Scalar).time(&p, 32);
+        let t_avx2 =
+            CufftConvModel::host_tier(SimdTier::Avx2).time(&p, 32);
+        let t_avx512 =
+            CufftConvModel::host_tier(SimdTier::Avx512).time(&p, 32);
+        assert!(t_scalar > t_avx2, "scalar {t_scalar} vs avx2 {t_avx2}");
+        assert!(t_avx2 >= t_avx512,
+                "avx2 {t_avx2} vs avx512 {t_avx512}");
+        // the narrow tier is compute-bound: within the 8× lane ratio
+        // but meaningfully above the wide tier, not bandwidth-flat
+        assert!(t_scalar / t_avx2 > 2.0,
+                "scalar/avx2 ratio {}", t_scalar / t_avx2);
+        assert!(t_scalar / t_avx2 <= 8.0 + 1e-9);
+    }
+
+    #[test]
+    fn host_model_resolves_without_panicking() {
+        // host() snapshots the live dispatch tier — just exercise it
+        let p = ConvProblem::square(16, 16, 16, 32, 5);
+        let t = CufftConvModel::host().autotuned_time(&p);
+        assert!(t.is_finite() && t > 0.0);
     }
 
     #[test]

@@ -418,6 +418,12 @@ impl FbfftPlan {
     //   output planes: `[kw][kh][b]` (nf × n × batch) — the same fused
     //   transposed bin-major layout as the scalar path, split-complex,
     //   handed to the planar CGEMM with **no repacking stage at all**.
+    //
+    // The lane kernels underneath dispatch on [`crate::util::simd`]'s
+    // runtime tier (scalar reference / AVX2+FMA / AVX-512); a lane's
+    // bits are independent of its batch position *within a tier*, so the
+    // chunked-vs-fused bitwise assertions in this module's tests hold at
+    // whatever tier the host detects (or `FBFFT_SIMD` forces).
 
     /// SoA pass 1 over the row-pair range `[rp0, rp0+rpn)` (row pairs of
     /// the §5.2 two-reals-in-one-complex pack; pair `rp` covers image

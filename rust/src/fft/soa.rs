@@ -20,23 +20,32 @@
 //!   `f32`), with a scalar tail for ragged batches.
 //!
 //! The kernels reuse [`FbfftPlan`]'s cached bit-reversal and stage-major
-//! twiddle tables, and follow the exact operation order of the scalar
-//! [`FbfftPlan::cfft_in_place`] path — a lane of the batched transform is
-//! arithmetically identical to one scalar transform, so the conformance
-//! gap between the two paths is pure reassociation-free floating point.
+//! twiddle tables. The butterfly lane pass dispatches on the runtime
+//! [`SimdTier`] (`util::simd`): the **scalar tier** follows the exact
+//! operation order of the scalar [`FbfftPlan::cfft_in_place`] path — a
+//! lane of the batched transform is bit-identical to one scalar
+//! transform — while the **AVX2/AVX-512 tiers** fuse the twiddle
+//! multiply into `fmsub`/`fmadd` pairs (different rounding, gated by
+//! `testkit::tolerance` instead of bitwise equality). Within any one
+//! tier a lane's result is independent of its batch position (the FMA
+//! tails mirror the vector contraction via `f32::mul_add`), so the
+//! pipeline's batch-chunking invariants stay bitwise.
 
 use super::complex::C32;
 use super::fbfft_host::FbfftPlan;
 use super::real::rfft_len;
+use crate::util::simd::{self, SimdTier};
 
 /// Transforms processed per vectorized pass of the lane loops (the rest
 /// of a ragged batch takes the scalar tail). Eight `f32` lanes = one
 /// 256-bit SIMD register.
 pub const LANES: usize = 8;
 
-/// `dst[i] = a[i] op b[i]`-style butterfly over one lane slice:
+/// Scalar-tier butterfly over one lane slice:
 /// `(top, bot) <- (top + w·bot, top - w·bot)` for all `batch` lanes,
-/// with the twiddle `(wr, wi)` broadcast. `LANES` at a time + tail.
+/// with the twiddle `(wr, wi)` broadcast. `LANES` at a time + tail —
+/// the pre-dispatch reference arithmetic, kept bit-identical (separate
+/// mul/sub, no fused contraction).
 #[inline(always)]
 fn butterfly_lanes(tr_: &mut [f32], ti_: &mut [f32], br_: &mut [f32],
                    bi_: &mut [f32], wr: f32, wi: f32, batch: usize) {
@@ -70,6 +79,125 @@ fn butterfly_lanes(tr_: &mut [f32], ti_: &mut [f32], br_: &mut [f32],
     }
 }
 
+/// Scalar tail of the FMA tiers, lanes `[b, batch)`: `f32::mul_add`
+/// mirrors the vector bodies' `vfmsub`/`vfmadd` contraction exactly
+/// (both are correctly-rounded fused ops), so a lane's result is
+/// **independent of its position in the batch** — the bitwise
+/// phase-split / batch-chunking invariants the threaded pipeline relies
+/// on keep holding within each tier.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn butterfly_tail_fma(tr_: &mut [f32], ti_: &mut [f32], br_: &mut [f32],
+                      bi_: &mut [f32], wr: f32, wi: f32, mut b: usize,
+                      batch: usize) {
+    while b < batch {
+        let vr = br_[b].mul_add(wr, -(bi_[b] * wi));
+        let vi = br_[b].mul_add(wi, bi_[b] * wr);
+        let ur = tr_[b];
+        let ui = ti_[b];
+        tr_[b] = ur + vr;
+        ti_[b] = ui + vi;
+        br_[b] = ur - vr;
+        bi_[b] = ui - vi;
+        b += 1;
+    }
+}
+
+/// AVX2+FMA butterfly: `v = w·bot` as `fmsub`/`fmadd` pairs (twiddle
+/// broadcast hoisted by the caller of the lane loop), eight lanes per
+/// step, position-independent FMA tail.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+unsafe fn butterfly_lanes_avx2(tr_: &mut [f32], ti_: &mut [f32],
+                               br_: &mut [f32], bi_: &mut [f32], wr: f32,
+                               wi: f32, batch: usize) {
+    use std::arch::x86_64::*;
+    debug_assert!(tr_.len() >= batch && ti_.len() >= batch
+                  && br_.len() >= batch && bi_.len() >= batch);
+    let wrv = _mm256_set1_ps(wr);
+    let wiv = _mm256_set1_ps(wi);
+    let mut b = 0;
+    while b + 8 <= batch {
+        let brv = _mm256_loadu_ps(br_.as_ptr().add(b));
+        let biv = _mm256_loadu_ps(bi_.as_ptr().add(b));
+        let vr = _mm256_fmsub_ps(brv, wrv, _mm256_mul_ps(biv, wiv));
+        let vi = _mm256_fmadd_ps(brv, wiv, _mm256_mul_ps(biv, wrv));
+        let ur = _mm256_loadu_ps(tr_.as_ptr().add(b));
+        let ui = _mm256_loadu_ps(ti_.as_ptr().add(b));
+        _mm256_storeu_ps(tr_.as_mut_ptr().add(b), _mm256_add_ps(ur, vr));
+        _mm256_storeu_ps(ti_.as_mut_ptr().add(b), _mm256_add_ps(ui, vi));
+        _mm256_storeu_ps(br_.as_mut_ptr().add(b), _mm256_sub_ps(ur, vr));
+        _mm256_storeu_ps(bi_.as_mut_ptr().add(b), _mm256_sub_ps(ui, vi));
+        b += 8;
+    }
+    butterfly_tail_fma(tr_, ti_, br_, bi_, wr, wi, b, batch);
+}
+
+/// AVX-512F butterfly: sixteen lanes per step, remainder through the
+/// AVX2 body + FMA tail (per-lane arithmetic identical at every width).
+#[cfg(all(target_arch = "x86_64", fbfft_avx512))]
+#[target_feature(enable = "avx512f,avx2,fma")]
+unsafe fn butterfly_lanes_avx512(tr_: &mut [f32], ti_: &mut [f32],
+                                 br_: &mut [f32], bi_: &mut [f32],
+                                 wr: f32, wi: f32, batch: usize) {
+    use std::arch::x86_64::*;
+    debug_assert!(tr_.len() >= batch && ti_.len() >= batch
+                  && br_.len() >= batch && bi_.len() >= batch);
+    let wrv = _mm512_set1_ps(wr);
+    let wiv = _mm512_set1_ps(wi);
+    let mut b = 0;
+    while b + 16 <= batch {
+        let brv = _mm512_loadu_ps(br_.as_ptr().add(b));
+        let biv = _mm512_loadu_ps(bi_.as_ptr().add(b));
+        let vr = _mm512_fmsub_ps(brv, wrv, _mm512_mul_ps(biv, wiv));
+        let vi = _mm512_fmadd_ps(brv, wiv, _mm512_mul_ps(biv, wrv));
+        let ur = _mm512_loadu_ps(tr_.as_ptr().add(b));
+        let ui = _mm512_loadu_ps(ti_.as_ptr().add(b));
+        _mm512_storeu_ps(tr_.as_mut_ptr().add(b), _mm512_add_ps(ur, vr));
+        _mm512_storeu_ps(ti_.as_mut_ptr().add(b), _mm512_add_ps(ui, vi));
+        _mm512_storeu_ps(br_.as_mut_ptr().add(b), _mm512_sub_ps(ur, vr));
+        _mm512_storeu_ps(bi_.as_mut_ptr().add(b), _mm512_sub_ps(ui, vi));
+        b += 16;
+    }
+    butterfly_lanes_avx2(&mut tr_[b..batch], &mut ti_[b..batch],
+                         &mut br_[b..batch], &mut bi_[b..batch], wr, wi,
+                         batch - b);
+}
+
+/// Tier dispatch for one butterfly lane pass. The `tier` is resolved
+/// once per transform at the public entry points and threaded down, so
+/// worker threads never re-resolve mid-pipeline.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn butterfly_dispatch(tier: SimdTier, tr_: &mut [f32], ti_: &mut [f32],
+                      br_: &mut [f32], bi_: &mut [f32], wr: f32, wi: f32,
+                      batch: usize) {
+    match tier {
+        SimdTier::Scalar => {
+            butterfly_lanes(tr_, ti_, br_, bi_, wr, wi, batch)
+        }
+        #[cfg(target_arch = "x86_64")]
+        SimdTier::Avx2 => {
+            // SAFETY: the Avx2 tier is only ever selected when runtime
+            // detection confirmed avx2+fma (`simd::tier()` caps at
+            // `simd::detected()`).
+            unsafe {
+                butterfly_lanes_avx2(tr_, ti_, br_, bi_, wr, wi, batch)
+            }
+        }
+        #[cfg(all(target_arch = "x86_64", fbfft_avx512))]
+        SimdTier::Avx512 => {
+            // SAFETY: as above — the Avx512 tier requires detected
+            // avx512f (and the toolchain gate this arm compiles under).
+            unsafe {
+                butterfly_lanes_avx512(tr_, ti_, br_, bi_, wr, wi, batch)
+            }
+        }
+        #[allow(unreachable_patterns)]
+        _ => butterfly_lanes(tr_, ti_, br_, bi_, wr, wi, batch),
+    }
+}
+
 /// Batched in-place complex FFT over split-complex planes: `re`/`im` hold
 /// `n × batch` values, element `j` of transform `b` at `j·batch + b`
 /// (batch innermost). Iterative radix-2 DIT with the plan's cached LUTs —
@@ -77,6 +205,15 @@ fn butterfly_lanes(tr_: &mut [f32], ti_: &mut [f32], br_: &mut [f32],
 /// butterfly pass.
 pub fn cfft_batch(plan: &FbfftPlan, re: &mut [f32], im: &mut [f32],
                   batch: usize, inverse: bool) {
+    cfft_batch_with(plan, re, im, batch, inverse, simd::tier());
+}
+
+/// [`cfft_batch`] with an explicit dispatch tier — the internal seam the
+/// forced-tier conformance tests pin kernels against. `tier` must not
+/// exceed [`simd::detected`].
+pub(crate) fn cfft_batch_with(plan: &FbfftPlan, re: &mut [f32],
+                              im: &mut [f32], batch: usize, inverse: bool,
+                              tier: SimdTier) {
     let n = plan.len();
     assert_eq!(re.len(), n * batch, "re plane length");
     assert_eq!(im.len(), n * batch, "im plane length");
@@ -109,10 +246,10 @@ pub fn cfft_batch(plan: &FbfftPlan, re: &mut [f32], im: &mut [f32],
                 let bot = (base + j + half) * batch;
                 let (rl, rh) = re.split_at_mut(bot);
                 let (il, ih) = im.split_at_mut(bot);
-                butterfly_lanes(&mut rl[top..top + batch],
-                                &mut il[top..top + batch],
-                                &mut rh[..batch], &mut ih[..batch],
-                                w.re, w.im, batch);
+                butterfly_dispatch(tier, &mut rl[top..top + batch],
+                                   &mut il[top..top + batch],
+                                   &mut rh[..batch], &mut ih[..batch],
+                                   w.re, w.im, batch);
             }
             base += m;
         }
@@ -273,23 +410,101 @@ pub fn irfft_batch_soa(plan: &FbfftPlan, spec_re: &[f32], spec_im: &[f32],
     }
 }
 
-/// Split an interleaved `C32` slice into planar re/im planes.
+/// Split an interleaved `C32` slice into planar re/im planes. Pure data
+/// movement — the shuffle kernel and the scalar loop are bitwise
+/// interchangeable, so this dispatches freely on the active tier.
 pub fn split_complex(src: &[C32], re: &mut [f32], im: &mut [f32]) {
     assert_eq!(src.len(), re.len());
     assert_eq!(src.len(), im.len());
+    #[cfg(target_arch = "x86_64")]
+    if simd::tier() >= SimdTier::Avx2 {
+        // SAFETY: avx2 detected (tier never exceeds detection).
+        unsafe { split_complex_avx2(src, re, im) };
+        return;
+    }
+    split_complex_scalar(src, re, im);
+}
+
+fn split_complex_scalar(src: &[C32], re: &mut [f32], im: &mut [f32]) {
     for ((s, r), i) in src.iter().zip(re.iter_mut()).zip(im.iter_mut()) {
         *r = s.re;
         *i = s.im;
     }
 }
 
-/// Re-interleave planar re/im planes into a `C32` slice.
+/// De-interleave eight `C32` per step: two 256-bit loads, `shuffle_ps`
+/// to gather the even/odd 32-bit slots per 128-bit half, one cross-lane
+/// `permute4x64` to restore order. `C32` is `#[repr(C)]`, so the slice
+/// is exactly the interleaved `[re, im]` f32 stream.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn split_complex_avx2(src: &[C32], re: &mut [f32],
+                             im: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let n = src.len();
+    let p = src.as_ptr() as *const f32;
+    let mut i = 0;
+    while i + 8 <= n {
+        let lo = _mm256_loadu_ps(p.add(2 * i)); // r0 i0 r1 i1|r2 i2 r3 i3
+        let hi = _mm256_loadu_ps(p.add(2 * i + 8));
+        // per-half even/odd gather: r0 r1 r4 r5 | r2 r3 r6 r7
+        let rq = _mm256_shuffle_ps(lo, hi, 0b10_00_10_00);
+        let iq = _mm256_shuffle_ps(lo, hi, 0b11_01_11_01);
+        // reorder the 64-bit quarters [0,2,1,3] → sequential lanes
+        let rv = _mm256_castpd_ps(
+            _mm256_permute4x64_pd(_mm256_castps_pd(rq), 0b11_01_10_00));
+        let iv = _mm256_castpd_ps(
+            _mm256_permute4x64_pd(_mm256_castps_pd(iq), 0b11_01_10_00));
+        _mm256_storeu_ps(re.as_mut_ptr().add(i), rv);
+        _mm256_storeu_ps(im.as_mut_ptr().add(i), iv);
+        i += 8;
+    }
+    split_complex_scalar(&src[i..], &mut re[i..], &mut im[i..]);
+}
+
+/// Re-interleave planar re/im planes into a `C32` slice (exact at every
+/// tier, like [`split_complex`]).
 pub fn interleave_complex(re: &[f32], im: &[f32], dst: &mut [C32]) {
     assert_eq!(dst.len(), re.len());
     assert_eq!(dst.len(), im.len());
+    #[cfg(target_arch = "x86_64")]
+    if simd::tier() >= SimdTier::Avx2 {
+        // SAFETY: avx2 detected (tier never exceeds detection).
+        unsafe { interleave_complex_avx2(re, im, dst) };
+        return;
+    }
+    interleave_complex_scalar(re, im, dst);
+}
+
+fn interleave_complex_scalar(re: &[f32], im: &[f32], dst: &mut [C32]) {
     for ((d, r), i) in dst.iter_mut().zip(re.iter()).zip(im.iter()) {
         *d = C32::new(*r, *i);
     }
+}
+
+/// Interleave eight `C32` per step: `unpacklo/hi_ps` pair re/im within
+/// each 128-bit half, `permute2f128` stitches the halves into the two
+/// sequential output registers.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn interleave_complex_avx2(re: &[f32], im: &[f32],
+                                  dst: &mut [C32]) {
+    use std::arch::x86_64::*;
+    let n = dst.len();
+    let p = dst.as_mut_ptr() as *mut f32;
+    let mut i = 0;
+    while i + 8 <= n {
+        let rv = _mm256_loadu_ps(re.as_ptr().add(i)); // r0..r3 | r4..r7
+        let iv = _mm256_loadu_ps(im.as_ptr().add(i));
+        let un_lo = _mm256_unpacklo_ps(rv, iv); // r0 i0 r1 i1|r4 i4 r5 i5
+        let un_hi = _mm256_unpackhi_ps(rv, iv); // r2 i2 r3 i3|r6 i6 r7 i7
+        let lo = _mm256_permute2f128_ps(un_lo, un_hi, 0x20);
+        let hi = _mm256_permute2f128_ps(un_lo, un_hi, 0x31);
+        _mm256_storeu_ps(p.add(2 * i), lo);
+        _mm256_storeu_ps(p.add(2 * i + 8), hi);
+        i += 8;
+    }
+    interleave_complex_scalar(&re[i..], &im[i..], &mut dst[i..]);
 }
 
 #[cfg(test)]
@@ -309,8 +524,10 @@ mod tests {
             .collect()
     }
 
-    /// A lane of the batched kernel must be *bitwise* identical to the
-    /// scalar plan transform — same LUTs, same operation order.
+    /// A lane of the batched kernel at the **scalar tier** must be
+    /// *bitwise* identical to the scalar plan transform — same LUTs,
+    /// same operation order. (The FMA tiers change rounding and are
+    /// gated by tolerance below, not bitwise.)
     #[test]
     fn cfft_batch_lane_is_bitwise_scalar() {
         for n in [8usize, 32, 256] {
@@ -322,7 +539,8 @@ mod tests {
                 for inverse in [false, true] {
                     let mut re = re0.clone();
                     let mut im = im0.clone();
-                    cfft_batch(&plan, &mut re, &mut im, batch, inverse);
+                    cfft_batch_with(&plan, &mut re, &mut im, batch,
+                                    inverse, SimdTier::Scalar);
                     for b in 0..batch {
                         let mut buf: Vec<C32> = (0..n)
                             .map(|j| C32::new(re0[j * batch + b],
@@ -338,6 +556,114 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    /// Every runnable FMA tier stays within the FFT tolerance model of
+    /// the scalar reference, on LANES-unaligned batches (1, 7, 9, 35) —
+    /// the fused contraction moves bits, not values.
+    #[test]
+    fn fma_tiers_match_scalar_within_fft_tolerance() {
+        for tier in [SimdTier::Avx2, SimdTier::Avx512] {
+            if simd::detected() < tier {
+                eprintln!("skipping {tier}: not runnable on this host");
+                continue;
+            }
+            for n in [8usize, 32, 256] {
+                for batch in [1usize, 7, 9, 35] {
+                    let plan = FbfftPlan::new(n);
+                    let re0 = rand_real(n * batch, 11 + n as u64);
+                    let im0 = rand_real(n * batch, 13 + batch as u64);
+                    for inverse in [false, true] {
+                        let mut sr = re0.clone();
+                        let mut si = im0.clone();
+                        cfft_batch_with(&plan, &mut sr, &mut si, batch,
+                                        inverse, SimdTier::Scalar);
+                        let mut vr = re0.clone();
+                        let mut vi = im0.clone();
+                        cfft_batch_with(&plan, &mut vr, &mut vi, batch,
+                                        inverse, tier);
+                        let tol = crate::testkit::tolerance::fft_abs(n);
+                        for i in 0..n * batch {
+                            assert!((sr[i] - vr[i]).abs() < tol
+                                    && (si[i] - vi[i]).abs() < tol,
+                                    "{tier} n={n} batch={batch} \
+                                     inverse={inverse} i={i}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Within one tier a lane's bits must not depend on how the batch
+    /// was grouped — the threaded pipeline splits batches into chunks
+    /// and asserts bitwise phase-split equality, so the FMA tails must
+    /// mirror the vector bodies' contraction exactly.
+    #[test]
+    fn lane_results_are_independent_of_batch_grouping_per_tier() {
+        let n = 32usize;
+        let batch = 35usize;
+        let re0 = rand_real(n * batch, 77);
+        let im0 = rand_real(n * batch, 78);
+        let plan = FbfftPlan::new(n);
+        for tier in [SimdTier::Scalar, SimdTier::Avx2, SimdTier::Avx512] {
+            if simd::detected() < tier {
+                continue;
+            }
+            let mut full_re = re0.clone();
+            let mut full_im = im0.clone();
+            cfft_batch_with(&plan, &mut full_re, &mut full_im, batch,
+                            false, tier);
+            // re-run each column group as its own narrow batch
+            for (b0, bn) in [(0usize, 3usize), (3, 8), (11, 16), (27, 8)]
+            {
+                let mut cr = vec![0f32; n * bn];
+                let mut ci = vec![0f32; n * bn];
+                for j in 0..n {
+                    for l in 0..bn {
+                        cr[j * bn + l] = re0[j * batch + b0 + l];
+                        ci[j * bn + l] = im0[j * batch + b0 + l];
+                    }
+                }
+                cfft_batch_with(&plan, &mut cr, &mut ci, bn, false,
+                                tier);
+                for j in 0..n {
+                    for l in 0..bn {
+                        assert_eq!(cr[j * bn + l],
+                                   full_re[j * batch + b0 + l],
+                                   "{tier} chunk ({b0},{bn}) j={j} \
+                                    l={l} re");
+                        assert_eq!(ci[j * bn + l],
+                                   full_im[j * batch + b0 + l],
+                                   "{tier} chunk ({b0},{bn}) j={j} \
+                                    l={l} im");
+                    }
+                }
+            }
+        }
+    }
+
+    /// The shuffle kernels are pure data movement: whatever tier is
+    /// active, split/interleave must agree bitwise with the scalar
+    /// loops, including ragged tails.
+    #[test]
+    fn shuffles_are_bitwise_exact_at_the_active_tier() {
+        for len in [1usize, 7, 8, 9, 16, 35] {
+            let src: Vec<C32> = (0..len)
+                .map(|i| C32::new(i as f32 + 0.5, -(i as f32) - 0.25))
+                .collect();
+            let mut re = vec![0f32; len];
+            let mut im = vec![0f32; len];
+            split_complex(&src, &mut re, &mut im);
+            let mut want_re = vec![0f32; len];
+            let mut want_im = vec![0f32; len];
+            split_complex_scalar(&src, &mut want_re, &mut want_im);
+            assert_eq!(re, want_re, "len={len}");
+            assert_eq!(im, want_im, "len={len}");
+            let mut back = vec![C32::ZERO; len];
+            interleave_complex(&re, &im, &mut back);
+            assert_eq!(back, src, "len={len}");
         }
     }
 

@@ -10,6 +10,57 @@ pub mod sweep;
 pub mod tables;
 pub mod trainer;
 
+use crate::util::{simd, threads, Json};
+
+/// The `"host"` provenance block carried by every `BENCH_*.json`: the
+/// numbers in a perf document mean nothing without the machine and the
+/// dispatch tier they were measured under, so each document records the
+/// detected CPU features, the tier actually dispatched (post
+/// `FBFFT_SIMD` resolution), the worker count, and the `FBFFT_*`
+/// environment knobs that shaped the run (absent knobs serialize as
+/// `null` so "unset" and "empty" stay distinguishable).
+pub fn host_meta() -> Json {
+    let env = |k: &str| std::env::var(k)
+        .map(|v| Json::str(&v))
+        .unwrap_or(Json::Null);
+    Json::obj(vec![
+        ("cpu_features",
+         Json::Arr(simd::detected_features().iter()
+                       .map(|f| Json::str(f)).collect())),
+        ("simd_tier", Json::str(simd::tier().tag())),
+        ("simd_detected", Json::str(simd::detected().tag())),
+        ("threads", Json::num(threads() as f64)),
+        ("env", Json::obj(vec![
+            ("FBFFT_SIMD", env("FBFFT_SIMD")),
+            ("FBFFT_THREADS", env("FBFFT_THREADS")),
+            ("FBFFT_FAULTS", env("FBFFT_FAULTS")),
+        ])),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn host_meta_records_tier_and_threads() {
+        let h = host_meta();
+        let tier = h.get("simd_tier").and_then(Json::as_str).unwrap();
+        assert!(simd::SimdTier::from_tag(tier).is_some(), "{tier}");
+        let det = h.get("simd_detected").and_then(Json::as_str).unwrap();
+        assert_eq!(det, simd::detected().tag());
+        assert!(h.get("threads").unwrap().as_f64().unwrap() >= 1.0);
+        let env = h.get("env").expect("env block");
+        for k in ["FBFFT_SIMD", "FBFFT_THREADS", "FBFFT_FAULTS"] {
+            assert!(env.get(k).is_some(), "missing env.{k}");
+        }
+        // round-trips through the in-tree parser (nulls included)
+        let back = Json::parse(&h.to_string()).unwrap();
+        assert_eq!(back.get("simd_tier").and_then(Json::as_str),
+                   Some(tier));
+    }
+}
+
 pub use cnn::table3_report;
 pub use fftbench::{fig7_report, fig8_report};
 pub use serve::{serve_json, serve_table};

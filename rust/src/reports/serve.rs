@@ -3,15 +3,21 @@
 //! that same document — the JSON is built first and the table reads
 //! only it, so the two can never disagree (the `breakdown` pattern).
 //!
-//! Schema (version 4 — v3 plus the net-level chain: one engine now
-//! serves a whole [`NetPlan`](crate::coordinator::NetPlan), so the
-//! document gains the chain size, the end-to-end `states_per_sec`
-//! rate (images through the *full chain* per wall second), the
+//! Schema (version 5 — v4 plus the [`super::host_meta`] `host` block:
+//! CPU features, the resolved SIMD dispatch tier, thread count and the
+//! `FBFFT_*` env knobs, so a throughput number can never be read apart
+//! from the machine/tier that produced it. v4 added the net-level
+//! chain: one engine serves a whole
+//! [`NetPlan`](crate::coordinator::NetPlan), so the document carries
+//! the chain size, the end-to-end `states_per_sec` rate (images
+//! through the *full chain* per wall second), the
 //! submit/complete-overlap evidence counters, and one `per_layer` row
 //! per chain position, merged across shards):
 //!
 //! ```text
-//! { "version": 4, "bench": "serve", "mode": "closed"|"open",
+//! { "version": 5, "bench": "serve", "mode": "closed"|"open",
+//!   "host": {"cpu_features": [..], "simd_tier": t,
+//!            "simd_detected": t, "threads": n, "env": {..}},
 //!   "smoke": bool, "shards": N, "capacity": C, "pass": "fprop",
 //!   "layers": L,                                // chain length
 //!   "requests": n, "images": n, "launches": n,
@@ -149,10 +155,11 @@ pub fn serve_json(r: &EngineReport, mode: &str, smoke: bool,
     }
     let weight_fft = r.weight_fft();
     Json::obj(vec![
-        ("version", Json::num(4.0)),
+        ("version", Json::num(5.0)),
         ("bench", Json::str("serve")),
         ("mode", Json::str(mode)),
         ("smoke", Json::Bool(smoke)),
+        ("host", super::host_meta()),
         ("shards", Json::num(r.shards.len() as f64)),
         ("capacity", Json::num(r.capacity as f64)),
         ("pass", Json::str(r.pass.tag())),
@@ -281,8 +288,12 @@ pub fn serve_table(j: &Json) -> String {
     let cache = j.get("cache");
     let cn = |k: &str| cache.and_then(|c| c.get(k))
         .and_then(Json::as_usize).unwrap_or(0);
+    let host = j.get("host");
+    let hs = |k: &str| host.and_then(|h| h.get(k))
+        .and_then(Json::as_str).unwrap_or("?");
     format!(
         "serve: {} mode, {} shards x capacity {} ({} pass, {} layers)\n\
+         host: simd {} (detected {}), {:.0} threads\n\
          {}{}\
          throughput {:.0} img/s over {:.2}s wall, busy {:.0}%  \
          rejected {}  sla_miss {}\n\
@@ -298,6 +309,9 @@ pub fn serve_table(j: &Json) -> String {
         n(j, "shards"), n(j, "capacity"),
         j.get("pass").and_then(Json::as_str).unwrap_or("?"),
         n(j, "layers"),
+        hs("simd_tier"), hs("simd_detected"),
+        host.and_then(|h| h.get("threads")).and_then(Json::as_f64)
+            .unwrap_or(f64::NAN),
         t.render(), lt.render(),
         g(j, "throughput_img_s"), g(j, "wall_s"),
         g(j, "busy_frac") * 100.0,
@@ -392,7 +406,14 @@ mod tests {
         let r = sample_report();
         let j = serve_json(&r, "closed", true,
                            Duration::from_millis(500));
-        assert_eq!(j.get("version").unwrap().as_usize(), Some(4));
+        assert_eq!(j.get("version").unwrap().as_usize(), Some(5));
+        // the host provenance block names the tier the run executed
+        // under — serve numbers are not portable across tiers
+        let host = j.get("host").expect("host block");
+        assert_eq!(host.get("simd_tier").and_then(Json::as_str),
+                   Some(crate::util::simd::tier().tag()));
+        assert!(host.get("cpu_features").and_then(Json::as_arr)
+                    .is_some());
         assert_eq!(j.get("requests").unwrap().as_usize(), Some(30));
         assert_eq!(j.get("images").unwrap().as_usize(), Some(60));
         assert_eq!(j.get("layers").unwrap().as_usize(), Some(3));
@@ -496,6 +517,10 @@ mod tests {
         assert!(table.contains("all"));
         assert!(table.contains("strategy cache: 3 entries"));
         assert!(table.contains("weight spectra: v2, 8 hits / 2 misses"),
+                "{table}");
+        // the host line names the rendered run's dispatch tier
+        assert!(table.contains(&format!(
+            "host: simd {}", crate::util::simd::tier().tag())),
                 "{table}");
         // the per-layer table names every chain position
         for name in ["conv1", "conv2", "conv3"] {

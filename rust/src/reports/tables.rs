@@ -257,6 +257,12 @@ pub fn accept32_problem() -> ConvProblem {
 /// fbfft rows must show `pack_ns == 0` (planar handoff, pack elided) and
 /// beat `fbfft_scalar`'s `fft_ns` (vectorized butterflies). `smoke`
 /// restricts to the accept32 config with a single rep (the CI smoke run).
+///
+/// Schema version 3: the document gains the [`super::host_meta`] `host`
+/// block (CPU features, dispatch tier, threads, `FBFFT_*` env) and each
+/// entry records the `simd_tier` its measured pass executed under —
+/// cross-tier timing comparisons are meaningless, so the perf gate
+/// refuses to diff documents from different tiers.
 pub fn breakdown_json(smoke: bool) -> Json {
     let reps = if smoke { 1usize } else { 3 };
     let mut configs: Vec<(String, ConvProblem)> = Vec::new();
@@ -340,6 +346,7 @@ pub fn breakdown_json(smoke: bool) -> Json {
                     ("layer", Json::str(name)),
                     ("pass", Json::str(pass.tag())),
                     ("mode", Json::str(label)),
+                    ("simd_tier", Json::str(st.simd_tier.tag())),
                     ("n_fft", Json::num(n as f64)),
                     ("fft_a_ns", ns(st.fft_a)),
                     ("trans_a_ns", ns(st.trans_a)),
@@ -364,9 +371,10 @@ pub fn breakdown_json(smoke: bool) -> Json {
         }
     }
     Json::obj(vec![
-        ("version", Json::num(2.0)),
+        ("version", Json::num(3.0)),
         ("threads", Json::num(threads() as f64)),
         ("smoke", Json::Bool(smoke)),
+        ("host", super::host_meta()),
         ("entries", Json::Arr(entries)),
     ])
 }
@@ -390,9 +398,13 @@ mod tests {
         // 1 config × 3 modes × 3 passes
         assert_eq!(entries.len(), 9);
         let mut saw_fbfft = 0;
+        let tier = crate::util::simd::tier().tag();
         for e in entries {
             assert_eq!(e.get("layer").unwrap().as_str().unwrap(),
                        "accept32");
+            // every entry names the tier its timings ran under
+            assert_eq!(e.get("simd_tier").unwrap().as_str().unwrap(),
+                       tier);
             assert!(e.get("cgemm_ns").unwrap().as_f64().unwrap() >= 0.0);
             assert!(e.get("cgemm_speedup").unwrap().as_f64().unwrap()
                     > 0.0);
@@ -409,8 +421,13 @@ mod tests {
             }
         }
         assert_eq!(saw_fbfft, 3, "one SoA fbfft entry per pass");
+        // the host provenance block travels with the document
+        let host = j.get("host").expect("host block");
+        assert_eq!(host.get("simd_tier").unwrap().as_str(), Some(tier));
+        assert!(host.get("threads").unwrap().as_f64().unwrap() >= 1.0);
         // round-trips through the in-tree parser
         let back = Json::parse(&j.to_string()).unwrap();
-        assert_eq!(back.get("version").unwrap().as_usize(), Some(2));
+        assert_eq!(back.get("version").unwrap().as_usize(), Some(3));
+        assert!(back.get("host").is_some());
     }
 }

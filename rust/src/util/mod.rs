@@ -6,9 +6,11 @@ pub mod f16;
 pub mod hash;
 pub mod json;
 pub mod rng;
+pub mod simd;
 pub mod threads;
 
 pub use hash::hash64;
 pub use json::Json;
 pub use rng::Rng;
+pub use simd::SimdTier;
 pub use threads::{chunk_ranges, chunk_ranges_grouped, threads};

@@ -1,0 +1,330 @@
+//! Runtime SIMD dispatch — the single knob selecting which microkernel
+//! tier the hot paths run (paper §5's thesis, transplanted: fbfft's edge
+//! over the vendor path comes from hand-shaped kernels, so the CPU
+//! reproduction needs explicit FMA-width kernels, not autovectorization
+//! hope).
+//!
+//! Three tiers:
+//!
+//! * [`SimdTier::Scalar`] — the reference implementations, bit-identical
+//!   to the pre-dispatch tree. Always available; the conformance anchor.
+//! * [`SimdTier::Avx2`] — hand-written AVX2+FMA kernels (256-bit, 8×f32
+//!   FMA lanes), plus F16C hardware dequant for the f16 spectrum slabs.
+//! * [`SimdTier::Avx512`] — 512-bit kernels (16×f32 FMA lanes). Runtime
+//!   detection *and* a toolchain gate (`fbfft_avx512`, see `build.rs`):
+//!   on toolchains older than 1.89 the tier caps at `avx2`.
+//!
+//! Resolution order: the process-wide test override (integration tests
+//! forcing a tier) → the `FBFFT_SIMD=scalar|avx2|avx512` environment
+//! override (requests above the detected capability downgrade with a
+//! warning, never crash) → the best detected tier. The selected tier is
+//! resolved once and then surfaced everywhere perf is recorded:
+//! `StageTimings`, the `BENCH_*.json` host block, the autotuner's
+//! persisted cache header, and the cost model's roofline compute term.
+//!
+//! Exactness contract: packing-style helpers here ([`f16_dequant`],
+//! [`copy_signed`]) are **bitwise identical** across tiers (copies, sign
+//! flips and IEEE-exact f16→f32 conversion). The FMA kernels in
+//! `conv::cgemm` / `fft::soa` are not — fused contraction changes
+//! rounding — and are tolerance-gated against the scalar tier instead.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Dispatch tier, ordered by capability (so `min`/`max` cap requests).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord,
+         Hash)]
+pub enum SimdTier {
+    /// Reference tier: no `std::arch` intrinsics, bitwise-stable.
+    #[default]
+    Scalar,
+    /// AVX2 + FMA (+ F16C dequant): 8 f32 lanes per FMA.
+    Avx2,
+    /// AVX-512F: 16 f32 lanes per FMA (needs rustc ≥ 1.89 to compile).
+    Avx512,
+}
+
+impl SimdTier {
+    /// Stable lowercase tag — the `FBFFT_SIMD` vocabulary, the BENCH
+    /// host-metadata value and the autotuner cache header field.
+    pub fn tag(self) -> &'static str {
+        match self {
+            SimdTier::Scalar => "scalar",
+            SimdTier::Avx2 => "avx2",
+            SimdTier::Avx512 => "avx512",
+        }
+    }
+
+    /// Parse a [`SimdTier::tag`] string (the `FBFFT_SIMD` values).
+    pub fn from_tag(s: &str) -> Option<SimdTier> {
+        match s {
+            "scalar" => Some(SimdTier::Scalar),
+            "avx2" => Some(SimdTier::Avx2),
+            "avx512" => Some(SimdTier::Avx512),
+            _ => None,
+        }
+    }
+
+    /// f32 lanes per fused multiply-add at this tier — the cost model's
+    /// compute-width term. The scalar tier reports 1: it makes no width
+    /// promise (whatever autovectorization happens is a bonus).
+    pub fn fma_lanes(self) -> usize {
+        match self {
+            SimdTier::Scalar => 1,
+            SimdTier::Avx2 => 8,
+            SimdTier::Avx512 => 16,
+        }
+    }
+}
+
+impl std::fmt::Display for SimdTier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.tag())
+    }
+}
+
+/// What the host CPU (and toolchain) actually offer.
+struct Caps {
+    /// Best runnable tier: detection capped by the `fbfft_avx512` gate.
+    best: SimdTier,
+    /// F16C available (hardware f16→f32 dequant for the spectrum slabs).
+    f16c: bool,
+    /// Detected feature tags, for BENCH host provenance.
+    features: Vec<&'static str>,
+}
+
+fn caps() -> &'static Caps {
+    static CAPS: OnceLock<Caps> = OnceLock::new();
+    CAPS.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            let avx2 = is_x86_feature_detected!("avx2");
+            let fma = is_x86_feature_detected!("fma");
+            let f16c = is_x86_feature_detected!("f16c");
+            let avx512f = is_x86_feature_detected!("avx512f");
+            let mut features = Vec::new();
+            for (on, tag) in [(avx2, "avx2"), (fma, "fma"),
+                              (f16c, "f16c"), (avx512f, "avx512f")] {
+                if on {
+                    features.push(tag);
+                }
+            }
+            let best = if avx512f && avx2 && fma && cfg!(fbfft_avx512) {
+                SimdTier::Avx512
+            } else if avx2 && fma {
+                SimdTier::Avx2
+            } else {
+                SimdTier::Scalar
+            };
+            // the F16C fast path is only wired into the AVX tiers
+            Caps { best, f16c: f16c && best >= SimdTier::Avx2, features }
+        }
+        #[cfg(not(target_arch = "x86_64"))]
+        {
+            Caps { best: SimdTier::Scalar, f16c: false,
+                   features: Vec::new() }
+        }
+    })
+}
+
+/// Best tier the host can actually run (detection ∩ toolchain gate),
+/// ignoring overrides — the ceiling for every request.
+pub fn detected() -> SimdTier {
+    caps().best
+}
+
+/// Detected CPU feature tags (BENCH host-metadata provenance).
+pub fn detected_features() -> &'static [&'static str] {
+    &caps().features
+}
+
+/// Hardware F16C dequant available at the active capability level.
+pub fn has_f16c() -> bool {
+    caps().f16c
+}
+
+/// The `FBFFT_SIMD` + detection resolution, cached once per process.
+fn resolved() -> SimdTier {
+    static TIER: OnceLock<SimdTier> = OnceLock::new();
+    *TIER.get_or_init(|| {
+        let best = caps().best;
+        let Ok(v) = std::env::var("FBFFT_SIMD") else {
+            return best;
+        };
+        match SimdTier::from_tag(v.trim()) {
+            Some(req) if req <= best => req,
+            Some(req) => {
+                eprintln!("FBFFT_SIMD={}: tier unavailable on this \
+                           host/toolchain, running {}",
+                          req.tag(), best.tag());
+                best
+            }
+            None => {
+                eprintln!("FBFFT_SIMD={v}: unknown tier (expected \
+                           scalar|avx2|avx512), running {}", best.tag());
+                best
+            }
+        }
+    })
+}
+
+/// Process-wide forced tier for the forced-dispatch test sweeps:
+/// 0 = no override, else `tier as u8 + 1`.
+static OVERRIDE: AtomicU8 = AtomicU8::new(0);
+
+/// Force (or clear) the dispatch tier, capped at [`detected`]. Test-only
+/// plumbing for the forced-dispatch conformance sweeps — it is global
+/// process state, so tests that use it must serialize themselves (the
+/// in-tree users share one mutex per test binary). Production code
+/// configures tiers via `FBFFT_SIMD` instead.
+#[doc(hidden)]
+pub fn set_tier_override(t: Option<SimdTier>) {
+    let v = match t {
+        None => 0,
+        Some(req) => req.min(detected()) as u8 + 1,
+    };
+    OVERRIDE.store(v, Ordering::SeqCst);
+}
+
+/// The active dispatch tier. Cheap (one atomic load + cached caps), so
+/// the kernel entry points resolve it per call; worker threads inherit
+/// the value from their spawning entry point, not by re-resolving.
+pub fn tier() -> SimdTier {
+    match OVERRIDE.load(Ordering::Relaxed) {
+        0 => resolved(),
+        1 => SimdTier::Scalar,
+        2 => SimdTier::Avx2,
+        _ => SimdTier::Avx512,
+    }
+}
+
+/// `dst = src` (or `-src`) — the planar pack's conjugation copy. Exact
+/// at every tier (sign flip only), so the planar-vs-interleaved bitwise
+/// gates hold regardless of dispatch.
+#[inline]
+pub fn copy_signed(src: &[f32], dst: &mut [f32], negate: bool) {
+    if negate {
+        for (d, s) in dst.iter_mut().zip(src) {
+            *d = -s;
+        }
+    } else {
+        dst.copy_from_slice(src);
+    }
+}
+
+/// Dequantize f16 bits into f32 (optionally negated — the CGEMM pack's
+/// conjugation sign), dispatching to hardware F16C when the active tier
+/// allows. Bitwise identical to `util::f16::f16_to_f32` for every
+/// non-NaN pattern at every tier: both routes are IEEE-exact.
+pub fn f16_dequant(src: &[u16], dst: &mut [f32], negate: bool) {
+    assert_eq!(src.len(), dst.len());
+    #[cfg(target_arch = "x86_64")]
+    if tier() >= SimdTier::Avx2 && has_f16c() {
+        // SAFETY: avx + f16c presence established by `caps()` detection.
+        unsafe { f16_dequant_f16c(src, dst, negate) };
+        return;
+    }
+    f16_dequant_scalar(src, dst, negate);
+}
+
+fn f16_dequant_scalar(src: &[u16], dst: &mut [f32], negate: bool) {
+    let sign = if negate { -1.0f32 } else { 1.0 };
+    for (d, &h) in dst.iter_mut().zip(src) {
+        *d = sign * crate::util::f16::f16_to_f32(h);
+    }
+}
+
+/// Hardware dequant: `vcvtph2ps` eight halves per step, sign-flip via
+/// xor with `-0.0` (bitwise the same as multiplying by ±1.0 for every
+/// non-NaN value). Tail elements take the scalar path.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx,f16c")]
+unsafe fn f16_dequant_f16c(src: &[u16], dst: &mut [f32], negate: bool) {
+    use std::arch::x86_64::*;
+    let flip = _mm256_set1_ps(if negate { -0.0 } else { 0.0 });
+    let n = src.len();
+    let mut i = 0;
+    while i + 8 <= n {
+        let h = _mm_loadu_si128(src.as_ptr().add(i) as *const __m128i);
+        let v = _mm256_xor_ps(_mm256_cvtph_ps(h), flip);
+        _mm256_storeu_ps(dst.as_mut_ptr().add(i), v);
+        i += 8;
+    }
+    f16_dequant_scalar(&src[i..], &mut dst[i..], negate);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tags_round_trip_and_order_is_capability() {
+        for t in [SimdTier::Scalar, SimdTier::Avx2, SimdTier::Avx512] {
+            assert_eq!(SimdTier::from_tag(t.tag()), Some(t));
+            assert_eq!(format!("{t}"), t.tag());
+        }
+        assert_eq!(SimdTier::from_tag("neon"), None);
+        assert!(SimdTier::Scalar < SimdTier::Avx2);
+        assert!(SimdTier::Avx2 < SimdTier::Avx512);
+        assert!(SimdTier::Scalar.fma_lanes()
+                < SimdTier::Avx2.fma_lanes());
+        assert!(SimdTier::Avx2.fma_lanes()
+                < SimdTier::Avx512.fma_lanes());
+        assert_eq!(SimdTier::default(), SimdTier::Scalar);
+    }
+
+    #[test]
+    fn active_tier_is_within_detected_capability() {
+        // no override mutation here (lib tests share the process): just
+        // the resolution invariants
+        assert!(tier() <= detected());
+        assert_eq!(tier(), tier(), "resolution must be stable");
+        if detected() >= SimdTier::Avx2 {
+            assert!(detected_features().contains(&"avx2"));
+            assert!(detected_features().contains(&"fma"));
+        }
+    }
+
+    #[test]
+    fn copy_signed_is_exact_both_signs() {
+        let src = [1.5f32, -0.0, 3.25e-7, -9.0, f32::MIN_POSITIVE];
+        let mut plus = [0f32; 5];
+        let mut minus = [0f32; 5];
+        copy_signed(&src, &mut plus, false);
+        copy_signed(&src, &mut minus, true);
+        for i in 0..src.len() {
+            assert_eq!(plus[i].to_bits(), src[i].to_bits());
+            assert_eq!(minus[i].to_bits(), (-src[i]).to_bits());
+        }
+    }
+
+    #[test]
+    fn f16_dequant_is_bitwise_the_software_decoder() {
+        // every non-NaN half pattern, both signs, ragged length (tail
+        // path) — the dispatched route must match the software decoder
+        // exactly, whatever tier this host runs
+        let src: Vec<u16> = (0..=u16::MAX)
+            .filter(|h| {
+                let (exp, man) = (h & 0x7C00, h & 0x03FF);
+                !(exp == 0x7C00 && man != 0) // hardware quiets sNaNs
+            })
+            .collect();
+        for negate in [false, true] {
+            let sign = if negate { -1.0f32 } else { 1.0 };
+            let mut dst = vec![0f32; src.len()];
+            f16_dequant(&src, &mut dst, negate);
+            for (h, d) in src.iter().zip(&dst) {
+                let want = sign * crate::util::f16::f16_to_f32(*h);
+                assert_eq!(d.to_bits(), want.to_bits(),
+                           "h={h:#06x} negate={negate}");
+            }
+        }
+        // odd-length slab: exercises the scalar tail after the 8-wide
+        // body on the hardware path
+        let ragged = [0x3C00u16, 0x0001, 0xC000];
+        let mut out = [0f32; 3];
+        f16_dequant(&ragged, &mut out, true);
+        assert_eq!(out, [-1.0, -crate::util::f16::f16_to_f32(0x0001),
+                         2.0]);
+    }
+}

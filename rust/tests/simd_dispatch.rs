@@ -1,0 +1,186 @@
+//! Forced-dispatch conformance sweeps: the full 5-engine × 3-pass
+//! matrix, the SoA lane kernels and the blocked CGEMM re-validated with
+//! the SIMD tier pinned to `scalar` and to `avx2` (skipping tiers the
+//! host cannot run). The tier override is process-global, so every test
+//! here funnels through one file-local mutex — `ForcedTier` holds the
+//! lock for the duration and restores default resolution on drop, even
+//! on panic. (CI additionally runs the whole test suite under
+//! `FBFFT_SIMD=scalar`, which exercises the same paths via the env
+//! resolution instead of the override.)
+
+use std::sync::{Mutex, MutexGuard};
+
+use fbfft_repro::conv::{cgemm, Workspace};
+use fbfft_repro::coordinator::Pass;
+use fbfft_repro::fft::fbfft_host::FbfftPlan;
+use fbfft_repro::fft::real::rfft_len;
+use fbfft_repro::fft::{soa, C32};
+use fbfft_repro::testkit::{cases, matrix, tolerance, Engine};
+use fbfft_repro::util::{simd, Rng, SimdTier};
+
+static TIER_LOCK: Mutex<()> = Mutex::new(());
+
+/// RAII pin of the global dispatch tier: locks the sweep mutex, forces
+/// the tier, and clears the override when dropped. Returns `None` when
+/// the host (or toolchain) cannot run the requested tier — the caller
+/// skips, it does not fail.
+struct ForcedTier {
+    _guard: MutexGuard<'static, ()>,
+}
+
+impl ForcedTier {
+    fn pin(t: SimdTier) -> Option<ForcedTier> {
+        if simd::detected() < t {
+            eprintln!("skipping {t}: host detects {}", simd::detected());
+            return None;
+        }
+        // a panicking sibling poisons the mutex but leaves nothing
+        // inconsistent behind (Drop cleared its override), so recover
+        let guard = TIER_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        simd::set_tier_override(Some(t));
+        assert_eq!(simd::tier(), t, "override must take effect");
+        Some(ForcedTier { _guard: guard })
+    }
+}
+
+impl Drop for ForcedTier {
+    fn drop(&mut self) {
+        simd::set_tier_override(None);
+    }
+}
+
+/// The tiers the sweep pins: the scalar reference and the AVX2+FMA
+/// production tier (AVX-512 rides along when the host offers it).
+fn sweep_tiers() -> Vec<SimdTier> {
+    let mut tiers = vec![SimdTier::Scalar, SimdTier::Avx2];
+    if simd::detected() >= SimdTier::Avx512 {
+        tiers.push(SimdTier::Avx512);
+    }
+    tiers
+}
+
+/// Batch counts straddling the SoA lane width without ever aligning to
+/// it: 1 (degenerate), 7/9 (one off either side of 8), 35 (many lanes
+/// plus a ragged tail).
+const RAGGED_BATCHES: [usize; 4] = [1, 7, 9, 35];
+
+#[test]
+fn conformance_matrix_holds_at_every_forced_tier() {
+    // sampled Table-2 problems through all 5 engines × 3 passes against
+    // the f64 oracle, with the dispatch tier pinned — the same checks
+    // tests/conformance.rs runs at the detected tier
+    let suite = cases::sampled_cases(0x51D, 2);
+    for t in sweep_tiers() {
+        let Some(_pin) = ForcedTier::pin(t) else { continue };
+        let report = matrix::run_suite(&suite);
+        for cr in &report.cases {
+            assert_eq!(cr.cells.len(),
+                       Engine::ALL.len() * Pass::ALL.len(),
+                       "tier {t}: incomplete matrix row {}", cr.name);
+        }
+        assert!(report.all_ok(), "tier {t} conformance failures:\n{}",
+                report.render());
+    }
+}
+
+#[test]
+fn soa_lane_kernels_match_scalar_reference_at_every_forced_tier() {
+    for t in sweep_tiers() {
+        let Some(_pin) = ForcedTier::pin(t) else { continue };
+        for n in [16usize, 64] {
+            let plan = FbfftPlan::new(n);
+            let nf = rfft_len(n);
+            let tol = tolerance::fft_abs(n);
+            for batch in RAGGED_BATCHES {
+                let mut rng =
+                    Rng::new(0x51D0 ^ (n * 100 + batch) as u64);
+                let x = rng.normal_vec(batch * n);
+                // scalar interleaved reference (per-signal transforms)
+                let mut want = vec![C32::ZERO; batch * nf];
+                plan.rfft_batch(&x, n, batch, &mut want);
+                // the dispatched SoA batch-lane path
+                let mut got_re = vec![0f32; nf * batch];
+                let mut got_im = vec![0f32; nf * batch];
+                let pairs = batch.div_ceil(2);
+                let mut wr = vec![0f32; n * pairs];
+                let mut wi = vec![0f32; n * pairs];
+                soa::rfft_batch_soa(&plan, &x, n, batch, &mut got_re,
+                                    &mut got_im, &mut wr, &mut wi);
+                for b in 0..batch {
+                    for k in 0..nf {
+                        let g = C32::new(got_re[k * batch + b],
+                                         got_im[k * batch + b]);
+                        let w = want[b * nf + k];
+                        assert!((g - w).abs() <= tol,
+                                "tier {t} n={n} batch={batch} b={b} \
+                                 k={k}: {g:?} vs {w:?}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn blocked_cgemm_matches_naive_at_every_forced_tier() {
+    // ragged reduction depth (not a multiple of any kernel geometry)
+    // and a bin count that threads: the blocked path must agree with
+    // the naive triple loop at whatever tier is pinned
+    let (bins, s, f, fo) = (18usize, 5usize, 13usize, 11usize);
+    for t in sweep_tiers() {
+        let Some(_pin) = ForcedTier::pin(t) else { continue };
+        for pass in Pass::ALL {
+            let sh = cgemm::BinShape::of(pass, s, f, fo);
+            let mut rng = Rng::new(0xC6E ^ pass.tag().len() as u64);
+            let fa: Vec<C32> = (0..bins * sh.a_len)
+                .map(|_| C32::new(rng.normal(), rng.normal()))
+                .collect();
+            let fb: Vec<C32> = (0..bins * sh.b_len)
+                .map(|_| C32::new(rng.normal(), rng.normal()))
+                .collect();
+            let mut want = vec![C32::ZERO; bins * sh.c_len];
+            cgemm::batched_naive(pass, bins, s, f, fo, &fa, &fb,
+                                 &mut want);
+            let mut got = vec![C32::ZERO; bins * sh.c_len];
+            let mut ws = Workspace::new();
+            cgemm::batched(pass, bins, s, f, fo, &fa, &fb, &mut got,
+                           &mut ws);
+            let k = sh.k as f32;
+            let tol = 2e-3 * k.sqrt();
+            for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert!((*g - *w).abs() <= tol,
+                        "tier {t} pass {} c[{i}]: {g:?} vs {w:?}",
+                        pass.tag());
+            }
+        }
+    }
+}
+
+#[test]
+fn forced_scalar_is_bitwise_stable_across_repeats() {
+    // the scalar tier is the conformance anchor: two runs of the same
+    // SoA transform under a pinned scalar tier must agree bit for bit
+    let Some(_pin) = ForcedTier::pin(SimdTier::Scalar) else { return };
+    let n = 32usize;
+    let plan = FbfftPlan::new(n);
+    let nf = rfft_len(n);
+    let batch = 9usize; // LANES-unaligned on purpose
+    let mut rng = Rng::new(0xB17);
+    let x = rng.normal_vec(batch * n);
+    let run = |x: &[f32]| {
+        let mut re = vec![0f32; nf * batch];
+        let mut im = vec![0f32; nf * batch];
+        let pairs = batch.div_ceil(2);
+        let mut wr = vec![0f32; n * pairs];
+        let mut wi = vec![0f32; n * pairs];
+        soa::rfft_batch_soa(&plan, x, n, batch, &mut re, &mut im,
+                            &mut wr, &mut wi);
+        (re, im)
+    };
+    let (r1, i1) = run(&x);
+    let (r2, i2) = run(&x);
+    for j in 0..nf * batch {
+        assert_eq!(r1[j].to_bits(), r2[j].to_bits(), "re bin {j}");
+        assert_eq!(i1[j].to_bits(), i2[j].to_bits(), "im bin {j}");
+    }
+}
