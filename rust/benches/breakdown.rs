@@ -5,8 +5,12 @@
 //! One measurement pass feeds both outputs: the JSON is written first
 //! and the Table-5 text is rendered from its entries (so the table and
 //! the artifact can never disagree). `cargo bench --bench breakdown --
-//! --smoke` runs only the fixed acceptance config with one rep (the CI
-//! smoke gate) and still writes the JSON.
+//! --smoke` runs the fixed acceptance configs (accept32 plus the
+//! large-input oaa144 shape) with one rep (the CI smoke gate) and still
+//! writes the JSON. `--mode <vendor|fbfft|fbfft_scalar|oaa>` restricts
+//! the printed rows to one pipeline mode; the measurement set and the
+//! JSON are unaffected. Every run prints the
+//! `oaa speedup vs full-pad fbfft` line the CI perf gate thresholds.
 use fbfft_repro::metrics::Table;
 use fbfft_repro::reports::{breakdown_json, sweep::sec54_report};
 use fbfft_repro::runtime::Runtime;
@@ -14,6 +18,16 @@ use fbfft_repro::util::Json;
 
 fn main() {
     let smoke = std::env::args().any(|a| a == "--smoke");
+    let mode_filter = {
+        let mut args = std::env::args();
+        let mut m = None;
+        while let Some(a) = args.next() {
+            if a == "--mode" {
+                m = args.next();
+            }
+        }
+        m
+    };
     let json = breakdown_json(smoke);
     std::fs::write("BENCH_fftconv.json", json.to_string())
         .expect("write BENCH_fftconv.json");
@@ -42,11 +56,35 @@ fn main() {
         e.get(k).and_then(Json::as_f64).unwrap_or(f64::NAN)
     };
     let ms = |e: &Json, k: &str| format!("{:.3}", g(e, k) / 1e6);
+    let keep = |e: &&Json| {
+        mode_filter
+            .as_deref()
+            .map_or(true, |m| e.get("mode").and_then(Json::as_str)
+                    == Some(m))
+    };
+    // the OaA acceptance ratio: overlap-add vs full-pad fbfft on the
+    // large-input smoke shape, from the same document (CI thresholds
+    // the fprop line at 1.2x)
+    let total = |mode: &str, pass: &str| {
+        entries
+            .iter()
+            .find(|e| s(e, "layer") == "oaa144" && s(e, "mode") == mode
+                  && s(e, "pass") == pass)
+            .map(|e| g(e, "total_ns"))
+    };
+    for pass in ["fprop", "bprop", "accgrad"] {
+        if let (Some(full), Some(oaa)) =
+            (total("fbfft", pass), total("oaa", pass))
+        {
+            println!("oaa speedup vs full-pad fbfft (oaa144 {pass}): \
+                      {:.2}x", full / oaa);
+        }
+    }
     if smoke {
         // surface the acceptance ratios without a JSON reader: the
         // cgemm speedup gate plus the SoA proof points (fft_ns beating
         // the scalar path, pack_ns == 0 under fbfft)
-        for e in entries {
+        for e in entries.iter().filter(keep) {
             println!(
                 "{} {} {}: fft {:.0} ns, pack {:.0} ns, cgemm {:.0} ns, \
                  naive {:.0} ns, speedup {:.2}x",
@@ -60,7 +98,7 @@ fn main() {
         "layer", "pass", "mode", "FFT A", "TRANS A", "FFT B", "TRANS B",
         "CGEMM", "TRANS C", "IFFT C", "FFT Σ", "PACK Σ", "total ms",
         "cgemm speedup"]);
-    for e in entries {
+    for e in entries.iter().filter(keep) {
         t.row(vec![
             s(e, "layer"), s(e, "pass"), s(e, "mode"),
             ms(e, "fft_a_ns"), ms(e, "trans_a_ns"), ms(e, "fft_b_ns"),

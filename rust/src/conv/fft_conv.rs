@@ -254,6 +254,27 @@ fn pad_planes(src: &[f32], h_in: usize, w_in: usize, n: usize,
     }
 }
 
+/// The B-side source of one [`FftConvEngine::run`] call: raw planes
+/// (weights for fprop/bprop, activations for accGrad) transformed on
+/// the spot, or a cached [`WeightSpectrum`] that skips the weight FFT
+/// entirely (the serving tier's steady state).
+pub enum BOperand<'a> {
+    Planes(&'a [f32]),
+    Spectrum(&'a WeightSpectrum),
+}
+
+/// Borrowed operand bundle of one [`FftConvEngine::run`] call. What
+/// `a`/`b`/`out` mean is pass-typed (see [`FftConvEngine::run`]'s
+/// table); lengths are asserted against `problem` at entry.
+pub struct Operands<'a> {
+    pub problem: &'a ConvProblem,
+    /// activations (fprop) or output gradient (bprop/accGrad)
+    pub a: &'a [f32],
+    /// weights (fprop/bprop) or activations (accGrad)
+    pub b: BOperand<'a>,
+    pub out: &'a mut [f32],
+}
+
 pub struct FftConvEngine {
     pub mode: FftMode,
     pub n_fft: usize,
@@ -692,110 +713,134 @@ impl FftConvEngine {
         }
     }
 
-    // ---- the three passes ----------------------------------------------
+    // ---- the unified pass surface --------------------------------------
+
+    /// One pipeline for every (pass, B-source) combination — the body
+    /// the six historical entry points collapsed into. Geometry is
+    /// pass-typed:
+    ///
+    /// | pass    | A operand       | B operand        | out clips to |
+    /// |---------|-----------------|------------------|--------------|
+    /// | fprop   | x (h×w)         | weights (kh×kw)  | yh × yw      |
+    /// | bprop   | go (yh×yw)      | weights (kh×kw)  | h × w        |
+    /// | accGrad | go (yh×yw)      | x (h×w)          | kh × kw      |
+    ///
+    /// The B side is either raw planes (transformed in place, timed as
+    /// the B stages) or a cached [`WeightSpectrum`]
+    /// ([`BOperand::Spectrum`], fprop/bprop only — accGrad's B is the
+    /// activation, which is never cached), in which case the B stages
+    /// and therefore [`StageTimings::weight_fft`] are identically zero.
+    /// Steady-state zero-allocation: every intermediate comes from the
+    /// caller's [`Workspace`] pool.
+    pub fn run(&self, pass: Pass, ops: Operands<'_>, ws: &mut Workspace)
+               -> StageTimings {
+        let p = ops.problem;
+        assert_eq!(p.stride, 1, "strided FFT conv out of scope (paper §2)");
+        let (a_h, a_w, a_count, a_len) = match pass {
+            Pass::Fprop => (p.h, p.w, p.s * p.f, p.input_len()),
+            Pass::Bprop | Pass::AccGrad => {
+                (p.yh(), p.yw(), p.s * p.fo, p.output_len())
+            }
+        };
+        let (c_count, clip_h, clip_w, out_len) = match pass {
+            Pass::Fprop => (p.s * p.fo, p.yh(), p.yw(), p.output_len()),
+            Pass::Bprop => (p.s * p.f, p.h, p.w, p.input_len()),
+            Pass::AccGrad => (p.fo * p.f, p.kh, p.kw, p.weight_len()),
+        };
+        assert_eq!(ops.a.len(), a_len);
+        assert_eq!(ops.out.len(), out_len);
+        let mut t = StageTimings {
+            simd_tier: crate::util::simd::tier(),
+            ..StageTimings::default()
+        };
+        let (ar, ai) = self.forward(ops.a, a_h, a_w, a_count, "freq.a",
+                                    ws, &mut t.fft_a, &mut t.trans_a,
+                                    &mut t.pack_a);
+        let bins = self.bins();
+        let (or, oi) = match ops.b {
+            BOperand::Planes(b) => {
+                let (b_h, b_w, b_count, b_len) = match pass {
+                    Pass::Fprop | Pass::Bprop => {
+                        (p.kh, p.kw, p.fo * p.f, p.weight_len())
+                    }
+                    Pass::AccGrad => (p.h, p.w, p.s * p.f, p.input_len()),
+                };
+                assert_eq!(b.len(), b_len);
+                let (br, bi) = self.forward(b, b_h, b_w, b_count,
+                                            "freq.b", ws, &mut t.fft_b,
+                                            &mut t.trans_b, &mut t.pack_b);
+                let t0 = Instant::now();
+                let (mut or, mut oi) =
+                    ws.pool.take_planar_raw("freq.c", bins * c_count);
+                cgemm::batched_planar(pass, bins, p.s, p.f, p.fo, &ar,
+                                      &ai, &br, &bi, &mut or, &mut oi,
+                                      ws);
+                t.cgemm += t0.elapsed();
+                ws.pool.put_planar("freq.b", (br, bi));
+                (or, oi)
+            }
+            BOperand::Spectrum(spec) => {
+                assert!(!matches!(pass, Pass::AccGrad),
+                        "accGrad's B operand is the activation — \
+                         no cached spectrum applies");
+                self.check_spec(p, spec);
+                let t0 = Instant::now();
+                let (mut or, mut oi) =
+                    ws.pool.take_planar_raw("freq.c", bins * c_count);
+                self.spec_cgemm(pass, p, &ar, &ai, spec, &mut or,
+                                &mut oi, ws);
+                t.cgemm += t0.elapsed();
+                (or, oi)
+            }
+        };
+        ws.pool.put_planar("freq.a", (ar, ai));
+        self.inverse(&or, &oi, c_count, clip_h, clip_w, ops.out, ws,
+                     &mut t.trans_c, &mut t.ifft_c, &mut t.pack_c);
+        ws.pool.put_planar("freq.c", (or, oi));
+        if !matches!(pass, Pass::AccGrad) {
+            // B is the weight tensor for fprop/bprop — attribute it
+            // (zero by construction on the spectrum path)
+            t.weight_fft = t.fft_b + t.trans_b + t.pack_b;
+        }
+        t
+    }
+
+    // ---- historical entry points (thin wrappers over `run`) ------------
 
     /// fprop: `Out_q = In_q · conj(W_q)ᵀ` per bin, clip to (yh, yw).
     /// Steady-state zero-allocation entry point; `out` must be
     /// `p.output_len()` long.
+    #[inline]
     pub fn fprop_into(&self, p: &ConvProblem, x: &[f32], wei: &[f32],
                       out: &mut [f32], ws: &mut Workspace)
                       -> StageTimings {
-        assert_eq!(p.stride, 1, "strided FFT conv out of scope (paper §2)");
-        assert_eq!(x.len(), p.input_len());
-        assert_eq!(wei.len(), p.weight_len());
-        assert_eq!(out.len(), p.output_len());
-        let mut t = StageTimings {
-            simd_tier: crate::util::simd::tier(),
-            ..StageTimings::default()
-        };
-        let (xr, xi) = self.forward(x, p.h, p.w, p.s * p.f, "freq.a", ws,
-                                    &mut t.fft_a, &mut t.trans_a,
-                                    &mut t.pack_a);
-        let (wr, wi) = self.forward(wei, p.kh, p.kw, p.fo * p.f, "freq.b",
-                                    ws, &mut t.fft_b, &mut t.trans_b,
-                                    &mut t.pack_b);
-        let bins = self.bins();
-        let t0 = Instant::now();
-        let (mut or, mut oi) =
-            ws.pool.take_planar_raw("freq.c", bins * p.s * p.fo);
-        cgemm::batched_planar(Pass::Fprop, bins, p.s, p.f, p.fo, &xr, &xi,
-                              &wr, &wi, &mut or, &mut oi, ws);
-        t.cgemm += t0.elapsed();
-        ws.pool.put_planar("freq.a", (xr, xi));
-        ws.pool.put_planar("freq.b", (wr, wi));
-        self.inverse(&or, &oi, p.s * p.fo, p.yh(), p.yw(), out, ws,
-                     &mut t.trans_c, &mut t.ifft_c, &mut t.pack_c);
-        ws.pool.put_planar("freq.c", (or, oi));
-        t.weight_fft = t.fft_b + t.trans_b + t.pack_b;
-        t
+        self.run(Pass::Fprop,
+                 Operands { problem: p, a: x,
+                            b: BOperand::Planes(wei), out },
+                 ws)
     }
 
     /// bprop: `Gx_q = Go_q · W_q` per bin (no conjugation), clip (h, w).
+    #[inline]
     pub fn bprop_into(&self, p: &ConvProblem, go: &[f32], wei: &[f32],
                       out: &mut [f32], ws: &mut Workspace)
                       -> StageTimings {
-        assert_eq!(p.stride, 1, "strided FFT conv out of scope (paper §2)");
-        assert_eq!(go.len(), p.output_len());
-        assert_eq!(wei.len(), p.weight_len());
-        assert_eq!(out.len(), p.input_len());
-        let mut t = StageTimings {
-            simd_tier: crate::util::simd::tier(),
-            ..StageTimings::default()
-        };
-        let (gr, gi) = self.forward(go, p.yh(), p.yw(), p.s * p.fo,
-                                    "freq.a", ws, &mut t.fft_a,
-                                    &mut t.trans_a, &mut t.pack_a);
-        let (wr, wi) = self.forward(wei, p.kh, p.kw, p.fo * p.f, "freq.b",
-                                    ws, &mut t.fft_b, &mut t.trans_b,
-                                    &mut t.pack_b);
-        let bins = self.bins();
-        let t0 = Instant::now();
-        let (mut or, mut oi) =
-            ws.pool.take_planar_raw("freq.c", bins * p.s * p.f);
-        cgemm::batched_planar(Pass::Bprop, bins, p.s, p.f, p.fo, &gr, &gi,
-                              &wr, &wi, &mut or, &mut oi, ws);
-        t.cgemm += t0.elapsed();
-        ws.pool.put_planar("freq.a", (gr, gi));
-        ws.pool.put_planar("freq.b", (wr, wi));
-        self.inverse(&or, &oi, p.s * p.f, p.h, p.w, out, ws,
-                     &mut t.trans_c, &mut t.ifft_c, &mut t.pack_c);
-        ws.pool.put_planar("freq.c", (or, oi));
-        t.weight_fft = t.fft_b + t.trans_b + t.pack_b;
-        t
+        self.run(Pass::Bprop,
+                 Operands { problem: p, a: go,
+                            b: BOperand::Planes(wei), out },
+                 ws)
     }
 
     /// accGrad: `Gw_q = conj(Go_q)ᵀ · X_q` per bin (minibatch reduced),
     /// clip (kh, kw).
+    #[inline]
     pub fn accgrad_into(&self, p: &ConvProblem, go: &[f32], x: &[f32],
                         out: &mut [f32], ws: &mut Workspace)
                         -> StageTimings {
-        assert_eq!(p.stride, 1, "strided FFT conv out of scope (paper §2)");
-        assert_eq!(go.len(), p.output_len());
-        assert_eq!(x.len(), p.input_len());
-        assert_eq!(out.len(), p.weight_len());
-        let mut t = StageTimings {
-            simd_tier: crate::util::simd::tier(),
-            ..StageTimings::default()
-        };
-        let (gr, gi) = self.forward(go, p.yh(), p.yw(), p.s * p.fo,
-                                    "freq.a", ws, &mut t.fft_a,
-                                    &mut t.trans_a, &mut t.pack_a);
-        let (xr, xi) = self.forward(x, p.h, p.w, p.s * p.f, "freq.b", ws,
-                                    &mut t.fft_b, &mut t.trans_b,
-                                    &mut t.pack_b);
-        let bins = self.bins();
-        let t0 = Instant::now();
-        let (mut or, mut oi) =
-            ws.pool.take_planar_raw("freq.c", bins * p.fo * p.f);
-        cgemm::batched_planar(Pass::AccGrad, bins, p.s, p.f, p.fo, &gr,
-                              &gi, &xr, &xi, &mut or, &mut oi, ws);
-        t.cgemm += t0.elapsed();
-        ws.pool.put_planar("freq.a", (gr, gi));
-        ws.pool.put_planar("freq.b", (xr, xi));
-        self.inverse(&or, &oi, p.fo * p.f, p.kh, p.kw, out, ws,
-                     &mut t.trans_c, &mut t.ifft_c, &mut t.pack_c);
-        ws.pool.put_planar("freq.c", (or, oi));
-        t
+        self.run(Pass::AccGrad,
+                 Operands { problem: p, a: go,
+                            b: BOperand::Planes(x), out },
+                 ws)
     }
 
     // ---- cached-weight-spectrum (spec) entry points --------------------
@@ -835,32 +880,14 @@ impl FftConvEngine {
     /// identically zero. With an f32 spectrum the output is bitwise
     /// identical to the uncached pass; with f16 it stays inside the
     /// testkit's `frequency_f16` tolerance.
+    #[inline]
     pub fn fprop_spec_into(&self, p: &ConvProblem, x: &[f32],
                            spec: &WeightSpectrum, out: &mut [f32],
                            ws: &mut Workspace) -> StageTimings {
-        assert_eq!(p.stride, 1, "strided FFT conv out of scope (paper §2)");
-        assert_eq!(x.len(), p.input_len());
-        assert_eq!(out.len(), p.output_len());
-        self.check_spec(p, spec);
-        let mut t = StageTimings {
-            simd_tier: crate::util::simd::tier(),
-            ..StageTimings::default()
-        };
-        let (xr, xi) = self.forward(x, p.h, p.w, p.s * p.f, "freq.a", ws,
-                                    &mut t.fft_a, &mut t.trans_a,
-                                    &mut t.pack_a);
-        let bins = self.bins();
-        let t0 = Instant::now();
-        let (mut or, mut oi) =
-            ws.pool.take_planar_raw("freq.c", bins * p.s * p.fo);
-        self.spec_cgemm(Pass::Fprop, p, &xr, &xi, spec, &mut or, &mut oi,
-                        ws);
-        t.cgemm += t0.elapsed();
-        ws.pool.put_planar("freq.a", (xr, xi));
-        self.inverse(&or, &oi, p.s * p.fo, p.yh(), p.yw(), out, ws,
-                     &mut t.trans_c, &mut t.ifft_c, &mut t.pack_c);
-        ws.pool.put_planar("freq.c", (or, oi));
-        t
+        self.run(Pass::Fprop,
+                 Operands { problem: p, a: x,
+                            b: BOperand::Spectrum(spec), out },
+                 ws)
     }
 
     /// [`bprop_into`](FftConvEngine::bprop_into) against a cached weight
@@ -869,32 +896,14 @@ impl FftConvEngine {
     /// since both passes
     /// transform the weights identically (§2: the conjugation patterns
     /// differ only inside the CGEMM).
+    #[inline]
     pub fn bprop_spec_into(&self, p: &ConvProblem, go: &[f32],
                            spec: &WeightSpectrum, out: &mut [f32],
                            ws: &mut Workspace) -> StageTimings {
-        assert_eq!(p.stride, 1, "strided FFT conv out of scope (paper §2)");
-        assert_eq!(go.len(), p.output_len());
-        assert_eq!(out.len(), p.input_len());
-        self.check_spec(p, spec);
-        let mut t = StageTimings {
-            simd_tier: crate::util::simd::tier(),
-            ..StageTimings::default()
-        };
-        let (gr, gi) = self.forward(go, p.yh(), p.yw(), p.s * p.fo,
-                                    "freq.a", ws, &mut t.fft_a,
-                                    &mut t.trans_a, &mut t.pack_a);
-        let bins = self.bins();
-        let t0 = Instant::now();
-        let (mut or, mut oi) =
-            ws.pool.take_planar_raw("freq.c", bins * p.s * p.f);
-        self.spec_cgemm(Pass::Bprop, p, &gr, &gi, spec, &mut or, &mut oi,
-                        ws);
-        t.cgemm += t0.elapsed();
-        ws.pool.put_planar("freq.a", (gr, gi));
-        self.inverse(&or, &oi, p.s * p.f, p.h, p.w, out, ws,
-                     &mut t.trans_c, &mut t.ifft_c, &mut t.pack_c);
-        ws.pool.put_planar("freq.c", (or, oi));
-        t
+        self.run(Pass::Bprop,
+                 Operands { problem: p, a: go,
+                            b: BOperand::Spectrum(spec), out },
+                 ws)
     }
 
     fn check_spec(&self, p: &ConvProblem, spec: &WeightSpectrum) {

@@ -13,7 +13,13 @@
 //!   handoff straight into the CGEMM — the §5 implementation) and
 //!   `FbfftScalar` (the pre-SoA one-transform-at-a-time baseline), with
 //!   per-stage timing for the Table-5 breakdown;
-//! * [`tiled`]   — the §6 decomposition running `Fbfft` on small tiles.
+//! * [`tiled`]   — the §6 decomposition running `Fbfft` on small tiles;
+//! * [`oaa`]     — Overlap-and-Add (Highlander & Rodriguez 1601.06815):
+//!   fixed `tile × tile` patches convolved at the small basis
+//!   `next_pow2(tile + k - 1)` with partial outputs overlap-added, the
+//!   zero-allocation large-input/small-kernel engine (256²+ images,
+//!   long 1-D signals) that reuses one cached weight spectrum across
+//!   every tile.
 //!
 //! The frequency pipeline's hot stage lives in [`cgemm`]: a blocked,
 //! multithreaded per-bin complex GEMM on planar re/im panels (packed
@@ -31,12 +37,15 @@ pub mod direct;
 pub mod fft_conv;
 pub mod gemm;
 pub mod im2col;
+pub mod oaa;
 pub mod problem;
 pub mod spectra;
 pub mod tiled;
 
 pub use cgemm::Workspace;
-pub use fft_conv::{FftConvEngine, FftMode, StageTimings};
-pub use problem::ConvProblem;
+pub use fft_conv::{BOperand, FftConvEngine, FftMode, Operands,
+                   StageTimings};
+pub use oaa::OaaEngine;
+pub use problem::{ConvProblem, ConvProblemBuilder};
 pub use spectra::{LayerSpectra, SpectrumCache, SpectrumPrecision,
                   SpectrumStats, WeightSpectrum};

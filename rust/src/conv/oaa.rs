@@ -1,0 +1,649 @@
+//! Overlap-and-Add fbfft (Highlander & Rodriguez, 1601.06815): the
+//! large-input/small-kernel engine the full-pad paths can't serve.
+//!
+//! Every full-pad FFT engine transforms the whole input at
+//! `n_fft = next_pow2(max(h, w))` — which explodes past
+//! [`fbfft_host::MAX_N`] at 512²-scale images and pays `O(W² log W)`
+//! on the padded extent `W` even below it. OaA instead tiles the
+//! stride-1 output grid into `tile × tile` patches and convolves each
+//! patch's `(tile+k-1)`-sized input window at the **small fixed basis**
+//! `n_fft = next_pow2(tile + k - 1)`, overlap-adding partial results:
+//!
+//! * **fprop** — overlap-save: output tiles are disjoint, input windows
+//!   overlap by `k-1`; strided outputs subsample the stride-1 tile grid
+//!   on the way out (the one FFT engine that serves `stride > 1`).
+//! * **bprop** — overlap-add proper: each gradient tile scatters a
+//!   `(tile+k-1)`-sized window *additively* into the input gradient
+//!   (the transposed overlap).
+//! * **accGrad** — tile-sum: per-tile weight-gradient correlations
+//!   accumulate into one `kh × kw` gradient.
+//!
+//! Tiles do not run one-by-one: same-shape tiles (at most four shapes —
+//! interior, right edge, bottom edge, corner) are **batched into the
+//! inner engine's batch dimension**, so each pass issues at most four
+//! [`FftConvEngine`] calls whose batch `s' = tiles · s` is large enough
+//! to light up the fbfft batch lanes, the threaded batch-group fan-out
+//! and the CGEMM bin threading — a per-tile loop would starve all three
+//! below their serial-fallback thresholds.
+//!
+//! Unlike the allocating §6 [`tiled`](super::tiled) decomposition this
+//! engine is steady-state zero-allocation: gather/scatter staging comes
+//! from the caller's [`Workspace`] pool under `oaa.*` roles, and the
+//! tile-group pipeline is the pooled [`FftConvEngine`] spec path. The
+//! weight spectrum is computed **once per call** (raw-weights form) or
+//! **never** (spec form, fed from the per-shard
+//! [`SpectrumCache`](super::spectra::SpectrumCache) — the spectrum key
+//! is `(f, f', kh, kw, n_fft, mode)`, independent of `h × w`, so one
+//! small cached spectrum serves every tile of every image size).
+
+use std::time::Instant;
+
+use crate::coordinator::Pass;
+use crate::fft::fbfft_host;
+
+use super::cgemm::Workspace;
+use super::fft_conv::{BOperand, FftConvEngine, FftMode, Operands,
+                      StageTimings};
+use super::problem::ConvProblem;
+use super::spectra::{SpectrumPrecision, WeightSpectrum};
+use super::tiled::tile_fft_size;
+
+/// The largest output tile whose FFT window exactly fills `basis`
+/// (`tile + kmax - 1 == basis`) — the zero-rounding-waste sweet spot
+/// the autotuner sweeps alongside the power-of-two tiles.
+pub fn basis_filling_tile(basis: usize, kh: usize, kw: usize) -> usize {
+    let kmax = kh.max(kw);
+    assert!(basis >= kmax, "basis {basis} below kernel {kmax}");
+    basis - kmax + 1
+}
+
+/// Does an OaA engine with this tile exist for this kernel? (The tile
+/// basis must stay inside the fbfft plan domain.)
+pub fn tile_supported(tile: usize, kh: usize, kw: usize) -> bool {
+    tile >= 1 && tile_fft_size(tile, kh, kw) <= fbfft_host::MAX_N
+}
+
+/// The tile candidates the autotuner (and the cost model) sweep for a
+/// problem: the power-of-two output tiles {16, 32, 64} plus the
+/// basis-filling tiles of the small bases {32, 64, 128}. Empty when OaA
+/// is not worth considering: kernels near the input extent (the
+/// full-pad engines already fit), tiles at or past the stride-1 output
+/// extent (degenerate full-pad), or tile bases outside the fbfft plan
+/// domain. 1-D signals gate on the *long* axis — their short axis is 1
+/// by construction.
+pub fn tile_candidates(p: &ConvProblem) -> Vec<usize> {
+    let kmax = p.kh.max(p.kw);
+    let one_d = p.h == 1 || p.w == 1;
+    let ext = if one_d { p.h.max(p.w) } else { p.h.min(p.w) };
+    if kmax * 4 >= ext {
+        return Vec::new();
+    }
+    let y_ext = (p.h - p.kh + 1).max(p.w - p.kw + 1);
+    let mut tiles = vec![16, 32, 64];
+    for basis in [32, 64, 128] {
+        if basis >= kmax {
+            tiles.push(basis_filling_tile(basis, p.kh, p.kw));
+        }
+    }
+    tiles.sort_unstable();
+    tiles.dedup();
+    tiles.retain(|&t| tile_supported(t, p.kh, p.kw) && t < y_ext);
+    tiles
+}
+
+/// The tile spans of one axis: `(origin, extent)` pairs with extent `d`
+/// except a ragged tail.
+fn spans(total: usize, d: usize) -> Vec<(usize, usize)> {
+    (0..total).step_by(d).map(|a| (a, d.min(total - a))).collect()
+}
+
+/// The `tile × tile` grid over a `yh_ext × yw_ext` output extent,
+/// grouped by tile shape `(dh, dw)` — at most four groups (interior,
+/// right edge, bottom edge, corner), each listing its tiles' `(ah, aw)`
+/// origins. Same-shape tiles batch into **one** inner-engine call (the
+/// tiles ride the batch dimension), so the fbfft batch lanes, the
+/// threaded batch-group fan-out and the CGEMM bin threading all see one
+/// large problem instead of per-tile slivers — and accGrad's tile-sum
+/// falls out of the inner batch reduction for free.
+fn tile_groups(yh_ext: usize, yw_ext: usize, d: usize)
+               -> Vec<((usize, usize), Vec<(usize, usize)>)> {
+    let rows = spans(yh_ext, d);
+    let cols = spans(yw_ext, d);
+    let mut groups: Vec<((usize, usize), Vec<(usize, usize)>)> =
+        Vec::new();
+    for &(ah, dh) in &rows {
+        for &(aw, dw) in &cols {
+            match groups.iter_mut().find(|(k, _)| *k == (dh, dw)) {
+                Some((_, v)) => v.push((ah, aw)),
+                None => groups.push(((dh, dw), vec![(ah, aw)])),
+            }
+        }
+    }
+    groups
+}
+
+pub struct OaaEngine {
+    /// Output-tile edge on the stride-1 grid.
+    pub tile: usize,
+    /// The small fixed-basis fbfft pipeline every tile runs through.
+    inner: FftConvEngine,
+}
+
+impl OaaEngine {
+    /// OaA at output-tile edge `tile` for a `kh × kw` kernel; the tile
+    /// basis `next_pow2(tile + max(kh, kw) - 1)` must stay inside the
+    /// fbfft domain (≤ [`fbfft_host::MAX_N`]).
+    pub fn new(tile: usize, kh: usize, kw: usize) -> Self {
+        assert!(tile >= 1, "empty OaA tile");
+        let n = tile_fft_size(tile, kh, kw);
+        OaaEngine { tile, inner: FftConvEngine::new(FftMode::Fbfft, n) }
+    }
+
+    /// [`OaaEngine::new`] keyed off a problem's kernel.
+    pub fn for_problem(p: &ConvProblem, tile: usize) -> Self {
+        Self::new(tile, p.kh, p.kw)
+    }
+
+    /// The fixed tile basis.
+    pub fn n_fft(&self) -> usize {
+        self.inner.n_fft
+    }
+
+    /// The per-tile pipeline — hand this to
+    /// [`SpectrumCache::ensure`](super::spectra::SpectrumCache::ensure)
+    /// so the cached spectrum is keyed at the **tile** basis (one small
+    /// spectrum per layer, shared by every tile and image size).
+    pub fn inner(&self) -> &FftConvEngine {
+        &self.inner
+    }
+
+    /// The batched sub-problem of one tile *group*: `tiles` same-shape
+    /// `(th × tw)` windows stacked tile-major on the batch axis
+    /// (`s' = tiles · s`; always stride 1 — striding is applied at
+    /// scatter time). Batch entries are independent through the whole
+    /// inner pipeline, so the group call computes every tile's partial
+    /// result in one threaded sweep.
+    fn sub(&self, p: &ConvProblem, tiles: usize, th: usize, tw: usize)
+           -> ConvProblem {
+        ConvProblem::builder()
+            .batch(tiles * p.s)
+            .planes(p.f, p.fo)
+            .hw(th, tw)
+            .kernel(p.kh, p.kw)
+            .build()
+    }
+
+    fn check(&self, p: &ConvProblem) {
+        assert_eq!(tile_fft_size(self.tile, p.kh, p.kw), self.inner.n_fft,
+                   "OaA engine built for a different kernel size");
+    }
+
+    // ---- the unified pass surface --------------------------------------
+
+    /// The OaA mirror of [`FftConvEngine::run`]: one pass-typed entry
+    /// point over the same [`Operands`] vocabulary. fprop accepts any
+    /// stride ≥ 1; bprop/accGrad are stride-1 (paper §2 scope). `out`
+    /// is fully overwritten (fprop) or zeroed-then-accumulated
+    /// (bprop/accGrad).
+    pub fn run(&self, pass: Pass, ops: Operands<'_>, ws: &mut Workspace)
+               -> StageTimings {
+        let p = ops.problem;
+        self.check(p);
+        match (pass, ops.b) {
+            (Pass::Fprop, BOperand::Planes(wei)) => {
+                self.with_once_spectrum(p, wei, ws, |me, spec, ws| {
+                    me.fprop_spec_into(p, ops.a, spec, ops.out, ws)
+                })
+            }
+            (Pass::Fprop, BOperand::Spectrum(spec)) => {
+                self.fprop_spec_into(p, ops.a, spec, ops.out, ws)
+            }
+            (Pass::Bprop, BOperand::Planes(wei)) => {
+                self.with_once_spectrum(p, wei, ws, |me, spec, ws| {
+                    me.bprop_spec_into(p, ops.a, spec, ops.out, ws)
+                })
+            }
+            (Pass::Bprop, BOperand::Spectrum(spec)) => {
+                self.bprop_spec_into(p, ops.a, spec, ops.out, ws)
+            }
+            (Pass::AccGrad, BOperand::Planes(x)) => {
+                self.accgrad_into(p, ops.a, x, ops.out, ws)
+            }
+            (Pass::AccGrad, BOperand::Spectrum(_)) => {
+                panic!("accGrad's B operand is the activation — \
+                        no cached spectrum applies")
+            }
+        }
+    }
+
+    /// Transform the weights once at the tile basis (the cache-miss
+    /// path), run `body` against the spectrum, and attribute the
+    /// one-time transform to the B/weight stages.
+    fn with_once_spectrum<F>(&self, p: &ConvProblem, wei: &[f32],
+                             ws: &mut Workspace, body: F) -> StageTimings
+    where
+        F: FnOnce(&Self, &WeightSpectrum, &mut Workspace) -> StageTimings,
+    {
+        let t0 = Instant::now();
+        let spec = self.inner.weight_spectrum(
+            p, wei, 0, SpectrumPrecision::F32, ws);
+        let wdur = t0.elapsed();
+        let mut t = body(self, &spec, ws);
+        t.fft_b += wdur;
+        t.weight_fft += wdur;
+        t
+    }
+
+    // ---- fprop (overlap-save, stride-aware scatter) --------------------
+
+    /// fprop against a cached tile-basis weight spectrum — the serving
+    /// steady state: zero weight-FFT time, zero allocations.
+    pub fn fprop_spec_into(&self, p: &ConvProblem, x: &[f32],
+                           spec: &WeightSpectrum, out: &mut [f32],
+                           ws: &mut Workspace) -> StageTimings {
+        self.check(p);
+        assert_eq!(x.len(), p.input_len());
+        assert_eq!(out.len(), p.output_len());
+        let d = self.tile;
+        // tile the *stride-1* output grid; striding subsamples at
+        // scatter time, so every strided position lands exactly once
+        let (yh1, yw1) = (p.h - p.kh + 1, p.w - p.kw + 1);
+        let (yh, yw) = (p.yh(), p.yw());
+        let st = p.stride;
+        let mut total = StageTimings {
+            simd_tier: crate::util::simd::tier(),
+            ..StageTimings::default()
+        };
+        for ((dh, dw), tiles) in tile_groups(yh1, yw1, d) {
+            let (th, tw) = (dh + p.kh - 1, dw + p.kw - 1);
+            let q = self.sub(p, tiles.len(), th, tw);
+            let (in_blk, out_blk) = (p.s * p.f * th * tw,
+                                     p.s * p.fo * dh * dw);
+            let mut xt = ws.pool.take_raw("oaa.a", q.input_len());
+            for (t, &(ah, aw)) in tiles.iter().enumerate() {
+                gather_planes(x, p.s * p.f, p.h, p.w, ah, th, aw, tw,
+                              &mut xt[t * in_blk..(t + 1) * in_blk]);
+            }
+            let mut yt = ws.pool.take_raw("oaa.c", q.output_len());
+            let t = self.inner.fprop_spec_into(&q, &xt, spec, &mut yt,
+                                               ws);
+            total.add(&t);
+            for (t, &(ah, aw)) in tiles.iter().enumerate() {
+                let base = t * out_blk;
+                for b in 0..p.s * p.fo {
+                    for r in 0..dh {
+                        let gr = ah + r;
+                        if gr % st != 0 {
+                            continue;
+                        }
+                        let src = base + (b * dh + r) * dw;
+                        let dst = (b * yh + gr / st) * yw;
+                        if st == 1 {
+                            out[dst + aw..dst + aw + dw]
+                                .copy_from_slice(&yt[src..src + dw]);
+                        } else {
+                            for c in 0..dw {
+                                let gc = aw + c;
+                                if gc % st == 0 {
+                                    out[dst + gc / st] = yt[src + c];
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            ws.pool.put("oaa.a", xt);
+            ws.pool.put("oaa.c", yt);
+        }
+        total
+    }
+
+    /// fprop from raw weights: one weight FFT at the tile basis, then
+    /// the spec path over every tile.
+    pub fn fprop_into(&self, p: &ConvProblem, x: &[f32], wei: &[f32],
+                      out: &mut [f32], ws: &mut Workspace)
+                      -> StageTimings {
+        self.with_once_spectrum(p, wei, ws, |me, spec, ws| {
+            me.fprop_spec_into(p, x, spec, out, ws)
+        })
+    }
+
+    // ---- bprop (transposed overlap-add) --------------------------------
+
+    /// bprop against a cached spectrum: each gradient tile's
+    /// `(tile+k-1)`-window back-projection overlap-adds into `out`
+    /// (which is zeroed first).
+    pub fn bprop_spec_into(&self, p: &ConvProblem, go: &[f32],
+                           spec: &WeightSpectrum, out: &mut [f32],
+                           ws: &mut Workspace) -> StageTimings {
+        self.check(p);
+        assert_eq!(p.stride, 1, "strided FFT conv out of scope (paper §2)");
+        assert_eq!(go.len(), p.output_len());
+        assert_eq!(out.len(), p.input_len());
+        let d = self.tile;
+        let (yh, yw) = (p.yh(), p.yw());
+        out.fill(0.0);
+        let mut total = StageTimings {
+            simd_tier: crate::util::simd::tier(),
+            ..StageTimings::default()
+        };
+        for ((dh, dw), tiles) in tile_groups(yh, yw, d) {
+            let (th, tw) = (dh + p.kh - 1, dw + p.kw - 1);
+            let q = self.sub(p, tiles.len(), th, tw);
+            let (out_blk, in_blk) = (p.s * p.fo * dh * dw,
+                                     p.s * p.f * th * tw);
+            let mut got = ws.pool.take_raw("oaa.a", q.output_len());
+            for (t, &(ah, aw)) in tiles.iter().enumerate() {
+                gather_planes(go, p.s * p.fo, yh, yw, ah, dh, aw, dw,
+                              &mut got[t * out_blk..(t + 1) * out_blk]);
+            }
+            let mut gxt = ws.pool.take_raw("oaa.c", q.input_len());
+            let t = self.inner.bprop_spec_into(&q, &got, spec, &mut gxt,
+                                               ws);
+            total.add(&t);
+            // the transposed overlap: windows of adjacent tiles share
+            // k-1 rows/cols, so scatter is additive
+            for (t, &(ah, aw)) in tiles.iter().enumerate() {
+                let base = t * in_blk;
+                for b in 0..p.s * p.f {
+                    for r in 0..th {
+                        let src = base + (b * th + r) * tw;
+                        let dst = (b * p.h + ah + r) * p.w + aw;
+                        for c in 0..tw {
+                            out[dst + c] += gxt[src + c];
+                        }
+                    }
+                }
+            }
+            ws.pool.put("oaa.a", got);
+            ws.pool.put("oaa.c", gxt);
+        }
+        total
+    }
+
+    /// bprop from raw weights (one weight FFT, then the spec path).
+    pub fn bprop_into(&self, p: &ConvProblem, go: &[f32], wei: &[f32],
+                      out: &mut [f32], ws: &mut Workspace)
+                      -> StageTimings {
+        self.with_once_spectrum(p, wei, ws, |me, spec, ws| {
+            me.bprop_spec_into(p, go, spec, out, ws)
+        })
+    }
+
+    // ---- accGrad (tile-sum) --------------------------------------------
+
+    /// accGrad: per-tile weight-gradient correlations at the tile basis
+    /// summed into `out` (zeroed first). B is the activation, so there
+    /// is no spectrum form.
+    pub fn accgrad_into(&self, p: &ConvProblem, go: &[f32], x: &[f32],
+                        out: &mut [f32], ws: &mut Workspace)
+                        -> StageTimings {
+        self.check(p);
+        assert_eq!(p.stride, 1, "strided FFT conv out of scope (paper §2)");
+        assert_eq!(go.len(), p.output_len());
+        assert_eq!(x.len(), p.input_len());
+        assert_eq!(out.len(), p.weight_len());
+        let d = self.tile;
+        let (yh, yw) = (p.yh(), p.yw());
+        out.fill(0.0);
+        let mut total = StageTimings {
+            simd_tier: crate::util::simd::tier(),
+            ..StageTimings::default()
+        };
+        for ((dh, dw), tiles) in tile_groups(yh, yw, d) {
+            let (th, tw) = (dh + p.kh - 1, dw + p.kw - 1);
+            let q = self.sub(p, tiles.len(), th, tw);
+            let (out_blk, in_blk) = (p.s * p.fo * dh * dw,
+                                     p.s * p.f * th * tw);
+            let mut got = ws.pool.take_raw("oaa.a", q.output_len());
+            let mut xt = ws.pool.take_raw("oaa.b", q.input_len());
+            for (t, &(ah, aw)) in tiles.iter().enumerate() {
+                gather_planes(go, p.s * p.fo, yh, yw, ah, dh, aw, dw,
+                              &mut got[t * out_blk..(t + 1) * out_blk]);
+                gather_planes(x, p.s * p.f, p.h, p.w, ah, th, aw, tw,
+                              &mut xt[t * in_blk..(t + 1) * in_blk]);
+            }
+            // accGrad reduces over the sub-problem's batch axis — which
+            // now carries the tiles, so the group result arrives
+            // already tile-summed
+            let mut gwt = ws.pool.take_raw("oaa.gw", q.weight_len());
+            let t = self.inner.accgrad_into(&q, &got, &xt, &mut gwt, ws);
+            total.add(&t);
+            for (o, g) in out.iter_mut().zip(gwt.iter()) {
+                *o += *g;
+            }
+            ws.pool.put("oaa.a", got);
+            ws.pool.put("oaa.b", xt);
+            ws.pool.put("oaa.gw", gwt);
+        }
+        total
+    }
+
+    // ---- allocating conveniences (tuner / test-matrix signatures) ------
+
+    pub fn fprop(&self, p: &ConvProblem, x: &[f32], wei: &[f32])
+                 -> (Vec<f32>, StageTimings) {
+        let mut ws = Workspace::new();
+        let mut out = vec![0f32; p.output_len()];
+        let t = self.fprop_into(p, x, wei, &mut out, &mut ws);
+        (out, t)
+    }
+
+    pub fn bprop(&self, p: &ConvProblem, go: &[f32], wei: &[f32])
+                 -> (Vec<f32>, StageTimings) {
+        let mut ws = Workspace::new();
+        let mut out = vec![0f32; p.input_len()];
+        let t = self.bprop_into(p, go, wei, &mut out, &mut ws);
+        (out, t)
+    }
+
+    pub fn accgrad(&self, p: &ConvProblem, go: &[f32], x: &[f32])
+                   -> (Vec<f32>, StageTimings) {
+        let mut ws = Workspace::new();
+        let mut out = vec![0f32; p.weight_len()];
+        let t = self.accgrad_into(p, go, x, &mut out, &mut ws);
+        (out, t)
+    }
+}
+
+/// Gather the `[h0, h0+hh) × [w0, w0+ww)` window of `count` row-major
+/// `src_h × src_w` planes into the dense `dst` (`count · hh · ww`).
+fn gather_planes(src: &[f32], count: usize, src_h: usize, src_w: usize,
+                 h0: usize, hh: usize, w0: usize, ww: usize,
+                 dst: &mut [f32]) {
+    debug_assert!(h0 + hh <= src_h && w0 + ww <= src_w);
+    debug_assert_eq!(dst.len(), count * hh * ww);
+    for b in 0..count {
+        for r in 0..hh {
+            let s = (b * src_h + h0 + r) * src_w + w0;
+            let d = (b * hh + r) * ww;
+            dst[d..d + ww].copy_from_slice(&src[s..s + ww]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{assert_close_oracle, oracle, tolerance};
+    use crate::util::Rng;
+
+    #[test]
+    fn all_passes_match_oracle_on_a_tile_boundary_shape() {
+        // 37 is not a multiple of the tile: ragged boundary tiles on
+        // both axes
+        let p = ConvProblem::square(2, 2, 3, 37, 3);
+        let eng = OaaEngine::for_problem(&p, 8);
+        let mut rng = Rng::new(0x0a1);
+        let x = rng.normal_vec(p.input_len());
+        let wei = rng.normal_vec(p.weight_len());
+        let go = rng.normal_vec(p.output_len());
+        let (y, t) = eng.fprop(&p, &x, &wei);
+        assert_close_oracle(&y, &oracle::fprop64(&p, &x, &wei),
+                            tolerance::oaa(&p, Pass::Fprop, 8));
+        assert!(t.weight_fft > std::time::Duration::ZERO,
+                "raw path pays the one-time weight FFT");
+        let (gx, _) = eng.bprop(&p, &go, &wei);
+        assert_close_oracle(&gx, &oracle::bprop64(&p, &go, &wei),
+                            tolerance::oaa(&p, Pass::Bprop, 8));
+        let (gw, _) = eng.accgrad(&p, &go, &x);
+        assert_close_oracle(&gw, &oracle::accgrad64(&p, &go, &x),
+                            tolerance::oaa(&p, Pass::AccGrad, 8));
+    }
+
+    #[test]
+    fn spec_path_reuses_one_spectrum_with_zero_weight_fft() {
+        let p = ConvProblem::square(2, 3, 2, 33, 5);
+        let eng = OaaEngine::for_problem(&p, 8);
+        let mut rng = Rng::new(0x0a2);
+        let x = rng.normal_vec(p.input_len());
+        let wei = rng.normal_vec(p.weight_len());
+        let mut ws = Workspace::new();
+        let spec = eng.inner().weight_spectrum(
+            &p, &wei, 1, SpectrumPrecision::F32, &mut ws);
+        let mut y = vec![0f32; p.output_len()];
+        let t = eng.fprop_spec_into(&p, &x, &spec, &mut y, &mut ws);
+        assert_eq!(t.weight_fft, std::time::Duration::ZERO);
+        let (want, _) = eng.fprop(&p, &x, &wei);
+        assert_eq!(y, want, "f32 spectrum path is bitwise the raw path");
+    }
+
+    #[test]
+    fn one_d_signal_shape_runs_all_passes() {
+        let p = ConvProblem::builder()
+            .batch(2)
+            .planes(2, 2)
+            .hw(1, 300)
+            .kernel(1, 7)
+            .build();
+        let eng = OaaEngine::for_problem(&p, 16);
+        let mut rng = Rng::new(0x0a3);
+        let x = rng.normal_vec(p.input_len());
+        let wei = rng.normal_vec(p.weight_len());
+        let go = rng.normal_vec(p.output_len());
+        let (y, _) = eng.fprop(&p, &x, &wei);
+        assert_close_oracle(&y, &oracle::fprop64(&p, &x, &wei),
+                            tolerance::oaa(&p, Pass::Fprop, 16));
+        let (gx, _) = eng.bprop(&p, &go, &wei);
+        assert_close_oracle(&gx, &oracle::bprop64(&p, &go, &wei),
+                            tolerance::oaa(&p, Pass::Bprop, 16));
+        let (gw, _) = eng.accgrad(&p, &go, &x);
+        assert_close_oracle(&gw, &oracle::accgrad64(&p, &go, &x),
+                            tolerance::oaa(&p, Pass::AccGrad, 16));
+    }
+
+    #[test]
+    fn reused_workspace_reproduces_fresh_results_bitwise() {
+        let p = ConvProblem::square(1, 2, 2, 21, 3);
+        let eng = OaaEngine::for_problem(&p, 6);
+        let mut rng = Rng::new(0x0a4);
+        let x = rng.normal_vec(p.input_len());
+        let wei = rng.normal_vec(p.weight_len());
+        let go = rng.normal_vec(p.output_len());
+        let mut ws = Workspace::new();
+        let mut y = vec![0f32; p.output_len()];
+        let mut gx = vec![0f32; p.input_len()];
+        let mut gw = vec![0f32; p.weight_len()];
+        for round in 0..2 {
+            eng.fprop_into(&p, &x, &wei, &mut y, &mut ws);
+            eng.bprop_into(&p, &go, &wei, &mut gx, &mut ws);
+            eng.accgrad_into(&p, &go, &x, &mut gw, &mut ws);
+            assert_eq!(y, eng.fprop(&p, &x, &wei).0, "fprop r{round}");
+            assert_eq!(gx, eng.bprop(&p, &go, &wei).0, "bprop r{round}");
+            assert_eq!(gw, eng.accgrad(&p, &go, &x).0, "accgrad r{round}");
+        }
+    }
+
+    #[test]
+    fn steady_state_is_allocation_free() {
+        let p = ConvProblem::square(1, 2, 2, 40, 3);
+        let eng = OaaEngine::for_problem(&p, 16);
+        let mut rng = Rng::new(0x0a5);
+        let x = rng.normal_vec(p.input_len());
+        let wei = rng.normal_vec(p.weight_len());
+        let mut ws = Workspace::new();
+        let spec = eng.inner().weight_spectrum(
+            &p, &wei, 1, SpectrumPrecision::F32, &mut ws);
+        let mut y = vec![0f32; p.output_len()];
+        eng.fprop_spec_into(&p, &x, &spec, &mut y, &mut ws);
+        ws.pool.reset_counters();
+        eng.fprop_spec_into(&p, &x, &spec, &mut y, &mut ws);
+        assert_eq!(ws.pool.allocations, 0,
+                   "warm OaA fprop must not allocate");
+        assert_eq!(ws.pool.expansions, 0,
+                   "warm OaA fprop must not regrow pooled buffers");
+    }
+
+    #[test]
+    fn tile_covering_input_degenerates_to_full_pad_bitwise() {
+        // one tile spans the whole output: OaA is exactly the full-pad
+        // engine at the same basis (spec path is bitwise the raw path)
+        let p = ConvProblem::square(2, 2, 2, 14, 3);
+        let tile = 16; // >= yh1 = 12
+        let eng = OaaEngine::for_problem(&p, tile);
+        let full = FftConvEngine::new(FftMode::Fbfft, eng.n_fft());
+        let mut rng = Rng::new(0x0a6);
+        let x = rng.normal_vec(p.input_len());
+        let wei = rng.normal_vec(p.weight_len());
+        let (a, _) = eng.fprop(&p, &x, &wei);
+        let (b, _) = full.fprop(&p, &x, &wei);
+        assert_eq!(a, b, "degenerate OaA must be bitwise full-pad");
+    }
+
+    #[test]
+    fn strided_fprop_matches_oracle() {
+        let p = ConvProblem::builder()
+            .batch(2)
+            .planes(2, 2)
+            .hw(23, 23)
+            .kernel(3, 3)
+            .stride(2)
+            .build();
+        let eng = OaaEngine::for_problem(&p, 8);
+        let mut rng = Rng::new(0x0a7);
+        let x = rng.normal_vec(p.input_len());
+        let wei = rng.normal_vec(p.weight_len());
+        let (y, _) = eng.fprop(&p, &x, &wei);
+        assert_close_oracle(&y, &oracle::fprop64(&p, &x, &wei),
+                            tolerance::oaa(&p, Pass::Fprop, 8));
+    }
+
+    #[test]
+    #[should_panic(expected = "strided FFT conv out of scope")]
+    fn strided_bprop_rejected() {
+        let p = ConvProblem::builder()
+            .hw(16, 16)
+            .kernel(3, 3)
+            .stride(2)
+            .build();
+        let eng = OaaEngine::for_problem(&p, 8);
+        let mut out = vec![0f32; p.input_len()];
+        let go = vec![0f32; p.output_len()];
+        let wei = vec![0f32; p.weight_len()];
+        eng.bprop_into(&p, &go, &wei, &mut out, &mut Workspace::new());
+    }
+
+    #[test]
+    fn tile_groups_cover_the_grid_in_at_most_four_shapes() {
+        let groups = tile_groups(37, 21, 8);
+        assert!(groups.len() <= 4);
+        let tiles: usize = groups.iter().map(|(_, v)| v.len()).sum();
+        assert_eq!(tiles, 5 * 3);
+        let area: usize = groups.iter()
+            .map(|&((dh, dw), ref v)| dh * dw * v.len())
+            .sum();
+        assert_eq!(area, 37 * 21);
+        // exact division leaves only the interior shape
+        assert_eq!(tile_groups(32, 32, 8).len(), 1);
+        // 1-D grids degenerate to at most two shapes
+        assert!(tile_groups(1, 300, 16).len() <= 2);
+    }
+
+    #[test]
+    fn basis_filling_tile_fills_the_basis() {
+        assert_eq!(basis_filling_tile(64, 3, 3), 62);
+        assert_eq!(tile_fft_size(62, 3, 3), 64);
+        assert_eq!(basis_filling_tile(32, 5, 5), 28);
+        assert_eq!(tile_fft_size(28, 5, 5), 32);
+    }
+}

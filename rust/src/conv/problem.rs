@@ -18,11 +18,29 @@ pub struct ConvProblem {
 }
 
 impl ConvProblem {
+    /// The one checked construction path: every field defaults to 1, so
+    /// degenerate shapes (1-D signals with `h = 1`, single-plane
+    /// probes) read as what they omit, and `stride` — previously
+    /// settable only by struct literal — goes through [`validate`]
+    /// like everything else.
+    ///
+    /// [`validate`]: ConvProblem::validate
+    pub fn builder() -> ConvProblemBuilder {
+        ConvProblemBuilder {
+            p: ConvProblem {
+                s: 1, f: 1, fo: 1, h: 1, w: 1, kh: 1, kw: 1, stride: 1,
+            },
+        }
+    }
+
     pub fn new(s: usize, f: usize, fo: usize, h: usize, w: usize,
                kh: usize, kw: usize) -> Self {
-        let p = ConvProblem { s, f, fo, h, w, kh, kw, stride: 1 };
-        p.validate();
-        p
+        Self::builder()
+            .batch(s)
+            .planes(f, fo)
+            .hw(h, w)
+            .kernel(kh, kw)
+            .build()
     }
 
     /// The paper's square shorthand: n = h = w, k = kh = kw.
@@ -91,6 +109,60 @@ impl ConvProblem {
     }
 }
 
+/// Validating builder returned by [`ConvProblem::builder`]. Setters
+/// take the axis vocabulary of the paper; [`build`] runs
+/// [`ConvProblem::validate`], so a kernel larger than the input or a
+/// zero anywhere panics here instead of deep inside an engine.
+///
+/// [`build`]: ConvProblemBuilder::build
+#[derive(Clone, Copy, Debug)]
+pub struct ConvProblemBuilder {
+    p: ConvProblem,
+}
+
+impl ConvProblemBuilder {
+    /// Minibatch size `S`. Default 1.
+    pub fn batch(mut self, s: usize) -> Self {
+        self.p.s = s;
+        self
+    }
+
+    /// Input/output plane counts `f, f'`. Default 1 each.
+    pub fn planes(mut self, f: usize, fo: usize) -> Self {
+        self.p.f = f;
+        self.p.fo = fo;
+        self
+    }
+
+    /// Spatial input size. Default 1×1; use `hw(1, w)` for 1-D signals.
+    pub fn hw(mut self, h: usize, w: usize) -> Self {
+        self.p.h = h;
+        self.p.w = w;
+        self
+    }
+
+    /// Kernel size. Default 1×1; `kernel(1, kw)` for 1-D filters.
+    pub fn kernel(mut self, kh: usize, kw: usize) -> Self {
+        self.p.kh = kh;
+        self.p.kw = kw;
+        self
+    }
+
+    /// Output stride. Default 1 (the paper's §2 scope); FFT engines
+    /// other than OaA fprop reject `stride > 1` at run time.
+    pub fn stride(mut self, stride: usize) -> Self {
+        self.p.stride = stride;
+        self
+    }
+
+    /// Validate and produce the problem (panics on nonsense shapes,
+    /// same contract as [`ConvProblem::validate`]).
+    pub fn build(self) -> ConvProblem {
+        self.p.validate();
+        self.p
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -110,6 +182,41 @@ mod tests {
     #[should_panic(expected = "exceeds input")]
     fn rejects_kernel_larger_than_input() {
         ConvProblem::square(1, 1, 1, 3, 5);
+    }
+
+    #[test]
+    fn builder_routes_new_and_sets_stride() {
+        let b = ConvProblem::builder()
+            .batch(2)
+            .planes(3, 4)
+            .hw(9, 9)
+            .kernel(3, 3)
+            .build();
+        assert_eq!(b, ConvProblem::square(2, 3, 4, 9, 3));
+        let s2 = ConvProblem::builder()
+            .hw(16, 16)
+            .kernel(3, 3)
+            .stride(2)
+            .build();
+        assert_eq!(s2.stride, 2);
+        assert_eq!((s2.yh(), s2.yw()), (7, 7));
+    }
+
+    #[test]
+    fn builder_accepts_1d_signal_shapes() {
+        let p = ConvProblem::builder()
+            .planes(2, 2)
+            .hw(1, 4096)
+            .kernel(1, 5)
+            .build();
+        assert_eq!((p.yh(), p.yw()), (1, 4092));
+        assert_eq!(p.input_len(), 2 * 4096);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds input")]
+    fn builder_rejects_kernel_larger_than_input() {
+        ConvProblem::builder().hw(1, 3).kernel(2, 2).build();
     }
 
     #[test]

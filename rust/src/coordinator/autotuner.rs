@@ -22,8 +22,9 @@ use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
-use crate::conv::{direct, im2col, tiled, ConvProblem, FftConvEngine,
-                  FftMode, SpectrumPrecision, Workspace};
+use crate::conv::{direct, im2col, oaa, tiled, BOperand, ConvProblem,
+                  FftConvEngine, FftMode, Operands, SpectrumPrecision,
+                  Workspace};
 use crate::fft::is_smooth;
 use crate::util::{Json, Rng, SimdTier};
 
@@ -47,6 +48,14 @@ pub fn candidate_bases(n: usize) -> Vec<usize> {
     (n..=hi).filter(|i| is_smooth(*i)).collect()
 }
 
+/// The Overlap-and-Add tile candidates for a problem — the shared
+/// [`oaa::tile_candidates`] sweep ({16, 32, 64} plus the basis-filling
+/// tiles of bases {32, 64, 128}), re-exported under the tuner's naming
+/// so tuning call sites read uniformly with [`candidate_bases`].
+pub fn oaa_tile_candidates(p: &ConvProblem) -> Vec<usize> {
+    oaa::tile_candidates(p)
+}
+
 #[derive(Debug, Default)]
 pub struct Autotuner {
     cache: HashMap<(ConvProblem, Pass), Choice>,
@@ -54,6 +63,13 @@ pub struct Autotuner {
     pub reps: usize,
     /// include the §6 tiled candidates (fprop only)
     pub try_tiling: bool,
+    /// include the Overlap-and-Add tile candidates
+    /// ([`oaa_tile_candidates`]) — separate from `try_tiling`: the §6
+    /// kernel-sized tiles explode into thousands of allocating calls at
+    /// 256²+ inputs, exactly where the fixed OaA tiles are designed to
+    /// run, so tests and large-shape tuning disable one without the
+    /// other
+    pub try_oaa: bool,
     /// time frequency candidates through the weight-spectrum cache at
     /// this precision (fprop/bprop): the serving engine amortizes the
     /// weight FFT away, so its tuner must measure flushes the same way
@@ -68,7 +84,8 @@ pub struct Autotuner {
 impl Autotuner {
     pub fn new() -> Self {
         Autotuner { cache: HashMap::new(), reps: 3, try_tiling: true,
-                    serve_spectra: None, load_warnings: 0 }
+                    try_oaa: true, serve_spectra: None,
+                    load_warnings: 0 }
     }
 
     pub fn cached(&self, p: &ConvProblem, pass: Pass) -> Option<Choice> {
@@ -192,12 +209,19 @@ impl Autotuner {
                 }
                 lo
             };
-            // vendor-FFT candidates over the smooth bases
-            for n in candidate_bases(p.h.max(p.w)) {
-                let eng = FftConvEngine::new(FftMode::Vendor, n);
-                let secs = time_fft(&eng, &mut ws, &mut fft_out);
-                consider(Choice { strategy: Strategy::VendorFft,
-                                  n_fft: Some(n), seconds: secs });
+            // vendor-FFT candidates over the smooth bases. 1-D signals
+            // are excluded: this host pipeline transforms at a *square*
+            // basis, so a `1 × w` signal would pay a `w × w` transform
+            // per plane (134 MB of spectrum at w = 4096) for an engine
+            // that can never win — OaA serves long signals instead
+            let one_d = p.h == 1 || p.w == 1;
+            if !one_d {
+                for n in candidate_bases(p.h.max(p.w)) {
+                    let eng = FftConvEngine::new(FftMode::Vendor, n);
+                    let secs = time_fft(&eng, &mut ws, &mut fft_out);
+                    consider(Choice { strategy: Strategy::VendorFft,
+                                      n_fft: Some(n), seconds: secs });
+                }
             }
             // fbfft candidates (power-of-two basis): the SoA batch-lane
             // engine and the scalar baseline are tuned separately — the
@@ -230,6 +254,47 @@ impl Autotuner {
                         strategy: Strategy::FbfftTiled(d),
                         n_fft: Some(tiled::tile_fft_size(d, p.kh, p.kw)),
                         seconds: secs,
+                    });
+                }
+            }
+            // Overlap-and-Add candidates: fixed small-basis tiles
+            // batched through the fbfft pipeline. Timed like the other
+            // frequency candidates — the production `run` path against
+            // the shared workspace with a warmup rep, spec path when
+            // tuning for the serving tier — so its Choice is the same
+            // steady-state cost the cached strategies carry
+            if self.try_oaa {
+                for t in oaa_tile_candidates(p) {
+                    let eng = oaa::OaaEngine::for_problem(p, t);
+                    let spec = spec_precision.map(|prec| {
+                        eng.inner().weight_spectrum(p, &wei, 0, prec,
+                                                    &mut ws)
+                    });
+                    let a: &[f32] = match pass {
+                        Pass::Fprop => &x,
+                        _ => &go,
+                    };
+                    let mut lo = f64::INFINITY;
+                    for rep in 0..=reps {
+                        let b = match (&spec, pass) {
+                            (Some(s), Pass::Fprop | Pass::Bprop) => {
+                                BOperand::Spectrum(s)
+                            }
+                            (_, Pass::AccGrad) => BOperand::Planes(&x),
+                            _ => BOperand::Planes(&wei),
+                        };
+                        let t0 = Instant::now();
+                        eng.run(pass, Operands { problem: p, a, b,
+                                                 out: &mut fft_out },
+                                &mut ws);
+                        if rep > 0 {
+                            lo = lo.min(t0.elapsed().as_secs_f64());
+                        }
+                    }
+                    consider(Choice {
+                        strategy: Strategy::FbfftOaA(t),
+                        n_fft: Some(eng.n_fft()),
+                        seconds: lo,
                     });
                 }
             }
@@ -448,6 +513,8 @@ pub struct StrategyCache {
     pub reps: usize,
     /// include §6 tiled candidates when tuning on miss
     pub try_tiling: bool,
+    /// include Overlap-and-Add tile candidates when tuning on miss
+    pub try_oaa: bool,
     /// mirror of [`Autotuner::serve_spectra`] applied to miss-path tunes
     pub serve_spectra: Option<SpectrumPrecision>,
 }
@@ -496,6 +563,7 @@ impl StrategyCache {
             load_warnings: AtomicUsize::new(load_warnings),
             reps: 1,
             try_tiling: true,
+            try_oaa: true,
             serve_spectra: None,
         }
     }
@@ -535,6 +603,7 @@ impl StrategyCache {
         let mut t = Autotuner::new();
         t.reps = self.reps;
         t.try_tiling = self.try_tiling;
+        t.try_oaa = self.try_oaa;
         t.serve_spectra = self.serve_spectra;
         let c = t.tune(p, pass);
         self.tunes.fetch_add(1, Ordering::Relaxed);
@@ -636,6 +705,55 @@ mod tests {
         for n in candidate_bases(57) {
             assert!(is_smooth(n) && (57..=64).contains(&n));
         }
+    }
+
+    #[test]
+    fn oaa_tile_candidates_sweep_pow2_and_basis_filling_tiles() {
+        // large small-kernel shape: the full sweep — pow2 tiles plus
+        // the basis-filling tiles of bases 32/64/128
+        let p = ConvProblem::square(1, 2, 2, 256, 3);
+        let c = oaa_tile_candidates(&p);
+        for t in [16, 30, 32, 62, 64, 126] {
+            assert!(c.contains(&t), "{t} missing from {c:?}");
+        }
+        // kernels near the input extent gate the sweep off entirely
+        assert!(oaa_tile_candidates(
+            &ConvProblem::square(1, 1, 1, 16, 5)).is_empty());
+        // 1-D signals gate on the long axis and still sweep
+        let line = ConvProblem::new(1, 1, 1, 1, 4096, 1, 5);
+        let c = oaa_tile_candidates(&line);
+        assert!(c.contains(&60), "basis-filling 64-tile: {c:?}");
+        // tiles at or past the stride-1 output extent are degenerate
+        // full-pad and are dropped
+        for t in oaa_tile_candidates(&ConvProblem::square(1, 1, 1, 40, 3))
+        {
+            assert!(t < 38, "degenerate tile {t} kept");
+        }
+    }
+
+    #[test]
+    fn oaa_candidates_run_inside_the_tuning_contract() {
+        let mut t = Autotuner::new();
+        t.reps = 1;
+        t.try_tiling = false;
+        let p = ConvProblem::square(1, 2, 2, 48, 3);
+        assert!(!oaa_tile_candidates(&p).is_empty());
+        let c = t.tune(&p, Pass::Fprop);
+        assert!(c.seconds.is_finite() && c.seconds > 0.0);
+        assert_eq!(t.tune(&p, Pass::Fprop), c, "cached on reuse");
+    }
+
+    #[test]
+    fn one_d_signals_never_tune_onto_the_square_basis_vendor_path() {
+        // the vendor sweep is gated off for 1 × w signals (a square
+        // basis would transform w × w per plane); the remaining
+        // candidates must still produce a winner
+        let mut t = Autotuner::new();
+        t.reps = 1;
+        t.try_tiling = false;
+        let p = ConvProblem::new(1, 1, 1, 1, 64, 1, 3);
+        let c = t.tune(&p, Pass::Fprop);
+        assert_ne!(c.strategy, Strategy::VendorFft);
     }
 
     #[test]

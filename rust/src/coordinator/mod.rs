@@ -19,8 +19,8 @@
 //!   activations and overlapped host-side packing, supervised
 //!   (`catch_unwind` per flush with the failing layer recorded,
 //!   [`ShardHealth`] circuit breaker, per-layer graceful degradation
-//!   to the direct fallback), with the deprecated single-shard
-//!   `ConvService` wrapper on top.
+//!   to the direct fallback). Single-shard PJRT serving is the same
+//!   engine with `shards: 1` (`ServeEngine::start_pjrt`).
 
 pub mod autotuner;
 pub mod batcher;
@@ -34,10 +34,8 @@ pub use batcher::{Batch, Batcher, BatcherConfig};
 pub use buffers::BufferPool;
 pub use scheduler::{LayerPlan, NetLayer, NetPlan, NetworkScheduler,
                     PassTimings};
-#[allow(deprecated)]
-pub use service::ConvService;
 pub use service::{chain_outputs, Backend, Completion, EngineClient,
                   EngineConfig, EngineConfigBuilder, EngineReport,
                   LayerStats, ServeEngine, ServeFailure, ServeRequest,
-                  ServiceReport, ShardHealth, ShardReport, Ticket};
+                  ShardHealth, ShardReport, Ticket};
 pub use strategy::{Pass, Strategy};

@@ -67,8 +67,9 @@
 //!   deterministically through a [`FaultPlan`] (`FBFFT_FAULTS`,
 //!   `[shard<i>:][layer<j>:]kind@occ`) for chaos tests.
 //!
-//! [`ConvService`] survives, deprecated, as the single-shard PJRT
-//! wrapper the original examples were written against.
+//! The single-shard PJRT use case is `ServeEngine::start_pjrt` (or
+//! `Backend::Pjrt` + `NetPlan::single` + `EngineConfig::builder()`)
+//! — the old `ConvService` wrapper is gone.
 
 use std::cell::Cell;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -2171,75 +2172,6 @@ fn run_strategy_into(choice: &Choice, q: &ConvProblem, pass: Pass,
     }
 }
 
-// ---------------------------------------------------------------------------
-// Legacy single-shard PJRT wrapper
-// ---------------------------------------------------------------------------
-
-/// Aggregate statistics returned at shutdown (legacy surface).
-#[derive(Clone, Copy, Debug, Default)]
-pub struct ServiceReport {
-    pub requests: usize,
-    pub images: usize,
-    pub launches: usize,
-    pub busy: Duration,
-    pub flushes_full: usize,
-    pub flushes_timeout: usize,
-}
-
-/// The original single-worker PJRT service, now a one-shard
-/// [`ServeEngine`] (same admission loop, same report shape).
-#[deprecated(since = "0.8.0",
-             note = "use ServeEngine::start(Backend::Pjrt { .. }, \
-                     NetPlan::single(p), cfg) — the net-level engine \
-                     with the same admission loop")]
-pub struct ConvService {
-    engine: ServeEngine,
-}
-
-#[allow(deprecated)]
-impl ConvService {
-    /// Serve the named fprop artifact from `artifacts_dir`.
-    pub fn start(artifacts_dir: PathBuf, artifact: String,
-                 problem: ConvProblem, cfg: BatcherConfig)
-                 -> Result<ConvService> {
-        let engine = ServeEngine::start_pjrt(
-            artifacts_dir,
-            artifact,
-            problem,
-            EngineConfig {
-                shards: 1,
-                batcher: cfg,
-                // the legacy API has no SLA concept: never reject
-                default_deadline: Duration::from_secs(3600),
-                warm: false,
-                ..Default::default()
-            })?;
-        Ok(ConvService { engine })
-    }
-
-    /// Submit one request. The legacy 1-hour default deadline makes
-    /// [`ServeFailure::DeadlineUnmeetable`] unreachable in practice,
-    /// but the error now surfaces instead of panicking in a
-    /// `debug_assert`.
-    pub fn submit(&self, req: ServeRequest)
-                  -> std::result::Result<(), ServeFailure> {
-        self.engine.submit(req)
-    }
-
-    /// Flush outstanding work and join the worker.
-    pub fn shutdown(self) -> ServiceReport {
-        let r = self.engine.shutdown();
-        ServiceReport {
-            requests: r.requests(),
-            images: r.images(),
-            launches: r.launches(),
-            busy: r.busy(),
-            flushes_full: r.flushes_full(),
-            flushes_timeout: r.flushes_timeout(),
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     // PJRT-backed behaviour is covered by rust/tests/integration.rs;
@@ -2247,13 +2179,6 @@ mod tests {
     // admission, batcher paths) in rust/tests/serve.rs. Here: report
     // arithmetic and the admission fast-paths.
     use super::*;
-
-    #[test]
-    fn report_defaults_are_zero() {
-        let r = ServiceReport::default();
-        assert_eq!(r.requests + r.images + r.launches, 0);
-        assert_eq!(r.busy, Duration::ZERO);
-    }
 
     #[test]
     fn engine_report_aggregates_across_shards() {

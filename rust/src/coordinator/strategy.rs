@@ -17,6 +17,10 @@ pub enum Strategy {
     FbfftScalar,
     /// §6 tiling over fbfft with output-tile size d.
     FbfftTiled(usize),
+    /// Overlap-and-Add fbfft (Highlander & Rodriguez 1601.06815):
+    /// tile × tile input patches convolved at the small fixed basis
+    /// `next_pow2(tile + k - 1)`, partial outputs overlap-added.
+    FbfftOaA(usize),
     /// In-tree direct time-domain kernel (ccn2 analogue).
     Direct,
     /// In-tree matrix-unrolling kernel.
@@ -32,6 +36,7 @@ impl Strategy {
             Strategy::Fbfft => "fbfft".into(),
             Strategy::FbfftScalar => "fbfft_scalar".into(),
             Strategy::FbfftTiled(d) => format!("fbfft_tiled.fprop.d{d}"),
+            Strategy::FbfftOaA(t) => format!("fbfft_oaa.t{t}"),
             Strategy::Direct => "direct".into(),
             Strategy::Im2col => "im2col".into(),
         }
@@ -48,6 +53,10 @@ impl Strategy {
             t if t.starts_with("fbfft_tiled") => {
                 let d = t.rsplit(".d").next()?.parse().ok()?;
                 Strategy::FbfftTiled(d)
+            }
+            t if t.starts_with("fbfft_oaa") => {
+                let tile = t.rsplit(".t").next()?.parse().ok()?;
+                Strategy::FbfftOaA(tile)
             }
             _ => return None,
         })
@@ -69,6 +78,9 @@ impl Strategy {
         match self {
             Strategy::Direct | Strategy::Im2col => Strategy::Vendor,
             Strategy::FbfftScalar => Strategy::Fbfft,
+            // no OaA artifacts in aot.py yet: the host decomposition
+            // stands in for the compiled full-pad fbfft family
+            Strategy::FbfftOaA(_) => Strategy::Fbfft,
             s => *s,
         }
     }
@@ -125,7 +137,8 @@ mod tests {
     fn tags_round_trip() {
         for s in [Strategy::Vendor, Strategy::VendorFft, Strategy::Fbfft,
                   Strategy::FbfftScalar, Strategy::Direct,
-                  Strategy::Im2col] {
+                  Strategy::Im2col, Strategy::FbfftTiled(8),
+                  Strategy::FbfftOaA(32)] {
             assert_eq!(Strategy::from_tag(&s.tag()), Some(s));
         }
     }
@@ -146,6 +159,8 @@ mod tests {
                    Strategy::Fbfft);
         assert_eq!(Strategy::FbfftTiled(8).artifact_equivalent(),
                    Strategy::FbfftTiled(8));
+        assert_eq!(Strategy::FbfftOaA(32).artifact_equivalent(),
+                   Strategy::Fbfft);
         assert_eq!(Strategy::VendorFft.artifact_equivalent(),
                    Strategy::VendorFft);
     }

@@ -219,6 +219,47 @@ impl CufftConvModel {
         fft_a + fft_b + ifft + gemm + trans + c.launches * self.hw.launch
     }
 
+    /// Predicted seconds for one pass run Overlap-and-Add at output-tile
+    /// edge `tile`: the tile grid over the stride-1 output extent is
+    /// batched into the inner problem's batch axis (the engine's
+    /// tile-group execution), so the cost is the full-pad pipeline on
+    /// the equivalent `s·T`-batch window problem at the small fixed
+    /// basis, plus the gather/scatter staging traffic (one read + one
+    /// write of the window copies on both ends).
+    pub fn oaa_time(&self, p: &ConvProblem, tile: usize) -> f64 {
+        let (yh1, yw1) = (p.h - p.kh + 1, p.w - p.kw + 1);
+        let tiles = yh1.div_ceil(tile) * yw1.div_ceil(tile);
+        let (th, tw) = (tile + p.kh - 1, tile + p.kw - 1);
+        let q = ConvProblem::new(p.s * tiles, p.f, p.fo, th, tw,
+                                 p.kh, p.kw);
+        let n = crate::conv::tiled::tile_fft_size(tile, p.kh, p.kw);
+        let stage_bytes =
+            8.0 * (q.input_len() + q.output_len()) as f64;
+        self.time(&q, n)
+            + stage_bytes / (self.hw.mem_bw * self.trans_mem_eff)
+    }
+
+    /// Best OaA time over the autotuner's tile candidates
+    /// ([`crate::conv::oaa::tile_candidates`]); infinite when the sweep
+    /// is empty (OaA out of its regime — the full-pad engines keep the
+    /// problem).
+    pub fn oaa_autotuned_time(&self, p: &ConvProblem) -> f64 {
+        crate::conv::oaa::tile_candidates(p)
+            .into_iter()
+            .map(|t| self.oaa_time(p, t))
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// The full three-regime prediction: the fastest of the full-pad
+    /// basis sweep and the OaA tile sweep. Charts where the third
+    /// regime takes over — large non-pow2 inputs with small kernels,
+    /// where full-pad pays the next-power-of-two round-up on every
+    /// stage while OaA's tiles stay at a small fixed basis, and long
+    /// 1-D signals whose square full-pad basis is out of the question.
+    pub fn three_regime_time(&self, p: &ConvProblem) -> f64 {
+        self.autotuned_time(p).min(self.oaa_autotuned_time(p))
+    }
+
     /// Best time over the autotuner's smooth basis candidates (§3.4) —
     /// what the paper's cuFFT implementation reports after tuning.
     pub fn autotuned_time(&self, p: &ConvProblem) -> f64 {
@@ -379,6 +420,29 @@ mod tests {
         let p = ConvProblem::square(16, 16, 16, 32, 5);
         let t = CufftConvModel::host().autotuned_time(&p);
         assert!(t.is_finite() && t > 0.0);
+    }
+
+    #[test]
+    fn oaa_term_wins_beyond_the_round_up_and_sits_out_inside_it() {
+        let m = CufftConvModel::fbfft();
+        // large non-pow2 input, small kernel: full-pad pays the 512
+        // round-up on every stage, OaA runs 64-basis tiles
+        let big = ConvProblem::square(8, 16, 16, 260, 3);
+        let oaa = m.oaa_autotuned_time(&big);
+        let full = m.autotuned_time(&big);
+        assert!(oaa < full, "oaa {oaa} vs full-pad {full}");
+        assert_eq!(m.three_regime_time(&big), oaa);
+        // near-extent kernels empty the sweep: the full-pad prediction
+        // stands untouched
+        let small = ConvProblem::square(8, 16, 16, 16, 5);
+        assert!(m.oaa_autotuned_time(&small).is_infinite());
+        assert_eq!(m.three_regime_time(&small),
+                   m.autotuned_time(&small));
+        // and every candidate tile yields a finite, positive term
+        for t in crate::conv::oaa::tile_candidates(&big) {
+            let s = m.oaa_time(&big, t);
+            assert!(s.is_finite() && s > 0.0, "tile {t}: {s}");
+        }
     }
 
     #[test]

@@ -245,6 +245,16 @@ pub fn accept32_problem() -> ConvProblem {
     ConvProblem::square(16, 16, 16, 32, 5)
 }
 
+/// The large-input/small-kernel smoke shape the OaA perf gate tracks:
+/// 144² with k=3 sits just past a power of two, so the full-pad fbfft
+/// engine pays the round-up to basis 256 (4.5× the logical area) on
+/// every stage while OaA covers the 142² output grid with nine
+/// 64-basis tiles — the regime where overlap-add must win by a wide,
+/// machine-independent margin.
+pub fn oaa_smoke_problem() -> ConvProblem {
+    ConvProblem::square(4, 8, 8, 144, 3)
+}
+
 /// Machine-readable per-stage pipeline breakdown, written by
 /// `cargo bench --bench breakdown` as `BENCH_fftconv.json` so the perf
 /// trajectory is tracked across PRs. Covers the scaled Table-4 layer
@@ -263,7 +273,18 @@ pub fn accept32_problem() -> ConvProblem {
 /// entry records the `simd_tier` its measured pass executed under —
 /// cross-tier timing comparisons are meaningless, so the perf gate
 /// refuses to diff documents from different tiers.
+///
+/// Schema version 4: the [`oaa_smoke_problem`] config joins both the
+/// smoke and full runs, measured under two modes — full-pad `fbfft` at
+/// the rounded-up basis and `oaa` (tile entries carry a `tile` field) —
+/// so the CI gate can assert overlap-add beats full-pad on the
+/// large-input shape from the same document.
 pub fn breakdown_json(smoke: bool) -> Json {
+    use crate::conv::{oaa, OaaEngine};
+    enum Eng {
+        Full(FftConvEngine),
+        Oaa(OaaEngine),
+    }
     let reps = if smoke { 1usize } else { 3 };
     let mut configs: Vec<(String, ConvProblem)> = Vec::new();
     if !smoke {
@@ -272,6 +293,7 @@ pub fn breakdown_json(smoke: bool) -> Json {
         }
     }
     configs.push(("accept32".to_string(), accept32_problem()));
+    configs.push(("oaa144".to_string(), oaa_smoke_problem()));
 
     let ns = |d: Duration| Json::num(d.as_secs_f64() * 1e9);
     let mut rng = Rng::new(0xBE9C);
@@ -280,12 +302,31 @@ pub fn breakdown_json(smoke: bool) -> Json {
         let x = rng.normal_vec(p.input_len());
         let wei = rng.normal_vec(p.weight_len());
         let go = rng.normal_vec(p.output_len());
-        let n = p.h.max(p.w).next_power_of_two();
-        let bins = rfft_len(n) * n;
-        for (mode, label) in [(FftMode::Vendor, "vendor"),
-                              (FftMode::Fbfft, "fbfft"),
-                              (FftMode::FbfftScalar, "fbfft_scalar")] {
-            let eng = FftConvEngine::new(mode, n);
+        let full_n = p.h.max(p.w).next_power_of_two();
+        // the OaA config pits overlap-add against the full-pad fbfft it
+        // must beat; the classic configs keep the three full-pad modes
+        let engines: Vec<(&str, Eng)> = if name.starts_with("oaa") {
+            let tile = oaa::basis_filling_tile(64, p.kh, p.kw);
+            vec![
+                ("fbfft",
+                 Eng::Full(FftConvEngine::new(FftMode::Fbfft, full_n))),
+                ("oaa", Eng::Oaa(OaaEngine::for_problem(p, tile))),
+            ]
+        } else {
+            [(FftMode::Vendor, "vendor"), (FftMode::Fbfft, "fbfft"),
+             (FftMode::FbfftScalar, "fbfft_scalar")]
+                .into_iter()
+                .map(|(mode, label)| {
+                    (label, Eng::Full(FftConvEngine::new(mode, full_n)))
+                })
+                .collect()
+        };
+        for (label, eng) in &engines {
+            let n = match eng {
+                Eng::Full(e) => e.n_fft,
+                Eng::Oaa(e) => e.n_fft(),
+            };
+            let bins = rfft_len(n) * n;
             let mut ws = Workspace::new();
             let mut yout = vec![0f32; p.output_len()];
             let mut gxout = vec![0f32; p.input_len()];
@@ -294,14 +335,23 @@ pub fn breakdown_json(smoke: bool) -> Json {
                 // rep 0 warms the workspace; keep the fastest steady rep
                 let mut best: Option<StageTimings> = None;
                 for rep in 0..=reps {
-                    let st = match pass {
-                        Pass::Fprop => eng.fprop_into(p, &x, &wei,
-                                                      &mut yout, &mut ws),
-                        Pass::Bprop => eng.bprop_into(p, &go, &wei,
-                                                      &mut gxout, &mut ws),
-                        Pass::AccGrad => eng.accgrad_into(p, &go, &x,
-                                                          &mut gwout,
-                                                          &mut ws),
+                    let st = match eng {
+                        Eng::Full(e) => match pass {
+                            Pass::Fprop => e.fprop_into(
+                                p, &x, &wei, &mut yout, &mut ws),
+                            Pass::Bprop => e.bprop_into(
+                                p, &go, &wei, &mut gxout, &mut ws),
+                            Pass::AccGrad => e.accgrad_into(
+                                p, &go, &x, &mut gwout, &mut ws),
+                        },
+                        Eng::Oaa(e) => match pass {
+                            Pass::Fprop => e.fprop_into(
+                                p, &x, &wei, &mut yout, &mut ws),
+                            Pass::Bprop => e.bprop_into(
+                                p, &go, &wei, &mut gxout, &mut ws),
+                            Pass::AccGrad => e.accgrad_into(
+                                p, &go, &x, &mut gwout, &mut ws),
+                        },
                     };
                     let better = best
                         .map(|b| st.total() < b.total())
@@ -342,7 +392,7 @@ pub fn breakdown_json(smoke: bool) -> Json {
                             blocked_lo.min(t0.elapsed().as_secs_f64());
                     }
                 }
-                entries.push(Json::obj(vec![
+                let mut fields = vec![
                     ("layer", Json::str(name)),
                     ("pass", Json::str(pass.tag())),
                     ("mode", Json::str(label)),
@@ -366,12 +416,16 @@ pub fn breakdown_json(smoke: bool) -> Json {
                     ("cgemm_naive_ns", Json::num(naive_lo * 1e9)),
                     ("cgemm_blocked_ns", Json::num(blocked_lo * 1e9)),
                     ("cgemm_speedup", Json::num(naive_lo / blocked_lo)),
-                ]));
+                ];
+                if let Eng::Oaa(e) = eng {
+                    fields.push(("tile", Json::num(e.tile as f64)));
+                }
+                entries.push(Json::obj(fields));
             }
         }
     }
     Json::obj(vec![
-        ("version", Json::num(3.0)),
+        ("version", Json::num(4.0)),
         ("threads", Json::num(threads() as f64)),
         ("smoke", Json::Bool(smoke)),
         ("host", super::host_meta()),
@@ -395,13 +449,15 @@ mod tests {
     fn breakdown_json_smoke_has_all_cells() {
         let j = breakdown_json(true);
         let entries = j.get("entries").unwrap().as_arr().unwrap();
-        // 1 config × 3 modes × 3 passes
-        assert_eq!(entries.len(), 9);
+        // accept32 × 3 modes × 3 passes + oaa144 × 2 modes × 3 passes
+        assert_eq!(entries.len(), 15);
         let mut saw_fbfft = 0;
+        let mut saw_oaa = 0;
         let tier = crate::util::simd::tier().tag();
         for e in entries {
-            assert_eq!(e.get("layer").unwrap().as_str().unwrap(),
-                       "accept32");
+            let layer = e.get("layer").unwrap().as_str().unwrap();
+            let mode = e.get("mode").unwrap().as_str().unwrap();
+            assert!(layer == "accept32" || layer == "oaa144", "{layer}");
             // every entry names the tier its timings ran under
             assert_eq!(e.get("simd_tier").unwrap().as_str().unwrap(),
                        tier);
@@ -415,19 +471,30 @@ mod tests {
             let pack = e.get("pack_ns").unwrap().as_f64().unwrap();
             assert!(fft > 0.0);
             // the SoA fbfft rows prove the elided pack stage exactly
-            if e.get("mode").unwrap().as_str().unwrap() == "fbfft" {
+            if mode == "fbfft" {
                 assert_eq!(pack, 0.0, "SoA fbfft must elide PACK");
                 saw_fbfft += 1;
             }
+            if mode == "oaa" {
+                assert_eq!(layer, "oaa144");
+                // OaA rides the SoA pipeline: pack stays elided, and
+                // the entry names its tile at the small basis
+                assert_eq!(pack, 0.0, "OaA must keep PACK elided");
+                assert_eq!(e.get("tile").unwrap().as_usize(), Some(62));
+                assert_eq!(e.get("n_fft").unwrap().as_usize(), Some(64));
+                saw_oaa += 1;
+            }
         }
-        assert_eq!(saw_fbfft, 3, "one SoA fbfft entry per pass");
+        assert_eq!(saw_fbfft, 6,
+                   "one SoA fbfft entry per pass per config");
+        assert_eq!(saw_oaa, 3, "one OaA entry per pass");
         // the host provenance block travels with the document
         let host = j.get("host").expect("host block");
         assert_eq!(host.get("simd_tier").unwrap().as_str(), Some(tier));
         assert!(host.get("threads").unwrap().as_f64().unwrap() >= 1.0);
         // round-trips through the in-tree parser
         let back = Json::parse(&j.to_string()).unwrap();
-        assert_eq!(back.get("version").unwrap().as_usize(), Some(3));
+        assert_eq!(back.get("version").unwrap().as_usize(), Some(4));
         assert!(back.get("host").is_some());
     }
 }

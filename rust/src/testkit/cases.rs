@@ -3,6 +3,7 @@
 //! engines) plus seeded samples of the paper's Table-2 sweep space,
 //! bounded to a CPU-friendly work budget.
 
+use crate::conv::oaa;
 use crate::conv::ConvProblem;
 use crate::coordinator::autotuner::candidate_bases;
 use crate::fft::{fbfft_host, is_smooth};
@@ -23,6 +24,9 @@ pub struct ConformanceCase {
     pub fbfft_basis: usize,
     /// Output-tile size for the §6 tiled engine.
     pub tile: usize,
+    /// Output-tile edge (on the stride-1 grid) for the Overlap-and-Add
+    /// engine — only consulted when the case runs `Engine::Oaa`.
+    pub oaa_tile: usize,
     /// Seed for the case's synthetic tensors (derived from the name, so
     /// renaming a case intentionally reshuffles its data).
     pub seed: u64,
@@ -42,6 +46,29 @@ impl ConformanceCase {
             vendor_basis: candidate_bases(n)[0],
             fbfft_basis,
             tile: default_tile(&problem),
+            oaa_tile: default_tile(&problem),
+            seed: hash64(name.as_bytes()),
+        }
+    }
+
+    /// Case for the Overlap-and-Add suite: unlike [`ConformanceCase::new`]
+    /// the input may exceed the full-pad fbfft basis cap — these shapes
+    /// (256²+, long 1-D signals) are exactly the regime OaA exists for,
+    /// and the subset runner never constructs a full-pad fbfft engine
+    /// for them. The stored `fbfft_basis` is the (possibly over-cap)
+    /// next power of two, kept only for reporting.
+    pub fn oaa(name: &str, problem: ConvProblem, oaa_tile: usize)
+               -> ConformanceCase {
+        assert!(oaa::tile_supported(oaa_tile, problem.kh, problem.kw),
+                "{name}: OaA tile {oaa_tile} overflows the fbfft basis");
+        let n = problem.h.max(problem.w);
+        ConformanceCase {
+            name: name.to_string(),
+            problem,
+            vendor_basis: candidate_bases(n)[0],
+            fbfft_basis: n.next_power_of_two(),
+            tile: default_tile(&problem),
+            oaa_tile,
             seed: hash64(name.as_bytes()),
         }
     }
@@ -58,6 +85,14 @@ impl ConformanceCase {
     pub fn with_tile(mut self, d: usize) -> ConformanceCase {
         assert!(d >= 1);
         self.tile = d;
+        self
+    }
+
+    /// Override the Overlap-and-Add engine's output-tile edge.
+    pub fn with_oaa_tile(mut self, t: usize) -> ConformanceCase {
+        assert!(oaa::tile_supported(t, self.problem.kh, self.problem.kw),
+                "OaA tile {t} overflows the fbfft basis");
+        self.oaa_tile = t;
         self
     }
 
@@ -157,6 +192,43 @@ pub fn conformance_suite() -> Vec<ConformanceCase> {
     cases
 }
 
+/// The Overlap-and-Add conformance suite: the large-input/small-kernel
+/// regime the full-pad engines cannot reach — 256² and 512² images with
+/// 3×3/5×5 kernels, plus a long 1-D signal (`h = 1, w = 4096`, the
+/// audio/time-series shape of Highlander & Rodriguez §4). Channel
+/// counts stay tiny so the suite is debug-runnable: the cells gate
+/// *decomposition* correctness (tile boundaries, overlap windows,
+/// spectrum reuse), which is channel-count independent. Tiles are
+/// basis-filling (`basis − k + 1`, see [`oaa::basis_filling_tile`]) —
+/// the production configuration the autotuner favours.
+pub fn oaa_cases() -> Vec<ConformanceCase> {
+    let t64 = |k: usize| oaa::basis_filling_tile(64, k, k);
+    vec![
+        ConformanceCase::oaa(
+            "oaa-256-k3",
+            ConvProblem::square(1, 2, 2, 256, 3), t64(3)),
+        ConformanceCase::oaa(
+            "oaa-256-k5",
+            ConvProblem::square(2, 2, 2, 256, 5), t64(5)),
+        // 512² exceeds the fbfft full-pad basis cap (MAX_N = 256):
+        // constructible only through the OaA path
+        ConformanceCase::oaa(
+            "oaa-512-k3",
+            ConvProblem::square(1, 1, 2, 512, 3), t64(3)),
+        ConformanceCase::oaa(
+            "oaa-512-k5",
+            ConvProblem::square(1, 2, 1, 512, 5), t64(5)),
+        // 1-D: the vendor engine drops out of the set (square-basis
+        // padding of a 4096-long signal); the tiled engine runs at a
+        // 1 × 8 output tile
+        ConformanceCase::oaa(
+            "oaa-1d-4096-k5",
+            ConvProblem::new(1, 2, 2, 1, 4096, 1, 5),
+            oaa::basis_filling_tile(64, 1, 5))
+            .with_tile(8),
+    ]
+}
+
 /// Random small problem for property tests (moved here from
 /// `tests/prop.rs` so every test layer draws from one generator).
 pub fn random_small_problem(rng: &mut Rng, max_hw: usize) -> ConvProblem {
@@ -220,6 +292,33 @@ mod tests {
         names.sort_unstable();
         names.dedup();
         assert_eq!(names.len(), suite.len());
+    }
+
+    #[test]
+    fn oaa_suite_covers_the_beyond_full_pad_regime() {
+        use crate::conv::tiled::tile_fft_size;
+        let cases = oaa_cases();
+        assert!(cases.iter().any(
+            |c| c.problem.h.max(c.problem.w) > fbfft_host::MAX_N),
+            "missing a shape past the full-pad basis cap");
+        assert!(cases.iter().any(
+            |c| c.problem.h == 1 && c.problem.w >= 4096),
+            "missing the long 1-D signal shape");
+        assert!(cases.iter().any(|c| c.problem.kh == 3)
+                && cases.iter().any(|c| c.problem.kh == 5
+                                        || c.problem.kw == 5));
+        for c in &cases {
+            c.problem.validate();
+            assert!(oaa::tile_supported(
+                c.oaa_tile, c.problem.kh, c.problem.kw));
+            // basis-filling tiles: the tile basis is hit exactly, no
+            // round-up waste
+            let n_t = tile_fft_size(c.oaa_tile, c.problem.kh, c.problem.kw);
+            assert_eq!(
+                n_t,
+                c.oaa_tile + c.problem.kh.max(c.problem.kw) - 1,
+                "{}: tile {} wastes basis {n_t}", c.name, c.oaa_tile);
+        }
     }
 
     #[test]

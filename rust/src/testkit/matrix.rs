@@ -2,8 +2,8 @@
 //! f64 oracle (and every engine against every other), reporting a
 //! per-cell max-abs / max-ULP table gated by the `tolerance` model.
 
-use crate::conv::{direct, im2col, tiled, FftConvEngine, FftMode,
-                  Workspace};
+use crate::conv::{direct, im2col, tiled, BOperand, FftConvEngine,
+                  FftMode, OaaEngine, Operands, Workspace};
 use crate::coordinator::Pass;
 use crate::metrics::Table;
 use crate::util::Rng;
@@ -11,9 +11,13 @@ use crate::util::Rng;
 use super::cases::ConformanceCase;
 use super::{oracle, tolerance};
 
-/// The six host engines under conformance test (`Fbfft` is the SoA
+/// The host engines under conformance test (`Fbfft` is the SoA
 /// batch-lane path, `FbfftScalar` the pre-SoA baseline — both run so the
-/// lane kernels are gated against the oracle *and* their scalar twin).
+/// lane kernels are gated against the oracle *and* their scalar twin;
+/// `Oaa` is the Overlap-and-Add decomposition, run by the dedicated
+/// large-input suite rather than [`Engine::ALL`] because the full-pad
+/// fbfft engines cannot even be constructed at its 256²+/4096-long
+/// shapes).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Engine {
     Direct,
@@ -22,6 +26,7 @@ pub enum Engine {
     Fbfft,
     FbfftScalar,
     Tiled,
+    Oaa,
 }
 
 impl Engine {
@@ -37,8 +42,26 @@ impl Engine {
             Engine::Fbfft => "fbfft",
             Engine::FbfftScalar => "fbfft_scalar",
             Engine::Tiled => "tiled",
+            Engine::Oaa => "oaa",
         }
     }
+}
+
+/// The engine set for an Overlap-and-Add conformance case: the 5-engine
+/// matrix [direct, im2col, vendor_fft, tiled, oaa]. The full-pad fbfft
+/// engines are excluded (their basis cap is below the 256²+ inputs OaA
+/// exists for), and on 1-D signal shapes the vendor engine drops out
+/// too: padding a `1 × 4096` signal to a square `4096²` Fourier basis
+/// is a ~128 MiB-per-plane allocation with no conformance value.
+pub fn oaa_engine_set(case: &ConformanceCase) -> Vec<Engine> {
+    let p = &case.problem;
+    let mut set = vec![Engine::Direct, Engine::Im2col];
+    if p.h > 1 && p.w > 1 {
+        set.push(Engine::VendorFft);
+    }
+    set.push(Engine::Tiled);
+    set.push(Engine::Oaa);
+    set
 }
 
 /// One cell of the matrix: an engine's deviation from the oracle on one
@@ -89,12 +112,14 @@ impl SuiteReport {
 
     /// Render the conformance matrix: one row per {case × engine}, one
     /// column per pass showing `max_abs (max_ulp)`, flagged when a cell
-    /// exceeds its tolerance.
+    /// exceeds its tolerance. Rows come from the cells a case actually
+    /// ran — subset suites (the OaA 5-engine matrix) render without
+    /// phantom rows.
     pub fn render(&self) -> String {
         let mut t = Table::new(&[
             "case", "engine", "fprop", "bprop", "accgrad", "status"]);
         for cr in &self.cases {
-            for engine in Engine::ALL {
+            for engine in case_engines(cr) {
                 let fmt = |pass: Pass| {
                     let c = cr.cell(engine, pass);
                     let mark = if c.ok { "" } else { " !>tol" };
@@ -123,7 +148,11 @@ impl SuiteReport {
             "conformance matrix: {} cases x {} engines x 3 passes \
              vs f64 oracle\n{}\ncross-engine max deviation: {:.2e}\n{}",
             self.cases.len(),
-            Engine::ALL.len(),
+            self.cases
+                .iter()
+                .map(|c| case_engines(c).len())
+                .max()
+                .unwrap_or(0),
             t.render(),
             self.cases
                 .iter()
@@ -135,6 +164,17 @@ impl SuiteReport {
                 format!("FAILED cases: {failed:?}")
             })
     }
+}
+
+/// The engines a report actually ran, in first-cell order.
+fn case_engines(cr: &CaseReport) -> Vec<Engine> {
+    let mut es = Vec::new();
+    for c in &cr.cells {
+        if !es.contains(&c.engine) {
+            es.push(c.engine);
+        }
+    }
+    es
 }
 
 /// NaN-propagating max: a NaN deviation must poison the cell (plain
@@ -178,11 +218,20 @@ pub fn cell_tolerance(engine: Engine, case: &ConformanceCase, pass: Pass)
             tolerance::frequency(p, pass, case.fbfft_basis)
         }
         Engine::Tiled => tolerance::tiled(p, pass, case.tile),
+        Engine::Oaa => tolerance::oaa(p, pass, case.oaa_tile),
     }
 }
 
-/// Run one case through every engine and pass.
+/// Run one case through every engine of [`Engine::ALL`] and every pass.
 pub fn run_case(case: &ConformanceCase) -> CaseReport {
+    run_case_with(case, &Engine::ALL)
+}
+
+/// Run one case through an explicit engine subset and every pass. The
+/// OaA suite uses this with [`oaa_engine_set`]; `run_case` delegates
+/// here with the classic six.
+pub fn run_case_with(case: &ConformanceCase, engines: &[Engine])
+                     -> CaseReport {
     let p = &case.problem;
     let mut rng = Rng::new(case.seed);
     let x = rng.normal_vec(p.input_len());
@@ -193,46 +242,71 @@ pub fn run_case(case: &ConformanceCase) -> CaseReport {
                 oracle::bprop64(p, &go, &w),
                 oracle::accgrad64(p, &go, &x)];
 
-    let vendor = FftConvEngine::new(FftMode::Vendor, case.vendor_basis);
-    let fbfft = FftConvEngine::new(FftMode::Fbfft, case.fbfft_basis);
-    let fbfft_scalar =
-        FftConvEngine::new(FftMode::FbfftScalar, case.fbfft_basis);
     let d = case.tile;
 
-    // the FFT engines run through the production `_into` entry points
-    // with ONE workspace shared across both engines and all passes, so
+    // the FFT engines run through the production pass-typed `run` entry
+    // point with ONE workspace shared across all engines and passes, so
     // the conformance gate also covers pooled-buffer reuse (a stale
     // buffer leaking between passes fails the oracle cells)
     let mut ws = Workspace::new();
-    let mut run_fft = |eng: &FftConvEngine| -> [Vec<f32>; 3] {
+    // one pass-typed driver covers both FFT engine families: `run` takes
+    // the same `Operands` bundle on `FftConvEngine` and `OaaEngine`
+    let run_fft = |run: &dyn Fn(Pass, Operands<'_>, &mut Workspace),
+                   ws: &mut Workspace| -> [Vec<f32>; 3] {
         let mut y = vec![0f32; p.output_len()];
         let mut gx = vec![0f32; p.input_len()];
         let mut gw = vec![0f32; p.weight_len()];
-        eng.fprop_into(p, &x, &w, &mut y, &mut ws);
-        eng.bprop_into(p, &go, &w, &mut gx, &mut ws);
-        eng.accgrad_into(p, &go, &x, &mut gw, &mut ws);
+        run(Pass::Fprop,
+            Operands { problem: p, a: &x,
+                       b: BOperand::Planes(&w), out: &mut y },
+            ws);
+        run(Pass::Bprop,
+            Operands { problem: p, a: &go,
+                       b: BOperand::Planes(&w), out: &mut gx },
+            ws);
+        run(Pass::AccGrad,
+            Operands { problem: p, a: &go,
+                       b: BOperand::Planes(&x), out: &mut gw },
+            ws);
         [y, gx, gw]
     };
+    let run_mode = |mode: FftMode, basis: usize, ws: &mut Workspace| {
+        let eng = FftConvEngine::new(mode, basis);
+        run_fft(&|pass, ops, ws| { eng.run(pass, ops, ws); }, ws)
+    };
 
-    let outputs: Vec<(Engine, [Vec<f32>; 3])> = vec![
-        (Engine::Direct,
-         [direct::fprop(p, &x, &w),
-          direct::bprop(p, &go, &w),
-          direct::accgrad(p, &go, &x)]),
-        (Engine::Im2col,
-         [im2col::fprop(p, &x, &w),
-          im2col::bprop(p, &go, &w),
-          im2col::accgrad(p, &go, &x)]),
-        (Engine::VendorFft, run_fft(&vendor)),
-        (Engine::Fbfft, run_fft(&fbfft)),
-        (Engine::FbfftScalar, run_fft(&fbfft_scalar)),
-        (Engine::Tiled,
-         [tiled::fprop(p, &x, &w, d).0,
-          tiled::bprop(p, &go, &w, d).0,
-          tiled::accgrad(p, &go, &x, d).0]),
-    ];
+    // engines are constructed inside their arm: a 512² OaA case would
+    // panic just *building* a full-pad fbfft engine it never runs
+    let outputs: Vec<(Engine, [Vec<f32>; 3])> = engines
+        .iter()
+        .map(|&engine| {
+            let outs = match engine {
+                Engine::Direct => [direct::fprop(p, &x, &w),
+                                   direct::bprop(p, &go, &w),
+                                   direct::accgrad(p, &go, &x)],
+                Engine::Im2col => [im2col::fprop(p, &x, &w),
+                                   im2col::bprop(p, &go, &w),
+                                   im2col::accgrad(p, &go, &x)],
+                Engine::VendorFft =>
+                    run_mode(FftMode::Vendor, case.vendor_basis, &mut ws),
+                Engine::Fbfft =>
+                    run_mode(FftMode::Fbfft, case.fbfft_basis, &mut ws),
+                Engine::FbfftScalar => run_mode(
+                    FftMode::FbfftScalar, case.fbfft_basis, &mut ws),
+                Engine::Tiled => [tiled::fprop(p, &x, &w, d).0,
+                                  tiled::bprop(p, &go, &w, d).0,
+                                  tiled::accgrad(p, &go, &x, d).0],
+                Engine::Oaa => {
+                    let eng = OaaEngine::for_problem(p, case.oaa_tile);
+                    run_fft(&|pass, ops, ws| { eng.run(pass, ops, ws); },
+                            &mut ws)
+                }
+            };
+            (engine, outs)
+        })
+        .collect();
 
-    let mut cells = Vec::with_capacity(Engine::ALL.len() * Pass::ALL.len());
+    let mut cells = Vec::with_capacity(engines.len() * Pass::ALL.len());
     for (engine, outs) in &outputs {
         for (pi, pass) in Pass::ALL.iter().enumerate() {
             let tol = cell_tolerance(*engine, case, *pass);
@@ -322,6 +396,34 @@ mod tests {
         let (abs, _) = compare(&got, &want);
         assert!(abs.is_nan()); // so the `max_abs <= tol` ok-gate fails
         assert!(max_abs_diff(&got, &[1.0, 2.0]).is_nan());
+    }
+
+    #[test]
+    fn oaa_subset_runner_covers_the_five_engine_matrix() {
+        let case = ConformanceCase::oaa(
+            "unit-oaa", ConvProblem::square(1, 2, 2, 20, 3), 6);
+        let engines = oaa_engine_set(&case);
+        assert_eq!(engines.len(), 5);
+        assert!(engines.contains(&Engine::Oaa));
+        let r = run_case_with(&case, &engines);
+        assert_eq!(r.cells.len(), 5 * 3);
+        let rep = SuiteReport { cases: vec![r] };
+        assert!(rep.all_ok(), "\n{}", rep.render());
+        // subset rendering: an oaa row, no phantom full-pad fbfft rows
+        let text = rep.render();
+        assert!(text.contains("oaa"));
+        assert!(!text.contains("fbfft_scalar"));
+    }
+
+    #[test]
+    fn one_d_oaa_case_drops_the_vendor_engine() {
+        let case = ConformanceCase::oaa(
+            "unit-oaa-1d", ConvProblem::new(1, 1, 2, 1, 64, 1, 5), 12);
+        let engines = oaa_engine_set(&case);
+        assert!(!engines.contains(&Engine::VendorFft));
+        let r = run_case_with(&case, &engines);
+        assert!(r.ok(),
+                "\n{}", SuiteReport { cases: vec![r] }.render());
     }
 
     #[test]

@@ -71,6 +71,19 @@ pub fn tiled(p: &ConvProblem, pass: Pass, d_tile: usize) -> f32 {
     frequency(p, pass, n_t) * (1.0 + tiles.sqrt())
 }
 
+/// Absolute tolerance for the Overlap-and-Add engine with output-tile
+/// edge `tile`: the same per-tile-frequency × tile-accumulation model
+/// as [`tiled`] (identical decomposition), except that the tile grid
+/// covers the **stride-1** output extent — OaA computes the dense grid
+/// and subsamples at scatter time, so a strided fprop's error rides the
+/// dense tile count.
+pub fn oaa(p: &ConvProblem, pass: Pass, tile: usize) -> f32 {
+    let n_t = tile_fft_size(tile, p.kh, p.kw);
+    let (yh1, yw1) = (p.h - p.kh + 1, p.w - p.kw + 1);
+    let tiles = (yh1.div_ceil(tile) * yw1.div_ceil(tile)) as f32;
+    frequency(p, pass, n_t) * (1.0 + tiles.sqrt())
+}
+
 /// Absolute tolerance for one forward transform of size `n` on
 /// unit-variance input (the FFT edge tests): output magnitude ~√n,
 /// rounding over the stage count, with headroom for Bluestein's larger
@@ -130,6 +143,21 @@ mod tests {
         let n_t = tile_fft_size(d_tile, p.kh, p.kw);
         assert!(tiled(&p, Pass::Fprop, d_tile)
                 > 2.0 * frequency(&p, Pass::Fprop, n_t));
+    }
+
+    #[test]
+    fn oaa_matches_tiled_model_at_stride_one() {
+        let p = ConvProblem::square(2, 2, 2, 40, 3);
+        assert_eq!(oaa(&p, Pass::Fprop, 8), tiled(&p, Pass::Fprop, 8));
+        // strided problems keep the dense-grid tile count
+        let s2 = ConvProblem::builder()
+            .batch(2)
+            .planes(2, 2)
+            .hw(40, 40)
+            .kernel(3, 3)
+            .stride(2)
+            .build();
+        assert!(oaa(&s2, Pass::Fprop, 8) >= oaa(&p, Pass::Fprop, 8));
     }
 
     #[test]

@@ -9,11 +9,9 @@
 //! artifacts.
 
 use fbfft_repro::conv::{direct, ConvProblem, FftConvEngine};
-use fbfft_repro::coordinator::batcher::BatcherConfig;
-use fbfft_repro::coordinator::service::{Completion, ServeRequest};
-#[allow(deprecated)]
-use fbfft_repro::coordinator::service::ConvService;
-use fbfft_repro::coordinator::{LayerPlan, NetworkScheduler, Pass, Strategy};
+use fbfft_repro::coordinator::{Backend, EngineConfig, LayerPlan, NetPlan,
+                               NetworkScheduler, Pass, ServeEngine,
+                               Strategy};
 use fbfft_repro::runtime::{HostTensor, Runtime};
 use fbfft_repro::util::Rng;
 
@@ -211,43 +209,43 @@ fn scheduler_fails_fast_on_missing_artifact() {
 }
 
 #[test]
-#[allow(deprecated)] // ConvService is the kept 1-shard compatibility
-                     // shim over ServeEngine; exercise it until removal
 fn service_end_to_end_on_quickstart() {
     let p = ConvProblem::square(2, 4, 4, 16, 3);
-    let svc = match ConvService::start(
-        "artifacts".into(),
-        "conv.quickstart.fbfft.fprop".into(),
-        p,
-        BatcherConfig { capacity: 2,
-                        max_wait: std::time::Duration::from_millis(1) },
+    // the legacy shim's semantics, spelled in today's API: one shard,
+    // no SLA pressure (1h default deadline), no warm-up tuning
+    let cfg = EngineConfig::builder()
+        .shards(1)
+        .capacity(2)
+        .max_wait(std::time::Duration::from_millis(1))
+        .default_deadline(std::time::Duration::from_secs(3600))
+        .warm(false)
+        .build()
+        .expect("valid engine config");
+    let eng = match ServeEngine::start(
+        Backend::Pjrt { dir: "artifacts".into(),
+                        artifact: "conv.quickstart.fbfft.fprop".into() },
+        NetPlan::single(p),
+        cfg,
     ) {
-        Ok(svc) => svc,
+        Ok(eng) => eng,
         Err(e) => {
             skip(&e);
             return;
         }
     };
-    let (tx, rx) = std::sync::mpsc::channel::<Completion>();
-    for id in 0..10u64 {
-        assert!(svc.submit(ServeRequest { id, images: 1, deadline: None,
-                                          reply: tx.clone() })
-                   .is_ok());
-    }
-    drop(tx);
-    let mut done = 0;
-    while let Ok(c) = rx.recv_timeout(std::time::Duration::from_secs(30)) {
+    let client = eng.client();
+    let tickets: Vec<_> = (0..10)
+        .map(|_| client.submit_images(1, None).expect("admitted"))
+        .collect();
+    for t in &tickets {
+        let c = t.wait().expect("served");
+        assert!(c.error.is_none(), "request failed: {:?}", c.error);
         assert!(c.latency.as_secs_f64() >= 0.0);
         assert!(c.batch_images <= 2);
-        done += 1;
-        if done == 10 {
-            break;
-        }
     }
-    let report = svc.shutdown();
-    assert_eq!(report.requests, 10);
-    assert_eq!(done, 10, "all requests completed");
-    assert!(report.launches >= 5, "batching factor <= capacity");
+    let report = eng.shutdown();
+    assert_eq!(report.requests(), 10);
+    assert!(report.launches() >= 5, "batching factor <= capacity");
 }
 
 #[test]

@@ -1,0 +1,140 @@
+//! The Overlap-and-Add tier: property tests over the tile decomposition
+//! (boundary seams, the degenerate single-tile case, strided scatter)
+//! plus the 5-engine OaA conformance matrix at 256²–512² and the 1-D
+//! long-signal shape — sizes the full-pad fbfft path cannot even
+//! construct (`MAX_N = 256`) — and the acceptance check that the
+//! autotuner actually picks [`Strategy::FbfftOaA`] where the paper's
+//! §6 regime analysis says it must.
+
+use fbfft_repro::conv::{oaa, ConvProblem, FftConvEngine, FftMode,
+                        OaaEngine, SpectrumPrecision};
+use fbfft_repro::coordinator::{Autotuner, Pass, Strategy};
+use fbfft_repro::testkit::{assert_close_oracle, cases, matrix, oracle,
+                           tolerance, SuiteReport};
+use fbfft_repro::util::Rng;
+
+/// The three allocating passes of one engine against the f64 oracle,
+/// each under its modelled OaA tolerance.
+fn check_all_passes(p: &ConvProblem, tile: usize, seed: u64) {
+    let eng = OaaEngine::for_problem(p, tile);
+    let mut rng = Rng::new(seed);
+    let x = rng.normal_vec(p.input_len());
+    let w = rng.normal_vec(p.weight_len());
+    let go = rng.normal_vec(p.output_len());
+    assert_close_oracle(&eng.fprop(p, &x, &w).0,
+                        &oracle::fprop64(p, &x, &w),
+                        tolerance::oaa(p, Pass::Fprop, tile));
+    assert_close_oracle(&eng.bprop(p, &go, &w).0,
+                        &oracle::bprop64(p, &go, &w),
+                        tolerance::oaa(p, Pass::Bprop, tile));
+    assert_close_oracle(&eng.accgrad(p, &go, &x).0,
+                        &oracle::accgrad64(p, &go, &x),
+                        tolerance::oaa(p, Pass::AccGrad, tile));
+}
+
+#[test]
+fn oaa_conformance_matrix() {
+    let suite = cases::oaa_cases();
+    // acceptance floor: a shape past the full-pad basis cap and the
+    // 1-D long-signal shape are both present
+    assert!(suite.len() >= 5, "suite has only {} cases", suite.len());
+    assert!(suite.iter().any(|c| c.problem.h.max(c.problem.w) > 256),
+            "no case beyond the fbfft full-pad cap (MAX_N = 256)");
+    assert!(suite.iter().any(|c| c.problem.h == 1 || c.problem.w == 1),
+            "no 1-D long-signal case");
+
+    let report = SuiteReport {
+        cases: suite
+            .iter()
+            .map(|c| matrix::run_case_with(c, &matrix::oaa_engine_set(c)))
+            .collect(),
+    };
+    println!("{}", report.render());
+
+    for (case, cr) in suite.iter().zip(&report.cases) {
+        let engines = matrix::oaa_engine_set(case).len();
+        assert_eq!(cr.cells.len(), engines * Pass::ALL.len(),
+                   "{}: incomplete matrix row", cr.name);
+    }
+    assert!(report.all_ok(),
+            "OaA conformance failures:\n{}", report.render());
+}
+
+#[test]
+fn tile_boundaries_are_seamless_across_tile_choices() {
+    // 37×41 with 3×5 kernels: the stride-1 output grid is 35×37, so
+    // tile 8 leaves ragged 3- and 5-wide edge tiles, tile 16 a ragged
+    // corner, and tile 30 one dominant tile plus slivers — every
+    // overlap seam and edge-window shape gets exercised, and all three
+    // decompositions must agree with the oracle (not just each other)
+    let p = ConvProblem::new(1, 2, 3, 37, 41, 3, 5);
+    for tile in [8usize, 16, 30] {
+        assert!(oaa::tile_supported(tile, p.kh, p.kw));
+        check_all_passes(&p, tile, 0x0AA0 + tile as u64);
+    }
+}
+
+#[test]
+fn single_tile_degenerates_to_full_pad_bitwise() {
+    // y_ext = 46 fits in one 62-tile, so the OaA gather is the identity
+    // and the sub-problem *is* the full-pad problem at the same basis
+    // (64): every pass must agree with FftConvEngine bit for bit
+    let p = ConvProblem::square(2, 3, 4, 48, 3);
+    let tile = 62;
+    let eng = OaaEngine::for_problem(&p, tile);
+    assert_eq!(eng.n_fft(), 64);
+    let full = FftConvEngine::new(FftMode::Fbfft, eng.n_fft());
+    let mut rng = Rng::new(0xB17);
+    let x = rng.normal_vec(p.input_len());
+    let w = rng.normal_vec(p.weight_len());
+    let go = rng.normal_vec(p.output_len());
+    assert_eq!(eng.fprop(&p, &x, &w).0, full.fprop(&p, &x, &w).0);
+    assert_eq!(eng.bprop(&p, &go, &w).0, full.bprop(&p, &go, &w).0);
+    assert_eq!(eng.accgrad(&p, &go, &x).0, full.accgrad(&p, &go, &x).0);
+}
+
+#[test]
+fn strided_fprop_matches_the_oracle() {
+    // stride 2 over a 65² input: OaA tiles the stride-1 grid (63², so
+    // 16-tiles leave a ragged 15-wide edge) and the scatter subsamples
+    // the congruent rows/columns per tile — the part a full-pad engine
+    // never exercises
+    let p = ConvProblem::builder()
+        .batch(2)
+        .planes(3, 5)
+        .hw(65, 65)
+        .kernel(3, 3)
+        .stride(2)
+        .build();
+    let tile = 16;
+    let eng = OaaEngine::for_problem(&p, tile);
+    let mut rng = Rng::new(0x57D2);
+    let x = rng.normal_vec(p.input_len());
+    let w = rng.normal_vec(p.weight_len());
+    let got = eng.fprop(&p, &x, &w).0;
+    let want = oracle::fprop64(&p, &x, &w);
+    assert_close_oracle(&got, &want,
+                        tolerance::oaa(&p, Pass::Fprop, tile));
+}
+
+#[test]
+fn autotuner_selects_oaa_on_the_large_small_kernel_regime() {
+    // 512² with a 3×3 kernel, steady-state serving (weight spectrum
+    // pre-cached): the full-pad fbfft candidate cannot exist (512 >
+    // MAX_N), the vendor sweep collapses to the single 512 basis whose
+    // transforms dwarf the work, and the batch-starved time-domain
+    // engines are left against the tile-batched OaA candidates — the
+    // §6 regime where overlap-add is the *only* sensible frequency
+    // strategy. The tuner must measure its way to it.
+    let p = ConvProblem::square(1, 8, 8, 512, 3);
+    let mut t = Autotuner::new();
+    t.reps = 1;
+    t.try_tiling = false; // kernel-sized §6 tiles are hopeless at 512²
+    t.serve_spectra = Some(SpectrumPrecision::F32);
+    let c = t.tune(&p, Pass::Fprop);
+    assert!(matches!(c.strategy, Strategy::FbfftOaA(_)),
+            "expected FbfftOaA to win the 512² k3 steady-state sweep, \
+             got {:?} ({:.3} ms)", c.strategy, c.seconds * 1e3);
+    let n = c.n_fft.expect("frequency strategies carry a basis");
+    assert!(n <= 128, "OaA won on an oversized tile basis {n}");
+}
